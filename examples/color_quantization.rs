@@ -1,0 +1,75 @@
+//! Colour quantisation — the classic k-means application (the paper's
+//! intro: data compression). Builds a synthetic photograph-like RGB
+//! image, quantises it to a 16/64/256-colour palette with exp-ns, and
+//! reports PSNR and the speedup vs the standard algorithm.
+//!
+//! ```sh
+//! cargo run --release --example color_quantization
+//! ```
+
+use eakm::algorithms::Algorithm;
+use eakm::config::RunConfig;
+use eakm::coordinator::Runner;
+use eakm::data::Dataset;
+use eakm::rng::Rng;
+
+/// Synthetic "photo": smooth colour gradients + texture noise + a few
+/// flat regions, 256×256 RGB.
+fn synth_image(side: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    // random low-frequency colour field via a few cosine plane waves
+    let waves: Vec<(f64, f64, f64, [f64; 3])> = (0..6)
+        .map(|_| {
+            (
+                rng.f64() * 0.05,
+                rng.f64() * 0.05,
+                rng.f64() * std::f64::consts::TAU,
+                [rng.f64(), rng.f64(), rng.f64()],
+            )
+        })
+        .collect();
+    let mut out = Vec::with_capacity(side * side * 3);
+    for y in 0..side {
+        for x in 0..side {
+            let mut px = [0.35, 0.35, 0.35];
+            for &(fx, fy, ph, ref col) in &waves {
+                let v = (fx * x as f64 + fy * y as f64 + ph).cos() * 0.12;
+                for c in 0..3 {
+                    px[c] += v * col[c];
+                }
+            }
+            for c in px {
+                out.push((c + 0.02 * rng.normal()).clamp(0.0, 1.0));
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    let side = 192;
+    let pixels = synth_image(side, 99);
+    let n = side * side;
+    let ds = Dataset::new("image", pixels.clone(), n, 3).expect("image dataset");
+
+    println!("quantising a {side}x{side} synthetic photo (n={n} pixels, d=3)");
+    for palette in [16usize, 64, 256] {
+        let cfg = RunConfig::new(Algorithm::ExpNs, palette).seed(1);
+        let out = Runner::new(&cfg).run(&ds).expect("quantisation run");
+        // PSNR of the palettised image (pixel values in [0,1])
+        let mse = out.mse; // mean squared distance over 3 channels
+        let psnr = 10.0 * (3.0 / mse).log10(); // peak=1 per channel, mse is per-pixel over 3 dims
+        let sta = Runner::new(&RunConfig::new(Algorithm::Sta, palette).seed(1))
+            .run(&ds)
+            .expect("sta run");
+        assert_eq!(sta.assignments, out.assignments, "exactness violated");
+        println!(
+            "  {palette:>3} colours: PSNR {psnr:.1} dB, {} rounds, exp-ns {:?} vs sta {:?} ({:.2}x)",
+            out.iterations,
+            out.wall,
+            sta.wall,
+            sta.wall.as_secs_f64() / out.wall.as_secs_f64().max(1e-12)
+        );
+    }
+    println!("color_quantization OK");
+}

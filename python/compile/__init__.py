@@ -1,0 +1,12 @@
+"""Build-time compile package: L1 Pallas kernels, L2 JAX model, AOT lowering.
+
+Python in this repo runs ONLY at build time (`make artifacts`); the Rust
+coordinator executes the lowered HLO through PJRT at run time.
+
+Everything is double precision to match the Rust side (the paper's
+experiments use f64 throughout).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,104 @@
+"""AOT lowering: JAX/Pallas graphs → HLO **text** artifacts for Rust/PJRT.
+
+HLO text (NOT ``lowered.compile()``/``.serialize()``) is the interchange
+format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--spec 256x8x50 ...]
+
+Artifacts written (default specs):
+
+    assign_{block}x{d}x{k}.hlo.txt   — batched assignment kernel
+    lloyd_{rounds}r_{m}x{d}x{k}.hlo.txt — fused multi-round Lloyd graph
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# (block, d, k) shapes compiled by default: one production-ish shape used
+# by examples/xla_backend.rs and the integration tests, plus a tiny shape
+# for fast smoke tests.
+DEFAULT_ASSIGN_SPECS = [(256, 8, 50), (64, 4, 16), (16, 3, 4)]
+# (rounds, m, d, k) for the fused Lloyd graph.
+DEFAULT_LLOYD_SPECS = [(5, 512, 8, 50)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_assign(block: int, d: int, k: int) -> str:
+    """Lower the assignment kernel for a fixed (block, d, k)."""
+    x = jax.ShapeDtypeStruct((block, d), jnp.float64)
+    c = jax.ShapeDtypeStruct((k, d), jnp.float64)
+    fn = lambda x, c: model.assign(x, c, block=block)  # noqa: E731
+    return to_hlo_text(jax.jit(fn).lower(x, c))
+
+
+def lower_lloyd(rounds: int, m: int, d: int, k: int) -> str:
+    """Lower the fused multi-round Lloyd graph."""
+    x = jax.ShapeDtypeStruct((m, d), jnp.float64)
+    c = jax.ShapeDtypeStruct((k, d), jnp.float64)
+    block = min(m, 128)
+    fn = lambda x, c: model.lloyd_rounds(x, c, rounds=rounds, block=block)  # noqa: E731
+    return to_hlo_text(jax.jit(fn).lower(x, c))
+
+
+def parse_spec(text: str):
+    parts = tuple(int(p) for p in text.split("x"))
+    if len(parts) != 3:
+        raise argparse.ArgumentTypeError(f"spec must be BLOCKxDxK, got {text!r}")
+    return parts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--spec",
+        action="append",
+        type=parse_spec,
+        help="extra assign spec BLOCKxDxK (repeatable)",
+    )
+    ap.add_argument("--skip-lloyd", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    specs = list(DEFAULT_ASSIGN_SPECS) + (args.spec or [])
+    for block, d, k in specs:
+        text = lower_assign(block, d, k)
+        path = os.path.join(args.out_dir, f"assign_{block}x{d}x{k}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    if not args.skip_lloyd:
+        for rounds, m, d, k in DEFAULT_LLOYD_SPECS:
+            text = lower_lloyd(rounds, m, d, k)
+            path = os.path.join(args.out_dir, f"lloyd_{rounds}r_{m}x{d}x{k}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+
+    # stamp so `make artifacts` can skip when inputs are unchanged
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""L1: the pairwise-distance + top-2 Pallas kernel.
+
+This is the dense hot spot every k-means algorithm in the paper shares:
+a block of samples against all centroids, reduced to (nearest index,
+nearest distance, second-nearest distance) per sample — exactly what
+`sta`'s full scan and the ham-family's bound-repair scans consume.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks sample
+blocks; each program instance holds one `(bm, d)` x-tile plus the full
+`(k, d)` centroid tile in VMEM and drives the MXU with a single
+`x @ c.T` contraction; the top-2 reduction fuses into the tile epilogue
+so the `(m, k)` distance matrix never reaches HBM. `interpret=True` is
+mandatory here — the CPU PJRT plugin cannot execute Mosaic custom calls,
+and interpret mode traces the kernel into plain HLO with identical
+numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default sample-block height. 128 rows × d ≤ 784 × 8 B ≈ 0.8 MB of VMEM
+# for the x-tile at mnist784 scale; centroids dominate (k·d·8 B).
+DEFAULT_BLOCK = 128
+
+
+def _assign_kernel(x_ref, c_ref, idx_ref, d1_ref, d2_ref):
+    """One grid step: distances for a (bm, d) x-tile vs all k centroids."""
+    x = x_ref[...]  # (bm, d)
+    c = c_ref[...]  # (k, d)
+    k = c.shape[0]
+    xn = jnp.sum(x * x, axis=1, keepdims=True)  # (bm, 1)
+    cn = jnp.sum(c * c, axis=1)  # (k,)
+    # ‖x−c‖² = ‖x‖² − 2x·c + ‖c‖², clamped (cancellation can go negative)
+    d2 = jnp.maximum(xn + cn[None, :] - 2.0 * jnp.dot(x, c.T), 0.0)
+    i1 = jnp.argmin(d2, axis=1)
+    v1 = jnp.min(d2, axis=1)
+    mask = jnp.arange(k)[None, :] == i1[:, None]
+    v2 = jnp.min(jnp.where(mask, jnp.inf, d2), axis=1)
+    idx_ref[...] = i1.astype(jnp.int32)
+    d1_ref[...] = jnp.sqrt(v1)
+    d2_ref[...] = jnp.sqrt(v2)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def assign(x, c, *, block=DEFAULT_BLOCK):
+    """Pallas-tiled assignment: nearest + second-nearest centroids.
+
+    Args:
+      x: (m, d) samples; m must be a multiple of `block` (the AOT path
+         compiles fixed shapes; the Rust backend pads the tail block).
+      c: (k, d) centroids.
+      block: sample-block height (static).
+
+    Returns:
+      (idx int32 (m,), d1 (m,), d2 (m,)) — plain distances, not squared.
+    """
+    m, d = x.shape
+    k = c.shape[0]
+    if m % block != 0:
+        raise ValueError(f"m={m} not a multiple of block={block}")
+    grid = (m // block,)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # centroids resident
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((m,), x.dtype),
+            jax.ShapeDtypeStruct((m,), x.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, c)
+
+
+def vmem_bytes(block, d, k, itemsize=8):
+    """Estimated VMEM footprint of one program instance (DESIGN.md §Perf):
+    x-tile + centroid tile + distance tile + three output tiles."""
+    return itemsize * (block * d + k * d + block * k + 3 * block)

@@ -1,0 +1,59 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+These are the ground truth the Pallas kernels (and, transitively, the
+Rust-side PJRT execution) are validated against in pytest.
+"""
+
+import jax.numpy as jnp
+
+
+def sqdist_ref(x, c):
+    """All pairwise squared Euclidean distances.
+
+    Args:
+      x: (m, d) samples.
+      c: (k, d) centroids.
+    Returns:
+      (m, k) squared distances.
+    """
+    return ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+
+
+def assign_ref(x, c):
+    """Nearest + second-nearest centroid per sample.
+
+    Returns:
+      idx: (m,) int32 arg-min centroid index.
+      d1:  (m,) distance (plain, not squared) to the nearest centroid.
+      d2:  (m,) distance to the second nearest (inf when k == 1).
+    """
+    d2m = sqdist_ref(x, c)
+    idx = jnp.argmin(d2m, axis=1).astype(jnp.int32)
+    if c.shape[0] == 1:
+        d1 = jnp.sqrt(d2m[:, 0])
+        d2_ = jnp.full((x.shape[0],), jnp.inf, dtype=x.dtype)
+    else:
+        top2 = jnp.sort(d2m, axis=1)[:, :2]
+        d1 = jnp.sqrt(top2[:, 0])
+        d2_ = jnp.sqrt(top2[:, 1])
+    return idx, d1, d2_
+
+
+def lloyd_round_ref(x, c):
+    """One exact Lloyd round: assign, then recompute centroids.
+
+    Empty clusters keep their previous centroid (matching the Rust
+    coordinator's update step).
+
+    Returns:
+      new_c: (k, d) updated centroids.
+      idx:   (m,) int32 assignments used for the update.
+    """
+    idx, _, _ = assign_ref(x, c)
+    k = c.shape[0]
+    onehot = (idx[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)  # (m, k)
+    counts = onehot.sum(axis=0)  # (k,)
+    sums = onehot.T @ x  # (k, d)
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new_c = jnp.where(counts[:, None] > 0, sums / safe, c)
+    return new_c, idx

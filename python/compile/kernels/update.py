@@ -1,0 +1,76 @@
+"""L1: the centroid-update Pallas kernel.
+
+The update step (paper eq. 2) is a segment-sum: `sums[j] = Σ_{a(i)=j} x(i)`
+plus member counts. As a Pallas kernel it is a one-hot contraction per
+sample block, accumulated across the sequential grid — on TPU this is an
+MXU matmul per tile with the accumulator resident in VMEM, so the
+(m, k) one-hot never materialises in HBM either.
+
+Together with `distance.assign` this gives a complete Lloyd round with
+both compute stages as L1 kernels (see `model.lloyd_rounds_kernels`).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _update_kernel(x_ref, onehot_ref, sums_ref, counts_ref):
+    """One grid step: accumulate one sample-block's cluster sums."""
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    x = x_ref[...]  # (bm, d)
+    oh = onehot_ref[...]  # (bm, k)
+    # (k, d) contraction on the MXU; accumulator stays in VMEM
+    sums_ref[...] += jnp.dot(oh.T, x)
+    counts_ref[...] += oh.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def cluster_sums(x, idx, *, k, block=DEFAULT_BLOCK):
+    """Cluster sums + counts from assignments.
+
+    Args:
+      x: (m, d) samples, m a multiple of `block`.
+      idx: (m,) int32 assignments in [0, k).
+      k: number of clusters (static).
+      block: sample-block height (static).
+
+    Returns:
+      (sums (k, d), counts (k,)) with `counts.dtype == x.dtype`.
+    """
+    m, d = x.shape
+    if m % block != 0:
+        raise ValueError(f"m={m} not a multiple of block={block}")
+    onehot = (idx[:, None] == jnp.arange(k, dtype=idx.dtype)[None, :]).astype(x.dtype)
+    grid = (m // block,)
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),  # accumulator resident
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), x.dtype),
+            jax.ShapeDtypeStruct((k,), x.dtype),
+        ],
+        interpret=True,
+    )(x, onehot)
+
+
+def centroids_from_sums(sums, counts, old_c):
+    """New centroids; empty clusters keep their previous position."""
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    return jnp.where(counts[:, None] > 0, sums / safe, old_c)

@@ -1,0 +1,78 @@
+"""L2: the JAX compute graph around the L1 Pallas kernel.
+
+Two graphs are AOT-lowered for the Rust coordinator:
+
+* ``assign`` — the batched assignment step (nearest + second-nearest
+  centroid per sample), the shared hot spot of every algorithm in the
+  paper. This is the artifact `XlaAssignBackend` executes.
+* ``lloyd_rounds`` — a fixed number of full Lloyd rounds (assignment +
+  centroid update) under ``lax.fori_loop``, proving the whole L2 graph
+  (kernel + update + control flow) lowers and runs through PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import distance
+
+
+def assign(x, c, *, block=distance.DEFAULT_BLOCK):
+    """Batched assignment via the Pallas kernel (see kernels/distance.py)."""
+    return distance.assign(x, c, block=block)
+
+
+def _update(x, c, idx):
+    """Centroid update from assignments; empty clusters keep position."""
+    k = c.shape[0]
+    onehot = (idx[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+    counts = onehot.sum(axis=0)
+    sums = onehot.T @ x
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    return jnp.where(counts[:, None] > 0, sums / safe, c)
+
+
+@functools.partial(jax.jit, static_argnames=("rounds", "block"))
+def lloyd_rounds(x, c, *, rounds=10, block=distance.DEFAULT_BLOCK):
+    """Run `rounds` exact Lloyd rounds.
+
+    Returns:
+      (final centroids (k, d), final assignments (m,) int32).
+    """
+
+    def body(_, carry):
+        c, _idx = carry
+        idx, _d1, _d2 = assign(x, c, block=block)
+        return _update(x, c, idx), idx
+
+    m = x.shape[0]
+    init_idx = jnp.zeros((m,), dtype=jnp.int32)
+    final_c, final_idx = jax.lax.fori_loop(0, rounds, body, (c, init_idx))
+    return final_c, final_idx
+
+
+def mse(x, c, idx):
+    """Mean squared distance to the assigned centroid (objective / m)."""
+    diffs = x - c[idx]
+    return (diffs * diffs).sum() / x.shape[0]
+
+
+@functools.partial(jax.jit, static_argnames=("rounds", "block"))
+def lloyd_rounds_kernels(x, c, *, rounds=10, block=distance.DEFAULT_BLOCK):
+    """As `lloyd_rounds`, but with BOTH stages as Pallas kernels:
+    `kernels.distance.assign` for the assignment step and
+    `kernels.update.cluster_sums` for the centroid update."""
+    from compile.kernels import update as upd
+
+    k = c.shape[0]
+
+    def body(_, carry):
+        c, _idx = carry
+        idx, _d1, _d2 = assign(x, c, block=block)
+        sums, counts = upd.cluster_sums(x, idx, k=k, block=block)
+        return upd.centroids_from_sums(sums, counts, c), idx
+
+    m = x.shape[0]
+    init_idx = jnp.zeros((m,), dtype=jnp.int32)
+    return jax.lax.fori_loop(0, rounds, body, (c, init_idx))

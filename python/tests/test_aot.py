@@ -1,0 +1,28 @@
+"""AOT path: lowering produces parseable HLO text with the right inputs."""
+
+import jax.numpy as jnp
+
+from compile import aot
+
+
+class TestLowering:
+    def test_assign_hlo_text_structure(self):
+        text = aot.lower_assign(16, 3, 4)
+        assert "HloModule" in text
+        assert "f64[16,3]" in text  # x input
+        assert "f64[4,3]" in text  # centroids input
+        assert "s32[16]" in text  # idx output
+
+    def test_lloyd_hlo_text_structure(self):
+        text = aot.lower_lloyd(2, 32, 3, 4)
+        assert "HloModule" in text
+        assert "f64[32,3]" in text
+        # the fori_loop lowers to a while op
+        assert "while" in text
+
+    def test_spec_parser(self):
+        assert aot.parse_spec("256x8x50") == (256, 8, 50)
+
+    def test_no_float32_creep(self):
+        # x64 must be on: artifacts are double precision like the Rust side
+        assert jnp.zeros(1).dtype == jnp.float64

@@ -1,0 +1,64 @@
+"""L2 correctness: the Lloyd-round graph vs the oracle, and objective
+monotonicity."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _blobs(m, d, k, seed):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)) * 3.0
+    x = centers[rng.integers(0, k, size=m)] + rng.normal(size=(m, d)) * 0.3
+    c0 = x[rng.choice(m, size=k, replace=False)]
+    return jnp.asarray(x), jnp.asarray(c0)
+
+
+class TestLloydRounds:
+    def test_single_round_matches_ref(self):
+        x, c = _blobs(128, 4, 6, seed=0)
+        got_c, got_idx = model.lloyd_rounds(x, c, rounds=1, block=64)
+        want_c, want_idx = ref.lloyd_round_ref(x, c)
+        np.testing.assert_array_equal(np.asarray(got_idx), np.asarray(want_idx))
+        np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c), rtol=1e-12)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        rounds=st.integers(1, 5),
+        k=st.integers(2, 8),
+        seed=st.integers(0, 10_000),
+    )
+    def test_multi_round_matches_iterated_ref(self, rounds, k, seed):
+        x, c = _blobs(64, 3, k, seed=seed)
+        got_c, got_idx = model.lloyd_rounds(x, c, rounds=rounds, block=32)
+        want_c = c
+        want_idx = None
+        for _ in range(rounds):
+            want_c, want_idx = ref.lloyd_round_ref(x, want_c)
+        np.testing.assert_array_equal(np.asarray(got_idx), np.asarray(want_idx))
+        np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c), rtol=1e-10)
+
+    def test_objective_decreases(self):
+        x, c = _blobs(256, 5, 8, seed=3)
+        prev = float("inf")
+        cur = c
+        for _ in range(6):
+            cur, idx = model.lloyd_rounds(x, cur, rounds=1, block=64)
+            obj = float(model.mse(x, cur, idx))
+            assert obj <= prev + 1e-9
+            prev = obj
+
+    def test_empty_cluster_keeps_centroid(self):
+        # one far-away centroid that owns no samples must not move
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(64, 2)))
+        far = jnp.asarray([[1e6, 1e6]])
+        c = jnp.concatenate([x[:3], far], axis=0)
+        new_c, _ = model.lloyd_rounds(x, c, rounds=1, block=64)
+        np.testing.assert_allclose(np.asarray(new_c)[3], [1e6, 1e6])

@@ -1,0 +1,86 @@
+"""L1 update kernel vs oracle: cluster sums, counts, empty clusters."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref, update
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _numpy_sums(x, idx, k):
+    x = np.asarray(x)
+    idx = np.asarray(idx)
+    sums = np.zeros((k, x.shape[1]))
+    counts = np.zeros(k)
+    for i, j in enumerate(idx):
+        sums[j] += x[i]
+        counts[j] += 1
+    return sums, counts
+
+
+class TestClusterSums:
+    def test_fixed_case(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(64, 5)))
+        idx = jnp.asarray(rng.integers(0, 7, size=64), dtype=jnp.int32)
+        sums, counts = update.cluster_sums(x, idx, k=7, block=32)
+        ws, wc = _numpy_sums(x, idx, 7)
+        np.testing.assert_allclose(np.asarray(sums), ws, rtol=1e-12)
+        np.testing.assert_allclose(np.asarray(counts), wc)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        blocks=st.integers(1, 4),
+        block=st.sampled_from([8, 16, 32]),
+        d=st.integers(1, 12),
+        k=st.integers(1, 9),
+        seed=st.integers(0, 10_000),
+    )
+    def test_hypothesis_sweep(self, blocks, block, d, k, seed):
+        rng = np.random.default_rng(seed)
+        m = blocks * block
+        x = jnp.asarray(rng.normal(size=(m, d)))
+        idx = jnp.asarray(rng.integers(0, k, size=m), dtype=jnp.int32)
+        sums, counts = update.cluster_sums(x, idx, k=k, block=block)
+        ws, wc = _numpy_sums(x, idx, k)
+        np.testing.assert_allclose(np.asarray(sums), ws, rtol=1e-10, atol=1e-12)
+        np.testing.assert_allclose(np.asarray(counts), wc)
+
+    def test_empty_cluster_keeps_centroid(self):
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(32, 3)))
+        idx = jnp.zeros(32, dtype=jnp.int32)  # everything in cluster 0
+        sums, counts = update.cluster_sums(x, idx, k=4, block=32)
+        old = jnp.asarray([[9.0, 9.0, 9.0]] * 4)
+        new_c = update.centroids_from_sums(sums, counts, old)
+        np.testing.assert_allclose(np.asarray(new_c)[1:], 9.0)
+        np.testing.assert_allclose(
+            np.asarray(new_c)[0], np.asarray(x).mean(axis=0), rtol=1e-12
+        )
+
+    def test_rejects_ragged(self):
+        x = jnp.zeros((20, 2))
+        idx = jnp.zeros(20, dtype=jnp.int32)
+        try:
+            update.cluster_sums(x, idx, k=2, block=16)
+            assert False, "expected ValueError"
+        except ValueError:
+            pass
+
+
+class TestLloydKernels:
+    def test_all_kernel_lloyd_matches_ref(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(128, 4)))
+        c0 = x[:6]
+        got_c, got_idx = model.lloyd_rounds_kernels(x, c0, rounds=3, block=64)
+        want_c = c0
+        want_idx = None
+        for _ in range(3):
+            want_c, want_idx = ref.lloyd_round_ref(x, want_c)
+        np.testing.assert_array_equal(np.asarray(got_idx), np.asarray(want_idx))
+        np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c), rtol=1e-10)

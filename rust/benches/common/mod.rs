@@ -1,0 +1,30 @@
+//! Shared helpers for the paper-table bench harnesses.
+
+use std::path::PathBuf;
+
+/// Round cap for bench runs — ratios stay exact (all algorithms execute
+/// the identical round sequence), wall time stays bounded.
+pub fn max_iters() -> usize {
+    std::env::var("EAKM_MAX_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150)
+}
+
+/// Where rendered tables land.
+pub fn tables_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tables");
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+/// Print and persist one rendered table.
+pub fn emit(name: &str, rendered: &str) {
+    print!("{rendered}");
+    let path = tables_dir().join(name);
+    if let Err(e) = std::fs::write(&path, rendered) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        eprintln!("[written to {}]", path.display());
+    }
+}

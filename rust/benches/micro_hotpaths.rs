@@ -1,0 +1,114 @@
+//! Micro-benchmarks of the hot paths (the §Perf profiling surface):
+//! single distances, the blocked batch scan, cc-matrix build, annuli
+//! build, and a full exp-ns round. Medians over repeated runs.
+
+mod common;
+
+use std::time::Instant;
+
+use eakm::algorithms::Algorithm;
+use eakm::bench_support::TextTable;
+use eakm::config::RunConfig;
+use eakm::coordinator::annuli::Annuli;
+use eakm::coordinator::ccdist::CcData;
+use eakm::coordinator::Engine;
+use eakm::data::synth::blobs;
+use eakm::linalg::{sqdist, sqdist_batch_block, sqnorms_rows};
+use eakm::metrics::Counters;
+
+fn time_median(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[reps / 2]
+}
+
+fn main() {
+    let mut t = TextTable::new("micro hot paths (medians)").headers(&["bench", "median", "throughput"]);
+
+    // 1) single sqdist at representative dims
+    for d in [4usize, 32, 128, 784] {
+        let a: Vec<f64> = (0..d).map(|i| (i as f64).sin()).collect();
+        let b: Vec<f64> = (0..d).map(|i| (i as f64).cos()).collect();
+        let reps = 2_000_000 / d.max(1);
+        let med = time_median(9, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += sqdist(std::hint::black_box(&a), std::hint::black_box(&b));
+            }
+            std::hint::black_box(acc);
+        });
+        let flops = (reps * 3 * d) as f64 / med;
+        t.row(vec![
+            format!("sqdist d={d} x{reps}"),
+            format!("{:.3} ms", med * 1e3),
+            format!("{:.2} GFLOP/s", flops / 1e9),
+        ]);
+    }
+
+    // 2) blocked batch scan (the sta/init hot path)
+    for (m, d, k) in [(4096usize, 8usize, 100usize), (1024, 64, 200), (256, 784, 100)] {
+        let ds = blobs(m, d, 8, 0.2, 1);
+        let cs = blobs(k, d, 8, 0.2, 2);
+        let xn = ds.sqnorms().to_vec();
+        let cn = sqnorms_rows(cs.raw(), d);
+        let mut out = vec![0.0; m * k];
+        let med = time_median(7, || {
+            sqdist_batch_block(ds.raw(), &xn, cs.raw(), &cn, d, &mut out);
+            std::hint::black_box(&out);
+        });
+        let flops = (2.0 * m as f64 * k as f64 * d as f64) / med;
+        t.row(vec![
+            format!("batch {m}x{d}x{k}"),
+            format!("{:.3} ms", med * 1e3),
+            format!("{:.2} GFLOP/s", flops / 1e9),
+        ]);
+    }
+
+    // 3) cc matrix + annuli build (exp's per-round overhead)
+    for k in [100usize, 1000] {
+        let cs = blobs(k, 8, 16, 0.3, 3);
+        let med_cc = time_median(7, || {
+            let mut ctr = Counters::default();
+            std::hint::black_box(CcData::build(cs.raw(), k, 8, &mut ctr));
+        });
+        let mut ctr = Counters::default();
+        let cc = CcData::build(cs.raw(), k, 8, &mut ctr);
+        let mut reuse = Annuli::empty();
+        let med_ann = time_median(7, || {
+            reuse.build_into_fast(&cc);
+            std::hint::black_box(&reuse);
+        });
+        t.row(vec![
+            format!("cc build k={k}"),
+            format!("{:.3} ms", med_cc * 1e3),
+            String::new(),
+        ]);
+        t.row(vec![
+            format!("annuli build k={k}"),
+            format!("{:.3} ms", med_ann * 1e3),
+            String::new(),
+        ]);
+    }
+
+    // 4) one full exp-ns round on a mid-size workload
+    let ds = blobs(50_000, 4, 64, 0.1, 4);
+    let cfg = RunConfig::new(Algorithm::ExpNs, 64).seed(0);
+    let mut engine = Engine::new(&ds, &cfg).unwrap();
+    engine.step(); // warm
+    let med = time_median(5, || {
+        engine.step();
+    });
+    t.row(vec![
+        "exp-ns round n=50k k=64 d=4".into(),
+        format!("{:.3} ms", med * 1e3),
+        format!("{:.1} Msamples/s", 50.0 / (med * 1e3)),
+    ]);
+
+    common::emit("micro_hotpaths.txt", &t.render());
+}

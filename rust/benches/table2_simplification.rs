@@ -1,0 +1,75 @@
+//! Paper Table 2 — benefits of simplification: `yin → syin` on all 22
+//! datasets and `elk → selk` on the high-dimensional half, as ratios of
+//! mean runtimes (simplified / original; < 1 ⇒ simplification wins).
+
+mod common;
+
+use eakm::algorithms::Algorithm;
+use eakm::bench_support::{
+    env_scale, env_seeds, grid_datasets, grid_ks, high_d_indices, measure::measure_capped,
+    TextTable,
+};
+
+fn main() {
+    let scale = env_scale();
+    let seeds = env_seeds();
+    let ks = grid_ks(scale);
+    let cap = common::max_iters();
+
+    let mut t = TextTable::new(format!(
+        "Table 2 — simplification speedup (scale={scale}, seeds={seeds}, ks={ks:?}; <1 ⇒ simplified faster)"
+    ))
+    .headers(&[
+        "ds",
+        &format!("syin/yin k={}", ks[0]),
+        &format!("syin/yin k={}", ks[1]),
+        &format!("selk/elk k={}", ks[0]),
+        &format!("selk/elk k={}", ks[1]),
+    ]);
+
+    let high_d = high_d_indices();
+    let mut yin_wins = 0;
+    let mut yin_total = 0;
+    let mut elk_wins = 0;
+    let mut elk_total = 0;
+    for (spec, ds) in grid_datasets(scale, None) {
+        let mut row = vec![spec.roman().to_string()];
+        for &k in &ks {
+            if k >= ds.n() {
+                row.push("-".into());
+                continue;
+            }
+            let syin = measure_capped(&ds, Algorithm::Syin, k, seeds, 1, cap);
+            let yin = measure_capped(&ds, Algorithm::Yin, k, seeds, 1, cap);
+            let r = syin.mean_wall.as_secs_f64() / yin.mean_wall.as_secs_f64().max(1e-12);
+            yin_total += 1;
+            if r < 1.0 {
+                yin_wins += 1;
+            }
+            row.push(TextTable::fmt_ratio(r));
+        }
+        for &k in &ks {
+            if !high_d.contains(&spec.index) || k >= ds.n() {
+                row.push("-".into());
+                continue;
+            }
+            let selk = measure_capped(&ds, Algorithm::Selk, k, seeds, 1, cap);
+            let elk = measure_capped(&ds, Algorithm::Elk, k, seeds, 1, cap);
+            let r = selk.mean_wall.as_secs_f64() / elk.mean_wall.as_secs_f64().max(1e-12);
+            elk_total += 1;
+            if r < 1.0 {
+                elk_wins += 1;
+            }
+            row.push(TextTable::fmt_ratio(r));
+        }
+        t.row(row);
+        eprint!(".");
+    }
+    eprintln!();
+    let mut rendered = t.render();
+    rendered.push_str(&format!(
+        "\nsyin faster than yin in {yin_wins}/{yin_total} experiments (paper: 43/44)\n\
+         selk faster than elk in {elk_wins}/{elk_total} experiments (paper: 16/18)\n"
+    ));
+    common::emit("table2_simplification.txt", &rendered);
+}

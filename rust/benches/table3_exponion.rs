@@ -1,0 +1,67 @@
+//! Paper Table 3 — Annular → Exponion on the low-dimensional datasets
+//! (d < 20): ratios of mean runtimes (`q_t`) and of mean total distance
+//! calculations (`q_au`), exp / ann (< 1 ⇒ Exponion wins).
+
+mod common;
+
+use eakm::algorithms::Algorithm;
+use eakm::bench_support::{
+    env_scale, env_seeds, grid_datasets, grid_ks, low_d_indices, measure::measure_capped,
+    TextTable,
+};
+
+fn main() {
+    let scale = env_scale();
+    let seeds = env_seeds();
+    let ks = grid_ks(scale);
+    let cap = common::max_iters();
+
+    let mut t = TextTable::new(format!(
+        "Table 3 — own-ann → own-exp on d<20 datasets (scale={scale}, seeds={seeds}; <1 ⇒ exp wins)"
+    ))
+    .headers(&[
+        "ds",
+        &format!("q_t k={}", ks[0]),
+        &format!("q_t k={}", ks[1]),
+        &format!("q_au k={}", ks[0]),
+        &format!("q_au k={}", ks[1]),
+    ]);
+
+    let low = low_d_indices();
+    let mut faster = 0;
+    let mut total = 0;
+    for (spec, ds) in grid_datasets(scale, Some(&low)) {
+        let mut qt = Vec::new();
+        let mut qau = Vec::new();
+        for &k in &ks {
+            if k >= ds.n() {
+                qt.push(f64::NAN);
+                qau.push(f64::NAN);
+                continue;
+            }
+            let exp = measure_capped(&ds, Algorithm::Exp, k, seeds, 1, cap);
+            let ann = measure_capped(&ds, Algorithm::Ann, k, seeds, 1, cap);
+            let rt = exp.mean_wall.as_secs_f64() / ann.mean_wall.as_secs_f64().max(1e-12);
+            total += 1;
+            if rt < 1.0 {
+                faster += 1;
+            }
+            qt.push(rt);
+            qau.push(exp.mean_qau / ann.mean_qau.max(1e-12));
+        }
+        t.row(vec![
+            spec.roman().to_string(),
+            TextTable::fmt_ratio(qt[0]),
+            TextTable::fmt_ratio(qt[1]),
+            TextTable::fmt_ratio(qau[0]),
+            TextTable::fmt_ratio(qau[1]),
+        ]);
+        eprint!(".");
+    }
+    eprintln!();
+    let mut rendered = t.render();
+    rendered.push_str(&format!(
+        "\nexp faster than ann in {faster}/{total} experiments (paper: 18/22, >30% faster in 17/22)\n"
+    ));
+    common::emit("table3_exponion.txt", &rendered);
+}

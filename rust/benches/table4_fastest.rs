@@ -1,0 +1,63 @@
+//! Paper Table 4 — which sn-algorithm is fastest on each {dataset, k}
+//! experiment (ns-variants excluded), and the dimensional regime map.
+
+mod common;
+
+use std::collections::HashMap;
+
+use eakm::algorithms::Algorithm;
+use eakm::bench_support::{
+    env_scale, env_seeds, grid_datasets, grid_ks, measure::measure_capped, TextTable,
+};
+
+fn main() {
+    let scale = env_scale();
+    let seeds = env_seeds();
+    let ks = grid_ks(scale);
+    let cap = common::max_iters();
+    let algs = Algorithm::SN; // sta selk elk ham ann exp syin yin
+
+    let mut counts: HashMap<&'static str, usize> = HashMap::new();
+    let mut detail = TextTable::new(format!(
+        "Table 4 detail — fastest sn-algorithm per experiment (scale={scale}, seeds={seeds})"
+    ))
+    .headers(&["ds", "d", &format!("k={}", ks[0]), &format!("k={}", ks[1])]);
+
+    for (spec, ds) in grid_datasets(scale, None) {
+        let mut row = vec![spec.roman().to_string(), spec.d.to_string()];
+        for &k in &ks {
+            if k >= ds.n() {
+                row.push("-".into());
+                continue;
+            }
+            let mut best = ("?", f64::INFINITY);
+            for alg in algs {
+                let st = measure_capped(&ds, alg, k, seeds, 1, cap);
+                let w = st.mean_wall.as_secs_f64();
+                if w < best.1 {
+                    best = (alg.name(), w);
+                }
+            }
+            *counts.entry(best.0).or_insert(0) += 1;
+            row.push(best.0.to_string());
+        }
+        detail.row(row);
+        eprint!(".");
+    }
+    eprintln!();
+
+    let mut summary = TextTable::new("Table 4 — number of experiments each sn-algorithm is fastest")
+        .headers(&["ham", "ann", "exp", "syin", "yin", "selk", "elk", "sta"]);
+    summary.row(
+        ["ham", "ann", "exp", "syin", "yin", "selk", "elk", "sta"]
+            .iter()
+            .map(|n| counts.get(*n).copied().unwrap_or(0).to_string())
+            .collect(),
+    );
+
+    let mut rendered = summary.render();
+    rendered.push('\n');
+    rendered.push_str(&detail.render());
+    rendered.push_str("\npaper: exp 13 (all d<5), syin 24 (8<d<69), selk 6 + elk 1 (d>73), ham/ann/yin 0\n");
+    common::emit("table4_fastest.txt", &rendered);
+}

@@ -1,0 +1,89 @@
+//! Paper Table 5 — sn → ns bounding: for each {dataset, k}, take the
+//! fastest sn-algorithm that has an ns-variant and report ns/sn ratios of
+//! runtime (`q_t`), assignment distance calculations (`q_a`) and total
+//! distance calculations (`q_au`).
+
+mod common;
+
+use eakm::algorithms::Algorithm;
+use eakm::bench_support::{
+    env_scale, env_seeds, grid_datasets, grid_ks, measure::measure_capped, TextTable,
+};
+
+fn main() {
+    let scale = env_scale();
+    let seeds = env_seeds();
+    let ks = grid_ks(scale);
+    let cap = common::max_iters();
+    // candidates: the sn-algorithms with ns variants (paper's Table 5 'x'
+    // column only ever contains these four)
+    let candidates = [
+        Algorithm::Selk,
+        Algorithm::Elk,
+        Algorithm::Syin,
+        Algorithm::Exp,
+    ];
+
+    let mut headers = vec!["ds".to_string()];
+    for &k in &ks {
+        headers.push(format!("x k={k}"));
+        headers.push(format!("q_t k={k}"));
+        headers.push(format!("q_a k={k}"));
+        headers.push(format!("q_au k={k}"));
+    }
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = TextTable::new(format!(
+        "Table 5 — ns-bounds vs sn-bounds on the fastest sn-algorithm (scale={scale}, seeds={seeds}; <1 ⇒ ns wins)"
+    ))
+    .headers(&headers_ref);
+
+    let mut speedups = 0;
+    let mut total = 0;
+    let mut qa_never_worse = true;
+    for (spec, ds) in grid_datasets(scale, None) {
+        let mut row = vec![spec.roman().to_string()];
+        for &k in &ks {
+            if k >= ds.n() {
+                row.extend(["-".into(), "-".into(), "-".into(), "-".into()]);
+                continue;
+            }
+            let mut best: Option<(Algorithm, eakm::bench_support::MeasureStats)> = None;
+            for &alg in &candidates {
+                let st = measure_capped(&ds, alg, k, seeds, 1, cap);
+                if best
+                    .as_ref()
+                    .map(|(_, b)| st.mean_wall < b.mean_wall)
+                    .unwrap_or(true)
+                {
+                    best = Some((alg, st));
+                }
+            }
+            let (sn_alg, sn) = best.unwrap();
+            let ns_alg = sn_alg.ns_variant().unwrap();
+            let ns = measure_capped(&ds, ns_alg, k, seeds, 1, cap);
+            let qt = ns.mean_wall.as_secs_f64() / sn.mean_wall.as_secs_f64().max(1e-12);
+            let qa = ns.mean_qa / sn.mean_qa.max(1e-12);
+            let qau = ns.mean_qau / sn.mean_qau.max(1e-12);
+            total += 1;
+            if qt < 1.0 {
+                speedups += 1;
+            }
+            if qa > 1.0 + 1e-9 {
+                qa_never_worse = false;
+            }
+            row.push(sn_alg.name().to_string());
+            row.push(TextTable::fmt_ratio(qt));
+            row.push(TextTable::fmt_ratio(qa));
+            row.push(TextTable::fmt_ratio(qau));
+        }
+        t.row(row);
+        eprint!(".");
+    }
+    eprintln!();
+    let mut rendered = t.render();
+    rendered.push_str(&format!(
+        "\nns faster in {speedups}/{total} experiments (paper: 36/44, up to 45%)\n\
+         q_a never worse with ns: {qa_never_worse} (paper: guaranteed by construction)\n"
+    ));
+    common::emit("table5_ns.txt", &rendered);
+}

@@ -1,0 +1,70 @@
+//! Paper Table 7 — implementation comparison (SUBSTITUTED, DESIGN.md §3).
+//!
+//! The paper compares its implementations against bay/mlp/pow/vlf; those
+//! codebases aren't available offline, so the comparator here is the
+//! `naive-*` family: the *same algorithms* minus the paper's §4.1.1
+//! engineering (blocked norm-decomposition scans, delta centroid update,
+//! O(1) displacement maxima). Values are naive/own mean-runtime ratios —
+//! >1 ⇒ our engineered implementation is faster, reproducing Table 7's
+//! message that implementation quality is worth 1–4×.
+
+mod common;
+
+use eakm::algorithms::Algorithm;
+use eakm::bench_support::{
+    env_scale, env_seeds, grid_datasets, grid_ks, measure::measure_capped, TextTable,
+};
+
+fn main() {
+    let scale = env_scale();
+    let seeds = env_seeds();
+    let ks = grid_ks(scale);
+    let cap = common::max_iters();
+    let pairs = [
+        (Algorithm::NaiveSta, Algorithm::Sta),
+        (Algorithm::NaiveHam, Algorithm::Ham),
+        (Algorithm::NaiveElk, Algorithm::Elk),
+        (Algorithm::NaiveYin, Algorithm::Yin),
+    ];
+
+    // representative subset across regimes (full grid is table9's job)
+    let subset = [1usize, 3, 6, 9, 12, 14, 20, 22];
+
+    let mut headers = vec!["ds".to_string(), "k".to_string()];
+    headers.extend(pairs.iter().map(|(n, o)| format!("{}/{}", n.name(), o.name())));
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = TextTable::new(format!(
+        "Table 7 (substituted) — engineering worth: naive/own runtime ratios (scale={scale}, seeds={seeds}; >1 ⇒ own faster)"
+    ))
+    .headers(&headers_ref);
+
+    let mut own_wins = 0;
+    let mut total = 0;
+    for (spec, ds) in grid_datasets(scale, Some(&subset)) {
+        for &k in &ks {
+            if k >= ds.n() {
+                continue;
+            }
+            let mut row = vec![spec.roman().to_string(), k.to_string()];
+            for (naive, own) in pairs {
+                let n = measure_capped(&ds, naive, k, seeds, 1, cap);
+                let o = measure_capped(&ds, own, k, seeds, 1, cap);
+                let r = n.mean_wall.as_secs_f64() / o.mean_wall.as_secs_f64().max(1e-12);
+                total += 1;
+                if r > 1.0 {
+                    own_wins += 1;
+                }
+                row.push(TextTable::fmt_ratio(r));
+            }
+            t.row(row);
+            eprint!(".");
+        }
+    }
+    eprintln!();
+    let mut rendered = t.render();
+    rendered.push_str(&format!(
+        "\nengineered implementation faster in {own_wins}/{total} comparisons\n\
+         (paper Table 7: own faster than bay/mlp/pow/vlf in all but 4 of ~170 comparisons, by 1–4x)\n"
+    ));
+    common::emit("table7_implementations.txt", &rendered);
+}

@@ -1,0 +1,69 @@
+//! Paper Tables 9 & 10 — the full grid: every dataset × every algorithm
+//! at the two k values, reported as mean runtime relative to the fastest
+//! algorithm (1.00 = fastest, underlined in the paper).
+//!
+//! Scaled by EAKM_SCALE (default 0.02) — scale 1.0 reproduces the exact
+//! Table 8 sizes given the paper's 40-minute-per-run budget.
+
+mod common;
+
+use eakm::algorithms::Algorithm;
+use eakm::bench_support::{
+    env_scale, env_seeds, grid_datasets, grid_ks, measure::measure_capped, TextTable,
+};
+
+fn main() {
+    let scale = env_scale();
+    let seeds = env_seeds();
+    let ks = grid_ks(scale);
+    let cap = common::max_iters();
+    let algs: Vec<Algorithm> = Algorithm::SN
+        .iter()
+        .chain(Algorithm::NS.iter())
+        .copied()
+        .collect();
+
+    for (tbl, &k) in ["table9", "table10"].iter().zip(ks.iter()) {
+        let mut headers: Vec<String> = vec![
+            "ds".into(),
+            "iters".into(),
+            "sd_it".into(),
+            "fastest[s]".into(),
+        ];
+        headers.extend(algs.iter().map(|a| a.name().to_string()));
+        let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = TextTable::new(format!(
+            "{} — full grid at k={k} (scale={scale}, seeds={seeds}): runtime relative to fastest",
+            if k == ks[0] { "Table 9" } else { "Table 10" },
+        ))
+        .headers(&headers_ref);
+
+        for (spec, ds) in grid_datasets(scale, None) {
+            if k >= ds.n() {
+                continue;
+            }
+            let stats: Vec<_> = algs
+                .iter()
+                .map(|&alg| measure_capped(&ds, alg, k, seeds, 1, cap))
+                .collect();
+            let fastest = stats
+                .iter()
+                .map(|s| s.mean_wall.as_secs_f64())
+                .fold(f64::INFINITY, f64::min);
+            let mut row = vec![
+                spec.roman().to_string(),
+                format!("{:.0}", stats[0].mean_iters),
+                format!("{:.0}", stats[0].sd_iters),
+                format!("{fastest:.3}"),
+            ];
+            for s in &stats {
+                row.push(TextTable::fmt_ratio(s.mean_wall.as_secs_f64() / fastest));
+            }
+            t.row(row);
+            eprint!(".");
+        }
+        eprintln!();
+        common::emit(&format!("{tbl}_grid_k{k}.txt"), &t.render());
+        let _ = tbl;
+    }
+}

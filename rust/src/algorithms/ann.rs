@@ -1,0 +1,150 @@
+//! `ann` — Drake's Annular algorithm (§2.5): ham plus an origin-centred
+//! annulus filter. When ham's scan is unavoidable, only centroids whose
+//! norm lies within `R(i)` of `‖x(i)‖` need to be considered, where
+//! `R(i) = max(u(i), ‖x(i) − c(b(i))‖)` and `b(i)` tracks the
+//! second-nearest centroid the way `a(i)` tracks the nearest.
+
+use super::common::{batch_scan, dist_ic, top2_sqrt, AssignStep, Moved, Requirements, SharedRound};
+use crate::linalg::Top2;
+use crate::metrics::Counters;
+
+/// Annular per-sample state: ham's bounds plus `b(i)`.
+pub struct Ann {
+    lo: usize,
+    u: Vec<f64>,
+    l: Vec<f64>,
+    /// Stale index of the (approximately) second-nearest centroid.
+    b: Vec<u32>,
+}
+
+impl Ann {
+    /// Create for a shard `[lo, lo+len)`.
+    pub fn new(lo: usize, len: usize) -> Self {
+        Ann {
+            lo,
+            u: vec![0.0; len],
+            l: vec![0.0; len],
+            b: vec![0; len],
+        }
+    }
+}
+
+impl AssignStep for Ann {
+    fn name(&self) -> &'static str {
+        "ann"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements {
+            cc: true,
+            sorted_norms: true,
+            ..Requirements::default()
+        }
+    }
+
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+        let lo = self.lo;
+        let (u, l, b) = (&mut self.u, &mut self.l, &mut self.b);
+        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+            let t2 = top2_sqrt(row);
+            a[li] = t2.idx1 as u32;
+            u[li] = t2.val1;
+            l[li] = t2.val2;
+            b[li] = t2.idx2 as u32;
+        });
+    }
+
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    ) {
+        let lo = self.lo;
+        let norms = sh.sorted_norms.expect("ann requires sorted norms");
+        for li in 0..a.len() {
+            let ai = a[li] as usize;
+            let gi = lo + li;
+            // ham's bound update + outer test
+            self.u[li] += sh.p[ai];
+            self.l[li] -= if sh.p_argmax == ai {
+                sh.p_max2
+            } else {
+                sh.p_max
+            };
+            let m = self.l[li].max(sh.s(ai) * 0.5);
+            if m >= self.u[li] {
+                continue;
+            }
+            self.u[li] = dist_ic(sh, gi, ai, ctr);
+            if m >= self.u[li] {
+                continue;
+            }
+            // annular scan: R = max(u, ‖x − c(b)‖), filter on norms (eq. 9)
+            let bi = self.b[li] as usize;
+            let dxb = dist_ic(sh, gi, bi, ctr);
+            let r = self.u[li].max(dxb);
+            let xnorm = sh.data.sqnorm(gi).sqrt();
+            let mut t2 = Top2::new();
+            for j in norms.window(xnorm, r) {
+                let j = j as usize;
+                let dj = if j == ai {
+                    self.u[li]
+                } else if j == bi {
+                    dxb
+                } else {
+                    dist_ic(sh, gi, j, ctr)
+                };
+                t2.push(j, dj);
+            }
+            // a(i), b(i) ∈ J(i) by construction, so t2 saw ≥ 2 entries
+            self.u[li] = t2.val1;
+            self.l[li] = t2.val2;
+            self.b[li] = t2.idx2 as u32;
+            if t2.idx1 != ai {
+                moved.push(Moved {
+                    i: gi as u32,
+                    from: ai as u32,
+                    to: t2.idx1 as u32,
+                });
+                a[li] = t2.idx1 as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::*;
+
+    #[test]
+    fn matches_sta_on_blobs() {
+        assert_exact_vs_sta(|lo, len, _k, _g| Box::new(Ann::new(lo, len)), 400, 4, 10, 13);
+    }
+
+    #[test]
+    fn matches_sta_low_dim() {
+        assert_exact_vs_sta(|lo, len, _k, _g| Box::new(Ann::new(lo, len)), 600, 2, 16, 17);
+    }
+
+    #[test]
+    fn bounds_remain_valid_every_round() {
+        assert_bounds_valid(
+            |lo, len, _k, _g| Box::new(Ann::new(lo, len)),
+            |alg, chk| {
+                let ann = alg.as_any().downcast_ref::<Ann>().unwrap();
+                for li in 0..chk.len() {
+                    chk.upper(li, ann.u[li]);
+                    chk.lower_all(li, ann.l[li]);
+                    chk.b_differs(li, ann.b[li]);
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,246 @@
+//! Shared infrastructure for all assignment-step algorithms.
+//!
+//! Each algorithm is a struct owning *per-sample* state for one shard of
+//! the data (a contiguous range of sample indices). The coordinator owns
+//! everything centroid-side and rebuilds it once per round
+//! ([`SharedRound`]); shards then run (possibly in parallel) without any
+//! synchronisation, which is exactly the parallelisation the paper uses
+//! (§4.2: samples are processed independently).
+
+use crate::coordinator::annuli::Annuli;
+use crate::coordinator::ccdist::CcData;
+use crate::coordinator::groups::GroupData;
+use crate::coordinator::history::HistoryRound;
+use crate::coordinator::sorted_norms::SortedNorms;
+use crate::data::Dataset;
+use crate::linalg::{sqdist_batch_block, Top2};
+use crate::metrics::Counters;
+
+/// What centroid-side structures an algorithm needs per round.
+/// The coordinator builds only what is requested (building e.g. the
+/// inter-centroid matrix costs k(k−1)/2 distance calculations per round,
+/// which the paper's `q_au` accounting must reflect).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Requirements {
+    /// Inter-centroid distance matrix `cc(j,j′)` + `s(j)` (elk, ham, ann, exp).
+    pub cc: bool,
+    /// Centroid norms sorted per round (ann).
+    pub sorted_norms: bool,
+    /// Exponion's concentric-annuli partial sort (exp).
+    pub annuli: bool,
+    /// Yinyang cluster grouping + per-round `q(f)` (syin, yin).
+    pub groups: bool,
+    /// ns-bound centroid history (all `-ns` variants).
+    pub history: bool,
+    /// ns history must also carry per-group displacement maxima (syin-ns).
+    pub group_history: bool,
+    /// Disable the delta ("changed samples only") centroid update —
+    /// used by the deliberately naive Table 7 baselines.
+    pub full_update: bool,
+}
+
+/// One sample moved cluster during a round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Moved {
+    /// Global sample index.
+    pub i: u32,
+    /// Previous cluster.
+    pub from: u32,
+    /// New cluster.
+    pub to: u32,
+}
+
+/// Read-only, centroid-side context for one assignment round.
+///
+/// Built once per round by the coordinator and shared by every worker.
+pub struct SharedRound<'a> {
+    /// The dataset (samples + pre-computed squared norms).
+    pub data: &'a Dataset,
+    /// Number of clusters.
+    pub k: usize,
+    /// Round index: 0 is the initial full assignment.
+    pub round: usize,
+    /// Current centroids, row-major `k×d`.
+    pub centroids: &'a [f64],
+    /// `‖c(j)‖²`, refreshed each round (paper §4.1.1).
+    pub cnorms: &'a [f64],
+    /// `p(j)`: distance moved by each centroid in the last update step.
+    pub p: &'a [f64],
+    /// `max_j p(j)` and where it occurs, plus the runner-up — lets ham
+    /// subtract the max over `j ≠ a(i)` in O(1).
+    pub p_max: f64,
+    /// Second-largest displacement.
+    pub p_max2: f64,
+    /// Index attaining `p_max`.
+    pub p_argmax: usize,
+    /// Inter-centroid data, if requested.
+    pub cc: Option<&'a CcData>,
+    /// Sorted centroid norms, if requested.
+    pub sorted_norms: Option<&'a SortedNorms>,
+    /// Exponion annuli, if requested.
+    pub annuli: Option<&'a Annuli>,
+    /// Yinyang groups, if requested.
+    pub groups: Option<&'a GroupData>,
+    /// ns-bound history, if requested.
+    pub history: Option<&'a HistoryRound>,
+}
+
+impl<'a> SharedRound<'a> {
+    /// Centroid `j` as a row slice.
+    #[inline]
+    pub fn centroid(&self, j: usize) -> &'a [f64] {
+        let d = self.data.d();
+        &self.centroids[j * d..(j + 1) * d]
+    }
+
+    /// `s(j)`: distance from centroid j to its nearest other centroid.
+    #[inline]
+    pub fn s(&self, j: usize) -> f64 {
+        self.cc.expect("cc not built").s[j]
+    }
+}
+
+/// The assignment-step interface every algorithm implements for a shard
+/// of samples `[lo, hi)`.
+///
+/// `a` is the shard's slice of the global assignment array (local index 0
+/// is global `lo`). Implementations must append every assignment change
+/// to `moved` with *global* indices.
+pub trait AssignStep: Send {
+    /// Paper-notation name ("exp-ns", "selk", …).
+    fn name(&self) -> &'static str;
+
+    /// Downcast hook so tests can inspect per-sample bound state.
+    fn as_any(&self) -> &dyn std::any::Any;
+
+    /// Centroid-side structures this algorithm needs.
+    fn requirements(&self) -> Requirements;
+
+    /// Initial full assignment (round 0): set `a`, make all bounds tight.
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters);
+
+    /// One assignment round (round ≥ 1).
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    );
+}
+
+/// Block size for the batched initial scan.
+const INIT_BLOCK: usize = 128;
+
+/// Batched full distance scan over the shard `[lo, hi)`: calls
+/// `f(local_i, row)` with the full `k`-vector of squared distances for
+/// each sample. Used by every algorithm's `init`. Counts `(hi−lo)·k`
+/// assignment distances.
+pub fn batch_scan(
+    sh: &SharedRound,
+    lo: usize,
+    hi: usize,
+    ctr: &mut Counters,
+    mut f: impl FnMut(usize, &[f64]),
+) {
+    let d = sh.data.d();
+    let k = sh.k;
+    let mut buf = vec![0.0; INIT_BLOCK * k];
+    let mut start = lo;
+    while start < hi {
+        let stop = (start + INIT_BLOCK).min(hi);
+        let m = stop - start;
+        sqdist_batch_block(
+            &sh.data.raw()[start * d..stop * d],
+            &sh.data.sqnorms()[start..stop],
+            sh.centroids,
+            sh.cnorms,
+            d,
+            &mut buf[..m * k],
+        );
+        for i in 0..m {
+            f(start - lo + i, &buf[i * k..(i + 1) * k]);
+        }
+        start = stop;
+    }
+    ctr.assignment += ((hi - lo) * k) as u64;
+}
+
+/// Unblocked, per-pair full distance scan — the *naive* counterpart of
+/// [`batch_scan`], used by the Table 7 baseline family to quantify what
+/// the paper's §4.1.1 engineering (norm decomposition + blocked products)
+/// is worth. Same contract as `batch_scan`.
+pub fn scalar_scan(
+    sh: &SharedRound,
+    lo: usize,
+    hi: usize,
+    ctr: &mut Counters,
+    mut f: impl FnMut(usize, &[f64]),
+) {
+    let k = sh.k;
+    let mut row = vec![0.0; k];
+    for gi in lo..hi {
+        let x = sh.data.row(gi);
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = crate::linalg::sqdist(x, sh.centroid(j));
+        }
+        f(gi - lo, &row);
+    }
+    ctr.assignment += ((hi - lo) * k) as u64;
+}
+
+/// Top-2 of a squared-distance row, converting to *plain* distances
+/// (every bound in the paper is on plain Euclidean distance).
+#[inline]
+pub fn top2_sqrt(row: &[f64]) -> Top2 {
+    let mut t = Top2::new();
+    for (j, &sq) in row.iter().enumerate() {
+        t.push(j, sq.sqrt());
+    }
+    t
+}
+
+/// Plain (non-squared) distance from sample `i` to centroid `j`,
+/// counting one assignment distance.
+#[inline]
+pub fn dist_ic(sh: &SharedRound, i: usize, j: usize, ctr: &mut Counters) -> f64 {
+    ctr.assignment += 1;
+    crate::linalg::sqdist(sh.data.row(i), sh.centroid(j)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::round_ctx::RoundCtxOwner;
+    use crate::data::synth::blobs;
+
+    #[test]
+    fn batch_scan_matches_direct() {
+        let ds = blobs(97, 6, 4, 0.2, 3);
+        let k = 5;
+        let centroids: Vec<f64> = ds.raw()[..k * 6].to_vec();
+        let owner = RoundCtxOwner::new_for_test(&ds, centroids);
+        let sh = owner.shared(&ds);
+        let mut ctr = Counters::default();
+        let mut rows = Vec::new();
+        batch_scan(&sh, 10, 40, &mut ctr, |li, row| rows.push((li, row.to_vec())));
+        assert_eq!(rows.len(), 30);
+        assert_eq!(ctr.assignment, 30 * k as u64);
+        for (li, row) in &rows {
+            let gi = 10 + li;
+            for j in 0..k {
+                let direct = crate::linalg::sqdist(ds.row(gi), sh.centroid(j));
+                assert!((row[j] - direct).abs() < 1e-9, "i={gi} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn top2_sqrt_orders_plain_distances() {
+        let t = top2_sqrt(&[9.0, 1.0, 4.0]);
+        assert_eq!(t.idx1, 1);
+        assert!((t.val1 - 1.0).abs() < 1e-12);
+        assert_eq!(t.idx2, 2);
+        assert!((t.val2 - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,176 @@
+//! `elk` — Elkan's algorithm (§2.3): selk plus the inter-centroid tests.
+//! Keeps `cc(j,j′)` and `s(j)` to add the outer test `s(a(i))/2 > u(i)`
+//! (eq. 7) and strengthen the inner test to
+//! `max(l(i,j), cc(a(i),j)/2) > u(i)` (eq. 6).
+
+use super::common::{batch_scan, dist_ic, scalar_scan, AssignStep, Moved, Requirements, SharedRound};
+use crate::metrics::Counters;
+
+/// Elkan per-sample state (same as selk; cc/s live in the round context).
+pub struct Elk {
+    lo: usize,
+    k: usize,
+    u: Vec<f64>,
+    l: Vec<f64>,
+    naive: bool,
+}
+
+impl Elk {
+    /// Create for a shard `[lo, lo+len)` with `k` clusters.
+    pub fn new(lo: usize, len: usize, k: usize) -> Self {
+        Elk {
+            lo,
+            k,
+            u: vec![0.0; len],
+            l: vec![0.0; len * k],
+            naive: false,
+        }
+    }
+
+    /// Table 7 comparator: scalar initial scan + full centroid updates.
+    pub fn new_naive(lo: usize, len: usize, k: usize) -> Self {
+        Elk {
+            naive: true,
+            ..Elk::new(lo, len, k)
+        }
+    }
+}
+
+impl AssignStep for Elk {
+    fn name(&self) -> &'static str {
+        if self.naive {
+            "naive-elk"
+        } else {
+            "elk"
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements {
+            cc: true,
+            full_update: self.naive,
+            ..Requirements::default()
+        }
+    }
+
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+        let lo = self.lo;
+        let hi = lo + a.len();
+        let k = self.k;
+        let naive = self.naive;
+        let (u, l) = (&mut self.u, &mut self.l);
+        let body = |li: usize, row: &[f64]| {
+            let lrow = &mut l[li * k..(li + 1) * k];
+            let mut best = 0usize;
+            let mut bd = f64::INFINITY;
+            for (j, &sq) in row.iter().enumerate() {
+                let dj = sq.sqrt();
+                lrow[j] = dj;
+                if dj < bd {
+                    bd = dj;
+                    best = j;
+                }
+            }
+            a[li] = best as u32;
+            u[li] = bd;
+        };
+        if naive {
+            scalar_scan(sh, lo, hi, ctr, body);
+        } else {
+            batch_scan(sh, lo, hi, ctr, body);
+        }
+    }
+
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    ) {
+        let lo = self.lo;
+        let k = self.k;
+        let cc = sh.cc.expect("elk requires cc");
+        for li in 0..a.len() {
+            let gi = lo + li;
+            let a0 = a[li] as usize;
+            let mut ai = a0;
+            self.u[li] += sh.p[ai];
+            let mut u = self.u[li];
+            let mut utight = false;
+            let lrow = &mut self.l[li * k..(li + 1) * k];
+            for (j, lj) in lrow.iter_mut().enumerate() {
+                *lj -= sh.p[j];
+            }
+            // outer test (eq. 7)
+            if cc.s[ai] * 0.5 >= u {
+                self.u[li] = u;
+                continue;
+            }
+            for j in 0..k {
+                if j == ai || lrow[j] >= u || cc.get(ai, j) * 0.5 >= u {
+                    continue; // inner test (eq. 6)
+                }
+                if !utight {
+                    ctr.assignment += 1;
+                    u = crate::linalg::sqdist(sh.data.row(gi), sh.centroid(ai)).sqrt();
+                    utight = true;
+                    lrow[ai] = u;
+                    if lrow[j] >= u || cc.get(ai, j) * 0.5 >= u {
+                        continue;
+                    }
+                }
+                lrow[j] = dist_ic(sh, gi, j, ctr);
+                if lrow[j] < u {
+                    ai = j;
+                    u = lrow[j];
+                }
+            }
+            self.u[li] = u;
+            if ai != a0 {
+                moved.push(Moved {
+                    i: gi as u32,
+                    from: a0 as u32,
+                    to: ai as u32,
+                });
+                a[li] = ai as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::*;
+
+    #[test]
+    fn matches_sta_on_blobs() {
+        assert_exact_vs_sta(|lo, len, k, _g| Box::new(Elk::new(lo, len, k)), 400, 8, 10, 37);
+    }
+
+    #[test]
+    fn matches_sta_high_dim() {
+        assert_exact_vs_sta(|lo, len, k, _g| Box::new(Elk::new(lo, len, k)), 200, 32, 15, 41);
+    }
+
+    #[test]
+    fn bounds_remain_valid_every_round() {
+        assert_bounds_valid(
+            |lo, len, k, _g| Box::new(Elk::new(lo, len, k)),
+            |alg, chk| {
+                let e = alg.as_any().downcast_ref::<Elk>().unwrap();
+                for li in 0..chk.len() {
+                    chk.upper(li, e.u[li]);
+                    for j in 0..e.k {
+                        chk.lower_per(li, j, e.l[li * e.k + j]);
+                    }
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,149 @@
+//! `exp` — the **Exponion** algorithm, this paper's §3.1 contribution.
+//!
+//! Like ann it extends ham with a candidate filter on the unavoidable
+//! scan, but the filter is a *ball centred on the assigned centroid*
+//! `B(c(a(i)), 2u(i) + s(a(i)))` rather than an origin-centred annulus:
+//! in `R^d` the volume ratio favours the ball by `d·(w/r)^{d−1}`.
+//! Candidates come from the coordinator's concentric-annuli partial sort
+//! of the inter-centroid matrix ([`crate::coordinator::annuli::Annuli`]),
+//! which over-covers by at most 2× (paper: `|J*(i)| ≤ 2|J(i)|`).
+
+use super::common::{batch_scan, dist_ic, top2_sqrt, AssignStep, Moved, Requirements, SharedRound};
+use crate::linalg::Top2;
+use crate::metrics::Counters;
+
+/// Exponion per-sample state — identical to ham's (no `b(i)` needed).
+pub struct Exponion {
+    lo: usize,
+    u: Vec<f64>,
+    l: Vec<f64>,
+}
+
+impl Exponion {
+    /// Create for a shard `[lo, lo+len)`.
+    pub fn new(lo: usize, len: usize) -> Self {
+        Exponion {
+            lo,
+            u: vec![0.0; len],
+            l: vec![0.0; len],
+        }
+    }
+}
+
+impl AssignStep for Exponion {
+    fn name(&self) -> &'static str {
+        "exp"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements {
+            cc: true,
+            annuli: true,
+            ..Requirements::default()
+        }
+    }
+
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+        let lo = self.lo;
+        let (u, l) = (&mut self.u, &mut self.l);
+        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+            let t2 = top2_sqrt(row);
+            a[li] = t2.idx1 as u32;
+            u[li] = t2.val1;
+            l[li] = t2.val2;
+        });
+    }
+
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    ) {
+        let lo = self.lo;
+        let annuli = sh.annuli.expect("exp requires annuli");
+        for li in 0..a.len() {
+            let ai = a[li] as usize;
+            let gi = lo + li;
+            // ham's bound update + outer test
+            self.u[li] += sh.p[ai];
+            self.l[li] -= if sh.p_argmax == ai {
+                sh.p_max2
+            } else {
+                sh.p_max
+            };
+            let m = self.l[li].max(sh.s(ai) * 0.5);
+            if m >= self.u[li] {
+                continue;
+            }
+            self.u[li] = dist_ic(sh, gi, ai, ctr);
+            if m >= self.u[li] {
+                continue;
+            }
+            // exponion scan: ball of radius 2u + s(a) around c(a) (eq. 12)
+            let r = 2.0 * self.u[li] + sh.s(ai);
+            let mut t2 = Top2::new();
+            t2.push(ai, self.u[li]);
+            for &j in annuli.candidates(ai, r) {
+                t2.push(j as usize, dist_ic(sh, gi, j as usize, ctr));
+            }
+            self.u[li] = t2.val1;
+            self.l[li] = t2.val2;
+            if t2.idx1 != ai {
+                moved.push(Moved {
+                    i: gi as u32,
+                    from: ai as u32,
+                    to: t2.idx1 as u32,
+                });
+                a[li] = t2.idx1 as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::*;
+
+    #[test]
+    fn matches_sta_on_blobs() {
+        assert_exact_vs_sta(
+            |lo, len, _k, _g| Box::new(Exponion::new(lo, len)),
+            400,
+            4,
+            10,
+            19,
+        );
+    }
+
+    #[test]
+    fn matches_sta_low_dim_many_clusters() {
+        assert_exact_vs_sta(
+            |lo, len, _k, _g| Box::new(Exponion::new(lo, len)),
+            800,
+            2,
+            32,
+            23,
+        );
+    }
+
+    #[test]
+    fn bounds_remain_valid_every_round() {
+        assert_bounds_valid(
+            |lo, len, _k, _g| Box::new(Exponion::new(lo, len)),
+            |alg, chk| {
+                let e = alg.as_any().downcast_ref::<Exponion>().unwrap();
+                for li in 0..chk.len() {
+                    chk.upper(li, e.u[li]);
+                    chk.lower_all(li, e.l[li]);
+                }
+            },
+        );
+    }
+}

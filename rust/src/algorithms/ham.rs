@@ -1,0 +1,136 @@
+//! `ham` — Hamerly's algorithm (§2.4): one upper bound `u(i)` on the
+//! assigned centroid, one lower bound `l(i)` on *all* other centroids,
+//! and the outer test `max(l(i), s(a(i))/2) ≥ u(i)`.
+
+use super::common::{batch_scan, dist_ic, top2_sqrt, AssignStep, Moved, Requirements, SharedRound};
+use crate::linalg::Top2;
+use crate::metrics::Counters;
+
+/// Hamerly per-sample state.
+pub struct Ham {
+    lo: usize,
+    /// Upper bound on the distance to the assigned centroid.
+    u: Vec<f64>,
+    /// Lower bound on the distance to every other centroid.
+    l: Vec<f64>,
+}
+
+impl Ham {
+    /// Create for a shard `[lo, lo+len)`.
+    pub fn new(lo: usize, len: usize) -> Self {
+        Ham {
+            lo,
+            u: vec![0.0; len],
+            l: vec![0.0; len],
+        }
+    }
+
+    /// Bound update at round start; returns the loose-bound gate value
+    /// `max(l(i), s(a)/2)`.
+    #[inline]
+    fn update_bounds(&mut self, sh: &SharedRound, li: usize, ai: usize) -> f64 {
+        self.u[li] += sh.p[ai];
+        self.l[li] -= if sh.p_argmax == ai {
+            sh.p_max2
+        } else {
+            sh.p_max
+        };
+        self.l[li].max(sh.s(ai) * 0.5)
+    }
+}
+
+impl AssignStep for Ham {
+    fn name(&self) -> &'static str {
+        "ham"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements {
+            cc: true, // for s(j)
+            ..Requirements::default()
+        }
+    }
+
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+        let lo = self.lo;
+        let (u, l) = (&mut self.u, &mut self.l);
+        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+            let t2 = top2_sqrt(row);
+            a[li] = t2.idx1 as u32;
+            u[li] = t2.val1;
+            l[li] = t2.val2;
+        });
+    }
+
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    ) {
+        let lo = self.lo;
+        for li in 0..a.len() {
+            let ai = a[li] as usize;
+            let gi = lo + li;
+            let m = self.update_bounds(sh, li, ai);
+            if m >= self.u[li] {
+                continue; // outer test with loose u
+            }
+            // tighten u and retry
+            self.u[li] = dist_ic(sh, gi, ai, ctr);
+            if m >= self.u[li] {
+                continue;
+            }
+            // full scan reveals n1 and n2
+            let mut t2 = Top2::new();
+            for j in 0..sh.k {
+                let dj = if j == ai {
+                    self.u[li]
+                } else {
+                    dist_ic(sh, gi, j, ctr)
+                };
+                t2.push(j, dj);
+            }
+            self.u[li] = t2.val1;
+            self.l[li] = t2.val2;
+            if t2.idx1 != ai {
+                moved.push(Moved {
+                    i: gi as u32,
+                    from: ai as u32,
+                    to: t2.idx1 as u32,
+                });
+                a[li] = t2.idx1 as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::*;
+
+    #[test]
+    fn matches_sta_on_blobs() {
+        assert_exact_vs_sta(|lo, len, _k, _g| Box::new(Ham::new(lo, len)), 400, 6, 8, 11);
+    }
+
+    #[test]
+    fn bounds_remain_valid_every_round() {
+        assert_bounds_valid(
+            |lo, len, _k, _g| Box::new(Ham::new(lo, len)),
+            |alg, chk| {
+                let ham = alg.as_any().downcast_ref::<Ham>().unwrap();
+                for li in 0..chk.len() {
+                    chk.upper(li, ham.u[li]);
+                    chk.lower_all(li, ham.l[li]);
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! All k-means assignment-step algorithms the paper evaluates, behind a
+//! single [`Algorithm`] registry.
+
+pub mod ann;
+pub mod common;
+pub mod elk;
+pub mod exponion;
+pub mod ham;
+pub mod naive;
+pub mod ns;
+pub mod selk;
+pub mod sta;
+#[cfg(test)]
+pub mod testutil;
+pub mod yinyang;
+
+pub use common::{AssignStep, Moved, Requirements, SharedRound};
+
+/// Every algorithm variant the crate implements (paper notation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[allow(missing_docs)]
+pub enum Algorithm {
+    Sta,
+    Selk,
+    Elk,
+    Ham,
+    Ann,
+    Exp,
+    Syin,
+    Yin,
+    SelkNs,
+    ElkNs,
+    SyinNs,
+    ExpNs,
+    // Table 7 comparator family (deliberately less engineered)
+    NaiveSta,
+    NaiveHam,
+    NaiveElk,
+    NaiveYin,
+    /// Adaptive choice by dimension (paper §5 future work; see
+    /// `coordinator::auto`).
+    Auto,
+}
+
+impl Algorithm {
+    /// The paper's sn-algorithms (Table 4 candidates).
+    pub const SN: [Algorithm; 8] = [
+        Algorithm::Sta,
+        Algorithm::Selk,
+        Algorithm::Elk,
+        Algorithm::Ham,
+        Algorithm::Ann,
+        Algorithm::Exp,
+        Algorithm::Syin,
+        Algorithm::Yin,
+    ];
+
+    /// The ns-variants (paper §3.4).
+    pub const NS: [Algorithm; 4] = [
+        Algorithm::SelkNs,
+        Algorithm::ElkNs,
+        Algorithm::SyinNs,
+        Algorithm::ExpNs,
+    ];
+
+    /// Everything that can actually run (excludes `Auto`).
+    pub const ALL: [Algorithm; 16] = [
+        Algorithm::Sta,
+        Algorithm::Selk,
+        Algorithm::Elk,
+        Algorithm::Ham,
+        Algorithm::Ann,
+        Algorithm::Exp,
+        Algorithm::Syin,
+        Algorithm::Yin,
+        Algorithm::SelkNs,
+        Algorithm::ElkNs,
+        Algorithm::SyinNs,
+        Algorithm::ExpNs,
+        Algorithm::NaiveSta,
+        Algorithm::NaiveHam,
+        Algorithm::NaiveElk,
+        Algorithm::NaiveYin,
+    ];
+
+    /// Paper-notation name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Sta => "sta",
+            Algorithm::Selk => "selk",
+            Algorithm::Elk => "elk",
+            Algorithm::Ham => "ham",
+            Algorithm::Ann => "ann",
+            Algorithm::Exp => "exp",
+            Algorithm::Syin => "syin",
+            Algorithm::Yin => "yin",
+            Algorithm::SelkNs => "selk-ns",
+            Algorithm::ElkNs => "elk-ns",
+            Algorithm::SyinNs => "syin-ns",
+            Algorithm::ExpNs => "exp-ns",
+            Algorithm::NaiveSta => "naive-sta",
+            Algorithm::NaiveHam => "naive-ham",
+            Algorithm::NaiveElk => "naive-elk",
+            Algorithm::NaiveYin => "naive-yin",
+            Algorithm::Auto => "auto",
+        }
+    }
+
+    /// Parse a paper-notation name.
+    pub fn parse(s: &str) -> Option<Algorithm> {
+        Algorithm::ALL
+            .iter()
+            .chain(std::iter::once(&Algorithm::Auto))
+            .find(|a| a.name() == s)
+            .copied()
+    }
+
+    /// The ns-variant of an sn-algorithm, if one exists.
+    pub fn ns_variant(&self) -> Option<Algorithm> {
+        match self {
+            Algorithm::Selk => Some(Algorithm::SelkNs),
+            Algorithm::Elk => Some(Algorithm::ElkNs),
+            Algorithm::Syin => Some(Algorithm::SyinNs),
+            Algorithm::Exp => Some(Algorithm::ExpNs),
+            _ => None,
+        }
+    }
+
+    /// Centroid-side requirements (same as the shard instances report).
+    pub fn requirements(&self, k: usize) -> Requirements {
+        // instantiate a zero-length shard and ask it
+        self.make_shard(0, 0, k, crate::coordinator::groups::GroupData::group_count(k))
+            .requirements()
+    }
+
+    /// Instantiate per-shard state for samples `[lo, lo+len)`.
+    ///
+    /// `g` is the Yinyang group count (ignored by non-group algorithms).
+    /// Panics on `Auto` — the coordinator resolves it first
+    /// (see `coordinator::auto::resolve`).
+    pub fn make_shard(&self, lo: usize, len: usize, k: usize, g: usize) -> Box<dyn AssignStep> {
+        match self {
+            Algorithm::Sta => Box::new(sta::Sta::new(lo)),
+            Algorithm::Selk => Box::new(selk::Selk::new(lo, len, k)),
+            Algorithm::Elk => Box::new(elk::Elk::new(lo, len, k)),
+            Algorithm::Ham => Box::new(ham::Ham::new(lo, len)),
+            Algorithm::Ann => Box::new(ann::Ann::new(lo, len)),
+            Algorithm::Exp => Box::new(exponion::Exponion::new(lo, len)),
+            Algorithm::Syin => Box::new(yinyang::Yinyang::new(lo, len, g, false)),
+            Algorithm::Yin => Box::new(yinyang::Yinyang::new(lo, len, g, true)),
+            Algorithm::SelkNs => Box::new(ns::SelkNs::new(lo, len, k)),
+            Algorithm::ElkNs => Box::new(ns::ElkNs::new(lo, len, k)),
+            Algorithm::SyinNs => Box::new(ns::SyinNs::new(lo, len, g)),
+            Algorithm::ExpNs => Box::new(ns::ExpNs::new(lo, len)),
+            Algorithm::NaiveSta => Box::new(sta::Sta::new_naive(lo)),
+            Algorithm::NaiveHam => Box::new(naive::NaiveHam::new(lo, len)),
+            Algorithm::NaiveElk => Box::new(elk::Elk::new_naive(lo, len, k)),
+            Algorithm::NaiveYin => Box::new(yinyang::Yinyang::new_naive(lo, len, g)),
+            Algorithm::Auto => panic!("Auto must be resolved by the coordinator before sharding"),
+        }
+    }
+}
+
+impl std::fmt::Display for Algorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for a in Algorithm::ALL {
+            assert_eq!(Algorithm::parse(a.name()), Some(a));
+        }
+        assert_eq!(Algorithm::parse("auto"), Some(Algorithm::Auto));
+        assert_eq!(Algorithm::parse("bogus"), None);
+    }
+
+    #[test]
+    fn ns_variant_mapping() {
+        assert_eq!(Algorithm::Exp.ns_variant(), Some(Algorithm::ExpNs));
+        assert_eq!(Algorithm::Ham.ns_variant(), None);
+    }
+
+    #[test]
+    fn shard_names_match_enum() {
+        for a in Algorithm::ALL {
+            let shard = a.make_shard(0, 0, 20, 2);
+            assert_eq!(shard.name(), a.name());
+        }
+    }
+
+    #[test]
+    fn requirements_consistency() {
+        // ns variants need history; exponion needs annuli + cc
+        assert!(Algorithm::ExpNs.requirements(20).history);
+        assert!(Algorithm::ExpNs.requirements(20).annuli);
+        assert!(Algorithm::Exp.requirements(20).cc);
+        assert!(Algorithm::Syin.requirements(20).groups);
+        assert!(Algorithm::SyinNs.requirements(20).group_history);
+        assert!(Algorithm::NaiveSta.requirements(20).full_update);
+        assert!(!Algorithm::Sta.requirements(20).full_update);
+    }
+}

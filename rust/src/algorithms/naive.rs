@@ -1,0 +1,129 @@
+//! `naive-ham` — a deliberately less-engineered Hamerly used by the
+//! Table 7 implementation comparison. Algorithmically identical to
+//! [`Ham`](super::ham::Ham) (same tests, same distance counts up to the
+//! scan path) but missing the §4.1.1 engineering:
+//!
+//! * initial scan is per-pair scalar, not the blocked norm-decomposition;
+//! * the "max displacement over j ≠ a(i)" is found with a per-sample O(k)
+//!   scan of `p` instead of the O(1) max/argmax/second-max trick;
+//! * centroid updates are recomputed from scratch (`full_update`).
+
+use super::common::{
+    dist_ic, scalar_scan, top2_sqrt, AssignStep, Moved, Requirements, SharedRound,
+};
+use crate::linalg::Top2;
+use crate::metrics::Counters;
+
+/// Naive-Hamerly per-sample state.
+pub struct NaiveHam {
+    lo: usize,
+    u: Vec<f64>,
+    l: Vec<f64>,
+}
+
+impl NaiveHam {
+    /// Create for a shard `[lo, lo+len)`.
+    pub fn new(lo: usize, len: usize) -> Self {
+        NaiveHam {
+            lo,
+            u: vec![0.0; len],
+            l: vec![0.0; len],
+        }
+    }
+}
+
+impl AssignStep for NaiveHam {
+    fn name(&self) -> &'static str {
+        "naive-ham"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements {
+            cc: true,
+            full_update: true,
+            ..Requirements::default()
+        }
+    }
+
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+        let lo = self.lo;
+        let (u, l) = (&mut self.u, &mut self.l);
+        scalar_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+            let t2 = top2_sqrt(row);
+            a[li] = t2.idx1 as u32;
+            u[li] = t2.val1;
+            l[li] = t2.val2;
+        });
+    }
+
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    ) {
+        let lo = self.lo;
+        for li in 0..a.len() {
+            let ai = a[li] as usize;
+            let gi = lo + li;
+            self.u[li] += sh.p[ai];
+            // the naive O(k) pass an unoptimised implementation performs
+            let mut pmax = 0.0;
+            for (j, &pj) in sh.p.iter().enumerate() {
+                if j != ai && pj > pmax {
+                    pmax = pj;
+                }
+            }
+            self.l[li] -= pmax;
+            let m = self.l[li].max(sh.s(ai) * 0.5);
+            if m >= self.u[li] {
+                continue;
+            }
+            self.u[li] = dist_ic(sh, gi, ai, ctr);
+            if m >= self.u[li] {
+                continue;
+            }
+            let mut t2 = Top2::new();
+            for j in 0..sh.k {
+                let dj = if j == ai {
+                    self.u[li]
+                } else {
+                    dist_ic(sh, gi, j, ctr)
+                };
+                t2.push(j, dj);
+            }
+            self.u[li] = t2.val1;
+            self.l[li] = t2.val2;
+            if t2.idx1 != ai {
+                moved.push(Moved {
+                    i: gi as u32,
+                    from: ai as u32,
+                    to: t2.idx1 as u32,
+                });
+                a[li] = t2.idx1 as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::*;
+
+    #[test]
+    fn matches_sta_on_blobs() {
+        assert_exact_vs_sta(
+            |lo, len, _k, _g| Box::new(NaiveHam::new(lo, len)),
+            400,
+            6,
+            8,
+            107,
+        );
+    }
+}

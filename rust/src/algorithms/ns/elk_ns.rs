@@ -1,0 +1,185 @@
+//! `elk-ns` — Elkan's algorithm with ns-bounds (paper §3.4): selk-ns plus
+//! the inter-centroid tests (outer eq. 7, inner eq. 6) evaluated against
+//! the ns effective bounds.
+
+use crate::algorithms::common::{
+    batch_scan, dist_ic, AssignStep, Moved, Requirements, SharedRound,
+};
+use crate::metrics::Counters;
+
+/// elk-ns per-sample state (same shape as selk-ns).
+pub struct ElkNs {
+    lo: usize,
+    k: usize,
+    u: Vec<f64>,
+    tu: Vec<u32>,
+    l: Vec<f64>,
+    tl: Vec<u32>,
+}
+
+impl ElkNs {
+    /// Create for a shard `[lo, lo+len)` with `k` clusters.
+    pub fn new(lo: usize, len: usize, k: usize) -> Self {
+        ElkNs {
+            lo,
+            k,
+            u: vec![0.0; len],
+            tu: vec![0; len],
+            l: vec![0.0; len * k],
+            tl: vec![0; len * k],
+        }
+    }
+}
+
+impl AssignStep for ElkNs {
+    fn name(&self) -> &'static str {
+        "elk-ns"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements {
+            cc: true,
+            history: true,
+            ..Requirements::default()
+        }
+    }
+
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+        let lo = self.lo;
+        let k = self.k;
+        let (u, l) = (&mut self.u, &mut self.l);
+        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+            let lrow = &mut l[li * k..(li + 1) * k];
+            let mut best = 0usize;
+            let mut bd = f64::INFINITY;
+            for (j, &sq) in row.iter().enumerate() {
+                let dj = sq.sqrt();
+                lrow[j] = dj;
+                if dj < bd {
+                    bd = dj;
+                    best = j;
+                }
+            }
+            a[li] = best as u32;
+            u[li] = bd;
+        });
+    }
+
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    ) {
+        let lo = self.lo;
+        let k = self.k;
+        let cc = sh.cc.expect("elk-ns requires cc");
+        let h = sh.history.expect("ns variant requires history");
+        let ep = &h.epoch;
+        let t_now = (ep.len - 1) as u32;
+        for li in 0..a.len() {
+            let gi = lo + li;
+            let a0 = a[li] as usize;
+            let mut ai = a0;
+            let lrow = &mut self.l[li * k..(li + 1) * k];
+            let tlrow = &mut self.tl[li * k..(li + 1) * k];
+            if let Some(fold) = &h.fold {
+                self.u[li] += fold.p(ai, self.tu[li] as usize);
+                self.tu[li] = 0;
+                for j in 0..k {
+                    lrow[j] -= fold.p(j, tlrow[j] as usize);
+                    tlrow[j] = 0;
+                }
+            }
+            let mut eu = self.u[li] + ep.p(ai, self.tu[li] as usize);
+            // outer test (eq. 7)
+            if cc.s[ai] * 0.5 >= eu {
+                continue;
+            }
+            for j in 0..k {
+                if j == ai || cc.get(ai, j) * 0.5 >= eu {
+                    continue;
+                }
+                let el = lrow[j] - ep.p(j, tlrow[j] as usize);
+                if el >= eu {
+                    continue;
+                }
+                if self.tu[li] != t_now {
+                    ctr.assignment += 1;
+                    let du = crate::linalg::sqdist(sh.data.row(gi), sh.centroid(ai)).sqrt();
+                    self.u[li] = du;
+                    self.tu[li] = t_now;
+                    eu = du;
+                    if el >= eu || cc.get(ai, j) * 0.5 >= eu {
+                        continue;
+                    }
+                }
+                lrow[j] = dist_ic(sh, gi, j, ctr);
+                tlrow[j] = t_now;
+                if lrow[j] < eu {
+                    lrow[ai] = self.u[li];
+                    tlrow[ai] = self.tu[li];
+                    ai = j;
+                    self.u[li] = lrow[j];
+                    self.tu[li] = t_now;
+                    eu = lrow[j];
+                }
+            }
+            if ai != a0 {
+                moved.push(Moved {
+                    i: gi as u32,
+                    from: a0 as u32,
+                    to: ai as u32,
+                });
+                a[li] = ai as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::*;
+
+    #[test]
+    fn matches_sta_on_blobs() {
+        assert_exact_vs_sta(|lo, len, k, _g| Box::new(ElkNs::new(lo, len, k)), 400, 8, 10, 71);
+    }
+
+    #[test]
+    fn matches_sta_with_history_resets() {
+        assert_exact_vs_sta_with_reset(
+            |lo, len, k, _g| Box::new(ElkNs::new(lo, len, k)),
+            300,
+            12,
+            8,
+            73,
+            3,
+        );
+    }
+
+    #[test]
+    fn bounds_remain_valid_every_round() {
+        assert_bounds_valid(
+            |lo, len, k, _g| Box::new(ElkNs::new(lo, len, k)),
+            |alg, chk| {
+                let s = alg.as_any().downcast_ref::<ElkNs>().unwrap();
+                let ep = chk.epoch().expect("history");
+                for li in 0..chk.len() {
+                    let ai = chk.assignment(li) as usize;
+                    chk.upper(li, s.u[li] + ep.p(ai, s.tu[li] as usize));
+                    for j in 0..s.k {
+                        let el = s.l[li * s.k + j] - ep.p(j, s.tl[li * s.k + j] as usize);
+                        chk.lower_per(li, j, el);
+                    }
+                }
+            },
+        );
+    }
+}

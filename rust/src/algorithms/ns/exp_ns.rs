@@ -1,0 +1,170 @@
+//! `exp-ns` — the Exponion algorithm with ns-bounds (paper §3.4): the
+//! paper's two contributions composed, and its best performer on
+//! low-dimensional data.
+//!
+//! The single lower bound uses the MNS update from SM-C.2: the stored
+//! base is the exact second-nearest distance at round `T_l(i)` and the
+//! effective bound subtracts `max_{j≠a(i)} P(j, T_l(i))` (O(1) via the
+//! epoch's max/argmax/second-max tables).
+
+use crate::algorithms::common::{
+    batch_scan, dist_ic, top2_sqrt, AssignStep, Moved, Requirements, SharedRound,
+};
+use crate::linalg::Top2;
+use crate::metrics::Counters;
+
+/// exp-ns per-sample state.
+pub struct ExpNs {
+    lo: usize,
+    /// Exact distance to assigned centroid at epoch round `tu`.
+    u: Vec<f64>,
+    tu: Vec<u32>,
+    /// Exact second-nearest distance at epoch round `tl`.
+    l: Vec<f64>,
+    tl: Vec<u32>,
+}
+
+impl ExpNs {
+    /// Create for a shard `[lo, lo+len)`.
+    pub fn new(lo: usize, len: usize) -> Self {
+        ExpNs {
+            lo,
+            u: vec![0.0; len],
+            tu: vec![0; len],
+            l: vec![0.0; len],
+            tl: vec![0; len],
+        }
+    }
+}
+
+impl AssignStep for ExpNs {
+    fn name(&self) -> &'static str {
+        "exp-ns"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements {
+            cc: true,
+            annuli: true,
+            history: true,
+            ..Requirements::default()
+        }
+    }
+
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+        let lo = self.lo;
+        let (u, l) = (&mut self.u, &mut self.l);
+        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+            let t2 = top2_sqrt(row);
+            a[li] = t2.idx1 as u32;
+            u[li] = t2.val1;
+            l[li] = t2.val2;
+        });
+    }
+
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    ) {
+        let lo = self.lo;
+        let annuli = sh.annuli.expect("exp-ns requires annuli");
+        let h = sh.history.expect("ns variant requires history");
+        let ep = &h.epoch;
+        let t_now = (ep.len - 1) as u32;
+        for li in 0..a.len() {
+            let ai = a[li] as usize;
+            let gi = lo + li;
+            if let Some(fold) = &h.fold {
+                self.u[li] += fold.p(ai, self.tu[li] as usize);
+                self.tu[li] = 0;
+                self.l[li] -= fold.maxp_excl(ai, self.tl[li] as usize);
+                self.tl[li] = 0;
+            }
+            let mut eu = self.u[li] + ep.p(ai, self.tu[li] as usize);
+            let el = self.l[li] - ep.maxp_excl(ai, self.tl[li] as usize);
+            let m = el.max(sh.s(ai) * 0.5);
+            if m >= eu {
+                continue;
+            }
+            if self.tu[li] != t_now {
+                ctr.assignment += 1;
+                eu = crate::linalg::sqdist(sh.data.row(gi), sh.centroid(ai)).sqrt();
+                self.u[li] = eu;
+                self.tu[li] = t_now;
+                if m >= eu {
+                    continue;
+                }
+            }
+            // exponion scan with tight u
+            let r = 2.0 * eu + sh.s(ai);
+            let mut t2 = Top2::new();
+            t2.push(ai, eu);
+            for &j in annuli.candidates(ai, r) {
+                t2.push(j as usize, dist_ic(sh, gi, j as usize, ctr));
+            }
+            self.u[li] = t2.val1;
+            self.tu[li] = t_now;
+            self.l[li] = t2.val2;
+            self.tl[li] = t_now;
+            if t2.idx1 != ai {
+                moved.push(Moved {
+                    i: gi as u32,
+                    from: ai as u32,
+                    to: t2.idx1 as u32,
+                });
+                a[li] = t2.idx1 as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::*;
+
+    #[test]
+    fn matches_sta_on_blobs() {
+        assert_exact_vs_sta(|lo, len, _k, _g| Box::new(ExpNs::new(lo, len)), 400, 4, 10, 79);
+    }
+
+    #[test]
+    fn matches_sta_low_dim_many_clusters() {
+        assert_exact_vs_sta(|lo, len, _k, _g| Box::new(ExpNs::new(lo, len)), 800, 2, 32, 83);
+    }
+
+    #[test]
+    fn matches_sta_with_history_resets() {
+        assert_exact_vs_sta_with_reset(
+            |lo, len, _k, _g| Box::new(ExpNs::new(lo, len)),
+            300,
+            3,
+            8,
+            89,
+            3,
+        );
+    }
+
+    #[test]
+    fn bounds_remain_valid_every_round() {
+        assert_bounds_valid(
+            |lo, len, _k, _g| Box::new(ExpNs::new(lo, len)),
+            |alg, chk| {
+                let s = alg.as_any().downcast_ref::<ExpNs>().unwrap();
+                let ep = chk.epoch().expect("history");
+                for li in 0..chk.len() {
+                    let ai = chk.assignment(li) as usize;
+                    chk.upper(li, s.u[li] + ep.p(ai, s.tu[li] as usize));
+                    chk.lower_all(li, s.l[li] - ep.maxp_excl(ai, s.tl[li] as usize));
+                }
+            },
+        );
+    }
+}

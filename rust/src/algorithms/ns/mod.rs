@@ -1,0 +1,19 @@
+//! ns-bound algorithm variants (paper §3.2–3.4).
+//!
+//! Instead of drifting bounds by per-round displacement sums (sn), these
+//! remember *when* each bound was last tight (`T`) and the exact distance
+//! then (`base`), and correct by the norm-of-sum
+//! `P(j,T) = ‖c_now(j) − c_T(j)‖` from the coordinator's
+//! [`HistoryStore`](crate::coordinator::history::HistoryStore). Strictly
+//! tighter by the triangle inequality (SM-B.5); costs `O(k·t·d)` memory,
+//! bounded by the paper's periodic sn-style reset.
+
+pub mod elk_ns;
+pub mod exp_ns;
+pub mod selk_ns;
+pub mod syin_ns;
+
+pub use elk_ns::ElkNs;
+pub use exp_ns::ExpNs;
+pub use selk_ns::SelkNs;
+pub use syin_ns::SyinNs;

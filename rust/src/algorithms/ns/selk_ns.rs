@@ -1,0 +1,199 @@
+//! `selk-ns` — Simplified Elkan with ns-bounds (paper §3.3).
+//!
+//! `l(i,j)` stores the exact distance computed at round `T(i,j)`; the
+//! effective bound this round is `l(i,j) − P(j, T(i,j))` (lower) and
+//! `u(i) + P(a(i), T(i,a(i)))` (upper). A bound is *tight* exactly when
+//! its `T` is the current round.
+
+use crate::algorithms::common::{
+    batch_scan, dist_ic, AssignStep, Moved, Requirements, SharedRound,
+};
+use crate::metrics::Counters;
+
+/// selk-ns per-sample state.
+pub struct SelkNs {
+    lo: usize,
+    k: usize,
+    /// Exact distance to the assigned centroid at epoch round `tu`.
+    u: Vec<f64>,
+    /// Epoch round at which `u` was computed.
+    tu: Vec<u32>,
+    /// Exact distances `‖x(i) − c_T(j)‖`, row-major `len×k`.
+    l: Vec<f64>,
+    /// Epoch round of each `l` entry, row-major `len×k`.
+    tl: Vec<u32>,
+}
+
+impl SelkNs {
+    /// Create for a shard `[lo, lo+len)` with `k` clusters.
+    pub fn new(lo: usize, len: usize, k: usize) -> Self {
+        SelkNs {
+            lo,
+            k,
+            u: vec![0.0; len],
+            tu: vec![0; len],
+            l: vec![0.0; len * k],
+            tl: vec![0; len * k],
+        }
+    }
+}
+
+impl AssignStep for SelkNs {
+    fn name(&self) -> &'static str {
+        "selk-ns"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements {
+            history: true,
+            ..Requirements::default()
+        }
+    }
+
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+        let lo = self.lo;
+        let k = self.k;
+        let (u, l) = (&mut self.u, &mut self.l);
+        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+            let lrow = &mut l[li * k..(li + 1) * k];
+            let mut best = 0usize;
+            let mut bd = f64::INFINITY;
+            for (j, &sq) in row.iter().enumerate() {
+                let dj = sq.sqrt();
+                lrow[j] = dj;
+                if dj < bd {
+                    bd = dj;
+                    best = j;
+                }
+            }
+            a[li] = best as u32;
+            u[li] = bd;
+        });
+        // T arrays already zero == epoch round 0 (everything tight)
+    }
+
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    ) {
+        let lo = self.lo;
+        let k = self.k;
+        let h = sh.history.expect("ns variant requires history");
+        let ep = &h.epoch;
+        let t_now = (ep.len - 1) as u32;
+        for li in 0..a.len() {
+            let gi = lo + li;
+            let a0 = a[li] as usize;
+            let mut ai = a0;
+            let lrow = &mut self.l[li * k..(li + 1) * k];
+            let tlrow = &mut self.tl[li * k..(li + 1) * k];
+            // sn-style reset fold (paper §3.3 end)
+            if let Some(fold) = &h.fold {
+                self.u[li] += fold.p(ai, self.tu[li] as usize);
+                self.tu[li] = 0;
+                for j in 0..k {
+                    lrow[j] -= fold.p(j, tlrow[j] as usize);
+                    tlrow[j] = 0;
+                }
+            }
+            let mut eu = self.u[li] + ep.p(ai, self.tu[li] as usize);
+            for j in 0..k {
+                if j == ai {
+                    continue;
+                }
+                let el = lrow[j] - ep.p(j, tlrow[j] as usize);
+                if el >= eu {
+                    continue;
+                }
+                if self.tu[li] != t_now {
+                    // tighten u
+                    ctr.assignment += 1;
+                    let du = crate::linalg::sqdist(sh.data.row(gi), sh.centroid(ai)).sqrt();
+                    self.u[li] = du;
+                    self.tu[li] = t_now;
+                    eu = du;
+                    if el >= eu {
+                        continue;
+                    }
+                }
+                // tighten l(i,j)
+                lrow[j] = dist_ic(sh, gi, j, ctr);
+                tlrow[j] = t_now;
+                if lrow[j] < eu {
+                    // both tight: j is strictly nearer. Keep the old
+                    // assignee's exact record as its l entry.
+                    lrow[ai] = self.u[li];
+                    tlrow[ai] = self.tu[li];
+                    ai = j;
+                    self.u[li] = lrow[j];
+                    self.tu[li] = t_now;
+                    eu = lrow[j];
+                }
+            }
+            if ai != a0 {
+                moved.push(Moved {
+                    i: gi as u32,
+                    from: a0 as u32,
+                    to: ai as u32,
+                });
+                a[li] = ai as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::*;
+
+    #[test]
+    fn matches_sta_on_blobs() {
+        assert_exact_vs_sta(
+            |lo, len, k, _g| Box::new(SelkNs::new(lo, len, k)),
+            400,
+            8,
+            10,
+            61,
+        );
+    }
+
+    #[test]
+    fn matches_sta_with_history_resets() {
+        // tiny reset cap exercises the fold path (set in testutil)
+        assert_exact_vs_sta_with_reset(
+            |lo, len, k, _g| Box::new(SelkNs::new(lo, len, k)),
+            300,
+            5,
+            8,
+            67,
+            3, // reset every 3 rounds
+        );
+    }
+
+    #[test]
+    fn bounds_remain_valid_every_round() {
+        assert_bounds_valid(
+            |lo, len, k, _g| Box::new(SelkNs::new(lo, len, k)),
+            |alg, chk| {
+                let s = alg.as_any().downcast_ref::<SelkNs>().unwrap();
+                let ep = chk.epoch().expect("history");
+                for li in 0..chk.len() {
+                    let ai = chk.assignment(li) as usize;
+                    chk.upper(li, s.u[li] + ep.p(ai, s.tu[li] as usize));
+                    for j in 0..s.k {
+                        let el = s.l[li * s.k + j] - ep.p(j, s.tl[li * s.k + j] as usize);
+                        chk.lower_per(li, j, el);
+                    }
+                }
+            },
+        );
+    }
+}

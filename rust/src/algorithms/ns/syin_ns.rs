@@ -1,0 +1,245 @@
+//! `syin-ns` — Simplified Yinyang with ns group bounds (paper §3.4,
+//! SM-C.2's MNS scheme): the stored group bound is the exact group
+//! minimum at round `T_l(i,f)`; the effective bound subtracts
+//! `max_{j∈G(f)} P(j, T_l(i,f))` from the epoch's per-group tables.
+
+use crate::algorithms::common::{
+    batch_scan, dist_ic, AssignStep, Moved, Requirements, SharedRound,
+};
+use crate::linalg::Top2;
+use crate::metrics::Counters;
+
+/// syin-ns per-sample state.
+pub struct SyinNs {
+    lo: usize,
+    g: usize,
+    u: Vec<f64>,
+    tu: Vec<u32>,
+    /// Group bound bases, row-major `len×g`.
+    l: Vec<f64>,
+    tl: Vec<u32>,
+    // scratch
+    gmin: Vec<Top2>,
+    scanned: Vec<bool>,
+    el: Vec<f64>,
+}
+
+impl SyinNs {
+    /// Create for a shard `[lo, lo+len)` with `g` groups.
+    pub fn new(lo: usize, len: usize, g: usize) -> Self {
+        SyinNs {
+            lo,
+            g,
+            u: vec![0.0; len],
+            tu: vec![0; len],
+            l: vec![0.0; len * g],
+            tl: vec![0; len * g],
+            gmin: vec![Top2::new(); g],
+            scanned: vec![false; g],
+            el: vec![0.0; g],
+        }
+    }
+}
+
+impl AssignStep for SyinNs {
+    fn name(&self) -> &'static str {
+        "syin-ns"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements {
+            groups: true,
+            history: true,
+            group_history: true,
+            ..Requirements::default()
+        }
+    }
+
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+        let lo = self.lo;
+        let g = self.g;
+        let gd = sh.groups.expect("syin-ns requires groups");
+        let (u, l) = (&mut self.u, &mut self.l);
+        let mut gms = vec![Top2::new(); g];
+        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+            for gm in gms.iter_mut() {
+                *gm = Top2::new();
+            }
+            let mut best = Top2::new();
+            for (j, &sq) in row.iter().enumerate() {
+                let dj = sq.sqrt();
+                gms[gd.group_of[j] as usize].push(j, dj);
+                best.push(j, dj);
+            }
+            let ai = best.idx1;
+            a[li] = ai as u32;
+            u[li] = best.val1;
+            let lrow = &mut l[li * g..(li + 1) * g];
+            for (f, gm) in gms.iter().enumerate() {
+                lrow[f] = if gm.idx1 == ai { gm.val2 } else { gm.val1 };
+            }
+        });
+    }
+
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    ) {
+        let lo = self.lo;
+        let g = self.g;
+        let gd = sh.groups.expect("syin-ns requires groups");
+        let h = sh.history.expect("ns variant requires history");
+        let ep = &h.epoch;
+        let t_now = (ep.len - 1) as u32;
+        for li in 0..a.len() {
+            let gi = lo + li;
+            let a0 = a[li] as usize;
+            let lrow = &mut self.l[li * g..(li + 1) * g];
+            let tlrow = &mut self.tl[li * g..(li + 1) * g];
+            if let Some(fold) = &h.fold {
+                self.u[li] += fold.p(a0, self.tu[li] as usize);
+                self.tu[li] = 0;
+                for f in 0..g {
+                    lrow[f] -= fold.group_max(f, tlrow[f] as usize);
+                    tlrow[f] = 0;
+                }
+            }
+            let mut eu = self.u[li] + ep.p(a0, self.tu[li] as usize);
+            let mut minl = f64::INFINITY;
+            for f in 0..g {
+                let e = lrow[f] - ep.group_max(f, tlrow[f] as usize);
+                self.el[f] = e;
+                if e < minl {
+                    minl = e;
+                }
+            }
+            // outer test (eq. 10)
+            if minl >= eu {
+                continue;
+            }
+            if self.tu[li] != t_now {
+                ctr.assignment += 1;
+                eu = crate::linalg::sqdist(sh.data.row(gi), sh.centroid(a0)).sqrt();
+                self.u[li] = eu;
+                self.tu[li] = t_now;
+            }
+            let d_old = eu; // tight distance to the old assignee
+            if minl >= d_old {
+                continue;
+            }
+            let f_old = gd.group_of[a0] as usize;
+            let mut best = Top2::new();
+            best.push(a0, d_old);
+            for f in 0..g {
+                let scan = self.el[f] < best.val1;
+                self.scanned[f] = scan;
+                if !scan {
+                    continue;
+                }
+                let mut gm = Top2::new();
+                if f == f_old {
+                    gm.push(a0, d_old);
+                }
+                for &j in &gd.members[f] {
+                    let j = j as usize;
+                    if j == a0 {
+                        continue;
+                    }
+                    let dj = dist_ic(sh, gi, j, ctr);
+                    gm.push(j, dj);
+                    best.push(j, dj);
+                }
+                self.gmin[f] = gm;
+            }
+            let a_new = best.idx1;
+            self.u[li] = best.val1;
+            self.tu[li] = t_now;
+            for f in 0..g {
+                if self.scanned[f] {
+                    let gm = &self.gmin[f];
+                    lrow[f] = if gm.idx1 == a_new { gm.val2 } else { gm.val1 };
+                    tlrow[f] = t_now;
+                } else if f == f_old && a_new != a0 {
+                    // old assignee joins this group's bound set with a
+                    // known exact distance vs the *current* centroids
+                    lrow[f] = self.el[f].min(d_old);
+                    tlrow[f] = t_now;
+                }
+            }
+            if a_new != a0 {
+                moved.push(Moved {
+                    i: gi as u32,
+                    from: a0 as u32,
+                    to: a_new as u32,
+                });
+                a[li] = a_new as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::*;
+
+    #[test]
+    fn matches_sta_on_blobs() {
+        assert_exact_vs_sta(
+            |lo, len, _k, g| Box::new(SyinNs::new(lo, len, g)),
+            500,
+            10,
+            20,
+            97,
+        );
+    }
+
+    #[test]
+    fn matches_sta_many_clusters() {
+        assert_exact_vs_sta(
+            |lo, len, _k, g| Box::new(SyinNs::new(lo, len, g)),
+            600,
+            6,
+            40,
+            101,
+        );
+    }
+
+    #[test]
+    fn matches_sta_with_history_resets() {
+        assert_exact_vs_sta_with_reset(
+            |lo, len, _k, g| Box::new(SyinNs::new(lo, len, g)),
+            300,
+            5,
+            12,
+            103,
+            3,
+        );
+    }
+
+    #[test]
+    fn bounds_remain_valid_every_round() {
+        assert_bounds_valid(
+            |lo, len, _k, g| Box::new(SyinNs::new(lo, len, g)),
+            |alg, chk| {
+                let s = alg.as_any().downcast_ref::<SyinNs>().unwrap();
+                let ep = chk.epoch().expect("history");
+                for li in 0..chk.len() {
+                    let ai = chk.assignment(li) as usize;
+                    chk.upper(li, s.u[li] + ep.p(ai, s.tu[li] as usize));
+                    for f in 0..s.g {
+                        let el = s.l[li * s.g + f] - ep.group_max(f, s.tl[li * s.g + f] as usize);
+                        chk.lower_group(li, f, el);
+                    }
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,149 @@
+//! `selk` — Simplified Elkan (§2.2): k lower bounds `l(i,j)` and one
+//! upper bound `u(i)` per sample, inner test `u(i) < l(i,j)` only —
+//! a strict subset of Elkan's strategies that the paper shows is usually
+//! *faster* than the fully-fledged elk.
+
+use super::common::{batch_scan, dist_ic, AssignStep, Moved, Requirements, SharedRound};
+use crate::metrics::Counters;
+
+/// Simplified-Elkan per-sample state.
+pub struct Selk {
+    lo: usize,
+    k: usize,
+    u: Vec<f64>,
+    /// `l(i,j)` row-major `len×k`.
+    l: Vec<f64>,
+}
+
+impl Selk {
+    /// Create for a shard `[lo, lo+len)` with `k` clusters.
+    pub fn new(lo: usize, len: usize, k: usize) -> Self {
+        Selk {
+            lo,
+            k,
+            u: vec![0.0; len],
+            l: vec![0.0; len * k],
+        }
+    }
+}
+
+impl AssignStep for Selk {
+    fn name(&self) -> &'static str {
+        "selk"
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements::default()
+    }
+
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+        let lo = self.lo;
+        let k = self.k;
+        let (u, l) = (&mut self.u, &mut self.l);
+        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+            let lrow = &mut l[li * k..(li + 1) * k];
+            let mut best = 0usize;
+            let mut bd = f64::INFINITY;
+            for (j, &sq) in row.iter().enumerate() {
+                let dj = sq.sqrt();
+                lrow[j] = dj; // all bounds start tight
+                if dj < bd {
+                    bd = dj;
+                    best = j;
+                }
+            }
+            a[li] = best as u32;
+            u[li] = bd;
+        });
+    }
+
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    ) {
+        let lo = self.lo;
+        let k = self.k;
+        for li in 0..a.len() {
+            let gi = lo + li;
+            let a0 = a[li] as usize;
+            let mut ai = a0;
+            // bound maintenance (eq. 4)
+            self.u[li] += sh.p[ai];
+            let mut u = self.u[li];
+            let mut utight = false;
+            let lrow = &mut self.l[li * k..(li + 1) * k];
+            for (j, lj) in lrow.iter_mut().enumerate() {
+                *lj -= sh.p[j];
+            }
+            for j in 0..k {
+                if j == ai || lrow[j] >= u {
+                    continue; // inner test (eq. 3)
+                }
+                if !utight {
+                    // tighten u first — it is reused in every later test
+                    ctr.assignment += 1;
+                    u = crate::linalg::sqdist(sh.data.row(gi), sh.centroid(ai)).sqrt();
+                    utight = true;
+                    lrow[ai] = u; // exact distance doubles as l(i,a)
+                    if lrow[j] >= u {
+                        continue;
+                    }
+                }
+                // tighten l(i,j); if still below u, j is strictly nearer
+                lrow[j] = dist_ic(sh, gi, j, ctr);
+                if lrow[j] < u {
+                    ai = j;
+                    u = lrow[j]; // tight for the new assignee
+                }
+            }
+            self.u[li] = u;
+            if ai != a0 {
+                moved.push(Moved {
+                    i: gi as u32,
+                    from: a0 as u32,
+                    to: ai as u32,
+                });
+                a[li] = ai as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::*;
+
+    #[test]
+    fn matches_sta_on_blobs() {
+        assert_exact_vs_sta(|lo, len, k, _g| Box::new(Selk::new(lo, len, k)), 400, 8, 10, 29);
+    }
+
+    #[test]
+    fn matches_sta_high_dim() {
+        assert_exact_vs_sta(|lo, len, k, _g| Box::new(Selk::new(lo, len, k)), 200, 40, 12, 31);
+    }
+
+    #[test]
+    fn bounds_remain_valid_every_round() {
+        assert_bounds_valid(
+            |lo, len, k, _g| Box::new(Selk::new(lo, len, k)),
+            |alg, chk| {
+                let s = alg.as_any().downcast_ref::<Selk>().unwrap();
+                for li in 0..chk.len() {
+                    chk.upper(li, s.u[li]);
+                    for j in 0..s.k {
+                        chk.lower_per(li, j, s.l[li * s.k + j]);
+                    }
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,141 @@
+//! `sta` — the standard (unaccelerated) Lloyd assignment step (§2.1).
+//!
+//! Every round computes all `N×k` distances through the blocked batch
+//! path and takes the arg-min. This is the baseline every bounding
+//! algorithm is measured against.
+
+use super::common::{batch_scan, scalar_scan, AssignStep, Moved, Requirements, SharedRound};
+use crate::linalg::argmin;
+use crate::metrics::Counters;
+
+/// Standard algorithm state: nothing beyond the shard geometry.
+pub struct Sta {
+    lo: usize,
+    /// Naive mode (Table 7 baseline): per-pair scalar distances instead
+    /// of the blocked norm-decomposition path, and full (non-delta)
+    /// centroid updates.
+    naive: bool,
+}
+
+impl Sta {
+    /// Create for the shard starting at global index `lo`.
+    pub fn new(lo: usize) -> Self {
+        Sta { lo, naive: false }
+    }
+
+    /// The deliberately unoptimised variant (Table 7 comparator).
+    pub fn new_naive(lo: usize) -> Self {
+        Sta { lo, naive: true }
+    }
+
+    fn scan(
+        &self,
+        sh: &SharedRound,
+        lo: usize,
+        hi: usize,
+        ctr: &mut crate::metrics::Counters,
+        f: impl FnMut(usize, &[f64]),
+    ) {
+        if self.naive {
+            scalar_scan(sh, lo, hi, ctr, f);
+        } else {
+            batch_scan(sh, lo, hi, ctr, f);
+        }
+    }
+}
+
+impl AssignStep for Sta {
+    fn name(&self) -> &'static str {
+        if self.naive {
+            "naive-sta"
+        } else {
+            "sta"
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements {
+            full_update: self.naive,
+            ..Requirements::default()
+        }
+    }
+
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+        let lo = self.lo;
+        self.scan(sh, lo, lo + a.len(), ctr, |li, row| {
+            a[li] = argmin(row).unwrap() as u32;
+        });
+    }
+
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    ) {
+        let lo = self.lo;
+        self.scan(sh, lo, lo + a.len(), ctr, |li, row| {
+            let j = argmin(row).unwrap() as u32;
+            if j != a[li] {
+                moved.push(Moved {
+                    i: (lo + li) as u32,
+                    from: a[li],
+                    to: j,
+                });
+                a[li] = j;
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::round_ctx::RoundCtxOwner;
+    use crate::data::synth::blobs;
+
+    #[test]
+    fn init_assigns_nearest() {
+        let ds = blobs(60, 3, 3, 0.05, 1);
+        let centroids: Vec<f64> = ds.raw()[..4 * 3].to_vec();
+        let owner = RoundCtxOwner::new_for_test(&ds, centroids);
+        let sh = owner.shared(&ds);
+        let mut a = vec![0u32; 60];
+        let mut ctr = Counters::default();
+        Sta::new(0).init(&sh, &mut a, &mut ctr);
+        for i in 0..60 {
+            let mut bd = f64::INFINITY;
+            let mut bj = 0;
+            for j in 0..4 {
+                let d = crate::linalg::sqdist(ds.row(i), sh.centroid(j));
+                if d < bd {
+                    bd = d;
+                    bj = j;
+                }
+            }
+            assert_eq!(a[i], bj as u32, "sample {i}");
+        }
+        assert_eq!(ctr.assignment, 60 * 4);
+    }
+
+    #[test]
+    fn round_records_moves() {
+        let ds = blobs(40, 2, 2, 0.05, 2);
+        let centroids: Vec<f64> = ds.raw()[..2 * 2].to_vec();
+        let owner = RoundCtxOwner::new_for_test(&ds, centroids);
+        let sh = owner.shared(&ds);
+        let mut alg = Sta::new(0);
+        let mut a = vec![0u32; 40];
+        let mut ctr = Counters::default();
+        alg.init(&sh, &mut a, &mut ctr);
+        // re-running the round on the same centroids must move nothing
+        let mut moved = Vec::new();
+        alg.round(&sh, &mut a, &mut ctr, &mut moved);
+        assert!(moved.is_empty());
+    }
+}

@@ -1,0 +1,196 @@
+//! Test utilities shared by every algorithm's unit tests: exactness
+//! versus sta and bound-validity checking.
+
+use crate::algorithms::common::AssignStep;
+use crate::algorithms::Algorithm;
+use crate::config::RunConfig;
+use crate::coordinator::history::Epoch;
+use crate::coordinator::runner::Engine;
+use crate::data::synth::blobs;
+use crate::data::Dataset;
+use crate::linalg::sqdist;
+
+/// Factory signature used by the helpers.
+pub type Factory = dyn Fn(usize, usize, usize, usize) -> Box<dyn AssignStep>;
+
+const EPS: f64 = 1e-7;
+
+/// Run `factory`'s algorithm and sta in lockstep on gaussian blobs and
+/// assert per-round assignment equality — the paper's exactness property.
+pub fn assert_exact_vs_sta(factory: impl Fn(usize, usize, usize, usize) -> Box<dyn AssignStep>, n: usize, d: usize, k: usize, seed: u64) {
+    assert_exact_vs_sta_with_reset(factory, n, d, k, seed, usize::MAX);
+}
+
+/// As [`assert_exact_vs_sta`] but with a forced ns history reset period
+/// (exercises the fold path).
+pub fn assert_exact_vs_sta_with_reset(
+    factory: impl Fn(usize, usize, usize, usize) -> Box<dyn AssignStep>,
+    n: usize,
+    d: usize,
+    k: usize,
+    seed: u64,
+    history_cap: usize,
+) {
+    let ds = blobs(n, d, k, 0.25, seed);
+    let mut cfg = RunConfig::new(Algorithm::Sta, k).seed(seed).max_iters(200);
+    if history_cap != usize::MAX {
+        cfg.history_cap = Some(history_cap.max(2));
+    }
+    let mut sta = Engine::new(&ds, &cfg).unwrap();
+    let mut alg = Engine::with_factory(&ds, &cfg, &factory).unwrap();
+    assert_eq!(
+        sta.assignments(),
+        alg.assignments(),
+        "initial assignment differs ({})",
+        alg.name()
+    );
+    for round in 1..=200 {
+        let ms = sta.step();
+        let ma = alg.step();
+        assert_eq!(
+            sta.assignments(),
+            alg.assignments(),
+            "round {round}: assignments diverge ({})",
+            alg.name()
+        );
+        assert_eq!(
+            ms,
+            ma,
+            "round {round}: move counts differ ({})",
+            alg.name()
+        );
+        if sta.converged() || alg.converged() {
+            assert_eq!(sta.converged(), alg.converged(), "convergence differs");
+            break;
+        }
+    }
+    assert!(sta.converged(), "did not converge within 200 rounds");
+}
+
+/// Bound inspection context handed to per-algorithm checkers.
+pub struct BoundCheck<'a> {
+    data: &'a Dataset,
+    centroids: &'a [f64],
+    a: &'a [u32],
+    groups: Option<&'a crate::coordinator::groups::GroupData>,
+    epoch: Option<&'a Epoch>,
+    round: usize,
+}
+
+impl<'a> BoundCheck<'a> {
+    /// Number of samples (single shard in these tests).
+    pub fn len(&self) -> usize {
+        self.a.len()
+    }
+
+    /// There is always at least one sample.
+    pub fn is_empty(&self) -> bool {
+        self.a.is_empty()
+    }
+
+    /// Current assignment of sample `li`.
+    pub fn assignment(&self, li: usize) -> u32 {
+        self.a[li]
+    }
+
+    /// ns epoch (None for sn algorithms).
+    pub fn epoch(&self) -> Option<&'a Epoch> {
+        self.epoch
+    }
+
+    fn dist(&self, li: usize, j: usize) -> f64 {
+        let d = self.data.d();
+        sqdist(self.data.row(li), &self.centroids[j * d..(j + 1) * d]).sqrt()
+    }
+
+    /// Assert `u` is a valid upper bound on `‖x − c(a)‖`.
+    pub fn upper(&self, li: usize, u: f64) {
+        let true_d = self.dist(li, self.a[li] as usize);
+        assert!(
+            u >= true_d - EPS,
+            "round {}: sample {li}: upper bound {u} < true {true_d}",
+            self.round
+        );
+    }
+
+    /// Assert `l` lower-bounds `min_{j≠a} ‖x − c(j)‖`.
+    pub fn lower_all(&self, li: usize, l: f64) {
+        let ai = self.a[li] as usize;
+        let k = self.centroids.len() / self.data.d();
+        let mut mn = f64::INFINITY;
+        for j in 0..k {
+            if j != ai {
+                mn = mn.min(self.dist(li, j));
+            }
+        }
+        assert!(
+            l <= mn + EPS,
+            "round {}: sample {li}: global lower {l} > true min {mn}",
+            self.round
+        );
+    }
+
+    /// Assert `l` lower-bounds `‖x − c(j)‖`.
+    pub fn lower_per(&self, li: usize, j: usize, l: f64) {
+        let true_d = self.dist(li, j);
+        assert!(
+            l <= true_d + EPS,
+            "round {}: sample {li}, j={j}: lower {l} > true {true_d}",
+            self.round
+        );
+    }
+
+    /// Assert `l` lower-bounds `min_{j ∈ G(f)\{a}} ‖x − c(j)‖`.
+    pub fn lower_group(&self, li: usize, f: usize, l: f64) {
+        let gd = self.groups.expect("group check without groups");
+        let ai = self.a[li];
+        let mut mn = f64::INFINITY;
+        for &j in &gd.members[f] {
+            if j != ai {
+                mn = mn.min(self.dist(li, j as usize));
+            }
+        }
+        assert!(
+            l <= mn + EPS,
+            "round {}: sample {li}, group {f}: lower {l} > true min {mn}",
+            self.round
+        );
+    }
+
+    /// Assert ann's `b(i)` differs from `a(i)` and is in range.
+    pub fn b_differs(&self, li: usize, b: u32) {
+        let k = (self.centroids.len() / self.data.d()) as u32;
+        assert!(b < k, "b out of range");
+        assert_ne!(b, self.a[li], "b(i) == a(i)");
+    }
+}
+
+/// Run an engine for up to 60 rounds on blobs, invoking `inspect` after
+/// every round so algorithm tests can validate their bound state.
+pub fn assert_bounds_valid(
+    factory: impl Fn(usize, usize, usize, usize) -> Box<dyn AssignStep>,
+    inspect: impl Fn(&dyn AssignStep, &BoundCheck),
+) {
+    let (n, d, k, seed) = (300, 5, 12, 5u64);
+    let ds = blobs(n, d, k, 0.3, seed);
+    let mut cfg = RunConfig::new(Algorithm::Sta, k).seed(seed);
+    cfg.history_cap = Some(4); // force folds so ns bounds get exercised
+    let mut engine = Engine::with_factory(&ds, &cfg, &factory).unwrap();
+    for round in 1..=60 {
+        if engine.converged() {
+            break;
+        }
+        engine.step();
+        let ctx = engine.ctx();
+        let chk = BoundCheck {
+            data: &ds,
+            centroids: &ctx.centroids,
+            a: engine.assignments(),
+            groups: ctx.groups.as_ref(),
+            epoch: ctx.history.as_ref().map(|h| &h.epoch),
+            round,
+        };
+        inspect(engine.algs()[0].as_ref(), &chk);
+    }
+    assert!(engine.converged(), "bounds test run did not converge");
+}

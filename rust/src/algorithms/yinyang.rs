@@ -1,0 +1,287 @@
+//! `syin` / `yin` — Simplified Yinyang and Yinyang (§2.6, Ding et al.
+//! 2015): per-*group* lower bounds `l(i,f)` as a compromise between elk's
+//! k bounds and ham's single bound. `yin` adds the SM-C.1 local filter
+//! inside group scans; `syin` (this paper's simplification) drops it —
+//! and is usually faster.
+
+use super::common::{batch_scan, dist_ic, scalar_scan, AssignStep, Moved, Requirements, SharedRound};
+use crate::linalg::Top2;
+use crate::metrics::Counters;
+
+/// Yinyang-family per-sample state; `filter` selects yin vs syin.
+pub struct Yinyang {
+    lo: usize,
+    g: usize,
+    /// Upper bound on distance to assigned centroid.
+    u: Vec<f64>,
+    /// Group lower bounds, row-major `len×g`.
+    l: Vec<f64>,
+    /// yin's local filter enabled?
+    filter: bool,
+    naive: bool,
+    // per-sample scratch (allocated once)
+    gmin: Vec<Top2>,
+    skipmin: Vec<f64>,
+    scanned: Vec<bool>,
+}
+
+impl Yinyang {
+    /// `filter=false` → syin, `filter=true` → yin.
+    pub fn new(lo: usize, len: usize, g: usize, filter: bool) -> Self {
+        Yinyang {
+            lo,
+            g,
+            u: vec![0.0; len],
+            l: vec![0.0; len * g],
+            filter,
+            naive: false,
+            gmin: vec![Top2::new(); g],
+            skipmin: vec![f64::INFINITY; g],
+            scanned: vec![false; g],
+        }
+    }
+
+    /// Table 7 comparator: yin with scalar initial scan + full updates.
+    pub fn new_naive(lo: usize, len: usize, g: usize) -> Self {
+        Yinyang {
+            naive: true,
+            ..Yinyang::new(lo, len, g, true)
+        }
+    }
+}
+
+impl AssignStep for Yinyang {
+    fn name(&self) -> &'static str {
+        match (self.naive, self.filter) {
+            (true, _) => "naive-yin",
+            (false, true) => "yin",
+            (false, false) => "syin",
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn requirements(&self) -> Requirements {
+        Requirements {
+            groups: true,
+            full_update: self.naive,
+            ..Requirements::default()
+        }
+    }
+
+    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+        let lo = self.lo;
+        let hi = lo + a.len();
+        let g = self.g;
+        let naive = self.naive;
+        let gd = sh.groups.expect("yinyang requires groups");
+        let (u, l) = (&mut self.u, &mut self.l);
+        let mut gms = vec![Top2::new(); g];
+        let body = |li: usize, row: &[f64]| {
+            for gm in gms.iter_mut() {
+                *gm = Top2::new();
+            }
+            let mut best = Top2::new();
+            for (j, &sq) in row.iter().enumerate() {
+                let dj = sq.sqrt();
+                let f = gd.group_of[j] as usize;
+                gms[f].push(j, dj);
+                best.push(j, dj);
+            }
+            let ai = best.idx1;
+            a[li] = ai as u32;
+            u[li] = best.val1;
+            let lrow = &mut l[li * g..(li + 1) * g];
+            for (f, gm) in gms.iter().enumerate() {
+                lrow[f] = if gm.idx1 == ai { gm.val2 } else { gm.val1 };
+            }
+        };
+        if naive {
+            scalar_scan(sh, lo, hi, ctr, body);
+        } else {
+            batch_scan(sh, lo, hi, ctr, body);
+        }
+    }
+
+    fn round(
+        &mut self,
+        sh: &SharedRound,
+        a: &mut [u32],
+        ctr: &mut Counters,
+        moved: &mut Vec<Moved>,
+    ) {
+        let lo = self.lo;
+        let g = self.g;
+        let gd = sh.groups.expect("yinyang requires groups");
+        for li in 0..a.len() {
+            let gi = lo + li;
+            let a0 = a[li] as usize;
+            // bound maintenance
+            self.u[li] += sh.p[a0];
+            let lrow = &mut self.l[li * g..(li + 1) * g];
+            let mut minl = f64::INFINITY;
+            for (f, lf) in lrow.iter_mut().enumerate() {
+                *lf -= gd.q[f];
+                if *lf < minl {
+                    minl = *lf;
+                }
+            }
+            // outer test (eq. 10)
+            if minl >= self.u[li] {
+                continue;
+            }
+            let d_old = dist_ic(sh, gi, a0, ctr); // tighten u
+            self.u[li] = d_old;
+            if minl >= d_old {
+                continue;
+            }
+            let f_old = gd.group_of[a0] as usize;
+            let mut best = Top2::new();
+            best.push(a0, d_old);
+            for f in 0..g {
+                // group test (eq. 11) against the running best distance —
+                // it can only shrink, making the test stricter (still exact)
+                let el = lrow[f];
+                let scan = el < best.val1;
+                self.scanned[f] = scan;
+                if !scan {
+                    continue;
+                }
+                let lprev = el + gd.q[f]; // last round's value, for the local filter
+                let mut gm = Top2::new();
+                if f == f_old {
+                    gm.push(a0, d_old);
+                }
+                let mut skip_min = f64::INFINITY;
+                for &j in &gd.members[f] {
+                    let j = j as usize;
+                    if j == a0 {
+                        continue;
+                    }
+                    if self.filter {
+                        // yin's local test (SM-C.1): per-centroid bound
+                        // lprev − p(j) ≥ running second-best ⇒ j cannot
+                        // enter the top-2, skip its distance
+                        let lb = lprev - sh.p[j];
+                        if lb >= best.val2 {
+                            if lb < skip_min {
+                                skip_min = lb;
+                            }
+                            continue;
+                        }
+                    }
+                    let dj = dist_ic(sh, gi, j, ctr);
+                    gm.push(j, dj);
+                    best.push(j, dj);
+                }
+                self.gmin[f] = gm;
+                self.skipmin[f] = skip_min;
+            }
+            let a_new = best.idx1;
+            self.u[li] = best.val1;
+            for f in 0..g {
+                if self.scanned[f] {
+                    let gm = &self.gmin[f];
+                    let base = if gm.idx1 == a_new { gm.val2 } else { gm.val1 };
+                    lrow[f] = base.min(self.skipmin[f]);
+                } else if f == f_old && a_new != a0 {
+                    // old centroid joins this group's bound set; its exact
+                    // distance is known
+                    lrow[f] = lrow[f].min(d_old);
+                }
+            }
+            if a_new != a0 {
+                moved.push(Moved {
+                    i: gi as u32,
+                    from: a0 as u32,
+                    to: a_new as u32,
+                });
+                a[li] = a_new as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::testutil::*;
+
+    #[test]
+    fn syin_matches_sta() {
+        assert_exact_vs_sta(
+            |lo, len, _k, g| Box::new(Yinyang::new(lo, len, g, false)),
+            500,
+            10,
+            20,
+            43,
+        );
+    }
+
+    #[test]
+    fn yin_matches_sta() {
+        assert_exact_vs_sta(
+            |lo, len, _k, g| Box::new(Yinyang::new(lo, len, g, true)),
+            500,
+            10,
+            20,
+            47,
+        );
+    }
+
+    #[test]
+    fn syin_matches_sta_many_clusters() {
+        assert_exact_vs_sta(
+            |lo, len, _k, g| Box::new(Yinyang::new(lo, len, g, false)),
+            600,
+            6,
+            40,
+            53,
+        );
+    }
+
+    #[test]
+    fn yin_matches_sta_many_clusters() {
+        assert_exact_vs_sta(
+            |lo, len, _k, g| Box::new(Yinyang::new(lo, len, g, true)),
+            600,
+            6,
+            40,
+            59,
+        );
+    }
+
+    #[test]
+    fn syin_group_bounds_valid() {
+        assert_bounds_valid(
+            |lo, len, _k, g| Box::new(Yinyang::new(lo, len, g, false)),
+            |alg, chk| {
+                let y = alg.as_any().downcast_ref::<Yinyang>().unwrap();
+                for li in 0..chk.len() {
+                    chk.upper(li, y.u[li]);
+                    for f in 0..y.g {
+                        chk.lower_group(li, f, y.l[li * y.g + f]);
+                    }
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn yin_group_bounds_valid() {
+        assert_bounds_valid(
+            |lo, len, _k, g| Box::new(Yinyang::new(lo, len, g, true)),
+            |alg, chk| {
+                let y = alg.as_any().downcast_ref::<Yinyang>().unwrap();
+                for li in 0..chk.len() {
+                    chk.upper(li, y.u[li]);
+                    for f in 0..y.g {
+                        chk.lower_group(li, f, y.l[li * y.g + f]);
+                    }
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! Repeated-run measurement: mean wall time, distance counts, and
+//! iteration statistics over seeds — the quantities the paper's tables
+//! are built from (`q_t`, `q_a`, `q_au`).
+
+use std::time::Duration;
+
+use crate::algorithms::Algorithm;
+use crate::config::RunConfig;
+use crate::coordinator::Runner;
+use crate::data::Dataset;
+
+/// Aggregated statistics over seeds for one (dataset, algorithm, k).
+#[derive(Clone, Debug)]
+pub struct MeasureStats {
+    /// Algorithm measured.
+    pub algorithm: Algorithm,
+    /// Mean wall time.
+    pub mean_wall: Duration,
+    /// Std-dev of wall time.
+    pub sd_wall: Duration,
+    /// Mean assignment-step distance calculations (paper `a`).
+    pub mean_qa: f64,
+    /// Mean total distance calculations (paper `au`).
+    pub mean_qau: f64,
+    /// Mean iterations to convergence.
+    pub mean_iters: f64,
+    /// Std-dev of iterations.
+    pub sd_iters: f64,
+    /// Mean final objective (all algorithms must agree — checked).
+    pub mean_mse: f64,
+    /// Number of seeds.
+    pub seeds: usize,
+}
+
+/// Run `alg` on `data` for seeds `0..seeds`, averaging.
+pub fn measure(
+    data: &Dataset,
+    alg: Algorithm,
+    k: usize,
+    seeds: usize,
+    threads: usize,
+) -> MeasureStats {
+    measure_capped(data, alg, k, seeds, threads, 100_000)
+}
+
+/// As [`measure`] but with a round cap. Because every algorithm is
+/// *exact*, capping rounds keeps cross-algorithm ratios valid (they all
+/// execute the identical round sequence) while bounding bench time on
+/// slow-converging workloads (the paper's urand datasets run thousands
+/// of rounds).
+pub fn measure_capped(
+    data: &Dataset,
+    alg: Algorithm,
+    k: usize,
+    seeds: usize,
+    threads: usize,
+    max_iters: usize,
+) -> MeasureStats {
+    let mut walls = Vec::with_capacity(seeds);
+    let mut qa = 0.0;
+    let mut qau = 0.0;
+    let mut iters = Vec::with_capacity(seeds);
+    let mut mse = 0.0;
+    for seed in 0..seeds {
+        let cfg = RunConfig::new(alg, k)
+            .seed(seed as u64)
+            .threads(threads)
+            .max_iters(max_iters);
+        let out = Runner::new(&cfg).run(data).expect("run failed");
+        walls.push(out.wall);
+        qa += out.counters.assignment as f64;
+        qau += out.counters.total() as f64;
+        iters.push(out.iterations as f64);
+        mse += out.mse;
+    }
+    let n = seeds as f64;
+    let mean_wall_s = walls.iter().map(|w| w.as_secs_f64()).sum::<f64>() / n;
+    let var_wall = walls
+        .iter()
+        .map(|w| (w.as_secs_f64() - mean_wall_s).powi(2))
+        .sum::<f64>()
+        / n;
+    let mean_iters = iters.iter().sum::<f64>() / n;
+    let var_iters = iters.iter().map(|x| (x - mean_iters).powi(2)).sum::<f64>() / n;
+    MeasureStats {
+        algorithm: alg,
+        mean_wall: Duration::from_secs_f64(mean_wall_s),
+        sd_wall: Duration::from_secs_f64(var_wall.sqrt()),
+        mean_qa: qa / n,
+        mean_qau: qau / n,
+        mean_iters,
+        sd_iters: var_iters.sqrt(),
+        mean_mse: mse / n,
+        seeds,
+    }
+}
+
+/// Ratio of two durations as f64 (`a / b`).
+pub fn ratio(a: Duration, b: Duration) -> f64 {
+    a.as_secs_f64() / b.as_secs_f64().max(1e-12)
+}
+
+/// Median of a slice (not-NaN assumed).
+pub fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    if n == 0 {
+        return f64::NAN;
+    }
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        0.5 * (xs[n / 2 - 1] + xs[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+
+    #[test]
+    fn measure_aggregates_over_seeds() {
+        let ds = blobs(300, 3, 4, 0.1, 2);
+        let st = measure(&ds, Algorithm::Sta, 4, 2, 1);
+        assert_eq!(st.seeds, 2);
+        assert!(st.mean_qa > 0.0);
+        assert!(st.mean_qau >= st.mean_qa);
+        assert!(st.mean_iters >= 1.0);
+        assert!(st.mean_mse.is_finite());
+    }
+
+    #[test]
+    fn median_basics() {
+        assert_eq!(median(&mut [3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&mut [4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!(median(&mut []).is_nan());
+    }
+
+    #[test]
+    fn ratio_guards_zero() {
+        assert!(ratio(Duration::from_secs(1), Duration::from_secs(0)) > 0.0);
+    }
+}

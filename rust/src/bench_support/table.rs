@@ -1,0 +1,100 @@
+//! Fixed-width text table rendering matching the paper's table style.
+
+/// A simple text table builder.
+#[derive(Clone, Debug, Default)]
+pub struct TextTable {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    /// Start a table with a caption.
+    pub fn new(title: impl Into<String>) -> Self {
+        TextTable {
+            title: title.into(),
+            ..Default::default()
+        }
+    }
+
+    /// Set column headers.
+    pub fn headers(mut self, headers: &[&str]) -> Self {
+        self.headers = headers.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    /// Format a ratio the way the paper prints them (2 decimals, the
+    /// timeout/memory markers pass through).
+    pub fn fmt_ratio(x: f64) -> String {
+        if x.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{x:.2}")
+        }
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let cols = self
+            .headers
+            .len()
+            .max(self.rows.iter().map(|r| r.len()).max().unwrap_or(0));
+        let mut widths = vec![0usize; cols];
+        for (i, h) in self.headers.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&self.title);
+        out.push('\n');
+        if !self.headers.is_empty() {
+            for (i, h) in self.headers.iter().enumerate() {
+                out.push_str(&format!("{:>w$}  ", h, w = widths[i]));
+            }
+            out.push('\n');
+            let total: usize = widths.iter().sum::<usize>() + 2 * cols;
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                out.push_str(&format!("{:>w$}  ", cell, w = widths[i]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TextTable::new("Table X").headers(&["ds", "qt"]);
+        t.row(vec!["birch".into(), "0.48".into()]);
+        t.row(vec!["i".into(), "12.00".into()]);
+        let s = t.render();
+        assert!(s.starts_with("Table X\n"));
+        assert!(s.contains("birch"));
+        // each data line has aligned columns (same length)
+        let lines: Vec<&str> = s.lines().skip(3).collect();
+        assert_eq!(lines[0].len(), lines[1].len());
+    }
+
+    #[test]
+    fn ratio_formatting() {
+        assert_eq!(TextTable::fmt_ratio(0.5), "0.50");
+        assert_eq!(TextTable::fmt_ratio(f64::NAN), "-");
+    }
+}

@@ -1,0 +1,369 @@
+//! The `eakm` command-line interface (hand-rolled parsing — the build is
+//! offline and dependency-free beyond the `xla` runtime).
+//!
+//! ```text
+//! eakm run       --dataset birch --k 100 --algorithm exp-ns [--seed 0]
+//!                [--threads 1] [--scale 0.02] [--max-iters N] [--json]
+//!                [--config file] [--data-file path.csv|.ekb]
+//! eakm datasets  [--scale 0.02]           # list the 22 paper datasets
+//! eakm validate  --dataset birch --k 50   # all algorithms must agree
+//! eakm grid      [--scale f] [--seeds n] [--k 50,200] [--out dir]
+//! eakm help
+//! ```
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::algorithms::Algorithm;
+use crate::bench_support::{env_scale, measure, TextTable};
+use crate::config::RunConfig;
+use crate::coordinator::Runner;
+use crate::data::synth::{find, generate, paper_datasets};
+use crate::data::{io, Dataset};
+use crate::error::{EakmError, Result};
+use crate::init::InitMethod;
+use crate::json::Json;
+
+/// Entry point: parse args (excluding argv[0]) and run.
+pub fn main(args: &[String]) -> Result<i32> {
+    let (cmd, rest) = match args.split_first() {
+        Some((c, rest)) => (c.as_str(), rest),
+        None => ("help", &[] as &[String]),
+    };
+    match cmd {
+        "run" => cmd_run(&parse_flags(rest)?),
+        "datasets" => cmd_datasets(&parse_flags(rest)?),
+        "validate" => cmd_validate(&parse_flags(rest)?),
+        "grid" => cmd_grid(&parse_flags(rest)?),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(0)
+        }
+        other => Err(EakmError::Config(format!(
+            "unknown command {other:?} — try `eakm help`"
+        ))),
+    }
+}
+
+const HELP: &str = "\
+eakm — fast exact k-means with accurate bounds (Newling & Fleuret, ICML 2016)
+
+commands:
+  run        cluster one dataset with one algorithm
+  datasets   list the 22 paper datasets (synthetic stand-ins)
+  validate   run every algorithm and check they agree exactly
+  grid       run the full {dataset × k × algorithm} grid (Tables 9/10)
+  help       this text
+
+common flags:
+  --dataset NAME     paper dataset name or roman numeral (e.g. birch, iii)
+  --data-file PATH   load a .csv or .ekb file instead
+  --scale F          fraction of the full dataset size (default 0.02)
+  --k K              number of clusters
+  --algorithm ALG    sta selk elk ham ann exp syin yin selk-ns elk-ns
+                     syin-ns exp-ns naive-* auto
+  --seed S           RNG seed (default 0)
+  --threads T        worker threads (default 1)
+  --max-iters N      round cap
+  --init M           random | kmeans++
+  --json             emit the report as JSON
+";
+
+type Flags = HashMap<String, String>;
+
+fn parse_flags(args: &[String]) -> Result<Flags> {
+    let mut flags = Flags::new();
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        let key = arg
+            .strip_prefix("--")
+            .ok_or_else(|| EakmError::Config(format!("expected --flag, got {arg:?}")))?;
+        if key == "json" {
+            flags.insert(key.to_string(), "true".to_string());
+            continue;
+        }
+        let value = it
+            .next()
+            .ok_or_else(|| EakmError::Config(format!("--{key} needs a value")))?;
+        flags.insert(key.to_string(), value.clone());
+    }
+    Ok(flags)
+}
+
+fn flag_num<T: std::str::FromStr>(flags: &Flags, key: &str) -> Result<Option<T>> {
+    match flags.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<T>()
+            .map(Some)
+            .map_err(|_| EakmError::Config(format!("bad --{key}: {v:?}"))),
+    }
+}
+
+fn load_dataset(flags: &Flags) -> Result<Dataset> {
+    if let Some(path) = flags.get("data-file") {
+        let path = PathBuf::from(path);
+        let mut ds = match path.extension().and_then(|e| e.to_str()) {
+            Some("ekb") => io::load_bin(&path)?,
+            _ => io::load_csv(&path)?,
+        };
+        ds.standardize();
+        return Ok(ds);
+    }
+    let name = flags
+        .get("dataset")
+        .ok_or_else(|| EakmError::Config("--dataset or --data-file required".into()))?;
+    let spec = find(name)
+        .ok_or_else(|| EakmError::Config(format!("unknown dataset {name:?} — see `eakm datasets`")))?;
+    let scale = flag_num::<f64>(flags, "scale")?.unwrap_or_else(env_scale);
+    Ok(generate(&spec, scale, 0x00DA_7A5E))
+}
+
+fn build_config(flags: &Flags) -> Result<RunConfig> {
+    let mut cfg = if let Some(path) = flags.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        RunConfig::from_str_cfg(&text)?
+    } else {
+        RunConfig::new(Algorithm::Auto, 100)
+    };
+    if let Some(a) = flags.get("algorithm") {
+        cfg.algorithm = Algorithm::parse(a)
+            .ok_or_else(|| EakmError::Config(format!("unknown algorithm {a:?}")))?;
+    }
+    if let Some(k) = flag_num::<usize>(flags, "k")? {
+        cfg.k = k;
+    }
+    if let Some(s) = flag_num::<u64>(flags, "seed")? {
+        cfg.seed = s;
+    }
+    if let Some(t) = flag_num::<usize>(flags, "threads")? {
+        cfg.threads = t.max(1);
+    }
+    if let Some(m) = flag_num::<usize>(flags, "max-iters")? {
+        cfg.max_iters = m;
+    }
+    if let Some(i) = flags.get("init") {
+        cfg.init = InitMethod::parse(i)
+            .ok_or_else(|| EakmError::Config(format!("unknown init {i:?}")))?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(flags: &Flags) -> Result<i32> {
+    let data = load_dataset(flags)?;
+    let cfg = build_config(flags)?;
+    let out = Runner::new(&cfg).run(&data)?;
+    if flags.contains_key("json") {
+        println!("{}", Json::from(&out.report).to_string());
+    } else {
+        println!("{}", out.report.summary());
+    }
+    Ok(0)
+}
+
+fn cmd_datasets(flags: &Flags) -> Result<i32> {
+    let scale = flag_num::<f64>(flags, "scale")?.unwrap_or_else(env_scale);
+    let mut t = TextTable::new(format!(
+        "The 22 paper datasets (synthetic stand-ins), scale={scale}"
+    ))
+    .headers(&["id", "name", "d", "N(paper)", "N(scaled)", "class"]);
+    for spec in paper_datasets() {
+        let scaled = ((spec.n as f64 * scale) as usize).clamp(1_000.min(spec.n), spec.n);
+        t.row(vec![
+            spec.roman().to_string(),
+            spec.name.to_string(),
+            spec.d.to_string(),
+            spec.n.to_string(),
+            scaled.to_string(),
+            format!("{:?}", spec.class),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(0)
+}
+
+fn cmd_validate(flags: &Flags) -> Result<i32> {
+    let data = load_dataset(flags)?;
+    let k = flag_num::<usize>(flags, "k")?.unwrap_or(50);
+    let seed = flag_num::<u64>(flags, "seed")?.unwrap_or(0);
+    let mut reference: Option<(usize, f64, Vec<u32>)> = None;
+    let mut failures = 0;
+    for alg in Algorithm::ALL {
+        let cfg = RunConfig::new(alg, k).seed(seed).max_iters(100_000);
+        let out = Runner::new(&cfg).run(&data)?;
+        match &reference {
+            None => {
+                println!(
+                    "{:<10} iters={:<5} mse={:.9}  [reference]",
+                    alg.name(),
+                    out.iterations,
+                    out.mse
+                );
+                reference = Some((out.iterations, out.mse, out.assignments));
+            }
+            Some((iters, mse, assign)) => {
+                let ok = out.iterations == *iters
+                    && (out.mse - mse).abs() <= 1e-9 * mse.max(1.0)
+                    && out.assignments == *assign;
+                println!(
+                    "{:<10} iters={:<5} mse={:.9}  [{}]",
+                    alg.name(),
+                    out.iterations,
+                    out.mse,
+                    if ok { "OK" } else { "MISMATCH" }
+                );
+                if !ok {
+                    failures += 1;
+                }
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("{failures} algorithm(s) diverged from sta — exactness violated");
+        return Ok(1);
+    }
+    println!("all {} algorithms agree exactly", Algorithm::ALL.len());
+    Ok(0)
+}
+
+fn cmd_grid(flags: &Flags) -> Result<i32> {
+    use crate::bench_support::{env_seeds, grid_datasets, grid_ks};
+    let scale = flag_num::<f64>(flags, "scale")?.unwrap_or_else(env_scale);
+    let seeds = flag_num::<usize>(flags, "seeds")?.unwrap_or_else(env_seeds);
+    let ks: Vec<usize> = match flags.get("k") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                x.parse::<usize>()
+                    .map_err(|_| EakmError::Config(format!("bad k list {s:?}")))
+            })
+            .collect::<Result<_>>()?,
+        None => grid_ks(scale).to_vec(),
+    };
+    let algs: Vec<Algorithm> = match flags.get("algorithms") {
+        Some(s) => s
+            .split(',')
+            .map(|x| {
+                Algorithm::parse(x)
+                    .ok_or_else(|| EakmError::Config(format!("unknown algorithm {x:?}")))
+            })
+            .collect::<Result<_>>()?,
+        None => Algorithm::SN
+            .iter()
+            .chain(Algorithm::NS.iter())
+            .copied()
+            .collect(),
+    };
+    let out_dir = flags.get("out").map(PathBuf::from);
+    if let Some(dir) = &out_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    for k in ks {
+        let mut t = TextTable::new(format!(
+            "Grid (scale={scale}, seeds={seeds}, k={k}): mean time relative to fastest"
+        ));
+        let mut headers: Vec<String> = vec!["ds".into(), "iters".into(), "fastest[s]".into()];
+        headers.extend(algs.iter().map(|a| a.name().to_string()));
+        let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        t = t.headers(&headers_ref);
+        let mut json_rows = Vec::new();
+        for (spec, ds) in grid_datasets(scale, None) {
+            if k >= ds.n() {
+                continue;
+            }
+            let stats: Vec<_> = algs
+                .iter()
+                .map(|&alg| measure(&ds, alg, k, seeds, 1))
+                .collect();
+            let fastest = stats
+                .iter()
+                .map(|s| s.mean_wall.as_secs_f64())
+                .fold(f64::INFINITY, f64::min);
+            let mut row = vec![
+                spec.roman().to_string(),
+                format!("{:.0}", stats[0].mean_iters),
+                format!("{fastest:.3}"),
+            ];
+            for s in &stats {
+                row.push(TextTable::fmt_ratio(s.mean_wall.as_secs_f64() / fastest));
+            }
+            t.row(row);
+            for s in &stats {
+                json_rows.push(
+                    Json::obj()
+                        .field("dataset", spec.name)
+                        .field("k", k)
+                        .field("algorithm", s.algorithm.name())
+                        .field("wall_secs", s.mean_wall.as_secs_f64())
+                        .field("q_a", s.mean_qa)
+                        .field("q_au", s.mean_qau)
+                        .field("iters", s.mean_iters),
+                );
+            }
+            eprint!(".");
+        }
+        eprintln!();
+        let rendered = t.render();
+        print!("{rendered}");
+        if let Some(dir) = &out_dir {
+            std::fs::write(dir.join(format!("grid_k{k}.txt")), &rendered)?;
+            std::fs::write(
+                dir.join(format!("grid_k{k}.json")),
+                Json::Arr(json_rows).to_string(),
+            )?;
+        }
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags_roundtrip() {
+        let f = parse_flags(&s(&["--k", "100", "--json", "--seed", "3"])).unwrap();
+        assert_eq!(f.get("k").unwrap(), "100");
+        assert_eq!(f.get("json").unwrap(), "true");
+        assert_eq!(f.get("seed").unwrap(), "3");
+    }
+
+    #[test]
+    fn parse_flags_rejects_positional() {
+        assert!(parse_flags(&s(&["oops"])).is_err());
+        assert!(parse_flags(&s(&["--k"])).is_err());
+    }
+
+    #[test]
+    fn help_runs() {
+        assert_eq!(main(&s(&["help"])).unwrap(), 0);
+        assert!(main(&s(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn run_on_tiny_dataset() {
+        let code = main(&s(&[
+            "run",
+            "--dataset",
+            "birch",
+            "--scale",
+            "0.01",
+            "--k",
+            "10",
+            "--algorithm",
+            "exp",
+            "--json",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn datasets_lists() {
+        assert_eq!(main(&s(&["datasets"])).unwrap(), 0);
+    }
+}

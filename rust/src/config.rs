@@ -1,0 +1,190 @@
+//! Run and experiment configuration.
+//!
+//! [`RunConfig`] is the programmatic builder used by the library API and
+//! the CLI; it can also be parsed from a simple `key = value` config file
+//! (a TOML subset — see [`RunConfig::from_str_cfg`]) so experiment grids
+//! are scriptable without external dependencies.
+
+use std::time::Duration;
+
+use crate::algorithms::Algorithm;
+use crate::error::{EakmError, Result};
+use crate::init::InitMethod;
+
+/// Configuration for a single clustering run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Which algorithm to run (paper notation; `Auto` resolves by d).
+    pub algorithm: Algorithm,
+    /// Number of clusters.
+    pub k: usize,
+    /// RNG seed for centroid initialisation.
+    pub seed: u64,
+    /// Worker threads for the assignment step.
+    pub threads: usize,
+    /// Seeding strategy.
+    pub init: InitMethod,
+    /// Hard cap on Lloyd rounds.
+    pub max_iters: usize,
+    /// Optional wall-clock limit (paper: 40 min per run).
+    pub time_limit: Option<Duration>,
+    /// Byte budget for the ns centroid history (paper: 4 GB total memory).
+    pub history_budget: usize,
+    /// Override the ns reset period (testing; `None` = paper formula).
+    pub history_cap: Option<usize>,
+    /// Record per-round wall times in the report.
+    pub record_rounds: bool,
+}
+
+impl RunConfig {
+    /// A config with the paper's defaults.
+    pub fn new(algorithm: Algorithm, k: usize) -> Self {
+        RunConfig {
+            algorithm,
+            k,
+            seed: 0,
+            threads: 1,
+            init: InitMethod::Random,
+            max_iters: 10_000,
+            time_limit: None,
+            history_budget: 1 << 30, // 1 GB
+            history_cap: None,
+            record_rounds: false,
+        }
+    }
+
+    /// Set the seed (builder style).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the thread count (builder style).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Set the iteration cap (builder style).
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.max_iters = max_iters;
+        self
+    }
+
+    /// Set the seeding method (builder style).
+    pub fn init(mut self, init: InitMethod) -> Self {
+        self.init = init;
+        self
+    }
+
+    /// Set a wall-clock limit (builder style).
+    pub fn time_limit(mut self, limit: Duration) -> Self {
+        self.time_limit = Some(limit);
+        self
+    }
+
+    /// Validate against a dataset size.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        if self.k == 0 {
+            return Err(EakmError::Config("k must be positive".into()));
+        }
+        if self.k > n {
+            return Err(EakmError::Config(format!("k={} exceeds n={n}", self.k)));
+        }
+        if self.max_iters == 0 {
+            return Err(EakmError::Config("max_iters must be positive".into()));
+        }
+        Ok(())
+    }
+
+    /// Parse a minimal `key = value` config text (TOML subset: one pair
+    /// per line, `#` comments, unquoted scalars). Unknown keys error so
+    /// typos surface.
+    pub fn from_str_cfg(text: &str) -> Result<Self> {
+        let mut cfg = RunConfig::new(Algorithm::ExpNs, 100);
+        for (no, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with('[') {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| EakmError::Config(format!("line {}: expected key = value", no + 1)))?;
+            let (key, value) = (key.trim(), value.trim().trim_matches('"'));
+            match key {
+                "algorithm" => {
+                    cfg.algorithm = Algorithm::parse(value)
+                        .ok_or_else(|| EakmError::Config(format!("unknown algorithm {value:?}")))?;
+                }
+                "k" => cfg.k = parse_num(key, value)?,
+                "seed" => cfg.seed = parse_num::<u64>(key, value)?,
+                "threads" => cfg.threads = parse_num::<usize>(key, value)?.max(1),
+                "init" => {
+                    cfg.init = InitMethod::parse(value)
+                        .ok_or_else(|| EakmError::Config(format!("unknown init {value:?}")))?;
+                }
+                "max_iters" => cfg.max_iters = parse_num(key, value)?,
+                "time_limit_secs" => {
+                    cfg.time_limit = Some(Duration::from_secs(parse_num(key, value)?));
+                }
+                "history_budget" => cfg.history_budget = parse_num(key, value)?,
+                "history_cap" => cfg.history_cap = Some(parse_num(key, value)?),
+                "record_rounds" => cfg.record_rounds = value == "true",
+                _ => return Err(EakmError::Config(format!("unknown key {key:?}"))),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, value: &str) -> Result<T> {
+    value
+        .parse::<T>()
+        .map_err(|_| EakmError::Config(format!("bad value for {key}: {value:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let cfg = RunConfig::new(Algorithm::Exp, 50)
+            .seed(9)
+            .threads(4)
+            .max_iters(10);
+        assert_eq!(cfg.k, 50);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.max_iters, 10);
+    }
+
+    #[test]
+    fn validate_rejects_bad_k() {
+        assert!(RunConfig::new(Algorithm::Sta, 0).validate(10).is_err());
+        assert!(RunConfig::new(Algorithm::Sta, 11).validate(10).is_err());
+        assert!(RunConfig::new(Algorithm::Sta, 10).validate(10).is_ok());
+    }
+
+    #[test]
+    fn parses_config_text() {
+        let cfg = RunConfig::from_str_cfg(
+            "# experiment\nalgorithm = exp-ns\nk = 200\nseed = 3\nthreads = 2\ninit = random\nmax_iters = 55\nrecord_rounds = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.algorithm, Algorithm::ExpNs);
+        assert_eq!(cfg.k, 200);
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.max_iters, 55);
+        assert!(cfg.record_rounds);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_values() {
+        assert!(RunConfig::from_str_cfg("bogus = 1").is_err());
+        assert!(RunConfig::from_str_cfg("algorithm = warp-drive").is_err());
+        assert!(RunConfig::from_str_cfg("k = banana").is_err());
+        assert!(RunConfig::from_str_cfg("no equals sign").is_err());
+    }
+}

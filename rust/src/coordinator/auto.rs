@@ -1,0 +1,33 @@
+//! Adaptive algorithm selection — the paper's §5 future-work item.
+//!
+//! The paper's Table 4 regime map: Exponion wins for very low d (< 5),
+//! syin for intermediate d (8–69), selk/elk for high d (> 73), with the
+//! ns-variants on top (§4.1.4). `resolve` encodes those boundaries.
+
+use crate::algorithms::Algorithm;
+
+/// Pick the algorithm the paper's results say is fastest for dimension d.
+pub fn resolve(d: usize) -> Algorithm {
+    if d < 8 {
+        Algorithm::ExpNs
+    } else if d < 70 {
+        Algorithm::SyinNs
+    } else {
+        Algorithm::SelkNs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regime_map_matches_table4() {
+        assert_eq!(resolve(2), Algorithm::ExpNs);
+        assert_eq!(resolve(4), Algorithm::ExpNs);
+        assert_eq!(resolve(10), Algorithm::SyinNs);
+        assert_eq!(resolve(55), Algorithm::SyinNs);
+        assert_eq!(resolve(74), Algorithm::SelkNs);
+        assert_eq!(resolve(784), Algorithm::SelkNs);
+    }
+}

@@ -1,0 +1,97 @@
+//! Inter-centroid distances `cc(j,j′)` and nearest-other-centroid `s(j)`.
+//!
+//! Rebuilt once per round when any active algorithm requests it (elk's
+//! inner test, ham/ann/exp's outer test, exponion's annuli). The build
+//! costs `k(k−1)/2` distance evaluations, charged to
+//! [`Counters::centroid`](crate::metrics::Counters).
+
+use crate::linalg::sqdist;
+use crate::metrics::Counters;
+
+/// Symmetric inter-centroid distance matrix with row access, plus `s`.
+#[derive(Clone, Debug)]
+pub struct CcData {
+    /// Row-major `k×k` plain (non-squared) distances; diagonal is 0.
+    cc: Vec<f64>,
+    /// `s(j) = min_{j′≠j} cc(j,j′)` (∞ when k == 1).
+    pub s: Vec<f64>,
+    k: usize,
+}
+
+impl CcData {
+    /// Build from current centroids (row-major `k×d`).
+    pub fn build(centroids: &[f64], k: usize, d: usize, ctr: &mut Counters) -> Self {
+        debug_assert_eq!(centroids.len(), k * d);
+        let mut cc = vec![0.0; k * k];
+        let mut s = vec![f64::INFINITY; k];
+        for j in 0..k {
+            let cj = &centroids[j * d..(j + 1) * d];
+            for j2 in (j + 1)..k {
+                let dist = sqdist(cj, &centroids[j2 * d..(j2 + 1) * d]).sqrt();
+                cc[j * k + j2] = dist;
+                cc[j2 * k + j] = dist;
+                if dist < s[j] {
+                    s[j] = dist;
+                }
+                if dist < s[j2] {
+                    s[j2] = dist;
+                }
+            }
+        }
+        ctr.centroid += (k * (k - 1) / 2) as u64;
+        CcData { cc, s, k }
+    }
+
+    /// Distance between centroids `a` and `b`.
+    #[inline]
+    pub fn get(&self, a: usize, b: usize) -> f64 {
+        self.cc[a * self.k + b]
+    }
+
+    /// Full row for centroid `j` (used by the annuli builder).
+    #[inline]
+    pub fn row(&self, j: usize) -> &[f64] {
+        &self.cc[j * self.k..(j + 1) * self.k]
+    }
+
+    /// Number of centroids.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_with_correct_s() {
+        // three collinear centroids at 0, 1, 5 in 1-D
+        let c = [0.0, 1.0, 5.0];
+        let mut ctr = Counters::default();
+        let cc = CcData::build(&c, 3, 1, &mut ctr);
+        assert_eq!(cc.get(0, 1), 1.0);
+        assert_eq!(cc.get(1, 0), 1.0);
+        assert_eq!(cc.get(0, 2), 5.0);
+        assert_eq!(cc.get(1, 2), 4.0);
+        assert_eq!(cc.s, vec![1.0, 1.0, 4.0]);
+        assert_eq!(ctr.centroid, 3);
+    }
+
+    #[test]
+    fn single_centroid_s_infinite() {
+        let mut ctr = Counters::default();
+        let cc = CcData::build(&[1.0, 2.0], 1, 2, &mut ctr);
+        assert!(cc.s[0].is_infinite());
+        assert_eq!(ctr.centroid, 0);
+    }
+
+    #[test]
+    fn diagonal_zero() {
+        let mut ctr = Counters::default();
+        let cc = CcData::build(&[0.0, 3.0, 1.0, 1.0], 2, 2, &mut ctr);
+        assert_eq!(cc.get(0, 0), 0.0);
+        assert_eq!(cc.get(1, 1), 0.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Yinyang cluster grouping (Ding et al. 2015, §2.6 of the paper).
+//!
+//! The k centroids are themselves clustered once, at initialisation, into
+//! `G = max(1, k/10)` groups (the paper fixes the number of groups at one
+//! tenth of the number of centroids); the grouping then stays fixed.
+//! Each round, `q(f) = max_{j∈G(f)} p(j)` is refreshed for the group
+//! bound update.
+
+use crate::linalg::sqdist;
+use crate::metrics::Counters;
+use crate::rng::Rng;
+
+/// Fixed cluster grouping + per-round group displacement maxima.
+#[derive(Clone, Debug)]
+pub struct GroupData {
+    /// Group of each cluster.
+    pub group_of: Vec<u32>,
+    /// Members of each group.
+    pub members: Vec<Vec<u32>>,
+    /// `q(f) = max_{j∈G(f)} p(j)` — refreshed by [`GroupData::refresh`].
+    pub q: Vec<f64>,
+}
+
+impl GroupData {
+    /// Number of groups the paper prescribes for k clusters.
+    pub fn group_count(k: usize) -> usize {
+        (k / 10).max(1)
+    }
+
+    /// Cluster the initial centroids into `G` groups with a few rounds of
+    /// Lloyd (Ding et al. use the same trick). Distance evaluations are
+    /// charged to `ctr.centroid`.
+    pub fn build(centroids: &[f64], k: usize, d: usize, seed: u64, ctr: &mut Counters) -> Self {
+        let g = Self::group_count(k);
+        let mut rng = Rng::new(seed ^ 0x9179_7a79);
+        // seed group centres with g distinct centroids
+        let picks = rng.distinct(k, g);
+        let mut centres: Vec<f64> = Vec::with_capacity(g * d);
+        for &j in &picks {
+            centres.extend_from_slice(&centroids[j * d..(j + 1) * d]);
+        }
+        let mut group_of = vec![0u32; k];
+        const ROUNDS: usize = 5;
+        for _ in 0..ROUNDS {
+            // assign
+            for j in 0..k {
+                let cj = &centroids[j * d..(j + 1) * d];
+                let mut best = 0u32;
+                let mut bd = f64::INFINITY;
+                for f in 0..g {
+                    let dist = sqdist(cj, &centres[f * d..(f + 1) * d]);
+                    if dist < bd {
+                        bd = dist;
+                        best = f as u32;
+                    }
+                }
+                group_of[j] = best;
+            }
+            ctr.centroid += (k * g) as u64;
+            // update
+            let mut sums = vec![0.0; g * d];
+            let mut counts = vec![0usize; g];
+            for j in 0..k {
+                let f = group_of[j] as usize;
+                counts[f] += 1;
+                for t in 0..d {
+                    sums[f * d + t] += centroids[j * d + t];
+                }
+            }
+            for f in 0..g {
+                if counts[f] > 0 {
+                    for t in 0..d {
+                        centres[f * d + t] = sums[f * d + t] / counts[f] as f64;
+                    }
+                }
+            }
+        }
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); g];
+        for j in 0..k {
+            members[group_of[j] as usize].push(j as u32);
+        }
+        // A group can come out empty (fewer effective centre positions
+        // than g); that is fine — its q stays 0 and no sample ever scans
+        // it. Yinyang's correctness does not depend on balance.
+        GroupData {
+            group_of,
+            members,
+            q: vec![0.0; g],
+        }
+    }
+
+    /// Refresh `q(f) = max_{j∈G(f)} p(j)` from this round's displacements.
+    pub fn refresh(&mut self, p: &[f64]) {
+        for (f, q) in self.q.iter_mut().enumerate() {
+            *q = self.members[f]
+                .iter()
+                .map(|&j| p[j as usize])
+                .fold(0.0, f64::max);
+        }
+    }
+
+    /// Number of groups.
+    pub fn g(&self) -> usize {
+        self.members.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_count_rule() {
+        assert_eq!(GroupData::group_count(5), 1);
+        assert_eq!(GroupData::group_count(100), 10);
+        assert_eq!(GroupData::group_count(1000), 100);
+    }
+
+    #[test]
+    fn build_partitions_all_clusters() {
+        // 20 centroids in 2-D: two well-separated bands
+        let mut c = Vec::new();
+        for j in 0..20 {
+            let off = if j < 10 { 0.0 } else { 100.0 };
+            c.push(off + j as f64 * 0.01);
+            c.push(off);
+        }
+        let mut ctr = Counters::default();
+        let gd = GroupData::build(&c, 20, 2, 7, &mut ctr);
+        assert_eq!(gd.g(), 2);
+        assert_eq!(gd.group_of.len(), 20);
+        let total: usize = gd.members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, 20);
+        // the two bands should separate perfectly
+        let g0 = gd.group_of[0];
+        for j in 0..10 {
+            assert_eq!(gd.group_of[j], g0);
+        }
+        for j in 10..20 {
+            assert_ne!(gd.group_of[j], g0);
+        }
+        assert!(ctr.centroid > 0);
+    }
+
+    #[test]
+    fn refresh_takes_group_max() {
+        let gd0 = GroupData {
+            group_of: vec![0, 0, 1],
+            members: vec![vec![0, 1], vec![2]],
+            q: vec![0.0; 2],
+        };
+        let mut gd = gd0;
+        gd.refresh(&[0.5, 2.0, 0.25]);
+        assert_eq!(gd.q, vec![2.0, 0.25]);
+    }
+
+    #[test]
+    fn single_group_when_k_small() {
+        let c = [0.0, 1.0, 2.0, 3.0];
+        let mut ctr = Counters::default();
+        let gd = GroupData::build(&c, 4, 1, 1, &mut ctr);
+        assert_eq!(gd.g(), 1);
+        assert!(gd.members[0].len() == 4);
+    }
+}

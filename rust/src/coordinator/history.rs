@@ -1,0 +1,317 @@
+//! Centroid history for ns-bounds (paper §3.2–3.4).
+//!
+//! sn-algorithms drift their bounds by accumulating per-round
+//! displacement norms. ns-algorithms instead remember the centroid
+//! positions `C(j,t)` at which each bound was last made tight and update
+//! with the *norm of the sum* `P(j,t) = ‖c_now(j) − c_t(j)‖`, which the
+//! triangle inequality makes tighter (SM-B.5).
+//!
+//! Memory is bounded the way the paper does it: after `cap` rounds
+//! (`N/min(k,d)`, further clamped by a byte budget) the epoch is *reset* —
+//! bounds are folded sn-style through the final `P` values and the stored
+//! snapshots are cleared.
+
+use crate::linalg::sqdist;
+use crate::metrics::Counters;
+
+/// Per-round view of the history: `P(j,t)` for every epoch round `t`,
+/// plus the maxima the exp-ns / syin-ns lower bounds need.
+#[derive(Clone, Debug, Default)]
+pub struct Epoch {
+    /// Number of stored snapshots; the current round has index `len − 1`
+    /// and `P(j, len−1) == 0`.
+    pub len: usize,
+    /// `P(j,t)` flattened `t*k + j`.
+    pub p_to: Vec<f64>,
+    /// Per `t`: `max_j P(j,t)`.
+    pub max1: Vec<f64>,
+    /// Per `t`: argmax of the above.
+    pub arg1: Vec<u32>,
+    /// Per `t`: second-largest `P(j,t)`.
+    pub max2: Vec<f64>,
+    /// Per `t×G`: `max_{j∈G(f)} P(j,t)` (empty unless groups requested).
+    pub gmax: Vec<f64>,
+    /// Number of groups (0 if no group maxima kept).
+    pub g: usize,
+    k: usize,
+}
+
+impl Epoch {
+    /// `P(j, t)`.
+    #[inline]
+    pub fn p(&self, j: usize, t: usize) -> f64 {
+        self.p_to[t * self.k + j]
+    }
+
+    /// `max_{j′ ≠ j} P(j′, t)` in O(1) via max/argmax/second-max.
+    #[inline]
+    pub fn maxp_excl(&self, j: usize, t: usize) -> f64 {
+        if self.arg1[t] as usize == j {
+            self.max2[t]
+        } else {
+            self.max1[t]
+        }
+    }
+
+    /// `max_{j∈G(f)} P(j, t)`.
+    #[inline]
+    pub fn group_max(&self, f: usize, t: usize) -> f64 {
+        self.gmax[t * self.g + f]
+    }
+}
+
+/// The per-round history handed to algorithms. On a reset round, `fold`
+/// carries the *previous* epoch's final `P` values (computed against the
+/// current centroids) so per-sample bounds can be folded before `T`
+/// indices restart at 0.
+#[derive(Clone, Debug, Default)]
+pub struct HistoryRound {
+    /// Current epoch data (after any reset).
+    pub epoch: Epoch,
+    /// Present exactly on reset rounds.
+    pub fold: Option<Epoch>,
+}
+
+/// Owns the centroid snapshots and produces a [`HistoryRound`] per round.
+#[derive(Clone, Debug)]
+pub struct HistoryStore {
+    k: usize,
+    d: usize,
+    /// Max snapshots per epoch.
+    cap: usize,
+    /// Flattened snapshots, `len × k × d`.
+    snaps: Vec<f64>,
+    len: usize,
+    /// Group membership for per-group maxima (empty = not tracked).
+    group_of: Vec<u32>,
+    g: usize,
+}
+
+impl HistoryStore {
+    /// `cap` is the reset period; `group_of`/`g` enable per-group maxima.
+    pub fn new(k: usize, d: usize, cap: usize, group_of: Vec<u32>, g: usize) -> Self {
+        assert!(cap >= 2, "history cap must allow at least two rounds");
+        HistoryStore {
+            k,
+            d,
+            cap,
+            snaps: Vec::new(),
+            len: 0,
+            group_of,
+            g,
+        }
+    }
+
+    /// The paper's reset period `N/min(k,d)`, clamped to `[2, byte-budget]`.
+    pub fn paper_cap(n: usize, k: usize, d: usize, byte_budget: usize) -> usize {
+        let paper = n / k.min(d).max(1);
+        let by_mem = byte_budget / (k * d * 8).max(1);
+        paper.clamp(2, by_mem.max(2))
+    }
+
+    /// Begin the first epoch at round 0 with the initial centroids.
+    pub fn begin(&mut self, centroids: &[f64]) -> HistoryRound {
+        debug_assert_eq!(centroids.len(), self.k * self.d);
+        self.snaps.clear();
+        self.snaps.extend_from_slice(centroids);
+        self.len = 1;
+        HistoryRound {
+            epoch: self.epoch_for(centroids, &mut Counters::default()),
+            fold: None,
+        }
+    }
+
+    /// Advance to a new assignment round with updated centroids.
+    /// Performs the sn-like reset when the epoch is full.
+    pub fn advance(&mut self, centroids: &[f64], ctr: &mut Counters) -> HistoryRound {
+        debug_assert_eq!(centroids.len(), self.k * self.d);
+        let fold = if self.len >= self.cap {
+            // Fold previous epoch against the *current* centroids. The new
+            // epoch starts with TWO copies of the current centroids: folded
+            // bounds point at snapshot 0 (valid forever, P grows as
+            // centroids move) while snapshot 1 is "this round", so the
+            // tightness check `T == len−1` correctly reports folded bounds
+            // as loose.
+            self.snaps.extend_from_slice(centroids);
+            self.len += 1;
+            let fold = self.epoch_for(centroids, ctr);
+            self.snaps.clear();
+            self.snaps.extend_from_slice(centroids);
+            self.snaps.extend_from_slice(centroids);
+            self.len = 2;
+            Some(fold)
+        } else {
+            self.snaps.extend_from_slice(centroids);
+            self.len += 1;
+            None
+        };
+        HistoryRound {
+            epoch: self.epoch_for(centroids, ctr),
+            fold,
+        }
+    }
+
+    /// Current epoch length (snapshots stored).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no snapshots stored yet.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Build the Epoch table (`P(j,t)` + maxima) vs `current` centroids.
+    fn epoch_for(&self, current: &[f64], ctr: &mut Counters) -> Epoch {
+        let (k, d, len) = (self.k, self.d, self.len);
+        let mut p_to = vec![0.0; len * k];
+        for t in 0..len.saturating_sub(1) {
+            let snap = &self.snaps[t * k * d..(t + 1) * k * d];
+            for j in 0..k {
+                p_to[t * k + j] =
+                    sqdist(&snap[j * d..(j + 1) * d], &current[j * d..(j + 1) * d]).sqrt();
+            }
+            ctr.displacement += k as u64;
+        }
+        // last row is the current round: all zeros already
+        let mut max1 = vec![0.0; len];
+        let mut arg1 = vec![0u32; len];
+        let mut max2 = vec![0.0; len];
+        for t in 0..len {
+            let row = &p_to[t * k..(t + 1) * k];
+            let (mut m1, mut a1, mut m2) = (f64::NEG_INFINITY, 0u32, f64::NEG_INFINITY);
+            for (j, &v) in row.iter().enumerate() {
+                if v > m1 {
+                    m2 = m1;
+                    m1 = v;
+                    a1 = j as u32;
+                } else if v > m2 {
+                    m2 = v;
+                }
+            }
+            max1[t] = m1.max(0.0);
+            arg1[t] = a1;
+            max2[t] = m2.max(0.0);
+        }
+        let gmax = if self.g > 0 {
+            let mut gm = vec![0.0; len * self.g];
+            for t in 0..len {
+                for j in 0..k {
+                    let f = self.group_of[j] as usize;
+                    let v = p_to[t * k + j];
+                    if v > gm[t * self.g + f] {
+                        gm[t * self.g + f] = v;
+                    }
+                }
+            }
+            gm
+        } else {
+            Vec::new()
+        };
+        Epoch {
+            len,
+            p_to,
+            max1,
+            arg1,
+            max2,
+            gmax,
+            g: self.g,
+            k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store2() -> HistoryStore {
+        HistoryStore::new(2, 1, 4, vec![0, 0], 1)
+    }
+
+    #[test]
+    fn p_values_track_displacement() {
+        let mut hs = store2();
+        hs.begin(&[0.0, 10.0]);
+        let mut ctr = Counters::default();
+        // centroid 0 moves to 3, centroid 1 stays
+        let h = hs.advance(&[3.0, 10.0], &mut ctr);
+        assert_eq!(h.epoch.len, 2);
+        assert_eq!(h.epoch.p(0, 0), 3.0); // vs snapshot at round 0
+        assert_eq!(h.epoch.p(1, 0), 0.0);
+        assert_eq!(h.epoch.p(0, 1), 0.0); // current round
+        assert!(h.fold.is_none());
+        assert_eq!(ctr.displacement, 2);
+    }
+
+    #[test]
+    fn ns_tighter_than_sn_along_a_walk() {
+        // centroid walks 0 → 1 → 0 → 1 …; sn accumulates, ns stays ≤ 1
+        let mut hs = HistoryStore::new(1, 1, 64, vec![], 0);
+        hs.begin(&[0.0]);
+        let mut ctr = Counters::default();
+        let mut sn = 0.0;
+        for t in 1..10 {
+            let pos = (t % 2) as f64;
+            let h = hs.advance(&[pos], &mut ctr);
+            sn += 1.0; // |p| each round is 1
+            let ns = h.epoch.p(0, 0);
+            assert!(ns <= sn + 1e-12);
+            assert!(ns <= 1.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn reset_produces_fold_and_restarts() {
+        let mut hs = HistoryStore::new(1, 1, 3, vec![], 0);
+        hs.begin(&[0.0]);
+        let mut ctr = Counters::default();
+        let h1 = hs.advance(&[1.0], &mut ctr);
+        assert!(h1.fold.is_none());
+        let h2 = hs.advance(&[2.0], &mut ctr);
+        assert!(h2.fold.is_none());
+        assert_eq!(hs.len(), 3);
+        // cap reached → next advance folds
+        let h3 = hs.advance(&[3.0], &mut ctr);
+        let fold = h3.fold.expect("reset expected");
+        // fold P vs current (3.0): snapshots were 0,1,2,(3)
+        assert_eq!(fold.p(0, 0), 3.0);
+        assert_eq!(fold.p(0, 1), 2.0);
+        assert_eq!(fold.p(0, 2), 1.0);
+        // new epoch: snapshot 0 (fold target) + snapshot 1 (current round)
+        assert_eq!(h3.epoch.len, 2);
+        assert_eq!(hs.len(), 2);
+        assert_eq!(h3.epoch.p(0, 0), 0.0);
+    }
+
+    #[test]
+    fn maxp_excl_uses_second_max() {
+        let mut hs = HistoryStore::new(3, 1, 8, vec![], 0);
+        hs.begin(&[0.0, 0.0, 0.0]);
+        let mut ctr = Counters::default();
+        let h = hs.advance(&[5.0, 2.0, 1.0], &mut ctr);
+        // P(·,0) = [5,2,1]
+        assert_eq!(h.epoch.maxp_excl(0, 0), 2.0); // excluding the argmax
+        assert_eq!(h.epoch.maxp_excl(1, 0), 5.0);
+        assert_eq!(h.epoch.maxp_excl(2, 0), 5.0);
+    }
+
+    #[test]
+    fn group_max_per_group() {
+        let mut hs = HistoryStore::new(4, 1, 8, vec![0, 0, 1, 1], 2);
+        hs.begin(&[0.0; 4]);
+        let mut ctr = Counters::default();
+        let h = hs.advance(&[1.0, 3.0, 0.5, 0.25], &mut ctr);
+        assert_eq!(h.epoch.group_max(0, 0), 3.0);
+        assert_eq!(h.epoch.group_max(1, 0), 0.5);
+    }
+
+    #[test]
+    fn paper_cap_formula() {
+        // N/min(k,d) with clamps
+        assert_eq!(HistoryStore::paper_cap(10_000, 100, 8, usize::MAX), 1250);
+        assert_eq!(HistoryStore::paper_cap(100, 100, 100, usize::MAX), 2); // clamp low
+        // byte budget: k*d*8 = 800 bytes per snapshot, budget 8000 → 10
+        assert_eq!(HistoryStore::paper_cap(1_000_000, 10, 10, 8_000), 10);
+    }
+}

@@ -1,0 +1,15 @@
+//! The coordination layer: per-round centroid-side structures, the
+//! update step, thread-sharded execution, and the round loop.
+
+pub mod annuli;
+pub mod auto;
+pub mod ccdist;
+pub mod groups;
+pub mod history;
+pub mod parallel;
+pub mod round_ctx;
+pub mod runner;
+pub mod sorted_norms;
+pub mod update;
+
+pub use runner::{Engine, RunOutput, Runner};

@@ -1,0 +1,116 @@
+//! Thread-sharded execution of the assignment step.
+//!
+//! Samples are processed independently (the paper's §4.2 parallelisation),
+//! so the coordinator splits them into contiguous shards, one algorithm
+//! instance per shard, and runs every shard's round concurrently with
+//! scoped threads. Results (counters + moved lists) are merged in shard
+//! order, keeping the run bit-deterministic regardless of thread count.
+
+use crate::algorithms::common::{AssignStep, Moved, SharedRound};
+use crate::metrics::Counters;
+
+/// Split `n` samples into `w` contiguous, balanced `(lo, len)` shards.
+pub fn make_shards(n: usize, w: usize) -> Vec<(usize, usize)> {
+    let w = w.max(1).min(n.max(1));
+    let base = n / w;
+    let extra = n % w;
+    let mut out = Vec::with_capacity(w);
+    let mut lo = 0;
+    for s in 0..w {
+        let len = base + usize::from(s < extra);
+        out.push((lo, len));
+        lo += len;
+    }
+    out
+}
+
+/// Run one assignment round (or the initial assignment when
+/// `init == true`) across all shards, in parallel when there is more
+/// than one. Returns merged counters and moves (ascending sample order).
+pub fn run_shards(
+    algs: &mut [Box<dyn AssignStep>],
+    shards: &[(usize, usize)],
+    a: &mut [u32],
+    sh: &SharedRound,
+    init: bool,
+) -> (Counters, Vec<Moved>) {
+    debug_assert_eq!(algs.len(), shards.len());
+    if algs.len() == 1 {
+        // fast path: no thread machinery on single-shard runs
+        let mut ctr = Counters::default();
+        let mut moved = Vec::new();
+        if init {
+            algs[0].init(sh, a, &mut ctr);
+        } else {
+            algs[0].round(sh, a, &mut ctr, &mut moved);
+        }
+        return (ctr, moved);
+    }
+
+    // split the assignment array to match the shards
+    let mut slices: Vec<&mut [u32]> = Vec::with_capacity(shards.len());
+    let mut rest = a;
+    for &(_lo, len) in shards {
+        let (head, tail) = rest.split_at_mut(len);
+        slices.push(head);
+        rest = tail;
+    }
+
+    let results: Vec<(Counters, Vec<Moved>)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = algs
+            .iter_mut()
+            .zip(slices)
+            .map(|(alg, slice)| {
+                scope.spawn(move || {
+                    let mut ctr = Counters::default();
+                    let mut moved = Vec::new();
+                    if init {
+                        alg.init(sh, slice, &mut ctr);
+                    } else {
+                        alg.round(sh, slice, &mut ctr, &mut moved);
+                    }
+                    (ctr, moved)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut ctr = Counters::default();
+    let mut moved = Vec::new();
+    for (c, m) in results {
+        ctr.merge(&c);
+        moved.extend(m); // shard order == ascending sample order
+    }
+    (ctr, moved)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_cover_everything() {
+        for (n, w) in [(10, 3), (7, 7), (100, 4), (5, 8), (1, 1)] {
+            let shards = make_shards(n, w);
+            let total: usize = shards.iter().map(|s| s.1).sum();
+            assert_eq!(total, n);
+            // contiguous
+            let mut expect = 0;
+            for &(lo, len) in &shards {
+                assert_eq!(lo, expect);
+                expect += len;
+            }
+            // balanced within 1
+            let lens: Vec<usize> = shards.iter().map(|s| s.1).collect();
+            let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn more_workers_than_samples_collapses() {
+        let shards = make_shards(3, 16);
+        assert_eq!(shards.len(), 3);
+    }
+}

@@ -1,0 +1,191 @@
+//! Owner of all centroid-side per-round structures.
+//!
+//! The [`Engine`](super::runner::Engine) mutates this once per round (only
+//! rebuilding what the active algorithm's [`Requirements`] ask for) and
+//! every worker borrows it immutably through [`SharedRound`].
+
+use crate::algorithms::common::{Requirements, SharedRound};
+use crate::coordinator::annuli::Annuli;
+use crate::coordinator::ccdist::CcData;
+use crate::coordinator::groups::GroupData;
+use crate::coordinator::history::HistoryRound;
+use crate::coordinator::sorted_norms::SortedNorms;
+use crate::data::Dataset;
+use crate::linalg::{sqdist, sqnorms_rows};
+use crate::metrics::Counters;
+
+/// Centroid-side state for the current round.
+pub struct RoundCtxOwner {
+    /// Number of clusters.
+    pub k: usize,
+    /// Current round (0 = initial assignment).
+    pub round: usize,
+    /// Current centroids `k×d`.
+    pub centroids: Vec<f64>,
+    /// `‖c(j)‖²`.
+    pub cnorms: Vec<f64>,
+    /// Last-round displacement `p(j)`.
+    pub p: Vec<f64>,
+    /// max / second-max / argmax of `p`.
+    pub p_max: f64,
+    /// Second-largest displacement.
+    pub p_max2: f64,
+    /// Index attaining `p_max`.
+    pub p_argmax: usize,
+    /// Inter-centroid data (if required).
+    pub cc: Option<CcData>,
+    /// Sorted centroid norms (if required).
+    pub sorted_norms: Option<SortedNorms>,
+    /// Exponion annuli (if required).
+    pub annuli: Option<Annuli>,
+    /// Yinyang groups (if required; persists across rounds).
+    pub groups: Option<GroupData>,
+    /// ns history view for this round (if required).
+    pub history: Option<HistoryRound>,
+}
+
+impl RoundCtxOwner {
+    /// Create for round 0 with the initial centroids.
+    pub fn new(centroids: Vec<f64>, k: usize, d: usize) -> Self {
+        assert_eq!(centroids.len(), k * d);
+        let cnorms = sqnorms_rows(&centroids, d);
+        RoundCtxOwner {
+            k,
+            round: 0,
+            centroids,
+            cnorms,
+            p: vec![0.0; k],
+            p_max: 0.0,
+            p_max2: 0.0,
+            p_argmax: 0,
+            cc: None,
+            sorted_norms: None,
+            annuli: None,
+            groups: None,
+            history: None,
+        }
+    }
+
+    /// Test-only convenience: a fully-populated context (cc + sorted
+    /// norms + annuli) so unit tests can exercise any algorithm's init.
+    pub fn new_for_test(data: &Dataset, centroids: Vec<f64>) -> Self {
+        let d = data.d();
+        let k = centroids.len() / d;
+        let mut ctx = RoundCtxOwner::new(centroids, k, d);
+        let mut ctr = Counters::default();
+        ctx.cc = Some(CcData::build(&ctx.centroids, k, d, &mut ctr));
+        ctx.sorted_norms = Some(SortedNorms::build(&ctx.cnorms));
+        ctx.annuli = Some(Annuli::build(ctx.cc.as_ref().unwrap()));
+        ctx
+    }
+
+    /// Install new centroids, computing `p(j)` and its maxima.
+    /// Counts k displacement distances.
+    pub fn advance_centroids(&mut self, new: Vec<f64>, d: usize, ctr: &mut Counters) {
+        debug_assert_eq!(new.len(), self.k * d);
+        for j in 0..self.k {
+            self.p[j] = sqdist(
+                &self.centroids[j * d..(j + 1) * d],
+                &new[j * d..(j + 1) * d],
+            )
+            .sqrt();
+        }
+        ctr.displacement += self.k as u64;
+        self.centroids = new;
+        self.cnorms = sqnorms_rows(&self.centroids, d);
+        let (mut m1, mut a1, mut m2) = (f64::NEG_INFINITY, 0usize, f64::NEG_INFINITY);
+        for (j, &v) in self.p.iter().enumerate() {
+            if v > m1 {
+                m2 = m1;
+                m1 = v;
+                a1 = j;
+            } else if v > m2 {
+                m2 = v;
+            }
+        }
+        self.p_max = m1.max(0.0);
+        self.p_max2 = m2.max(0.0);
+        self.p_argmax = a1;
+        self.round += 1;
+    }
+
+    /// Rebuild the optional per-round structures per `req`.
+    pub fn rebuild(&mut self, req: &Requirements, d: usize, ctr: &mut Counters) {
+        if req.cc {
+            let cc = CcData::build(&self.centroids, self.k, d, ctr);
+            if req.annuli {
+                // reuse last round's buffers
+                let mut ann = self.annuli.take().unwrap_or_else(Annuli::empty);
+                ann.build_into_fast(&cc);
+                self.annuli = Some(ann);
+            }
+            self.cc = Some(cc);
+        }
+        if req.sorted_norms {
+            self.sorted_norms = Some(SortedNorms::build(&self.cnorms));
+        }
+        if req.groups {
+            if let Some(g) = self.groups.as_mut() {
+                g.refresh(&self.p);
+            }
+        }
+    }
+
+    /// Borrow as the per-round shared view.
+    pub fn shared<'a>(&'a self, data: &'a Dataset) -> SharedRound<'a> {
+        SharedRound {
+            data,
+            k: self.k,
+            round: self.round,
+            centroids: &self.centroids,
+            cnorms: &self.cnorms,
+            p: &self.p,
+            p_max: self.p_max,
+            p_max2: self.p_max2,
+            p_argmax: self.p_argmax,
+            cc: self.cc.as_ref(),
+            sorted_norms: self.sorted_norms.as_ref(),
+            annuli: self.annuli.as_ref(),
+            groups: self.groups.as_ref(),
+            history: self.history.as_ref(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+
+    #[test]
+    fn advance_tracks_displacements() {
+        let mut ctx = RoundCtxOwner::new(vec![0.0, 0.0, 1.0, 1.0], 2, 2);
+        let mut ctr = Counters::default();
+        ctx.advance_centroids(vec![3.0, 4.0, 1.0, 1.0], 2, &mut ctr);
+        assert_eq!(ctx.p, vec![5.0, 0.0]);
+        assert_eq!(ctx.p_max, 5.0);
+        assert_eq!(ctx.p_argmax, 0);
+        assert_eq!(ctx.p_max2, 0.0);
+        assert_eq!(ctx.round, 1);
+        assert_eq!(ctr.displacement, 2);
+    }
+
+    #[test]
+    fn rebuild_builds_requested_structures() {
+        let ds = blobs(50, 3, 2, 0.2, 1);
+        let centroids = ds.raw()[..5 * 3].to_vec();
+        let mut ctx = RoundCtxOwner::new(centroids, 5, 3);
+        let mut ctr = Counters::default();
+        let req = Requirements {
+            cc: true,
+            annuli: true,
+            sorted_norms: true,
+            ..Default::default()
+        };
+        ctx.rebuild(&req, 3, &mut ctr);
+        assert!(ctx.cc.is_some());
+        assert!(ctx.annuli.is_some());
+        assert!(ctx.sorted_norms.is_some());
+        assert!(ctr.centroid > 0);
+    }
+}

@@ -1,0 +1,348 @@
+//! The round loop: [`Engine`] (stepwise, inspectable) and [`Runner`]
+//! (run-to-convergence with limits and telemetry).
+
+use std::time::{Duration, Instant};
+
+use crate::algorithms::common::{AssignStep, Requirements};
+use crate::algorithms::Algorithm;
+use crate::config::RunConfig;
+use crate::coordinator::groups::GroupData;
+use crate::coordinator::history::HistoryStore;
+use crate::coordinator::parallel::{make_shards, run_shards};
+use crate::coordinator::round_ctx::RoundCtxOwner;
+use crate::coordinator::update::UpdateState;
+use crate::data::Dataset;
+use crate::error::Result;
+use crate::metrics::{Counters, RunReport};
+use crate::rng::Rng;
+
+/// Factory signature: `(lo, len, k, g) → shard state`.
+pub type ShardFactory<'f> = dyn Fn(usize, usize, usize, usize) -> Box<dyn AssignStep> + 'f;
+
+/// A stepwise k-means engine: one `step()` = one update + assignment
+/// round. Exposes everything tests and benches need to inspect.
+pub struct Engine<'d> {
+    data: &'d Dataset,
+    k: usize,
+    algs: Vec<Box<dyn AssignStep>>,
+    shards: Vec<(usize, usize)>,
+    a: Vec<u32>,
+    ctx: RoundCtxOwner,
+    update: UpdateState,
+    history: Option<HistoryStore>,
+    req: Requirements,
+    counters: Counters,
+    converged: bool,
+    rounds: usize,
+    name: String,
+    last_moved: usize,
+}
+
+impl<'d> Engine<'d> {
+    /// Build from a config (resolves `Auto` by dimension).
+    pub fn new(data: &'d Dataset, cfg: &RunConfig) -> Result<Self> {
+        let alg = match cfg.algorithm {
+            Algorithm::Auto => crate::coordinator::auto::resolve(data.d()),
+            other => other,
+        };
+        Self::with_factory(data, cfg, &move |lo, len, k, g| {
+            alg.make_shard(lo, len, k, g)
+        })
+    }
+
+    /// Build with an arbitrary shard factory (test/bench hook).
+    pub fn with_factory(
+        data: &'d Dataset,
+        cfg: &RunConfig,
+        factory: &ShardFactory,
+    ) -> Result<Self> {
+        cfg.validate(data.n())?;
+        let (n, d, k) = (data.n(), data.d(), cfg.k);
+        let g = GroupData::group_count(k);
+        let probe = factory(0, 0, k, g);
+        let req = probe.requirements();
+        let name = probe.name().to_string();
+        drop(probe);
+
+        let mut counters = Counters::default();
+        let mut rng = Rng::new(cfg.seed);
+        let centroids = cfg.init.centroids(data, k, &mut rng, &mut counters);
+
+        let shards = make_shards(n, cfg.threads);
+        let mut algs: Vec<Box<dyn AssignStep>> = shards
+            .iter()
+            .map(|&(lo, len)| factory(lo, len, k, g))
+            .collect();
+
+        let mut ctx = RoundCtxOwner::new(centroids, k, d);
+        if req.groups {
+            ctx.groups = Some(GroupData::build(&ctx.centroids, k, d, cfg.seed, &mut counters));
+        }
+        let mut history = if req.history {
+            let cap = cfg
+                .history_cap
+                .unwrap_or_else(|| HistoryStore::paper_cap(n, k, d, cfg.history_budget));
+            let (group_of, gh) = if req.group_history {
+                let gd = ctx.groups.as_ref().expect("group_history requires groups");
+                (gd.group_of.clone(), gd.g())
+            } else {
+                (Vec::new(), 0)
+            };
+            Some(HistoryStore::new(k, d, cap, group_of, gh))
+        } else {
+            None
+        };
+        if let Some(h) = history.as_mut() {
+            ctx.history = Some(h.begin(&ctx.centroids));
+        }
+
+        // round 0: initial full assignment with tight bounds
+        let mut a = vec![0u32; n];
+        let sh = ctx.shared(data);
+        let (ctr, _) = run_shards(&mut algs, &shards, &mut a, &sh, true);
+        drop(sh);
+        counters.merge(&ctr);
+        let update = UpdateState::from_assignments(data, &a, k);
+
+        Ok(Engine {
+            data,
+            k,
+            algs,
+            shards,
+            a,
+            ctx,
+            update,
+            history,
+            req,
+            counters,
+            converged: false,
+            rounds: 0,
+            name,
+            last_moved: usize::MAX,
+        })
+    }
+
+    /// One Lloyd round (update step + assignment step).
+    /// Returns the number of samples that changed cluster.
+    pub fn step(&mut self) -> usize {
+        if self.converged {
+            return 0;
+        }
+        let d = self.data.d();
+        // update step
+        let new_centroids = self.update.centroids(&self.ctx.centroids, d);
+        self.ctx
+            .advance_centroids(new_centroids, d, &mut self.counters);
+        self.ctx.rebuild(&self.req, d, &mut self.counters);
+        if let Some(h) = self.history.as_mut() {
+            self.ctx.history = Some(h.advance(&self.ctx.centroids, &mut self.counters));
+        }
+        // assignment step
+        let sh = self.ctx.shared(self.data);
+        let (ctr, moved) = run_shards(&mut self.algs, &self.shards, &mut self.a, &sh, false);
+        drop(sh);
+        self.counters.merge(&ctr);
+        if self.req.full_update {
+            self.update = UpdateState::from_assignments(self.data, &self.a, self.k);
+        } else {
+            self.update.apply_moves(self.data, &moved);
+        }
+        self.rounds += 1;
+        self.last_moved = moved.len();
+        self.converged = moved.is_empty();
+        moved.len()
+    }
+
+    /// Current assignments.
+    pub fn assignments(&self) -> &[u32] {
+        &self.a
+    }
+
+    /// Current centroids (row-major `k×d`).
+    pub fn centroids(&self) -> &[f64] {
+        &self.ctx.centroids
+    }
+
+    /// Whether the last round moved nothing.
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+
+    /// Rounds executed so far (excluding the initial assignment).
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Accumulated distance counters.
+    pub fn counters(&self) -> Counters {
+        self.counters
+    }
+
+    /// Samples moved in the last round.
+    pub fn last_moved(&self) -> usize {
+        self.last_moved
+    }
+
+    /// Resolved algorithm name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Current round context (tests: bound checks need groups/history).
+    pub fn ctx(&self) -> &RoundCtxOwner {
+        &self.ctx
+    }
+
+    /// Shard algorithm instances (tests: downcast to inspect bounds).
+    pub fn algs(&self) -> &[Box<dyn AssignStep>] {
+        &self.algs
+    }
+
+    /// Objective (mean squared distance to assigned centroid).
+    pub fn mse(&self) -> f64 {
+        self.data.mse(&self.ctx.centroids, &self.a)
+    }
+}
+
+/// Run-to-convergence driver producing a [`RunReport`].
+pub struct Runner {
+    cfg: RunConfig,
+}
+
+/// Output of [`Runner::run`].
+#[derive(Clone, Debug)]
+pub struct RunOutput {
+    /// Final assignments.
+    pub assignments: Vec<u32>,
+    /// Final centroids.
+    pub centroids: Vec<f64>,
+    /// Rounds executed.
+    pub iterations: usize,
+    /// True if the run reached a fixed point (vs hitting a limit).
+    pub converged: bool,
+    /// Final mean squared error.
+    pub mse: f64,
+    /// Distance counters.
+    pub counters: Counters,
+    /// Wall time of the clustering loop.
+    pub wall: Duration,
+    /// Full telemetry record.
+    pub report: RunReport,
+}
+
+impl Runner {
+    /// Create from a config.
+    pub fn new(cfg: &RunConfig) -> Self {
+        Runner { cfg: cfg.clone() }
+    }
+
+    /// Cluster `data` to convergence (or a configured limit).
+    pub fn run(&self, data: &Dataset) -> Result<RunOutput> {
+        let start = Instant::now();
+        let mut engine = Engine::new(data, &self.cfg)?;
+        let mut round_times = Vec::new();
+        while !engine.converged() && engine.rounds() < self.cfg.max_iters {
+            if let Some(limit) = self.cfg.time_limit {
+                if start.elapsed() > limit {
+                    break;
+                }
+            }
+            let t0 = Instant::now();
+            engine.step();
+            if self.cfg.record_rounds {
+                round_times.push(t0.elapsed());
+            }
+        }
+        let wall = start.elapsed();
+        let mse = engine.mse();
+        let report = RunReport {
+            algorithm: engine.name().to_string(),
+            dataset: data.name.clone(),
+            k: self.cfg.k,
+            seed: self.cfg.seed,
+            iterations: engine.rounds(),
+            converged: engine.converged(),
+            mse,
+            wall,
+            counters: engine.counters(),
+            round_times,
+        };
+        Ok(RunOutput {
+            assignments: engine.assignments().to_vec(),
+            centroids: engine.centroids().to_vec(),
+            iterations: engine.rounds(),
+            converged: engine.converged(),
+            mse,
+            counters: engine.counters(),
+            wall,
+            report,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+
+    #[test]
+    fn sta_converges_on_blobs() {
+        let ds = blobs(500, 4, 5, 0.05, 3);
+        let cfg = RunConfig::new(Algorithm::Sta, 5).seed(1);
+        let out = Runner::new(&cfg).run(&ds).unwrap();
+        assert!(out.converged);
+        assert!(out.iterations >= 1);
+        assert!(out.mse.is_finite());
+        assert_eq!(out.assignments.len(), 500);
+        assert_eq!(out.centroids.len(), 5 * 4);
+    }
+
+    #[test]
+    fn max_iters_cuts_off() {
+        let ds = blobs(500, 4, 8, 0.4, 5);
+        let cfg = RunConfig::new(Algorithm::Sta, 8).seed(1).max_iters(1);
+        let out = Runner::new(&cfg).run(&ds).unwrap();
+        assert_eq!(out.iterations, 1);
+    }
+
+    #[test]
+    fn auto_resolves_by_dimension() {
+        let ds = blobs(200, 2, 4, 0.1, 7);
+        let cfg = RunConfig::new(Algorithm::Auto, 4).seed(2);
+        let engine = Engine::new(&ds, &cfg).unwrap();
+        assert_eq!(engine.name(), "exp-ns");
+    }
+
+    #[test]
+    fn multithreaded_equals_single_threaded() {
+        let ds = blobs(700, 5, 6, 0.1, 9);
+        for alg in [Algorithm::Sta, Algorithm::Exp, Algorithm::SelkNs] {
+            let out1 = Runner::new(&RunConfig::new(alg, 6).seed(4).threads(1))
+                .run(&ds)
+                .unwrap();
+            let out4 = Runner::new(&RunConfig::new(alg, 6).seed(4).threads(4))
+                .run(&ds)
+                .unwrap();
+            assert_eq!(out1.assignments, out4.assignments, "{alg}");
+            assert_eq!(out1.iterations, out4.iterations, "{alg}");
+            assert_eq!(out1.counters.assignment, out4.counters.assignment, "{alg}");
+        }
+    }
+
+    #[test]
+    fn mse_decreases_monotonically() {
+        let ds = blobs(400, 3, 6, 0.3, 11);
+        let cfg = RunConfig::new(Algorithm::Sta, 6).seed(3);
+        let mut engine = Engine::new(&ds, &cfg).unwrap();
+        let mut prev = f64::INFINITY;
+        for _ in 0..30 {
+            if engine.converged() {
+                break;
+            }
+            engine.step();
+            let mse = engine.mse();
+            assert!(mse <= prev + 1e-9, "objective increased: {prev} → {mse}");
+            prev = mse;
+        }
+    }
+}

@@ -1,0 +1,76 @@
+//! Sorted centroid norms — the Annular algorithm's per-round index.
+//!
+//! ann filters candidates through the origin-centred annulus
+//! `{ j : | ‖c(j)‖ − ‖x(i)‖ | ≤ R(i) }` (paper eq. 9); keeping `‖c(j)‖`
+//! sorted lets the window be found with two binary searches (Θ(log k)).
+
+/// Centroid norms sorted ascending, remembering original indices.
+#[derive(Clone, Debug)]
+pub struct SortedNorms {
+    /// (‖c(j)‖, j) sorted by norm.
+    entries: Vec<(f64, u32)>,
+}
+
+impl SortedNorms {
+    /// Build from pre-computed squared centroid norms.
+    pub fn build(cnorms_sq: &[f64]) -> Self {
+        let mut entries: Vec<(f64, u32)> = cnorms_sq
+            .iter()
+            .enumerate()
+            .map(|(j, &sq)| (sq.sqrt(), j as u32))
+            .collect();
+        entries.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        SortedNorms { entries }
+    }
+
+    /// All centroid indices j with `| ‖c(j)‖ − xnorm | ≤ r`, via two
+    /// binary searches.
+    pub fn window(&self, xnorm: f64, r: f64) -> impl Iterator<Item = u32> + '_ {
+        let lo_val = xnorm - r;
+        let hi_val = xnorm + r;
+        let lo = self.entries.partition_point(|e| e.0 < lo_val);
+        let hi = self.entries.partition_point(|e| e.0 <= hi_val);
+        self.entries[lo..hi].iter().map(|e| e.1)
+    }
+
+    /// Number of centroids in the window without materialising it.
+    pub fn window_len(&self, xnorm: f64, r: f64) -> usize {
+        let lo = self.entries.partition_point(|e| e.0 < xnorm - r);
+        let hi = self.entries.partition_point(|e| e.0 <= xnorm + r);
+        hi - lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_finds_expected_indices() {
+        // norms: sqrt of squared norms 1,16,4,25 → 1,4,2,5 (idx 0..3)
+        let sn = SortedNorms::build(&[1.0, 16.0, 4.0, 25.0]);
+        let mut w: Vec<u32> = sn.window(3.0, 1.5).collect();
+        w.sort_unstable();
+        assert_eq!(w, vec![1, 2]); // norms 4 and 2 within [1.5, 4.5]
+        assert_eq!(sn.window_len(3.0, 1.5), 2);
+    }
+
+    #[test]
+    fn window_boundaries_inclusive() {
+        let sn = SortedNorms::build(&[4.0, 9.0]); // norms 2, 3
+        let w: Vec<u32> = sn.window(2.5, 0.5).collect();
+        assert_eq!(w.len(), 2); // both 2 and 3 at exactly distance 0.5
+    }
+
+    #[test]
+    fn empty_window() {
+        let sn = SortedNorms::build(&[1.0, 4.0]);
+        assert_eq!(sn.window_len(100.0, 1.0), 0);
+    }
+
+    #[test]
+    fn whole_range_window() {
+        let sn = SortedNorms::build(&[1.0, 4.0, 9.0]);
+        assert_eq!(sn.window_len(0.0, 100.0), 3);
+    }
+}

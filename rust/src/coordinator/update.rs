@@ -1,0 +1,122 @@
+//! The update step: cluster sums/counts and new centroid computation.
+//!
+//! Implements the paper's §4.1.1 "delta" optimisation — between rounds,
+//! sums change only for the samples whose assignment changed, so the
+//! update is `O(|moved|·d)` instead of `O(N·d)`. Empty clusters keep
+//! their previous centroid (so `p(j)=0`), preserving exactness.
+
+use crate::algorithms::common::Moved;
+use crate::data::Dataset;
+
+/// Running cluster sums and member counts.
+#[derive(Clone, Debug)]
+pub struct UpdateState {
+    sums: Vec<f64>,
+    counts: Vec<u64>,
+    k: usize,
+}
+
+impl UpdateState {
+    /// Build from a full assignment (used at init and by `full_update`).
+    pub fn from_assignments(data: &Dataset, a: &[u32], k: usize) -> Self {
+        let d = data.d();
+        let mut sums = vec![0.0; k * d];
+        let mut counts = vec![0u64; k];
+        for (i, &j) in a.iter().enumerate() {
+            let j = j as usize;
+            counts[j] += 1;
+            let row = data.row(i);
+            let s = &mut sums[j * d..(j + 1) * d];
+            for (t, v) in row.iter().enumerate() {
+                s[t] += v;
+            }
+        }
+        UpdateState { sums, counts, k }
+    }
+
+    /// Apply one round's assignment changes (delta update).
+    pub fn apply_moves(&mut self, data: &Dataset, moved: &[Moved]) {
+        let d = data.d();
+        for m in moved {
+            let row = data.row(m.i as usize);
+            let from = &mut self.sums[m.from as usize * d..(m.from as usize + 1) * d];
+            for (t, v) in row.iter().enumerate() {
+                from[t] -= v;
+            }
+            let to = &mut self.sums[m.to as usize * d..(m.to as usize + 1) * d];
+            for (t, v) in row.iter().enumerate() {
+                to[t] += v;
+            }
+            self.counts[m.from as usize] -= 1;
+            self.counts[m.to as usize] += 1;
+        }
+    }
+
+    /// Compute new centroids; empty clusters keep `old`'s position.
+    pub fn centroids(&self, old: &[f64], d: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.k * d];
+        for j in 0..self.k {
+            let dst = &mut out[j * d..(j + 1) * d];
+            if self.counts[j] == 0 {
+                dst.copy_from_slice(&old[j * d..(j + 1) * d]);
+            } else {
+                let inv = 1.0 / self.counts[j] as f64;
+                let src = &self.sums[j * d..(j + 1) * d];
+                for (t, dv) in dst.iter_mut().enumerate() {
+                    *dv = src[t] * inv;
+                }
+            }
+        }
+        out
+    }
+
+    /// Member count of cluster j.
+    pub fn count(&self, j: usize) -> u64 {
+        self.counts[j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+
+    fn toy() -> Dataset {
+        // four points on a line
+        Dataset::new("t", vec![0.0, 1.0, 10.0, 11.0], 4, 1).unwrap()
+    }
+
+    #[test]
+    fn from_assignments_sums() {
+        let ds = toy();
+        let st = UpdateState::from_assignments(&ds, &[0, 0, 1, 1], 2);
+        let c = st.centroids(&[0.0, 0.0], 1);
+        assert_eq!(c, vec![0.5, 10.5]);
+        assert_eq!(st.count(0), 2);
+    }
+
+    #[test]
+    fn delta_equals_recompute() {
+        let ds = toy();
+        let mut st = UpdateState::from_assignments(&ds, &[0, 0, 1, 1], 2);
+        // sample 1 moves cluster 0 → 1
+        st.apply_moves(
+            &ds,
+            &[Moved {
+                i: 1,
+                from: 0,
+                to: 1,
+            }],
+        );
+        let fresh = UpdateState::from_assignments(&ds, &[0, 1, 1, 1], 2);
+        assert_eq!(st.centroids(&[0.0, 0.0], 1), fresh.centroids(&[0.0, 0.0], 1));
+    }
+
+    #[test]
+    fn empty_cluster_keeps_old_centroid() {
+        let ds = toy();
+        let st = UpdateState::from_assignments(&ds, &[0, 0, 0, 0], 2);
+        let c = st.centroids(&[7.0, 42.0], 1);
+        assert_eq!(c[1], 42.0);
+    }
+}

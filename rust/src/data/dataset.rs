@@ -1,0 +1,211 @@
+//! The dataset container used throughout the crate.
+
+use crate::error::{EakmError, Result};
+use crate::linalg::sqnorms_rows;
+
+/// A row-major `n×d` matrix of samples with pre-computed squared norms.
+///
+/// Norm pre-computation is one of the paper's §4.1.1 engineering points:
+/// `‖x(i)‖²` is computed once at load time and reused by every algorithm
+/// and round.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Row-major samples, `n*d` values.
+    data: Vec<f64>,
+    /// Number of samples.
+    n: usize,
+    /// Dimension.
+    d: usize,
+    /// `‖x(i)‖²` for every sample.
+    sqnorms: Vec<f64>,
+    /// Human-readable name (dataset id for the paper grid, or "custom").
+    pub name: String,
+}
+
+impl Dataset {
+    /// Wrap a row-major buffer. Fails on shape mismatch or empty data.
+    pub fn new(name: impl Into<String>, data: Vec<f64>, n: usize, d: usize) -> Result<Self> {
+        if n == 0 || d == 0 {
+            return Err(EakmError::Data(format!("empty dataset: n={n}, d={d}")));
+        }
+        if data.len() != n * d {
+            return Err(EakmError::Data(format!(
+                "shape mismatch: {} values for n={n} × d={d}",
+                data.len()
+            )));
+        }
+        if data.iter().any(|v| !v.is_finite()) {
+            return Err(EakmError::Data("non-finite value in dataset".into()));
+        }
+        let sqnorms = sqnorms_rows(&data, d);
+        Ok(Dataset {
+            data,
+            n,
+            d,
+            sqnorms,
+            name: name.into(),
+        })
+    }
+
+    /// Number of samples.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Dimension.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The full row-major buffer.
+    #[inline]
+    pub fn raw(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Pre-computed `‖x(i)‖²`.
+    #[inline]
+    pub fn sqnorm(&self, i: usize) -> f64 {
+        self.sqnorms[i]
+    }
+
+    /// All pre-computed squared norms.
+    #[inline]
+    pub fn sqnorms(&self) -> &[f64] {
+        &self.sqnorms
+    }
+
+    /// Standardise features to mean 0 / variance 1 in place (Table 8:
+    /// "All datasets are preprocessed such that features have mean zero
+    /// and variance 1"). Constant features are left centred at zero.
+    pub fn standardize(&mut self) {
+        let (n, d) = (self.n, self.d);
+        let mut mean = vec![0.0; d];
+        for i in 0..n {
+            for (t, m) in mean.iter_mut().enumerate() {
+                *m += self.data[i * d + t];
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        let mut var = vec![0.0; d];
+        for i in 0..n {
+            for t in 0..d {
+                let c = self.data[i * d + t] - mean[t];
+                var[t] += c * c;
+            }
+        }
+        let inv_std: Vec<f64> = var
+            .iter()
+            .map(|&v| {
+                let s = (v / n as f64).sqrt();
+                if s > 1e-300 {
+                    1.0 / s
+                } else {
+                    0.0 // constant feature: centre only
+                }
+            })
+            .collect();
+        for i in 0..n {
+            for t in 0..d {
+                let v = &mut self.data[i * d + t];
+                *v = (*v - mean[t]) * inv_std[t];
+            }
+        }
+        self.sqnorms = sqnorms_rows(&self.data, d);
+    }
+
+    /// Mean squared distance to the nearest of the given centroids — the
+    /// k-means objective divided by `n`, used for convergence reporting.
+    pub fn mse(&self, centroids: &[f64], assignments: &[u32]) -> f64 {
+        assert_eq!(assignments.len(), self.n);
+        let d = self.d;
+        let total: f64 = assignments
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                crate::linalg::sqdist(self.row(i), &centroids[a as usize * d..(a as usize + 1) * d])
+            })
+            .sum();
+        total / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new("toy", vec![0.0, 0.0, 1.0, 1.0, 2.0, 0.0], 3, 2).unwrap()
+    }
+
+    #[test]
+    fn shape_accessors() {
+        let ds = toy();
+        assert_eq!(ds.n(), 3);
+        assert_eq!(ds.d(), 2);
+        assert_eq!(ds.row(1), &[1.0, 1.0]);
+        assert_eq!(ds.sqnorm(2), 4.0);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        assert!(Dataset::new("x", vec![1.0], 1, 2).is_err());
+        assert!(Dataset::new("x", vec![], 0, 2).is_err());
+        assert!(Dataset::new("x", vec![1.0, f64::NAN], 1, 2).is_err());
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut ds = Dataset::new(
+            "s",
+            vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0],
+            4,
+            2,
+        )
+        .unwrap();
+        ds.standardize();
+        for t in 0..2 {
+            let mean: f64 = (0..4).map(|i| ds.row(i)[t]).sum::<f64>() / 4.0;
+            let var: f64 = (0..4).map(|i| ds.row(i)[t].powi(2)).sum::<f64>() / 4.0;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn standardize_constant_feature() {
+        let mut ds = Dataset::new("c", vec![5.0, 1.0, 5.0, 2.0, 5.0, 3.0], 3, 2).unwrap();
+        ds.standardize();
+        for i in 0..3 {
+            assert_eq!(ds.row(i)[0], 0.0);
+        }
+    }
+
+    #[test]
+    fn mse_of_perfect_assignment_is_zero() {
+        let ds = toy();
+        let centroids = ds.raw().to_vec();
+        let mse = ds.mse(&centroids, &[0, 1, 2]);
+        assert_eq!(mse, 0.0);
+    }
+
+    #[test]
+    fn sqnorms_refresh_after_standardize() {
+        let mut ds = toy();
+        ds.standardize();
+        for i in 0..ds.n() {
+            let direct: f64 = ds.row(i).iter().map(|v| v * v).sum();
+            assert!((ds.sqnorm(i) - direct).abs() < 1e-12);
+        }
+    }
+}

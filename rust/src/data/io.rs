@@ -1,0 +1,183 @@
+//! Dataset I/O: a simple little-endian binary format and CSV.
+//!
+//! The binary format (`.ekb`) is `magic "EAKM" | u32 version | u64 n |
+//! u64 d | n*d f64 LE`. CSV is headerless numeric rows.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::dataset::Dataset;
+use crate::error::{EakmError, Result};
+
+const MAGIC: &[u8; 4] = b"EAKM";
+const VERSION: u32 = 1;
+
+/// Save a dataset in the binary format.
+pub fn save_bin(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(ds.n() as u64).to_le_bytes())?;
+    w.write_all(&(ds.d() as u64).to_le_bytes())?;
+    for &v in ds.raw() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a dataset from the binary format.
+pub fn load_bin(path: &Path) -> Result<Dataset> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(EakmError::Data(format!("{}: not an EAKM file", path.display())));
+    }
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    if version != VERSION {
+        return Err(EakmError::Data(format!("unsupported version {version}")));
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let d = u64::from_le_bytes(b8) as usize;
+    if n == 0 || d == 0 || n.checked_mul(d).is_none() {
+        return Err(EakmError::Data(format!("bad header n={n} d={d}")));
+    }
+    let mut data = Vec::with_capacity(n * d);
+    for _ in 0..n * d {
+        r.read_exact(&mut b8)?;
+        data.push(f64::from_le_bytes(b8));
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "bin".into());
+    Dataset::new(name, data, n, d)
+}
+
+/// Load a headerless numeric CSV (comma- or whitespace-separated).
+pub fn load_csv(path: &Path) -> Result<Dataset> {
+    let r = BufReader::new(File::open(path)?);
+    let mut data = Vec::new();
+    let mut d = 0usize;
+    let mut n = 0usize;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let fields: Vec<f64> = line
+            .split(|c: char| c == ',' || c.is_whitespace())
+            .filter(|f| !f.is_empty())
+            .map(|f| {
+                f.parse::<f64>().map_err(|_| {
+                    EakmError::Data(format!("{}:{}: bad number {f:?}", path.display(), lineno + 1))
+                })
+            })
+            .collect::<Result<_>>()?;
+        if fields.is_empty() {
+            continue;
+        }
+        if d == 0 {
+            d = fields.len();
+        } else if fields.len() != d {
+            return Err(EakmError::Data(format!(
+                "{}:{}: expected {d} fields, got {}",
+                path.display(),
+                lineno + 1,
+                fields.len()
+            )));
+        }
+        data.extend_from_slice(&fields);
+        n += 1;
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "csv".into());
+    Dataset::new(name, data, n, d)
+}
+
+/// Save as CSV (for interop/debugging; lossy via `{:.17e}` is avoided by
+/// using Rust's shortest-roundtrip float formatting).
+pub fn save_csv(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    for i in 0..ds.n() {
+        let row = ds.row(i);
+        for (t, v) in row.iter().enumerate() {
+            if t > 0 {
+                write!(w, ",")?;
+            }
+            write!(w, "{v}")?;
+        }
+        writeln!(w)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("eakm-io-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let ds = blobs(200, 7, 4, 0.1, 5);
+        let path = tmpdir().join("rt.ekb");
+        save_bin(&ds, &path).unwrap();
+        let back = load_bin(&path).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.d(), ds.d());
+        assert_eq!(back.raw(), ds.raw());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let ds = blobs(50, 3, 2, 0.2, 6);
+        let path = tmpdir().join("rt.csv");
+        save_csv(&ds, &path).unwrap();
+        let back = load_csv(&path).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.d(), ds.d());
+        for (a, b) in back.raw().iter().zip(ds.raw()) {
+            assert_eq!(a, b); // shortest-roundtrip formatting is exact
+        }
+    }
+
+    #[test]
+    fn csv_rejects_ragged_rows() {
+        let path = tmpdir().join("ragged.csv");
+        std::fs::write(&path, "1,2,3\n4,5\n").unwrap();
+        assert!(load_csv(&path).is_err());
+    }
+
+    #[test]
+    fn csv_skips_comments_and_blanks() {
+        let path = tmpdir().join("comments.csv");
+        std::fs::write(&path, "# header\n\n1 2\n3,4\n").unwrap();
+        let ds = load_csv(&path).unwrap();
+        assert_eq!((ds.n(), ds.d()), (2, 2));
+        assert_eq!(ds.raw(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn bin_rejects_garbage() {
+        let path = tmpdir().join("garbage.ekb");
+        std::fs::write(&path, b"NOPE").unwrap();
+        assert!(load_bin(&path).is_err());
+    }
+}

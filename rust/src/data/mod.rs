@@ -1,0 +1,8 @@
+//! Datasets: container, standardisation, synthetic generators for the 22
+//! paper datasets (Table 8 substitution), and simple binary/CSV I/O.
+
+pub mod dataset;
+pub mod io;
+pub mod synth;
+
+pub use dataset::Dataset;

@@ -1,0 +1,397 @@
+//! Synthetic stand-ins for the paper's 22 datasets (Table 8).
+//!
+//! We do not have the UCI/KDD/KEEL/MNIST/STL-10 files in this
+//! environment, so each dataset id is replaced by a deterministic
+//! generator that matches the original's **dimension and size exactly**
+//! and its broad structure class (documented per entry below). Bound-based
+//! k-means accelerations are sensitive to (d, N, k) and to how clustered
+//! the data is — not to the raw feature values — so this preserves the
+//! *shape* of the paper's results (see DESIGN.md §3 for the argument).
+//!
+//! Every generator standardises features to mean 0 / variance 1, as the
+//! paper does (Table 8 caption).
+
+use super::dataset::Dataset;
+use crate::rng::Rng;
+
+/// Structure class of a synthetic dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StructureClass {
+    /// Gaussians on a regular grid (birch-style).
+    GridGaussians {
+        /// grid side; clusters = side²
+        side: usize,
+    },
+    /// Points along piecewise-linear curves (geographic outlines).
+    Curves {
+        /// number of closed curves
+        curves: usize,
+    },
+    /// Uniform random in the unit hypercube — worst case for bounds.
+    Uniform,
+    /// Correlated random-walk trajectories (sensor/telemetry data).
+    RandomWalk {
+        /// number of independent walks
+        walks: usize,
+    },
+    /// Isotropic Gaussian mixture with cluster-count `c` and spread `s`
+    /// (×1000 fixed-point to stay `Eq`).
+    Mixture {
+        /// number of mixture components
+        c: usize,
+        /// component std-dev ×1000 relative to unit placement box
+        s_milli: usize,
+    },
+    /// Gaussian mixture living on an `r`-dimensional subspace plus
+    /// full-dimensional noise (image/PCA-style data).
+    LowRank {
+        /// number of mixture components
+        c: usize,
+        /// intrinsic rank
+        r: usize,
+    },
+    /// Heavy-tailed, sparse-ish mixture (KDD-cup-style behavioural data).
+    HeavyTail {
+        /// number of mixture components
+        c: usize,
+    },
+}
+
+/// Specification of one of the 22 paper datasets.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    /// Roman-numeral index used in the paper's tables (1-based: 1 ⇒ "i").
+    pub index: usize,
+    /// Dataset name from Table 8.
+    pub name: &'static str,
+    /// Dimension (matches Table 8).
+    pub d: usize,
+    /// Full sample count (matches Table 8).
+    pub n: usize,
+    /// Generator class.
+    pub class: StructureClass,
+}
+
+impl DatasetSpec {
+    /// Roman numeral id as the paper prints it.
+    pub fn roman(&self) -> &'static str {
+        ROMAN[self.index - 1]
+    }
+}
+
+const ROMAN: [&str; 22] = [
+    "i", "ii", "iii", "iv", "v", "vi", "vii", "viii", "ix", "x", "xi", "xii", "xiii", "xiv",
+    "xv", "xvi", "xvii", "xviii", "xix", "xx", "xxi", "xxii",
+];
+
+/// The 22 dataset specs of Table 8, in paper order.
+pub fn paper_datasets() -> Vec<DatasetSpec> {
+    use StructureClass::*;
+    vec![
+        DatasetSpec { index: 1, name: "birch", d: 2, n: 100_000, class: GridGaussians { side: 10 } },
+        DatasetSpec { index: 2, name: "europe", d: 2, n: 169_300, class: Curves { curves: 12 } },
+        DatasetSpec { index: 3, name: "urand2", d: 2, n: 1_000_000, class: Uniform },
+        DatasetSpec { index: 4, name: "ldfpads", d: 3, n: 164_850, class: RandomWalk { walks: 30 } },
+        DatasetSpec { index: 5, name: "conflongdemo", d: 3, n: 164_860, class: RandomWalk { walks: 40 } },
+        DatasetSpec { index: 6, name: "skinseg", d: 4, n: 200_000, class: Mixture { c: 60, s_milli: 40 } },
+        DatasetSpec { index: 7, name: "tsn", d: 4, n: 200_000, class: Mixture { c: 120, s_milli: 60 } },
+        DatasetSpec { index: 8, name: "colormoments", d: 9, n: 68_040, class: Mixture { c: 80, s_milli: 90 } },
+        DatasetSpec { index: 9, name: "mv", d: 11, n: 40_760, class: Mixture { c: 50, s_milli: 80 } },
+        DatasetSpec { index: 10, name: "wcomp", d: 15, n: 165_630, class: Mixture { c: 100, s_milli: 110 } },
+        DatasetSpec { index: 11, name: "house16h", d: 17, n: 22_780, class: HeavyTail { c: 40 } },
+        DatasetSpec { index: 12, name: "keggnet", d: 28, n: 65_550, class: HeavyTail { c: 60 } },
+        DatasetSpec { index: 13, name: "urand30", d: 30, n: 1_000_000, class: Uniform },
+        DatasetSpec { index: 14, name: "mnist50", d: 50, n: 60_000, class: LowRank { c: 10, r: 12 } },
+        DatasetSpec { index: 15, name: "miniboone", d: 50, n: 130_060, class: Mixture { c: 30, s_milli: 150 } },
+        DatasetSpec { index: 16, name: "covtype", d: 55, n: 581_012, class: Mixture { c: 7, s_milli: 200 } },
+        DatasetSpec { index: 17, name: "uscensus", d: 68, n: 2_458_285, class: HeavyTail { c: 120 } },
+        DatasetSpec { index: 18, name: "kddcup04", d: 74, n: 145_750, class: Mixture { c: 50, s_milli: 180 } },
+        DatasetSpec { index: 19, name: "stl10", d: 108, n: 1_000_000, class: LowRank { c: 10, r: 20 } },
+        DatasetSpec { index: 20, name: "gassensor", d: 128, n: 13_910, class: LowRank { c: 6, r: 16 } },
+        DatasetSpec { index: 21, name: "kddcup98", d: 310, n: 95_000, class: HeavyTail { c: 80 } },
+        DatasetSpec { index: 22, name: "mnist784", d: 784, n: 60_000, class: LowRank { c: 10, r: 30 } },
+    ]
+}
+
+/// Look a spec up by paper name or roman numeral.
+pub fn find(name: &str) -> Option<DatasetSpec> {
+    paper_datasets()
+        .into_iter()
+        .find(|s| s.name == name || s.roman() == name)
+}
+
+/// Generate dataset `spec` at `scale` ∈ (0, 1] of its full size.
+///
+/// Scaling shrinks N (never below 2k samples or 1000) — the grid benches
+/// use this to fit the session's compute budget; `scale=1.0` is the
+/// paper-faithful size.
+pub fn generate(spec: &DatasetSpec, scale: f64, seed: u64) -> Dataset {
+    assert!(scale > 0.0 && scale <= 1.0, "scale must be in (0,1]");
+    let n = ((spec.n as f64 * scale) as usize).clamp(1_000.min(spec.n), spec.n);
+    let mut rng = Rng::new(seed ^ 0xEA4B_0000).split(spec.index as u64);
+    let data = match spec.class {
+        StructureClass::GridGaussians { side } => grid_gaussians(&mut rng, n, spec.d, side),
+        StructureClass::Curves { curves } => curves_mixture(&mut rng, n, spec.d, curves),
+        StructureClass::Uniform => uniform(&mut rng, n, spec.d),
+        StructureClass::RandomWalk { walks } => random_walk(&mut rng, n, spec.d, walks),
+        StructureClass::Mixture { c, s_milli } => {
+            mixture(&mut rng, n, spec.d, c, s_milli as f64 / 1000.0)
+        }
+        StructureClass::LowRank { c, r } => low_rank(&mut rng, n, spec.d, c, r),
+        StructureClass::HeavyTail { c } => heavy_tail(&mut rng, n, spec.d, c),
+    };
+    let mut ds = Dataset::new(spec.name, data, n, spec.d).expect("generator produced bad shape");
+    ds.standardize();
+    ds
+}
+
+/// Convenience: isotropic Gaussian blobs for examples and tests.
+pub fn blobs(n: usize, d: usize, c: usize, spread: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let data = mixture(&mut rng, n, d, c, spread);
+    let mut ds = Dataset::new("blobs", data, n, d).unwrap();
+    ds.standardize();
+    ds
+}
+
+fn grid_gaussians(rng: &mut Rng, n: usize, d: usize, side: usize) -> Vec<f64> {
+    // birch1-style: gaussians centred on a side×side grid in the first two
+    // dims (extra dims, if any, get small noise).
+    let clusters = side * side;
+    let sigma = 0.35 / side as f64;
+    let mut out = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let c = rng.below(clusters);
+        let (gx, gy) = (c % side, c / side);
+        let cx = (gx as f64 + 0.5) / side as f64;
+        let cy = (gy as f64 + 0.5) / side as f64;
+        out.push(cx + sigma * rng.normal());
+        if d >= 2 {
+            out.push(cy + sigma * rng.normal());
+        }
+        for _ in 2..d {
+            out.push(0.05 * rng.normal());
+        }
+    }
+    out
+}
+
+fn curves_mixture(rng: &mut Rng, n: usize, d: usize, curves: usize) -> Vec<f64> {
+    // europe-style: dense points along closed piecewise-linear loops of
+    // varying scale (country borders). Vertices are a loop around a random
+    // centre with radius modulated by a few harmonics.
+    struct Loop {
+        cx: f64,
+        cy: f64,
+        scale: f64,
+        harm: [(f64, f64); 3],
+        weight: f64,
+    }
+    let loops: Vec<Loop> = (0..curves)
+        .map(|_| Loop {
+            cx: rng.f64(),
+            cy: rng.f64(),
+            scale: 0.03 + 0.2 * rng.f64(),
+            harm: [
+                (1.0 + rng.f64(), rng.f64() * std::f64::consts::TAU),
+                (0.5 * rng.f64(), rng.f64() * std::f64::consts::TAU),
+                (0.25 * rng.f64(), rng.f64() * std::f64::consts::TAU),
+            ],
+            weight: 0.2 + rng.f64(),
+        })
+        .collect();
+    let weights: Vec<f64> = loops.iter().map(|l| l.weight).collect();
+    let mut out = Vec::with_capacity(n * d);
+    let jitter = 0.002;
+    for _ in 0..n {
+        let l = &loops[rng.weighted(&weights).unwrap()];
+        let t = rng.f64() * std::f64::consts::TAU;
+        let mut r = 1.0;
+        for (m, &(amp, ph)) in l.harm.iter().enumerate() {
+            r += amp * ((m as f64 + 2.0) * t + ph).sin() * 0.2;
+        }
+        let x = l.cx + l.scale * r * t.cos() + jitter * rng.normal();
+        let y = l.cy + l.scale * r * t.sin() + jitter * rng.normal();
+        out.push(x);
+        if d >= 2 {
+            out.push(y);
+        }
+        for _ in 2..d {
+            out.push(0.05 * rng.normal());
+        }
+    }
+    out
+}
+
+fn uniform(rng: &mut Rng, n: usize, d: usize) -> Vec<f64> {
+    (0..n * d).map(|_| rng.f64()).collect()
+}
+
+fn random_walk(rng: &mut Rng, n: usize, d: usize, walks: usize) -> Vec<f64> {
+    // Telemetry-style trajectories: `walks` independent mean-reverting
+    // random walks, samples taken in time order.
+    let per = n.div_ceil(walks);
+    let mut out = Vec::with_capacity(n * d);
+    let mut produced = 0;
+    for _ in 0..walks {
+        let mut pos: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let step = 0.05 + 0.1 * rng.f64();
+        let pull = 0.01;
+        for _ in 0..per {
+            if produced == n {
+                break;
+            }
+            for p in pos.iter_mut() {
+                *p += step * rng.normal() - pull * *p;
+            }
+            out.extend_from_slice(&pos);
+            produced += 1;
+        }
+    }
+    out
+}
+
+fn mixture(rng: &mut Rng, n: usize, d: usize, c: usize, spread: f64) -> Vec<f64> {
+    // Isotropic gaussian mixture; centres uniform in the unit cube, mildly
+    // unbalanced component weights (realistic cluster-size skew).
+    let centres: Vec<f64> = (0..c * d).map(|_| rng.f64()).collect();
+    let weights: Vec<f64> = (0..c).map(|_| 0.3 + rng.f64()).collect();
+    let mut out = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let j = rng.weighted(&weights).unwrap();
+        for t in 0..d {
+            out.push(centres[j * d + t] + spread * rng.normal());
+        }
+    }
+    out
+}
+
+fn low_rank(rng: &mut Rng, n: usize, d: usize, c: usize, r: usize) -> Vec<f64> {
+    // Image/PCA-style data: mixture in an r-dim latent space pushed
+    // through a random linear map to d dims, plus small ambient noise.
+    let map: Vec<f64> = (0..r * d).map(|_| rng.normal() / (r as f64).sqrt()).collect();
+    let centres: Vec<f64> = (0..c * r).map(|_| 2.0 * rng.f64() - 1.0).collect();
+    let weights: Vec<f64> = (0..c).map(|_| 0.5 + rng.f64()).collect();
+    let spread = 0.25;
+    let noise = 0.05;
+    let mut latent = vec![0.0; r];
+    let mut out = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let j = rng.weighted(&weights).unwrap();
+        for (t, l) in latent.iter_mut().enumerate() {
+            *l = centres[j * r + t] + spread * rng.normal();
+        }
+        for t in 0..d {
+            let mut v = 0.0;
+            for (s, &l) in latent.iter().enumerate() {
+                v += l * map[s * d + t];
+            }
+            out.push(v + noise * rng.normal());
+        }
+    }
+    out
+}
+
+fn heavy_tail(rng: &mut Rng, n: usize, d: usize, c: usize) -> Vec<f64> {
+    // Behavioural/count-style data: log-normal-ish magnitudes, many values
+    // near zero, cluster structure in which features are "on".
+    let centres: Vec<f64> = (0..c * d)
+        .map(|_| if rng.f64() < 0.3 { rng.f64() * 2.0 } else { 0.0 })
+        .collect();
+    let weights: Vec<f64> = (0..c).map(|_| (rng.f64() * 3.0).exp()).collect();
+    let mut out = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let j = rng.weighted(&weights).unwrap();
+        for t in 0..d {
+            let base = centres[j * d + t];
+            let v = if base > 0.0 {
+                base * (0.5 * rng.normal()).exp()
+            } else if rng.f64() < 0.05 {
+                (rng.normal()).abs() * 0.5
+            } else {
+                0.0
+            };
+            out.push(v + 0.01 * rng.normal());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twenty_two_specs_match_table8() {
+        let specs = paper_datasets();
+        assert_eq!(specs.len(), 22);
+        // spot-check paper values
+        assert_eq!(specs[0].name, "birch");
+        assert_eq!((specs[0].d, specs[0].n), (2, 100_000));
+        assert_eq!(specs[12].name, "urand30");
+        assert_eq!((specs[12].d, specs[12].n), (30, 1_000_000));
+        assert_eq!(specs[21].name, "mnist784");
+        assert_eq!((specs[21].d, specs[21].n), (784, 60_000));
+        assert_eq!(specs[16].n, 2_458_285); // uscensus
+        // indices are 1..22 in order
+        for (i, s) in specs.iter().enumerate() {
+            assert_eq!(s.index, i + 1);
+        }
+    }
+
+    #[test]
+    fn roman_ids_roundtrip() {
+        assert_eq!(find("i").unwrap().name, "birch");
+        assert_eq!(find("mnist784").unwrap().roman(), "xxii");
+        assert!(find("nosuch").is_none());
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = find("birch").unwrap();
+        let a = generate(&spec, 0.02, 7);
+        let b = generate(&spec, 0.02, 7);
+        assert_eq!(a.raw(), b.raw());
+        let c = generate(&spec, 0.02, 8);
+        assert_ne!(a.raw(), c.raw());
+    }
+
+    #[test]
+    fn scaled_sizes_and_dims() {
+        for spec in paper_datasets() {
+            let ds = generate(&spec, 0.01, 3);
+            assert_eq!(ds.d(), spec.d);
+            assert!(ds.n() <= spec.n);
+            assert!(ds.n() >= 1_000.min(spec.n));
+        }
+    }
+
+    #[test]
+    fn generated_data_is_standardized() {
+        for name in ["birch", "europe", "urand2", "mv", "mnist50", "kddcup98"] {
+            let spec = find(name).unwrap();
+            let ds = generate(&spec, 0.02, 11);
+            let (n, d) = (ds.n(), ds.d());
+            for t in 0..d.min(5) {
+                let mean: f64 = (0..n).map(|i| ds.row(i)[t]).sum::<f64>() / n as f64;
+                let var: f64 = (0..n).map(|i| ds.row(i)[t].powi(2)).sum::<f64>() / n as f64;
+                assert!(mean.abs() < 1e-9, "{name} feature {t} mean={mean}");
+                // constant features standardise to 0 variance
+                assert!(var < 1.5 && (var > 0.5 || var == 0.0), "{name} var={var}");
+            }
+        }
+    }
+
+    #[test]
+    fn blobs_shape() {
+        let ds = blobs(500, 6, 5, 0.1, 1);
+        assert_eq!((ds.n(), ds.d()), (500, 6));
+    }
+
+    #[test]
+    #[should_panic]
+    fn generate_rejects_zero_scale() {
+        let spec = find("birch").unwrap();
+        generate(&spec, 0.0, 1);
+    }
+}

@@ -1,0 +1,67 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors produced by the eakm library.
+#[derive(Debug)]
+pub enum EakmError {
+    /// Invalid run or experiment configuration (message explains).
+    Config(String),
+    /// Dataset shape/content problem.
+    Data(String),
+    /// I/O failure wrapped with context.
+    Io(std::io::Error),
+    /// XLA/PJRT runtime failure (artifact load, compile, execute).
+    Runtime(String),
+    /// An internal invariant was violated — a bug in eakm itself.
+    Invariant(String),
+}
+
+impl fmt::Display for EakmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EakmError::Config(m) => write!(f, "config error: {m}"),
+            EakmError::Data(m) => write!(f, "data error: {m}"),
+            EakmError::Io(e) => write!(f, "io error: {e}"),
+            EakmError::Runtime(m) => write!(f, "runtime error: {m}"),
+            EakmError::Invariant(m) => write!(f, "invariant violated: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for EakmError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EakmError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for EakmError {
+    fn from(e: std::io::Error) -> Self {
+        EakmError::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, EakmError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_variants() {
+        assert!(format!("{}", EakmError::Config("bad k".into())).contains("bad k"));
+        assert!(format!("{}", EakmError::Data("empty".into())).contains("empty"));
+        assert!(format!("{}", EakmError::Runtime("pjrt".into())).contains("pjrt"));
+        assert!(format!("{}", EakmError::Invariant("bound".into())).contains("bound"));
+    }
+
+    #[test]
+    fn io_conversion_preserves_source() {
+        let e: EakmError = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -1,0 +1,98 @@
+//! k-means++ (Arthur & Vassilvitskii 2007) D² seeding.
+//!
+//! Not used by the paper's experiments (which seed uniformly) but
+//! provided as a library feature; its distance evaluations are counted
+//! in [`Counters::init`] so experiment accounting stays exact.
+
+use crate::data::Dataset;
+use crate::linalg::sqdist;
+use crate::metrics::Counters;
+use crate::rng::Rng;
+
+/// D² seeding: first centroid uniform, each next sampled ∝ squared
+/// distance to the nearest chosen centroid.
+pub fn init(data: &Dataset, k: usize, rng: &mut Rng, counters: &mut Counters) -> Vec<f64> {
+    assert!(k > 0 && k <= data.n(), "k={k} out of range for n={}", data.n());
+    let (n, d) = (data.n(), data.d());
+    let mut centroids = Vec::with_capacity(k * d);
+    let first = rng.below(n);
+    centroids.extend_from_slice(data.row(first));
+
+    // nearest-chosen-centroid squared distance per sample
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| sqdist(data.row(i), data.row(first)))
+        .collect();
+    counters.init += n as u64;
+
+    for _ in 1..k {
+        let next = match rng.weighted(&d2) {
+            Some(i) => i,
+            // All remaining mass is zero (duplicate-heavy data): fall back
+            // to uniform among samples, keeping determinism.
+            None => rng.below(n),
+        };
+        let row = data.row(next);
+        centroids.extend_from_slice(row);
+        for (i, slot) in d2.iter_mut().enumerate() {
+            let dist = sqdist(data.row(i), row);
+            if dist < *slot {
+                *slot = dist;
+            }
+        }
+        counters.init += n as u64;
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+
+    #[test]
+    fn produces_k_by_d() {
+        let ds = blobs(300, 5, 4, 0.05, 8);
+        let mut c = Counters::default();
+        let out = init(&ds, 7, &mut Rng::new(1), &mut c);
+        assert_eq!(out.len(), 7 * 5);
+        assert_eq!(c.init, 7 * 300);
+    }
+
+    #[test]
+    fn spreads_over_separated_blobs() {
+        // 4 well-separated blobs, k=4 → ++ should hit all 4 almost surely
+        let mut data = Vec::new();
+        let offsets = [(0.0, 0.0), (100.0, 0.0), (0.0, 100.0), (100.0, 100.0)];
+        let mut rng = Rng::new(2);
+        for &(ox, oy) in &offsets {
+            for _ in 0..50 {
+                data.push(ox + rng.normal() * 0.1);
+                data.push(oy + rng.normal() * 0.1);
+            }
+        }
+        let ds = Dataset::new("four", data, 200, 2).unwrap();
+        let mut c = Counters::default();
+        let cents = init(&ds, 4, &mut Rng::new(3), &mut c);
+        // each blob owns exactly one centroid
+        let mut hits = [0; 4];
+        for j in 0..4 {
+            let cx = cents[j * 2];
+            let cy = cents[j * 2 + 1];
+            for (b, &(ox, oy)) in offsets.iter().enumerate() {
+                if (cx - ox).abs() < 10.0 && (cy - oy).abs() < 10.0 {
+                    hits[b] += 1;
+                }
+            }
+        }
+        assert_eq!(hits, [1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn handles_duplicate_points() {
+        let ds = Dataset::new("dup", vec![1.0; 20], 10, 2).unwrap();
+        let mut c = Counters::default();
+        let out = init(&ds, 3, &mut Rng::new(5), &mut c);
+        assert_eq!(out.len(), 6);
+        assert!(out.iter().all(|&v| v == 1.0));
+    }
+}

@@ -1,0 +1,56 @@
+//! Centroid initialisation: uniform sampling (the paper's seeding) and
+//! k-means++ (D² seeding) as an extension.
+
+pub mod kmeanspp;
+pub mod random;
+
+use crate::data::Dataset;
+use crate::metrics::Counters;
+use crate::rng::Rng;
+
+/// Which seeding strategy to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitMethod {
+    /// k distinct samples uniformly at random — what the paper's
+    /// "10 distinct centroid initialisations (seeds)" refers to.
+    Random,
+    /// k-means++ D² seeding (extension; costs k passes of distances).
+    KmeansPlusPlus,
+}
+
+impl InitMethod {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "random" | "uniform" => Some(InitMethod::Random),
+            "kmeans++" | "kmeanspp" | "pp" => Some(InitMethod::KmeansPlusPlus),
+            _ => None,
+        }
+    }
+
+    /// Produce `k` initial centroids (row-major `k×d`).
+    pub fn centroids(
+        &self,
+        data: &Dataset,
+        k: usize,
+        rng: &mut Rng,
+        counters: &mut Counters,
+    ) -> Vec<f64> {
+        match self {
+            InitMethod::Random => random::init(data, k, rng),
+            InitMethod::KmeansPlusPlus => kmeanspp::init(data, k, rng, counters),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(InitMethod::parse("random"), Some(InitMethod::Random));
+        assert_eq!(InitMethod::parse("pp"), Some(InitMethod::KmeansPlusPlus));
+        assert_eq!(InitMethod::parse("x"), None);
+    }
+}

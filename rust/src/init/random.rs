@@ -1,0 +1,58 @@
+//! Uniform random seeding: k distinct samples become the centroids.
+
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+/// Pick `k` distinct samples as initial centroids.
+///
+/// Panics if `k == 0` or `k > n` (callers validate through `RunConfig`).
+pub fn init(data: &Dataset, k: usize, rng: &mut Rng) -> Vec<f64> {
+    assert!(k > 0 && k <= data.n(), "k={k} out of range for n={}", data.n());
+    let d = data.d();
+    let idxs = rng.distinct(data.n(), k);
+    let mut out = Vec::with_capacity(k * d);
+    for &i in &idxs {
+        out.extend_from_slice(data.row(i));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+
+    #[test]
+    fn picks_k_distinct_rows() {
+        let ds = blobs(100, 4, 3, 0.1, 2);
+        let mut rng = Rng::new(3);
+        let c = init(&ds, 10, &mut rng);
+        assert_eq!(c.len(), 10 * 4);
+        // every centroid equals some data row
+        for j in 0..10 {
+            let cj = &c[j * 4..(j + 1) * 4];
+            assert!((0..ds.n()).any(|i| ds.row(i) == cj));
+        }
+        // distinct rows (data is continuous, collisions impossible)
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                assert_ne!(&c[a * 4..(a + 1) * 4], &c[b * 4..(b + 1) * 4]);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ds = blobs(50, 2, 2, 0.1, 2);
+        let a = init(&ds, 5, &mut Rng::new(9));
+        let b = init(&ds, 5, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_k_gt_n() {
+        let ds = blobs(10, 2, 2, 0.1, 2);
+        init(&ds, 11, &mut Rng::new(1));
+    }
+}

@@ -1,0 +1,208 @@
+//! A minimal JSON writer for reports and bench outputs (no external
+//! dependencies are available offline, and we only ever *emit* JSON).
+
+use std::fmt::Write as _;
+
+/// A JSON value under construction.
+#[derive(Clone, Debug)]
+pub enum Json {
+    /// null
+    Null,
+    /// true/false
+    Bool(bool),
+    /// Any finite number (non-finite serialises as null).
+    Num(f64),
+    /// String (escaped on write).
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object with insertion-ordered keys.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Start an empty object.
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Add a field to an object (panics on non-objects — builder misuse).
+    pub fn field(mut self, key: &str, value: impl Into<Json>) -> Json {
+        match &mut self {
+            Json::Obj(fields) => fields.push((key.to_string(), value.into())),
+            _ => panic!("field() on non-object"),
+        }
+        self
+    }
+
+    /// Serialise to a compact string.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    // integers print without a trailing .0
+                    if *x == x.trunc() && x.abs() < 9e15 {
+                        let _ = write!(out, "{}", *x as i64);
+                    } else {
+                        let _ = write!(out, "{x}");
+                    }
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (key, value)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(key.clone()).write(out);
+                    out.push(':');
+                    value.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl From<bool> for Json {
+    fn from(b: bool) -> Json {
+        Json::Bool(b)
+    }
+}
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+impl From<u64> for Json {
+    fn from(x: u64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(x: usize) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<&str> for Json {
+    fn from(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(s: String) -> Json {
+        Json::Str(s)
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Json {
+        Json::Arr(v)
+    }
+}
+
+impl From<&crate::metrics::RunReport> for Json {
+    fn from(r: &crate::metrics::RunReport) -> Json {
+        Json::obj()
+            .field("algorithm", r.algorithm.as_str())
+            .field("dataset", r.dataset.as_str())
+            .field("k", r.k)
+            .field("seed", r.seed)
+            .field("iterations", r.iterations)
+            .field("converged", r.converged)
+            .field("mse", r.mse)
+            .field("wall_secs", r.wall.as_secs_f64())
+            .field("q_a", r.counters.assignment)
+            .field("q_centroid", r.counters.centroid)
+            .field("q_displacement", r.counters.displacement)
+            .field("q_init", r.counters.init)
+            .field("q_au", r.counters.total())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_values() {
+        assert_eq!(Json::Null.to_string(), "null");
+        assert_eq!(Json::Bool(true).to_string(), "true");
+        assert_eq!(Json::Num(3.0).to_string(), "3");
+        assert_eq!(Json::Num(3.25).to_string(), "3.25");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn string_escaping() {
+        assert_eq!(
+            Json::Str("a\"b\\c\nd".into()).to_string(),
+            r#""a\"b\\c\nd""#
+        );
+        assert_eq!(Json::Str("\u{1}".into()).to_string(), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn nested_object() {
+        let j = Json::obj()
+            .field("name", "exp")
+            .field("k", 100usize)
+            .field("xs", Json::Arr(vec![Json::Num(1.0), Json::Num(2.5)]));
+        assert_eq!(j.to_string(), r#"{"name":"exp","k":100,"xs":[1,2.5]}"#);
+    }
+
+    #[test]
+    fn report_serialises() {
+        let r = crate::metrics::RunReport {
+            algorithm: "exp".into(),
+            dataset: "birch".into(),
+            k: 10,
+            seed: 1,
+            iterations: 5,
+            converged: true,
+            mse: 0.25,
+            wall: std::time::Duration::from_millis(1500),
+            counters: Default::default(),
+            round_times: vec![],
+        };
+        let s = Json::from(&r).to_string();
+        assert!(s.contains(r#""algorithm":"exp""#));
+        assert!(s.contains(r#""wall_secs":1.5"#));
+    }
+}

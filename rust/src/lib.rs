@@ -1,0 +1,66 @@
+//! # eakm — Fast exact k-means with accurate bounds
+//!
+//! A Rust + JAX + Pallas reproduction of *"Fast K-Means with Accurate
+//! Bounds"* (Newling & Fleuret, ICML 2016).
+//!
+//! The crate implements every algorithm the paper evaluates, behind a
+//! single [`coordinator::Runner`]:
+//!
+//! | name      | description                                            |
+//! |-----------|--------------------------------------------------------|
+//! | `sta`     | standard Lloyd's algorithm                             |
+//! | `selk`    | simplified Elkan (k lower bounds, no centroid tests)   |
+//! | `elk`     | Elkan 2003 (adds inter-centroid tests)                 |
+//! | `ham`     | Hamerly 2010 (single lower bound, outer test)          |
+//! | `ann`     | Drake 2013 Annular (origin-centred norm annulus)       |
+//! | `exp`     | **Exponion** (this paper §3.1): centroid-centred ball  |
+//! | `syin`    | simplified Yinyang (group bounds, no local filter)     |
+//! | `yin`     | Yinyang (Ding et al. 2015, with local filter)          |
+//! | `*-ns`    | ns-bound variants (this paper §3.2) of selk/elk/syin/exp |
+//!
+//! All algorithms are *exact*: from the same seed they produce the same
+//! per-round assignments as Lloyd's algorithm; they differ only in how
+//! many point-to-centroid distances they evaluate. The distance-evaluation
+//! counters ([`metrics::Counters`]) are first-class outputs and drive the
+//! reproduction of the paper's tables.
+//!
+//! The dense-compute hot spot (blocked pairwise distances + top-2
+//! reduction) is additionally available as an AOT-compiled XLA artifact
+//! authored in JAX/Pallas (see `python/compile/`) and executed through the
+//! PJRT C API from [`runtime`] — Python never runs at clustering time.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use eakm::prelude::*;
+//!
+//! let data = eakm::data::synth::blobs(10_000, 8, 50, 0.05, 42);
+//! let cfg = RunConfig::new(Algorithm::ExpNs, 50).seed(7);
+//! let out = Runner::new(&cfg).run(&data).unwrap();
+//! println!("iters={} mse={:.5}", out.iterations, out.mse);
+//! ```
+
+pub mod error;
+pub mod rng;
+pub mod linalg;
+pub mod data;
+pub mod init;
+pub mod metrics;
+pub mod algorithms;
+pub mod coordinator;
+pub mod runtime;
+pub mod config;
+pub mod bench_support;
+pub mod json;
+pub mod cli;
+pub mod proptest;
+
+/// Convenient re-exports for downstream users.
+pub mod prelude {
+    pub use crate::algorithms::Algorithm;
+    pub use crate::config::RunConfig;
+    pub use crate::coordinator::{Runner, RunOutput};
+    pub use crate::data::dataset::Dataset;
+    pub use crate::init::InitMethod;
+    pub use crate::metrics::Counters;
+}

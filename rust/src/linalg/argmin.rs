@@ -1,0 +1,129 @@
+//! Arg-min and top-2 (two smallest) selection over distance rows.
+//!
+//! Every bounding algorithm needs the *two* nearest centroids on a
+//! bound-repair scan — `n₁(i)` to assign and `n₂(i)` for the new lower
+//! bound — so top-2 selection is a first-class primitive here.
+
+/// Index of the minimum value. Ties resolve to the lowest index; empty
+/// slices return `None`.
+#[inline]
+pub fn argmin(xs: &[f64]) -> Option<usize> {
+    if xs.is_empty() {
+        return None;
+    }
+    let mut best = 0;
+    let mut bv = xs[0];
+    for (i, &v) in xs.iter().enumerate().skip(1) {
+        if v < bv {
+            bv = v;
+            best = i;
+        }
+    }
+    Some(best)
+}
+
+/// The two smallest values of a scan, with the index of the smallest.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Top2 {
+    /// Index of the minimum.
+    pub idx1: usize,
+    /// Minimum value.
+    pub val1: f64,
+    /// Index of the second smallest (== `usize::MAX` until two values seen).
+    pub idx2: usize,
+    /// Second-smallest value (`f64::INFINITY` until two values seen).
+    pub val2: f64,
+}
+
+impl Top2 {
+    /// Start an empty scan.
+    #[inline]
+    pub fn new() -> Self {
+        Top2 {
+            idx1: usize::MAX,
+            val1: f64::INFINITY,
+            idx2: usize::MAX,
+            val2: f64::INFINITY,
+        }
+    }
+
+    /// Feed one (index, value) pair into the scan.
+    #[inline]
+    pub fn push(&mut self, idx: usize, val: f64) {
+        if val < self.val1 {
+            self.idx2 = self.idx1;
+            self.val2 = self.val1;
+            self.idx1 = idx;
+            self.val1 = val;
+        } else if val < self.val2 {
+            self.idx2 = idx;
+            self.val2 = val;
+        }
+    }
+}
+
+impl Default for Top2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Top-2 over a whole row (indices are positions in the slice).
+#[inline]
+pub fn top2(xs: &[f64]) -> Top2 {
+    let mut t = Top2::new();
+    for (i, &v) in xs.iter().enumerate() {
+        t.push(i, v);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmin_basics() {
+        assert_eq!(argmin(&[]), None);
+        assert_eq!(argmin(&[3.0]), Some(0));
+        assert_eq!(argmin(&[3.0, 1.0, 2.0]), Some(1));
+        // ties → lowest index
+        assert_eq!(argmin(&[2.0, 1.0, 1.0]), Some(1));
+    }
+
+    #[test]
+    fn top2_ordering() {
+        let t = top2(&[5.0, 1.0, 3.0, 0.5, 9.0]);
+        assert_eq!(t.idx1, 3);
+        assert_eq!(t.val1, 0.5);
+        assert_eq!(t.idx2, 1);
+        assert_eq!(t.val2, 1.0);
+    }
+
+    #[test]
+    fn top2_single_element() {
+        let t = top2(&[4.0]);
+        assert_eq!(t.idx1, 0);
+        assert!(t.val2.is_infinite());
+        assert_eq!(t.idx2, usize::MAX);
+    }
+
+    #[test]
+    fn top2_duplicates() {
+        let t = top2(&[2.0, 2.0, 2.0]);
+        assert_eq!(t.idx1, 0);
+        assert_eq!(t.idx2, 1);
+        assert_eq!(t.val1, 2.0);
+        assert_eq!(t.val2, 2.0);
+    }
+
+    #[test]
+    fn top2_incremental_matches_batch() {
+        let xs = [0.3, 0.9, 0.1, 0.7, 0.1, 0.05];
+        let mut inc = Top2::new();
+        for (i, &v) in xs.iter().enumerate() {
+            inc.push(i, v);
+        }
+        assert_eq!(inc, top2(&xs));
+    }
+}

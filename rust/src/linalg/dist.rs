@@ -1,0 +1,126 @@
+//! Point-to-point squared distances: the innermost hot path.
+//!
+//! Two routes exist and both are exercised by the algorithms:
+//!
+//! 1. [`sqdist`] — direct `Σ(aᵢ−bᵢ)²`, used whenever a *single* distance
+//!    is needed (bound tightening). Numerically the most accurate.
+//! 2. [`sqdist_from_parts`] / [`sqdist_batch_block`] — the norm
+//!    decomposition `‖x‖² − 2x·c + ‖c‖²`, used for batch scans where the
+//!    norms are amortised (sta's full assignment, init, the cc matrix).
+
+use super::gemm;
+
+
+/// Direct squared Euclidean distance, 4-way unrolled.
+#[inline]
+pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut tail = 0.0;
+    for i in chunks * 4..n {
+        let d = a[i] - b[i];
+        tail += d * d;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Squared distance from pre-computed parts; clamped at zero because the
+/// decomposition can go slightly negative under cancellation.
+#[inline]
+pub fn sqdist_from_parts(xnorm: f64, cnorm: f64, xdotc: f64) -> f64 {
+    (xnorm + cnorm - 2.0 * xdotc).max(0.0)
+}
+
+/// Batch squared distances from a block of `m` samples to all `k`
+/// centroids, written into `out` (row-major `m×k`).
+///
+/// Uses the norm decomposition with a blocked matrix product so the
+/// centroid block stays cache-resident — this is the paper's §4.1.1
+/// "BLAS" trick, implemented natively.
+pub fn sqdist_batch_block(
+    xs: &[f64],      // m×d samples
+    xnorms: &[f64],  // m
+    cs: &[f64],      // k×d centroids
+    cnorms: &[f64],  // k
+    d: usize,
+    out: &mut [f64], // m×k
+) {
+    let m = xnorms.len();
+    let k = cnorms.len();
+    debug_assert_eq!(xs.len(), m * d);
+    debug_assert_eq!(cs.len(), k * d);
+    debug_assert_eq!(out.len(), m * k);
+    // out ← X · Cᵀ
+    gemm::matmul_nt(xs, cs, out, m, d, k);
+    for i in 0..m {
+        let row = &mut out[i * k..(i + 1) * k];
+        let xn = xnorms[i];
+        for (j, o) in row.iter_mut().enumerate() {
+            *o = (xn + cnorms[j] - 2.0 * *o).max(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::{dot, sqnorm, sqnorms_rows};
+
+    #[test]
+    fn sqdist_matches_naive() {
+        for n in [1usize, 2, 4, 5, 9, 16, 33] {
+            let a: Vec<f64> = (0..n).map(|i| i as f64 * 0.3).collect();
+            let b: Vec<f64> = (0..n).map(|i| 1.0 - i as f64 * 0.7).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!((sqdist(&a, &b) - naive).abs() < 1e-12 * (1.0 + naive));
+        }
+    }
+
+    #[test]
+    fn parts_equal_direct() {
+        let a = [1.0, -2.0, 0.5];
+        let b = [0.0, 3.0, -1.5];
+        let via = sqdist_from_parts(sqnorm(&a), sqnorm(&b), dot(&a, &b));
+        assert!((via - sqdist(&a, &b)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parts_clamps_negative() {
+        // identical vectors can produce tiny negative values in the
+        // decomposition; the clamp must kick in
+        assert_eq!(sqdist_from_parts(1.0, 1.0, 1.0 + 1e-17), 0.0);
+    }
+
+    #[test]
+    fn batch_matches_pointwise() {
+        let d = 5;
+        let xs: Vec<f64> = (0..3 * d).map(|i| (i as f64).sin()).collect();
+        let cs: Vec<f64> = (0..4 * d).map(|i| (i as f64 * 0.37).cos()).collect();
+        let xn = sqnorms_rows(&xs, d);
+        let cn = sqnorms_rows(&cs, d);
+        let mut out = vec![0.0; 3 * 4];
+        sqdist_batch_block(&xs, &xn, &cs, &cn, d, &mut out);
+        for i in 0..3 {
+            for j in 0..4 {
+                let direct = sqdist(&xs[i * d..(i + 1) * d], &cs[j * d..(j + 1) * d]);
+                assert!(
+                    (out[i * 4 + j] - direct).abs() < 1e-10,
+                    "mismatch at ({i},{j})"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Dense numerical kernels shared by every algorithm.
+//!
+//! All data is `f64` (the paper's experiments use double precision),
+//! row-major. The crate builds these from scratch — no BLAS — but applies
+//! the same engineering tricks the paper lists in §4.1.1: pre-computed
+//! squared norms, `‖x−c‖² = ‖x‖² − 2x·c + ‖c‖²` decomposition, blocked
+//! matrix products for the batch path, and unrolled inner loops.
+
+pub mod argmin;
+pub mod dist;
+pub mod gemm;
+pub mod norms;
+
+pub use argmin::{argmin, top2, Top2};
+pub use dist::{sqdist, sqdist_batch_block, sqdist_from_parts};
+pub use norms::{dot, sqnorm, sqnorms_rows};

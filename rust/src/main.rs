@@ -1,0 +1,12 @@
+//! `eakm` binary — thin shell over [`eakm::cli`].
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match eakm::cli::main(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("eakm: {e}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Distance-evaluation counters and per-run telemetry.
+//!
+//! The paper's tables compare `q_t` (wall time), `q_a` (distance
+//! calculations in the assignment step) and `q_au` (total distance
+//! calculations). [`Counters`] keeps exactly those decompositions.
+
+use std::time::Duration;
+
+/// Counts of point-to-point distance evaluations, by site.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// x↔c distances evaluated during assignment steps (paper's `a`).
+    pub assignment: u64,
+    /// c↔c distances: inter-centroid matrix, s(j), annuli construction.
+    pub centroid: u64,
+    /// centroid-displacement norms: p(j) each round, ns-history P(j,t).
+    pub displacement: u64,
+    /// distances spent during initial seeding + first full assignment.
+    pub init: u64,
+}
+
+impl Counters {
+    /// Paper's `au`: all distance evaluations.
+    pub fn total(&self) -> u64 {
+        self.assignment + self.centroid + self.displacement + self.init
+    }
+
+    /// Merge another counter set (used when joining worker shards).
+    pub fn merge(&mut self, other: &Counters) {
+        self.assignment += other.assignment;
+        self.centroid += other.centroid;
+        self.displacement += other.displacement;
+        self.init += other.init;
+    }
+}
+
+/// Telemetry for one completed clustering run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Algorithm name (paper notation, e.g. "exp-ns").
+    pub algorithm: String,
+    /// Dataset name.
+    pub dataset: String,
+    /// Number of clusters.
+    pub k: usize,
+    /// Seed used.
+    pub seed: u64,
+    /// Rounds until convergence (or cut-off).
+    pub iterations: usize,
+    /// Whether the run converged (no assignment changed).
+    pub converged: bool,
+    /// Final mean squared error (objective / n).
+    pub mse: f64,
+    /// Wall time of the clustering loop (excludes data generation).
+    pub wall: Duration,
+    /// Distance-evaluation counters.
+    pub counters: Counters,
+    /// Wall time per round, if recorded.
+    pub round_times: Vec<Duration>,
+}
+
+impl RunReport {
+    /// Render one compact human-readable line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<10} {:<14} k={:<5} iters={:<5} conv={} mse={:.6} wall={:?} q_a={} q_au={}",
+            self.algorithm,
+            self.dataset,
+            self.k,
+            self.iterations,
+            self.converged,
+            self.mse,
+            self.wall,
+            self.counters.assignment,
+            self.counters.total(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_sums_all_sites() {
+        let c = Counters {
+            assignment: 10,
+            centroid: 3,
+            displacement: 2,
+            init: 5,
+        };
+        assert_eq!(c.total(), 20);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Counters {
+            assignment: 1,
+            centroid: 2,
+            displacement: 3,
+            init: 4,
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.total(), 20);
+        assert_eq!(a.assignment, 2);
+    }
+
+    #[test]
+    fn summary_contains_fields() {
+        let r = RunReport {
+            algorithm: "exp".into(),
+            dataset: "birch".into(),
+            k: 100,
+            seed: 1,
+            iterations: 42,
+            converged: true,
+            mse: 0.5,
+            wall: Duration::from_millis(10),
+            counters: Counters::default(),
+            round_times: vec![],
+        };
+        let s = r.summary();
+        assert!(s.contains("exp") && s.contains("birch") && s.contains("iters=42"));
+    }
+}

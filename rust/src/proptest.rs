@@ -1,0 +1,94 @@
+//! A tiny property-testing harness (no external crates are available in
+//! this environment). Generates random cases from a seeded [`Rng`] and
+//! reports the failing case index + seed for reproduction.
+
+use crate::rng::Rng;
+
+/// Generator context handed to property bodies.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    /// Vector of uniforms in `[lo, hi)`.
+    pub fn uniform_vec(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Borrow the underlying RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (with the case index and
+/// derived seed) on the first failure, so `EAKM_PROP_SEED` in the message
+/// reproduces it.
+pub fn forall(seed: u64, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let root = Rng::new(seed ^ 0x5EED_CAFE);
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: root.split(case as u64),
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(1, 50, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn forall_reports_failing_case() {
+        forall(2, 50, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x < 10, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_case() {
+        let mut first = Vec::new();
+        forall(3, 5, |g| first.push(g.f64_in(0.0, 1.0)));
+        let mut second = Vec::new();
+        forall(3, 5, |g| second.push(g.f64_in(0.0, 1.0)));
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,161 @@
+//! The XLA assignment backend: a drop-in replacement for the native
+//! batch distance scan, executing the AOT-compiled Pallas/JAX kernel
+//! through PJRT.
+//!
+//! Artifacts are compiled for a fixed `(block, d, k)` shape (XLA requires
+//! static shapes); the backend pads the final partial block with +∞-safe
+//! sentinel rows and slices the results back.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{EakmError, Result};
+use crate::runtime::pjrt::PjrtRuntime;
+
+/// Identifies one compiled artifact shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// Sample block size the kernel was lowered for.
+    pub block: usize,
+    /// Dimension.
+    pub d: usize,
+    /// Number of centroids.
+    pub k: usize,
+}
+
+impl ArtifactSpec {
+    /// Conventional artifact filename, matching `python/compile/aot.py`.
+    pub fn filename(&self) -> String {
+        format!("assign_{}x{}x{}.hlo.txt", self.block, self.d, self.k)
+    }
+}
+
+/// Per-row result of the assignment kernel.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AssignResult {
+    /// Index of the nearest centroid (`n₁`).
+    pub idx: Vec<u32>,
+    /// Distance to the nearest centroid (plain, not squared).
+    pub d1: Vec<f64>,
+    /// Distance to the second-nearest centroid.
+    pub d2: Vec<f64>,
+}
+
+/// Executes the `assign` artifact for a fixed shape.
+pub struct XlaAssignBackend {
+    runtime: PjrtRuntime,
+    path: PathBuf,
+    spec: ArtifactSpec,
+}
+
+impl XlaAssignBackend {
+    /// Load the artifact for `spec` from `artifact_dir`.
+    pub fn load(artifact_dir: &Path, spec: ArtifactSpec) -> Result<Self> {
+        let path = artifact_dir.join(spec.filename());
+        if !path.exists() {
+            return Err(EakmError::Runtime(format!(
+                "artifact {} not found — run `make artifacts`",
+                path.display()
+            )));
+        }
+        let mut runtime = PjrtRuntime::cpu()?;
+        runtime.load(&path)?; // compile eagerly so errors surface here
+        Ok(XlaAssignBackend {
+            runtime,
+            path,
+            spec,
+        })
+    }
+
+    /// Artifact shape.
+    pub fn spec(&self) -> ArtifactSpec {
+        self.spec
+    }
+
+    /// Assign a batch of samples (row-major `m×d`, any `m`) to the
+    /// nearest of `k` centroids. Pads the last block internally.
+    pub fn assign(&mut self, xs: &[f64], centroids: &[f64]) -> Result<AssignResult> {
+        let ArtifactSpec { block, d, k } = self.spec;
+        if xs.len() % d != 0 {
+            return Err(EakmError::Runtime(format!(
+                "xs length {} not divisible by d={d}",
+                xs.len()
+            )));
+        }
+        if centroids.len() != k * d {
+            return Err(EakmError::Runtime(format!(
+                "centroids length {} != k*d = {}",
+                centroids.len(),
+                k * d
+            )));
+        }
+        let m = xs.len() / d;
+        let mut out = AssignResult {
+            idx: Vec::with_capacity(m),
+            d1: Vec::with_capacity(m),
+            d2: Vec::with_capacity(m),
+        };
+        let mut padded = vec![0.0; block * d];
+        let mut start = 0;
+        while start < m {
+            let stop = (start + block).min(m);
+            let rows = stop - start;
+            let chunk: &[f64] = if rows == block {
+                &xs[start * d..stop * d]
+            } else {
+                padded[..rows * d].copy_from_slice(&xs[start * d..stop * d]);
+                // pad with copies of the last row — harmless, sliced off below
+                for r in rows..block {
+                    padded.copy_within((rows - 1) * d..rows * d, r * d);
+                }
+                &padded
+            };
+            let exe = self.runtime.load(&self.path)?;
+            let outputs =
+                PjrtRuntime::execute_f64(exe, &[(chunk, &[block, d]), (centroids, &[k, d])])?;
+            if outputs.len() != 3 {
+                return Err(EakmError::Runtime(format!(
+                    "expected 3 outputs (idx, d1, d2), got {}",
+                    outputs.len()
+                )));
+            }
+            out.idx
+                .extend(outputs[0][..rows].iter().map(|&v| v as u32));
+            out.d1.extend_from_slice(&outputs[1][..rows]);
+            out.d2.extend_from_slice(&outputs[2][..rows]);
+            start = stop;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filename_convention() {
+        let spec = ArtifactSpec {
+            block: 256,
+            d: 8,
+            k: 50,
+        };
+        assert_eq!(spec.filename(), "assign_256x8x50.hlo.txt");
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let err = XlaAssignBackend::load(
+            Path::new("/definitely/not/here"),
+            ArtifactSpec {
+                block: 4,
+                d: 2,
+                k: 2,
+            },
+        );
+        match err {
+            Err(EakmError::Runtime(msg)) => assert!(msg.contains("make artifacts")),
+            Err(other) => panic!("expected runtime error, got {other:?}"),
+            Ok(_) => panic!("expected an error"),
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT-compiled XLA artifacts (authored in JAX/Pallas
+//! at build time, see `python/compile/`) and execute them from the Rust
+//! hot path. Python never runs at clustering time.
+
+pub mod backend;
+pub mod pjrt;
+
+pub use backend::{ArtifactSpec, XlaAssignBackend};
+pub use pjrt::PjrtRuntime;

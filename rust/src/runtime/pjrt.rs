@@ -1,0 +1,113 @@
+//! Thin wrapper around the `xla` crate's PJRT CPU client.
+//!
+//! Interchange format is **HLO text** (not serialised protos): jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids cleanly (see /opt/xla-example/README.md
+//! and python/compile/aot.py).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{EakmError, Result};
+
+/// A PJRT CPU client plus a cache of compiled executables keyed by
+/// artifact path (compilation is expensive; each artifact is compiled
+/// exactly once per process).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU-backed runtime.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| EakmError::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(PjrtRuntime {
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Platform name ("cpu" here; "tpu" with a TPU plugin).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&mut self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(path) {
+            let proto = xla::HloModuleProto::from_text_file(path).map_err(|e| {
+                EakmError::Runtime(format!("parse HLO text {}: {e}", path.display()))
+            })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| EakmError::Runtime(format!("compile {}: {e}", path.display())))?;
+            self.cache.insert(path.to_path_buf(), exe);
+        }
+        Ok(&self.cache[path])
+    }
+
+    /// Execute a loaded artifact on row-major f64 inputs, returning the
+    /// flattened f64 outputs of the result tuple.
+    ///
+    /// `inputs` are `(data, dims)` pairs; artifacts are lowered with
+    /// `return_tuple=True`, so the single result is always a tuple.
+    pub fn execute_f64(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[(&[f64], &[usize])],
+    ) -> Result<Vec<Vec<f64>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims_i64)
+                    .map_err(|e| EakmError::Runtime(format!("reshape input: {e}")))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| EakmError::Runtime(format!("execute: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| EakmError::Runtime(format!("to_literal: {e}")))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| EakmError::Runtime(format!("to_tuple: {e}")))?;
+        parts
+            .into_iter()
+            .map(|p| {
+                // outputs may be f64 or i32 (arg-min indices) — normalise
+                // everything to f64 for a uniform API
+                match p.to_vec::<f64>() {
+                    Ok(v) => Ok(v),
+                    Err(_) => p
+                        .to_vec::<i32>()
+                        .map(|v| v.into_iter().map(|x| x as f64).collect())
+                        .map_err(|e| EakmError::Runtime(format!("output convert: {e}"))),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn load_missing_artifact_errors() {
+        let mut rt = PjrtRuntime::cpu().unwrap();
+        let err = rt.load(Path::new("/nonexistent/foo.hlo.txt"));
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Integration: §4's exactness claim at system level — every algorithm,
+//! on several paper-like datasets, converges in the same number of
+//! rounds to the same assignments and objective as `sta`.
+
+use eakm::algorithms::Algorithm;
+use eakm::config::RunConfig;
+use eakm::coordinator::Runner;
+use eakm::data::synth::{find, generate};
+use eakm::data::Dataset;
+
+fn check_all(ds: &Dataset, k: usize, seed: u64) {
+    let reference = Runner::new(&RunConfig::new(Algorithm::Sta, k).seed(seed))
+        .run(ds)
+        .unwrap();
+    assert!(reference.converged, "sta failed to converge");
+    for alg in Algorithm::ALL {
+        if alg == Algorithm::Sta {
+            continue;
+        }
+        let out = Runner::new(&RunConfig::new(alg, k).seed(seed)).run(ds).unwrap();
+        assert_eq!(
+            out.iterations, reference.iterations,
+            "{alg} iterations differ on {} (k={k}, seed={seed})",
+            ds.name
+        );
+        assert_eq!(
+            out.assignments, reference.assignments,
+            "{alg} assignments differ on {} (k={k}, seed={seed})",
+            ds.name
+        );
+        let rel = (out.mse - reference.mse).abs() / reference.mse.max(1e-300);
+        assert!(rel < 1e-9, "{alg} mse differs: {} vs {}", out.mse, reference.mse);
+    }
+}
+
+#[test]
+fn all_algorithms_agree_on_low_d() {
+    // birch-like: d=2 grid gaussians — Exponion's home turf
+    let ds = generate(&find("birch").unwrap(), 0.02, 1);
+    check_all(&ds, 20, 0);
+}
+
+#[test]
+fn all_algorithms_agree_on_mid_d() {
+    let ds = generate(&find("colormoments").unwrap(), 0.03, 2);
+    check_all(&ds, 30, 1);
+}
+
+#[test]
+fn all_algorithms_agree_on_high_d() {
+    let ds = generate(&find("gassensor").unwrap(), 0.1, 3);
+    check_all(&ds, 15, 2);
+}
+
+#[test]
+fn all_algorithms_agree_on_uniform_data() {
+    // uniform random: worst case for bounds — most bound repairs
+    let ds = generate(&find("urand2").unwrap(), 0.002, 4);
+    check_all(&ds, 25, 3);
+}
+
+#[test]
+fn all_algorithms_agree_with_kmeanspp_seeding() {
+    use eakm::init::InitMethod;
+    let ds = generate(&find("mv").unwrap(), 0.05, 5);
+    let k = 12;
+    let cfg = |alg| {
+        RunConfig::new(alg, k)
+            .seed(9)
+            .init(InitMethod::KmeansPlusPlus)
+    };
+    let reference = Runner::new(&cfg(Algorithm::Sta)).run(&ds).unwrap();
+    for alg in [Algorithm::ExpNs, Algorithm::SyinNs, Algorithm::SelkNs] {
+        let out = Runner::new(&cfg(alg)).run(&ds).unwrap();
+        assert_eq!(out.assignments, reference.assignments, "{alg}");
+        assert_eq!(out.iterations, reference.iterations, "{alg}");
+    }
+}
+
+#[test]
+fn degenerate_duplicate_points() {
+    // many duplicate points: tie-heavy, empty clusters likely
+    let mut data = vec![0.0; 100 * 2];
+    for i in 0..100 {
+        data[i * 2] = (i % 5) as f64;
+        data[i * 2 + 1] = ((i / 5) % 2) as f64;
+    }
+    let ds = Dataset::new("dups", data, 100, 2).unwrap();
+    // exactness across the ham family still holds because ties resolve
+    // to the lowest index in every implementation
+    let k = 10;
+    let r = Runner::new(&RunConfig::new(Algorithm::Sta, k).seed(1))
+        .run(&ds)
+        .unwrap();
+    for alg in [Algorithm::Ham, Algorithm::Exp, Algorithm::Selk, Algorithm::Syin] {
+        let out = Runner::new(&RunConfig::new(alg, k).seed(1)).run(&ds).unwrap();
+        assert!(out.converged);
+        let rel = (out.mse - r.mse).abs() / r.mse.max(1e-12);
+        assert!(rel < 1e-9, "{alg} objective differs on duplicate data");
+    }
+}
+
+#[test]
+fn k_equals_n_is_perfect_clustering() {
+    let ds = generate(&find("mv").unwrap(), 0.03, 6);
+    let n = ds.n().min(64);
+    let small = Dataset::new("head", ds.raw()[..n * ds.d()].to_vec(), n, ds.d()).unwrap();
+    let out = Runner::new(&RunConfig::new(Algorithm::Exp, n).seed(2))
+        .run(&small)
+        .unwrap();
+    assert!(out.converged);
+    assert!(out.mse < 1e-18, "k=n must give zero objective, got {}", out.mse);
+}
+
+#[test]
+fn d_equals_one() {
+    let mut data: Vec<f64> = (0..200).map(|i| (i as f64 * 0.37).sin() * 5.0).collect();
+    data.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let ds = Dataset::new("line", data, 200, 1).unwrap();
+    check_all(&ds, 8, 4);
+}

@@ -1,0 +1,146 @@
+//! Failure injection & adversarial inputs: the system must stay exact or
+//! fail cleanly, never silently mis-cluster.
+
+use eakm::algorithms::Algorithm;
+use eakm::config::RunConfig;
+use eakm::coordinator::Runner;
+use eakm::data::synth::blobs;
+use eakm::data::Dataset;
+use eakm::error::EakmError;
+use eakm::proptest::forall;
+
+/// Seeds that force empty clusters: k close to n with concentrated data.
+#[test]
+fn empty_clusters_stay_exact() {
+    let mut data = Vec::new();
+    // 3 tight far-apart groups; k=12 guarantees several empty clusters
+    // after round 1
+    for g in 0..3 {
+        for i in 0..20 {
+            // irrational jitter kills exact distance ties (ties are
+            // numeric-route-dependent and not part of the exactness claim)
+            data.push(g as f64 * 100.0 + (i as f64) * 1e-3 + (i as f64).sin() * 1e-4);
+            data.push(g as f64 * -50.0 + (i as f64 * 0.7).cos() * 1e-4);
+        }
+    }
+    let ds = Dataset::new("tight", data, 60, 2).unwrap();
+    for seed in 0..5 {
+        let r = Runner::new(&RunConfig::new(Algorithm::Sta, 12).seed(seed))
+            .run(&ds)
+            .unwrap();
+        for alg in [
+            Algorithm::Ham,
+            Algorithm::Exp,
+            Algorithm::ExpNs,
+            Algorithm::Selk,
+            Algorithm::SelkNs,
+            Algorithm::Syin,
+            Algorithm::SyinNs,
+            Algorithm::Elk,
+            Algorithm::ElkNs,
+            Algorithm::Ann,
+            Algorithm::Yin,
+        ] {
+            let out = Runner::new(&RunConfig::new(alg, 12).seed(seed)).run(&ds).unwrap();
+            assert_eq!(out.assignments, r.assignments, "{alg} seed={seed}");
+            assert_eq!(out.iterations, r.iterations, "{alg} seed={seed}");
+        }
+    }
+}
+
+#[test]
+fn invalid_configs_are_rejected_not_panicked() {
+    let ds = blobs(20, 2, 2, 0.1, 1);
+    // k = 0
+    let e = Runner::new(&RunConfig::new(Algorithm::Sta, 0)).run(&ds);
+    assert!(matches!(e, Err(EakmError::Config(_))));
+    // k > n
+    let e = Runner::new(&RunConfig::new(Algorithm::Exp, 21)).run(&ds);
+    assert!(matches!(e, Err(EakmError::Config(_))));
+    // max_iters = 0
+    let mut cfg = RunConfig::new(Algorithm::Sta, 2);
+    cfg.max_iters = 0;
+    assert!(matches!(Runner::new(&cfg).run(&ds), Err(EakmError::Config(_))));
+}
+
+#[test]
+fn dataset_construction_rejects_poison() {
+    assert!(Dataset::new("x", vec![1.0, f64::INFINITY], 1, 2).is_err());
+    assert!(Dataset::new("x", vec![1.0, f64::NAN], 1, 2).is_err());
+    assert!(Dataset::new("x", vec![], 0, 0).is_err());
+    assert!(Dataset::new("x", vec![1.0; 5], 2, 2).is_err());
+}
+
+#[test]
+fn adversarial_collinear_data() {
+    // all points on one line — stresses annuli construction and s(j)
+    // degeneracy (many near-equal inter-centroid distances). Non-uniform
+    // spacing avoids exact midpoint ties, which are numeric-route
+    // dependent and excluded from the exactness claim.
+    let data: Vec<f64> = (0..300)
+        .flat_map(|i| [(i as f64).powf(1.01), 0.0, 0.0])
+        .collect();
+    let ds = Dataset::new("line3d", data, 300, 3).unwrap();
+    let r = Runner::new(&RunConfig::new(Algorithm::Sta, 16).seed(3))
+        .run(&ds)
+        .unwrap();
+    for alg in [Algorithm::Exp, Algorithm::ExpNs, Algorithm::Ann, Algorithm::Ham] {
+        let out = Runner::new(&RunConfig::new(alg, 16).seed(3)).run(&ds).unwrap();
+        assert_eq!(out.iterations, r.iterations, "{alg}");
+        let rel = (out.mse - r.mse).abs() / r.mse.max(1e-12);
+        assert!(rel < 1e-9, "{alg}: objective differs on collinear data");
+    }
+}
+
+#[test]
+fn prop_random_small_workloads_all_exact() {
+    // randomized mini-workloads across every algorithm — the paper's
+    // exactness claim under fuzz
+    forall(42, 8, |g| {
+        let n = g.usize_in(30, 120);
+        let d = g.usize_in(1, 12);
+        let k = g.usize_in(2, 10.min(n / 3));
+        let seed = g.usize_in(0, 1000) as u64;
+        let spread = g.f64_in(0.05, 0.8);
+        let ds = blobs(n, d, k, spread, seed);
+        let r = Runner::new(&RunConfig::new(Algorithm::Sta, k).seed(seed))
+            .run(&ds)
+            .unwrap();
+        for alg in Algorithm::ALL {
+            let out = Runner::new(&RunConfig::new(alg, k).seed(seed)).run(&ds).unwrap();
+            assert_eq!(
+                out.assignments, r.assignments,
+                "{alg} diverged (n={n} d={d} k={k} seed={seed} spread={spread})"
+            );
+        }
+    });
+}
+
+#[test]
+fn history_reset_boundary_cases() {
+    // reset period 2 (minimum) forces a fold nearly every round
+    let ds = blobs(200, 4, 6, 0.3, 9);
+    let mut cfg = RunConfig::new(Algorithm::Sta, 6).seed(2);
+    cfg.history_cap = Some(2);
+    let r = Runner::new(&cfg).run(&ds).unwrap();
+    for alg in [Algorithm::SelkNs, Algorithm::ElkNs, Algorithm::SyinNs, Algorithm::ExpNs] {
+        let mut c = RunConfig::new(alg, 6).seed(2);
+        c.history_cap = Some(2);
+        let out = Runner::new(&c).run(&ds).unwrap();
+        assert_eq!(out.assignments, r.assignments, "{alg} with cap=2");
+        assert_eq!(out.iterations, r.iterations, "{alg} with cap=2");
+    }
+}
+
+#[test]
+fn time_limit_cuts_off_cleanly() {
+    use std::time::Duration;
+    let ds = blobs(5_000, 3, 50, 0.8, 1);
+    let cfg = RunConfig::new(Algorithm::Sta, 50)
+        .seed(1)
+        .time_limit(Duration::from_millis(1));
+    let out = Runner::new(&cfg).run(&ds).unwrap();
+    // must return a consistent (if unconverged) state
+    assert_eq!(out.assignments.len(), 5_000);
+    assert!(out.mse.is_finite());
+}

@@ -1,0 +1,233 @@
+//! Property-based tests of the crate's core invariants, using the
+//! built-in `eakm::proptest` harness (no external crates offline).
+
+use eakm::coordinator::annuli::Annuli;
+use eakm::coordinator::ccdist::CcData;
+use eakm::coordinator::sorted_norms::SortedNorms;
+use eakm::coordinator::update::UpdateState;
+use eakm::data::Dataset;
+use eakm::linalg::{dot, gemm, sqdist, sqdist_batch_block, sqnorm, sqnorms_rows, top2};
+use eakm::metrics::Counters;
+use eakm::proptest::forall;
+
+#[test]
+fn prop_gemm_matches_naive() {
+    forall(101, 40, |g| {
+        let m = g.usize_in(1, 40);
+        let d = g.usize_in(1, 30);
+        let k = g.usize_in(1, 70);
+        let a = g.normal_vec(m * d);
+        let b = g.normal_vec(k * d);
+        let mut out = vec![0.0; m * k];
+        gemm::matmul_nt(&a, &b, &mut out, m, d, k);
+        for i in 0..m {
+            for j in 0..k {
+                let want = dot(&a[i * d..(i + 1) * d], &b[j * d..(j + 1) * d]);
+                let got = out[i * k + j];
+                assert!(
+                    (got - want).abs() <= 1e-9 * (1.0 + want.abs()),
+                    "({m},{d},{k}) at ({i},{j}): {got} vs {want}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batch_distances_match_direct() {
+    forall(102, 40, |g| {
+        let m = g.usize_in(1, 50);
+        let d = g.usize_in(1, 20);
+        let k = g.usize_in(1, 30);
+        let xs = g.normal_vec(m * d);
+        let cs = g.normal_vec(k * d);
+        let xn = sqnorms_rows(&xs, d);
+        let cn = sqnorms_rows(&cs, d);
+        let mut out = vec![0.0; m * k];
+        sqdist_batch_block(&xs, &xn, &cs, &cn, d, &mut out);
+        for i in 0..m {
+            for j in 0..k {
+                let want = sqdist(&xs[i * d..(i + 1) * d], &cs[j * d..(j + 1) * d]);
+                assert!((out[i * k + j] - want).abs() < 1e-8 * (1.0 + want));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_top2_matches_sort() {
+    forall(103, 200, |g| {
+        let n = g.usize_in(1, 64);
+        let xs = g.uniform_vec(n, -10.0, 10.0);
+        let t = top2(&xs);
+        let mut sorted: Vec<(f64, usize)> = xs.iter().cloned().zip(0..).collect();
+        sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        assert_eq!(t.idx1, sorted[0].1);
+        assert_eq!(t.val1, sorted[0].0);
+        if n > 1 {
+            assert_eq!(t.val2, sorted[1].0);
+        } else {
+            assert!(t.val2.is_infinite());
+        }
+    });
+}
+
+#[test]
+fn prop_cc_s_is_min_distance() {
+    forall(104, 30, |g| {
+        let k = g.usize_in(2, 40);
+        let d = g.usize_in(1, 8);
+        let cs = g.normal_vec(k * d);
+        let cc = CcData::build(&cs, k, d, &mut Counters::default());
+        for j in 0..k {
+            let want = (0..k)
+                .filter(|&j2| j2 != j)
+                .map(|j2| sqdist(&cs[j * d..(j + 1) * d], &cs[j2 * d..(j2 + 1) * d]).sqrt())
+                .fold(f64::INFINITY, f64::min);
+            assert!((cc.s[j] - want).abs() < 1e-12, "s({j})");
+            // symmetry
+            for j2 in 0..k {
+                assert_eq!(cc.get(j, j2), cc.get(j2, j));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_annuli_superset_and_2x_bound() {
+    forall(105, 25, |g| {
+        let k = g.usize_in(2, 64);
+        let d = g.usize_in(1, 6);
+        let cs = g.normal_vec(k * d);
+        let cc = CcData::build(&cs, k, d, &mut Counters::default());
+        let ann = Annuli::build(&cc);
+        for _ in 0..10 {
+            let j = g.usize_in(0, k - 1);
+            let r = g.f64_in(0.0, 6.0);
+            let cand: std::collections::HashSet<u32> =
+                ann.candidates(j, r).iter().cloned().collect();
+            let mut exact = 0;
+            for j2 in 0..k {
+                if j2 != j && cc.get(j, j2) <= r {
+                    exact += 1;
+                    assert!(
+                        cand.contains(&(j2 as u32)),
+                        "k={k} j={j} r={r}: missing {j2} at dist {}",
+                        cc.get(j, j2)
+                    );
+                }
+            }
+            assert!(
+                cand.len() <= 2 * exact + 1,
+                "over-coverage: |J*|={} |J|={exact}",
+                cand.len()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_sorted_norms_window_is_exact_filter() {
+    forall(106, 50, |g| {
+        let k = g.usize_in(1, 60);
+        let cnorms_sq: Vec<f64> = g.uniform_vec(k, 0.0, 25.0);
+        let sn = SortedNorms::build(&cnorms_sq);
+        let x = g.f64_in(0.0, 5.0);
+        let r = g.f64_in(0.0, 2.0);
+        let got: std::collections::HashSet<u32> = sn.window(x, r).collect();
+        for (j, &sq) in cnorms_sq.iter().enumerate() {
+            let inside = (sq.sqrt() - x).abs() <= r;
+            assert_eq!(
+                got.contains(&(j as u32)),
+                inside,
+                "j={j} norm={} x={x} r={r}",
+                sq.sqrt()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_delta_update_equals_recompute() {
+    forall(107, 25, |g| {
+        let n = g.usize_in(4, 60);
+        let d = g.usize_in(1, 5);
+        let k = g.usize_in(2, 6);
+        let data = g.normal_vec(n * d);
+        let ds = Dataset::new("p", data, n, d).unwrap();
+        let mut a: Vec<u32> = (0..n).map(|_| g.usize_in(0, k - 1) as u32).collect();
+        let mut st = UpdateState::from_assignments(&ds, &a, k);
+        // random sequence of moves applied both ways
+        for _ in 0..g.usize_in(1, 20) {
+            let i = g.usize_in(0, n - 1);
+            let to = g.usize_in(0, k - 1) as u32;
+            if a[i] == to {
+                continue;
+            }
+            let mv = eakm::algorithms::Moved {
+                i: i as u32,
+                from: a[i],
+                to,
+            };
+            a[i] = to;
+            st.apply_moves(&ds, &[mv]);
+        }
+        let fresh = UpdateState::from_assignments(&ds, &a, k);
+        let old = vec![0.0; k * d];
+        let got = st.centroids(&old, d);
+        let want = fresh.centroids(&old, d);
+        for (gv, wv) in got.iter().zip(&want) {
+            assert!((gv - wv).abs() < 1e-9, "delta drifted from recompute");
+        }
+    });
+}
+
+#[test]
+fn prop_sqnorm_triangle_inequality_consistency() {
+    // ns-vs-sn core fact: ‖a−c‖ ≤ ‖a−b‖ + ‖b−c‖ for our sqdist
+    forall(108, 100, |g| {
+        let d = g.usize_in(1, 16);
+        let a = g.normal_vec(d);
+        let b = g.normal_vec(d);
+        let c = g.normal_vec(d);
+        let ab = sqdist(&a, &b).sqrt();
+        let bc = sqdist(&b, &c).sqrt();
+        let ac = sqdist(&a, &c).sqrt();
+        assert!(ac <= ab + bc + 1e-9);
+        assert!(sqnorm(&a) >= 0.0);
+    });
+}
+
+#[test]
+fn prop_config_parser_never_panics() {
+    use eakm::config::RunConfig;
+    forall(109, 200, |g| {
+        // random garbage lines: parser must return Ok or Err, never panic
+        let tokens = ["k", "algorithm", "=", "exp", "banana", "seed", "#x", "[s]", "1e9", "-3"];
+        let mut text = String::new();
+        for _ in 0..g.usize_in(0, 6) {
+            for _ in 0..g.usize_in(0, 4) {
+                text.push_str(tokens[g.usize_in(0, tokens.len() - 1)]);
+                text.push(' ');
+            }
+            text.push('\n');
+        }
+        let _ = RunConfig::from_str_cfg(&text);
+    });
+}
+
+#[test]
+fn prop_standardize_is_idempotent() {
+    forall(110, 30, |g| {
+        let n = g.usize_in(2, 50);
+        let d = g.usize_in(1, 6);
+        let data = g.normal_vec(n * d);
+        let mut ds = Dataset::new("s", data, n, d).unwrap();
+        ds.standardize();
+        let once = ds.raw().to_vec();
+        ds.standardize();
+        for (a, b) in ds.raw().iter().zip(&once) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    });
+}

@@ -1,0 +1,135 @@
+//! Integration: the AOT-compiled JAX/Pallas artifact, executed from Rust
+//! through PJRT, must agree with the native Rust distance path — this is
+//! the three-layer composition check (L1 Pallas → L2 JAX → HLO → L3 Rust).
+//!
+//! Requires `make artifacts`; tests fail with a clear message otherwise.
+
+use std::path::PathBuf;
+
+use eakm::data::synth::blobs;
+use eakm::linalg::{sqdist, top2};
+use eakm::runtime::{ArtifactSpec, XlaAssignBackend};
+
+fn artifact_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn native_assign(xs: &[f64], cs: &[f64], d: usize, k: usize) -> (Vec<u32>, Vec<f64>, Vec<f64>) {
+    let m = xs.len() / d;
+    let mut idx = Vec::with_capacity(m);
+    let mut d1 = Vec::with_capacity(m);
+    let mut d2 = Vec::with_capacity(m);
+    for i in 0..m {
+        let row: Vec<f64> = (0..k)
+            .map(|j| sqdist(&xs[i * d..(i + 1) * d], &cs[j * d..(j + 1) * d]).sqrt())
+            .collect();
+        let t = top2(&row);
+        idx.push(t.idx1 as u32);
+        d1.push(t.val1);
+        d2.push(t.val2);
+    }
+    (idx, d1, d2)
+}
+
+fn check_spec(spec: ArtifactSpec, m: usize, seed: u64) {
+    let dir = artifact_dir();
+    let mut backend = XlaAssignBackend::load(&dir, spec)
+        .expect("artifact missing — run `make artifacts` first");
+    let ds = blobs(m, spec.d, spec.k.min(8), 0.3, seed);
+    let cs = blobs(spec.k, spec.d, spec.k.min(8), 0.3, seed + 1);
+    let out = backend.assign(ds.raw(), cs.raw()).expect("assign failed");
+    let (ni, nd1, nd2) = native_assign(ds.raw(), cs.raw(), spec.d, spec.k);
+    assert_eq!(out.idx.len(), m);
+    let mut mismatched_idx = 0;
+    for i in 0..m {
+        // indices may differ only under exact distance ties (none in
+        // continuous random data)
+        if out.idx[i] != ni[i] {
+            mismatched_idx += 1;
+        }
+        assert!(
+            (out.d1[i] - nd1[i]).abs() < 1e-8 * (1.0 + nd1[i]),
+            "sample {i}: xla d1={} native={}",
+            out.d1[i],
+            nd1[i]
+        );
+        assert!(
+            (out.d2[i] - nd2[i]).abs() < 1e-8 * (1.0 + nd2[i]),
+            "sample {i}: xla d2={} native={}",
+            out.d2[i],
+            nd2[i]
+        );
+    }
+    assert_eq!(mismatched_idx, 0, "arg-min disagreement");
+}
+
+#[test]
+fn small_artifact_matches_native() {
+    check_spec(
+        ArtifactSpec {
+            block: 16,
+            d: 3,
+            k: 4,
+        },
+        64,
+        7,
+    );
+}
+
+#[test]
+fn medium_artifact_matches_native() {
+    check_spec(
+        ArtifactSpec {
+            block: 64,
+            d: 4,
+            k: 16,
+        },
+        256,
+        11,
+    );
+}
+
+#[test]
+fn production_artifact_matches_native_with_padding() {
+    // 300 is not a multiple of 256 → exercises the tail-block padding
+    check_spec(
+        ArtifactSpec {
+            block: 256,
+            d: 8,
+            k: 50,
+        },
+        300,
+        13,
+    );
+}
+
+#[test]
+fn lloyd_artifact_runs_and_descends() {
+    use eakm::runtime::PjrtRuntime;
+    let path = artifact_dir().join("lloyd_5r_512x8x50.hlo.txt");
+    assert!(path.exists(), "run `make artifacts` first");
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let ds = blobs(512, 8, 10, 0.2, 5);
+    let cs: Vec<f64> = ds.raw()[..50 * 8].to_vec();
+    let exe = rt.load(&path).unwrap();
+    let outputs =
+        PjrtRuntime::execute_f64(exe, &[(ds.raw(), &[512, 8]), (&cs, &[50, 8])]).unwrap();
+    assert_eq!(outputs.len(), 2); // (centroids, assignments)
+    let new_c = &outputs[0];
+    let idx = &outputs[1];
+    assert_eq!(new_c.len(), 50 * 8);
+    assert_eq!(idx.len(), 512);
+    // 5 Lloyd rounds must not increase the objective vs the init state
+    let mse_init = ds.mse(&cs, &(0..512).map(|i| {
+        let row: Vec<f64> = (0..50)
+            .map(|j| sqdist(ds.row(i), &cs[j * 8..(j + 1) * 8]))
+            .collect();
+        eakm::linalg::argmin(&row).unwrap() as u32
+    }).collect::<Vec<_>>());
+    let assigns: Vec<u32> = idx.iter().map(|&v| v as u32).collect();
+    let mse_after = ds.mse(new_c, &assigns);
+    assert!(
+        mse_after <= mse_init + 1e-9,
+        "lloyd artifact increased objective: {mse_init} → {mse_after}"
+    );
+}
