@@ -63,7 +63,8 @@ common flags:
   --algorithm ALG    sta selk elk ham ann exp syin yin selk-ns elk-ns
                      syin-ns exp-ns naive-* auto
   --seed S           RNG seed (default 0)
-  --threads T        worker threads (default 1)
+  --threads T|auto   worker threads for the whole round (default 1;
+                     auto = available parallelism)
   --max-iters N      round cap
   --init M           random | kmeans++
   --json             emit the report as JSON
@@ -136,8 +137,20 @@ fn build_config(flags: &Flags) -> Result<RunConfig> {
     if let Some(s) = flag_num::<u64>(flags, "seed")? {
         cfg.seed = s;
     }
-    if let Some(t) = flag_num::<usize>(flags, "threads")? {
-        cfg.threads = t.max(1);
+    if let Some(t) = flags.get("threads") {
+        cfg.threads = if t == "auto" {
+            crate::config::AUTO_THREADS
+        } else {
+            let n = t
+                .parse::<usize>()
+                .map_err(|_| EakmError::Config(format!("bad --threads: {t:?}")))?;
+            if n == 0 {
+                return Err(EakmError::Config(
+                    "--threads must be ≥ 1, or \"auto\"".into(),
+                ));
+            }
+            n
+        };
     }
     if let Some(m) = flag_num::<usize>(flags, "max-iters")? {
         cfg.max_iters = m;
@@ -365,5 +378,27 @@ mod tests {
     #[test]
     fn datasets_lists() {
         assert_eq!(main(&s(&["datasets"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn run_with_auto_threads() {
+        let code = main(&s(&[
+            "run",
+            "--dataset",
+            "birch",
+            "--scale",
+            "0.01",
+            "--k",
+            "5",
+            "--algorithm",
+            "sta",
+            "--threads",
+            "auto",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert!(main(&s(&["run", "--dataset", "birch", "--threads", "lots"])).is_err());
+        // 0 is not a thread count; only the explicit "auto" selects auto
+        assert!(main(&s(&["run", "--dataset", "birch", "--threads", "0"])).is_err());
     }
 }

@@ -20,7 +20,9 @@ pub struct RunConfig {
     pub k: usize,
     /// RNG seed for centroid initialisation.
     pub seed: u64,
-    /// Worker threads for the assignment step.
+    /// Worker threads for the whole round (scan + update + centroid
+    /// builds). `AUTO_THREADS` (0) resolves to the machine's available
+    /// parallelism at engine construction.
     pub threads: usize,
     /// Seeding strategy.
     pub init: InitMethod,
@@ -35,6 +37,9 @@ pub struct RunConfig {
     /// Record per-round wall times in the report.
     pub record_rounds: bool,
 }
+
+/// Sentinel thread count: resolve from `available_parallelism`.
+pub const AUTO_THREADS: usize = 0;
 
 impl RunConfig {
     /// A config with the paper's defaults.
@@ -59,10 +64,23 @@ impl RunConfig {
         self
     }
 
-    /// Set the thread count (builder style).
+    /// Set the thread count (builder style). [`AUTO_THREADS`] (0)
+    /// resolves to the machine's available parallelism.
     pub fn threads(mut self, threads: usize) -> Self {
-        self.threads = threads.max(1);
+        self.threads = threads;
         self
+    }
+
+    /// The effective worker count: `threads`, or the machine's available
+    /// parallelism when set to [`AUTO_THREADS`].
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == AUTO_THREADS {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+        } else {
+            self.threads
+        }
     }
 
     /// Set the iteration cap (builder style).
@@ -118,7 +136,19 @@ impl RunConfig {
                 }
                 "k" => cfg.k = parse_num(key, value)?,
                 "seed" => cfg.seed = parse_num::<u64>(key, value)?,
-                "threads" => cfg.threads = parse_num::<usize>(key, value)?.max(1),
+                "threads" => {
+                    cfg.threads = if value == "auto" {
+                        AUTO_THREADS
+                    } else {
+                        let n = parse_num::<usize>(key, value)?;
+                        if n == 0 {
+                            return Err(EakmError::Config(
+                                "threads must be ≥ 1, or \"auto\"".into(),
+                            ));
+                        }
+                        n
+                    };
+                }
                 "init" => {
                     cfg.init = InitMethod::parse(value)
                         .ok_or_else(|| EakmError::Config(format!("unknown init {value:?}")))?;
@@ -178,6 +208,18 @@ mod tests {
         assert_eq!(cfg.threads, 2);
         assert_eq!(cfg.max_iters, 55);
         assert!(cfg.record_rounds);
+    }
+
+    #[test]
+    fn threads_auto_resolves_to_at_least_one() {
+        let cfg = RunConfig::from_str_cfg("threads = auto").unwrap();
+        assert_eq!(cfg.threads, AUTO_THREADS);
+        assert!(cfg.resolved_threads() >= 1);
+        let cfg = RunConfig::new(Algorithm::Sta, 2).threads(AUTO_THREADS);
+        assert!(cfg.resolved_threads() >= 1);
+        assert_eq!(RunConfig::new(Algorithm::Sta, 2).threads(3).resolved_threads(), 3);
+        // an explicit 0 in config text is rejected (only "auto" means auto)
+        assert!(RunConfig::from_str_cfg("threads = 0").is_err());
     }
 
     #[test]

@@ -9,7 +9,11 @@
 //! (`|J*(i)| ≤ 2|J(i)|`, paper).
 
 use super::ccdist::CcData;
+use crate::runtime::pool::{SharedSliceMut, WorkerPool};
 
+/// Below this k the parallel rebuild costs more in scheduling than the
+/// O(k) per-row partial sorts it shares out.
+const PAR_MIN_K: usize = 64;
 
 /// Per-centroid partially sorted neighbour lists + annulus radii.
 #[derive(Clone, Debug)]
@@ -61,8 +65,66 @@ impl Annuli {
         self.build_into_opts(cc, false);
     }
 
+    /// Hot-path rebuild sharded over the pool: rows are independent (one
+    /// partial sort each, writing disjoint `order`/`radii` slices), so
+    /// the result is bit-identical to the serial rebuild at any width.
+    /// Like [`Annuli::build_into_fast`], skips the `dists` copy-out.
+    pub fn build_into_fast_pooled(&mut self, cc: &CcData, pool: &WorkerPool) {
+        if pool.width() == 1 || cc.k() < PAR_MIN_K {
+            self.build_into_fast(cc);
+            return;
+        }
+        self.size_for(cc.k(), false);
+        let (k, levels) = (self.k, self.levels);
+        let km1 = k - 1;
+        let prefix = &self.prefix;
+        let order = SharedSliceMut::new(&mut self.order);
+        let radii = SharedSliceMut::new(&mut self.radii);
+        pool.for_each_chunk(k, 4, |lo, hi| {
+            // per-chunk scratch, reused across the chunk's rows
+            let mut scratch: Vec<u128> = Vec::with_capacity(km1);
+            let order_rows = unsafe { order.range(lo * km1, hi * km1) };
+            let radii_rows = unsafe { radii.range(lo * levels, hi * levels) };
+            for j in lo..hi {
+                fill_row(
+                    cc,
+                    j,
+                    prefix,
+                    &mut scratch,
+                    &mut order_rows[(j - lo) * km1..(j - lo + 1) * km1],
+                    &mut radii_rows[(j - lo) * levels..(j - lo + 1) * levels],
+                    None,
+                );
+            }
+        });
+    }
+
     fn build_into_opts(&mut self, cc: &CcData, keep_dists: bool) {
         let k = cc.k();
+        self.size_for(k, keep_dists);
+        let (km1, levels) = (k.saturating_sub(1), self.levels);
+        let mut scratch: Vec<u128> = Vec::with_capacity(km1);
+        for j in 0..k {
+            let dists_row = if keep_dists {
+                Some(&mut self.dists[j * km1..(j + 1) * km1])
+            } else {
+                None
+            };
+            fill_row(
+                cc,
+                j,
+                &self.prefix,
+                &mut scratch,
+                &mut self.order[j * km1..(j + 1) * km1],
+                &mut self.radii[j * levels..(j + 1) * levels],
+                dists_row,
+            );
+        }
+    }
+
+    /// (Re)size all buffers for `k` centroids, leaving the per-row fill
+    /// to [`fill_row`].
+    fn size_for(&mut self, k: usize, keep_dists: bool) {
         let km1 = k.saturating_sub(1);
         // levels: smallest L with 2^L − 1 ≥ k−1
         let mut levels = 0;
@@ -83,64 +145,6 @@ impl Annuli {
         }
         self.radii.clear();
         self.radii.resize(k * levels, f64::INFINITY);
-
-        // Distances are non-negative, so the IEEE-754 bit pattern is
-        // monotone as an integer: pack (dist_bits << 32 | idx) into one
-        // u128 and introselect on plain integer order — branchless and
-        // ~2× faster than the (f64, u32) comparator at k=1000.
-        let mut scratch: Vec<u128> = Vec::with_capacity(km1);
-        for j in 0..k {
-            scratch.clear();
-            let row = cc.row(j);
-            for (j2, &dist) in row.iter().enumerate() {
-                if j2 != j {
-                    scratch.push(((dist.to_bits() as u128) << 32) | j2 as u128);
-                }
-            }
-            // Partial sort: partition at the annulus boundaries from the
-            // OUTERMOST inward, so each select works on a halving range —
-            // O(k) total (vs O(k log k) ascending, which rescans the tail
-            // at every level).
-            let mut hi = scratch.len();
-            for &b in self.prefix.iter().rev() {
-                let b = b.min(scratch.len());
-                if b > 0 && b < hi {
-                    scratch[..hi].select_nth_unstable(b);
-                    hi = b;
-                }
-            }
-            // e(j,f) = max distance within the prefix [0, b) — packed
-            // order is distance-major, so the max key is the max dist
-            let mut start = 0;
-            for (f, &b) in self.prefix.iter().enumerate() {
-                let bc = b.min(scratch.len());
-                let seg_max_bits = scratch[start..bc]
-                    .iter()
-                    .cloned()
-                    .max()
-                    .map(|key| (key >> 32) as u64)
-                    .unwrap_or(0);
-                let seg_max = f64::from_bits(seg_max_bits).max(if f == 0 {
-                    0.0
-                } else {
-                    self.radii[j * levels + f - 1]
-                });
-                self.radii[j * levels + f] = if b >= scratch.len() {
-                    f64::INFINITY // outermost annulus covers everything
-                } else {
-                    seg_max
-                };
-                start = bc;
-            }
-            for (t, &key) in scratch.iter().enumerate() {
-                self.order[j * km1 + t] = key as u32;
-            }
-            if keep_dists {
-                for (t, &key) in scratch.iter().enumerate() {
-                    self.dists[j * km1 + t] = f64::from_bits((key >> 32) as u64);
-                }
-            }
-        }
     }
 
     /// Candidate neighbours of centroid `j` covering search radius `r`:
@@ -192,6 +196,71 @@ impl Annuli {
     pub fn row_order(&self, j: usize) -> &[u32] {
         let km1 = self.k - 1;
         &self.order[j * km1..(j + 1) * km1]
+    }
+}
+
+/// Build one centroid's annulus row: partial-sort its neighbours and
+/// derive the per-level radii. Rows are independent, which is what the
+/// pooled rebuild exploits.
+///
+/// Distances are non-negative, so the IEEE-754 bit pattern is monotone
+/// as an integer: pack (dist_bits << 32 | idx) into one u128 and
+/// introselect on plain integer order — branchless and ~2× faster than
+/// the (f64, u32) comparator at k=1000.
+fn fill_row(
+    cc: &CcData,
+    j: usize,
+    prefix: &[usize],
+    scratch: &mut Vec<u128>,
+    order_row: &mut [u32],
+    radii_row: &mut [f64],
+    dists_row: Option<&mut [f64]>,
+) {
+    scratch.clear();
+    let row = cc.row(j);
+    for (j2, &dist) in row.iter().enumerate() {
+        if j2 != j {
+            scratch.push(((dist.to_bits() as u128) << 32) | j2 as u128);
+        }
+    }
+    // Partial sort: partition at the annulus boundaries from the
+    // OUTERMOST inward, so each select works on a halving range —
+    // O(k) total (vs O(k log k) ascending, which rescans the tail
+    // at every level).
+    let mut hi = scratch.len();
+    for &b in prefix.iter().rev() {
+        let b = b.min(scratch.len());
+        if b > 0 && b < hi {
+            scratch[..hi].select_nth_unstable(b);
+            hi = b;
+        }
+    }
+    // e(j,f) = max distance within the prefix [0, b) — packed
+    // order is distance-major, so the max key is the max dist
+    let mut start = 0;
+    for (f, &b) in prefix.iter().enumerate() {
+        let bc = b.min(scratch.len());
+        let seg_max_bits = scratch[start..bc]
+            .iter()
+            .cloned()
+            .max()
+            .map(|key| (key >> 32) as u64)
+            .unwrap_or(0);
+        let seg_max = f64::from_bits(seg_max_bits).max(if f == 0 { 0.0 } else { radii_row[f - 1] });
+        radii_row[f] = if b >= scratch.len() {
+            f64::INFINITY // outermost annulus covers everything
+        } else {
+            seg_max
+        };
+        start = bc;
+    }
+    for (t, &key) in scratch.iter().enumerate() {
+        order_row[t] = key as u32;
+    }
+    if let Some(dists_row) = dists_row {
+        for (t, &key) in scratch.iter().enumerate() {
+            dists_row[t] = f64::from_bits((key >> 32) as u64);
+        }
     }
 }
 
@@ -274,5 +343,23 @@ mod tests {
         let ann = Annuli::build(&line_centroids(8));
         let c = ann.candidates(3, 0.0);
         assert!(!c.is_empty() && c.len() <= 1);
+    }
+
+    #[test]
+    fn pooled_rebuild_is_bit_identical_to_serial() {
+        use crate::runtime::pool::WorkerPool;
+        // k ≥ PAR_MIN_K so the parallel path actually runs
+        let cc = line_centroids(100);
+        let mut want = Annuli::empty();
+        want.build_into_fast(&cc);
+        for threads in [2, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut got = Annuli::empty();
+            got.build_into_fast_pooled(&cc, &pool);
+            assert_eq!(got.order, want.order, "threads={threads}");
+            assert_eq!(got.radii, want.radii, "threads={threads}");
+            assert_eq!(got.prefix, want.prefix);
+            assert_eq!(got.levels, want.levels);
+        }
     }
 }

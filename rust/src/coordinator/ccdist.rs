@@ -7,6 +7,11 @@
 
 use crate::linalg::sqdist;
 use crate::metrics::Counters;
+use crate::runtime::pool::{SharedSliceMut, WorkerPool};
+
+/// Below this k the parallel build costs more in scheduling than the
+/// `k(k−1)/2` distance evaluations it shares out.
+const PAR_MIN_K: usize = 64;
 
 /// Symmetric inter-centroid distance matrix with row access, plus `s`.
 #[derive(Clone, Debug)]
@@ -37,6 +42,63 @@ impl CcData {
                     s[j2] = dist;
                 }
             }
+        }
+        ctr.centroid += (k * (k - 1) / 2) as u64;
+        CcData { cc, s, k }
+    }
+
+    /// As [`CcData::build`], parallel over centroid rows. Each `(j, j′)`
+    /// pair is evaluated exactly once by the owner of `min(j, j′)` and
+    /// written to both mirror cells; `s(j)` is then a row minimum over
+    /// the completed matrix. Both are element-wise, so the result is
+    /// bit-identical to the serial build at any pool width.
+    pub fn build_pooled(
+        centroids: &[f64],
+        k: usize,
+        d: usize,
+        ctr: &mut Counters,
+        pool: &WorkerPool,
+    ) -> Self {
+        if pool.width() == 1 || k < PAR_MIN_K {
+            return Self::build(centroids, k, d, ctr);
+        }
+        debug_assert_eq!(centroids.len(), k * d);
+        let mut cc = vec![0.0; k * k];
+        {
+            let cells = SharedSliceMut::new(&mut cc);
+            // row j costs k−1−j evaluations: small chunks keep the
+            // triangle balanced under dynamic scheduling
+            pool.for_each_chunk(k, 8, |lo, hi| {
+                for j in lo..hi {
+                    let cj = &centroids[j * d..(j + 1) * d];
+                    for j2 in (j + 1)..k {
+                        let dist = sqdist(cj, &centroids[j2 * d..(j2 + 1) * d]).sqrt();
+                        // sound: cell (a, b) is written only by the chunk
+                        // owning row min(a, b), and each row has one owner
+                        unsafe {
+                            cells.write(j * k + j2, dist);
+                            cells.write(j2 * k + j, dist);
+                        }
+                    }
+                }
+            });
+        }
+        let mut s = vec![f64::INFINITY; k];
+        {
+            let mins = SharedSliceMut::new(&mut s);
+            pool.for_each_chunk(k, 32, |lo, hi| {
+                let dst = unsafe { mins.range(lo, hi) };
+                for (off, out) in dst.iter_mut().enumerate() {
+                    let j = lo + off;
+                    let mut best = f64::INFINITY;
+                    for (j2, &v) in cc[j * k..(j + 1) * k].iter().enumerate() {
+                        if j2 != j && v < best {
+                            best = v;
+                        }
+                    }
+                    *out = best;
+                }
+            });
         }
         ctr.centroid += (k * (k - 1) / 2) as u64;
         CcData { cc, s, k }
@@ -93,5 +155,25 @@ mod tests {
         let cc = CcData::build(&[0.0, 3.0, 1.0, 1.0], 2, 2, &mut ctr);
         assert_eq!(cc.get(0, 0), 0.0);
         assert_eq!(cc.get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn pooled_build_is_bit_identical_to_serial() {
+        // k ≥ PAR_MIN_K so the parallel path actually runs
+        let k = 80;
+        let d = 3;
+        let centroids: Vec<f64> = (0..k * d)
+            .map(|i| ((i * 2654435761usize % 1000) as f64) * 0.01)
+            .collect();
+        let mut ctr_a = Counters::default();
+        let want = CcData::build(&centroids, k, d, &mut ctr_a);
+        for threads in [2, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut ctr_b = Counters::default();
+            let got = CcData::build_pooled(&centroids, k, d, &mut ctr_b, &pool);
+            assert_eq!(got.cc, want.cc, "threads={threads}");
+            assert_eq!(got.s, want.s, "threads={threads}");
+            assert_eq!(ctr_b.centroid, ctr_a.centroid);
+        }
     }
 }

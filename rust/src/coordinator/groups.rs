@@ -9,6 +9,7 @@
 use crate::linalg::sqdist;
 use crate::metrics::Counters;
 use crate::rng::Rng;
+use crate::runtime::pool::{SharedSliceMut, WorkerPool};
 
 /// Fixed cluster grouping + per-round group displacement maxima.
 #[derive(Clone, Debug)]
@@ -97,6 +98,28 @@ impl GroupData {
                 .map(|&j| p[j as usize])
                 .fold(0.0, f64::max);
         }
+    }
+
+    /// As [`GroupData::refresh`], parallel over groups. Each `q(f)` is an
+    /// independent max over that group's members, so the result is
+    /// bit-identical at any pool width.
+    pub fn refresh_pooled(&mut self, p: &[f64], pool: &WorkerPool) {
+        let g = self.members.len();
+        if pool.width() == 1 || g < 16 {
+            self.refresh(p);
+            return;
+        }
+        let members = &self.members;
+        let q = SharedSliceMut::new(&mut self.q);
+        pool.for_each_chunk(g, 4, |lo, hi| {
+            let dst = unsafe { q.range(lo, hi) };
+            for (off, out) in dst.iter_mut().enumerate() {
+                *out = members[lo + off]
+                    .iter()
+                    .map(|&j| p[j as usize])
+                    .fold(0.0, f64::max);
+            }
+        });
     }
 
     /// Number of groups.

@@ -13,6 +13,7 @@
 
 use crate::linalg::sqdist;
 use crate::metrics::Counters;
+use crate::runtime::pool::{SharedSliceMut, WorkerPool};
 
 /// Per-round view of the history: `P(j,t)` for every epoch round `t`,
 /// plus the maxima the exp-ns / syin-ns lower bounds need.
@@ -124,6 +125,18 @@ impl HistoryStore {
     /// Advance to a new assignment round with updated centroids.
     /// Performs the sn-like reset when the epoch is full.
     pub fn advance(&mut self, centroids: &[f64], ctr: &mut Counters) -> HistoryRound {
+        self.advance_pooled(centroids, ctr, &WorkerPool::serial())
+    }
+
+    /// As [`HistoryStore::advance`], building the `P(j,t)` table and its
+    /// maxima in parallel over epoch rounds `t` on the pool. Rows are
+    /// independent, so the result is bit-identical at any pool width.
+    pub fn advance_pooled(
+        &mut self,
+        centroids: &[f64],
+        ctr: &mut Counters,
+        pool: &WorkerPool,
+    ) -> HistoryRound {
         debug_assert_eq!(centroids.len(), self.k * self.d);
         let fold = if self.len >= self.cap {
             // Fold previous epoch against the *current* centroids. The new
@@ -134,7 +147,7 @@ impl HistoryStore {
             // as loose.
             self.snaps.extend_from_slice(centroids);
             self.len += 1;
-            let fold = self.epoch_for(centroids, ctr);
+            let fold = self.epoch_for_pooled(centroids, ctr, pool);
             self.snaps.clear();
             self.snaps.extend_from_slice(centroids);
             self.snaps.extend_from_slice(centroids);
@@ -146,7 +159,7 @@ impl HistoryStore {
             None
         };
         HistoryRound {
-            epoch: self.epoch_for(centroids, ctr),
+            epoch: self.epoch_for_pooled(centroids, ctr, pool),
             fold,
         }
     }
@@ -163,51 +176,68 @@ impl HistoryStore {
 
     /// Build the Epoch table (`P(j,t)` + maxima) vs `current` centroids.
     fn epoch_for(&self, current: &[f64], ctr: &mut Counters) -> Epoch {
+        self.epoch_for_pooled(current, ctr, &WorkerPool::serial())
+    }
+
+    /// Build the Epoch table in parallel over the epoch rounds `t`: each
+    /// round's `P(·,t)` row, maxima, and group maxima are independent of
+    /// every other round's, so all writes are disjoint and the result is
+    /// bit-identical at any pool width.
+    fn epoch_for_pooled(&self, current: &[f64], ctr: &mut Counters, pool: &WorkerPool) -> Epoch {
         let (k, d, len) = (self.k, self.d, self.len);
+        let g = self.g;
         let mut p_to = vec![0.0; len * k];
-        for t in 0..len.saturating_sub(1) {
-            let snap = &self.snaps[t * k * d..(t + 1) * k * d];
-            for j in 0..k {
-                p_to[t * k + j] =
-                    sqdist(&snap[j * d..(j + 1) * d], &current[j * d..(j + 1) * d]).sqrt();
-            }
-            ctr.displacement += k as u64;
-        }
-        // last row is the current round: all zeros already
         let mut max1 = vec![0.0; len];
         let mut arg1 = vec![0u32; len];
         let mut max2 = vec![0.0; len];
-        for t in 0..len {
-            let row = &p_to[t * k..(t + 1) * k];
-            let (mut m1, mut a1, mut m2) = (f64::NEG_INFINITY, 0u32, f64::NEG_INFINITY);
-            for (j, &v) in row.iter().enumerate() {
-                if v > m1 {
-                    m2 = m1;
-                    m1 = v;
-                    a1 = j as u32;
-                } else if v > m2 {
-                    m2 = v;
-                }
-            }
-            max1[t] = m1.max(0.0);
-            arg1[t] = a1;
-            max2[t] = m2.max(0.0);
-        }
-        let gmax = if self.g > 0 {
-            let mut gm = vec![0.0; len * self.g];
-            for t in 0..len {
-                for j in 0..k {
-                    let f = self.group_of[j] as usize;
-                    let v = p_to[t * k + j];
-                    if v > gm[t * self.g + f] {
-                        gm[t * self.g + f] = v;
+        let mut gmax = vec![0.0; len * g];
+        {
+            let p_sh = SharedSliceMut::new(&mut p_to);
+            let m1_sh = SharedSliceMut::new(&mut max1);
+            let a1_sh = SharedSliceMut::new(&mut arg1);
+            let m2_sh = SharedSliceMut::new(&mut max2);
+            let gm_sh = SharedSliceMut::new(&mut gmax);
+            pool.for_each_chunk(len, 4, |lo, hi| {
+                let rows = unsafe { p_sh.range(lo * k, hi * k) };
+                for t in lo..hi {
+                    let row = &mut rows[(t - lo) * k..(t - lo + 1) * k];
+                    if t < len - 1 {
+                        let snap = &self.snaps[t * k * d..(t + 1) * k * d];
+                        for (j, pv) in row.iter_mut().enumerate() {
+                            *pv = sqdist(&snap[j * d..(j + 1) * d], &current[j * d..(j + 1) * d])
+                                .sqrt();
+                        }
+                    }
+                    // last row is the current round: all zeros already
+                    let (mut m1, mut a1, mut m2) = (f64::NEG_INFINITY, 0u32, f64::NEG_INFINITY);
+                    for (j, &v) in row.iter().enumerate() {
+                        if v > m1 {
+                            m2 = m1;
+                            m1 = v;
+                            a1 = j as u32;
+                        } else if v > m2 {
+                            m2 = v;
+                        }
+                    }
+                    // sound: each t is handled by exactly one chunk
+                    unsafe {
+                        m1_sh.write(t, m1.max(0.0));
+                        a1_sh.write(t, a1);
+                        m2_sh.write(t, m2.max(0.0));
+                    }
+                    if g > 0 {
+                        let grow = unsafe { gm_sh.range(t * g, (t + 1) * g) };
+                        for (j, &v) in row.iter().enumerate() {
+                            let f = self.group_of[j] as usize;
+                            if v > grow[f] {
+                                grow[f] = v;
+                            }
+                        }
                     }
                 }
-            }
-            gm
-        } else {
-            Vec::new()
-        };
+            });
+        }
+        ctr.displacement += (len.saturating_sub(1) * k) as u64;
         Epoch {
             len,
             p_to,
@@ -215,7 +245,7 @@ impl HistoryStore {
             arg1,
             max2,
             gmax,
-            g: self.g,
+            g,
             k,
         }
     }

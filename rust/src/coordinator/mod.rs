@@ -1,5 +1,31 @@
 //! The coordination layer: per-round centroid-side structures, the
 //! update step, thread-sharded execution, and the round loop.
+//!
+//! ## Parallel architecture
+//!
+//! Every phase of a round runs on one persistent
+//! [`WorkerPool`](crate::runtime::pool::WorkerPool) owned by the
+//! [`Engine`] (spawned once, parked between dispatches):
+//!
+//! * **assignment scan** — [`parallel`] shards samples contiguously, one
+//!   algorithm instance per shard; counters and moved lists are merged
+//!   in shard order;
+//! * **update step** — [`update`] folds per-chunk partial centroid sums
+//!   in chunk order, with chunk geometry a function of the item count
+//!   only;
+//! * **centroid-side builds** — [`round_ctx`] shards `p(j)`/norms,
+//!   [`ccdist`] the `k(k−1)/2` matrix, [`annuli`] the per-centroid
+//!   partial sorts, [`groups`] the `q(f)` maxima and [`history`] the
+//!   `P(j,t)` table over centroids (all element-wise disjoint writes).
+//!
+//! ## Determinism guarantee
+//!
+//! Assignments, MSE, and [`Counters`](crate::metrics::Counters) are
+//! bit-identical at every thread count: element-wise parallel work is
+//! split arbitrarily (each element's math is independent of the split),
+//! and every floating-point *reduction* is performed serially in
+//! shard/chunk order with width-independent geometry. The equivalence
+//! suite asserts this for `threads ∈ {1, 2, 8}` across all algorithms.
 
 pub mod annuli;
 pub mod auto;

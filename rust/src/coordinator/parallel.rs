@@ -1,17 +1,25 @@
-//! Thread-sharded execution of the assignment step.
+//! Thread-sharded execution of the assignment step — a thin façade over
+//! the persistent [`WorkerPool`].
 //!
-//! Samples are processed independently (the paper's §4.2 parallelisation),
-//! so the coordinator splits them into contiguous shards, one algorithm
-//! instance per shard, and runs every shard's round concurrently with
-//! scoped threads. Results (counters + moved lists) are merged in shard
-//! order, keeping the run bit-deterministic regardless of thread count.
+//! Samples are processed independently (the paper's §4.2
+//! parallelisation): the coordinator splits them into contiguous shards,
+//! one algorithm instance per shard, and dispatches every shard's round
+//! onto the pool. No threads are spawned here — the pool outlives the
+//! round loop and is merely woken. Results (counters + moved lists) are
+//! merged in shard order, keeping the run bit-deterministic regardless
+//! of thread count.
 
 use crate::algorithms::common::{AssignStep, Moved, SharedRound};
 use crate::metrics::Counters;
+use crate::runtime::pool::WorkerPool;
 
 /// Split `n` samples into `w` contiguous, balanced `(lo, len)` shards.
+/// An empty dataset has no shards.
 pub fn make_shards(n: usize, w: usize) -> Vec<(usize, usize)> {
-    let w = w.max(1).min(n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    let w = w.max(1).min(n);
     let base = n / w;
     let extra = n % w;
     let mut out = Vec::with_capacity(w);
@@ -24,10 +32,20 @@ pub fn make_shards(n: usize, w: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// One shard's slice of the round: its algorithm instance, its window of
+/// the assignment array, and its private outputs.
+struct ShardRun<'s> {
+    alg: &'s mut Box<dyn AssignStep>,
+    a: &'s mut [u32],
+    ctr: Counters,
+    moved: Vec<Moved>,
+}
+
 /// Run one assignment round (or the initial assignment when
-/// `init == true`) across all shards, in parallel when there is more
-/// than one. Returns merged counters and moves (ascending sample order).
+/// `init == true`) across all shards on the pool. Returns merged
+/// counters and moves (ascending sample order).
 pub fn run_shards(
+    pool: &WorkerPool,
     algs: &mut [Box<dyn AssignStep>],
     shards: &[(usize, usize)],
     a: &mut [u32],
@@ -35,52 +53,33 @@ pub fn run_shards(
     init: bool,
 ) -> (Counters, Vec<Moved>) {
     debug_assert_eq!(algs.len(), shards.len());
-    if algs.len() == 1 {
-        // fast path: no thread machinery on single-shard runs
-        let mut ctr = Counters::default();
-        let mut moved = Vec::new();
-        if init {
-            algs[0].init(sh, a, &mut ctr);
-        } else {
-            algs[0].round(sh, a, &mut ctr, &mut moved);
-        }
-        return (ctr, moved);
-    }
-
     // split the assignment array to match the shards
-    let mut slices: Vec<&mut [u32]> = Vec::with_capacity(shards.len());
+    let mut tasks: Vec<ShardRun> = Vec::with_capacity(shards.len());
     let mut rest = a;
-    for &(_lo, len) in shards {
+    for (alg, &(_lo, len)) in algs.iter_mut().zip(shards) {
         let (head, tail) = rest.split_at_mut(len);
-        slices.push(head);
+        tasks.push(ShardRun {
+            alg,
+            a: head,
+            ctr: Counters::default(),
+            moved: Vec::new(),
+        });
         rest = tail;
     }
 
-    let results: Vec<(Counters, Vec<Moved>)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = algs
-            .iter_mut()
-            .zip(slices)
-            .map(|(alg, slice)| {
-                scope.spawn(move || {
-                    let mut ctr = Counters::default();
-                    let mut moved = Vec::new();
-                    if init {
-                        alg.init(sh, slice, &mut ctr);
-                    } else {
-                        alg.round(sh, slice, &mut ctr, &mut moved);
-                    }
-                    (ctr, moved)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    pool.run_tasks(&mut tasks, |_, t| {
+        if init {
+            t.alg.init(sh, t.a, &mut t.ctr);
+        } else {
+            t.alg.round(sh, t.a, &mut t.ctr, &mut t.moved);
+        }
     });
 
     let mut ctr = Counters::default();
     let mut moved = Vec::new();
-    for (c, m) in results {
-        ctr.merge(&c);
-        moved.extend(m); // shard order == ascending sample order
+    for t in tasks {
+        ctr.merge(&t.ctr);
+        moved.extend(t.moved); // shard order == ascending sample order
     }
     (ctr, moved)
 }
@@ -112,5 +111,13 @@ mod tests {
     fn more_workers_than_samples_collapses() {
         let shards = make_shards(3, 16);
         assert_eq!(shards.len(), 3);
+    }
+
+    #[test]
+    fn empty_dataset_yields_no_shards() {
+        // regression: n = 0 used to produce a single degenerate (0, 0)
+        // shard, which spawned a worker with nothing to do
+        assert!(make_shards(0, 1).is_empty());
+        assert!(make_shards(0, 8).is_empty());
     }
 }

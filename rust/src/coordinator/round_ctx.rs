@@ -11,8 +11,9 @@ use crate::coordinator::groups::GroupData;
 use crate::coordinator::history::HistoryRound;
 use crate::coordinator::sorted_norms::SortedNorms;
 use crate::data::Dataset;
-use crate::linalg::{sqdist, sqnorms_rows};
+use crate::linalg::{sqdist, sqnorm, sqnorms_rows};
 use crate::metrics::Counters;
+use crate::runtime::pool::{SharedSliceMut, WorkerPool};
 
 /// Centroid-side state for the current round.
 pub struct RoundCtxOwner {
@@ -82,17 +83,35 @@ impl RoundCtxOwner {
     /// Install new centroids, computing `p(j)` and its maxima.
     /// Counts k displacement distances.
     pub fn advance_centroids(&mut self, new: Vec<f64>, d: usize, ctr: &mut Counters) {
+        self.advance_centroids_pooled(new, d, ctr, &WorkerPool::serial());
+    }
+
+    /// As [`RoundCtxOwner::advance_centroids`], computing `p(j)` and the
+    /// centroid norms in parallel over centroids. Per-element math, so
+    /// bit-identical at any pool width; the `p` maxima scan stays serial
+    /// (O(k), and its result feeds every shard).
+    pub fn advance_centroids_pooled(
+        &mut self,
+        new: Vec<f64>,
+        d: usize,
+        ctr: &mut Counters,
+        pool: &WorkerPool,
+    ) {
         debug_assert_eq!(new.len(), self.k * d);
-        for j in 0..self.k {
-            self.p[j] = sqdist(
-                &self.centroids[j * d..(j + 1) * d],
-                &new[j * d..(j + 1) * d],
-            )
-            .sqrt();
+        {
+            let old = &self.centroids;
+            let p = SharedSliceMut::new(&mut self.p);
+            pool.for_each_chunk(self.k, 32, |lo, hi| {
+                let dst = unsafe { p.range(lo, hi) };
+                for (off, pv) in dst.iter_mut().enumerate() {
+                    let j = lo + off;
+                    *pv = sqdist(&old[j * d..(j + 1) * d], &new[j * d..(j + 1) * d]).sqrt();
+                }
+            });
         }
         ctr.displacement += self.k as u64;
         self.centroids = new;
-        self.cnorms = sqnorms_rows(&self.centroids, d);
+        self.cnorms = sqnorms_rows_pooled(&self.centroids, d, pool);
         let (mut m1, mut a1, mut m2) = (f64::NEG_INFINITY, 0usize, f64::NEG_INFINITY);
         for (j, &v) in self.p.iter().enumerate() {
             if v > m1 {
@@ -109,14 +128,15 @@ impl RoundCtxOwner {
         self.round += 1;
     }
 
-    /// Rebuild the optional per-round structures per `req`.
-    pub fn rebuild(&mut self, req: &Requirements, d: usize, ctr: &mut Counters) {
+    /// Rebuild the optional per-round structures per `req`, sharding
+    /// each build over the pool.
+    pub fn rebuild(&mut self, req: &Requirements, d: usize, ctr: &mut Counters, pool: &WorkerPool) {
         if req.cc {
-            let cc = CcData::build(&self.centroids, self.k, d, ctr);
+            let cc = CcData::build_pooled(&self.centroids, self.k, d, ctr, pool);
             if req.annuli {
                 // reuse last round's buffers
                 let mut ann = self.annuli.take().unwrap_or_else(Annuli::empty);
-                ann.build_into_fast(&cc);
+                ann.build_into_fast_pooled(&cc, pool);
                 self.annuli = Some(ann);
             }
             self.cc = Some(cc);
@@ -126,7 +146,7 @@ impl RoundCtxOwner {
         }
         if req.groups {
             if let Some(g) = self.groups.as_mut() {
-                g.refresh(&self.p);
+                g.refresh_pooled(&self.p, pool);
             }
         }
     }
@@ -150,6 +170,27 @@ impl RoundCtxOwner {
             history: self.history.as_ref(),
         }
     }
+}
+
+/// `‖row‖²` per row, sharded over the pool (element-wise, so
+/// bit-identical to [`sqnorms_rows`] at any width).
+fn sqnorms_rows_pooled(rows: &[f64], d: usize, pool: &WorkerPool) -> Vec<f64> {
+    if pool.width() == 1 {
+        return sqnorms_rows(rows, d);
+    }
+    let m = rows.len() / d;
+    let mut out = vec![0.0; m];
+    {
+        let cells = SharedSliceMut::new(&mut out);
+        pool.for_each_chunk(m, 64, |lo, hi| {
+            let dst = unsafe { cells.range(lo, hi) };
+            for (off, nv) in dst.iter_mut().enumerate() {
+                let i = lo + off;
+                *nv = sqnorm(&rows[i * d..(i + 1) * d]);
+            }
+        });
+    }
+    out
 }
 
 #[cfg(test)]
@@ -182,10 +223,30 @@ mod tests {
             sorted_norms: true,
             ..Default::default()
         };
-        ctx.rebuild(&req, 3, &mut ctr);
+        ctx.rebuild(&req, 3, &mut ctr, &WorkerPool::serial());
         assert!(ctx.cc.is_some());
         assert!(ctx.annuli.is_some());
         assert!(ctx.sorted_norms.is_some());
         assert!(ctr.centroid > 0);
+    }
+
+    #[test]
+    fn pooled_advance_matches_serial() {
+        let k = 70;
+        let d = 4;
+        let old: Vec<f64> = (0..k * d).map(|i| (i as f64 * 0.37).sin()).collect();
+        let new: Vec<f64> = (0..k * d).map(|i| (i as f64 * 0.91).cos()).collect();
+        let mut want = RoundCtxOwner::new(old.clone(), k, d);
+        want.advance_centroids(new.clone(), d, &mut Counters::default());
+        for threads in [2, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut got = RoundCtxOwner::new(old.clone(), k, d);
+            got.advance_centroids_pooled(new.clone(), d, &mut Counters::default(), &pool);
+            assert_eq!(got.p, want.p, "threads={threads}");
+            assert_eq!(got.cnorms, want.cnorms, "threads={threads}");
+            assert_eq!(got.p_max, want.p_max);
+            assert_eq!(got.p_max2, want.p_max2);
+            assert_eq!(got.p_argmax, want.p_argmax);
+        }
     }
 }

@@ -1,5 +1,11 @@
 //! The round loop: [`Engine`] (stepwise, inspectable) and [`Runner`]
 //! (run-to-convergence with limits and telemetry).
+//!
+//! The engine owns a persistent [`WorkerPool`] sized from the config's
+//! (resolved) thread count; every phase of a round — assignment scan,
+//! delta centroid update, and the centroid-side rebuilds — dispatches
+//! onto it, and per-phase wall time is accumulated into
+//! [`PhaseTimes`] for the run report.
 
 use std::time::{Duration, Instant};
 
@@ -13,8 +19,9 @@ use crate::coordinator::round_ctx::RoundCtxOwner;
 use crate::coordinator::update::UpdateState;
 use crate::data::Dataset;
 use crate::error::Result;
-use crate::metrics::{Counters, RunReport};
+use crate::metrics::{Counters, PhaseTimes, RunReport};
 use crate::rng::Rng;
+use crate::runtime::pool::WorkerPool;
 
 /// Factory signature: `(lo, len, k, g) → shard state`.
 pub type ShardFactory<'f> = dyn Fn(usize, usize, usize, usize) -> Box<dyn AssignStep> + 'f;
@@ -24,6 +31,7 @@ pub type ShardFactory<'f> = dyn Fn(usize, usize, usize, usize) -> Box<dyn Assign
 pub struct Engine<'d> {
     data: &'d Dataset,
     k: usize,
+    pool: WorkerPool,
     algs: Vec<Box<dyn AssignStep>>,
     shards: Vec<(usize, usize)>,
     a: Vec<u32>,
@@ -32,6 +40,7 @@ pub struct Engine<'d> {
     history: Option<HistoryStore>,
     req: Requirements,
     counters: Counters,
+    phases: PhaseTimes,
     converged: bool,
     rounds: usize,
     name: String,
@@ -65,10 +74,14 @@ impl<'d> Engine<'d> {
         drop(probe);
 
         let mut counters = Counters::default();
+        let mut phases = PhaseTimes::default();
         let mut rng = Rng::new(cfg.seed);
         let centroids = cfg.init.centroids(data, k, &mut rng, &mut counters);
 
-        let shards = make_shards(n, cfg.threads);
+        // one persistent pool per engine; parked between dispatches
+        let threads = cfg.resolved_threads();
+        let pool = WorkerPool::new(threads);
+        let shards = make_shards(n, threads);
         let mut algs: Vec<Box<dyn AssignStep>> = shards
             .iter()
             .map(|&(lo, len)| factory(lo, len, k, g))
@@ -98,15 +111,20 @@ impl<'d> Engine<'d> {
 
         // round 0: initial full assignment with tight bounds
         let mut a = vec![0u32; n];
+        let t_scan = Instant::now();
         let sh = ctx.shared(data);
-        let (ctr, _) = run_shards(&mut algs, &shards, &mut a, &sh, true);
+        let (ctr, _) = run_shards(&pool, &mut algs, &shards, &mut a, &sh, true);
         drop(sh);
+        phases.scan += t_scan.elapsed();
         counters.merge(&ctr);
-        let update = UpdateState::from_assignments(data, &a, k);
+        let t_update = Instant::now();
+        let update = UpdateState::from_assignments_pooled(data, &a, k, &pool);
+        phases.update += t_update.elapsed();
 
         Ok(Engine {
             data,
             k,
+            pool,
             algs,
             shards,
             a,
@@ -115,6 +133,7 @@ impl<'d> Engine<'d> {
             history,
             req,
             counters,
+            phases,
             converged: false,
             rounds: 0,
             name,
@@ -130,23 +149,44 @@ impl<'d> Engine<'d> {
         }
         let d = self.data.d();
         // update step
-        let new_centroids = self.update.centroids(&self.ctx.centroids, d);
+        let t_update = Instant::now();
+        let new_centroids = self
+            .update
+            .centroids_pooled(&self.ctx.centroids, d, &self.pool);
+        self.phases.update += t_update.elapsed();
+        // centroid-side rebuilds
+        let t_build = Instant::now();
         self.ctx
-            .advance_centroids(new_centroids, d, &mut self.counters);
-        self.ctx.rebuild(&self.req, d, &mut self.counters);
+            .advance_centroids_pooled(new_centroids, d, &mut self.counters, &self.pool);
+        self.ctx
+            .rebuild(&self.req, d, &mut self.counters, &self.pool);
         if let Some(h) = self.history.as_mut() {
-            self.ctx.history = Some(h.advance(&self.ctx.centroids, &mut self.counters));
+            self.ctx.history =
+                Some(h.advance_pooled(&self.ctx.centroids, &mut self.counters, &self.pool));
         }
+        self.phases.build += t_build.elapsed();
         // assignment step
+        let t_scan = Instant::now();
         let sh = self.ctx.shared(self.data);
-        let (ctr, moved) = run_shards(&mut self.algs, &self.shards, &mut self.a, &sh, false);
+        let (ctr, moved) = run_shards(
+            &self.pool,
+            &mut self.algs,
+            &self.shards,
+            &mut self.a,
+            &sh,
+            false,
+        );
         drop(sh);
+        self.phases.scan += t_scan.elapsed();
         self.counters.merge(&ctr);
+        let t_apply = Instant::now();
         if self.req.full_update {
-            self.update = UpdateState::from_assignments(self.data, &self.a, self.k);
+            self.update =
+                UpdateState::from_assignments_pooled(self.data, &self.a, self.k, &self.pool);
         } else {
-            self.update.apply_moves(self.data, &moved);
+            self.update.apply_moves_pooled(self.data, &moved, &self.pool);
         }
+        self.phases.update += t_apply.elapsed();
         self.rounds += 1;
         self.last_moved = moved.len();
         self.converged = moved.is_empty();
@@ -176,6 +216,16 @@ impl<'d> Engine<'d> {
     /// Accumulated distance counters.
     pub fn counters(&self) -> Counters {
         self.counters
+    }
+
+    /// Accumulated per-phase wall times.
+    pub fn phases(&self) -> PhaseTimes {
+        self.phases
+    }
+
+    /// Resolved worker count (the pool's width).
+    pub fn threads(&self) -> usize {
+        self.pool.width()
     }
 
     /// Samples moved in the last round.
@@ -264,6 +314,8 @@ impl Runner {
             converged: engine.converged(),
             mse,
             wall,
+            threads: engine.threads(),
+            phases: engine.phases(),
             counters: engine.counters(),
             round_times,
         };
@@ -327,6 +379,17 @@ mod tests {
             assert_eq!(out1.iterations, out4.iterations, "{alg}");
             assert_eq!(out1.counters.assignment, out4.counters.assignment, "{alg}");
         }
+    }
+
+    #[test]
+    fn phase_telemetry_accumulates() {
+        let ds = blobs(500, 4, 5, 0.05, 3);
+        let cfg = RunConfig::new(Algorithm::ExpNs, 5).seed(1).threads(2);
+        let out = Runner::new(&cfg).run(&ds).unwrap();
+        assert_eq!(out.report.threads, 2);
+        assert!(out.report.phases.total() > Duration::ZERO);
+        // phases are a decomposition of the loop, not more than the wall
+        assert!(out.report.phases.total() <= out.wall + Duration::from_millis(50));
     }
 
     #[test]

@@ -4,9 +4,47 @@
 //! sums change only for the samples whose assignment changed, so the
 //! update is `O(|moved|·d)` instead of `O(N·d)`. Empty clusters keep
 //! their previous centroid (so `p(j)=0`), preserving exactness.
+//!
+//! The `*_pooled` variants shard the work over the persistent
+//! [`WorkerPool`]. Sum reductions use per-chunk partial sums merged in
+//! chunk order, with chunk geometry derived from the item count alone —
+//! never from the pool width — so the resulting centroids are
+//! bit-identical across thread counts.
 
 use crate::algorithms::common::Moved;
 use crate::data::Dataset;
+use crate::runtime::pool::{SharedSliceMut, WorkerPool};
+
+/// Minimum items per reduction chunk: below this, sharding costs more
+/// (zeroed `k×d` partials) than it saves.
+const CHUNK_ITEMS: usize = 4096;
+/// Cap on reduction chunks, bounding partial-buffer memory at
+/// `MAX_CHUNKS · k · d` floats.
+const MAX_CHUNKS: usize = 16;
+
+/// Chunk length for `items` — a function of the item count only, so the
+/// serial/sharded decision and the chunk boundaries (and therefore the
+/// floating-point merge order) are identical at every pool width.
+fn chunk_len(items: usize) -> usize {
+    items.div_ceil(MAX_CHUNKS).max(CHUNK_ITEMS)
+}
+
+/// One chunk's partial contribution to the cluster sums.
+struct Partial {
+    sums: Vec<f64>,
+    counts: Vec<i64>,
+    touched: Vec<bool>,
+}
+
+impl Partial {
+    fn new(k: usize, d: usize) -> Self {
+        Partial {
+            sums: vec![0.0; k * d],
+            counts: vec![0i64; k],
+            touched: vec![false; k],
+        }
+    }
+}
 
 /// Running cluster sums and member counts.
 #[derive(Clone, Debug)]
@@ -19,6 +57,51 @@ pub struct UpdateState {
 impl UpdateState {
     /// Build from a full assignment (used at init and by `full_update`).
     pub fn from_assignments(data: &Dataset, a: &[u32], k: usize) -> Self {
+        Self::from_assignments_pooled(data, a, k, &WorkerPool::serial())
+    }
+
+    /// As [`UpdateState::from_assignments`], sharded over the pool.
+    pub fn from_assignments_pooled(
+        data: &Dataset,
+        a: &[u32],
+        k: usize,
+        pool: &WorkerPool,
+    ) -> Self {
+        let (n, d) = (data.n(), data.d());
+        let clen = chunk_len(n);
+        if n <= clen {
+            return Self::from_assignments_serial(data, a, k);
+        }
+        let nchunks = n.div_ceil(clen);
+        let mut partials: Vec<Partial> = (0..nchunks).map(|_| Partial::new(k, d)).collect();
+        pool.run_tasks(&mut partials, |c, part| {
+            let lo = c * clen;
+            let hi = (lo + clen).min(n);
+            for (i, &j) in a[lo..hi].iter().enumerate() {
+                let j = j as usize;
+                part.counts[j] += 1;
+                let row = data.row(lo + i);
+                let s = &mut part.sums[j * d..(j + 1) * d];
+                for (t, v) in row.iter().enumerate() {
+                    s[t] += v;
+                }
+            }
+        });
+        // merge in chunk order — deterministic at any pool width
+        let mut sums = vec![0.0; k * d];
+        let mut counts = vec![0u64; k];
+        for part in &partials {
+            for (t, v) in part.sums.iter().enumerate() {
+                sums[t] += v;
+            }
+            for (j, c) in part.counts.iter().enumerate() {
+                counts[j] += *c as u64;
+            }
+        }
+        UpdateState { sums, counts, k }
+    }
+
+    fn from_assignments_serial(data: &Dataset, a: &[u32], k: usize) -> Self {
         let d = data.d();
         let mut sums = vec![0.0; k * d];
         let mut counts = vec![0u64; k];
@@ -52,20 +135,84 @@ impl UpdateState {
         }
     }
 
+    /// As [`UpdateState::apply_moves`], sharded over the pool: each chunk
+    /// of the moved list accumulates a private partial delta, and the
+    /// partials are folded into the running sums in chunk order.
+    pub fn apply_moves_pooled(&mut self, data: &Dataset, moved: &[Moved], pool: &WorkerPool) {
+        let d = data.d();
+        let clen = chunk_len(moved.len());
+        if moved.len() <= clen {
+            self.apply_moves(data, moved);
+            return;
+        }
+        let k = self.k;
+        let nchunks = moved.len().div_ceil(clen);
+        let mut partials: Vec<Partial> = (0..nchunks).map(|_| Partial::new(k, d)).collect();
+        pool.run_tasks(&mut partials, |c, part| {
+            let lo = c * clen;
+            let hi = (lo + clen).min(moved.len());
+            for m in &moved[lo..hi] {
+                let (from, to) = (m.from as usize, m.to as usize);
+                let row = data.row(m.i as usize);
+                part.touched[from] = true;
+                part.touched[to] = true;
+                let s = &mut part.sums[from * d..(from + 1) * d];
+                for (t, v) in row.iter().enumerate() {
+                    s[t] -= v;
+                }
+                let s = &mut part.sums[to * d..(to + 1) * d];
+                for (t, v) in row.iter().enumerate() {
+                    s[t] += v;
+                }
+                part.counts[from] -= 1;
+                part.counts[to] += 1;
+            }
+        });
+        // merge touched rows in chunk order — deterministic at any width
+        for part in &partials {
+            for (j, touched) in part.touched.iter().enumerate() {
+                if !touched {
+                    continue;
+                }
+                let dst = &mut self.sums[j * d..(j + 1) * d];
+                let src = &part.sums[j * d..(j + 1) * d];
+                for (t, dv) in dst.iter_mut().enumerate() {
+                    *dv += src[t];
+                }
+                self.counts[j] = (self.counts[j] as i64 + part.counts[j]) as u64;
+            }
+        }
+    }
+
     /// Compute new centroids; empty clusters keep `old`'s position.
     pub fn centroids(&self, old: &[f64], d: usize) -> Vec<f64> {
-        let mut out = vec![0.0; self.k * d];
-        for j in 0..self.k {
-            let dst = &mut out[j * d..(j + 1) * d];
-            if self.counts[j] == 0 {
-                dst.copy_from_slice(&old[j * d..(j + 1) * d]);
-            } else {
-                let inv = 1.0 / self.counts[j] as f64;
-                let src = &self.sums[j * d..(j + 1) * d];
-                for (t, dv) in dst.iter_mut().enumerate() {
-                    *dv = src[t] * inv;
+        self.centroids_pooled(old, d, &WorkerPool::serial())
+    }
+
+    /// As [`UpdateState::centroids`], parallel over centroids. Each row
+    /// is computed independently (no reduction), so the result is
+    /// bit-identical at any pool width.
+    pub fn centroids_pooled(&self, old: &[f64], d: usize, pool: &WorkerPool) -> Vec<f64> {
+        let k = self.k;
+        let mut out = vec![0.0; k * d];
+        {
+            let rows = SharedSliceMut::new(&mut out);
+            pool.for_each_chunk(k, 16, |lo, hi| {
+                // rows [lo, hi) are disjoint across chunks
+                let dst = unsafe { rows.range(lo * d, hi * d) };
+                for (off, row) in dst.chunks_mut(d).enumerate() {
+                    let j = lo + off;
+                    if self.counts[j] == 0 {
+                        row.copy_from_slice(&old[j * d..(j + 1) * d]);
+                    } else {
+                        let inv = 1.0 / self.counts[j] as f64;
+                        let src = &self.sums[j * d..(j + 1) * d];
+                        for (t, dv) in row.iter_mut().enumerate() {
+                            *dv = src[t] * inv;
+                        }
+                    }
                 }
-            }
+            });
         }
         out
     }
@@ -118,5 +265,90 @@ mod tests {
         let st = UpdateState::from_assignments(&ds, &[0, 0, 0, 0], 2);
         let c = st.centroids(&[7.0, 42.0], 1);
         assert_eq!(c[1], 42.0);
+    }
+
+    /// A dataset large enough to force the chunked reduction paths
+    /// (`n > chunk_len(n)`).
+    fn big() -> (Dataset, Vec<u32>, usize) {
+        let k = 7;
+        let n = 3 * CHUNK_ITEMS;
+        let d = 3;
+        let data: Vec<f64> = (0..n * d).map(|i| ((i % 97) as f64) * 0.25 - 3.0).collect();
+        let a: Vec<u32> = (0..n).map(|i| (i % k) as u32).collect();
+        (Dataset::new("big", data, n, d).unwrap(), a, k)
+    }
+
+    #[test]
+    fn pooled_from_assignments_is_width_independent() {
+        let (ds, a, k) = big();
+        let base = UpdateState::from_assignments_pooled(&ds, &a, k, &WorkerPool::serial());
+        for threads in [2, 5, 8] {
+            let pool = WorkerPool::new(threads);
+            let st = UpdateState::from_assignments_pooled(&ds, &a, k, &pool);
+            assert_eq!(st.sums, base.sums, "threads={threads}");
+            assert_eq!(st.counts, base.counts, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pooled_apply_moves_is_width_independent_and_exact() {
+        let (ds, mut a, k) = big();
+        let mut moved = Vec::new();
+        // move every 3rd sample to the next cluster: > chunk_len moves
+        for i in (0..ds.n()).step_by(3) {
+            let from = a[i];
+            let to = (from + 1) % k as u32;
+            moved.push(Moved {
+                i: i as u32,
+                from,
+                to,
+            });
+            a[i] = to;
+        }
+        assert!(moved.len() > CHUNK_ITEMS);
+        // recompute the pre-move state, then delta at several widths
+        let mut base: Option<UpdateState> = None;
+        for threads in [1, 2, 8] {
+            let mut pre = a.clone();
+            for m in &moved {
+                pre[m.i as usize] = m.from;
+            }
+            let mut st = UpdateState::from_assignments(&ds, &pre, k);
+            let pool = WorkerPool::new(threads);
+            st.apply_moves_pooled(&ds, &moved, &pool);
+            let base = base.get_or_insert_with(|| st.clone());
+            assert_eq!(st.sums, base.sums, "threads={threads}");
+            assert_eq!(st.counts, base.counts, "threads={threads}");
+            // and the delta stays close to a fresh recompute
+            let fresh = UpdateState::from_assignments(&ds, &a, k);
+            let old = vec![0.0; k * ds.d()];
+            for (got, want) in st
+                .centroids(&old, ds.d())
+                .iter()
+                .zip(fresh.centroids(&old, ds.d()))
+            {
+                assert!((got - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_centroids_match_serial() {
+        let (ds, a, k) = big();
+        let st = UpdateState::from_assignments(&ds, &a, k);
+        let old = vec![1.0; k * ds.d()];
+        let want = st.centroids(&old, ds.d());
+        for threads in [2, 8] {
+            let pool = WorkerPool::new(threads);
+            assert_eq!(st.centroids_pooled(&old, ds.d(), &pool), want);
+        }
+    }
+
+    #[test]
+    fn chunk_geometry_ignores_width() {
+        // chunk_len depends only on the item count
+        assert_eq!(chunk_len(100), CHUNK_ITEMS);
+        assert_eq!(chunk_len(CHUNK_ITEMS * MAX_CHUNKS), CHUNK_ITEMS);
+        assert!(chunk_len(CHUNK_ITEMS * MAX_CHUNKS * 3) == CHUNK_ITEMS * 3);
     }
 }

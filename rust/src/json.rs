@@ -148,6 +148,10 @@ impl From<&crate::metrics::RunReport> for Json {
             .field("converged", r.converged)
             .field("mse", r.mse)
             .field("wall_secs", r.wall.as_secs_f64())
+            .field("threads", r.threads)
+            .field("scan_secs", r.phases.scan.as_secs_f64())
+            .field("update_secs", r.phases.update.as_secs_f64())
+            .field("build_secs", r.phases.build.as_secs_f64())
             .field("q_a", r.counters.assignment)
             .field("q_centroid", r.counters.centroid)
             .field("q_displacement", r.counters.displacement)
@@ -198,11 +202,15 @@ mod tests {
             converged: true,
             mse: 0.25,
             wall: std::time::Duration::from_millis(1500),
+            threads: 2,
+            phases: Default::default(),
             counters: Default::default(),
             round_times: vec![],
         };
         let s = Json::from(&r).to_string();
         assert!(s.contains(r#""algorithm":"exp""#));
         assert!(s.contains(r#""wall_secs":1.5"#));
+        assert!(s.contains(r#""threads":2"#));
+        assert!(s.contains(r#""scan_secs":0"#));
     }
 }

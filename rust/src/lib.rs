@@ -24,10 +24,27 @@
 //! counters ([`metrics::Counters`]) are first-class outputs and drive the
 //! reproduction of the paper's tables.
 //!
+//! ## Parallel runtime
+//!
+//! Each [`coordinator::Engine`] owns a persistent
+//! [`runtime::pool::WorkerPool`] (spawned once, parked between rounds)
+//! and dispatches *every* phase of a round onto it: the sharded
+//! assignment scan, the delta centroid update, and all centroid-side
+//! per-round builds (inter-centroid matrix, annuli, group maxima, ns
+//! history). Reductions merge in shard/chunk order with geometry
+//! independent of the thread count, so assignments, MSE, and counters
+//! are **bit-identical** for any `threads` setting (including
+//! `threads = auto`, which resolves to the machine's available
+//! parallelism). [`metrics::RunReport`] carries a per-phase wall-time
+//! decomposition (`scan` / `update` / `build`) so multicore speedup can
+//! be attributed.
+//!
 //! The dense-compute hot spot (blocked pairwise distances + top-2
 //! reduction) is additionally available as an AOT-compiled XLA artifact
 //! authored in JAX/Pallas (see `python/compile/`) and executed through the
-//! PJRT C API from [`runtime`] — Python never runs at clustering time.
+//! PJRT C API from [`runtime`] — Python never runs at clustering time
+//! (off by default behind the `xla` feature; the external `xla` crate is
+//! unavailable offline).
 //!
 //! ## Quickstart
 //!

@@ -34,6 +34,29 @@ impl Counters {
     }
 }
 
+/// Wall-time decomposition of the round loop by phase, accumulated
+/// across rounds. Lets `table6_multicore` attribute parallel speedup to
+/// the sample scan vs the coordinator's centroid-side work.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseTimes {
+    /// Assignment scans (the initial full assignment + every round),
+    /// sharded over samples.
+    pub scan: Duration,
+    /// Centroid update: delta apply / full recompute + new centroid
+    /// means.
+    pub update: Duration,
+    /// Centroid-side per-round builds: `p(j)` + norms, the `cc` matrix,
+    /// annuli, group maxima, and the ns history table.
+    pub build: Duration,
+}
+
+impl PhaseTimes {
+    /// Sum of all phases.
+    pub fn total(&self) -> Duration {
+        self.scan + self.update + self.build
+    }
+}
+
 /// Telemetry for one completed clustering run.
 #[derive(Clone, Debug)]
 pub struct RunReport {
@@ -53,6 +76,10 @@ pub struct RunReport {
     pub mse: f64,
     /// Wall time of the clustering loop (excludes data generation).
     pub wall: Duration,
+    /// Worker threads used (resolved, ≥ 1).
+    pub threads: usize,
+    /// Per-phase wall-time decomposition of the round loop.
+    pub phases: PhaseTimes,
     /// Distance-evaluation counters.
     pub counters: Counters,
     /// Wall time per round, if recorded.
@@ -63,7 +90,7 @@ impl RunReport {
     /// Render one compact human-readable line.
     pub fn summary(&self) -> String {
         format!(
-            "{:<10} {:<14} k={:<5} iters={:<5} conv={} mse={:.6} wall={:?} q_a={} q_au={}",
+            "{:<10} {:<14} k={:<5} iters={:<5} conv={} mse={:.6} wall={:?} q_a={} q_au={} thr={} scan={:?} upd={:?} build={:?}",
             self.algorithm,
             self.dataset,
             self.k,
@@ -73,6 +100,10 @@ impl RunReport {
             self.wall,
             self.counters.assignment,
             self.counters.total(),
+            self.threads,
+            self.phases.scan,
+            self.phases.update,
+            self.phases.build,
         )
     }
 }
@@ -117,10 +148,23 @@ mod tests {
             converged: true,
             mse: 0.5,
             wall: Duration::from_millis(10),
+            threads: 4,
+            phases: PhaseTimes::default(),
             counters: Counters::default(),
             round_times: vec![],
         };
         let s = r.summary();
         assert!(s.contains("exp") && s.contains("birch") && s.contains("iters=42"));
+        assert!(s.contains("thr=4"));
+    }
+
+    #[test]
+    fn phase_times_total() {
+        let p = PhaseTimes {
+            scan: Duration::from_millis(5),
+            update: Duration::from_millis(2),
+            build: Duration::from_millis(3),
+        };
+        assert_eq!(p.total(), Duration::from_millis(10));
     }
 }

@@ -1,9 +1,30 @@
-//! PJRT runtime: load AOT-compiled XLA artifacts (authored in JAX/Pallas
-//! at build time, see `python/compile/`) and execute them from the Rust
-//! hot path. Python never runs at clustering time.
+//! The execution runtime.
+//!
+//! [`pool`] is the heart of the crate's parallelism: a persistent,
+//! dependency-free worker pool spawned once per
+//! [`Engine`](crate::coordinator::Engine) and parked between rounds.
+//! The coordinator runs *every* phase of a round on it — the sharded
+//! assignment scan, the delta centroid update, and the per-round
+//! centroid-side builds (`cc` matrix, annuli, group maxima, ns history)
+//! — with deterministic shard-ordered merges, so results are
+//! bit-identical at any thread count.
+//!
+//! The optional `xla` feature adds the PJRT backend: AOT-compiled XLA
+//! artifacts (authored in JAX/Pallas at build time, see
+//! `python/compile/`) executed from the Rust hot path. Python never runs
+//! at clustering time. The feature is off by default because the
+//! external `xla` crate is not available in the offline build (see
+//! `rust/Cargo.toml`).
 
+pub mod pool;
+
+#[cfg(feature = "xla")]
 pub mod backend;
+#[cfg(feature = "xla")]
 pub mod pjrt;
 
+#[cfg(feature = "xla")]
 pub use backend::{ArtifactSpec, XlaAssignBackend};
+#[cfg(feature = "xla")]
 pub use pjrt::PjrtRuntime;
+pub use pool::{SharedSliceMut, WorkerPool};

@@ -1,0 +1,444 @@
+//! A persistent, dependency-free worker pool.
+//!
+//! Spawned once per [`Engine`](crate::coordinator::Engine) and parked
+//! between rounds, the pool replaces the seed's per-round
+//! `thread::scope` spawning: dispatching a round costs one mutex +
+//! condvar broadcast instead of `T−1` OS thread creations, which is what
+//! lets the *whole* round — assignment scan, delta update, and every
+//! centroid-side build — run on the same threads.
+//!
+//! ## Determinism contract
+//!
+//! Every helper here preserves bit-identical results across pool widths:
+//!
+//! * [`WorkerPool::for_each_chunk`] and [`WorkerPool::run_tasks`] hand
+//!   out work dynamically, but each item is processed exactly once with
+//!   math that does not depend on which worker ran it — callers only use
+//!   them for element-wise (non-reducing) writes or per-task state.
+//! * Reductions (counter merges, partial centroid sums) are performed by
+//!   the *callers*, serially, in shard/chunk order, with chunk geometry
+//!   derived from the item count alone — never from the pool width.
+//!
+//! The closure handed to [`WorkerPool::broadcast`] is lifetime-erased
+//! while it runs on the workers; soundness rests on `broadcast` not
+//! returning until every worker has finished the call (and on waiting
+//! out the workers even when the caller's own share panics).
+
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// The type-erased closure workers execute; the argument is the worker
+/// index in `0..width` (0 is the caller).
+type Task = dyn Fn(usize) + Sync;
+
+/// Dispatch state shared between the caller and the workers.
+struct Slot {
+    /// Bumped to publish a new job; workers compare against their last
+    /// seen value, so spurious condvar wakeups are harmless.
+    epoch: u64,
+    /// The current job (present iff a broadcast is in flight).
+    job: Option<&'static Task>,
+    /// Workers still executing the current job.
+    active: usize,
+    /// A worker's share of the job panicked.
+    panicked: bool,
+    /// Pool is being dropped.
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    work: Condvar,
+    done: Condvar,
+}
+
+/// Persistent worker pool of `width` participants: `width − 1` parked OS
+/// threads plus the calling thread, which always executes share 0.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serialises dispatches: `broadcast` is callable through `&self`
+    /// (the pool is `Sync`), so without this gate two threads could
+    /// clobber the single job slot mid-flight — which would break the
+    /// lifetime-erasure safety argument, not just determinism.
+    gate: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads.max(1)` participants (the caller counts
+    /// as one, so `threads == 1` spawns no OS threads at all).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("eakm-pool-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            gate: Mutex::new(()),
+            handles,
+        }
+    }
+
+    /// A width-1 pool: every helper runs inline on the caller. Used by
+    /// the serial convenience wrappers; costs one `Arc` allocation and
+    /// spawns nothing.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Number of participants (worker threads + the caller).
+    pub fn width(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Run `f(w)` once per participant `w ∈ 0..width`, concurrently, and
+    /// return when every call has finished. The caller runs `f(0)`.
+    /// Concurrent broadcasts from different threads are serialised;
+    /// nested broadcasts (calling `broadcast` from inside `f`) deadlock
+    /// and are not supported.
+    pub fn broadcast<F: Fn(usize) + Sync>(&self, f: F) {
+        if self.handles.is_empty() {
+            f(0);
+            return;
+        }
+        // One dispatch at a time; survive poisoning (a panicked
+        // broadcast leaves the slot quiescent — see below).
+        let _gate = self
+            .gate
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        // Erase the closure's lifetime for the job slot. Sound because
+        // this function does not return (or unwind) until every worker
+        // has finished running `task`, so the borrow of `f` stays live
+        // for as long as any worker can observe it.
+        let task: &Task = &f;
+        let task = unsafe { std::mem::transmute::<&Task, &'static Task>(task) };
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            debug_assert_eq!(slot.active, 0, "nested or unfinished broadcast");
+            slot.job = Some(task);
+            slot.active = self.handles.len();
+            slot.epoch += 1;
+            self.shared.work.notify_all();
+        }
+        // The caller is participant 0. Catch a panic so we still wait
+        // out the workers (they may be executing the borrowed closure).
+        let caller = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let mut slot = self.shared.slot.lock().unwrap();
+        while slot.active != 0 {
+            slot = self.shared.done.wait(slot).unwrap();
+        }
+        slot.job = None;
+        let worker_panicked = std::mem::take(&mut slot.panicked);
+        drop(slot);
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("worker thread panicked during broadcast");
+        }
+    }
+
+    /// Process `0..n` as dynamically scheduled `[lo, hi)` chunks of at
+    /// least `min_chunk` elements. Chunks are claimed with an atomic
+    /// counter, so the *partition* of work across workers varies between
+    /// runs — callers must restrict `f` to element-wise writes whose
+    /// value does not depend on the enclosing chunk (see module docs).
+    pub fn for_each_chunk<F>(&self, n: usize, min_chunk: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let width = self.width();
+        if width == 1 || n <= min_chunk {
+            f(0, n);
+            return;
+        }
+        // ~4 chunks per participant: dynamic balancing, low contention.
+        let chunk = min_chunk.max(n / (4 * width)).max(1);
+        let next = AtomicUsize::new(0);
+        self.broadcast(|_w| loop {
+            let lo = next.fetch_add(chunk, Ordering::Relaxed);
+            if lo >= n {
+                break;
+            }
+            f(lo, (lo + chunk).min(n));
+        });
+    }
+
+    /// Run `f(i, &mut tasks[i])` for every task, each exactly once, with
+    /// tasks claimed dynamically by whichever participant is free.
+    pub fn run_tasks<T, F>(&self, tasks: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        match tasks {
+            [] => {}
+            [one] => f(0, one),
+            many => {
+                if self.handles.is_empty() {
+                    for (i, t) in many.iter_mut().enumerate() {
+                        f(i, t);
+                    }
+                    return;
+                }
+                let list = SharedSliceMut::new(many);
+                let next = AtomicUsize::new(0);
+                self.broadcast(|_w| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= list.len() {
+                        break;
+                    }
+                    // Sound: the atomic hands each index to exactly one
+                    // participant.
+                    let task = unsafe { &mut list.range(i, i + 1)[0] };
+                    f(i, task);
+                });
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, widx: usize) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.shutdown {
+                    return;
+                }
+                if slot.epoch != seen {
+                    seen = slot.epoch;
+                    break slot.job.expect("job published with epoch");
+                }
+                slot = shared.work.wait(slot).unwrap();
+            }
+        };
+        let result = catch_unwind(AssertUnwindSafe(|| task(widx)));
+        let mut slot = shared.slot.lock().unwrap();
+        if result.is_err() {
+            slot.panicked = true;
+        }
+        slot.active -= 1;
+        if slot.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// A `&mut [T]` that can be carved into disjoint pieces from multiple
+/// workers. The *caller* is responsible for disjointness; the type only
+/// centralises the pointer bookkeeping so call sites stay readable.
+pub struct SharedSliceMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+unsafe impl<T: Send> Sync for SharedSliceMut<'_, T> {}
+unsafe impl<T: Send> Send for SharedSliceMut<'_, T> {}
+
+impl<'a, T> SharedSliceMut<'a, T> {
+    /// Wrap a mutable slice; the borrow lasts as long as the wrapper.
+    pub fn new(slice: &'a mut [T]) -> Self {
+        SharedSliceMut {
+            ptr: slice.as_mut_ptr(),
+            len: slice.len(),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Length of the underlying slice.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the underlying slice is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Reborrow `[lo, hi)` mutably.
+    ///
+    /// # Safety
+    /// Concurrent callers must use pairwise-disjoint ranges, and no other
+    /// access to those elements may overlap the returned borrow.
+    pub unsafe fn range(&self, lo: usize, hi: usize) -> &'a mut [T] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// No other participant may access index `i` concurrently.
+    pub unsafe fn write(&self, i: usize, value: T) {
+        debug_assert!(i < self.len);
+        self.ptr.add(i).write(value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn broadcast_runs_every_participant() {
+        for threads in [1, 2, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            let mask = AtomicU64::new(0);
+            pool.broadcast(|w| {
+                mask.fetch_or(1 << w, Ordering::Relaxed);
+            });
+            assert_eq!(mask.load(Ordering::Relaxed), (1u64 << threads) - 1);
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_rounds() {
+        let pool = WorkerPool::new(4);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.broadcast(|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 400);
+    }
+
+    #[test]
+    fn for_each_chunk_covers_exactly_once() {
+        for threads in [1, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            let n = 1013;
+            let mut seen = vec![0u8; n];
+            {
+                let cells = SharedSliceMut::new(&mut seen);
+                pool.for_each_chunk(n, 16, |lo, hi| {
+                    let part = unsafe { cells.range(lo, hi) };
+                    for v in part.iter_mut() {
+                        *v += 1;
+                    }
+                });
+            }
+            assert!(seen.iter().all(|&v| v == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_handles_empty_and_tiny() {
+        let pool = WorkerPool::new(4);
+        pool.for_each_chunk(0, 8, |_, _| panic!("no work expected"));
+        let count = AtomicUsize::new(0);
+        pool.for_each_chunk(3, 64, |lo, hi| {
+            count.fetch_add(hi - lo, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn run_tasks_gives_each_task_to_one_worker() {
+        for threads in [1, 2, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut tasks: Vec<u32> = vec![0; 57];
+            pool.run_tasks(&mut tasks, |i, t| *t += 1 + i as u32);
+            for (i, t) in tasks.iter().enumerate() {
+                assert_eq!(*t, 1 + i as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_broadcasts_are_serialised() {
+        // the pool is Sync: dispatches from several threads must queue,
+        // never clobber each other's job slot
+        let pool = WorkerPool::new(3);
+        let hits = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        pool.broadcast(|_| {
+                            hits.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4 * 50 * 3);
+    }
+
+    #[test]
+    fn width_counts_the_caller() {
+        assert_eq!(WorkerPool::new(0).width(), 1);
+        assert_eq!(WorkerPool::serial().width(), 1);
+        assert_eq!(WorkerPool::new(5).width(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker thread panicked")]
+    fn worker_panic_propagates_to_caller() {
+        let pool = WorkerPool::new(2);
+        pool.broadcast(|w| {
+            if w == 1 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn pool_survives_a_panicked_broadcast() {
+        let pool = WorkerPool::new(2);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            pool.broadcast(|w| {
+                if w == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(outcome.is_err());
+        let hits = AtomicUsize::new(0);
+        pool.broadcast(|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+    }
+}

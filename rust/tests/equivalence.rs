@@ -119,3 +119,51 @@ fn d_equals_one() {
     let ds = Dataset::new("line", data, 200, 1).unwrap();
     check_all(&ds, 8, 4);
 }
+
+/// The pool runtime's determinism guarantee: assignments, MSE, and the
+/// distance counters must be *identical* — MSE to the bit — at every
+/// thread count, for every algorithm.
+#[test]
+fn cross_thread_determinism_all_algorithms() {
+    use eakm::data::synth::blobs;
+    let ds = blobs(800, 5, 10, 0.25, 11);
+    let k = 10;
+    for alg in Algorithm::ALL {
+        let base = Runner::new(&RunConfig::new(alg, k).seed(6).threads(1))
+            .run(&ds)
+            .unwrap();
+        for threads in [2, 8] {
+            let out = Runner::new(&RunConfig::new(alg, k).seed(6).threads(threads))
+                .run(&ds)
+                .unwrap();
+            assert_eq!(out.assignments, base.assignments, "{alg} @ {threads}T");
+            assert_eq!(out.iterations, base.iterations, "{alg} @ {threads}T");
+            assert_eq!(out.counters, base.counters, "{alg} @ {threads}T");
+            assert_eq!(
+                out.mse.to_bits(),
+                base.mse.to_bits(),
+                "{alg} @ {threads}T: mse not bit-identical"
+            );
+        }
+    }
+}
+
+/// Same guarantee on a dataset large enough to force the *chunked*
+/// partial-sum reduction paths in the update step (n and the early-round
+/// move counts both exceed one reduction chunk).
+#[test]
+fn cross_thread_determinism_chunked_update_paths() {
+    use eakm::data::synth::blobs;
+    let ds = blobs(6_000, 4, 16, 0.6, 13);
+    let k = 16;
+    for alg in [Algorithm::Sta, Algorithm::ExpNs, Algorithm::SyinNs] {
+        let cfg = |t: usize| RunConfig::new(alg, k).seed(2).threads(t).max_iters(40);
+        let base = Runner::new(&cfg(1)).run(&ds).unwrap();
+        for threads in [2, 8] {
+            let out = Runner::new(&cfg(threads)).run(&ds).unwrap();
+            assert_eq!(out.assignments, base.assignments, "{alg} @ {threads}T");
+            assert_eq!(out.counters, base.counters, "{alg} @ {threads}T");
+            assert_eq!(out.mse.to_bits(), base.mse.to_bits(), "{alg} @ {threads}T");
+        }
+    }
+}

@@ -2,7 +2,10 @@
 //! through PJRT, must agree with the native Rust distance path — this is
 //! the three-layer composition check (L1 Pallas → L2 JAX → HLO → L3 Rust).
 //!
-//! Requires `make artifacts`; tests fail with a clear message otherwise.
+//! Requires `make artifacts` and the `xla` feature (the external `xla`
+//! crate is not available in the offline build); tests fail with a clear
+//! message otherwise.
+#![cfg(feature = "xla")]
 
 use std::path::PathBuf;
 
