@@ -1,5 +1,8 @@
-//! Quickstart: cluster a synthetic dataset with the paper's best
-//! low-dimensional algorithm (Exponion + ns-bounds) and print the report.
+//! Quickstart: the fit/predict service API on a shared runtime.
+//!
+//! One [`Runtime`] owns the worker pool for the whole process; `Kmeans`
+//! fits an owned `FittedModel`; the model answers `predict` for new
+//! points on the same pool.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
@@ -8,28 +11,54 @@
 use eakm::prelude::*;
 
 fn main() {
+    // one pool for every fit and predict in this process
+    let rt = Runtime::new(4);
+
     // 20k samples, 8-D, 40 latent clusters
     let data = eakm::data::synth::blobs(20_000, 8, 40, 0.08, 42);
 
-    let cfg = RunConfig::new(Algorithm::ExpNs, 40).seed(7).threads(1);
-    let out = Runner::new(&cfg).run(&data).expect("clustering failed");
+    let model = Kmeans::new(40)
+        .algorithm(Algorithm::ExpNs)
+        .seed(7)
+        .fit(&rt, &data)
+        .expect("clustering failed");
 
-    println!("{}", out.report.summary());
+    let report = model.report();
+    println!("{}", report.summary());
     println!(
         "distance calculations avoided vs sta: {:.1}% ({} vs {})",
-        100.0 * (1.0 - out.counters.total() as f64 / (out.iterations as f64 * 20_000.0 * 40.0)),
-        out.counters.total(),
-        out.iterations * 20_000 * 40,
+        100.0 * (1.0 - report.counters.total() as f64 / (report.iterations as f64 * 20_000.0 * 40.0)),
+        report.counters.total(),
+        report.iterations * 20_000 * 40,
     );
 
-    // the exact same call with the plain standard algorithm gives the
-    // identical clustering — only slower:
-    let sta = Runner::new(&RunConfig::new(Algorithm::Sta, 40).seed(7))
-        .run(&data)
+    // apply the fitted model to points it has never seen — same pool,
+    // nothing new spawned
+    let fresh = eakm::data::synth::blobs(5_000, 8, 40, 0.08, 43);
+    let labels = model.predict(&rt, &fresh).expect("predict failed");
+    println!(
+        "predicted {} new points; first five labels: {:?}",
+        labels.len(),
+        &labels[..5]
+    );
+
+    // exactness: the accelerated fit equals plain Lloyd's from the same
+    // seed — only faster
+    let sta = Kmeans::new(40)
+        .algorithm(Algorithm::Sta)
+        .seed(7)
+        .fit_predict(&rt, &data)
         .expect("sta failed");
-    assert_eq!(sta.assignments, out.assignments);
+    let exp = Kmeans::new(40)
+        .algorithm(Algorithm::ExpNs)
+        .seed(7)
+        .fit_predict(&rt, &data)
+        .expect("exp-ns failed");
+    assert_eq!(sta.1, exp.1);
     println!(
         "exactness check OK: sta and exp-ns agree after {} rounds (sta: {:?}, exp-ns: {:?})",
-        out.iterations, sta.wall, out.wall
+        exp.0.report().iterations,
+        sta.0.report().wall,
+        exp.0.report().wall
     );
 }

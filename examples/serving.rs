@@ -1,0 +1,62 @@
+//! Serving: fit once, predict many — and survive a restart.
+//!
+//! The shape of a clustering service under traffic:
+//!
+//! 1. a startup phase fits (or loads) a `FittedModel`;
+//! 2. a long steady state answers nearest-centroid queries on one
+//!    shared [`Runtime`] — batch `predict` for bulk requests,
+//!    `nearest` for single points;
+//! 3. the model is persisted as JSON, so a restarted process serves
+//!    bit-identical answers without refitting.
+//!
+//! ```sh
+//! cargo run --release --example serving
+//! ```
+
+use eakm::prelude::*;
+
+fn main() {
+    let rt = Runtime::auto();
+    let model_path = std::env::temp_dir().join("eakm-serving-model.json");
+
+    // ── startup: fit once ───────────────────────────────────────────
+    let train = eakm::data::synth::blobs(50_000, 16, 100, 0.05, 1);
+    let model = Kmeans::new(100)
+        .algorithm(Algorithm::Auto) // resolved by dimension
+        .seed(7)
+        .fit(&rt, &train)
+        .expect("fit failed");
+    println!(
+        "fitted: {} (k={}, d={}, iters={}, mse={:.5}, threads={})",
+        model.algorithm(),
+        model.k(),
+        model.d(),
+        model.report().iterations,
+        model.report().mse,
+        rt.threads(),
+    );
+    model.save(&model_path).expect("save failed");
+    println!("persisted → {}", model_path.display());
+
+    // ── steady state: many predict batches on the same runtime ──────
+    let mut served = 0usize;
+    for batch in 0..8 {
+        let queries = eakm::data::synth::blobs(2_000, 16, 100, 0.08, 100 + batch);
+        let labels = model.predict(&rt, &queries).expect("predict failed");
+        served += labels.len();
+    }
+    println!("served {served} batched queries (one pool, zero respawns)");
+
+    // single-point path: no dispatch, no allocation
+    let probe = train.row(0);
+    let (label, dist) = model.nearest(probe);
+    println!("single query → cluster {label} at distance {dist:.4}");
+
+    // ── restart: load and verify bit-identical serving ──────────────
+    let reloaded = FittedModel::load(&model_path).expect("load failed");
+    let queries = eakm::data::synth::blobs(2_000, 16, 100, 0.08, 999);
+    let before = model.predict(&rt, &queries).expect("predict failed");
+    let after = reloaded.predict(&rt, &queries).expect("predict failed");
+    assert_eq!(before, after);
+    println!("restart check OK: loaded model serves identical labels");
+}

@@ -28,3 +28,15 @@ pub fn emit(name: &str, rendered: &str) {
         eprintln!("[written to {}]", path.display());
     }
 }
+
+/// Persist a machine-readable companion (`BENCH_*.json`) next to the
+/// text tables so CI can diff results structurally.
+#[allow(dead_code)] // not every bench harness emits JSON yet
+pub fn emit_json(name: &str, json: &eakm::json::Json) {
+    let path = tables_dir().join(name);
+    if let Err(e) = std::fs::write(&path, json.to_string()) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        eprintln!("[written to {}]", path.display());
+    }
+}

@@ -21,6 +21,7 @@ use eakm::bench_support::{env_scale, TextTable};
 use eakm::config::RunConfig;
 use eakm::coordinator::{RunOutput, Runner};
 use eakm::data::synth::{find, generate};
+use eakm::json::Json;
 use eakm::runtime::pool::WorkerPool;
 
 const THREADS: [usize; 4] = [1, 2, 4, 8];
@@ -145,4 +146,17 @@ fn main() {
     rendered.push('\n');
     rendered.push_str(&d.render());
     common::emit("table6_multicore.txt", &rendered);
+
+    // machine-readable companion: same cells, structurally diffable
+    let bench_json = Json::obj()
+        .field("bench", "table6_multicore")
+        .field("scale", scale)
+        .field("max_iters", cap)
+        .field(
+            "threads",
+            Json::Arr(THREADS.iter().map(|&t| Json::from(t)).collect()),
+        )
+        .field("scaling", t.to_json())
+        .field("dispatch", d.to_json());
+    common::emit_json("BENCH_table6.json", &bench_json);
 }

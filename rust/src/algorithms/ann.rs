@@ -67,8 +67,8 @@ impl AssignStep for Ann {
     ) {
         let lo = self.lo;
         let norms = sh.sorted_norms.expect("ann requires sorted norms");
-        for li in 0..a.len() {
-            let ai = a[li] as usize;
+        for (li, a_li) in a.iter_mut().enumerate() {
+            let ai = *a_li as usize;
             let gi = lo + li;
             // ham's bound update + outer test
             self.u[li] += sh.p[ai];
@@ -112,7 +112,7 @@ impl AssignStep for Ann {
                     from: ai as u32,
                     to: t2.idx1 as u32,
                 });
-                a[li] = t2.idx1 as u32;
+                *a_li = t2.idx1 as u32;
             }
         }
     }

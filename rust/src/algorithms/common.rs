@@ -12,7 +12,7 @@ use crate::coordinator::ccdist::CcData;
 use crate::coordinator::groups::GroupData;
 use crate::coordinator::history::HistoryRound;
 use crate::coordinator::sorted_norms::SortedNorms;
-use crate::data::Dataset;
+use crate::data::DataSource;
 use crate::linalg::{sqdist_batch_block, Top2};
 use crate::metrics::Counters;
 
@@ -54,8 +54,9 @@ pub struct Moved {
 ///
 /// Built once per round by the coordinator and shared by every worker.
 pub struct SharedRound<'a> {
-    /// The dataset (samples + pre-computed squared norms).
-    pub data: &'a Dataset,
+    /// The sample source (rows + pre-computed squared norms), behind the
+    /// [`DataSource`] seam so shard/mini-batch sources plug in.
+    pub data: &'a dyn DataSource,
     /// Number of clusters.
     pub k: usize,
     /// Round index: 0 is the initial full assignment.
@@ -129,8 +130,45 @@ pub trait AssignStep: Send {
     );
 }
 
-/// Block size for the batched initial scan.
+/// Block size for the batched scans.
 const INIT_BLOCK: usize = 128;
+
+/// Blocked squared-distance scan of rows `[lo, hi)` of `data` against
+/// `centroids` (`cnorms.len()` of them): calls `f(i − lo, row)` with
+/// each sample's full `k`-vector of squared distances. Counter-free —
+/// the one shared kernel under both the fit path ([`batch_scan`]) and
+/// the serving path
+/// ([`FittedModel::predict`](crate::model::FittedModel::predict)), so
+/// their outputs are bit-identical by construction.
+pub fn blocked_scan(
+    data: &dyn DataSource,
+    centroids: &[f64],
+    cnorms: &[f64],
+    lo: usize,
+    hi: usize,
+    mut f: impl FnMut(usize, &[f64]),
+) {
+    let d = data.d();
+    let k = cnorms.len();
+    let mut buf = vec![0.0; INIT_BLOCK * k];
+    let mut start = lo;
+    while start < hi {
+        let stop = (start + INIT_BLOCK).min(hi);
+        let m = stop - start;
+        sqdist_batch_block(
+            data.rows(start, m),
+            data.sqnorms_range(start, m),
+            centroids,
+            cnorms,
+            d,
+            &mut buf[..m * k],
+        );
+        for (i, row) in buf[..m * k].chunks_exact(k).enumerate() {
+            f(start - lo + i, row);
+        }
+        start = stop;
+    }
+}
 
 /// Batched full distance scan over the shard `[lo, hi)`: calls
 /// `f(local_i, row)` with the full `k`-vector of squared distances for
@@ -141,29 +179,10 @@ pub fn batch_scan(
     lo: usize,
     hi: usize,
     ctr: &mut Counters,
-    mut f: impl FnMut(usize, &[f64]),
+    f: impl FnMut(usize, &[f64]),
 ) {
-    let d = sh.data.d();
-    let k = sh.k;
-    let mut buf = vec![0.0; INIT_BLOCK * k];
-    let mut start = lo;
-    while start < hi {
-        let stop = (start + INIT_BLOCK).min(hi);
-        let m = stop - start;
-        sqdist_batch_block(
-            &sh.data.raw()[start * d..stop * d],
-            &sh.data.sqnorms()[start..stop],
-            sh.centroids,
-            sh.cnorms,
-            d,
-            &mut buf[..m * k],
-        );
-        for i in 0..m {
-            f(start - lo + i, &buf[i * k..(i + 1) * k]);
-        }
-        start = stop;
-    }
-    ctr.assignment += ((hi - lo) * k) as u64;
+    blocked_scan(sh.data, sh.centroids, sh.cnorms, lo, hi, f);
+    ctr.assignment += ((hi - lo) * sh.k) as u64;
 }
 
 /// Unblocked, per-pair full distance scan — the *naive* counterpart of

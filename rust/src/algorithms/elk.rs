@@ -95,9 +95,9 @@ impl AssignStep for Elk {
         let lo = self.lo;
         let k = self.k;
         let cc = sh.cc.expect("elk requires cc");
-        for li in 0..a.len() {
+        for (li, a_li) in a.iter_mut().enumerate() {
             let gi = lo + li;
-            let a0 = a[li] as usize;
+            let a0 = *a_li as usize;
             let mut ai = a0;
             self.u[li] += sh.p[ai];
             let mut u = self.u[li];
@@ -137,7 +137,7 @@ impl AssignStep for Elk {
                     from: a0 as u32,
                     to: ai as u32,
                 });
-                a[li] = ai as u32;
+                *a_li = ai as u32;
             }
         }
     }

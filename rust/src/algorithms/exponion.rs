@@ -67,8 +67,8 @@ impl AssignStep for Exponion {
     ) {
         let lo = self.lo;
         let annuli = sh.annuli.expect("exp requires annuli");
-        for li in 0..a.len() {
-            let ai = a[li] as usize;
+        for (li, a_li) in a.iter_mut().enumerate() {
+            let ai = *a_li as usize;
             let gi = lo + li;
             // ham's bound update + outer test
             self.u[li] += sh.p[ai];
@@ -100,7 +100,7 @@ impl AssignStep for Exponion {
                     from: ai as u32,
                     to: t2.idx1 as u32,
                 });
-                a[li] = t2.idx1 as u32;
+                *a_li = t2.idx1 as u32;
             }
         }
     }

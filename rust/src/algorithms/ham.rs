@@ -74,8 +74,8 @@ impl AssignStep for Ham {
         moved: &mut Vec<Moved>,
     ) {
         let lo = self.lo;
-        for li in 0..a.len() {
-            let ai = a[li] as usize;
+        for (li, a_li) in a.iter_mut().enumerate() {
+            let ai = *a_li as usize;
             let gi = lo + li;
             let m = self.update_bounds(sh, li, ai);
             if m >= self.u[li] {
@@ -104,7 +104,7 @@ impl AssignStep for Ham {
                     from: ai as u32,
                     to: t2.idx1 as u32,
                 });
-                a[li] = t2.idx1 as u32;
+                *a_li = t2.idx1 as u32;
             }
         }
     }

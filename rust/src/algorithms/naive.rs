@@ -68,8 +68,8 @@ impl AssignStep for NaiveHam {
         moved: &mut Vec<Moved>,
     ) {
         let lo = self.lo;
-        for li in 0..a.len() {
-            let ai = a[li] as usize;
+        for (li, a_li) in a.iter_mut().enumerate() {
+            let ai = *a_li as usize;
             let gi = lo + li;
             self.u[li] += sh.p[ai];
             // the naive O(k) pass an unoptimised implementation performs
@@ -105,7 +105,7 @@ impl AssignStep for NaiveHam {
                     from: ai as u32,
                     to: t2.idx1 as u32,
                 });
-                a[li] = t2.idx1 as u32;
+                *a_li = t2.idx1 as u32;
             }
         }
     }

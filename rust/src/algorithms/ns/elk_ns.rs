@@ -82,9 +82,9 @@ impl AssignStep for ElkNs {
         let h = sh.history.expect("ns variant requires history");
         let ep = &h.epoch;
         let t_now = (ep.len - 1) as u32;
-        for li in 0..a.len() {
+        for (li, a_li) in a.iter_mut().enumerate() {
             let gi = lo + li;
-            let a0 = a[li] as usize;
+            let a0 = *a_li as usize;
             let mut ai = a0;
             let lrow = &mut self.l[li * k..(li + 1) * k];
             let tlrow = &mut self.tl[li * k..(li + 1) * k];
@@ -136,7 +136,7 @@ impl AssignStep for ElkNs {
                     from: a0 as u32,
                     to: ai as u32,
                 });
-                a[li] = ai as u32;
+                *a_li = ai as u32;
             }
         }
     }

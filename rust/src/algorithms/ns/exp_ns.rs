@@ -78,8 +78,8 @@ impl AssignStep for ExpNs {
         let h = sh.history.expect("ns variant requires history");
         let ep = &h.epoch;
         let t_now = (ep.len - 1) as u32;
-        for li in 0..a.len() {
-            let ai = a[li] as usize;
+        for (li, a_li) in a.iter_mut().enumerate() {
+            let ai = *a_li as usize;
             let gi = lo + li;
             if let Some(fold) = &h.fold {
                 self.u[li] += fold.p(ai, self.tu[li] as usize);
@@ -119,7 +119,7 @@ impl AssignStep for ExpNs {
                     from: ai as u32,
                     to: t2.idx1 as u32,
                 });
-                a[li] = t2.idx1 as u32;
+                *a_li = t2.idx1 as u32;
             }
         }
     }

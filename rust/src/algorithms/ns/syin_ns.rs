@@ -98,9 +98,9 @@ impl AssignStep for SyinNs {
         let h = sh.history.expect("ns variant requires history");
         let ep = &h.epoch;
         let t_now = (ep.len - 1) as u32;
-        for li in 0..a.len() {
+        for (li, a_li) in a.iter_mut().enumerate() {
             let gi = lo + li;
-            let a0 = a[li] as usize;
+            let a0 = *a_li as usize;
             let lrow = &mut self.l[li * g..(li + 1) * g];
             let tlrow = &mut self.tl[li * g..(li + 1) * g];
             if let Some(fold) = &h.fold {
@@ -179,7 +179,7 @@ impl AssignStep for SyinNs {
                     from: a0 as u32,
                     to: a_new as u32,
                 });
-                a[li] = a_new as u32;
+                *a_li = a_new as u32;
             }
         }
     }

@@ -70,9 +70,9 @@ impl AssignStep for Selk {
     ) {
         let lo = self.lo;
         let k = self.k;
-        for li in 0..a.len() {
+        for (li, a_li) in a.iter_mut().enumerate() {
             let gi = lo + li;
-            let a0 = a[li] as usize;
+            let a0 = *a_li as usize;
             let mut ai = a0;
             // bound maintenance (eq. 4)
             self.u[li] += sh.p[ai];
@@ -110,7 +110,7 @@ impl AssignStep for Selk {
                     from: a0 as u32,
                     to: ai as u32,
                 });
-                a[li] = ai as u32;
+                *a_li = ai as u32;
             }
         }
     }

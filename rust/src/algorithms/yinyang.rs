@@ -115,9 +115,9 @@ impl AssignStep for Yinyang {
         let lo = self.lo;
         let g = self.g;
         let gd = sh.groups.expect("yinyang requires groups");
-        for li in 0..a.len() {
+        for (li, a_li) in a.iter_mut().enumerate() {
             let gi = lo + li;
-            let a0 = a[li] as usize;
+            let a0 = *a_li as usize;
             // bound maintenance
             self.u[li] += sh.p[a0];
             let lrow = &mut self.l[li * g..(li + 1) * g];
@@ -198,7 +198,7 @@ impl AssignStep for Yinyang {
                     from: a0 as u32,
                     to: a_new as u32,
                 });
-                a[li] = a_new as u32;
+                *a_li = a_new as u32;
             }
         }
     }

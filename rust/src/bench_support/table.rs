@@ -1,4 +1,7 @@
-//! Fixed-width text table rendering matching the paper's table style.
+//! Fixed-width text table rendering matching the paper's table style,
+//! plus a machine-readable JSON form for CI regression diffing.
+
+use crate::json::Json;
 
 /// A simple text table builder.
 #[derive(Clone, Debug, Default)]
@@ -36,6 +39,31 @@ impl TextTable {
         } else {
             format!("{x:.2}")
         }
+    }
+
+    /// The table as machine-readable JSON
+    /// (`{"title", "headers", "rows"}`, every cell the exact rendered
+    /// string) — benches write this next to the text table so perf
+    /// regressions are diffable in CI without parsing the fixed-width
+    /// layout.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("title", self.title.as_str())
+            .field(
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::from(h.as_str())).collect()),
+            )
+            .field(
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|row| {
+                            Json::Arr(row.iter().map(|c| Json::from(c.as_str())).collect())
+                        })
+                        .collect(),
+                ),
+            )
     }
 
     /// Render with aligned columns.
@@ -96,5 +124,19 @@ mod tests {
     fn ratio_formatting() {
         assert_eq!(TextTable::fmt_ratio(0.5), "0.50");
         assert_eq!(TextTable::fmt_ratio(f64::NAN), "-");
+    }
+
+    #[test]
+    fn json_mirrors_the_table() {
+        let mut t = TextTable::new("Table X").headers(&["ds", "qt"]);
+        t.row(vec!["birch".into(), "0.48".into()]);
+        let j = t.to_json();
+        assert_eq!(
+            j.to_string(),
+            r#"{"title":"Table X","headers":["ds","qt"],"rows":[["birch","0.48"]]}"#
+        );
+        // and it parses back
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("title").unwrap().as_str(), Some("Table X"));
     }
 }

@@ -5,6 +5,9 @@
 //! eakm run       --dataset birch --k 100 --algorithm exp-ns [--seed 0]
 //!                [--threads 1] [--scale 0.02] [--max-iters N] [--json]
 //!                [--config file] [--data-file path.csv|.ekb]
+//!                [--save-model model.json]
+//! eakm predict   --model model.json --data-file points.csv
+//!                [--threads T|auto] [--out labels.txt] [--json]
 //! eakm datasets  [--scale 0.02]           # list the 22 paper datasets
 //! eakm validate  --dataset birch --k 50   # all algorithms must agree
 //! eakm grid      [--scale f] [--seeds n] [--k 50,200] [--out dir]
@@ -12,7 +15,7 @@
 //! ```
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use crate::algorithms::Algorithm;
 use crate::bench_support::{env_scale, measure, TextTable};
@@ -23,6 +26,8 @@ use crate::data::{io, Dataset};
 use crate::error::{EakmError, Result};
 use crate::init::InitMethod;
 use crate::json::Json;
+use crate::model::{FittedModel, Kmeans};
+use crate::runtime::Runtime;
 
 /// Entry point: parse args (excluding argv[0]) and run.
 pub fn main(args: &[String]) -> Result<i32> {
@@ -32,6 +37,7 @@ pub fn main(args: &[String]) -> Result<i32> {
     };
     match cmd {
         "run" => cmd_run(&parse_flags(rest)?),
+        "predict" => cmd_predict(&parse_flags(rest)?),
         "datasets" => cmd_datasets(&parse_flags(rest)?),
         "validate" => cmd_validate(&parse_flags(rest)?),
         "grid" => cmd_grid(&parse_flags(rest)?),
@@ -49,7 +55,8 @@ const HELP: &str = "\
 eakm — fast exact k-means with accurate bounds (Newling & Fleuret, ICML 2016)
 
 commands:
-  run        cluster one dataset with one algorithm
+  run        cluster one dataset with one algorithm (fit)
+  predict    assign new points to a saved model's clusters
   datasets   list the 22 paper datasets (synthetic stand-ins)
   validate   run every algorithm and check they agree exactly
   grid       run the full {dataset × k × algorithm} grid (Tables 9/10)
@@ -68,6 +75,13 @@ common flags:
   --max-iters N      round cap
   --init M           random | kmeans++
   --json             emit the report as JSON
+  --save-model PATH  (run) persist the fitted model as JSON
+  --model PATH       (predict) model file written by --save-model
+  --out PATH         (predict) write labels here, one per line
+                     (default: stdout)
+
+predict applies the model to the points as given — no standardisation
+is re-applied, so feed features in the same space the model was fit on.
 ";
 
 type Flags = HashMap<String, String>;
@@ -101,14 +115,20 @@ fn flag_num<T: std::str::FromStr>(flags: &Flags, key: &str) -> Result<Option<T>>
     }
 }
 
-fn load_dataset(flags: &Flags) -> Result<Dataset> {
+/// Load the dataset named by the flags. `standardize` applies the
+/// paper's zero-mean/unit-variance preprocessing to `--data-file` input
+/// (fit path); `predict` passes `false` so points stay in the feature
+/// space the model was fitted on.
+fn load_dataset(flags: &Flags, standardize: bool) -> Result<Dataset> {
     if let Some(path) = flags.get("data-file") {
         let path = PathBuf::from(path);
         let mut ds = match path.extension().and_then(|e| e.to_str()) {
             Some("ekb") => io::load_bin(&path)?,
             _ => io::load_csv(&path)?,
         };
-        ds.standardize();
+        if standardize {
+            ds.standardize();
+        }
         return Ok(ds);
     }
     let name = flags
@@ -118,6 +138,25 @@ fn load_dataset(flags: &Flags) -> Result<Dataset> {
         .ok_or_else(|| EakmError::Config(format!("unknown dataset {name:?} — see `eakm datasets`")))?;
     let scale = flag_num::<f64>(flags, "scale")?.unwrap_or_else(env_scale);
     Ok(generate(&spec, scale, 0x00DA_7A5E))
+}
+
+/// Parse `--threads T|auto` (returns `None` when the flag is absent).
+fn parse_threads(flags: &Flags) -> Result<Option<usize>> {
+    match flags.get("threads") {
+        None => Ok(None),
+        Some(t) if t == "auto" => Ok(Some(crate::config::AUTO_THREADS)),
+        Some(t) => {
+            let n = t
+                .parse::<usize>()
+                .map_err(|_| EakmError::Config(format!("bad --threads: {t:?}")))?;
+            if n == 0 {
+                return Err(EakmError::Config(
+                    "--threads must be ≥ 1, or \"auto\"".into(),
+                ));
+            }
+            Ok(Some(n))
+        }
+    }
 }
 
 fn build_config(flags: &Flags) -> Result<RunConfig> {
@@ -137,20 +176,8 @@ fn build_config(flags: &Flags) -> Result<RunConfig> {
     if let Some(s) = flag_num::<u64>(flags, "seed")? {
         cfg.seed = s;
     }
-    if let Some(t) = flags.get("threads") {
-        cfg.threads = if t == "auto" {
-            crate::config::AUTO_THREADS
-        } else {
-            let n = t
-                .parse::<usize>()
-                .map_err(|_| EakmError::Config(format!("bad --threads: {t:?}")))?;
-            if n == 0 {
-                return Err(EakmError::Config(
-                    "--threads must be ≥ 1, or \"auto\"".into(),
-                ));
-            }
-            n
-        };
+    if let Some(t) = parse_threads(flags)? {
+        cfg.threads = t;
     }
     if let Some(m) = flag_num::<usize>(flags, "max-iters")? {
         cfg.max_iters = m;
@@ -163,13 +190,71 @@ fn build_config(flags: &Flags) -> Result<RunConfig> {
 }
 
 fn cmd_run(flags: &Flags) -> Result<i32> {
-    let data = load_dataset(flags)?;
+    let data = load_dataset(flags, true)?;
     let cfg = build_config(flags)?;
-    let out = Runner::new(&cfg).run(&data)?;
+    let rt = Runtime::new(cfg.resolved_threads());
+    let model = Kmeans::from_config(cfg).fit(&rt, &data)?;
     if flags.contains_key("json") {
-        println!("{}", Json::from(&out.report).to_string());
+        println!("{}", Json::from(model.report()));
     } else {
-        println!("{}", out.report.summary());
+        println!("{}", model.report().summary());
+    }
+    if let Some(path) = flags.get("save-model") {
+        model.save(Path::new(path))?;
+        eprintln!("[model written to {path}]");
+    }
+    Ok(0)
+}
+
+fn cmd_predict(flags: &Flags) -> Result<i32> {
+    let model_path = flags
+        .get("model")
+        .ok_or_else(|| EakmError::Config("--model required (see `eakm run --save-model`)".into()))?;
+    let model = FittedModel::load(Path::new(model_path))?;
+    // points are taken as-is: the model defines the feature space
+    let data = load_dataset(flags, false)?;
+    let rt = Runtime::new(parse_threads(flags)?.unwrap_or(1));
+    let labels = model.predict(&rt, &data)?;
+    let mse = data.mse(model.centroids(), &labels);
+    if flags.contains_key("json") {
+        println!(
+            "{}",
+            Json::obj()
+                .field("model", model_path.as_str())
+                .field("algorithm", model.algorithm())
+                .field("n", data.n())
+                .field("k", model.k())
+                .field("d", model.d())
+                .field("mse", mse)
+                .field(
+                    "assignments",
+                    Json::Arr(labels.iter().map(|&a| Json::from(a as u64)).collect()),
+                )
+        );
+        return Ok(0);
+    }
+    let mut text = String::with_capacity(labels.len() * 4);
+    for a in &labels {
+        text.push_str(&a.to_string());
+        text.push('\n');
+    }
+    match flags.get("out") {
+        Some(path) => {
+            std::fs::write(path, text)?;
+            println!(
+                "predicted {} points into k={} clusters (mse={mse:.6}) → {path}",
+                data.n(),
+                model.k()
+            );
+        }
+        None => {
+            eprintln!(
+                "predicted {} points into k={} clusters (mse={mse:.6})",
+                data.n(),
+                model.k()
+            );
+            print!("{text}");
+        }
     }
     Ok(0)
 }
@@ -196,7 +281,7 @@ fn cmd_datasets(flags: &Flags) -> Result<i32> {
 }
 
 fn cmd_validate(flags: &Flags) -> Result<i32> {
-    let data = load_dataset(flags)?;
+    let data = load_dataset(flags, true)?;
     let k = flag_num::<usize>(flags, "k")?.unwrap_or(50);
     let seed = flag_num::<u64>(flags, "seed")?.unwrap_or(0);
     let mut reference: Option<(usize, f64, Vec<u32>)> = None;
@@ -378,6 +463,60 @@ mod tests {
     #[test]
     fn datasets_lists() {
         assert_eq!(main(&s(&["datasets"])).unwrap(), 0);
+    }
+
+    fn tmpdir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("eakm-cli-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn fit_save_then_predict() {
+        let dir = tmpdir();
+        let model_path = dir.join("model.json");
+        let code = main(&s(&[
+            "run",
+            "--dataset",
+            "birch",
+            "--scale",
+            "0.01",
+            "--k",
+            "8",
+            "--algorithm",
+            "exp-ns",
+            "--save-model",
+            model_path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        // predict the model against a CSV of raw points
+        let points_path = dir.join("points.csv");
+        std::fs::write(&points_path, "0.0,0.5\n1.0,-0.25\n-2.0,3.0\n").unwrap();
+        let labels_path = dir.join("labels.txt");
+        let code = main(&s(&[
+            "predict",
+            "--model",
+            model_path.to_str().unwrap(),
+            "--data-file",
+            points_path.to_str().unwrap(),
+            "--threads",
+            "2",
+            "--out",
+            labels_path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let labels = std::fs::read_to_string(&labels_path).unwrap();
+        assert_eq!(labels.lines().count(), 3);
+        for line in labels.lines() {
+            assert!(line.parse::<u32>().unwrap() < 8);
+        }
+    }
+
+    #[test]
+    fn predict_requires_model_flag() {
+        assert!(main(&s(&["predict", "--data-file", "nope.csv"])).is_err());
     }
 
     #[test]

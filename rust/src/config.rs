@@ -38,8 +38,9 @@ pub struct RunConfig {
     pub record_rounds: bool,
 }
 
-/// Sentinel thread count: resolve from `available_parallelism`.
-pub const AUTO_THREADS: usize = 0;
+/// Sentinel thread count: resolve from `available_parallelism`
+/// (the same sentinel as [`runtime::rt::AUTO`](crate::runtime::rt::AUTO)).
+pub const AUTO_THREADS: usize = crate::runtime::rt::AUTO;
 
 impl RunConfig {
     /// A config with the paper's defaults.
@@ -74,13 +75,7 @@ impl RunConfig {
     /// The effective worker count: `threads`, or the machine's available
     /// parallelism when set to [`AUTO_THREADS`].
     pub fn resolved_threads(&self) -> usize {
-        if self.threads == AUTO_THREADS {
-            std::thread::available_parallelism()
-                .map(|p| p.get())
-                .unwrap_or(1)
-        } else {
-            self.threads
-        }
+        crate::runtime::rt::resolve_threads(self.threads)
     }
 
     /// Set the iteration cap (builder style).
@@ -116,14 +111,34 @@ impl RunConfig {
     }
 
     /// Parse a minimal `key = value` config text (TOML subset: one pair
-    /// per line, `#` comments, unquoted scalars). Unknown keys error so
-    /// typos surface.
+    /// per line, `#` comments, unquoted scalars, an optional `[run]`
+    /// section header). Unknown keys *and unknown sections* error so
+    /// typos surface — a misspelt section used to be silently skipped,
+    /// hiding every key under it from validation.
     pub fn from_str_cfg(text: &str) -> Result<Self> {
         let mut cfg = RunConfig::new(Algorithm::ExpNs, 100);
         for (no, line) in text.lines().enumerate() {
             let line = line.trim();
-            if line.is_empty() || line.starts_with('#') || line.starts_with('[') {
+            if line.is_empty() || line.starts_with('#') {
                 continue;
+            }
+            if line.starts_with('[') {
+                match line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                    Some(section) if section.trim() == "run" => continue,
+                    Some(section) => {
+                        return Err(EakmError::Config(format!(
+                            "line {}: unknown section [{}] — only [run] is recognised",
+                            no + 1,
+                            section.trim()
+                        )))
+                    }
+                    None => {
+                        return Err(EakmError::Config(format!(
+                            "line {}: malformed section header {line:?}",
+                            no + 1
+                        )))
+                    }
+                }
             }
             let (key, value) = line
                 .split_once('=')
@@ -228,5 +243,19 @@ mod tests {
         assert!(RunConfig::from_str_cfg("algorithm = warp-drive").is_err());
         assert!(RunConfig::from_str_cfg("k = banana").is_err());
         assert!(RunConfig::from_str_cfg("no equals sign").is_err());
+    }
+
+    #[test]
+    fn section_headers_are_validated() {
+        // the one recognised section parses (and its keys still apply)
+        let cfg = RunConfig::from_str_cfg("[run]\nk = 7\n").unwrap();
+        assert_eq!(cfg.k, 7);
+        let cfg = RunConfig::from_str_cfg("[ run ]\nseed = 5\n").unwrap();
+        assert_eq!(cfg.seed, 5);
+        // a typo'd section no longer hides the keys under it — it errors
+        let err = RunConfig::from_str_cfg("[rnu]\nk = 7\n").unwrap_err();
+        assert!(err.to_string().contains("unknown section"), "{err}");
+        // malformed headers error too
+        assert!(RunConfig::from_str_cfg("[run\nk = 7\n").is_err());
     }
 }

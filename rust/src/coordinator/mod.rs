@@ -4,8 +4,10 @@
 //! ## Parallel architecture
 //!
 //! Every phase of a round runs on one persistent
-//! [`WorkerPool`](crate::runtime::pool::WorkerPool) owned by the
-//! [`Engine`] (spawned once, parked between dispatches):
+//! [`WorkerPool`](crate::runtime::pool::WorkerPool) — borrowed from a
+//! shared [`Runtime`](crate::runtime::Runtime) ([`Engine::on_runtime`],
+//! the serving path) or owned by the [`Engine`] (legacy one-shot path);
+//! either way it is spawned once and parked between dispatches:
 //!
 //! * **assignment scan** — [`parallel`] shards samples contiguously, one
 //!   algorithm instance per shard; counters and moved lists are merged

@@ -10,8 +10,15 @@
 //! of thread count.
 
 use crate::algorithms::common::{AssignStep, Moved, SharedRound};
+use crate::data::DataSource;
 use crate::metrics::Counters;
 use crate::runtime::pool::WorkerPool;
+
+/// Shard geometry for a [`DataSource`]: split its `n()` rows into `w`
+/// contiguous balanced shards (see [`make_shards`]).
+pub fn make_shards_for(data: &dyn DataSource, w: usize) -> Vec<(usize, usize)> {
+    make_shards(data.n(), w)
+}
 
 /// Split `n` samples into `w` contiguous, balanced `(lo, len)` shards.
 /// An empty dataset has no shards.

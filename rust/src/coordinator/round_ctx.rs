@@ -10,7 +10,7 @@ use crate::coordinator::ccdist::CcData;
 use crate::coordinator::groups::GroupData;
 use crate::coordinator::history::HistoryRound;
 use crate::coordinator::sorted_norms::SortedNorms;
-use crate::data::Dataset;
+use crate::data::{DataSource, Dataset};
 use crate::linalg::{sqdist, sqnorm, sqnorms_rows};
 use crate::metrics::Counters;
 use crate::runtime::pool::{SharedSliceMut, WorkerPool};
@@ -152,7 +152,7 @@ impl RoundCtxOwner {
     }
 
     /// Borrow as the per-round shared view.
-    pub fn shared<'a>(&'a self, data: &'a Dataset) -> SharedRound<'a> {
+    pub fn shared<'a>(&'a self, data: &'a dyn DataSource) -> SharedRound<'a> {
         SharedRound {
             data,
             k: self.k,

@@ -1,11 +1,18 @@
 //! The round loop: [`Engine`] (stepwise, inspectable) and [`Runner`]
 //! (run-to-convergence with limits and telemetry).
 //!
-//! The engine owns a persistent [`WorkerPool`] sized from the config's
-//! (resolved) thread count; every phase of a round — assignment scan,
-//! delta centroid update, and the centroid-side rebuilds — dispatches
-//! onto it, and per-phase wall time is accumulated into
-//! [`PhaseTimes`] for the run report.
+//! Engines dispatch every phase of a round — assignment scan, delta
+//! centroid update, and the centroid-side rebuilds — onto a persistent
+//! [`WorkerPool`], and accumulate per-phase wall time into
+//! [`PhaseTimes`] for the run report. The pool is either *shared*
+//! (borrowed from a [`Runtime`] via [`Engine::on_runtime`] — the
+//! serving configuration: one pool for any number of fits and predicts)
+//! or *owned* (spawned by [`Engine::new`] from the config's resolved
+//! thread count — the legacy one-shot configuration).
+//!
+//! Sample data is read through the [`DataSource`] seam, so engines run
+//! unchanged over any row source (in-memory [`Dataset`](crate::data::Dataset),
+//! future shard/mini-batch sources).
 
 use std::time::{Duration, Instant};
 
@@ -14,24 +21,42 @@ use crate::algorithms::Algorithm;
 use crate::config::RunConfig;
 use crate::coordinator::groups::GroupData;
 use crate::coordinator::history::HistoryStore;
-use crate::coordinator::parallel::{make_shards, run_shards};
+use crate::coordinator::parallel::{make_shards_for, run_shards};
 use crate::coordinator::round_ctx::RoundCtxOwner;
 use crate::coordinator::update::UpdateState;
-use crate::data::Dataset;
+use crate::data::DataSource;
 use crate::error::Result;
 use crate::metrics::{Counters, PhaseTimes, RunReport};
 use crate::rng::Rng;
 use crate::runtime::pool::WorkerPool;
+use crate::runtime::Runtime;
 
 /// Factory signature: `(lo, len, k, g) → shard state`.
 pub type ShardFactory<'f> = dyn Fn(usize, usize, usize, usize) -> Box<dyn AssignStep> + 'f;
 
+/// The engine's pool: borrowed from a shared [`Runtime`], or spawned
+/// privately (legacy path).
+enum PoolHandle<'a> {
+    Owned(WorkerPool),
+    Shared(&'a WorkerPool),
+}
+
+impl PoolHandle<'_> {
+    #[inline]
+    fn get(&self) -> &WorkerPool {
+        match self {
+            PoolHandle::Owned(pool) => pool,
+            PoolHandle::Shared(pool) => pool,
+        }
+    }
+}
+
 /// A stepwise k-means engine: one `step()` = one update + assignment
 /// round. Exposes everything tests and benches need to inspect.
-pub struct Engine<'d> {
-    data: &'d Dataset,
+pub struct Engine<'a> {
+    data: &'a dyn DataSource,
     k: usize,
-    pool: WorkerPool,
+    pool: PoolHandle<'a>,
     algs: Vec<Box<dyn AssignStep>>,
     shards: Vec<(usize, usize)>,
     a: Vec<u32>,
@@ -47,23 +72,55 @@ pub struct Engine<'d> {
     last_moved: usize,
 }
 
-impl<'d> Engine<'d> {
-    /// Build from a config (resolves `Auto` by dimension).
-    pub fn new(data: &'d Dataset, cfg: &RunConfig) -> Result<Self> {
+impl<'a> Engine<'a> {
+    /// Build from a config with a *private* pool sized from
+    /// `cfg.resolved_threads()` (resolves `Auto` by dimension). Prefer
+    /// [`Engine::on_runtime`] when running more than once per process.
+    pub fn new(data: &'a dyn DataSource, cfg: &RunConfig) -> Result<Self> {
+        let pool = PoolHandle::Owned(WorkerPool::new(cfg.resolved_threads()));
+        Self::build_resolved(data, cfg, pool)
+    }
+
+    /// Build on a shared [`Runtime`]: the pool is borrowed, nothing is
+    /// spawned, and `cfg.threads` is ignored in favour of the runtime's
+    /// width.
+    pub fn on_runtime(data: &'a dyn DataSource, cfg: &RunConfig, rt: &'a Runtime) -> Result<Self> {
+        Self::build_resolved(data, cfg, PoolHandle::Shared(rt.pool()))
+    }
+
+    fn build_resolved(
+        data: &'a dyn DataSource,
+        cfg: &RunConfig,
+        pool: PoolHandle<'a>,
+    ) -> Result<Self> {
         let alg = match cfg.algorithm {
             Algorithm::Auto => crate::coordinator::auto::resolve(data.d()),
             other => other,
         };
-        Self::with_factory(data, cfg, &move |lo, len, k, g| {
-            alg.make_shard(lo, len, k, g)
-        })
+        Self::build(
+            data,
+            cfg,
+            &move |lo, len, k, g| alg.make_shard(lo, len, k, g),
+            pool,
+        )
     }
 
-    /// Build with an arbitrary shard factory (test/bench hook).
+    /// Build with an arbitrary shard factory (test/bench hook) and a
+    /// private pool.
     pub fn with_factory(
-        data: &'d Dataset,
+        data: &'a dyn DataSource,
         cfg: &RunConfig,
         factory: &ShardFactory,
+    ) -> Result<Self> {
+        let pool = PoolHandle::Owned(WorkerPool::new(cfg.resolved_threads()));
+        Self::build(data, cfg, factory, pool)
+    }
+
+    fn build(
+        data: &'a dyn DataSource,
+        cfg: &RunConfig,
+        factory: &ShardFactory,
+        pool: PoolHandle<'a>,
     ) -> Result<Self> {
         cfg.validate(data.n())?;
         let (n, d, k) = (data.n(), data.d(), cfg.k);
@@ -78,10 +135,10 @@ impl<'d> Engine<'d> {
         let mut rng = Rng::new(cfg.seed);
         let centroids = cfg.init.centroids(data, k, &mut rng, &mut counters);
 
-        // one persistent pool per engine; parked between dispatches
-        let threads = cfg.resolved_threads();
-        let pool = WorkerPool::new(threads);
-        let shards = make_shards(n, threads);
+        // shard geometry follows the pool width; results are
+        // width-independent (per-sample state, order-fixed merges)
+        let threads = pool.get().width();
+        let shards = make_shards_for(data, threads);
         let mut algs: Vec<Box<dyn AssignStep>> = shards
             .iter()
             .map(|&(lo, len)| factory(lo, len, k, g))
@@ -113,12 +170,12 @@ impl<'d> Engine<'d> {
         let mut a = vec![0u32; n];
         let t_scan = Instant::now();
         let sh = ctx.shared(data);
-        let (ctr, _) = run_shards(&pool, &mut algs, &shards, &mut a, &sh, true);
+        let (ctr, _) = run_shards(pool.get(), &mut algs, &shards, &mut a, &sh, true);
         drop(sh);
         phases.scan += t_scan.elapsed();
         counters.merge(&ctr);
         let t_update = Instant::now();
-        let update = UpdateState::from_assignments_pooled(data, &a, k, &pool);
+        let update = UpdateState::from_assignments_pooled(data, &a, k, pool.get());
         phases.update += t_update.elapsed();
 
         Ok(Engine {
@@ -148,28 +205,26 @@ impl<'d> Engine<'d> {
             return 0;
         }
         let d = self.data.d();
+        let pool = self.pool.get();
         // update step
         let t_update = Instant::now();
-        let new_centroids = self
-            .update
-            .centroids_pooled(&self.ctx.centroids, d, &self.pool);
+        let new_centroids = self.update.centroids_pooled(&self.ctx.centroids, d, pool);
         self.phases.update += t_update.elapsed();
         // centroid-side rebuilds
         let t_build = Instant::now();
         self.ctx
-            .advance_centroids_pooled(new_centroids, d, &mut self.counters, &self.pool);
-        self.ctx
-            .rebuild(&self.req, d, &mut self.counters, &self.pool);
+            .advance_centroids_pooled(new_centroids, d, &mut self.counters, pool);
+        self.ctx.rebuild(&self.req, d, &mut self.counters, pool);
         if let Some(h) = self.history.as_mut() {
             self.ctx.history =
-                Some(h.advance_pooled(&self.ctx.centroids, &mut self.counters, &self.pool));
+                Some(h.advance_pooled(&self.ctx.centroids, &mut self.counters, pool));
         }
         self.phases.build += t_build.elapsed();
         // assignment step
         let t_scan = Instant::now();
         let sh = self.ctx.shared(self.data);
         let (ctr, moved) = run_shards(
-            &self.pool,
+            pool,
             &mut self.algs,
             &self.shards,
             &mut self.a,
@@ -182,9 +237,9 @@ impl<'d> Engine<'d> {
         let t_apply = Instant::now();
         if self.req.full_update {
             self.update =
-                UpdateState::from_assignments_pooled(self.data, &self.a, self.k, &self.pool);
+                UpdateState::from_assignments_pooled(self.data, &self.a, self.k, pool);
         } else {
-            self.update.apply_moves_pooled(self.data, &moved, &self.pool);
+            self.update.apply_moves_pooled(self.data, &moved, pool);
         }
         self.phases.update += t_apply.elapsed();
         self.rounds += 1;
@@ -225,7 +280,7 @@ impl<'d> Engine<'d> {
 
     /// Resolved worker count (the pool's width).
     pub fn threads(&self) -> usize {
-        self.pool.width()
+        self.pool.get().width()
     }
 
     /// Samples moved in the last round.
@@ -255,6 +310,12 @@ impl<'d> Engine<'d> {
 }
 
 /// Run-to-convergence driver producing a [`RunReport`].
+///
+/// `Runner::new(&cfg).run(&data)` is the legacy one-shot entry point
+/// and is kept as a thin shim (it builds a throwaway [`Runtime`] per
+/// call). New code should use the service API —
+/// [`Kmeans`](crate::model::Kmeans) on a shared [`Runtime`] — or
+/// [`Runner::run_on`] directly.
 pub struct Runner {
     cfg: RunConfig,
 }
@@ -286,10 +347,20 @@ impl Runner {
         Runner { cfg: cfg.clone() }
     }
 
-    /// Cluster `data` to convergence (or a configured limit).
-    pub fn run(&self, data: &Dataset) -> Result<RunOutput> {
+    /// Legacy shim: cluster `data` on a throwaway [`Runtime`] sized
+    /// from `cfg.resolved_threads()`. Prefer [`Runner::run_on`] (or the
+    /// [`Kmeans`](crate::model::Kmeans) service API) so the pool is
+    /// spawned once per process, not once per run.
+    pub fn run(&self, data: &dyn DataSource) -> Result<RunOutput> {
+        let rt = Runtime::new(self.cfg.resolved_threads());
+        self.run_on(&rt, data)
+    }
+
+    /// Cluster `data` to convergence (or a configured limit) on a
+    /// shared [`Runtime`].
+    pub fn run_on(&self, rt: &Runtime, data: &dyn DataSource) -> Result<RunOutput> {
         let start = Instant::now();
-        let mut engine = Engine::new(data, &self.cfg)?;
+        let mut engine = Engine::on_runtime(data, &self.cfg, rt)?;
         let mut round_times = Vec::new();
         while !engine.converged() && engine.rounds() < self.cfg.max_iters {
             if let Some(limit) = self.cfg.time_limit {
@@ -307,7 +378,7 @@ impl Runner {
         let mse = engine.mse();
         let report = RunReport {
             algorithm: engine.name().to_string(),
-            dataset: data.name.clone(),
+            dataset: data.name().to_string(),
             k: self.cfg.k,
             seed: self.cfg.seed,
             iterations: engine.rounds(),
@@ -390,6 +461,29 @@ mod tests {
         assert!(out.report.phases.total() > Duration::ZERO);
         // phases are a decomposition of the loop, not more than the wall
         assert!(out.report.phases.total() <= out.wall + Duration::from_millis(50));
+    }
+
+    #[test]
+    fn engines_share_a_runtime_pool() {
+        let ds = blobs(600, 4, 6, 0.1, 8);
+        let rt = Runtime::new(3);
+        let cfg = RunConfig::new(Algorithm::ExpNs, 6).seed(2);
+        // two sequential engines borrow the same pool
+        for _ in 0..2 {
+            let mut engine = Engine::on_runtime(&ds, &cfg, &rt).unwrap();
+            assert_eq!(engine.threads(), 3);
+            while !engine.converged() && engine.rounds() < 100 {
+                engine.step();
+            }
+            assert!(engine.converged());
+        }
+        // and match a run with a private pool of the same width
+        let out = Runner::new(&cfg.clone().threads(3)).run(&ds).unwrap();
+        let shared = Runner::new(&cfg).run_on(&rt, &ds).unwrap();
+        assert_eq!(out.assignments, shared.assignments);
+        assert_eq!(out.counters, shared.counters);
+        assert_eq!(out.mse.to_bits(), shared.mse.to_bits());
+        assert_eq!(shared.report.threads, 3);
     }
 
     #[test]

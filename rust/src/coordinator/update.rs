@@ -12,7 +12,7 @@
 //! bit-identical across thread counts.
 
 use crate::algorithms::common::Moved;
-use crate::data::Dataset;
+use crate::data::DataSource;
 use crate::runtime::pool::{SharedSliceMut, WorkerPool};
 
 /// Minimum items per reduction chunk: below this, sharding costs more
@@ -56,13 +56,13 @@ pub struct UpdateState {
 
 impl UpdateState {
     /// Build from a full assignment (used at init and by `full_update`).
-    pub fn from_assignments(data: &Dataset, a: &[u32], k: usize) -> Self {
+    pub fn from_assignments(data: &dyn DataSource, a: &[u32], k: usize) -> Self {
         Self::from_assignments_pooled(data, a, k, &WorkerPool::serial())
     }
 
     /// As [`UpdateState::from_assignments`], sharded over the pool.
     pub fn from_assignments_pooled(
-        data: &Dataset,
+        data: &dyn DataSource,
         a: &[u32],
         k: usize,
         pool: &WorkerPool,
@@ -101,7 +101,7 @@ impl UpdateState {
         UpdateState { sums, counts, k }
     }
 
-    fn from_assignments_serial(data: &Dataset, a: &[u32], k: usize) -> Self {
+    fn from_assignments_serial(data: &dyn DataSource, a: &[u32], k: usize) -> Self {
         let d = data.d();
         let mut sums = vec![0.0; k * d];
         let mut counts = vec![0u64; k];
@@ -118,7 +118,7 @@ impl UpdateState {
     }
 
     /// Apply one round's assignment changes (delta update).
-    pub fn apply_moves(&mut self, data: &Dataset, moved: &[Moved]) {
+    pub fn apply_moves(&mut self, data: &dyn DataSource, moved: &[Moved]) {
         let d = data.d();
         for m in moved {
             let row = data.row(m.i as usize);
@@ -138,7 +138,7 @@ impl UpdateState {
     /// As [`UpdateState::apply_moves`], sharded over the pool: each chunk
     /// of the moved list accumulates a private partial delta, and the
     /// partials are folded into the running sums in chunk order.
-    pub fn apply_moves_pooled(&mut self, data: &Dataset, moved: &[Moved], pool: &WorkerPool) {
+    pub fn apply_moves_pooled(&mut self, data: &dyn DataSource, moved: &[Moved], pool: &WorkerPool) {
         let d = data.d();
         let clen = chunk_len(moved.len());
         if moved.len() <= clen {

@@ -1,5 +1,6 @@
 //! The dataset container used throughout the crate.
 
+use crate::data::source::DataSource;
 use crate::error::{EakmError, Result};
 use crate::linalg::sqnorms_rows;
 
@@ -137,6 +138,43 @@ impl Dataset {
             })
             .sum();
         total / self.n as f64
+    }
+}
+
+/// The in-memory reference implementation of the data-access seam.
+/// Accessors mirror the inherent methods (which stay the fast path for
+/// concrete `Dataset` callers — no virtual dispatch).
+impl DataSource for Dataset {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn rows(&self, lo: usize, len: usize) -> &[f64] {
+        &self.data[lo * self.d..(lo + len) * self.d]
+    }
+
+    fn sqnorms_range(&self, lo: usize, len: usize) -> &[f64] {
+        &self.sqnorms[lo..lo + len]
+    }
+
+    fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    fn sqnorm(&self, i: usize) -> f64 {
+        self.sqnorms[i]
+    }
+
+    fn mse(&self, centroids: &[f64], assignments: &[u32]) -> f64 {
+        Dataset::mse(self, centroids, assignments)
     }
 }
 

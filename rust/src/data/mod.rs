@@ -1,8 +1,11 @@
 //! Datasets: container, standardisation, synthetic generators for the 22
-//! paper datasets (Table 8 substitution), and simple binary/CSV I/O.
+//! paper datasets (Table 8 substitution), simple binary/CSV I/O, and the
+//! [`DataSource`] seam every consumer reads samples through.
 
 pub mod dataset;
 pub mod io;
+pub mod source;
 pub mod synth;
 
 pub use dataset::Dataset;
+pub use source::DataSource;

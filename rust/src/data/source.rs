@@ -1,0 +1,171 @@
+//! The data-access seam: [`DataSource`].
+//!
+//! Every consumer of sample data in the coordination layer — the
+//! sharded assignment scan (via
+//! [`SharedRound`](crate::algorithms::common::SharedRound)), the
+//! centroid update ([`UpdateState`](crate::coordinator::update::UpdateState)),
+//! seeding ([`InitMethod`](crate::init::InitMethod)), and
+//! [`FittedModel::predict`](crate::model::FittedModel::predict) — reads
+//! samples through this trait instead of the concrete [`Dataset`].
+//!
+//! The contract is deliberately *range-oriented* (`rows(lo, len)`)
+//! rather than whole-buffer (`raw()`): an implementation only has to
+//! produce a contiguous window of rows at a time, which is exactly the
+//! access pattern of the blocked batch scan. That makes the ROADMAP's
+//! out-of-core shard layer and the mini-batch engine implementations of
+//! a trait, not rewrites of the coordinator: a shard file, an mmap, or
+//! a sampled batch can all sit behind `DataSource` unchanged.
+//!
+//! Implementations must uphold two invariants the algorithms rely on:
+//!
+//! * `rows`/`sqnorms_range` return *stable* values — two reads of the
+//!   same range during one run observe identical bits (the bounds are
+//!   only correct against immutable data);
+//! * `sqnorms_range(i, len)[j] == ‖rows(i, len)[j·d .. (j+1)·d]‖²` —
+//!   pre-computed squared norms (the paper's §4.1.1 engineering point).
+
+use crate::linalg::sqdist;
+
+/// Read-only access to `n` samples of dimension `d` (row-major `f64`).
+///
+/// `Sync` is a supertrait: sources are shared by every pool worker
+/// during a round.
+pub trait DataSource: Sync {
+    /// Number of samples.
+    fn n(&self) -> usize;
+
+    /// Dimension of each sample.
+    fn d(&self) -> usize;
+
+    /// Human-readable name (used in reports).
+    fn name(&self) -> &str {
+        "custom"
+    }
+
+    /// A contiguous block of `len` rows starting at row `lo`, as one
+    /// row-major slice of `len * d` values.
+    fn rows(&self, lo: usize, len: usize) -> &[f64];
+
+    /// Pre-computed `‖x(i)‖²` for rows `[lo, lo + len)`.
+    fn sqnorms_range(&self, lo: usize, len: usize) -> &[f64];
+
+    /// Row `i`.
+    #[inline]
+    fn row(&self, i: usize) -> &[f64] {
+        self.rows(i, 1)
+    }
+
+    /// `‖x(i)‖²`.
+    #[inline]
+    fn sqnorm(&self, i: usize) -> f64 {
+        self.sqnorms_range(i, 1)[0]
+    }
+
+    /// Mean squared distance to the assigned centroid — the k-means
+    /// objective divided by `n`.
+    fn mse(&self, centroids: &[f64], assignments: &[u32]) -> f64 {
+        assert_eq!(assignments.len(), self.n());
+        let d = self.d();
+        let total: f64 = assignments
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                sqdist(
+                    self.row(i),
+                    &centroids[a as usize * d..(a as usize + 1) * d],
+                )
+            })
+            .sum();
+        total / self.n() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::linalg::sqnorms_rows;
+
+    /// A minimal non-`Dataset` source: borrowed rows, owned norms.
+    struct Borrowed<'a> {
+        rows: &'a [f64],
+        sqnorms: Vec<f64>,
+        d: usize,
+    }
+
+    impl<'a> Borrowed<'a> {
+        fn new(rows: &'a [f64], d: usize) -> Self {
+            Borrowed {
+                sqnorms: sqnorms_rows(rows, d),
+                rows,
+                d,
+            }
+        }
+    }
+
+    impl DataSource for Borrowed<'_> {
+        fn n(&self) -> usize {
+            self.rows.len() / self.d
+        }
+        fn d(&self) -> usize {
+            self.d
+        }
+        fn rows(&self, lo: usize, len: usize) -> &[f64] {
+            &self.rows[lo * self.d..(lo + len) * self.d]
+        }
+        fn sqnorms_range(&self, lo: usize, len: usize) -> &[f64] {
+            &self.sqnorms[lo..lo + len]
+        }
+    }
+
+    #[test]
+    fn dataset_implements_the_seam() {
+        let ds = Dataset::new("t", vec![0.0, 0.0, 1.0, 1.0, 2.0, 0.0], 3, 2).unwrap();
+        let src: &dyn DataSource = &ds;
+        assert_eq!(src.n(), 3);
+        assert_eq!(src.d(), 2);
+        assert_eq!(src.name(), "t");
+        assert_eq!(src.rows(1, 2), &[1.0, 1.0, 2.0, 0.0]);
+        assert_eq!(src.row(2), &[2.0, 0.0]);
+        assert_eq!(src.sqnorm(1), 2.0);
+        assert_eq!(src.sqnorms_range(0, 3), &[0.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn default_row_and_sqnorm_delegate_to_ranges() {
+        let raw = [0.0, 3.0, 4.0, 0.0];
+        let src = Borrowed::new(&raw, 2);
+        assert_eq!(src.n(), 2);
+        assert_eq!(src.row(1), &[4.0, 0.0]);
+        assert_eq!(src.sqnorm(0), 9.0);
+        assert_eq!(src.sqnorm(1), 16.0);
+    }
+
+    #[test]
+    fn trait_mse_matches_dataset_mse() {
+        let ds = Dataset::new("t", vec![0.0, 0.0, 1.0, 1.0, 2.0, 0.0], 3, 2).unwrap();
+        let centroids = vec![0.0, 0.0, 2.0, 0.0];
+        let a = [0u32, 0, 1];
+        let via_trait = {
+            let src: &dyn DataSource = &ds;
+            src.mse(&centroids, &a)
+        };
+        assert_eq!(via_trait.to_bits(), ds.mse(&centroids, &a).to_bits());
+    }
+
+    #[test]
+    fn a_full_run_works_through_a_non_dataset_source() {
+        // the seam is real: cluster through `Borrowed`, not `Dataset`
+        use crate::algorithms::Algorithm;
+        use crate::config::RunConfig;
+        use crate::coordinator::Runner;
+        let ds = crate::data::synth::blobs(300, 4, 5, 0.1, 7);
+        let view = Borrowed::new(ds.raw(), ds.d());
+        let cfg = RunConfig::new(Algorithm::ExpNs, 5).seed(3);
+        let via_view = Runner::new(&cfg).run(&view).unwrap();
+        let via_ds = Runner::new(&cfg).run(&ds).unwrap();
+        assert_eq!(via_view.assignments, via_ds.assignments);
+        assert_eq!(via_view.mse.to_bits(), via_ds.mse.to_bits());
+        assert_eq!(via_view.counters, via_ds.counters);
+    }
+}

@@ -4,14 +4,14 @@
 //! provided as a library feature; its distance evaluations are counted
 //! in [`Counters::init`] so experiment accounting stays exact.
 
-use crate::data::Dataset;
+use crate::data::DataSource;
 use crate::linalg::sqdist;
 use crate::metrics::Counters;
 use crate::rng::Rng;
 
 /// D² seeding: first centroid uniform, each next sampled ∝ squared
 /// distance to the nearest chosen centroid.
-pub fn init(data: &Dataset, k: usize, rng: &mut Rng, counters: &mut Counters) -> Vec<f64> {
+pub fn init(data: &dyn DataSource, k: usize, rng: &mut Rng, counters: &mut Counters) -> Vec<f64> {
     assert!(k > 0 && k <= data.n(), "k={k} out of range for n={}", data.n());
     let (n, d) = (data.n(), data.d());
     let mut centroids = Vec::with_capacity(k * d);
@@ -48,6 +48,7 @@ pub fn init(data: &Dataset, k: usize, rng: &mut Rng, counters: &mut Counters) ->
 mod tests {
     use super::*;
     use crate::data::synth::blobs;
+    use crate::data::Dataset;
 
     #[test]
     fn produces_k_by_d() {

@@ -4,7 +4,7 @@
 pub mod kmeanspp;
 pub mod random;
 
-use crate::data::Dataset;
+use crate::data::DataSource;
 use crate::metrics::Counters;
 use crate::rng::Rng;
 
@@ -31,7 +31,7 @@ impl InitMethod {
     /// Produce `k` initial centroids (row-major `k×d`).
     pub fn centroids(
         &self,
-        data: &Dataset,
+        data: &dyn DataSource,
         k: usize,
         rng: &mut Rng,
         counters: &mut Counters,

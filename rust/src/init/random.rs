@@ -1,12 +1,12 @@
 //! Uniform random seeding: k distinct samples become the centroids.
 
-use crate::data::Dataset;
+use crate::data::DataSource;
 use crate::rng::Rng;
 
 /// Pick `k` distinct samples as initial centroids.
 ///
 /// Panics if `k == 0` or `k > n` (callers validate through `RunConfig`).
-pub fn init(data: &Dataset, k: usize, rng: &mut Rng) -> Vec<f64> {
+pub fn init(data: &dyn DataSource, k: usize, rng: &mut Rng) -> Vec<f64> {
     assert!(k > 0 && k <= data.n(), "k={k} out of range for n={}", data.n());
     let d = data.d();
     let idxs = rng.distinct(data.n(), k);

@@ -1,7 +1,15 @@
-//! A minimal JSON writer for reports and bench outputs (no external
-//! dependencies are available offline, and we only ever *emit* JSON).
+//! A minimal JSON writer *and parser* (no external dependencies are
+//! available offline). Emitting covers reports and bench outputs;
+//! parsing exists so [`FittedModel`](crate::model::FittedModel) files
+//! survive process restarts.
+//!
+//! Numbers round-trip bit-identically for all finite `f64`: the writer
+//! uses Rust's shortest-roundtrip float formatting and the parser feeds
+//! the numeric token back through `str::parse::<f64>()`.
 
 use std::fmt::Write as _;
+
+use crate::error::{EakmError, Result};
 
 /// A JSON value under construction.
 #[derive(Clone, Debug)]
@@ -35,21 +43,16 @@ impl Json {
         self
     }
 
-    /// Serialise to a compact string.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
                 if x.is_finite() {
-                    // integers print without a trailing .0
-                    if *x == x.trunc() && x.abs() < 9e15 {
+                    // integers print without a trailing .0 (except -0.0,
+                    // which must keep its sign to round-trip bit-exactly)
+                    let negative_zero = *x == 0.0 && x.is_sign_negative();
+                    if *x == x.trunc() && x.abs() < 9e15 && !negative_zero {
                         let _ = write!(out, "{}", *x as i64);
                     } else {
                         let _ = write!(out, "{x}");
@@ -96,6 +99,292 @@ impl Json {
                     value.write(out);
                 }
                 out.push('}');
+            }
+        }
+    }
+
+    /// Parse a JSON document (must consume the whole input).
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser {
+            s: text.as_bytes(),
+            pos: 0,
+            depth: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.s.len() {
+            return Err(p.err("trailing characters after document"));
+        }
+        Ok(v)
+    }
+
+    /// Field lookup on an object (first match; `None` on non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The number, if this is one.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// The number as a non-negative integer, if it is exactly one.
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && *x == x.trunc() && *x < 9e15 => Some(*x as usize),
+            _ => None,
+        }
+    }
+
+    /// The string, if this is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    /// The boolean, if this is one.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The array items, if this is one.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items.as_slice()),
+            _ => None,
+        }
+    }
+}
+
+/// Compact serialisation (`.to_string()` comes via `ToString`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
+    }
+}
+
+/// Recursive-descent parser over the document bytes. Inputs are `&str`,
+/// so multi-byte UTF-8 runs are copied through verbatim (they can only
+/// be delimited by ASCII structural bytes, which sit on char
+/// boundaries).
+struct Parser<'a> {
+    s: &'a [u8],
+    pos: usize,
+    /// Current container-nesting depth (see [`MAX_DEPTH`]).
+    depth: usize,
+}
+
+/// Nesting cap so corrupt/crafted input (`"[".repeat(100_000)`) returns
+/// an `Err` instead of overflowing the parse recursion's stack.
+const MAX_DEPTH: usize = 128;
+
+impl Parser<'_> {
+    fn err(&self, msg: &str) -> EakmError {
+        EakmError::Data(format!("json (byte {}): {msg}", self.pos))
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.s.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected {:?}", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(c @ (b'{' | b'[')) => {
+                if self.depth >= MAX_DEPTH {
+                    return Err(self.err("nesting deeper than 128 levels"));
+                }
+                self.depth += 1;
+                let v = if c == b'{' { self.object() } else { self.array() };
+                self.depth -= 1;
+                v
+            }
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected {:?}", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json> {
+        if self.s[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(value)
+        } else {
+            Err(self.err(&format!("expected {word:?}")))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while matches!(
+            self.peek(),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.pos += 1;
+        }
+        let token = std::str::from_utf8(&self.s[start..self.pos]).expect("ascii token");
+        let x: f64 = token
+            .parse()
+            .map_err(|_| self.err(&format!("bad number {token:?}")))?;
+        if !x.is_finite() {
+            return Err(self.err(&format!("number out of range {token:?}")));
+        }
+        Ok(Json::Num(x))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let run_start = self.pos;
+            // copy the longest escape-free run in one go
+            while let Some(c) = self.peek() {
+                if c == b'"' || c == b'\\' || c < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            out.push_str(
+                std::str::from_utf8(&self.s[run_start..self.pos])
+                    .map_err(|_| self.err("invalid utf-8 in string"))?,
+            );
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    out.push(self.escape()?);
+                }
+                Some(_) => return Err(self.err("control character in string")),
+                None => return Err(self.err("unterminated string")),
+            }
+        }
+    }
+
+    fn escape(&mut self) -> Result<char> {
+        let c = self.peek().ok_or_else(|| self.err("unterminated escape"))?;
+        self.pos += 1;
+        Ok(match c {
+            b'"' => '"',
+            b'\\' => '\\',
+            b'/' => '/',
+            b'n' => '\n',
+            b'r' => '\r',
+            b't' => '\t',
+            b'b' => '\u{8}',
+            b'f' => '\u{c}',
+            b'u' => {
+                let hi = self.hex4()?;
+                let cp = if (0xD800..0xDC00).contains(&hi) {
+                    // surrogate pair: a second \uXXXX must follow
+                    self.expect(b'\\')?;
+                    self.expect(b'u')?;
+                    let lo = self.hex4()?;
+                    if !(0xDC00..0xE000).contains(&lo) {
+                        return Err(self.err("unpaired surrogate"));
+                    }
+                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                } else {
+                    hi
+                };
+                char::from_u32(cp).ok_or_else(|| self.err("invalid \\u escape"))?
+            }
+            _ => return Err(self.err(&format!("bad escape \\{:?}", c as char))),
+        })
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        if self.pos + 4 > self.s.len() {
+            return Err(self.err("truncated \\u escape"));
+        }
+        let token = std::str::from_utf8(&self.s[self.pos..self.pos + 4])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        let v = u32::from_str_radix(token, 16).map_err(|_| self.err("bad \\u escape"))?;
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
             }
         }
     }
@@ -189,6 +478,84 @@ mod tests {
             .field("k", 100usize)
             .field("xs", Json::Arr(vec![Json::Num(1.0), Json::Num(2.5)]));
         assert_eq!(j.to_string(), r#"{"name":"exp","k":100,"xs":[1,2.5]}"#);
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let j = Json::obj()
+            .field("name", "exp \"ns\"\n")
+            .field("k", 100usize)
+            .field("ok", true)
+            .field("none", Json::Null)
+            .field(
+                "xs",
+                Json::Arr(vec![Json::Num(1.0), Json::Num(-2.5), Json::Num(3e-17)]),
+            );
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.to_string(), text);
+        assert_eq!(back.get("k").unwrap().as_usize(), Some(100));
+        assert_eq!(back.get("name").unwrap().as_str(), Some("exp \"ns\"\n"));
+        assert_eq!(back.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(back.get("xs").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn floats_roundtrip_bit_identically() {
+        for x in [
+            0.1,
+            -0.0,
+            1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            -9.87654321e-200,
+            1e300,
+            123456789.125,
+        ] {
+            let text = Json::Num(x).to_string();
+            let back = Json::parse(&text).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} via {text:?}");
+        }
+    }
+
+    #[test]
+    fn parse_handles_whitespace_and_escapes() {
+        let j = Json::parse(" { \"a\" : [ 1 , null , \"x\\u0041\\n\" ] } ").unwrap();
+        let arr = j.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_f64(), Some(1.0));
+        assert!(matches!(arr[1], Json::Null));
+        assert_eq!(arr[2].as_str(), Some("xA\n"));
+        // astral-plane escape (surrogate pair)
+        let j = Json::parse("\"\\ud83d\\ude00\"").unwrap();
+        assert_eq!(j.as_str(), Some("😀"));
+    }
+
+    #[test]
+    fn parse_caps_nesting_depth() {
+        // must Err, not overflow the stack
+        let deep = "[".repeat(100_000);
+        assert!(Json::parse(&deep).is_err());
+        // well under the cap still parses
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\":}",
+            "tru",
+            "\"unterminated",
+            "1 2",
+            "{\"a\":1,}",
+            "\"\\u12\"",
+            "\"\\ud800x\"",
+            "nan",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

@@ -24,20 +24,63 @@
 //! counters ([`metrics::Counters`]) are first-class outputs and drive the
 //! reproduction of the paper's tables.
 //!
+//! ## Service API
+//!
+//! The public surface is fit-once / predict-many, built from three
+//! pieces:
+//!
+//! * [`runtime::Runtime`] — owns the persistent worker pool; create one
+//!   per process and share it across every fit and predict;
+//! * [`model::Kmeans`] — fluent fit configuration;
+//! * [`model::FittedModel`] — the owned result: centroids + telemetry,
+//!   with [`predict`](model::FittedModel::predict) for new points and
+//!   JSON [`save`](model::FittedModel::save) /
+//!   [`load`](model::FittedModel::load) so models survive restarts.
+//!
+//! ```no_run
+//! use eakm::prelude::*;
+//!
+//! let rt = Runtime::new(4); // or Runtime::auto()
+//! let data = eakm::data::synth::blobs(10_000, 8, 50, 0.05, 42);
+//! let model = Kmeans::new(50)
+//!     .algorithm(Algorithm::ExpNs)
+//!     .seed(7)
+//!     .fit(&rt, &data)
+//!     .unwrap();
+//! println!(
+//!     "iters={} mse={:.5}",
+//!     model.report().iterations,
+//!     model.report().mse
+//! );
+//! let queries = eakm::data::synth::blobs(1_000, 8, 50, 0.05, 43);
+//! let labels = model.predict(&rt, &queries).unwrap(); // same pool, no respawn
+//! # let _ = labels;
+//! ```
+//!
+//! The lower-level [`coordinator::Runner`] / [`coordinator::Engine`]
+//! remain available (benches and tests inspect rounds through them),
+//! and `Runner::new(&cfg).run(&data)` still works as a one-shot shim.
+//!
 //! ## Parallel runtime
 //!
-//! Each [`coordinator::Engine`] owns a persistent
-//! [`runtime::pool::WorkerPool`] (spawned once, parked between rounds)
-//! and dispatches *every* phase of a round onto it: the sharded
-//! assignment scan, the delta centroid update, and all centroid-side
-//! per-round builds (inter-centroid matrix, annuli, group maxima, ns
-//! history). Reductions merge in shard/chunk order with geometry
-//! independent of the thread count, so assignments, MSE, and counters
-//! are **bit-identical** for any `threads` setting (including
-//! `threads = auto`, which resolves to the machine's available
-//! parallelism). [`metrics::RunReport`] carries a per-phase wall-time
-//! decomposition (`scan` / `update` / `build`) so multicore speedup can
-//! be attributed.
+//! Every phase of a round — the sharded assignment scan, the delta
+//! centroid update, and all centroid-side per-round builds
+//! (inter-centroid matrix, annuli, group maxima, ns history) — runs on
+//! one persistent [`runtime::pool::WorkerPool`] (spawned once, parked
+//! between dispatches), shared across runs via [`runtime::Runtime`].
+//! Reductions merge in shard/chunk order with geometry independent of
+//! the thread count, so assignments, MSE, and counters are
+//! **bit-identical** for any width (including `Runtime::auto()`).
+//! [`metrics::RunReport`] carries a per-phase wall-time decomposition
+//! (`scan` / `update` / `build`) so multicore speedup can be attributed.
+//!
+//! ## Data access
+//!
+//! Sample rows are read through the [`data::DataSource`] trait
+//! (range-oriented: `rows(lo, len)` + pre-computed squared norms).
+//! [`data::Dataset`] is the in-memory implementation; out-of-core
+//! shards and mini-batch sources slot in behind the same seam without
+//! touching the coordinator.
 //!
 //! The dense-compute hot spot (blocked pairwise distances + top-2
 //! reduction) is additionally available as an AOT-compiled XLA artifact
@@ -45,17 +88,6 @@
 //! PJRT C API from [`runtime`] — Python never runs at clustering time
 //! (off by default behind the `xla` feature; the external `xla` crate is
 //! unavailable offline).
-//!
-//! ## Quickstart
-//!
-//! ```no_run
-//! use eakm::prelude::*;
-//!
-//! let data = eakm::data::synth::blobs(10_000, 8, 50, 0.05, 42);
-//! let cfg = RunConfig::new(Algorithm::ExpNs, 50).seed(7);
-//! let out = Runner::new(&cfg).run(&data).unwrap();
-//! println!("iters={} mse={:.5}", out.iterations, out.mse);
-//! ```
 
 pub mod error;
 pub mod rng;
@@ -67,6 +99,7 @@ pub mod algorithms;
 pub mod coordinator;
 pub mod runtime;
 pub mod config;
+pub mod model;
 pub mod bench_support;
 pub mod json;
 pub mod cli;
@@ -78,6 +111,9 @@ pub mod prelude {
     pub use crate::config::RunConfig;
     pub use crate::coordinator::{Runner, RunOutput};
     pub use crate::data::dataset::Dataset;
+    pub use crate::data::DataSource;
     pub use crate::init::InitMethod;
-    pub use crate::metrics::Counters;
+    pub use crate::metrics::{Counters, RunReport};
+    pub use crate::model::{FittedModel, Kmeans};
+    pub use crate::runtime::Runtime;
 }

@@ -10,7 +10,6 @@
 
 use super::gemm;
 
-
 /// Direct squared Euclidean distance, 4-way unrolled.
 #[inline]
 pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
@@ -65,11 +64,9 @@ pub fn sqdist_batch_block(
     debug_assert_eq!(out.len(), m * k);
     // out ← X · Cᵀ
     gemm::matmul_nt(xs, cs, out, m, d, k);
-    for i in 0..m {
-        let row = &mut out[i * k..(i + 1) * k];
-        let xn = xnorms[i];
-        for (j, o) in row.iter_mut().enumerate() {
-            *o = (xn + cnorms[j] - 2.0 * *o).max(0.0);
+    for (row, &xn) in out.chunks_exact_mut(k).zip(xnorms) {
+        for (o, &cn) in row.iter_mut().zip(cnorms) {
+            *o = (xn + cn - 2.0 * *o).max(0.0);
         }
     }
 }

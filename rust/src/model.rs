@@ -1,0 +1,476 @@
+//! The fit/predict service API: [`Kmeans`] (fluent entry point) and
+//! [`FittedModel`] (owned result, applicable to new points).
+//!
+//! This is the serving-facing surface the ROADMAP's north star asks
+//! for: fit once on a shared [`Runtime`], then answer any number of
+//! `predict` calls — across datasets, threads, and (via [`save`] /
+//! [`load`]) process restarts:
+//!
+//! ```no_run
+//! use eakm::prelude::*;
+//!
+//! let rt = Runtime::new(4); // one pool for the whole process
+//! let data = eakm::data::synth::blobs(100_000, 8, 50, 0.05, 42);
+//! let model = Kmeans::new(50)
+//!     .algorithm(Algorithm::ExpNs)
+//!     .seed(7)
+//!     .fit(&rt, &data)
+//!     .unwrap();
+//! let queries = eakm::data::synth::blobs(1_000, 8, 50, 0.05, 43);
+//! let labels = model.predict(&rt, &queries).unwrap();
+//! model.save(std::path::Path::new("model.json")).unwrap();
+//! # let _ = labels;
+//! ```
+//!
+//! `predict` is a counter-free, pool-sharded nearest-centroid scan on
+//! the same blocked `linalg` kernels the fit path uses; every query
+//! point is independent, so its output is **bit-identical at any
+//! runtime width**.
+//!
+//! [`save`]: FittedModel::save
+//! [`load`]: FittedModel::load
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::algorithms::common::blocked_scan;
+use crate::algorithms::Algorithm;
+use crate::config::RunConfig;
+use crate::coordinator::Runner;
+use crate::data::DataSource;
+use crate::error::{EakmError, Result};
+use crate::init::InitMethod;
+use crate::json::Json;
+use crate::linalg::{argmin, sqdist, sqnorms_rows};
+use crate::metrics::{Counters, PhaseTimes, RunReport};
+use crate::runtime::{Runtime, SharedSliceMut};
+
+/// Model-file format marker and version.
+const MODEL_FORMAT: &str = "eakm-fitted-model";
+const MODEL_VERSION: usize = 1;
+
+/// Minimum query rows per pool chunk during `predict` (each chunk runs
+/// the shared blocked scan kernel over its range).
+const PREDICT_CHUNK: usize = 128;
+
+/// Fluent configuration for a clustering fit.
+///
+/// A thin builder over [`RunConfig`] that resolves to the service API:
+/// `fit` returns an owned [`FittedModel`] instead of borrowing anything
+/// from the training data. Thread count comes from the [`Runtime`]
+/// passed at fit time, not from the builder.
+#[derive(Clone, Debug)]
+pub struct Kmeans {
+    cfg: RunConfig,
+}
+
+impl Kmeans {
+    /// Start configuring a `k`-cluster fit (algorithm defaults to
+    /// `Auto`: resolved by dimension at fit time).
+    pub fn new(k: usize) -> Self {
+        Kmeans {
+            cfg: RunConfig::new(Algorithm::Auto, k),
+        }
+    }
+
+    /// Adopt a fully-specified [`RunConfig`] (CLI / config-file path).
+    pub fn from_config(cfg: RunConfig) -> Self {
+        Kmeans { cfg }
+    }
+
+    /// Which algorithm to run (paper notation; all are exact).
+    pub fn algorithm(mut self, algorithm: Algorithm) -> Self {
+        self.cfg.algorithm = algorithm;
+        self
+    }
+
+    /// RNG seed for centroid initialisation.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Seeding strategy.
+    pub fn init(mut self, init: InitMethod) -> Self {
+        self.cfg.init = init;
+        self
+    }
+
+    /// Hard cap on Lloyd rounds.
+    pub fn max_iters(mut self, max_iters: usize) -> Self {
+        self.cfg.max_iters = max_iters;
+        self
+    }
+
+    /// Wall-clock limit for the fit.
+    pub fn time_limit(mut self, limit: Duration) -> Self {
+        self.cfg.time_limit = Some(limit);
+        self
+    }
+
+    /// The underlying run configuration.
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Cluster `data` to convergence on the shared runtime and return
+    /// an owned model.
+    pub fn fit(&self, rt: &Runtime, data: &dyn DataSource) -> Result<FittedModel> {
+        let out = Runner::new(&self.cfg).run_on(rt, data)?;
+        Ok(FittedModel::from_parts(out.centroids, data.d(), out.report))
+    }
+
+    /// Fit, returning the model together with the training labels. The
+    /// labels come from the fit's final assignment round (no extra
+    /// scan); on a converged fit they equal `predict` on the training
+    /// data up to exact distance ties.
+    pub fn fit_predict(
+        &self,
+        rt: &Runtime,
+        data: &dyn DataSource,
+    ) -> Result<(FittedModel, Vec<u32>)> {
+        let out = Runner::new(&self.cfg).run_on(rt, data)?;
+        let labels = out.assignments;
+        let model = FittedModel::from_parts(out.centroids, data.d(), out.report);
+        Ok((model, labels))
+    }
+}
+
+/// An owned, fitted clustering model: final centroids plus the fit's
+/// telemetry. Independent of the training data's lifetime — keep it,
+/// ship it, [`save`](FittedModel::save) it.
+#[derive(Clone, Debug)]
+pub struct FittedModel {
+    k: usize,
+    d: usize,
+    /// Row-major `k×d` centroids.
+    centroids: Vec<f64>,
+    /// `‖c(j)‖²`, precomputed for the predict scan.
+    cnorms: Vec<f64>,
+    report: RunReport,
+}
+
+impl FittedModel {
+    fn from_parts(centroids: Vec<f64>, d: usize, report: RunReport) -> Self {
+        let cnorms = sqnorms_rows(&centroids, d);
+        FittedModel {
+            k: report.k,
+            d,
+            centroids,
+            cnorms,
+            report,
+        }
+    }
+
+    /// Number of clusters.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Sample dimension the model was fitted on.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Final centroids, row-major `k×d`.
+    pub fn centroids(&self) -> &[f64] {
+        &self.centroids
+    }
+
+    /// Telemetry of the fit that produced this model (loaded models
+    /// carry the persisted subset: iterations, convergence, mse, …).
+    pub fn report(&self) -> &RunReport {
+        &self.report
+    }
+
+    /// Algorithm that fitted the model (paper notation).
+    pub fn algorithm(&self) -> &str {
+        &self.report.algorithm
+    }
+
+    /// Nearest-centroid labels for `data`, sharded over the runtime's
+    /// pool. Counter-free (serving path), and bit-identical at any
+    /// runtime width: each query row is scanned independently with the
+    /// same blocked kernel and first-lowest-index tie-breaking.
+    pub fn predict(&self, rt: &Runtime, data: &dyn DataSource) -> Result<Vec<u32>> {
+        if data.d() != self.d {
+            return Err(EakmError::Config(format!(
+                "predict: model expects d={}, data has d={}",
+                self.d,
+                data.d()
+            )));
+        }
+        let n = data.n();
+        let mut out = vec![0u32; n];
+        {
+            let cells = SharedSliceMut::new(&mut out);
+            rt.pool().for_each_chunk(n, PREDICT_CHUNK, |lo, hi| {
+                // chunks are disjoint sample ranges; labels are written
+                // element-wise through the shared fit/serve scan kernel
+                let labels = unsafe { cells.range(lo, hi) };
+                blocked_scan(data, &self.centroids, &self.cnorms, lo, hi, |i, row| {
+                    labels[i] = argmin(row).expect("k ≥ 1") as u32;
+                });
+            });
+        }
+        Ok(out)
+    }
+
+    /// Nearest centroid of a single query point: `(label, distance)`.
+    /// The one-point serving hot path — no dispatch, no allocation.
+    pub fn nearest(&self, point: &[f64]) -> (u32, f64) {
+        assert_eq!(point.len(), self.d, "query dimension mismatch");
+        let mut best = (0u32, f64::INFINITY);
+        for (j, c) in self.centroids.chunks_exact(self.d).enumerate() {
+            let dist = sqdist(point, c);
+            if dist < best.1 {
+                best = (j as u32, dist);
+            }
+        }
+        (best.0, best.1.sqrt())
+    }
+
+    /// Serialise to the versioned JSON model format.
+    pub fn to_json(&self) -> Json {
+        let r = &self.report;
+        Json::obj()
+            .field("format", MODEL_FORMAT)
+            .field("version", MODEL_VERSION)
+            .field("algorithm", r.algorithm.as_str())
+            .field("dataset", r.dataset.as_str())
+            .field("k", self.k)
+            .field("d", self.d)
+            // seed is a string: u64 does not fit f64 beyond 2^53
+            .field("seed", r.seed.to_string())
+            .field("iterations", r.iterations)
+            .field("converged", r.converged)
+            .field("mse", r.mse)
+            .field("threads", r.threads)
+            .field("wall_secs", r.wall.as_secs_f64())
+            .field(
+                "centroids",
+                Json::Arr(self.centroids.iter().map(|&v| Json::Num(v)).collect()),
+            )
+    }
+
+    /// Deserialise from the JSON model format, revalidating shape and
+    /// finiteness. Centroids round-trip bit-identically, so a loaded
+    /// model predicts exactly like the one that was saved.
+    pub fn from_json(json: &Json) -> Result<FittedModel> {
+        let bad = |what: &str| EakmError::Data(format!("model file: {what}"));
+        if json.get("format").and_then(Json::as_str) != Some(MODEL_FORMAT) {
+            return Err(bad("not an eakm model (missing format marker)"));
+        }
+        match json.get("version").and_then(Json::as_usize) {
+            Some(MODEL_VERSION) => {}
+            Some(v) => return Err(bad(&format!("unsupported version {v}"))),
+            None => return Err(bad("missing version")),
+        }
+        let k = json
+            .get("k")
+            .and_then(Json::as_usize)
+            .filter(|&k| k > 0)
+            .ok_or_else(|| bad("missing/invalid k"))?;
+        let d = json
+            .get("d")
+            .and_then(Json::as_usize)
+            .filter(|&d| d > 0)
+            .ok_or_else(|| bad("missing/invalid d"))?;
+        let centroids_json = json
+            .get("centroids")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("missing centroids"))?;
+        if centroids_json.len() != k * d {
+            return Err(bad(&format!(
+                "centroids have {} values, expected k×d = {}",
+                centroids_json.len(),
+                k * d
+            )));
+        }
+        let mut centroids = Vec::with_capacity(k * d);
+        for v in centroids_json {
+            match v.as_f64() {
+                Some(x) if x.is_finite() => centroids.push(x),
+                _ => return Err(bad("non-finite centroid value")),
+            }
+        }
+        let seed = json
+            .get("seed")
+            .and_then(Json::as_str)
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| bad("missing/invalid seed"))?;
+        let report = RunReport {
+            algorithm: json
+                .get("algorithm")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            dataset: json
+                .get("dataset")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            k,
+            seed,
+            iterations: json
+                .get("iterations")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            converged: json
+                .get("converged")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            mse: json.get("mse").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            // try_from: a corrupt wall_secs (e.g. 1e30) must degrade to
+            // zero, not panic the load path
+            wall: json
+                .get("wall_secs")
+                .and_then(Json::as_f64)
+                .and_then(|w| Duration::try_from_secs_f64(w).ok())
+                .unwrap_or(Duration::ZERO),
+            threads: json.get("threads").and_then(Json::as_usize).unwrap_or(0),
+            phases: PhaseTimes::default(),
+            counters: Counters::default(),
+            round_times: Vec::new(),
+        };
+        Ok(FittedModel::from_parts(centroids, d, report))
+    }
+
+    /// Persist as JSON at `path` (the serving story: models survive
+    /// process restarts).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    /// Load a model previously written by [`FittedModel::save`].
+    pub fn load(path: &Path) -> Result<FittedModel> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("eakm-model-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn fit_produces_owned_model() {
+        let rt = Runtime::serial();
+        let ds = blobs(400, 3, 5, 0.1, 4);
+        let model = Kmeans::new(5)
+            .algorithm(Algorithm::ExpNs)
+            .seed(3)
+            .fit(&rt, &ds)
+            .unwrap();
+        assert_eq!(model.k(), 5);
+        assert_eq!(model.d(), 3);
+        assert_eq!(model.centroids().len(), 15);
+        assert_eq!(model.algorithm(), "exp-ns");
+        assert!(model.report().converged);
+        drop(ds); // the model owns its state — data can go away
+        assert!(model.centroids().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn predict_rejects_dimension_mismatch() {
+        let rt = Runtime::serial();
+        let ds = blobs(100, 4, 3, 0.1, 1);
+        let model = Kmeans::new(3).seed(1).fit(&rt, &ds).unwrap();
+        let wrong = blobs(10, 5, 2, 0.1, 2);
+        assert!(matches!(
+            model.predict(&rt, &wrong),
+            Err(EakmError::Config(_))
+        ));
+    }
+
+    #[test]
+    fn nearest_matches_predict() {
+        let rt = Runtime::serial();
+        let ds = blobs(300, 4, 6, 0.2, 5);
+        let model = Kmeans::new(6).seed(2).fit(&rt, &ds).unwrap();
+        let queries = blobs(40, 4, 6, 0.3, 11);
+        let labels = model.predict(&rt, &queries).unwrap();
+        for i in 0..queries.n() {
+            let (j, dist) = model.nearest(queries.row(i));
+            // same winner up to exact FP ties between the two kernels:
+            // compare achieved distances, not indices
+            let d_pred = sqdist(
+                queries.row(i),
+                &model.centroids()[labels[i] as usize * 4..(labels[i] as usize + 1) * 4],
+            )
+            .sqrt();
+            assert!((d_pred - dist).abs() <= 1e-9 * (1.0 + dist), "query {i} ({j})");
+        }
+    }
+
+    #[test]
+    fn fit_predict_returns_training_labels() {
+        let rt = Runtime::serial();
+        let ds = blobs(500, 3, 4, 0.1, 9);
+        let (model, labels) = Kmeans::new(4)
+            .algorithm(Algorithm::Sta)
+            .seed(1)
+            .fit_predict(&rt, &ds)
+            .unwrap();
+        assert_eq!(labels.len(), ds.n());
+        assert!(model.report().converged);
+        // converged sta: labels are exactly the nearest-centroid rule
+        let fresh = model.predict(&rt, &ds).unwrap();
+        assert_eq!(labels, fresh);
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_identical() {
+        let rt = Runtime::serial();
+        let ds = blobs(250, 6, 7, 0.2, 12);
+        let model = Kmeans::new(7)
+            .algorithm(Algorithm::SelkNs)
+            .seed(99)
+            .fit(&rt, &ds)
+            .unwrap();
+        let path = tmpfile("roundtrip.json");
+        model.save(&path).unwrap();
+        let back = FittedModel::load(&path).unwrap();
+        assert_eq!(back.k(), model.k());
+        assert_eq!(back.d(), model.d());
+        assert_eq!(back.algorithm(), model.algorithm());
+        assert_eq!(back.report().seed, 99);
+        assert_eq!(back.report().iterations, model.report().iterations);
+        let bits = |c: &[f64]| c.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(back.centroids()), bits(model.centroids()));
+        assert_eq!(bits(&back.cnorms), bits(&model.cnorms));
+    }
+
+    #[test]
+    fn load_rejects_malformed_models() {
+        let cases = [
+            ("garbage.json", "not json at all"),
+            ("noformat.json", r#"{"k":1}"#),
+            (
+                "badver.json",
+                r#"{"format":"eakm-fitted-model","version":9,"k":1,"d":1,"seed":"0","centroids":[0]}"#,
+            ),
+            (
+                "shape.json",
+                r#"{"format":"eakm-fitted-model","version":1,"k":2,"d":2,"seed":"0","centroids":[0,0,0]}"#,
+            ),
+            (
+                "nonfinite.json",
+                r#"{"format":"eakm-fitted-model","version":1,"k":1,"d":1,"seed":"0","centroids":[null]}"#,
+            ),
+        ];
+        for (name, text) in cases {
+            let path = tmpfile(name);
+            std::fs::write(&path, text).unwrap();
+            assert!(FittedModel::load(&path).is_err(), "{name}");
+        }
+    }
+}

@@ -1,8 +1,10 @@
 //! The execution runtime.
 //!
 //! [`pool`] is the heart of the crate's parallelism: a persistent,
-//! dependency-free worker pool spawned once per
-//! [`Engine`](crate::coordinator::Engine) and parked between rounds.
+//! dependency-free worker pool, parked between dispatches. [`rt`] wraps
+//! it as the shared, process-lifetime [`Runtime`] that any number of
+//! fits and predicts reuse (engines can also own a private pool via
+//! [`Engine::new`](crate::coordinator::Engine::new), the legacy path).
 //! The coordinator runs *every* phase of a round on it — the sharded
 //! assignment scan, the delta centroid update, and the per-round
 //! centroid-side builds (`cc` matrix, annuli, group maxima, ns history)
@@ -17,6 +19,7 @@
 //! `rust/Cargo.toml`).
 
 pub mod pool;
+pub mod rt;
 
 #[cfg(feature = "xla")]
 pub mod backend;
@@ -28,3 +31,4 @@ pub use backend::{ArtifactSpec, XlaAssignBackend};
 #[cfg(feature = "xla")]
 pub use pjrt::PjrtRuntime;
 pub use pool::{SharedSliceMut, WorkerPool};
+pub use rt::Runtime;

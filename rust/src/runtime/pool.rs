@@ -30,6 +30,16 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
+/// OS threads ever spawned by pools in this process — lets tests assert
+/// that a shared [`Runtime`](crate::runtime::Runtime) amortises
+/// spawning across fits instead of re-spawning per engine.
+static THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Total pool worker threads spawned by this process so far.
+pub fn threads_spawned_total() -> usize {
+    THREADS_SPAWNED.load(Ordering::SeqCst)
+}
+
 /// The type-erased closure workers execute; the argument is the worker
 /// index in `0..width` (0 is the caller).
 type Task = dyn Fn(usize) + Sync;
@@ -83,7 +93,7 @@ impl WorkerPool {
             work: Condvar::new(),
             done: Condvar::new(),
         });
-        let handles = (1..threads)
+        let handles: Vec<JoinHandle<()>> = (1..threads)
             .map(|w| {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
@@ -92,6 +102,7 @@ impl WorkerPool {
                     .expect("spawn pool worker")
             })
             .collect();
+        THREADS_SPAWNED.fetch_add(handles.len(), Ordering::SeqCst);
         WorkerPool {
             shared,
             gate: Mutex::new(()),

@@ -1,0 +1,107 @@
+//! [`Runtime`] — the process-lifetime execution context.
+//!
+//! PR 1 made the worker pool persistent *per engine*; `Runtime` makes it
+//! persistent *per process*: one pool, spawned once, reused by any
+//! number of fits ([`Kmeans::fit`](crate::model::Kmeans::fit)) and
+//! predicts ([`FittedModel::predict`](crate::model::FittedModel::predict)).
+//! Under serving traffic this turns thread spawning from a per-request
+//! cost into a startup cost.
+//!
+//! Results remain bit-identical across runtimes of any width — the pool
+//! only executes element-wise work and order-fixed reductions (see
+//! [`pool`](crate::runtime::pool)).
+
+use crate::runtime::pool::WorkerPool;
+
+/// Sentinel width: resolve from the machine's available parallelism.
+/// (`config::AUTO_THREADS` is the same sentinel.)
+pub const AUTO: usize = 0;
+
+/// Resolve a thread-count sentinel: [`AUTO`] (0) becomes the machine's
+/// available parallelism (≥ 1). The single resolver shared by
+/// [`Runtime::new`] and
+/// [`RunConfig::resolved_threads`](crate::config::RunConfig::resolved_threads).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == AUTO {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// A shared execution runtime owning one persistent [`WorkerPool`].
+///
+/// Cheap to pass by reference, `Sync` (dispatches from several threads
+/// are serialised by the pool), and reusable for the life of the
+/// process:
+///
+/// ```no_run
+/// use eakm::prelude::*;
+///
+/// let rt = Runtime::new(4);
+/// let data = eakm::data::synth::blobs(10_000, 8, 50, 0.05, 42);
+/// let model = Kmeans::new(50).seed(7).fit(&rt, &data).unwrap();
+/// let labels = model.predict(&rt, &data).unwrap(); // same pool, no respawn
+/// # let _ = labels;
+/// ```
+pub struct Runtime {
+    pool: WorkerPool,
+}
+
+impl Runtime {
+    /// Spawn a runtime of `threads` participants ([`AUTO`] = the
+    /// machine's available parallelism). The calling thread counts as
+    /// one participant, so `threads == 1` spawns no OS threads.
+    pub fn new(threads: usize) -> Self {
+        Runtime {
+            pool: WorkerPool::new(resolve_threads(threads)),
+        }
+    }
+
+    /// A runtime sized from the machine's available parallelism.
+    pub fn auto() -> Self {
+        Self::new(AUTO)
+    }
+
+    /// A single-threaded runtime (everything runs on the caller).
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Resolved worker count (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.pool.width()
+    }
+
+    /// The underlying pool (coordinator internals dispatch through it).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_resolution() {
+        assert_eq!(Runtime::new(3).threads(), 3);
+        assert_eq!(Runtime::serial().threads(), 1);
+        assert!(Runtime::auto().threads() >= 1);
+    }
+
+    #[test]
+    fn pool_is_shared_and_reusable() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let rt = Runtime::new(4);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..10 {
+            rt.pool().broadcast(|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 40);
+    }
+}

@@ -1,0 +1,56 @@
+//! One shared `Runtime` must amortise its pool across the whole
+//! process: multiple fits and predicts, zero re-spawns.
+//!
+//! This file intentionally holds a single test: it asserts on the
+//! process-global spawn counter, so it must be the only pool creator in
+//! its test binary.
+
+use eakm::prelude::*;
+use eakm::runtime::pool::threads_spawned_total;
+
+#[test]
+fn one_runtime_drives_many_fits_and_predicts_without_respawning() {
+    let data = eakm::data::synth::blobs(2_000, 6, 10, 0.15, 1);
+    let queries = eakm::data::synth::blobs(600, 6, 10, 0.2, 42);
+
+    // creating the runtime spawns its workers (width 4 → 3 OS threads)...
+    let before_runtime = threads_spawned_total();
+    let rt = Runtime::new(4);
+    assert_eq!(threads_spawned_total(), before_runtime + 3);
+
+    // ...and everything after rides the same pool: two fits with
+    // different algorithms, predicts from both models
+    let spawned = threads_spawned_total();
+    let model_a = Kmeans::new(10)
+        .algorithm(Algorithm::ExpNs)
+        .seed(1)
+        .fit(&rt, &data)
+        .unwrap();
+    let model_b = Kmeans::new(10)
+        .algorithm(Algorithm::SelkNs)
+        .seed(2)
+        .fit(&rt, &data)
+        .unwrap();
+    let labels_a = model_a.predict(&rt, &queries).unwrap();
+    let labels_b = model_b.predict(&rt, &queries).unwrap();
+    assert_eq!(
+        threads_spawned_total(),
+        spawned,
+        "fit/predict on a shared Runtime must not spawn threads"
+    );
+
+    assert!(model_a.report().converged);
+    assert!(model_b.report().converged);
+    assert_eq!(model_a.report().threads, 4);
+    assert_eq!(labels_a.len(), queries.n());
+    assert_eq!(labels_b.len(), queries.n());
+
+    // exactness: both algorithms fit the same seed → same clustering
+    let bits = |c: &[f64]| c.iter().map(|v| v.to_bits()).collect::<Vec<u64>>();
+    let model_c = Kmeans::new(10)
+        .algorithm(Algorithm::Sta)
+        .seed(1)
+        .fit(&rt, &data)
+        .unwrap();
+    assert_eq!(bits(model_a.centroids()), bits(model_c.centroids()));
+}

@@ -1,0 +1,116 @@
+//! Integration tests for the fit/predict service API: predict agrees
+//! with a fresh nearest-centroid scan, is bit-identical across runtime
+//! widths, and survives a JSON save → load round-trip unchanged.
+
+use eakm::linalg::{argmin, sqdist, sqdist_batch_block, sqnorms_rows};
+use eakm::prelude::*;
+
+/// Reference labels: an independent nearest-centroid scan over the same
+/// public batch kernel `predict` uses (bit-identical arithmetic), with
+/// first-lowest-index tie-breaking.
+fn fresh_scan(model: &FittedModel, data: &Dataset) -> Vec<u32> {
+    let (n, d, k) = (data.n(), data.d(), model.k());
+    let cnorms = sqnorms_rows(model.centroids(), d);
+    let mut row = vec![0.0; k];
+    (0..n)
+        .map(|i| {
+            sqdist_batch_block(
+                data.row(i),
+                &data.sqnorms()[i..i + 1],
+                model.centroids(),
+                &cnorms,
+                d,
+                &mut row,
+            );
+            argmin(&row).unwrap() as u32
+        })
+        .collect()
+}
+
+#[test]
+fn predict_agrees_with_fresh_scan_across_widths() {
+    let train = eakm::data::synth::blobs(3_000, 6, 12, 0.15, 3);
+    let queries = eakm::data::synth::blobs(1_100, 6, 12, 0.25, 17);
+    let rt1 = Runtime::new(1);
+    let model = Kmeans::new(12)
+        .algorithm(Algorithm::ExpNs)
+        .seed(7)
+        .fit(&rt1, &train)
+        .unwrap();
+
+    let reference = fresh_scan(&model, &queries);
+    for threads in [1usize, 4] {
+        let rt = Runtime::new(threads);
+        let labels = model.predict(&rt, &queries).unwrap();
+        assert_eq!(labels, reference, "threads={threads}");
+    }
+
+    // and the labels are genuinely nearest (independent direct-distance
+    // check, tolerance for the two kernels' rounding)
+    for (i, &a) in reference.iter().enumerate() {
+        let x = queries.row(i);
+        let d_pred = sqdist(
+            x,
+            &model.centroids()[a as usize * 6..(a as usize + 1) * 6],
+        );
+        let d_min = (0..model.k())
+            .map(|j| sqdist(x, &model.centroids()[j * 6..(j + 1) * 6]))
+            .fold(f64::INFINITY, f64::min);
+        assert!(d_pred <= d_min + 1e-9 * (1.0 + d_min), "query {i}");
+    }
+}
+
+#[test]
+fn save_load_predict_roundtrips_bit_identically() {
+    let dir = std::env::temp_dir().join(format!("eakm-service-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.json");
+
+    let train = eakm::data::synth::blobs(2_000, 9, 15, 0.1, 5);
+    let queries = eakm::data::synth::blobs(700, 9, 15, 0.2, 23);
+    let rt = Runtime::new(2);
+    let model = Kmeans::new(15)
+        .algorithm(Algorithm::SelkNs)
+        .seed(11)
+        .fit(&rt, &train)
+        .unwrap();
+    model.save(&path).unwrap();
+    let loaded = FittedModel::load(&path).unwrap();
+
+    // centroids round-trip to the exact bits...
+    let bits = |c: &[f64]| c.iter().map(|v| v.to_bits()).collect::<Vec<u64>>();
+    assert_eq!(bits(loaded.centroids()), bits(model.centroids()));
+    // ...so predictions are identical, at either width
+    for threads in [1usize, 4] {
+        let rtw = Runtime::new(threads);
+        assert_eq!(
+            loaded.predict(&rtw, &queries).unwrap(),
+            model.predict(&rtw, &queries).unwrap(),
+            "threads={threads}"
+        );
+    }
+    // metadata survives too
+    assert_eq!(loaded.algorithm(), "selk-ns");
+    assert_eq!(loaded.report().seed, 11);
+    assert_eq!(loaded.report().k, 15);
+}
+
+#[test]
+fn fit_is_width_independent_through_the_service_api() {
+    let train = eakm::data::synth::blobs(1_500, 5, 9, 0.2, 2);
+    let fit_at = |threads: usize| {
+        let rt = Runtime::new(threads);
+        Kmeans::new(9)
+            .algorithm(Algorithm::ExpNs)
+            .seed(4)
+            .fit(&rt, &train)
+            .unwrap()
+    };
+    let m1 = fit_at(1);
+    let m4 = fit_at(4);
+    let bits = |c: &[f64]| c.iter().map(|v| v.to_bits()).collect::<Vec<u64>>();
+    assert_eq!(bits(m1.centroids()), bits(m4.centroids()));
+    assert_eq!(m1.report().iterations, m4.report().iterations);
+    assert_eq!(m1.report().mse.to_bits(), m4.report().mse.to_bits());
+    assert_eq!(m1.report().counters, m4.report().counters);
+}
