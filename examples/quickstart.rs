@@ -42,6 +42,24 @@ fn main() {
         &labels[..5]
     );
 
+    // when a full scan per round is too slow, fit on sampled batches:
+    // .batch_size(b) samples b rows per round and .batch_growth(2.0)
+    // doubles the (nested) batch until it covers the dataset — same
+    // seeded determinism, bounded per-round latency
+    let quick = Kmeans::new(40)
+        .algorithm(Algorithm::ExpNs)
+        .seed(7)
+        .batch_size(2_000)
+        .fit(&rt, &data)
+        .expect("mini-batch fit failed");
+    let schedule = quick.report().batch.as_ref().expect("mini-batch telemetry");
+    println!(
+        "mini-batch fit: {} rounds over batches {:?}, mse={:.5}",
+        quick.report().iterations,
+        schedule.schedule,
+        quick.report().mse
+    );
+
     // exactness: the accelerated fit equals plain Lloyd's from the same
     // seed — only faster
     let sta = Kmeans::new(40)

@@ -6,12 +6,17 @@
 //! 2. a long steady state answers nearest-centroid queries on one
 //!    shared [`Runtime`] — batch `predict` for bulk requests,
 //!    `nearest` for single points;
-//! 3. the model is persisted as JSON, so a restarted process serves
+//! 3. a background *refinement* loop re-fits on mini-batches under a
+//!    wall-clock budget, so the model tracks the data without ever
+//!    stealing a full-scan's worth of latency from serving;
+//! 4. the model is persisted as JSON, so a restarted process serves
 //!    bit-identical answers without refitting.
 //!
 //! ```sh
 //! cargo run --release --example serving
 //! ```
+
+use std::time::Duration;
 
 use eakm::prelude::*;
 
@@ -51,6 +56,29 @@ fn main() {
     let probe = train.row(0);
     let (label, dist) = model.nearest(probe);
     println!("single query → cluster {label} at distance {dist:.4}");
+
+    // ── refine under a latency budget: mini-batch rounds ────────────
+    // Between traffic bursts, improve the model on sampled batches: a
+    // nested batch (doubling, Newling & Fleuret 2016b) costs a fraction
+    // of a full scan per round, and the time limit caps the refinement
+    // rounds (the final labelling pass adds one full scan on top). The
+    // refit is seeded, so it is bit-identical at any pool width.
+    let refined = Kmeans::new(100)
+        .algorithm(Algorithm::Auto)
+        .seed(7)
+        .batch_size(train.n() / 16) // ~3k rows per round to start
+        .batch_growth(2.0) // nested: doubles toward the full dataset
+        .time_limit(Duration::from_millis(250)) // the latency budget
+        .fit(&rt, &train)
+        .expect("refinement failed");
+    let schedule = refined.report().batch.as_ref().expect("mini-batch telemetry");
+    println!(
+        "refined on {} mini-batch rounds (schedule {:?}…, mse {:.5} vs full-fit {:.5})",
+        refined.report().iterations,
+        &schedule.schedule[..schedule.schedule.len().min(6)],
+        refined.report().mse,
+        model.report().mse,
+    );
 
     // ── restart: load and verify bit-identical serving ──────────────
     let reloaded = FittedModel::load(&model_path).expect("load failed");

@@ -1,4 +1,10 @@
 //! Shared helpers for the paper-table bench harnesses.
+//!
+//! Each bench target compiles this module independently and uses only a
+//! subset of it, so unused-helper warnings are expected per-target —
+//! silenced file-wide to keep `clippy --all-targets -- -D warnings`
+//! green.
+#![allow(dead_code)]
 
 use std::path::PathBuf;
 
@@ -31,7 +37,6 @@ pub fn emit(name: &str, rendered: &str) {
 
 /// Persist a machine-readable companion (`BENCH_*.json`) next to the
 /// text tables so CI can diff results structurally.
-#[allow(dead_code)] // not every bench harness emits JSON yet
 pub fn emit_json(name: &str, json: &eakm::json::Json) {
     let path = tables_dir().join(name);
     if let Err(e) = std::fs::write(&path, json.to_string()) {

@@ -9,6 +9,7 @@ use eakm::bench_support::{
     env_scale, env_seeds, grid_datasets, grid_ks, high_d_indices, measure::measure_capped,
     TextTable,
 };
+use eakm::json::Json;
 
 fn main() {
     let scale = env_scale();
@@ -72,4 +73,17 @@ fn main() {
          selk faster than elk in {elk_wins}/{elk_total} experiments (paper: 16/18)\n"
     ));
     common::emit("table2_simplification.txt", &rendered);
+
+    // machine-readable companion: same cells, structurally diffable
+    let bench_json = Json::obj()
+        .field("bench", "table2_simplification")
+        .field("scale", scale)
+        .field("seeds", seeds)
+        .field("ks", Json::Arr(ks.iter().map(|&k| Json::from(k)).collect()))
+        .field("syin_wins", yin_wins as u64)
+        .field("syin_total", yin_total as u64)
+        .field("selk_wins", elk_wins as u64)
+        .field("selk_total", elk_total as u64)
+        .field("ratios", t.to_json());
+    common::emit_json("BENCH_table2.json", &bench_json);
 }

@@ -9,6 +9,7 @@ use eakm::algorithms::Algorithm;
 use eakm::bench_support::{
     env_scale, env_seeds, grid_datasets, grid_ks, measure::measure_capped, TextTable,
 };
+use eakm::json::Json;
 
 fn main() {
     let scale = env_scale();
@@ -60,4 +61,14 @@ fn main() {
     rendered.push_str(&detail.render());
     rendered.push_str("\npaper: exp 13 (all d<5), syin 24 (8<d<69), selk 6 + elk 1 (d>73), ham/ann/yin 0\n");
     common::emit("table4_fastest.txt", &rendered);
+
+    // machine-readable companion: same cells, structurally diffable
+    let bench_json = Json::obj()
+        .field("bench", "table4_fastest")
+        .field("scale", scale)
+        .field("seeds", seeds)
+        .field("ks", Json::Arr(ks.iter().map(|&k| Json::from(k)).collect()))
+        .field("summary", summary.to_json())
+        .field("detail", detail.to_json());
+    common::emit_json("BENCH_table4.json", &bench_json);
 }

@@ -9,6 +9,7 @@ use eakm::algorithms::Algorithm;
 use eakm::bench_support::{
     env_scale, env_seeds, grid_datasets, grid_ks, measure::measure_capped, TextTable,
 };
+use eakm::json::Json;
 
 fn main() {
     let scale = env_scale();
@@ -86,4 +87,16 @@ fn main() {
          q_a never worse with ns: {qa_never_worse} (paper: guaranteed by construction)\n"
     ));
     common::emit("table5_ns.txt", &rendered);
+
+    // machine-readable companion: same cells, structurally diffable
+    let bench_json = Json::obj()
+        .field("bench", "table5_ns")
+        .field("scale", scale)
+        .field("seeds", seeds)
+        .field("ks", Json::Arr(ks.iter().map(|&k| Json::from(k)).collect()))
+        .field("speedups", speedups as u64)
+        .field("total", total as u64)
+        .field("qa_never_worse", qa_never_worse)
+        .field("ratios", t.to_json());
+    common::emit_json("BENCH_table5.json", &bench_json);
 }

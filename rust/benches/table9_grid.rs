@@ -64,6 +64,5 @@ fn main() {
         }
         eprintln!();
         common::emit(&format!("{tbl}_grid_k{k}.txt"), &t.render());
-        let _ = tbl;
     }
 }

@@ -13,8 +13,9 @@ use crate::coordinator::groups::GroupData;
 use crate::coordinator::history::HistoryRound;
 use crate::coordinator::sorted_norms::SortedNorms;
 use crate::data::DataSource;
-use crate::linalg::{sqdist_batch_block, Top2};
+use crate::linalg::{argmin, sqdist_batch_block, Top2};
 use crate::metrics::Counters;
+use crate::runtime::pool::{SharedSliceMut, WorkerPool};
 
 /// What centroid-side structures an algorithm needs per round.
 /// The coordinator builds only what is requested (building e.g. the
@@ -168,6 +169,39 @@ pub fn blocked_scan(
         }
         start = stop;
     }
+}
+
+/// Minimum rows per pool chunk in [`nearest_labels`].
+const LABEL_CHUNK: usize = 128;
+
+/// Pool-sharded nearest-centroid labelling: writes every row of
+/// `data`'s label (first-lowest-index tie-breaking) into `labels`.
+///
+/// Chunks are claimed dynamically but each element's math is
+/// independent of the partition, so the output is **bit-identical at
+/// any pool width**. This is the one serving/labelling kernel —
+/// [`FittedModel::predict`](crate::model::FittedModel::predict) and the
+/// mini-batch driver's final full-data pass both call it, so their
+/// outputs agree by construction.
+pub fn nearest_labels(
+    pool: &WorkerPool,
+    data: &dyn DataSource,
+    centroids: &[f64],
+    cnorms: &[f64],
+    labels: &mut [u32],
+) {
+    // hard assert: the chunked writes below are unchecked in release,
+    // so a short buffer must fail here, not corrupt the heap
+    assert_eq!(labels.len(), data.n(), "labels buffer must hold one label per row");
+    let n = data.n();
+    let cells = SharedSliceMut::new(labels);
+    pool.for_each_chunk(n, LABEL_CHUNK, |lo, hi| {
+        // chunks are disjoint sample ranges; element-wise writes only
+        let out = unsafe { cells.range(lo, hi) };
+        blocked_scan(data, centroids, cnorms, lo, hi, |i, row| {
+            out[i] = argmin(row).expect("k ≥ 1") as u32;
+        });
+    });
 }
 
 /// Batched full distance scan over the shard `[lo, hi)`: calls

@@ -1,0 +1,146 @@
+//! Schema checks for the machine-readable `BENCH_*.json` companions the
+//! bench harnesses emit next to their text tables.
+//!
+//! CI's `bench-smoke` job runs the harnesses at a tiny scale and then
+//! asserts — through the `bench_check` binary, which is a thin argv
+//! wrapper over [`check_bench_json`] — that each JSON artifact parses,
+//! identifies the right bench, and contains its tables with the
+//! expected shape (headers present, rectangular rows, a minimum row
+//! count). That turns "the bench printed something" into a structural
+//! guarantee the uploaded perf trajectory can be diffed against.
+
+use crate::error::{EakmError, Result};
+use crate::json::Json;
+
+/// Expected shape of one [`TextTable::to_json`](crate::bench_support::TextTable::to_json)
+/// table inside a bench JSON document.
+#[derive(Clone, Debug)]
+pub struct TableSpec {
+    /// Top-level key the table sits under (e.g. `"scaling"`).
+    pub key: String,
+    /// Minimum number of data rows the table must carry.
+    pub min_rows: usize,
+}
+
+impl TableSpec {
+    /// Parse a `key:min_rows` argument (as passed to `bench_check`).
+    pub fn parse(arg: &str) -> Result<TableSpec> {
+        let (key, rows) = arg.split_once(':').ok_or_else(|| {
+            EakmError::Config(format!("expected table spec key:min_rows, got {arg:?}"))
+        })?;
+        let min_rows = rows
+            .parse::<usize>()
+            .map_err(|_| EakmError::Config(format!("bad min_rows in table spec {arg:?}")))?;
+        Ok(TableSpec {
+            key: key.to_string(),
+            min_rows,
+        })
+    }
+}
+
+/// Validate one bench JSON document: it must identify itself as
+/// `bench_name` under the `"bench"` key and contain every table in
+/// `tables` with headers, rectangular rows, and at least `min_rows`
+/// rows. Returns a one-line summary for CI logs.
+pub fn check_bench_json(text: &str, bench_name: &str, tables: &[TableSpec]) -> Result<String> {
+    let doc = Json::parse(text)?;
+    let fail = |what: String| EakmError::Data(format!("bench json: {what}"));
+    match doc.get("bench").and_then(Json::as_str) {
+        Some(b) if b == bench_name => {}
+        Some(b) => return Err(fail(format!("bench is {b:?}, expected {bench_name:?}"))),
+        None => return Err(fail("missing \"bench\" identifier".into())),
+    }
+    let mut summary = format!("{bench_name}: ok");
+    for spec in tables {
+        let table = doc
+            .get(&spec.key)
+            .ok_or_else(|| fail(format!("missing table {:?}", spec.key)))?;
+        if table.get("title").and_then(Json::as_str).is_none() {
+            return Err(fail(format!("table {:?} has no title", spec.key)));
+        }
+        let headers = table
+            .get("headers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| fail(format!("table {:?} has no headers", spec.key)))?;
+        if headers.is_empty() || headers.iter().any(|h| h.as_str().is_none()) {
+            return Err(fail(format!("table {:?} headers malformed", spec.key)));
+        }
+        let rows = table
+            .get("rows")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| fail(format!("table {:?} has no rows", spec.key)))?;
+        if rows.len() < spec.min_rows {
+            return Err(fail(format!(
+                "table {:?} has {} rows, expected ≥ {}",
+                spec.key,
+                rows.len(),
+                spec.min_rows
+            )));
+        }
+        for (i, row) in rows.iter().enumerate() {
+            let cells = row
+                .as_arr()
+                .ok_or_else(|| fail(format!("table {:?} row {i} is not an array", spec.key)))?;
+            if cells.len() != headers.len() {
+                return Err(fail(format!(
+                    "table {:?} row {i} has {} cells for {} headers",
+                    spec.key,
+                    cells.len(),
+                    headers.len()
+                )));
+            }
+        }
+        summary.push_str(&format!(" {}[{}]", spec.key, rows.len()));
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::TextTable;
+
+    fn doc() -> String {
+        let mut t = TextTable::new("T").headers(&["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["3".into(), "4".into()]);
+        Json::obj()
+            .field("bench", "demo")
+            .field("scaling", t.to_json())
+            .to_string()
+    }
+
+    #[test]
+    fn accepts_a_well_formed_document() {
+        let spec = [TableSpec::parse("scaling:2").unwrap()];
+        let summary = check_bench_json(&doc(), "demo", &spec).unwrap();
+        assert!(summary.contains("scaling[2]"), "{summary}");
+    }
+
+    #[test]
+    fn rejects_wrong_bench_missing_table_and_short_tables() {
+        let spec = [TableSpec::parse("scaling:2").unwrap()];
+        assert!(check_bench_json(&doc(), "other", &spec).is_err());
+        let missing = [TableSpec::parse("nope:1").unwrap()];
+        assert!(check_bench_json(&doc(), "demo", &missing).is_err());
+        let short = [TableSpec::parse("scaling:9").unwrap()];
+        assert!(check_bench_json(&doc(), "demo", &short).is_err());
+        assert!(check_bench_json("not json", "demo", &spec).is_err());
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let ragged = r#"{"bench":"demo","t":{"title":"T","headers":["a","b"],"rows":[["1"]]}}"#;
+        let spec = [TableSpec::parse("t:1").unwrap()];
+        assert!(check_bench_json(ragged, "demo", &spec).is_err());
+    }
+
+    #[test]
+    fn table_spec_parsing() {
+        let spec = TableSpec::parse("dispatch:3").unwrap();
+        assert_eq!(spec.key, "dispatch");
+        assert_eq!(spec.min_rows, 3);
+        assert!(TableSpec::parse("nope").is_err());
+        assert!(TableSpec::parse("x:abc").is_err());
+    }
+}

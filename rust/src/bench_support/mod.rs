@@ -3,9 +3,11 @@
 //! workload construction, repeated measurement, and text table rendering
 //! in the paper's layout.
 
+pub mod check;
 pub mod measure;
 pub mod table;
 
+pub use check::{check_bench_json, TableSpec};
 pub use measure::{measure, MeasureStats};
 pub use table::TextTable;
 

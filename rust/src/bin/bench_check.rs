@@ -1,0 +1,39 @@
+//! `bench_check` — CI gate for the `BENCH_*.json` bench artifacts.
+//!
+//! ```text
+//! bench_check <file.json> <bench-name> <table:min_rows> [<table:min_rows>...]
+//! ```
+//!
+//! Exits 0 when the file parses, identifies itself as `<bench-name>`,
+//! and contains every listed table with headers, rectangular rows, and
+//! at least `min_rows` rows (see [`eakm::bench_support::check`]).
+//! Anything else prints the failure and exits 1, failing the
+//! `bench-smoke` job.
+
+use eakm::bench_support::{check_bench_json, TableSpec};
+
+fn run(args: &[String]) -> Result<String, String> {
+    if args.len() < 3 {
+        return Err("usage: bench_check <file.json> <bench-name> <table:min_rows>...".to_string());
+    }
+    let (path, bench_name) = (&args[0], &args[1]);
+    let tables: Vec<TableSpec> = args[2..]
+        .iter()
+        .map(|a| TableSpec::parse(a).map_err(|e| e.to_string()))
+        .collect::<Result<_, _>>()?;
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    check_bench_json(&text, bench_name, &tables)
+        .map(|summary| format!("{path}: {summary}"))
+        .map_err(|e| format!("{path}: {e}"))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(summary) => println!("{summary}"),
+        Err(e) => {
+            eprintln!("bench_check: {e}");
+            std::process::exit(1);
+        }
+    }
+}

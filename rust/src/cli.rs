@@ -4,6 +4,7 @@
 //! ```text
 //! eakm run       --dataset birch --k 100 --algorithm exp-ns [--seed 0]
 //!                [--threads 1] [--scale 0.02] [--max-iters N] [--json]
+//!                [--batch-size B] [--batch-growth F]
 //!                [--config file] [--data-file path.csv|.ekb]
 //!                [--save-model model.json]
 //! eakm predict   --model model.json --data-file points.csv
@@ -73,6 +74,11 @@ common flags:
   --threads T|auto   worker threads for the whole round (default 1;
                      auto = available parallelism)
   --max-iters N      round cap
+  --batch-size B     (run) mini-batch mode: sample B rows per round
+                     instead of scanning everything (B ≥ n stays exact)
+  --batch-growth F   (run) nested batch growth per round (default 2.0 =
+                     doubling, Newling & Fleuret 2016b); 1.0 redraws a
+                     fresh batch each round
   --init M           random | kmeans++
   --json             emit the report as JSON
   --save-model PATH  (run) persist the fitted model as JSON
@@ -181,6 +187,15 @@ fn build_config(flags: &Flags) -> Result<RunConfig> {
     }
     if let Some(m) = flag_num::<usize>(flags, "max-iters")? {
         cfg.max_iters = m;
+    }
+    if let Some(b) = flag_num::<usize>(flags, "batch-size")? {
+        if b == 0 {
+            return Err(EakmError::Config("--batch-size must be ≥ 1".into()));
+        }
+        cfg.batch_size = Some(b);
+    }
+    if let Some(g) = flag_num::<f64>(flags, "batch-growth")? {
+        cfg.batch_growth = g;
     }
     if let Some(i) = flags.get("init") {
         cfg.init = InitMethod::parse(i)
@@ -517,6 +532,44 @@ mod tests {
     #[test]
     fn predict_requires_model_flag() {
         assert!(main(&s(&["predict", "--data-file", "nope.csv"])).is_err());
+    }
+
+    #[test]
+    fn run_with_batch_flags() {
+        let code = main(&s(&[
+            "run",
+            "--dataset",
+            "birch",
+            "--scale",
+            "0.01",
+            "--k",
+            "10",
+            "--algorithm",
+            "exp-ns",
+            "--batch-size",
+            "64",
+            "--batch-growth",
+            "2.0",
+            "--max-iters",
+            "20",
+            "--json",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        // degenerate knobs are rejected up front
+        assert!(main(&s(&["run", "--dataset", "birch", "--batch-size", "0"])).is_err());
+        assert!(main(&s(&[
+            "run",
+            "--dataset",
+            "birch",
+            "--k",
+            "5",
+            "--batch-size",
+            "32",
+            "--batch-growth",
+            "0.5",
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -36,6 +36,15 @@ pub struct RunConfig {
     pub history_cap: Option<usize>,
     /// Record per-round wall times in the report.
     pub record_rounds: bool,
+    /// Mini-batch mode: rows sampled per round (`None` = exact
+    /// full-batch engine). Values ≥ n run the exact engine unchanged;
+    /// values < k are clamped up to k (a batch must seat every cluster).
+    pub batch_size: Option<usize>,
+    /// Mini-batch growth factor per round: > 1 grows a *nested* batch
+    /// (old batch ⊂ new batch, Newling & Fleuret 2016b) until it covers
+    /// the dataset; exactly 1 redraws a fresh batch every round
+    /// (Sculley-style resampling). Ignored without `batch_size`.
+    pub batch_growth: f64,
 }
 
 /// Sentinel thread count: resolve from `available_parallelism`
@@ -56,6 +65,8 @@ impl RunConfig {
             history_budget: 1 << 30, // 1 GB
             history_cap: None,
             record_rounds: false,
+            batch_size: None,
+            batch_growth: 2.0, // nested doubling, the 2016b default
         }
     }
 
@@ -96,6 +107,20 @@ impl RunConfig {
         self
     }
 
+    /// Enable mini-batch rounds of (initially) `batch_size` sampled
+    /// rows (builder style). Sizes ≥ n run the exact full-batch engine.
+    pub fn batch_size(mut self, batch_size: usize) -> Self {
+        self.batch_size = Some(batch_size);
+        self
+    }
+
+    /// Set the mini-batch growth factor (builder style): > 1 nests
+    /// (doubling = 2.0), exactly 1 redraws fresh batches.
+    pub fn batch_growth(mut self, batch_growth: f64) -> Self {
+        self.batch_growth = batch_growth;
+        self
+    }
+
     /// Validate against a dataset size.
     pub fn validate(&self, n: usize) -> Result<()> {
         if self.k == 0 {
@@ -106,6 +131,15 @@ impl RunConfig {
         }
         if self.max_iters == 0 {
             return Err(EakmError::Config("max_iters must be positive".into()));
+        }
+        if self.batch_size == Some(0) {
+            return Err(EakmError::Config("batch_size must be ≥ 1".into()));
+        }
+        if !(self.batch_growth.is_finite() && self.batch_growth >= 1.0) {
+            return Err(EakmError::Config(format!(
+                "batch_growth must be a finite factor ≥ 1, got {}",
+                self.batch_growth
+            )));
         }
         Ok(())
     }
@@ -169,6 +203,14 @@ impl RunConfig {
                         .ok_or_else(|| EakmError::Config(format!("unknown init {value:?}")))?;
                 }
                 "max_iters" => cfg.max_iters = parse_num(key, value)?,
+                "batch_size" => {
+                    let b: usize = parse_num(key, value)?;
+                    if b == 0 {
+                        return Err(EakmError::Config("batch_size must be ≥ 1".into()));
+                    }
+                    cfg.batch_size = Some(b);
+                }
+                "batch_growth" => cfg.batch_growth = parse_num(key, value)?,
                 "time_limit_secs" => {
                     cfg.time_limit = Some(Duration::from_secs(parse_num(key, value)?));
                 }
@@ -235,6 +277,28 @@ mod tests {
         assert_eq!(RunConfig::new(Algorithm::Sta, 2).threads(3).resolved_threads(), 3);
         // an explicit 0 in config text is rejected (only "auto" means auto)
         assert!(RunConfig::from_str_cfg("threads = 0").is_err());
+    }
+
+    #[test]
+    fn batch_knobs_parse_and_validate() {
+        let cfg = RunConfig::from_str_cfg("batch_size = 4096\nbatch_growth = 1.5\n").unwrap();
+        assert_eq!(cfg.batch_size, Some(4096));
+        assert_eq!(cfg.batch_growth, 1.5);
+        assert!(cfg.validate(10_000).is_ok());
+        // builder mirrors the file keys
+        let cfg = RunConfig::new(Algorithm::Sta, 5).batch_size(256).batch_growth(1.0);
+        assert_eq!(cfg.batch_size, Some(256));
+        assert_eq!(cfg.batch_growth, 1.0);
+        // degenerate values are rejected, in text and at validation
+        assert!(RunConfig::from_str_cfg("batch_size = 0").is_err());
+        assert!(RunConfig::new(Algorithm::Sta, 5)
+            .batch_growth(0.5)
+            .validate(100)
+            .is_err());
+        assert!(RunConfig::new(Algorithm::Sta, 5)
+            .batch_growth(f64::NAN)
+            .validate(100)
+            .is_err());
     }
 
     #[test]

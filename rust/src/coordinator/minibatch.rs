@@ -1,0 +1,314 @@
+//! The mini-batch engine flavour: latency-bounded refinement on the
+//! [`DataSource`] seam.
+//!
+//! Each round draws a [`BatchView`] from the base source and runs the
+//! *existing* assignment + update phases over it through [`Engine`] —
+//! the batch is just another `DataSource`, so the paper's accelerated
+//! scans, the pool sharding, and the width-independence guarantee all
+//! carry over unchanged. The driver then advances the centroids itself
+//! with a decayed update over per-centroid counts:
+//!
+//! * **nested mode** (`batch_growth > 1`, Newling & Fleuret 2016b): the
+//!   batch *grows* each round, keeping every previously drawn row (old
+//!   batch ⊂ new batch), so the batch itself carries the sample history
+//!   and the update is the plain per-cluster batch mean — no point is
+//!   ever redundantly resampled. Once the batch covers the dataset the
+//!   driver hands the tail to one persistent exact [`Engine`] over the
+//!   (now full) view, restoring the accelerators' cross-round bound
+//!   reuse, and the run converges in the usual fixed-point sense.
+//! * **redraw mode** (`batch_growth == 1`): a fresh batch per round
+//!   (Sculley 2010), redrawn in place at `O(batch)` cost. History is
+//!   carried in the decayed per-centroid counts instead: cluster `j`'s
+//!   effective learning rate is `count_r(j) / (carry(j) + count_r(j))`,
+//!   which decays as samples accumulate. Redraw runs refine
+//!   indefinitely — they stop at `max_iters` or the wall-clock limit,
+//!   which is exactly the refine-under-latency-budget serving shape.
+//!
+//! Determinism: seeding and batch sampling consume serial seeded RNG
+//! streams, the per-batch engine is the coordinator's width-independent
+//! machinery, the decayed update is a serial fold over centroids, and
+//! the final full-data labelling uses the element-wise predict kernel —
+//! so a seeded mini-batch fit is **bit-identical at any thread count**,
+//! matching the pool's guarantee for full-batch runs.
+//!
+//! Cost note: growing/redrawn rounds rebuild their engine, which pays
+//! the centroid-side setup (`cc` matrix, annuli, history epoch) for a
+//! single scan. That is the price of running the real phases — the
+//! engine also keeps the paper's distance-calculation counters exact,
+//! which a bare labelling scan would not. The exact-engine tail removes
+//! this overhead where it dominates (the full-coverage convergence
+//! rounds of a nested run).
+
+use std::time::Instant;
+
+use crate::algorithms::common::nearest_labels;
+use crate::algorithms::Algorithm;
+use crate::config::RunConfig;
+use crate::coordinator::runner::{Engine, RunOutput};
+use crate::data::{BatchView, DataSource};
+use crate::error::Result;
+use crate::linalg::sqnorms_rows;
+use crate::metrics::{BatchTelemetry, Counters, PhaseTimes, RunReport};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+
+/// Label for the batch-sampling RNG stream, split from `cfg.seed` so
+/// batch draws are decorrelated from centroid seeding (which consumes
+/// the root stream exactly like the full-batch path).
+const SAMPLE_STREAM: u64 = 0xBA7C;
+
+/// Run a mini-batch fit of `cfg` over `data` on the shared runtime.
+///
+/// Callers route here only when `cfg.batch_size` is set below
+/// `data.n()` ([`Runner::run_on`](crate::coordinator::Runner::run_on)
+/// keeps batch sizes covering the dataset on the exact engine). The
+/// initial batch size is clamped to at least `cfg.k` so every cluster
+/// can seat a member.
+///
+/// `cfg.time_limit` bounds the refinement rounds; the mandatory final
+/// full-data labelling pass (one `O(n·k)` scan, needed to report
+/// assignments and MSE) runs after the budget, so total wall time is
+/// the budget plus one full scan.
+pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Result<RunOutput> {
+    let start = Instant::now();
+    let (n, d, k) = (data.n(), data.d(), cfg.k);
+    if n == 0 || d == 0 {
+        // same typed guard as Engine::build — without it a d = 0 source
+        // would panic inside the batch gather, not error
+        return Err(crate::error::EakmError::Data(format!(
+            "cannot cluster an empty data source (n={n}, d={d})"
+        )));
+    }
+    cfg.validate(n)?;
+    let b0 = cfg
+        .batch_size
+        .expect("mini-batch driver requires batch_size")
+        .clamp(k, n);
+    let growth = cfg.batch_growth;
+    let nested = growth > 1.0;
+
+    // seeding consumes the root stream exactly like the full-batch path
+    let mut counters = Counters::default();
+    let mut centroids = cfg
+        .init
+        .centroids(data, k, &mut Rng::new(cfg.seed), &mut counters);
+    let mut sample_rng = Rng::new(cfg.seed).split(SAMPLE_STREAM);
+
+    // the per-batch engine runs the configured algorithm; resolve Auto
+    // once so every round (and the report) agree
+    let mut ecfg = cfg.clone();
+    ecfg.algorithm = match cfg.algorithm {
+        Algorithm::Auto => crate::coordinator::auto::resolve(d),
+        other => other,
+    };
+
+    let mut view = BatchView::sample(data, b0, &mut sample_rng);
+    // decayed per-centroid counts carried across batches (redraw mode;
+    // nested batches carry their history in the batch itself)
+    let mut carry = vec![0.0f64; k];
+    let mut phases = PhaseTimes::default();
+    let mut schedule = Vec::new();
+    let mut round_times = Vec::new();
+    let mut name = ecfg.algorithm.name().to_string();
+    let mut converged = false;
+    let mut rounds = 0;
+
+    while rounds < cfg.max_iters {
+        if let Some(limit) = cfg.time_limit {
+            if start.elapsed() > limit {
+                break;
+            }
+        }
+        if nested && view.is_full() {
+            // the nested batch now covers the dataset: hand the tail to
+            // one persistent exact engine so the accelerators' per-round
+            // bound reuse is restored (rebuilding per round would pay a
+            // cold full scan every round)
+            let mut engine = Engine::on_runtime_with_centroids(&view, &ecfg, rt, centroids)?;
+            name = engine.name().to_string();
+            while !engine.converged() && rounds < cfg.max_iters {
+                if let Some(limit) = cfg.time_limit {
+                    if start.elapsed() > limit {
+                        break;
+                    }
+                }
+                let t_round = Instant::now();
+                engine.step();
+                if cfg.record_rounds {
+                    round_times.push(t_round.elapsed());
+                }
+                rounds += 1;
+                schedule.push(view.n());
+            }
+            converged = engine.converged();
+            centroids = engine.centroids().to_vec();
+            counters.merge(&engine.counters());
+            phases.merge(&engine.phases());
+            break;
+        }
+        let t_round = Instant::now();
+        // assignment scan + cluster-sum build run unchanged through the
+        // engine, seeded from the current centroids
+        let (sums, counts) = {
+            let engine = Engine::on_runtime_with_centroids(&view, &ecfg, rt, centroids.clone())?;
+            name = engine.name().to_string();
+            counters.merge(&engine.counters());
+            phases.merge(&engine.phases());
+            let update = engine.update_state();
+            (update.sums().to_vec(), update.counts().to_vec())
+        };
+
+        // decayed centroid update with carried per-centroid counts;
+        // empty clusters keep their position (as in the exact engine)
+        let t_update = Instant::now();
+        let mut moved_any = false;
+        for (j, carried) in carry.iter_mut().enumerate() {
+            let count = counts[j] as f64;
+            let prior = if nested { 0.0 } else { *carried };
+            if count > 0.0 {
+                let row = &mut centroids[j * d..(j + 1) * d];
+                let sum = &sums[j * d..(j + 1) * d];
+                let inv = 1.0 / (prior + count);
+                for (t, c) in row.iter_mut().enumerate() {
+                    let next = (prior * *c + sum[t]) * inv;
+                    if next != *c {
+                        moved_any = true;
+                    }
+                    *c = next;
+                }
+            }
+            *carried = if nested { count } else { *carried + count };
+        }
+        phases.update += t_update.elapsed();
+
+        if cfg.record_rounds {
+            round_times.push(t_round.elapsed());
+        }
+        rounds += 1;
+        schedule.push(view.n());
+        if !moved_any && view.is_full() {
+            // the batch is the whole dataset and nothing moved: this is
+            // the exact Lloyd fixed point. Reachable only in redraw
+            // mode when the k-clamp raised b0 to n (k = n); nested
+            // full views are consumed by the tail branch above.
+            converged = true;
+            break;
+        }
+        if nested {
+            let next = ((view.n() as f64 * growth).ceil() as usize)
+                .max(view.n() + 1)
+                .min(n);
+            view.grow(data, next, &mut sample_rng);
+        } else {
+            // fresh Sculley-style batch, reusing the pool + buffers:
+            // O(batch) per round, not O(n)
+            view.resample(data, &mut sample_rng);
+        }
+    }
+
+    // final full-data labelling on the fitted centroids — the same
+    // element-wise kernel as `FittedModel::predict`, width-independent
+    let t_scan = Instant::now();
+    let cnorms = sqnorms_rows(&centroids, d);
+    let mut assignments = vec![0u32; n];
+    nearest_labels(rt.pool(), data, &centroids, &cnorms, &mut assignments);
+    phases.scan += t_scan.elapsed();
+    let mse = data.mse(&centroids, &assignments);
+    let wall = start.elapsed();
+
+    let report = RunReport {
+        algorithm: name,
+        dataset: data.name().to_string(),
+        k,
+        seed: cfg.seed,
+        iterations: rounds,
+        converged,
+        mse,
+        wall,
+        threads: rt.threads(),
+        phases,
+        counters,
+        round_times,
+        batch: Some(BatchTelemetry {
+            batch_size: b0,
+            growth,
+            schedule,
+        }),
+    };
+    Ok(RunOutput {
+        assignments,
+        centroids,
+        iterations: rounds,
+        converged,
+        mse,
+        counters,
+        wall,
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Runner;
+    use crate::data::synth::blobs;
+
+    fn cfg(k: usize) -> RunConfig {
+        RunConfig::new(Algorithm::ExpNs, k).seed(5).max_iters(60)
+    }
+
+    #[test]
+    fn nested_run_doubles_until_coverage_and_converges() {
+        let ds = blobs(2_000, 4, 6, 0.1, 3);
+        let out = Runner::new(&cfg(6).batch_size(125).batch_growth(2.0))
+            .run(&ds)
+            .unwrap();
+        assert!(out.converged, "nested run should reach the Lloyd fixed point");
+        let batch = out.report.batch.as_ref().expect("batch telemetry recorded");
+        assert_eq!(batch.batch_size, 125);
+        assert_eq!(batch.growth, 2.0);
+        // the schedule is the doubling staircase, capped at n
+        assert_eq!(batch.schedule[0], 125);
+        assert!(batch.schedule.windows(2).all(|w| w[1] >= w[0]));
+        assert_eq!(*batch.schedule.last().unwrap(), 2_000);
+        assert_eq!(out.assignments.len(), 2_000);
+        assert!(out.mse.is_finite());
+    }
+
+    #[test]
+    fn redraw_run_keeps_a_flat_schedule() {
+        let ds = blobs(1_500, 3, 5, 0.15, 7);
+        let out = Runner::new(&cfg(5).batch_size(200).batch_growth(1.0).max_iters(12))
+            .run(&ds)
+            .unwrap();
+        let batch = out.report.batch.as_ref().unwrap();
+        assert_eq!(batch.schedule, vec![200; 12]);
+        assert!(!out.converged, "redraw refines until the round budget");
+        assert!(out.mse.is_finite());
+    }
+
+    #[test]
+    fn batch_size_is_clamped_to_seat_every_cluster() {
+        let ds = blobs(800, 3, 10, 0.1, 2);
+        // requested batch smaller than k: clamped up, not an error
+        let out = Runner::new(&cfg(10).batch_size(4)).run(&ds).unwrap();
+        assert_eq!(out.report.batch.as_ref().unwrap().batch_size, 10);
+    }
+
+    #[test]
+    fn same_seed_reproduces_bit_identically_and_seeds_differ() {
+        let ds = blobs(1_800, 4, 7, 0.12, 9);
+        let config = cfg(7).batch_size(190).batch_growth(2.0);
+        let a = Runner::new(&config).run(&ds).unwrap();
+        let b = Runner::new(&config).run(&ds).unwrap();
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.mse.to_bits(), b.mse.to_bits());
+        assert_eq!(a.report.batch, b.report.batch);
+        let c = Runner::new(&config.seed(99)).run(&ds).unwrap();
+        assert_ne!(
+            a.centroids.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            c.centroids.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "a different seed must draw different batches/seeding"
+        );
+    }
+}

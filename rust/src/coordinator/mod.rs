@@ -1,5 +1,7 @@
 //! The coordination layer: per-round centroid-side structures, the
-//! update step, thread-sharded execution, and the round loop.
+//! update step, thread-sharded execution, the round loop, and the
+//! mini-batch engine flavour ([`minibatch`]) that drives the same
+//! phases over sampled [`BatchView`](crate::data::BatchView)s.
 //!
 //! ## Parallel architecture
 //!
@@ -34,6 +36,7 @@ pub mod auto;
 pub mod ccdist;
 pub mod groups;
 pub mod history;
+pub mod minibatch;
 pub mod parallel;
 pub mod round_ctx;
 pub mod runner;

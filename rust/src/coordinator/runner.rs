@@ -11,8 +11,11 @@
 //! thread count — the legacy one-shot configuration).
 //!
 //! Sample data is read through the [`DataSource`] seam, so engines run
-//! unchanged over any row source (in-memory [`Dataset`](crate::data::Dataset),
-//! future shard/mini-batch sources).
+//! unchanged over any row source — the in-memory
+//! [`Dataset`](crate::data::Dataset), the mini-batch
+//! [`BatchView`](crate::data::BatchView) (driven per batch by
+//! [`minibatch`](crate::coordinator::minibatch) via
+//! [`Engine::on_runtime_with_centroids`]), or future shard sources.
 
 use std::time::{Duration, Instant};
 
@@ -25,7 +28,7 @@ use crate::coordinator::parallel::{make_shards_for, run_shards};
 use crate::coordinator::round_ctx::RoundCtxOwner;
 use crate::coordinator::update::UpdateState;
 use crate::data::DataSource;
-use crate::error::Result;
+use crate::error::{EakmError, Result};
 use crate::metrics::{Counters, PhaseTimes, RunReport};
 use crate::rng::Rng;
 use crate::runtime::pool::WorkerPool;
@@ -78,20 +81,34 @@ impl<'a> Engine<'a> {
     /// [`Engine::on_runtime`] when running more than once per process.
     pub fn new(data: &'a dyn DataSource, cfg: &RunConfig) -> Result<Self> {
         let pool = PoolHandle::Owned(WorkerPool::new(cfg.resolved_threads()));
-        Self::build_resolved(data, cfg, pool)
+        Self::build_resolved(data, cfg, pool, None)
     }
 
     /// Build on a shared [`Runtime`]: the pool is borrowed, nothing is
     /// spawned, and `cfg.threads` is ignored in favour of the runtime's
     /// width.
     pub fn on_runtime(data: &'a dyn DataSource, cfg: &RunConfig, rt: &'a Runtime) -> Result<Self> {
-        Self::build_resolved(data, cfg, PoolHandle::Shared(rt.pool()))
+        Self::build_resolved(data, cfg, PoolHandle::Shared(rt.pool()), None)
+    }
+
+    /// As [`Engine::on_runtime`], but seeded from explicit `centroids`
+    /// (row-major `k×d`) instead of `cfg.init` — the mini-batch driver
+    /// rebuilds an engine per batch and continues from the current
+    /// model state without consuming the seeding RNG stream.
+    pub fn on_runtime_with_centroids(
+        data: &'a dyn DataSource,
+        cfg: &RunConfig,
+        rt: &'a Runtime,
+        centroids: Vec<f64>,
+    ) -> Result<Self> {
+        Self::build_resolved(data, cfg, PoolHandle::Shared(rt.pool()), Some(centroids))
     }
 
     fn build_resolved(
         data: &'a dyn DataSource,
         cfg: &RunConfig,
         pool: PoolHandle<'a>,
+        initial: Option<Vec<f64>>,
     ) -> Result<Self> {
         let alg = match cfg.algorithm {
             Algorithm::Auto => crate::coordinator::auto::resolve(data.d()),
@@ -102,6 +119,7 @@ impl<'a> Engine<'a> {
             cfg,
             &move |lo, len, k, g| alg.make_shard(lo, len, k, g),
             pool,
+            initial,
         )
     }
 
@@ -113,7 +131,7 @@ impl<'a> Engine<'a> {
         factory: &ShardFactory,
     ) -> Result<Self> {
         let pool = PoolHandle::Owned(WorkerPool::new(cfg.resolved_threads()));
-        Self::build(data, cfg, factory, pool)
+        Self::build(data, cfg, factory, pool, None)
     }
 
     fn build(
@@ -121,7 +139,17 @@ impl<'a> Engine<'a> {
         cfg: &RunConfig,
         factory: &ShardFactory,
         pool: PoolHandle<'a>,
+        initial: Option<Vec<f64>>,
     ) -> Result<Self> {
+        if data.n() == 0 || data.d() == 0 {
+            // typed guard: without it, seeding would panic on a
+            // degenerate source before cfg.validate could explain why
+            return Err(EakmError::Data(format!(
+                "cannot cluster an empty data source (n={}, d={})",
+                data.n(),
+                data.d()
+            )));
+        }
         cfg.validate(data.n())?;
         let (n, d, k) = (data.n(), data.d(), cfg.k);
         let g = GroupData::group_count(k);
@@ -133,7 +161,19 @@ impl<'a> Engine<'a> {
         let mut counters = Counters::default();
         let mut phases = PhaseTimes::default();
         let mut rng = Rng::new(cfg.seed);
-        let centroids = cfg.init.centroids(data, k, &mut rng, &mut counters);
+        let centroids = match initial {
+            Some(c) => {
+                if c.len() != k * d {
+                    return Err(EakmError::Invariant(format!(
+                        "initial centroids have {} values, expected k×d = {}",
+                        c.len(),
+                        k * d
+                    )));
+                }
+                c
+            }
+            None => cfg.init.centroids(data, k, &mut rng, &mut counters),
+        };
 
         // shard geometry follows the pool width; results are
         // width-independent (per-sample state, order-fixed merges)
@@ -298,6 +338,12 @@ impl<'a> Engine<'a> {
         &self.ctx
     }
 
+    /// The running cluster sums/counts behind the update step (the
+    /// mini-batch driver reads these to apply its decayed update).
+    pub fn update_state(&self) -> &UpdateState {
+        &self.update
+    }
+
     /// Shard algorithm instances (tests: downcast to inspect bounds).
     pub fn algs(&self) -> &[Box<dyn AssignStep>] {
         &self.algs
@@ -358,7 +404,17 @@ impl Runner {
 
     /// Cluster `data` to convergence (or a configured limit) on a
     /// shared [`Runtime`].
+    ///
+    /// With [`RunConfig::batch_size`] set below `data.n()`, the run is
+    /// dispatched to the [mini-batch engine](crate::coordinator::minibatch)
+    /// instead of the exact full-batch round loop; a batch size
+    /// covering the whole dataset runs the exact engine unchanged.
     pub fn run_on(&self, rt: &Runtime, data: &dyn DataSource) -> Result<RunOutput> {
+        if let Some(batch) = self.cfg.batch_size {
+            if batch < data.n() {
+                return crate::coordinator::minibatch::run_minibatch(rt, &self.cfg, data);
+            }
+        }
         let start = Instant::now();
         let mut engine = Engine::on_runtime(data, &self.cfg, rt)?;
         let mut round_times = Vec::new();
@@ -389,6 +445,7 @@ impl Runner {
             phases: engine.phases(),
             counters: engine.counters(),
             round_times,
+            batch: None,
         };
         Ok(RunOutput {
             assignments: engine.assignments().to_vec(),

@@ -221,6 +221,17 @@ impl UpdateState {
     pub fn count(&self, j: usize) -> u64 {
         self.counts[j]
     }
+
+    /// Member counts of every cluster.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Per-cluster coordinate sums, row-major `k×d` (the mini-batch
+    /// driver folds these into its decayed centroid update).
+    pub fn sums(&self) -> &[f64] {
+        &self.sums
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,246 @@
+//! [`BatchView`] — a seeded, sampled index view over any [`DataSource`].
+//!
+//! The mini-batch engine's data layer. A batch is *just another
+//! `DataSource`* (the seam PR 2 built for exactly this), so the
+//! assignment and update phases — and their cross-thread determinism
+//! guarantee — run over it unchanged. Rows are gathered once at draw
+//! time into a contiguous row-major buffer, and squared norms are
+//! gathered from the base's precomputed norms rather than recomputed,
+//! so per-row arithmetic is bit-identical with the full-batch path.
+//!
+//! Sampling is uniform without replacement from an explicit complement
+//! pool, which gives two properties the mini-batch driver relies on:
+//!
+//! * [`BatchView::grow`] extends the *same* batch — every previously
+//!   drawn row keeps its position, so old batch ⊂ new batch (the
+//!   nesting of Newling & Fleuret 2016b);
+//! * draws consume only the supplied [`Rng`] stream, so a seeded batch
+//!   sequence is identical at every thread count.
+
+use crate::data::DataSource;
+use crate::rng::Rng;
+
+/// A sampled subset of a base [`DataSource`], materialised by gather.
+///
+/// Row `i` of the view is row `indices()[i]` of the base. The view owns
+/// its gathered rows and norms, so it stays valid (and cheap to scan)
+/// while engines run over it; the base is only touched while drawing.
+#[derive(Clone, Debug)]
+pub struct BatchView {
+    /// Base-source row index of each batch row, in batch order.
+    indices: Vec<usize>,
+    /// Base rows not yet drawn (swap-remove sampling pool).
+    remaining: Vec<usize>,
+    /// Gathered rows, row-major `indices.len() × d`.
+    rows: Vec<f64>,
+    /// Gathered `‖x‖²`, aligned with `indices`.
+    sqnorms: Vec<f64>,
+    d: usize,
+    base_n: usize,
+    name: String,
+}
+
+impl BatchView {
+    /// Draw `size` distinct rows from `base` using `rng`. Keep the same
+    /// stream to [`grow`](BatchView::grow) this batch (or to draw the
+    /// next one) deterministically.
+    ///
+    /// Panics if `size` is zero or exceeds `base.n()` — the mini-batch
+    /// driver clamps to `[k, n]` before sampling.
+    pub fn sample(base: &dyn DataSource, size: usize, rng: &mut Rng) -> BatchView {
+        assert!(
+            size >= 1 && size <= base.n(),
+            "batch size {size} out of range for n={}",
+            base.n()
+        );
+        let mut view = BatchView {
+            indices: Vec::with_capacity(size),
+            remaining: (0..base.n()).collect(),
+            rows: Vec::with_capacity(size * base.d()),
+            sqnorms: Vec::with_capacity(size),
+            d: base.d(),
+            base_n: base.n(),
+            name: format!("{}[batch]", base.name()),
+        };
+        view.draw(base, size, rng);
+        view
+    }
+
+    /// As [`BatchView::sample`], with a one-shot seed.
+    pub fn seeded(base: &dyn DataSource, size: usize, seed: u64) -> BatchView {
+        Self::sample(base, size, &mut Rng::new(seed))
+    }
+
+    /// Grow the batch to `new_size` rows (clamped to the base size),
+    /// keeping every existing row in place — the nested-batch property.
+    /// A no-op when the batch already has `new_size` rows or more.
+    pub fn grow(&mut self, base: &dyn DataSource, new_size: usize, rng: &mut Rng) {
+        assert_eq!(base.n(), self.base_n, "grow must use the same base source");
+        let new_size = new_size.min(self.base_n);
+        if new_size > self.indices.len() {
+            let extra = new_size - self.indices.len();
+            self.draw(base, extra, rng);
+        }
+    }
+
+    /// Redraw the batch in place at its current size: every row goes
+    /// back into the sampling pool and a fresh batch is drawn
+    /// (Sculley-style resampling). Reuses the pool and gather buffers,
+    /// so a redraw costs `O(batch)` per round, not `O(n)`.
+    pub fn resample(&mut self, base: &dyn DataSource, rng: &mut Rng) {
+        assert_eq!(base.n(), self.base_n, "resample must use the same base source");
+        let size = self.indices.len();
+        self.remaining.append(&mut self.indices);
+        self.rows.clear();
+        self.sqnorms.clear();
+        self.draw(base, size, rng);
+    }
+
+    fn draw(&mut self, base: &dyn DataSource, extra: usize, rng: &mut Rng) {
+        for _ in 0..extra {
+            let pick = rng.below(self.remaining.len());
+            let idx = self.remaining.swap_remove(pick);
+            self.indices.push(idx);
+            self.rows.extend_from_slice(base.row(idx));
+            self.sqnorms.push(base.sqnorm(idx));
+        }
+    }
+
+    /// Base-source index of each batch row, in batch order.
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    /// Rows in the base source this view samples from.
+    pub fn base_len(&self) -> usize {
+        self.base_n
+    }
+
+    /// True once the batch covers every base row.
+    pub fn is_full(&self) -> bool {
+        self.indices.len() == self.base_n
+    }
+}
+
+impl DataSource for BatchView {
+    fn n(&self) -> usize {
+        self.indices.len()
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn rows(&self, lo: usize, len: usize) -> &[f64] {
+        &self.rows[lo * self.d..(lo + len) * self.d]
+    }
+
+    fn sqnorms_range(&self, lo: usize, len: usize) -> &[f64] {
+        &self.sqnorms[lo..lo + len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+
+    #[test]
+    fn sampling_is_reproducible_per_seed() {
+        let ds = blobs(500, 3, 4, 0.2, 1);
+        let a = BatchView::seeded(&ds, 64, 9);
+        let b = BatchView::seeded(&ds, 64, 9);
+        assert_eq!(a.indices(), b.indices());
+        assert_eq!(a.rows(0, a.n()), b.rows(0, b.n()));
+        let c = BatchView::seeded(&ds, 64, 10);
+        assert_ne!(a.indices(), c.indices(), "different seeds, same batch");
+    }
+
+    #[test]
+    fn view_gathers_rows_and_norms_from_the_base() {
+        let ds = blobs(200, 4, 3, 0.3, 7);
+        let view = BatchView::seeded(&ds, 50, 3);
+        assert_eq!(view.n(), 50);
+        assert_eq!(view.d(), 4);
+        assert_eq!(view.base_len(), 200);
+        assert!(view.name().ends_with("[batch]"));
+        for (i, &idx) in view.indices().iter().enumerate() {
+            assert_eq!(view.row(i), ds.row(idx), "row {i} ↔ base {idx}");
+            assert_eq!(view.sqnorm(i).to_bits(), ds.sqnorm(idx).to_bits());
+        }
+    }
+
+    #[test]
+    fn indices_are_distinct_and_in_range() {
+        let ds = blobs(100, 2, 2, 0.2, 5);
+        let view = BatchView::seeded(&ds, 100, 8);
+        assert!(view.is_full());
+        let mut sorted = view.indices().to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 100, "duplicates drawn");
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn grow_nests_the_old_batch() {
+        let ds = blobs(300, 3, 3, 0.2, 2);
+        let mut rng = Rng::new(4);
+        let mut view = BatchView::sample(&ds, 40, &mut rng);
+        let first = view.indices().to_vec();
+        view.grow(&ds, 80, &mut rng);
+        assert_eq!(view.n(), 80);
+        // nesting: the old draw is a prefix of the grown batch
+        assert_eq!(&view.indices()[..40], first.as_slice());
+        // and growth past the base clamps without panicking
+        view.grow(&ds, 10_000, &mut rng);
+        assert!(view.is_full());
+        let mut sorted = view.indices().to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 300);
+    }
+
+    #[test]
+    fn resample_redraws_in_place() {
+        let ds = blobs(400, 3, 4, 0.2, 6);
+        let mut rng = Rng::new(12);
+        let mut view = BatchView::sample(&ds, 60, &mut rng);
+        let first = view.indices().to_vec();
+        view.resample(&ds, &mut rng);
+        assert_eq!(view.n(), 60);
+        assert_ne!(view.indices(), first.as_slice(), "fresh draw expected");
+        // still distinct, in range, and gathered from the base
+        let mut sorted = view.indices().to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 60);
+        assert!(sorted.iter().all(|&i| i < 400));
+        for (i, &idx) in view.indices().iter().enumerate() {
+            assert_eq!(view.row(i), ds.row(idx));
+        }
+        // deterministic given the stream
+        let mut rng2 = Rng::new(12);
+        let mut view2 = BatchView::sample(&ds, 60, &mut rng2);
+        view2.resample(&ds, &mut rng2);
+        assert_eq!(view.indices(), view2.indices());
+    }
+
+    #[test]
+    fn engines_run_unchanged_over_a_batch_view() {
+        // the seam is real: a batch is clusterable like any source
+        use crate::algorithms::Algorithm;
+        use crate::config::RunConfig;
+        use crate::coordinator::Runner;
+        let ds = blobs(400, 3, 5, 0.15, 11);
+        let view = BatchView::seeded(&ds, 200, 6);
+        let cfg = RunConfig::new(Algorithm::ExpNs, 5).seed(3);
+        let out = Runner::new(&cfg).run(&view).unwrap();
+        assert!(out.converged);
+        assert_eq!(out.assignments.len(), 200);
+    }
+}

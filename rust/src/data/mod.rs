@@ -1,11 +1,14 @@
 //! Datasets: container, standardisation, synthetic generators for the 22
-//! paper datasets (Table 8 substitution), simple binary/CSV I/O, and the
-//! [`DataSource`] seam every consumer reads samples through.
+//! paper datasets (Table 8 substitution), simple binary/CSV I/O, the
+//! [`DataSource`] seam every consumer reads samples through, and the
+//! [`BatchView`] sampled view the mini-batch engine draws through it.
 
+pub mod batch;
 pub mod dataset;
 pub mod io;
 pub mod source;
 pub mod synth;
 
+pub use batch::BatchView;
 pub use dataset::Dataset;
 pub use source::DataSource;

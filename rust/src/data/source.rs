@@ -14,7 +14,9 @@
 //! access pattern of the blocked batch scan. That makes the ROADMAP's
 //! out-of-core shard layer and the mini-batch engine implementations of
 //! a trait, not rewrites of the coordinator: a shard file, an mmap, or
-//! a sampled batch can all sit behind `DataSource` unchanged.
+//! a sampled batch can all sit behind `DataSource` unchanged — the
+//! mini-batch engine's [`BatchView`](crate::data::BatchView) already
+//! does exactly this.
 //!
 //! Implementations must uphold two invariants the algorithms rely on:
 //!

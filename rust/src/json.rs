@@ -428,7 +428,7 @@ impl From<Vec<Json>> for Json {
 
 impl From<&crate::metrics::RunReport> for Json {
     fn from(r: &crate::metrics::RunReport) -> Json {
-        Json::obj()
+        let json = Json::obj()
             .field("algorithm", r.algorithm.as_str())
             .field("dataset", r.dataset.as_str())
             .field("k", r.k)
@@ -445,7 +445,17 @@ impl From<&crate::metrics::RunReport> for Json {
             .field("q_centroid", r.counters.centroid)
             .field("q_displacement", r.counters.displacement)
             .field("q_init", r.counters.init)
-            .field("q_au", r.counters.total())
+            .field("q_au", r.counters.total());
+        match &r.batch {
+            Some(b) => json
+                .field("batch_size", b.batch_size)
+                .field("batch_growth", b.growth)
+                .field(
+                    "batch_schedule",
+                    Json::Arr(b.schedule.iter().map(|&s| Json::from(s)).collect()),
+                ),
+            None => json,
+        }
     }
 }
 
@@ -573,11 +583,24 @@ mod tests {
             phases: Default::default(),
             counters: Default::default(),
             round_times: vec![],
+            batch: None,
         };
         let s = Json::from(&r).to_string();
         assert!(s.contains(r#""algorithm":"exp""#));
         assert!(s.contains(r#""wall_secs":1.5"#));
         assert!(s.contains(r#""threads":2"#));
         assert!(s.contains(r#""scan_secs":0"#));
+        assert!(!s.contains("batch_size"));
+        let r = crate::metrics::RunReport {
+            batch: Some(crate::metrics::BatchTelemetry {
+                batch_size: 128,
+                growth: 2.0,
+                schedule: vec![128, 256],
+            }),
+            ..r
+        };
+        let s = Json::from(&r).to_string();
+        assert!(s.contains(r#""batch_size":128"#));
+        assert!(s.contains(r#""batch_schedule":[128,256]"#));
     }
 }

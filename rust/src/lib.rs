@@ -79,8 +79,31 @@
 //! Sample rows are read through the [`data::DataSource`] trait
 //! (range-oriented: `rows(lo, len)` + pre-computed squared norms).
 //! [`data::Dataset`] is the in-memory implementation; out-of-core
-//! shards and mini-batch sources slot in behind the same seam without
-//! touching the coordinator.
+//! shards slot in behind the same seam without touching the
+//! coordinator, and the mini-batch engine already does —
+//! [`data::BatchView`] is a seeded, sampled view that gathers rows from
+//! any source.
+//!
+//! ## Mini-batch engine
+//!
+//! For latency-bounded refinement (the serving story), a fit can run on
+//! sampled batches instead of full scans:
+//! [`Kmeans::batch_size`](model::Kmeans::batch_size) sets the rows per
+//! round and [`Kmeans::batch_growth`](model::Kmeans::batch_growth) the
+//! schedule — a factor > 1 grows one *nested* batch (old batch ⊂ new
+//! batch, doubling by default, Newling & Fleuret 2016b) until it covers
+//! the dataset and the run converges to the exact Lloyd fixed point; a
+//! factor of exactly 1 redraws a fresh batch every round
+//! (Sculley-style) and refines until `max_iters` or the `time_limit`.
+//! A batch size covering the whole dataset runs the exact engine
+//! unchanged. Each round drives the standard assignment/update phases
+//! through the [`coordinator::Engine`] over a
+//! [`data::BatchView`], so a seeded mini-batch fit keeps the pool's
+//! guarantee: **bit-identical at any thread count**.
+//! [`metrics::RunReport`] records the realised batch schedule, and
+//! [`model::FittedModel`] persistence round-trips the mini-batch
+//! configuration. The CLI exposes the same knobs as
+//! `run --batch-size B [--batch-growth F]`.
 //!
 //! The dense-compute hot spot (blocked pairwise distances + top-2
 //! reduction) is additionally available as an AOT-compiled XLA artifact

@@ -55,6 +55,27 @@ impl PhaseTimes {
     pub fn total(&self) -> Duration {
         self.scan + self.update + self.build
     }
+
+    /// Accumulate another decomposition (the mini-batch driver folds
+    /// each per-batch engine's phases into the fit-wide report).
+    pub fn merge(&mut self, other: &PhaseTimes) {
+        self.scan += other.scan;
+        self.update += other.update;
+        self.build += other.build;
+    }
+}
+
+/// Batch-schedule telemetry for a mini-batch fit (`None` on exact
+/// full-batch runs): the resolved knobs plus the realised schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BatchTelemetry {
+    /// Initial batch size after clamping to `[k, n]`.
+    pub batch_size: usize,
+    /// Growth factor per round (1.0 = fresh redraw each round).
+    pub growth: f64,
+    /// Rows scanned in each mini-batch round, in order — nested runs
+    /// show the doubling staircase, redraw runs a flat line.
+    pub schedule: Vec<usize>,
 }
 
 /// Telemetry for one completed clustering run.
@@ -84,13 +105,24 @@ pub struct RunReport {
     pub counters: Counters,
     /// Wall time per round, if recorded.
     pub round_times: Vec<Duration>,
+    /// Mini-batch schedule telemetry (`None` for full-batch runs).
+    pub batch: Option<BatchTelemetry>,
 }
 
 impl RunReport {
     /// Render one compact human-readable line.
     pub fn summary(&self) -> String {
+        let batch = match &self.batch {
+            Some(b) => format!(
+                " batch={}→{}×{:.2}",
+                b.batch_size,
+                b.schedule.last().copied().unwrap_or(b.batch_size),
+                b.growth,
+            ),
+            None => String::new(),
+        };
         format!(
-            "{:<10} {:<14} k={:<5} iters={:<5} conv={} mse={:.6} wall={:?} q_a={} q_au={} thr={} scan={:?} upd={:?} build={:?}",
+            "{:<10} {:<14} k={:<5} iters={:<5} conv={} mse={:.6} wall={:?} q_a={} q_au={} thr={} scan={:?} upd={:?} build={:?}{batch}",
             self.algorithm,
             self.dataset,
             self.k,
@@ -152,10 +184,21 @@ mod tests {
             phases: PhaseTimes::default(),
             counters: Counters::default(),
             round_times: vec![],
+            batch: None,
         };
         let s = r.summary();
         assert!(s.contains("exp") && s.contains("birch") && s.contains("iters=42"));
         assert!(s.contains("thr=4"));
+        assert!(!s.contains("batch="));
+        let r = RunReport {
+            batch: Some(BatchTelemetry {
+                batch_size: 256,
+                growth: 2.0,
+                schedule: vec![256, 512, 1024],
+            }),
+            ..r
+        };
+        assert!(r.summary().contains("batch=256→1024×2.00"));
     }
 
     #[test]
@@ -166,5 +209,9 @@ mod tests {
             build: Duration::from_millis(3),
         };
         assert_eq!(p.total(), Duration::from_millis(10));
+        let mut q = p;
+        q.merge(&p);
+        assert_eq!(q.total(), Duration::from_millis(20));
+        assert_eq!(q.scan, Duration::from_millis(10));
     }
 }

@@ -33,7 +33,7 @@
 use std::path::Path;
 use std::time::Duration;
 
-use crate::algorithms::common::blocked_scan;
+use crate::algorithms::common::nearest_labels;
 use crate::algorithms::Algorithm;
 use crate::config::RunConfig;
 use crate::coordinator::Runner;
@@ -41,17 +41,13 @@ use crate::data::DataSource;
 use crate::error::{EakmError, Result};
 use crate::init::InitMethod;
 use crate::json::Json;
-use crate::linalg::{argmin, sqdist, sqnorms_rows};
-use crate::metrics::{Counters, PhaseTimes, RunReport};
-use crate::runtime::{Runtime, SharedSliceMut};
+use crate::linalg::{sqdist, sqnorms_rows};
+use crate::metrics::{BatchTelemetry, Counters, PhaseTimes, RunReport};
+use crate::runtime::Runtime;
 
 /// Model-file format marker and version.
 const MODEL_FORMAT: &str = "eakm-fitted-model";
 const MODEL_VERSION: usize = 1;
-
-/// Minimum query rows per pool chunk during `predict` (each chunk runs
-/// the shared blocked scan kernel over its range).
-const PREDICT_CHUNK: usize = 128;
 
 /// Fluent configuration for a clustering fit.
 ///
@@ -105,6 +101,26 @@ impl Kmeans {
     /// Wall-clock limit for the fit.
     pub fn time_limit(mut self, limit: Duration) -> Self {
         self.cfg.time_limit = Some(limit);
+        self
+    }
+
+    /// Fit on mini-batches of (initially) `batch_size` sampled rows per
+    /// round instead of full scans — the latency-bounded refinement
+    /// mode. Sizes covering the whole dataset run the exact full-batch
+    /// engine unchanged; see [`batch_growth`](Kmeans::batch_growth) for
+    /// the schedule.
+    pub fn batch_size(mut self, batch_size: usize) -> Self {
+        self.cfg.batch_size = Some(batch_size);
+        self
+    }
+
+    /// Mini-batch growth factor per round: > 1 grows a *nested* batch
+    /// (doubling = 2.0, Newling & Fleuret 2016b) until it covers the
+    /// dataset; exactly 1 redraws a fresh batch each round (Sculley
+    /// style). Only meaningful together with
+    /// [`batch_size`](Kmeans::batch_size).
+    pub fn batch_growth(mut self, batch_growth: f64) -> Self {
+        self.cfg.batch_growth = batch_growth;
         self
     }
 
@@ -200,19 +216,8 @@ impl FittedModel {
                 data.d()
             )));
         }
-        let n = data.n();
-        let mut out = vec![0u32; n];
-        {
-            let cells = SharedSliceMut::new(&mut out);
-            rt.pool().for_each_chunk(n, PREDICT_CHUNK, |lo, hi| {
-                // chunks are disjoint sample ranges; labels are written
-                // element-wise through the shared fit/serve scan kernel
-                let labels = unsafe { cells.range(lo, hi) };
-                blocked_scan(data, &self.centroids, &self.cnorms, lo, hi, |i, row| {
-                    labels[i] = argmin(row).expect("k ≥ 1") as u32;
-                });
-            });
-        }
+        let mut out = vec![0u32; data.n()];
+        nearest_labels(rt.pool(), data, &self.centroids, &self.cnorms, &mut out);
         Ok(out)
     }
 
@@ -233,7 +238,7 @@ impl FittedModel {
     /// Serialise to the versioned JSON model format.
     pub fn to_json(&self) -> Json {
         let r = &self.report;
-        Json::obj()
+        let mut json = Json::obj()
             .field("format", MODEL_FORMAT)
             .field("version", MODEL_VERSION)
             .field("algorithm", r.algorithm.as_str())
@@ -246,11 +251,22 @@ impl FittedModel {
             .field("converged", r.converged)
             .field("mse", r.mse)
             .field("threads", r.threads)
-            .field("wall_secs", r.wall.as_secs_f64())
-            .field(
-                "centroids",
-                Json::Arr(self.centroids.iter().map(|&v| Json::Num(v)).collect()),
-            )
+            .field("wall_secs", r.wall.as_secs_f64());
+        if let Some(b) = &r.batch {
+            // mini-batch fits round-trip their schedule, so a reloaded
+            // model still tells how it was trained
+            json = json
+                .field("batch_size", b.batch_size)
+                .field("batch_growth", b.growth)
+                .field(
+                    "batch_schedule",
+                    Json::Arr(b.schedule.iter().map(|&s| Json::from(s)).collect()),
+                );
+        }
+        json.field(
+            "centroids",
+            Json::Arr(self.centroids.iter().map(|&v| Json::Num(v)).collect()),
+        )
     }
 
     /// Deserialise from the JSON model format, revalidating shape and
@@ -299,6 +315,35 @@ impl FittedModel {
             .and_then(Json::as_str)
             .and_then(|s| s.parse::<u64>().ok())
             .ok_or_else(|| bad("missing/invalid seed"))?;
+        // batch fields are optional (full-batch models omit them), but
+        // when present they are validated as strictly as the rest
+        let batch = match json.get("batch_size") {
+            None => None,
+            Some(bs) => {
+                let batch_size = bs
+                    .as_usize()
+                    .filter(|&b| b > 0)
+                    .ok_or_else(|| bad("invalid batch_size"))?;
+                let growth = json
+                    .get("batch_growth")
+                    .and_then(Json::as_f64)
+                    .filter(|g| g.is_finite() && *g >= 1.0)
+                    .ok_or_else(|| bad("missing/invalid batch_growth"))?;
+                let schedule_json = json
+                    .get("batch_schedule")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| bad("missing batch_schedule"))?;
+                let mut schedule = Vec::with_capacity(schedule_json.len());
+                for v in schedule_json {
+                    schedule.push(v.as_usize().ok_or_else(|| bad("invalid batch_schedule entry"))?);
+                }
+                Some(BatchTelemetry {
+                    batch_size,
+                    growth,
+                    schedule,
+                })
+            }
+        };
         let report = RunReport {
             algorithm: json
                 .get("algorithm")
@@ -332,6 +377,7 @@ impl FittedModel {
             phases: PhaseTimes::default(),
             counters: Counters::default(),
             round_times: Vec::new(),
+            batch,
         };
         Ok(FittedModel::from_parts(centroids, d, report))
     }
@@ -465,6 +511,16 @@ mod tests {
             (
                 "nonfinite.json",
                 r#"{"format":"eakm-fitted-model","version":1,"k":1,"d":1,"seed":"0","centroids":[null]}"#,
+            ),
+            // batch_size without a valid batch_growth must fail loudly,
+            // not silently misreport the schedule mode
+            (
+                "badbatch.json",
+                r#"{"format":"eakm-fitted-model","version":1,"k":1,"d":1,"seed":"0","batch_size":8,"centroids":[0]}"#,
+            ),
+            (
+                "badschedule.json",
+                r#"{"format":"eakm-fitted-model","version":1,"k":1,"d":1,"seed":"0","batch_size":8,"batch_growth":2,"batch_schedule":[8,"x"],"centroids":[0]}"#,
             ),
         ];
         for (name, text) in cases {

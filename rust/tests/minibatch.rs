@@ -1,0 +1,166 @@
+//! Integration tests for the mini-batch engine: seeded sampling is
+//! reproducible, fits are bit-identical across runtime widths, a batch
+//! covering the dataset leaves the exact path untouched, the mini-batch
+//! config survives model persistence, and degenerate sources fail with
+//! typed errors instead of panics.
+
+use eakm::data::BatchView;
+use eakm::error::EakmError;
+use eakm::prelude::*;
+
+fn blobs(n: usize, d: usize, k: usize, seed: u64) -> Dataset {
+    eakm::data::synth::blobs(n, d, k, 0.12, seed)
+}
+
+#[test]
+fn seeded_batch_sampling_is_reproducible() {
+    let ds = blobs(2_000, 4, 6, 1);
+    let a = BatchView::seeded(&ds, 300, 42);
+    let b = BatchView::seeded(&ds, 300, 42);
+    assert_eq!(a.indices(), b.indices());
+    // gathered rows carry the exact base bits
+    for (i, &idx) in a.indices().iter().enumerate() {
+        assert_eq!(a.row(i), ds.row(idx));
+        assert_eq!(a.sqnorm(i).to_bits(), ds.sqnorm(idx).to_bits());
+    }
+    assert_ne!(
+        a.indices(),
+        BatchView::seeded(&ds, 300, 43).indices(),
+        "a different seed must draw a different batch"
+    );
+}
+
+#[test]
+fn minibatch_fit_is_bit_identical_across_widths() {
+    let ds = blobs(4_000, 5, 8, 7);
+    for (growth, label) in [(2.0, "nested"), (1.0, "redraw")] {
+        let fit_at = |threads: usize| {
+            let rt = Runtime::new(threads);
+            Kmeans::new(8)
+                .algorithm(Algorithm::ExpNs)
+                .seed(3)
+                .batch_size(333)
+                .batch_growth(growth)
+                .max_iters(25)
+                .fit_predict(&rt, &ds)
+                .unwrap()
+        };
+        let (m1, l1) = fit_at(1);
+        let (m4, l4) = fit_at(4);
+        let bits = |c: &[f64]| c.iter().map(|v| v.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(m1.centroids()), bits(m4.centroids()), "{label}");
+        assert_eq!(
+            m1.report().mse.to_bits(),
+            m4.report().mse.to_bits(),
+            "{label}: mse not bit-identical"
+        );
+        assert_eq!(l1, l4, "{label}: labels differ across widths");
+        assert_eq!(
+            m1.report().batch,
+            m4.report().batch,
+            "{label}: schedules differ across widths"
+        );
+    }
+}
+
+#[test]
+fn batch_size_n_leaves_the_full_batch_path_unchanged() {
+    let ds = blobs(1_200, 4, 6, 9);
+    let rt = Runtime::new(2);
+    let base = Kmeans::new(6).algorithm(Algorithm::ExpNs).seed(5);
+    let (plain, plain_labels) = base.fit_predict(&rt, &ds).unwrap();
+    let (batched, batched_labels) = base
+        .clone()
+        .batch_size(ds.n()) // covers the dataset → exact engine
+        .fit_predict(&rt, &ds)
+        .unwrap();
+    let bits = |c: &[f64]| c.iter().map(|v| v.to_bits()).collect::<Vec<u64>>();
+    assert_eq!(bits(plain.centroids()), bits(batched.centroids()));
+    assert_eq!(plain_labels, batched_labels);
+    assert_eq!(plain.report().mse.to_bits(), batched.report().mse.to_bits());
+    assert_eq!(plain.report().iterations, batched.report().iterations);
+    assert!(batched.report().batch.is_none(), "exact path records no schedule");
+}
+
+#[test]
+fn model_roundtrips_the_minibatch_config() {
+    let dir = std::env::temp_dir().join(format!("eakm-minibatch-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.json");
+
+    let ds = blobs(2_500, 4, 5, 11);
+    let rt = Runtime::new(2);
+    let model = Kmeans::new(5)
+        .algorithm(Algorithm::ExpNs)
+        .seed(13)
+        .batch_size(250)
+        .batch_growth(2.0)
+        .max_iters(30)
+        .fit(&rt, &ds)
+        .unwrap();
+    let batch = model.report().batch.clone().expect("mini-batch fit records telemetry");
+    assert_eq!(batch.batch_size, 250);
+    assert_eq!(batch.growth, 2.0);
+    assert!(!batch.schedule.is_empty());
+
+    model.save(&path).unwrap();
+    let loaded = FittedModel::load(&path).unwrap();
+    assert_eq!(loaded.report().batch.as_ref(), Some(&batch));
+    // and the centroids still round-trip to the exact bits
+    let bits = |c: &[f64]| c.iter().map(|v| v.to_bits()).collect::<Vec<u64>>();
+    assert_eq!(bits(loaded.centroids()), bits(model.centroids()));
+}
+
+/// A deliberately degenerate source: shape says `n` rows, holds none.
+struct Hollow {
+    n: usize,
+    d: usize,
+}
+
+impl DataSource for Hollow {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn d(&self) -> usize {
+        self.d
+    }
+    fn rows(&self, _lo: usize, _len: usize) -> &[f64] {
+        &[]
+    }
+    fn sqnorms_range(&self, _lo: usize, _len: usize) -> &[f64] {
+        &[]
+    }
+}
+
+#[test]
+fn degenerate_sources_error_instead_of_panicking() {
+    let rt = Runtime::serial();
+    // empty source (n = 0): typed Data error, not a panic inside init
+    let empty = Hollow { n: 0, d: 3 };
+    assert!(matches!(
+        Kmeans::new(2).fit(&rt, &empty),
+        Err(EakmError::Data(_))
+    ));
+    // zero-dimensional source
+    let flat = Hollow { n: 10, d: 0 };
+    assert!(matches!(
+        Kmeans::new(2).fit(&rt, &flat),
+        Err(EakmError::Data(_))
+    ));
+    // ...including through the mini-batch dispatch, which must apply
+    // the same guard before any batch is gathered
+    assert!(matches!(
+        Kmeans::new(2).batch_size(4).fit(&rt, &flat),
+        Err(EakmError::Data(_))
+    ));
+    // k > n: typed Config error, on both the exact and mini-batch paths
+    let ds = blobs(20, 3, 2, 1);
+    assert!(matches!(
+        Kmeans::new(21).fit(&rt, &ds),
+        Err(EakmError::Config(_))
+    ));
+    assert!(matches!(
+        Kmeans::new(21).batch_size(8).fit(&rt, &ds),
+        Err(EakmError::Config(_))
+    ));
+}
