@@ -1,0 +1,67 @@
+//! Out-of-core clustering: fit a model on an `.ekb` file **without
+//! loading it into memory**, and verify the result is bit-identical to
+//! the in-memory fit.
+//!
+//! ```text
+//! cargo run --release --example out_of_core
+//! ```
+//!
+//! The flow mirrors a real deployment: some producer writes a (large)
+//! binary dataset once; consumers cluster it through `--ooc`-style
+//! sources whose resident footprint is one window per worker (chunked)
+//! or whatever the page cache keeps warm (mmap). The `.norms` sidecar
+//! is computed on first contact and reused afterwards.
+
+use eakm::data::ooc::{mmap_supported, open_ooc, OocMode};
+use eakm::data::io;
+use eakm::prelude::*;
+
+fn main() {
+    // 1. produce a dataset file (stand-in for an ingest pipeline)
+    let dir = std::env::temp_dir().join(format!("eakm-ooc-example-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("big.ekb");
+    let ds = eakm::data::synth::blobs(50_000, 8, 40, 0.2, 42);
+    io::save_bin(&ds, &path).unwrap();
+    println!(
+        "wrote {} ({} rows × {} dims, {:.1} MiB)",
+        path.display(),
+        ds.n(),
+        ds.d(),
+        std::fs::metadata(&path).unwrap().len() as f64 / (1024.0 * 1024.0)
+    );
+
+    // 2. the in-memory reference fit
+    let rt = Runtime::new(4);
+    let kmeans = Kmeans::new(40).algorithm(Algorithm::ExpNs).seed(7);
+    let reference = kmeans.fit(&rt, &ds).unwrap();
+    println!("in-memory : {}", reference.report().summary());
+
+    // 3. the same fit straight off the file, never loading it
+    let mut modes = vec![OocMode::Chunked];
+    if mmap_supported() {
+        modes.push(OocMode::Mmap);
+    }
+    for mode in modes {
+        // window of 2048 rows ≈ 128 KiB resident per worker at d=8
+        let src = open_ooc(&path, mode, 2048).unwrap();
+        let model = kmeans.fit(&rt, &*src).unwrap();
+        println!("{mode:<10}: {}", model.report().summary());
+
+        let same = model
+            .centroids()
+            .iter()
+            .zip(reference.centroids())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same, "{mode}: out-of-core fit diverged from in-memory");
+
+        // serving works off the file too
+        let labels = model.predict(&rt, &*src).unwrap();
+        println!(
+            "{mode:<10}: predicted {} rows off the file (io: {:?})",
+            labels.len(),
+            src.io_stats().unwrap()
+        );
+    }
+    println!("all out-of-core fits bit-identical to the in-memory fit ✓");
+}

@@ -9,6 +9,7 @@ use eakm::bench_support::{
     env_scale, env_seeds, grid_datasets, grid_ks, low_d_indices, measure::measure_capped,
     TextTable,
 };
+use eakm::json::Json;
 
 fn main() {
     let scale = env_scale();
@@ -64,4 +65,15 @@ fn main() {
         "\nexp faster than ann in {faster}/{total} experiments (paper: 18/22, >30% faster in 17/22)\n"
     ));
     common::emit("table3_exponion.txt", &rendered);
+
+    // machine-readable companion for the bench_check schema gate + diffs
+    let bench_json = Json::obj()
+        .field("bench", "table3_exponion")
+        .field("scale", scale)
+        .field("seeds", seeds)
+        .field("max_iters", cap)
+        .field("exp_faster", faster)
+        .field("total", total)
+        .field("ratios", t.to_json());
+    common::emit_json("BENCH_table3.json", &bench_json);
 }

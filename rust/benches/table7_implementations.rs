@@ -14,6 +14,7 @@ use eakm::algorithms::Algorithm;
 use eakm::bench_support::{
     env_scale, env_seeds, grid_datasets, grid_ks, measure::measure_capped, TextTable,
 };
+use eakm::json::Json;
 
 fn main() {
     let scale = env_scale();
@@ -67,4 +68,15 @@ fn main() {
          (paper Table 7: own faster than bay/mlp/pow/vlf in all but 4 of ~170 comparisons, by 1–4x)\n"
     ));
     common::emit("table7_implementations.txt", &rendered);
+
+    // machine-readable companion for the bench_check schema gate + diffs
+    let bench_json = Json::obj()
+        .field("bench", "table7_implementations")
+        .field("scale", scale)
+        .field("seeds", seeds)
+        .field("max_iters", cap)
+        .field("own_wins", own_wins)
+        .field("total", total)
+        .field("ratios", t.to_json());
+    common::emit_json("BENCH_table7.json", &bench_json);
 }

@@ -11,6 +11,7 @@ use eakm::algorithms::Algorithm;
 use eakm::bench_support::{
     env_scale, env_seeds, grid_datasets, grid_ks, measure::measure_capped, TextTable,
 };
+use eakm::json::Json;
 
 fn main() {
     let scale = env_scale();
@@ -22,6 +23,14 @@ fn main() {
         .chain(Algorithm::NS.iter())
         .copied()
         .collect();
+
+    // one JSON artifact carries both grids under scale-stable keys
+    let mut bench_json = Json::obj()
+        .field("bench", "table9_grid")
+        .field("scale", scale)
+        .field("seeds", seeds)
+        .field("max_iters", cap)
+        .field("ks", Json::Arr(ks.iter().map(|&k| Json::from(k)).collect()));
 
     for (tbl, &k) in ["table9", "table10"].iter().zip(ks.iter()) {
         let mut headers: Vec<String> = vec![
@@ -64,5 +73,7 @@ fn main() {
         }
         eprintln!();
         common::emit(&format!("{tbl}_grid_k{k}.txt"), &t.render());
+        bench_json = bench_json.field(*tbl, t.to_json());
     }
+    common::emit_json("BENCH_table9.json", &bench_json);
 }

@@ -5,6 +5,7 @@
 //! second-nearest centroid the way `a(i)` tracks the nearest.
 
 use super::common::{batch_scan, dist_ic, top2_sqrt, AssignStep, Moved, Requirements, SharedRound};
+use crate::data::source::BlockCursor;
 use crate::linalg::Top2;
 use crate::metrics::Counters;
 
@@ -46,10 +47,16 @@ impl AssignStep for Ann {
         }
     }
 
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    ) {
         let lo = self.lo;
         let (u, l, b) = (&mut self.u, &mut self.l, &mut self.b);
-        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+        batch_scan(sh, rows, lo, lo + a.len(), ctr, |li, row| {
             let t2 = top2_sqrt(row);
             a[li] = t2.idx1 as u32;
             u[li] = t2.val1;
@@ -61,6 +68,7 @@ impl AssignStep for Ann {
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
@@ -81,15 +89,15 @@ impl AssignStep for Ann {
             if m >= self.u[li] {
                 continue;
             }
-            self.u[li] = dist_ic(sh, gi, ai, ctr);
+            self.u[li] = dist_ic(sh, rows, gi, ai, ctr);
             if m >= self.u[li] {
                 continue;
             }
             // annular scan: R = max(u, ‖x − c(b)‖), filter on norms (eq. 9)
             let bi = self.b[li] as usize;
-            let dxb = dist_ic(sh, gi, bi, ctr);
+            let dxb = dist_ic(sh, rows, gi, bi, ctr);
             let r = self.u[li].max(dxb);
-            let xnorm = sh.data.sqnorm(gi).sqrt();
+            let xnorm = rows.sqnorm(gi).sqrt();
             let mut t2 = Top2::new();
             for j in norms.window(xnorm, r) {
                 let j = j as usize;
@@ -98,7 +106,7 @@ impl AssignStep for Ann {
                 } else if j == bi {
                     dxb
                 } else {
-                    dist_ic(sh, gi, j, ctr)
+                    dist_ic(sh, rows, gi, j, ctr)
                 };
                 t2.push(j, dj);
             }

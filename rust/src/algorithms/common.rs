@@ -6,12 +6,19 @@
 //! ([`SharedRound`]); shards then run (possibly in parallel) without any
 //! synchronisation, which is exactly the parallelisation the paper uses
 //! (§4.2: samples are processed independently).
+//!
+//! Sample values are reached through the block-lease contract: every
+//! worker opens a [`BlockCursor`] for its shard and the algorithm reads
+//! rows from that cursor — never from the source directly. That is what
+//! lets an out-of-core source serve the scan from a per-worker resident
+//! window (see [`data::source`](crate::data::source)).
 
 use crate::coordinator::annuli::Annuli;
 use crate::coordinator::ccdist::CcData;
 use crate::coordinator::groups::GroupData;
 use crate::coordinator::history::HistoryRound;
 use crate::coordinator::sorted_norms::SortedNorms;
+use crate::data::source::BlockCursor;
 use crate::data::DataSource;
 use crate::linalg::{argmin, sqdist_batch_block, Top2};
 use crate::metrics::Counters;
@@ -54,9 +61,13 @@ pub struct Moved {
 /// Read-only, centroid-side context for one assignment round.
 ///
 /// Built once per round by the coordinator and shared by every worker.
+/// Sample *values* are not reachable through it — each worker reads its
+/// shard through its own [`BlockCursor`]; `data` is kept for shape
+/// queries (`n`, `d`) only.
 pub struct SharedRound<'a> {
-    /// The sample source (rows + pre-computed squared norms), behind the
-    /// [`DataSource`] seam so shard/mini-batch sources plug in.
+    /// The sample source, for shape queries and cursor opening. Row
+    /// access goes through the per-worker cursor passed to
+    /// [`AssignStep::init`] / [`AssignStep::round`].
     pub data: &'a dyn DataSource,
     /// Number of clusters.
     pub k: usize,
@@ -105,9 +116,10 @@ impl<'a> SharedRound<'a> {
 /// The assignment-step interface every algorithm implements for a shard
 /// of samples `[lo, hi)`.
 ///
-/// `a` is the shard's slice of the global assignment array (local index 0
-/// is global `lo`). Implementations must append every assignment change
-/// to `moved` with *global* indices.
+/// `rows` is the worker's block cursor for the shard — the only route to
+/// sample values. `a` is the shard's slice of the global assignment
+/// array (local index 0 is global `lo`). Implementations must append
+/// every assignment change to `moved` with *global* indices.
 pub trait AssignStep: Send {
     /// Paper-notation name ("exp-ns", "selk", …).
     fn name(&self) -> &'static str;
@@ -119,46 +131,56 @@ pub trait AssignStep: Send {
     fn requirements(&self) -> Requirements;
 
     /// Initial full assignment (round 0): set `a`, make all bounds tight.
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters);
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    );
 
     /// One assignment round (round ≥ 1).
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
     );
 }
 
-/// Block size for the batched scans.
-const INIT_BLOCK: usize = 128;
+/// Block size for the batched scans — also the lease size, so a
+/// windowed cursor never needs a window smaller than this.
+pub(crate) const INIT_BLOCK: usize = 128;
 
-/// Blocked squared-distance scan of rows `[lo, hi)` of `data` against
-/// `centroids` (`cnorms.len()` of them): calls `f(i − lo, row)` with
-/// each sample's full `k`-vector of squared distances. Counter-free —
-/// the one shared kernel under both the fit path ([`batch_scan`]) and
+/// Blocked squared-distance scan of rows `[lo, hi)` leased from `cur`
+/// against `centroids` (`cnorms.len()` of them): calls `f(i − lo, row)`
+/// with each sample's full `k`-vector of squared distances. Counter-free
+/// — the one shared kernel under both the fit path ([`batch_scan`]) and
 /// the serving path
 /// ([`FittedModel::predict`](crate::model::FittedModel::predict)), so
-/// their outputs are bit-identical by construction.
+/// their outputs are bit-identical by construction. Each per-row result
+/// depends only on that row's values, so lease/block boundaries never
+/// affect the output bits.
 pub fn blocked_scan(
-    data: &dyn DataSource,
+    cur: &mut dyn BlockCursor,
     centroids: &[f64],
     cnorms: &[f64],
     lo: usize,
     hi: usize,
     mut f: impl FnMut(usize, &[f64]),
 ) {
-    let d = data.d();
+    let d = cur.d();
     let k = cnorms.len();
     let mut buf = vec![0.0; INIT_BLOCK * k];
     let mut start = lo;
     while start < hi {
-        let stop = (start + INIT_BLOCK).min(hi);
-        let m = stop - start;
+        let m = INIT_BLOCK.min(hi - start);
+        let block = cur.lease(start, m);
         sqdist_batch_block(
-            data.rows(start, m),
-            data.sqnorms_range(start, m),
+            block.rows(),
+            block.sqnorms(),
             centroids,
             cnorms,
             d,
@@ -167,7 +189,7 @@ pub fn blocked_scan(
         for (i, row) in buf[..m * k].chunks_exact(k).enumerate() {
             f(start - lo + i, row);
         }
-        start = stop;
+        start += m;
     }
 }
 
@@ -182,7 +204,8 @@ const LABEL_CHUNK: usize = 128;
 /// any pool width**. This is the one serving/labelling kernel —
 /// [`FittedModel::predict`](crate::model::FittedModel::predict) and the
 /// mini-batch driver's final full-data pass both call it, so their
-/// outputs agree by construction.
+/// outputs agree by construction. Each chunk opens its own cursor, so
+/// out-of-core sources serve the scan from per-worker windows.
 pub fn nearest_labels(
     pool: &WorkerPool,
     data: &dyn DataSource,
@@ -198,7 +221,8 @@ pub fn nearest_labels(
     pool.for_each_chunk(n, LABEL_CHUNK, |lo, hi| {
         // chunks are disjoint sample ranges; element-wise writes only
         let out = unsafe { cells.range(lo, hi) };
-        blocked_scan(data, centroids, cnorms, lo, hi, |i, row| {
+        let mut cur = data.open(lo, hi - lo);
+        blocked_scan(cur.as_mut(), centroids, cnorms, lo, hi, |i, row| {
             out[i] = argmin(row).expect("k ≥ 1") as u32;
         });
     });
@@ -210,21 +234,23 @@ pub fn nearest_labels(
 /// assignment distances.
 pub fn batch_scan(
     sh: &SharedRound,
+    rows: &mut dyn BlockCursor,
     lo: usize,
     hi: usize,
     ctr: &mut Counters,
     f: impl FnMut(usize, &[f64]),
 ) {
-    blocked_scan(sh.data, sh.centroids, sh.cnorms, lo, hi, f);
+    blocked_scan(rows, sh.centroids, sh.cnorms, lo, hi, f);
     ctr.assignment += ((hi - lo) * sh.k) as u64;
 }
 
 /// Unblocked, per-pair full distance scan — the *naive* counterpart of
 /// [`batch_scan`], used by the Table 7 baseline family to quantify what
 /// the paper's §4.1.1 engineering (norm decomposition + blocked products)
-/// is worth. Same contract as `batch_scan`.
+/// is worth. Same contract as `batch_scan` (rows leased one at a time).
 pub fn scalar_scan(
     sh: &SharedRound,
+    rows: &mut dyn BlockCursor,
     lo: usize,
     hi: usize,
     ctr: &mut Counters,
@@ -233,7 +259,7 @@ pub fn scalar_scan(
     let k = sh.k;
     let mut row = vec![0.0; k];
     for gi in lo..hi {
-        let x = sh.data.row(gi);
+        let x = rows.row(gi);
         for (j, slot) in row.iter_mut().enumerate() {
             *slot = crate::linalg::sqdist(x, sh.centroid(j));
         }
@@ -253,12 +279,18 @@ pub fn top2_sqrt(row: &[f64]) -> Top2 {
     t
 }
 
-/// Plain (non-squared) distance from sample `i` to centroid `j`,
-/// counting one assignment distance.
+/// Plain (non-squared) distance from sample `i` (leased from `rows`) to
+/// centroid `j`, counting one assignment distance.
 #[inline]
-pub fn dist_ic(sh: &SharedRound, i: usize, j: usize, ctr: &mut Counters) -> f64 {
+pub fn dist_ic(
+    sh: &SharedRound,
+    rows: &mut dyn BlockCursor,
+    i: usize,
+    j: usize,
+    ctr: &mut Counters,
+) -> f64 {
     ctr.assignment += 1;
-    crate::linalg::sqdist(sh.data.row(i), sh.centroid(j)).sqrt()
+    crate::linalg::sqdist(rows.row(i), sh.centroid(j)).sqrt()
 }
 
 #[cfg(test)]
@@ -276,7 +308,10 @@ mod tests {
         let sh = owner.shared(&ds);
         let mut ctr = Counters::default();
         let mut rows = Vec::new();
-        batch_scan(&sh, 10, 40, &mut ctr, |li, row| rows.push((li, row.to_vec())));
+        let mut cur = ds.open(0, ds.n());
+        batch_scan(&sh, cur.as_mut(), 10, 40, &mut ctr, |li, row| {
+            rows.push((li, row.to_vec()))
+        });
         assert_eq!(rows.len(), 30);
         assert_eq!(ctr.assignment, 30 * k as u64);
         for (li, row) in &rows {
@@ -284,6 +319,32 @@ mod tests {
             for j in 0..k {
                 let direct = crate::linalg::sqdist(ds.row(gi), sh.centroid(j));
                 assert!((row[j] - direct).abs() < 1e-9, "i={gi} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_scan_matches_batch_scan() {
+        let ds = blobs(61, 3, 3, 0.2, 5);
+        let k = 4;
+        let centroids: Vec<f64> = ds.raw()[..k * 3].to_vec();
+        let owner = RoundCtxOwner::new_for_test(&ds, centroids);
+        let sh = owner.shared(&ds);
+        let mut ctr = Counters::default();
+        let mut batch = Vec::new();
+        let mut cur = ds.open(0, ds.n());
+        batch_scan(&sh, cur.as_mut(), 0, 61, &mut ctr, |li, row| {
+            batch.push((li, row.to_vec()))
+        });
+        let mut scalar = Vec::new();
+        let mut cur = ds.open(0, ds.n());
+        scalar_scan(&sh, cur.as_mut(), 0, 61, &mut ctr, |li, row| {
+            scalar.push((li, row.to_vec()))
+        });
+        for ((li, b), (lj, s)) in batch.iter().zip(&scalar) {
+            assert_eq!(li, lj);
+            for (x, y) in b.iter().zip(s) {
+                assert!((x - y).abs() < 1e-9);
             }
         }
     }

@@ -4,6 +4,7 @@
 //! `max(l(i,j), cc(a(i),j)/2) > u(i)` (eq. 6).
 
 use super::common::{batch_scan, dist_ic, scalar_scan, AssignStep, Moved, Requirements, SharedRound};
+use crate::data::source::BlockCursor;
 use crate::metrics::Counters;
 
 /// Elkan per-sample state (same as selk; cc/s live in the round context).
@@ -57,7 +58,13 @@ impl AssignStep for Elk {
         }
     }
 
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    ) {
         let lo = self.lo;
         let hi = lo + a.len();
         let k = self.k;
@@ -79,15 +86,16 @@ impl AssignStep for Elk {
             u[li] = bd;
         };
         if naive {
-            scalar_scan(sh, lo, hi, ctr, body);
+            scalar_scan(sh, rows, lo, hi, ctr, body);
         } else {
-            batch_scan(sh, lo, hi, ctr, body);
+            batch_scan(sh, rows, lo, hi, ctr, body);
         }
     }
 
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
@@ -117,14 +125,14 @@ impl AssignStep for Elk {
                 }
                 if !utight {
                     ctr.assignment += 1;
-                    u = crate::linalg::sqdist(sh.data.row(gi), sh.centroid(ai)).sqrt();
+                    u = crate::linalg::sqdist(rows.row(gi), sh.centroid(ai)).sqrt();
                     utight = true;
                     lrow[ai] = u;
                     if lrow[j] >= u || cc.get(ai, j) * 0.5 >= u {
                         continue;
                     }
                 }
-                lrow[j] = dist_ic(sh, gi, j, ctr);
+                lrow[j] = dist_ic(sh, rows, gi, j, ctr);
                 if lrow[j] < u {
                     ai = j;
                     u = lrow[j];

@@ -9,6 +9,7 @@
 //! which over-covers by at most 2× (paper: `|J*(i)| ≤ 2|J(i)|`).
 
 use super::common::{batch_scan, dist_ic, top2_sqrt, AssignStep, Moved, Requirements, SharedRound};
+use crate::data::source::BlockCursor;
 use crate::linalg::Top2;
 use crate::metrics::Counters;
 
@@ -47,10 +48,16 @@ impl AssignStep for Exponion {
         }
     }
 
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    ) {
         let lo = self.lo;
         let (u, l) = (&mut self.u, &mut self.l);
-        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+        batch_scan(sh, rows, lo, lo + a.len(), ctr, |li, row| {
             let t2 = top2_sqrt(row);
             a[li] = t2.idx1 as u32;
             u[li] = t2.val1;
@@ -61,6 +68,7 @@ impl AssignStep for Exponion {
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
@@ -81,7 +89,7 @@ impl AssignStep for Exponion {
             if m >= self.u[li] {
                 continue;
             }
-            self.u[li] = dist_ic(sh, gi, ai, ctr);
+            self.u[li] = dist_ic(sh, rows, gi, ai, ctr);
             if m >= self.u[li] {
                 continue;
             }
@@ -90,7 +98,7 @@ impl AssignStep for Exponion {
             let mut t2 = Top2::new();
             t2.push(ai, self.u[li]);
             for &j in annuli.candidates(ai, r) {
-                t2.push(j as usize, dist_ic(sh, gi, j as usize, ctr));
+                t2.push(j as usize, dist_ic(sh, rows, gi, j as usize, ctr));
             }
             self.u[li] = t2.val1;
             self.l[li] = t2.val2;

@@ -3,6 +3,7 @@
 //! and the outer test `max(l(i), s(a(i))/2) ≥ u(i)`.
 
 use super::common::{batch_scan, dist_ic, top2_sqrt, AssignStep, Moved, Requirements, SharedRound};
+use crate::data::source::BlockCursor;
 use crate::linalg::Top2;
 use crate::metrics::Counters;
 
@@ -55,10 +56,16 @@ impl AssignStep for Ham {
         }
     }
 
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    ) {
         let lo = self.lo;
         let (u, l) = (&mut self.u, &mut self.l);
-        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+        batch_scan(sh, rows, lo, lo + a.len(), ctr, |li, row| {
             let t2 = top2_sqrt(row);
             a[li] = t2.idx1 as u32;
             u[li] = t2.val1;
@@ -69,6 +76,7 @@ impl AssignStep for Ham {
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
@@ -82,7 +90,7 @@ impl AssignStep for Ham {
                 continue; // outer test with loose u
             }
             // tighten u and retry
-            self.u[li] = dist_ic(sh, gi, ai, ctr);
+            self.u[li] = dist_ic(sh, rows, gi, ai, ctr);
             if m >= self.u[li] {
                 continue;
             }
@@ -92,7 +100,7 @@ impl AssignStep for Ham {
                 let dj = if j == ai {
                     self.u[li]
                 } else {
-                    dist_ic(sh, gi, j, ctr)
+                    dist_ic(sh, rows, gi, j, ctr)
                 };
                 t2.push(j, dj);
             }

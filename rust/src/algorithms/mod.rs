@@ -10,7 +10,6 @@ pub mod naive;
 pub mod ns;
 pub mod selk;
 pub mod sta;
-#[cfg(test)]
 pub mod testutil;
 pub mod yinyang;
 

@@ -11,6 +11,7 @@
 use super::common::{
     dist_ic, scalar_scan, top2_sqrt, AssignStep, Moved, Requirements, SharedRound,
 };
+use crate::data::source::BlockCursor;
 use crate::linalg::Top2;
 use crate::metrics::Counters;
 
@@ -49,10 +50,16 @@ impl AssignStep for NaiveHam {
         }
     }
 
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    ) {
         let lo = self.lo;
         let (u, l) = (&mut self.u, &mut self.l);
-        scalar_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+        scalar_scan(sh, rows, lo, lo + a.len(), ctr, |li, row| {
             let t2 = top2_sqrt(row);
             a[li] = t2.idx1 as u32;
             u[li] = t2.val1;
@@ -63,6 +70,7 @@ impl AssignStep for NaiveHam {
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
@@ -84,7 +92,7 @@ impl AssignStep for NaiveHam {
             if m >= self.u[li] {
                 continue;
             }
-            self.u[li] = dist_ic(sh, gi, ai, ctr);
+            self.u[li] = dist_ic(sh, rows, gi, ai, ctr);
             if m >= self.u[li] {
                 continue;
             }
@@ -93,7 +101,7 @@ impl AssignStep for NaiveHam {
                 let dj = if j == ai {
                     self.u[li]
                 } else {
-                    dist_ic(sh, gi, j, ctr)
+                    dist_ic(sh, rows, gi, j, ctr)
                 };
                 t2.push(j, dj);
             }

@@ -5,6 +5,7 @@
 use crate::algorithms::common::{
     batch_scan, dist_ic, AssignStep, Moved, Requirements, SharedRound,
 };
+use crate::data::source::BlockCursor;
 use crate::metrics::Counters;
 
 /// elk-ns per-sample state (same shape as selk-ns).
@@ -48,11 +49,17 @@ impl AssignStep for ElkNs {
         }
     }
 
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    ) {
         let lo = self.lo;
         let k = self.k;
         let (u, l) = (&mut self.u, &mut self.l);
-        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+        batch_scan(sh, rows, lo, lo + a.len(), ctr, |li, row| {
             let lrow = &mut l[li * k..(li + 1) * k];
             let mut best = 0usize;
             let mut bd = f64::INFINITY;
@@ -72,6 +79,7 @@ impl AssignStep for ElkNs {
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
@@ -111,7 +119,7 @@ impl AssignStep for ElkNs {
                 }
                 if self.tu[li] != t_now {
                     ctr.assignment += 1;
-                    let du = crate::linalg::sqdist(sh.data.row(gi), sh.centroid(ai)).sqrt();
+                    let du = crate::linalg::sqdist(rows.row(gi), sh.centroid(ai)).sqrt();
                     self.u[li] = du;
                     self.tu[li] = t_now;
                     eu = du;
@@ -119,7 +127,7 @@ impl AssignStep for ElkNs {
                         continue;
                     }
                 }
-                lrow[j] = dist_ic(sh, gi, j, ctr);
+                lrow[j] = dist_ic(sh, rows, gi, j, ctr);
                 tlrow[j] = t_now;
                 if lrow[j] < eu {
                     lrow[ai] = self.u[li];

@@ -10,6 +10,7 @@
 use crate::algorithms::common::{
     batch_scan, dist_ic, top2_sqrt, AssignStep, Moved, Requirements, SharedRound,
 };
+use crate::data::source::BlockCursor;
 use crate::linalg::Top2;
 use crate::metrics::Counters;
 
@@ -55,10 +56,16 @@ impl AssignStep for ExpNs {
         }
     }
 
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    ) {
         let lo = self.lo;
         let (u, l) = (&mut self.u, &mut self.l);
-        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+        batch_scan(sh, rows, lo, lo + a.len(), ctr, |li, row| {
             let t2 = top2_sqrt(row);
             a[li] = t2.idx1 as u32;
             u[li] = t2.val1;
@@ -69,6 +76,7 @@ impl AssignStep for ExpNs {
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
@@ -95,7 +103,7 @@ impl AssignStep for ExpNs {
             }
             if self.tu[li] != t_now {
                 ctr.assignment += 1;
-                eu = crate::linalg::sqdist(sh.data.row(gi), sh.centroid(ai)).sqrt();
+                eu = crate::linalg::sqdist(rows.row(gi), sh.centroid(ai)).sqrt();
                 self.u[li] = eu;
                 self.tu[li] = t_now;
                 if m >= eu {
@@ -107,7 +115,7 @@ impl AssignStep for ExpNs {
             let mut t2 = Top2::new();
             t2.push(ai, eu);
             for &j in annuli.candidates(ai, r) {
-                t2.push(j as usize, dist_ic(sh, gi, j as usize, ctr));
+                t2.push(j as usize, dist_ic(sh, rows, gi, j as usize, ctr));
             }
             self.u[li] = t2.val1;
             self.tu[li] = t_now;

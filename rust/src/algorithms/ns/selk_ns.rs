@@ -8,6 +8,7 @@
 use crate::algorithms::common::{
     batch_scan, dist_ic, AssignStep, Moved, Requirements, SharedRound,
 };
+use crate::data::source::BlockCursor;
 use crate::metrics::Counters;
 
 /// selk-ns per-sample state.
@@ -54,11 +55,17 @@ impl AssignStep for SelkNs {
         }
     }
 
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    ) {
         let lo = self.lo;
         let k = self.k;
         let (u, l) = (&mut self.u, &mut self.l);
-        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+        batch_scan(sh, rows, lo, lo + a.len(), ctr, |li, row| {
             let lrow = &mut l[li * k..(li + 1) * k];
             let mut best = 0usize;
             let mut bd = f64::INFINITY;
@@ -79,6 +86,7 @@ impl AssignStep for SelkNs {
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
@@ -115,7 +123,7 @@ impl AssignStep for SelkNs {
                 if self.tu[li] != t_now {
                     // tighten u
                     ctr.assignment += 1;
-                    let du = crate::linalg::sqdist(sh.data.row(gi), sh.centroid(ai)).sqrt();
+                    let du = crate::linalg::sqdist(rows.row(gi), sh.centroid(ai)).sqrt();
                     self.u[li] = du;
                     self.tu[li] = t_now;
                     eu = du;
@@ -124,7 +132,7 @@ impl AssignStep for SelkNs {
                     }
                 }
                 // tighten l(i,j)
-                lrow[j] = dist_ic(sh, gi, j, ctr);
+                lrow[j] = dist_ic(sh, rows, gi, j, ctr);
                 tlrow[j] = t_now;
                 if lrow[j] < eu {
                     // both tight: j is strictly nearer. Keep the old

@@ -6,6 +6,7 @@
 use crate::algorithms::common::{
     batch_scan, dist_ic, AssignStep, Moved, Requirements, SharedRound,
 };
+use crate::data::source::BlockCursor;
 use crate::linalg::Top2;
 use crate::metrics::Counters;
 
@@ -59,13 +60,19 @@ impl AssignStep for SyinNs {
         }
     }
 
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    ) {
         let lo = self.lo;
         let g = self.g;
         let gd = sh.groups.expect("syin-ns requires groups");
         let (u, l) = (&mut self.u, &mut self.l);
         let mut gms = vec![Top2::new(); g];
-        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+        batch_scan(sh, rows, lo, lo + a.len(), ctr, |li, row| {
             for gm in gms.iter_mut() {
                 *gm = Top2::new();
             }
@@ -88,6 +95,7 @@ impl AssignStep for SyinNs {
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
@@ -126,7 +134,7 @@ impl AssignStep for SyinNs {
             }
             if self.tu[li] != t_now {
                 ctr.assignment += 1;
-                eu = crate::linalg::sqdist(sh.data.row(gi), sh.centroid(a0)).sqrt();
+                eu = crate::linalg::sqdist(rows.row(gi), sh.centroid(a0)).sqrt();
                 self.u[li] = eu;
                 self.tu[li] = t_now;
             }
@@ -152,7 +160,7 @@ impl AssignStep for SyinNs {
                     if j == a0 {
                         continue;
                     }
-                    let dj = dist_ic(sh, gi, j, ctr);
+                    let dj = dist_ic(sh, rows, gi, j, ctr);
                     gm.push(j, dj);
                     best.push(j, dj);
                 }

@@ -4,6 +4,7 @@
 //! *faster* than the fully-fledged elk.
 
 use super::common::{batch_scan, dist_ic, AssignStep, Moved, Requirements, SharedRound};
+use crate::data::source::BlockCursor;
 use crate::metrics::Counters;
 
 /// Simplified-Elkan per-sample state.
@@ -40,11 +41,17 @@ impl AssignStep for Selk {
         Requirements::default()
     }
 
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    ) {
         let lo = self.lo;
         let k = self.k;
         let (u, l) = (&mut self.u, &mut self.l);
-        batch_scan(sh, lo, lo + a.len(), ctr, |li, row| {
+        batch_scan(sh, rows, lo, lo + a.len(), ctr, |li, row| {
             let lrow = &mut l[li * k..(li + 1) * k];
             let mut best = 0usize;
             let mut bd = f64::INFINITY;
@@ -64,6 +71,7 @@ impl AssignStep for Selk {
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
@@ -89,7 +97,7 @@ impl AssignStep for Selk {
                 if !utight {
                     // tighten u first — it is reused in every later test
                     ctr.assignment += 1;
-                    u = crate::linalg::sqdist(sh.data.row(gi), sh.centroid(ai)).sqrt();
+                    u = crate::linalg::sqdist(rows.row(gi), sh.centroid(ai)).sqrt();
                     utight = true;
                     lrow[ai] = u; // exact distance doubles as l(i,a)
                     if lrow[j] >= u {
@@ -97,7 +105,7 @@ impl AssignStep for Selk {
                     }
                 }
                 // tighten l(i,j); if still below u, j is strictly nearer
-                lrow[j] = dist_ic(sh, gi, j, ctr);
+                lrow[j] = dist_ic(sh, rows, gi, j, ctr);
                 if lrow[j] < u {
                     ai = j;
                     u = lrow[j]; // tight for the new assignee

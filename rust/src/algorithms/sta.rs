@@ -5,6 +5,7 @@
 //! algorithm is measured against.
 
 use super::common::{batch_scan, scalar_scan, AssignStep, Moved, Requirements, SharedRound};
+use crate::data::source::BlockCursor;
 use crate::linalg::argmin;
 use crate::metrics::Counters;
 
@@ -31,15 +32,16 @@ impl Sta {
     fn scan(
         &self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         lo: usize,
         hi: usize,
         ctr: &mut crate::metrics::Counters,
         f: impl FnMut(usize, &[f64]),
     ) {
         if self.naive {
-            scalar_scan(sh, lo, hi, ctr, f);
+            scalar_scan(sh, rows, lo, hi, ctr, f);
         } else {
-            batch_scan(sh, lo, hi, ctr, f);
+            batch_scan(sh, rows, lo, hi, ctr, f);
         }
     }
 }
@@ -64,9 +66,15 @@ impl AssignStep for Sta {
         }
     }
 
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    ) {
         let lo = self.lo;
-        self.scan(sh, lo, lo + a.len(), ctr, |li, row| {
+        self.scan(sh, rows, lo, lo + a.len(), ctr, |li, row| {
             a[li] = argmin(row).unwrap() as u32;
         });
     }
@@ -74,12 +82,13 @@ impl AssignStep for Sta {
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
     ) {
         let lo = self.lo;
-        self.scan(sh, lo, lo + a.len(), ctr, |li, row| {
+        self.scan(sh, rows, lo, lo + a.len(), ctr, |li, row| {
             let j = argmin(row).unwrap() as u32;
             if j != a[li] {
                 moved.push(Moved {
@@ -107,7 +116,8 @@ mod tests {
         let sh = owner.shared(&ds);
         let mut a = vec![0u32; 60];
         let mut ctr = Counters::default();
-        Sta::new(0).init(&sh, &mut a, &mut ctr);
+        let mut cur = crate::data::DataSource::open(&ds, 0, ds.n());
+        Sta::new(0).init(&sh, cur.as_mut(), &mut a, &mut ctr);
         for i in 0..60 {
             let mut bd = f64::INFINITY;
             let mut bj = 0;
@@ -132,10 +142,11 @@ mod tests {
         let mut alg = Sta::new(0);
         let mut a = vec![0u32; 40];
         let mut ctr = Counters::default();
-        alg.init(&sh, &mut a, &mut ctr);
+        let mut cur = crate::data::DataSource::open(&ds, 0, ds.n());
+        alg.init(&sh, cur.as_mut(), &mut a, &mut ctr);
         // re-running the round on the same centroids must move nothing
         let mut moved = Vec::new();
-        alg.round(&sh, &mut a, &mut ctr, &mut moved);
+        alg.round(&sh, cur.as_mut(), &mut a, &mut ctr, &mut moved);
         assert!(moved.is_empty());
     }
 }

@@ -1,14 +1,19 @@
-//! Test utilities shared by every algorithm's unit tests: exactness
-//! versus sta and bound-validity checking.
+//! Test utilities shared by algorithm and data-source tests: exactness
+//! versus sta, bound-validity checking, and the block-lease contract
+//! property suite every [`DataSource`] implementation must pass.
+//! (Compiled into the library so integration tests — which exercise the
+//! out-of-core sources against real files — reuse the same harness.)
 
 use crate::algorithms::common::AssignStep;
 use crate::algorithms::Algorithm;
 use crate::config::RunConfig;
 use crate::coordinator::history::Epoch;
+use crate::coordinator::parallel::make_shards;
 use crate::coordinator::runner::Engine;
 use crate::data::synth::blobs;
-use crate::data::Dataset;
-use crate::linalg::sqdist;
+use crate::data::{DataSource, Dataset};
+use crate::linalg::{sqdist, sqnorm};
+use crate::proptest::forall;
 
 /// Factory signature used by the helpers.
 pub type Factory = dyn Fn(usize, usize, usize, usize) -> Box<dyn AssignStep>;
@@ -65,6 +70,88 @@ pub fn assert_exact_vs_sta_with_reset(
         }
     }
     assert!(sta.converged(), "did not converge within 200 rounds");
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Property suite for the block-lease [`DataSource`] contract (the
+/// invariants listed in [`data::source`](crate::data::source)'s module
+/// docs), shared by every implementation — `Dataset`, `BatchView`,
+/// `MmapSource`, `ChunkedFileSource`:
+///
+/// 1. **coverage** — for several shard widths, walking each shard's
+///    cursor with randomized lease sizes tiles exactly `[lo, lo+len)`
+///    in order and reproduces the reference bytes;
+/// 2. **stability** — every lease (including re-reads and backward
+///    random access) observes the same bits as the reference read;
+/// 3. **norms match rows** — leased `sqnorms` equal
+///    [`sqnorm`](crate::linalg::sqnorm) of the leased rows bit-for-bit.
+///
+/// Panics (via the mini-proptest harness, with a reproducing case
+/// index) on the first violation.
+pub fn assert_block_lease_contract(src: &dyn DataSource, seed: u64) {
+    let (n, d) = (src.n(), src.d());
+    assert!(n > 0 && d > 0, "contract harness needs a non-empty source");
+
+    // reference read: one lease of everything
+    let (reference, ref_norms) = {
+        let mut cur = src.open(0, n);
+        let block = cur.lease(0, n);
+        (block.rows().to_vec(), block.sqnorms().to_vec())
+    };
+    assert_eq!(reference.len(), n * d);
+    assert_eq!(ref_norms.len(), n);
+    for i in 0..n {
+        assert_eq!(
+            ref_norms[i].to_bits(),
+            sqnorm(&reference[i * d..(i + 1) * d]).to_bits(),
+            "norm of row {i} does not match its rows bit-for-bit"
+        );
+    }
+
+    // coverage + stability over sharded, randomized block walks
+    forall(seed, 12, |g| {
+        let w = g.usize_in(1, 4);
+        for (lo, len) in make_shards(n, w) {
+            let mut cur = src.open(lo, len);
+            let mut rows = Vec::with_capacity(len * d);
+            let mut norms = Vec::with_capacity(len);
+            let mut at = lo;
+            while at < lo + len {
+                let take = g.usize_in(1, 64).min(lo + len - at);
+                let block = cur.lease(at, take);
+                assert_eq!(block.lo(), at);
+                assert_eq!(block.len(), take);
+                assert_eq!(block.d(), d);
+                rows.extend_from_slice(block.rows());
+                norms.extend_from_slice(block.sqnorms());
+                at += take;
+            }
+            assert_eq!(
+                bits(&rows),
+                bits(&reference[lo * d..(lo + len) * d]),
+                "shard [{lo}, {}) rows diverge from the reference read",
+                lo + len
+            );
+            assert_eq!(bits(&norms), bits(&ref_norms[lo..lo + len]));
+        }
+    });
+
+    // random access through one cursor: forward, backward, repeated
+    forall(seed ^ 0x9E37_79B9, 6, |g| {
+        let mut cur = src.open(0, n);
+        for _ in 0..40 {
+            let i = g.usize_in(0, n - 1);
+            assert_eq!(
+                bits(cur.row(i)),
+                bits(&reference[i * d..(i + 1) * d]),
+                "random-access row {i} unstable"
+            );
+            assert_eq!(cur.sqnorm(i).to_bits(), ref_norms[i].to_bits());
+        }
+    });
 }
 
 /// Bound inspection context handed to per-algorithm checkers.

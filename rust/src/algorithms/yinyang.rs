@@ -5,6 +5,7 @@
 //! and is usually faster.
 
 use super::common::{batch_scan, dist_ic, scalar_scan, AssignStep, Moved, Requirements, SharedRound};
+use crate::data::source::BlockCursor;
 use crate::linalg::Top2;
 use crate::metrics::Counters;
 
@@ -71,7 +72,13 @@ impl AssignStep for Yinyang {
         }
     }
 
-    fn init(&mut self, sh: &SharedRound, a: &mut [u32], ctr: &mut Counters) {
+    fn init(
+        &mut self,
+        sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
+        a: &mut [u32],
+        ctr: &mut Counters,
+    ) {
         let lo = self.lo;
         let hi = lo + a.len();
         let g = self.g;
@@ -99,15 +106,16 @@ impl AssignStep for Yinyang {
             }
         };
         if naive {
-            scalar_scan(sh, lo, hi, ctr, body);
+            scalar_scan(sh, rows, lo, hi, ctr, body);
         } else {
-            batch_scan(sh, lo, hi, ctr, body);
+            batch_scan(sh, rows, lo, hi, ctr, body);
         }
     }
 
     fn round(
         &mut self,
         sh: &SharedRound,
+        rows: &mut dyn BlockCursor,
         a: &mut [u32],
         ctr: &mut Counters,
         moved: &mut Vec<Moved>,
@@ -132,7 +140,7 @@ impl AssignStep for Yinyang {
             if minl >= self.u[li] {
                 continue;
             }
-            let d_old = dist_ic(sh, gi, a0, ctr); // tighten u
+            let d_old = dist_ic(sh, rows, gi, a0, ctr); // tighten u
             self.u[li] = d_old;
             if minl >= d_old {
                 continue;
@@ -172,7 +180,7 @@ impl AssignStep for Yinyang {
                             continue;
                         }
                     }
-                    let dj = dist_ic(sh, gi, j, ctr);
+                    let dj = dist_ic(sh, rows, gi, j, ctr);
                     gm.push(j, dj);
                     best.push(j, dj);
                 }

@@ -95,6 +95,153 @@ pub fn check_bench_json(text: &str, bench_name: &str, tables: &[TableSpec]) -> R
     Ok(summary)
 }
 
+/// One row-level wall-time regression found by [`diff_bench_json`].
+#[derive(Clone, Debug)]
+pub struct DiffRegression {
+    /// Table key + row label + column header, for the CI log.
+    pub what: String,
+    /// Old and new wall seconds.
+    pub old: f64,
+    /// New wall seconds.
+    pub new: f64,
+}
+
+/// True when a column holds wall-time cells (the only thing a
+/// cross-commit diff can meaningfully gate on).
+fn is_timing_header(h: &str) -> bool {
+    h.contains("[s]") || h.contains("secs") || h.contains("[µs")
+}
+
+/// Row key: every cell that is neither a timing column nor
+/// float-formatted (ratios, speedups, and wall cells carry a '.';
+/// labels, integer knobs like k/T, and booleans do not). Stable across
+/// runs of the same bench configuration.
+fn row_key(headers: &[String], cells: &[String]) -> String {
+    let mut key = String::new();
+    for (h, c) in headers.iter().zip(cells) {
+        if is_timing_header(h) || c.contains('.') {
+            continue;
+        }
+        key.push_str(c);
+        key.push('\u{1f}');
+    }
+    key
+}
+
+fn tables_of(doc: &Json) -> Vec<(String, &Json)> {
+    let Json::Obj(fields) = doc else {
+        return Vec::new();
+    };
+    fields
+        .iter()
+        .filter(|(_, v)| v.get("headers").is_some() && v.get("rows").is_some())
+        .map(|(k, v)| (k.clone(), v))
+        .collect()
+}
+
+fn str_cells(row: &Json) -> Option<Vec<String>> {
+    row.as_arr().map(|cells| {
+        cells
+            .iter()
+            .map(|c| c.as_str().unwrap_or_default().to_string())
+            .collect()
+    })
+}
+
+/// Compare two `BENCH_*.json` artifacts row by row and report per-row
+/// wall-time deltas. Rows are matched within same-keyed tables by
+/// their non-timing, non-float cells (dataset, algorithm, k, T, …).
+/// Returns `(report_lines, regressions)`: a regression is a timing
+/// cell where `new > old × (1 + threshold)` **and** both sides are at
+/// least `min_wall` seconds (micro rows are pure noise). Rows present
+/// on only one side are reported but never gate.
+pub fn diff_bench_json(
+    old_text: &str,
+    new_text: &str,
+    threshold: f64,
+    min_wall: f64,
+) -> Result<(Vec<String>, Vec<DiffRegression>)> {
+    let old_doc = Json::parse(old_text)?;
+    let new_doc = Json::parse(new_text)?;
+    let mut lines = Vec::new();
+    let mut regressions = Vec::new();
+
+    let old_tables = tables_of(&old_doc);
+    for (key, new_table) in tables_of(&new_doc) {
+        let Some((_, old_table)) = old_tables.iter().find(|(k, _)| *k == key) else {
+            lines.push(format!("{key}: table only in new artifact — skipped"));
+            continue;
+        };
+        let headers: Vec<String> = new_table
+            .get("headers")
+            .and_then(Json::as_arr)
+            .map(|hs| {
+                hs.iter()
+                    .map(|h| h.as_str().unwrap_or_default().to_string())
+                    .collect()
+            })
+            .unwrap_or_default();
+        let old_headers: Vec<String> = old_table
+            .get("headers")
+            .and_then(Json::as_arr)
+            .map(|hs| {
+                hs.iter()
+                    .map(|h| h.as_str().unwrap_or_default().to_string())
+                    .collect()
+            })
+            .unwrap_or_default();
+        if headers != old_headers {
+            lines.push(format!("{key}: headers changed — skipped"));
+            continue;
+        }
+        let empty = Vec::new();
+        let old_rows = old_table.get("rows").and_then(Json::as_arr).unwrap_or(&empty);
+        let new_rows = new_table.get("rows").and_then(Json::as_arr).unwrap_or(&empty);
+        for new_row in new_rows {
+            let Some(new_cells) = str_cells(new_row) else {
+                continue;
+            };
+            // ragged rows (a hand-edited baseline never passes the
+            // schema gate) must degrade to a report line, not a panic
+            if new_cells.len() != headers.len() {
+                lines.push(format!("{key}: malformed new row — skipped"));
+                continue;
+            }
+            let key_cells = row_key(&headers, &new_cells);
+            let old_cells = old_rows
+                .iter()
+                .filter_map(str_cells)
+                .filter(|c| c.len() == headers.len())
+                .find(|c| row_key(&headers, c) == key_cells);
+            let Some(old_cells) = old_cells else {
+                lines.push(format!("{key}: new row [{}]", new_cells.join(" ")));
+                continue;
+            };
+            for (c, h) in headers.iter().enumerate() {
+                if !is_timing_header(h) {
+                    continue;
+                }
+                let (Ok(old), Ok(new)) = (
+                    old_cells[c].parse::<f64>(),
+                    new_cells[c].parse::<f64>(),
+                ) else {
+                    continue; // "-" markers pass through
+                };
+                let delta = if old > 0.0 { new / old - 1.0 } else { 0.0 };
+                let what = format!("{key} [{}] {h}", new_cells.join(" "));
+                lines.push(format!(
+                    "{what}: {old:.4}s → {new:.4}s ({delta:+.1}%)",
+                    delta = delta * 100.0
+                ));
+                if new > old * (1.0 + threshold) && old >= min_wall && new >= min_wall {
+                    regressions.push(DiffRegression { what, old, new });
+                }
+            }
+        }
+    }
+    Ok((lines, regressions))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +280,73 @@ mod tests {
         let ragged = r#"{"bench":"demo","t":{"title":"T","headers":["a","b"],"rows":[["1"]]}}"#;
         let spec = [TableSpec::parse("t:1").unwrap()];
         assert!(check_bench_json(ragged, "demo", &spec).is_err());
+    }
+
+    fn timing_doc(walls: &[(&str, &str)]) -> String {
+        let mut t = TextTable::new("T").headers(&["ds", "T", "wall[s]", "speedup"]);
+        for (ds, wall) in walls {
+            t.row(vec![ds.to_string(), "2".into(), wall.to_string(), "1.00".into()]);
+        }
+        Json::obj()
+            .field("bench", "demo")
+            .field("scaling", t.to_json())
+            .to_string()
+    }
+
+    #[test]
+    fn diff_reports_deltas_and_flags_regressions() {
+        let old = timing_doc(&[("birch", "0.5000"), ("europe", "1.0000")]);
+        let new = timing_doc(&[("birch", "0.5200"), ("europe", "2.5000")]);
+        let (lines, regressions) = diff_bench_json(&old, &new, 0.5, 0.05).unwrap();
+        // every matched timing cell produces a report line
+        assert!(lines.iter().any(|l| l.contains("birch") && l.contains("+4.0%")), "{lines:?}");
+        // only europe breaches the +50% threshold
+        assert_eq!(regressions.len(), 1, "{regressions:?}");
+        assert!(regressions[0].what.contains("europe"));
+        assert_eq!(regressions[0].old, 1.0);
+        assert_eq!(regressions[0].new, 2.5);
+    }
+
+    #[test]
+    fn diff_ignores_micro_rows_and_unmatched_rows() {
+        let old = timing_doc(&[("tiny", "0.0010")]);
+        // 10× slower but below min_wall on the old side → noise, not a gate
+        let new = timing_doc(&[("tiny", "0.0100"), ("fresh", "9.0000")]);
+        let (lines, regressions) = diff_bench_json(&old, &new, 0.5, 0.05).unwrap();
+        assert!(regressions.is_empty(), "{regressions:?}");
+        assert!(lines.iter().any(|l| l.contains("new row") && l.contains("fresh")));
+    }
+
+    #[test]
+    fn diff_keys_rows_by_non_timing_cells() {
+        // same dataset at two thread counts must not collide: T is an
+        // integer cell and therefore part of the key
+        let mut t_old = TextTable::new("T").headers(&["ds", "T", "wall[s]"]);
+        t_old.row(vec!["birch".into(), "1".into(), "1.0000".into()]);
+        t_old.row(vec!["birch".into(), "4".into(), "0.3000".into()]);
+        let old = Json::obj().field("bench", "demo").field("s", t_old.to_json()).to_string();
+        let mut t_new = TextTable::new("T").headers(&["ds", "T", "wall[s]"]);
+        t_new.row(vec!["birch".into(), "1".into(), "1.0100".into()]);
+        t_new.row(vec!["birch".into(), "4".into(), "0.9000".into()]);
+        let new = Json::obj().field("bench", "demo").field("s", t_new.to_json()).to_string();
+        let (_, regressions) = diff_bench_json(&old, &new, 0.5, 0.05).unwrap();
+        assert_eq!(regressions.len(), 1);
+        assert!(regressions[0].what.contains('4'), "{:?}", regressions[0]);
+    }
+
+    #[test]
+    fn diff_rejects_garbage_input() {
+        assert!(diff_bench_json("not json", "{}", 0.5, 0.05).is_err());
+        assert!(diff_bench_json("{}", "not json", 0.5, 0.05).is_err());
+        // no tables at all: empty report, no regressions
+        let (lines, regs) = diff_bench_json("{}", "{}", 0.5, 0.05).unwrap();
+        assert!(lines.is_empty() && regs.is_empty());
+        // ragged rows (e.g. a hand-edited baseline) degrade to a skip
+        // line instead of an out-of-bounds panic
+        let ragged = r#"{"t":{"title":"T","headers":["a","wall[s]"],"rows":[["x"]]}}"#;
+        let (lines, regs) = diff_bench_json(ragged, ragged, 0.5, 0.05).unwrap();
+        assert!(lines.iter().any(|l| l.contains("malformed")), "{lines:?}");
+        assert!(regs.is_empty());
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod check;
 pub mod measure;
 pub mod table;
 
-pub use check::{check_bench_json, TableSpec};
+pub use check::{check_bench_json, diff_bench_json, DiffRegression, TableSpec};
 pub use measure::{measure, MeasureStats};
 pub use table::TextTable;
 

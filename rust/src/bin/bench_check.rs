@@ -1,5 +1,7 @@
 //! `bench_check` — CI gate for the `BENCH_*.json` bench artifacts.
 //!
+//! Schema mode (the original gate):
+//!
 //! ```text
 //! bench_check <file.json> <bench-name> <table:min_rows> [<table:min_rows>...]
 //! ```
@@ -7,15 +9,24 @@
 //! Exits 0 when the file parses, identifies itself as `<bench-name>`,
 //! and contains every listed table with headers, rectangular rows, and
 //! at least `min_rows` rows (see [`eakm::bench_support::check`]).
+//!
+//! Diff mode (cross-commit wall-time regression report):
+//!
+//! ```text
+//! bench_check --diff <old.json> <new.json> [--threshold R] [--min-wall S]
+//! ```
+//!
+//! Matches rows between the two artifacts by their non-timing cells and
+//! prints every wall-time delta. Exits 1 when any row regressed by more
+//! than `R` (a fraction: 0.5 = +50%, default 0.5) with both sides at
+//! least `S` seconds (default 0.05 — micro rows are noise, not signal).
+//!
 //! Anything else prints the failure and exits 1, failing the
 //! `bench-smoke` job.
 
-use eakm::bench_support::{check_bench_json, TableSpec};
+use eakm::bench_support::{check_bench_json, diff_bench_json, TableSpec};
 
-fn run(args: &[String]) -> Result<String, String> {
-    if args.len() < 3 {
-        return Err("usage: bench_check <file.json> <bench-name> <table:min_rows>...".to_string());
-    }
+fn run_schema(args: &[String]) -> Result<String, String> {
     let (path, bench_name) = (&args[0], &args[1]);
     let tables: Vec<TableSpec> = args[2..]
         .iter()
@@ -25,6 +36,76 @@ fn run(args: &[String]) -> Result<String, String> {
     check_bench_json(&text, bench_name, &tables)
         .map(|summary| format!("{path}: {summary}"))
         .map_err(|e| format!("{path}: {e}"))
+}
+
+fn run_diff(args: &[String]) -> Result<String, String> {
+    let mut paths = Vec::new();
+    let mut threshold = 0.5f64;
+    let mut min_wall = 0.05f64;
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--threshold" | "--min-wall" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| format!("{arg} needs a value"))?
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad value for {arg}"))?;
+                if arg == "--threshold" {
+                    threshold = v;
+                } else {
+                    min_wall = v;
+                }
+            }
+            p => paths.push(p.to_string()),
+        }
+    }
+    let [old_path, new_path] = paths.as_slice() else {
+        return Err(
+            "usage: bench_check --diff <old.json> <new.json> [--threshold R] [--min-wall S]"
+                .into(),
+        );
+    };
+    let old = std::fs::read_to_string(old_path).map_err(|e| format!("read {old_path}: {e}"))?;
+    let new = std::fs::read_to_string(new_path).map_err(|e| format!("read {new_path}: {e}"))?;
+    let (lines, regressions) =
+        diff_bench_json(&old, &new, threshold, min_wall).map_err(|e| e.to_string())?;
+    let mut out = String::new();
+    for line in &lines {
+        out.push_str(line);
+        out.push('\n');
+    }
+    if regressions.is_empty() {
+        out.push_str(&format!(
+            "diff ok: {} rows compared, no regression beyond +{:.0}% (min wall {min_wall}s)",
+            lines.len(),
+            threshold * 100.0
+        ));
+        Ok(out)
+    } else {
+        for r in &regressions {
+            out.push_str(&format!(
+                "REGRESSION {}: {:.4}s → {:.4}s (limit +{:.0}%)\n",
+                r.what,
+                r.old,
+                r.new,
+                threshold * 100.0
+            ));
+        }
+        Err(out)
+    }
+}
+
+fn run(args: &[String]) -> Result<String, String> {
+    match args.first().map(String::as_str) {
+        Some("--diff") => run_diff(&args[1..]),
+        _ if args.len() >= 3 => run_schema(args),
+        _ => Err(
+            "usage: bench_check <file.json> <bench-name> <table:min_rows>...\n\
+             \u{20}      bench_check --diff <old.json> <new.json> [--threshold R] [--min-wall S]"
+                .to_string(),
+        ),
+    }
 }
 
 fn main() {

@@ -6,8 +6,10 @@
 //!                [--threads 1] [--scale 0.02] [--max-iters N] [--json]
 //!                [--batch-size B] [--batch-growth F]
 //!                [--config file] [--data-file path.csv|.ekb]
+//!                [--ooc auto|mmap|chunked] [--ooc-window ROWS]
 //!                [--save-model model.json]
 //! eakm predict   --model model.json --data-file points.csv
+//!                [--ooc auto|mmap|chunked] [--ooc-window ROWS]
 //!                [--threads T|auto] [--out labels.txt] [--json]
 //! eakm datasets  [--scale 0.02]           # list the 22 paper datasets
 //! eakm validate  --dataset birch --k 50   # all algorithms must agree
@@ -22,8 +24,9 @@ use crate::algorithms::Algorithm;
 use crate::bench_support::{env_scale, measure, TextTable};
 use crate::config::RunConfig;
 use crate::coordinator::Runner;
+use crate::data::ooc::{open_ooc, OocMode};
 use crate::data::synth::{find, generate, paper_datasets};
-use crate::data::{io, Dataset};
+use crate::data::{io, DataSource, Dataset};
 use crate::error::{EakmError, Result};
 use crate::init::InitMethod;
 use crate::json::Json;
@@ -65,7 +68,19 @@ commands:
 
 common flags:
   --dataset NAME     paper dataset name or roman numeral (e.g. birch, iii)
-  --data-file PATH   load a .csv or .ekb file instead
+  --data-file PATH   load a .csv or .ekb file instead (alias: --data)
+  --ooc MODE         run/predict on an .ekb file *without* loading it:
+                     auto (mmap where supported, else chunked), mmap
+                     (page-cache-backed mapping), chunked (buffered
+                     reads, one resident window per worker). The file
+                     is read as-is — run's usual standardisation pass
+                     is skipped (standardise at write time if needed).
+                     Against the same as-is data, results are
+                     bit-identical to an in-memory run at any thread
+                     count; a plain `run --data-file` standardises
+                     first and therefore differs by design
+  --ooc-window ROWS  (with --ooc chunked) resident-window rows per
+                     worker (default 8192)
   --scale F          fraction of the full dataset size (default 0.02)
   --k K              number of clusters
   --algorithm ALG    sta selk elk ham ann exp syin yin selk-ns elk-ns
@@ -121,12 +136,42 @@ fn flag_num<T: std::str::FromStr>(flags: &Flags, key: &str) -> Result<Option<T>>
     }
 }
 
+/// `--data-file` (or its `--data` alias), if given.
+fn data_file_flag(flags: &Flags) -> Option<&String> {
+    flags.get("data-file").or_else(|| flags.get("data"))
+}
+
+/// Open an out-of-core source when `--ooc` is given: the file is
+/// clustered/predicted *without loading it* (and without the in-memory
+/// standardisation pass — the file is read as-is). `Ok(None)` when the
+/// run should use the in-memory path.
+fn open_ooc_source(flags: &Flags) -> Result<Option<Box<dyn DataSource>>> {
+    let Some(mode_s) = flags.get("ooc") else {
+        if flags.contains_key("ooc-window") {
+            return Err(EakmError::Config("--ooc-window requires --ooc".into()));
+        }
+        return Ok(None);
+    };
+    let mode = OocMode::parse(mode_s)
+        .ok_or_else(|| EakmError::Config(format!("bad --ooc: {mode_s:?} (auto|mmap|chunked)")))?;
+    let path = data_file_flag(flags)
+        .ok_or_else(|| EakmError::Config("--ooc requires --data-file PATH.ekb".into()))?;
+    let path = PathBuf::from(path);
+    if path.extension().and_then(|e| e.to_str()) != Some("ekb") {
+        return Err(EakmError::Config(
+            "--ooc needs the binary .ekb format (CSV must be loaded in memory)".into(),
+        ));
+    }
+    let window = flag_num::<usize>(flags, "ooc-window")?.unwrap_or(0);
+    Ok(Some(open_ooc(&path, mode, window)?))
+}
+
 /// Load the dataset named by the flags. `standardize` applies the
 /// paper's zero-mean/unit-variance preprocessing to `--data-file` input
 /// (fit path); `predict` passes `false` so points stay in the feature
 /// space the model was fitted on.
 fn load_dataset(flags: &Flags, standardize: bool) -> Result<Dataset> {
-    if let Some(path) = flags.get("data-file") {
+    if let Some(path) = data_file_flag(flags) {
         let path = PathBuf::from(path);
         let mut ds = match path.extension().and_then(|e| e.to_str()) {
             Some("ekb") => io::load_bin(&path)?,
@@ -205,10 +250,17 @@ fn build_config(flags: &Flags) -> Result<RunConfig> {
 }
 
 fn cmd_run(flags: &Flags) -> Result<i32> {
-    let data = load_dataset(flags, true)?;
     let cfg = build_config(flags)?;
     let rt = Runtime::new(cfg.resolved_threads());
-    let model = Kmeans::from_config(cfg).fit(&rt, &data)?;
+    let model = match open_ooc_source(flags)? {
+        // out-of-core: fit straight off the file; RunReport.io carries
+        // the blocks/bytes/refills telemetry
+        Some(src) => Kmeans::from_config(cfg).fit(&rt, &*src)?,
+        None => {
+            let data = load_dataset(flags, true)?;
+            Kmeans::from_config(cfg).fit(&rt, &data)?
+        }
+    };
     if flags.contains_key("json") {
         println!("{}", Json::from(model.report()));
     } else {
@@ -227,17 +279,28 @@ fn cmd_predict(flags: &Flags) -> Result<i32> {
         .ok_or_else(|| EakmError::Config("--model required (see `eakm run --save-model`)".into()))?;
     let model = FittedModel::load(Path::new(model_path))?;
     // points are taken as-is: the model defines the feature space
-    let data = load_dataset(flags, false)?;
     let rt = Runtime::new(parse_threads(flags)?.unwrap_or(1));
-    let labels = model.predict(&rt, &data)?;
-    let mse = data.mse(model.centroids(), &labels);
+    let (labels, mse, n) = match open_ooc_source(flags)? {
+        Some(src) => {
+            let labels = model.predict(&rt, &*src)?;
+            let mse = src.mse(model.centroids(), &labels);
+            let n = src.n();
+            (labels, mse, n)
+        }
+        None => {
+            let data = load_dataset(flags, false)?;
+            let labels = model.predict(&rt, &data)?;
+            let mse = data.mse(model.centroids(), &labels);
+            (labels, mse, data.n())
+        }
+    };
     if flags.contains_key("json") {
         println!(
             "{}",
             Json::obj()
                 .field("model", model_path.as_str())
                 .field("algorithm", model.algorithm())
-                .field("n", data.n())
+                .field("n", n)
                 .field("k", model.k())
                 .field("d", model.d())
                 .field("mse", mse)
@@ -257,15 +320,13 @@ fn cmd_predict(flags: &Flags) -> Result<i32> {
         Some(path) => {
             std::fs::write(path, text)?;
             println!(
-                "predicted {} points into k={} clusters (mse={mse:.6}) → {path}",
-                data.n(),
+                "predicted {n} points into k={} clusters (mse={mse:.6}) → {path}",
                 model.k()
             );
         }
         None => {
             eprintln!(
-                "predicted {} points into k={} clusters (mse={mse:.6})",
-                data.n(),
+                "predicted {n} points into k={} clusters (mse={mse:.6})",
                 model.k()
             );
             print!("{text}");
@@ -568,6 +629,83 @@ mod tests {
             "32",
             "--batch-growth",
             "0.5",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn run_and_predict_out_of_core() {
+        use crate::data::synth::blobs;
+        let dir = tmpdir();
+        let ekb = dir.join("ooc-cli.ekb");
+        io::save_bin(&blobs(600, 4, 5, 0.2, 13), &ekb).unwrap();
+        let model_path = dir.join("ooc-cli-model.json");
+        // fit off the file without loading it (chunked, tiny window)
+        let code = main(&s(&[
+            "run",
+            "--data",
+            ekb.to_str().unwrap(),
+            "--ooc",
+            "chunked",
+            "--ooc-window",
+            "64",
+            "--k",
+            "5",
+            "--algorithm",
+            "exp-ns",
+            "--threads",
+            "2",
+            "--json",
+            "--save-model",
+            model_path.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        // predict off the same file through auto mode
+        let code = main(&s(&[
+            "predict",
+            "--model",
+            model_path.to_str().unwrap(),
+            "--data-file",
+            ekb.to_str().unwrap(),
+            "--ooc",
+            "auto",
+            "--out",
+            dir.join("ooc-cli-labels.txt").to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let labels = std::fs::read_to_string(dir.join("ooc-cli-labels.txt")).unwrap();
+        assert_eq!(labels.lines().count(), 600);
+    }
+
+    #[test]
+    fn ooc_flag_validation() {
+        // --ooc needs a data file, an .ekb one, and a known mode
+        assert!(main(&s(&["run", "--dataset", "birch", "--ooc", "chunked"])).is_err());
+        assert!(main(&s(&[
+            "run",
+            "--data-file",
+            "points.csv",
+            "--ooc",
+            "chunked"
+        ]))
+        .is_err());
+        assert!(main(&s(&[
+            "run",
+            "--data-file",
+            "x.ekb",
+            "--ooc",
+            "ramdisk"
+        ]))
+        .is_err());
+        // --ooc-window without --ooc is a config error, not ignored
+        assert!(main(&s(&[
+            "run",
+            "--dataset",
+            "birch",
+            "--ooc-window",
+            "64"
         ]))
         .is_err());
     }

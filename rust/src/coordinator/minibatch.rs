@@ -70,6 +70,7 @@ const SAMPLE_STREAM: u64 = 0xBA7C;
 /// assignments and MSE) runs after the budget, so total wall time is
 /// the budget plus one full scan.
 pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Result<RunOutput> {
+    let io_before = data.io_stats();
     let start = Instant::now();
     let (n, d, k) = (data.n(), data.d(), cfg.k);
     if n == 0 || d == 0 {
@@ -215,6 +216,10 @@ pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Re
     phases.scan += t_scan.elapsed();
     let mse = data.mse(&centroids, &assignments);
     let wall = start.elapsed();
+    let io = match (io_before, data.io_stats()) {
+        (Some(before), Some(after)) => Some(after.since(&before)),
+        _ => None,
+    };
 
     let report = RunReport {
         algorithm: name,
@@ -234,6 +239,7 @@ pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Re
             growth,
             schedule,
         }),
+        io,
     };
     Ok(RunOutput {
         assignments,

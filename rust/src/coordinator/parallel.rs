@@ -40,17 +40,22 @@ pub fn make_shards(n: usize, w: usize) -> Vec<(usize, usize)> {
 }
 
 /// One shard's slice of the round: its algorithm instance, its window of
-/// the assignment array, and its private outputs.
+/// the assignment array, its shard range, and its private outputs.
 struct ShardRun<'s> {
     alg: &'s mut Box<dyn AssignStep>,
     a: &'s mut [u32],
+    lo: usize,
+    len: usize,
     ctr: Counters,
     moved: Vec<Moved>,
 }
 
 /// Run one assignment round (or the initial assignment when
-/// `init == true`) across all shards on the pool. Returns merged
-/// counters and moves (ascending sample order).
+/// `init == true`) across all shards on the pool. Each shard's worker
+/// opens its own [`BlockCursor`](crate::data::source::BlockCursor) for
+/// the shard range — out-of-core sources thereby get one resident
+/// window per worker. Returns merged counters and moves (ascending
+/// sample order).
 pub fn run_shards(
     pool: &WorkerPool,
     algs: &mut [Box<dyn AssignStep>],
@@ -63,11 +68,13 @@ pub fn run_shards(
     // split the assignment array to match the shards
     let mut tasks: Vec<ShardRun> = Vec::with_capacity(shards.len());
     let mut rest = a;
-    for (alg, &(_lo, len)) in algs.iter_mut().zip(shards) {
+    for (alg, &(lo, len)) in algs.iter_mut().zip(shards) {
         let (head, tail) = rest.split_at_mut(len);
         tasks.push(ShardRun {
             alg,
             a: head,
+            lo,
+            len,
             ctr: Counters::default(),
             moved: Vec::new(),
         });
@@ -75,10 +82,11 @@ pub fn run_shards(
     }
 
     pool.run_tasks(&mut tasks, |_, t| {
+        let mut rows = sh.data.open(t.lo, t.len);
         if init {
-            t.alg.init(sh, t.a, &mut t.ctr);
+            t.alg.init(sh, rows.as_mut(), t.a, &mut t.ctr);
         } else {
-            t.alg.round(sh, t.a, &mut t.ctr, &mut t.moved);
+            t.alg.round(sh, rows.as_mut(), t.a, &mut t.ctr, &mut t.moved);
         }
     });
 

@@ -415,6 +415,9 @@ impl Runner {
                 return crate::coordinator::minibatch::run_minibatch(rt, &self.cfg, data);
             }
         }
+        // out-of-core sources expose cumulative I/O counters; report the
+        // per-run delta so one source can serve many runs
+        let io_before = data.io_stats();
         let start = Instant::now();
         let mut engine = Engine::on_runtime(data, &self.cfg, rt)?;
         let mut round_times = Vec::new();
@@ -432,6 +435,10 @@ impl Runner {
         }
         let wall = start.elapsed();
         let mse = engine.mse();
+        let io = match (io_before, data.io_stats()) {
+            (Some(before), Some(after)) => Some(after.since(&before)),
+            _ => None,
+        };
         let report = RunReport {
             algorithm: engine.name().to_string(),
             dataset: data.name().to_string(),
@@ -446,6 +453,7 @@ impl Runner {
             counters: engine.counters(),
             round_times,
             batch: None,
+            io,
         };
         Ok(RunOutput {
             assignments: engine.assignments().to_vec(),

@@ -61,6 +61,8 @@ impl UpdateState {
     }
 
     /// As [`UpdateState::from_assignments`], sharded over the pool.
+    /// Each chunk's worker opens its own block cursor, so out-of-core
+    /// sources stream the pass through per-worker windows.
     pub fn from_assignments_pooled(
         data: &dyn DataSource,
         a: &[u32],
@@ -77,10 +79,11 @@ impl UpdateState {
         pool.run_tasks(&mut partials, |c, part| {
             let lo = c * clen;
             let hi = (lo + clen).min(n);
+            let mut cur = data.open(lo, hi - lo);
             for (i, &j) in a[lo..hi].iter().enumerate() {
                 let j = j as usize;
                 part.counts[j] += 1;
-                let row = data.row(lo + i);
+                let row = cur.row(lo + i);
                 let s = &mut part.sums[j * d..(j + 1) * d];
                 for (t, v) in row.iter().enumerate() {
                     s[t] += v;
@@ -105,10 +108,11 @@ impl UpdateState {
         let d = data.d();
         let mut sums = vec![0.0; k * d];
         let mut counts = vec![0u64; k];
+        let mut cur = data.open(0, data.n());
         for (i, &j) in a.iter().enumerate() {
             let j = j as usize;
             counts[j] += 1;
-            let row = data.row(i);
+            let row = cur.row(i);
             let s = &mut sums[j * d..(j + 1) * d];
             for (t, v) in row.iter().enumerate() {
                 s[t] += v;
@@ -117,11 +121,14 @@ impl UpdateState {
         UpdateState { sums, counts, k }
     }
 
-    /// Apply one round's assignment changes (delta update).
+    /// Apply one round's assignment changes (delta update). Moves arrive
+    /// in ascending sample order, so the cursor advances monotonically —
+    /// an out-of-core source refills forward only.
     pub fn apply_moves(&mut self, data: &dyn DataSource, moved: &[Moved]) {
         let d = data.d();
+        let mut cur = data.open(0, data.n());
         for m in moved {
-            let row = data.row(m.i as usize);
+            let row = cur.row(m.i as usize);
             let from = &mut self.sums[m.from as usize * d..(m.from as usize + 1) * d];
             for (t, v) in row.iter().enumerate() {
                 from[t] -= v;
@@ -151,9 +158,14 @@ impl UpdateState {
         pool.run_tasks(&mut partials, |c, part| {
             let lo = c * clen;
             let hi = (lo + clen).min(moved.len());
+            // this chunk touches rows [moved[lo].i, moved[hi-1].i] in
+            // ascending order — open the cursor for exactly that span
+            let row_lo = moved[lo].i as usize;
+            let row_hi = moved[hi - 1].i as usize + 1;
+            let mut cur = data.open(row_lo, row_hi - row_lo);
             for m in &moved[lo..hi] {
                 let (from, to) = (m.from as usize, m.to as usize);
-                let row = data.row(m.i as usize);
+                let row = cur.row(m.i as usize);
                 part.touched[from] = true;
                 part.touched[to] = true;
                 let s = &mut part.sums[from * d..(from + 1) * d];

@@ -17,6 +17,7 @@
 //! * draws consume only the supplied [`Rng`] stream, so a seeded batch
 //!   sequence is identical at every thread count.
 
+use crate::data::source::{BlockCursor, SliceCursor};
 use crate::data::DataSource;
 use crate::rng::Rng;
 
@@ -97,12 +98,17 @@ impl BatchView {
     }
 
     fn draw(&mut self, base: &dyn DataSource, extra: usize, rng: &mut Rng) {
+        // one cursor for the whole gather: picks are random-access, so a
+        // windowed base refills as needed while a resident base just
+        // re-slices
+        let mut cur = base.open(0, base.n());
         for _ in 0..extra {
             let pick = rng.below(self.remaining.len());
             let idx = self.remaining.swap_remove(pick);
             self.indices.push(idx);
-            self.rows.extend_from_slice(base.row(idx));
-            self.sqnorms.push(base.sqnorm(idx));
+            let block = cur.lease(idx, 1);
+            self.rows.extend_from_slice(block.rows());
+            self.sqnorms.push(block.sqnorms()[0]);
         }
     }
 
@@ -120,6 +126,22 @@ impl BatchView {
     pub fn is_full(&self) -> bool {
         self.indices.len() == self.base_n
     }
+
+    /// Gathered rows `[lo, lo+len)` as one row-major slice (inherent
+    /// fast path, mirroring [`Dataset`](crate::data::Dataset)'s).
+    pub fn rows(&self, lo: usize, len: usize) -> &[f64] {
+        &self.rows[lo * self.d..(lo + len) * self.d]
+    }
+
+    /// Batch row `i`.
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.rows[i * self.d..(i + 1) * self.d]
+    }
+
+    /// `‖x(i)‖²` of batch row `i` (gathered from the base's norms).
+    pub fn sqnorm(&self, i: usize) -> f64 {
+        self.sqnorms[i]
+    }
 }
 
 impl DataSource for BatchView {
@@ -135,12 +157,8 @@ impl DataSource for BatchView {
         &self.name
     }
 
-    fn rows(&self, lo: usize, len: usize) -> &[f64] {
-        &self.rows[lo * self.d..(lo + len) * self.d]
-    }
-
-    fn sqnorms_range(&self, lo: usize, len: usize) -> &[f64] {
-        &self.sqnorms[lo..lo + len]
+    fn open(&self, lo: usize, len: usize) -> Box<dyn BlockCursor + '_> {
+        Box::new(SliceCursor::new(&self.rows, &self.sqnorms, self.d, lo, len))
     }
 }
 

@@ -1,6 +1,6 @@
 //! The dataset container used throughout the crate.
 
-use crate::data::source::DataSource;
+use crate::data::source::{BlockCursor, DataSource, SliceCursor};
 use crate::error::{EakmError, Result};
 use crate::linalg::sqnorms_rows;
 
@@ -141,9 +141,10 @@ impl Dataset {
     }
 }
 
-/// The in-memory reference implementation of the data-access seam.
-/// Accessors mirror the inherent methods (which stay the fast path for
-/// concrete `Dataset` callers — no virtual dispatch).
+/// The in-memory reference implementation of the data-access seam:
+/// cursors are zero-copy [`SliceCursor`]s over the resident buffers
+/// (the inherent accessors stay the fast path for concrete `Dataset`
+/// callers — no cursor indirection).
 impl DataSource for Dataset {
     fn n(&self) -> usize {
         self.n
@@ -157,24 +158,8 @@ impl DataSource for Dataset {
         &self.name
     }
 
-    fn rows(&self, lo: usize, len: usize) -> &[f64] {
-        &self.data[lo * self.d..(lo + len) * self.d]
-    }
-
-    fn sqnorms_range(&self, lo: usize, len: usize) -> &[f64] {
-        &self.sqnorms[lo..lo + len]
-    }
-
-    fn row(&self, i: usize) -> &[f64] {
-        &self.data[i * self.d..(i + 1) * self.d]
-    }
-
-    fn sqnorm(&self, i: usize) -> f64 {
-        self.sqnorms[i]
-    }
-
-    fn mse(&self, centroids: &[f64], assignments: &[u32]) -> f64 {
-        Dataset::mse(self, centroids, assignments)
+    fn open(&self, lo: usize, len: usize) -> Box<dyn BlockCursor + '_> {
+        Box::new(SliceCursor::new(&self.data, &self.sqnorms, self.d, lo, len))
     }
 }
 

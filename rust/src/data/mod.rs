@@ -1,14 +1,21 @@
 //! Datasets: container, standardisation, synthetic generators for the 22
 //! paper datasets (Table 8 substitution), simple binary/CSV I/O, the
-//! [`DataSource`] seam every consumer reads samples through, and the
-//! [`BatchView`] sampled view the mini-batch engine draws through it.
+//! block-lease [`DataSource`] seam every consumer reads samples through
+//! ([`BlockCursor`] / [`RowBlock`]), the [`BatchView`] sampled view the
+//! mini-batch engine draws through it, and the out-of-core sources
+//! ([`ooc`]) that cluster `.ekb` files larger than RAM behind the same
+//! seam.
 
 pub mod batch;
 pub mod dataset;
 pub mod io;
+pub mod ooc;
 pub mod source;
 pub mod synth;
 
 pub use batch::BatchView;
 pub use dataset::Dataset;
-pub use source::DataSource;
+pub use ooc::{ChunkedFileSource, OocMode};
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+pub use ooc::MmapSource;
+pub use source::{BlockCursor, DataSource, RowBlock, SliceCursor};

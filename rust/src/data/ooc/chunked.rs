@@ -1,0 +1,313 @@
+//! [`ChunkedFileSource`] — portable out-of-core reads with one resident
+//! window per cursor.
+//!
+//! Each [`open`](crate::data::DataSource::open)ed cursor owns a private
+//! file handle and a window of `window_rows` decoded rows. A lease that
+//! falls inside the window is a slice of it (no I/O); a lease outside
+//! it seeks and refills the window starting at the requested row.
+//! Since every consumer in the coordinator advances monotonically
+//! within a shard (scans, the delta update, seeding passes), a round
+//! costs `shard_rows / window_rows` refills per worker — sequential
+//! reads the OS readahead handles well.
+//!
+//! Squared norms come from the `.norms` sidecar and stay fully
+//! resident (`8n` bytes vs the data's `8nd`): windowing them too would
+//! save d× less memory than the rows while doubling the refill logic.
+
+use std::fs::File;
+use std::io::{BufReader, Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+use super::norms;
+use super::{stem_name, IoCounters};
+use crate::data::io::{decode_f64_le, read_bin_header, HEADER_LEN};
+use crate::data::source::{BlockCursor, RowBlock};
+use crate::data::DataSource;
+use crate::error::{EakmError, Result};
+use crate::metrics::IoTelemetry;
+
+/// An `.ekb` file served through per-cursor resident windows.
+pub struct ChunkedFileSource {
+    path: PathBuf,
+    n: usize,
+    d: usize,
+    name: String,
+    window_rows: usize,
+    /// Sidecar norms, fully resident (see module docs).
+    norms: Vec<f64>,
+    io: IoCounters,
+}
+
+impl ChunkedFileSource {
+    /// Open `path` without loading it: validate the header and size,
+    /// ensure the `.norms` sidecar (one streaming pass on first
+    /// contact with the file), and record the window size. A
+    /// `window_rows` of 0 selects [`DEFAULT_WINDOW_ROWS`](super::DEFAULT_WINDOW_ROWS).
+    pub fn open(path: &Path, window_rows: usize) -> Result<ChunkedFileSource> {
+        let mut r = BufReader::new(File::open(path)?);
+        let (n, d) = read_bin_header(&mut r, path)?;
+        let expect = (HEADER_LEN + n * d * 8) as u64;
+        let actual = r.get_ref().metadata()?.len();
+        if actual != expect {
+            return Err(EakmError::Data(format!(
+                "{}: file is {actual} bytes, header implies {expect}",
+                path.display()
+            )));
+        }
+        drop(r);
+        let sidecar = norms::ensure_sidecar(path, n, d)?;
+        let norms = norms::load_sidecar(&sidecar, n, d)?;
+        let window_rows = if window_rows == 0 {
+            super::DEFAULT_WINDOW_ROWS
+        } else {
+            window_rows
+        };
+        Ok(ChunkedFileSource {
+            path: path.to_path_buf(),
+            n,
+            d,
+            name: stem_name(path),
+            window_rows,
+            norms,
+            io: IoCounters::default(),
+        })
+    }
+
+    /// Resident-window size in rows.
+    pub fn window_rows(&self) -> usize {
+        self.window_rows
+    }
+}
+
+impl DataSource for ChunkedFileSource {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn open(&self, lo: usize, len: usize) -> Box<dyn BlockCursor + '_> {
+        assert!(lo + len <= self.n, "open range out of bounds");
+        // a private handle per cursor: seek positions must not be
+        // shared between workers. Sources are validated at open, so a
+        // file that vanishes mid-run is a panic, not a silent zero.
+        let file = File::open(&self.path).unwrap_or_else(|e| {
+            panic!("{}: reopening for cursor: {e}", self.path.display())
+        });
+        Box::new(ChunkedCursor {
+            src: self,
+            file,
+            range_lo: lo,
+            range_len: len,
+            win_lo: 0,
+            win_len: 0,
+            buf: Vec::new(),
+            byte_buf: Vec::new(),
+        })
+    }
+
+    fn io_stats(&self) -> Option<IoTelemetry> {
+        Some(self.io.snapshot())
+    }
+}
+
+/// One worker's window over a [`ChunkedFileSource`] shard.
+struct ChunkedCursor<'a> {
+    src: &'a ChunkedFileSource,
+    file: File,
+    range_lo: usize,
+    range_len: usize,
+    /// Resident window: rows `[win_lo, win_lo + win_len)` decoded in `buf`.
+    win_lo: usize,
+    win_len: usize,
+    buf: Vec<f64>,
+    byte_buf: Vec<u8>,
+}
+
+/// Rows fetched for a random-access (non-streaming) single-row lease:
+/// a small readahead that keeps sorted-ish walks cheap without the
+/// full-window read amplification a gather pattern (mini-batch draws,
+/// k-means++ picks) would otherwise pay per pick.
+const RANDOM_WINDOW_ROWS: usize = 64;
+
+impl ChunkedCursor<'_> {
+    /// Refill the window to start at `lo`, covering at least `len`
+    /// rows. Streaming leases (block scans, or a single row continuing
+    /// the window forward) fetch a full `window_rows` window; isolated
+    /// single-row leases fetch only [`RANDOM_WINDOW_ROWS`] — gathering
+    /// `b` random rows then costs `O(b)` small reads, not
+    /// `O(b × window)`.
+    fn refill(&mut self, lo: usize, len: usize) {
+        let d = self.src.d;
+        let end = self.range_lo + self.range_len;
+        let streaming = self.win_len > 0 && lo == self.win_lo + self.win_len;
+        let target = if len > 1 || streaming {
+            self.src.window_rows
+        } else {
+            RANDOM_WINDOW_ROWS.min(self.src.window_rows)
+        };
+        let take = target.max(len).min(end - lo);
+        let bytes = take * d * 8;
+        self.byte_buf.resize(bytes, 0);
+        let read = (|| -> std::io::Result<()> {
+            self.file
+                .seek(SeekFrom::Start(norms::row_byte_offset(lo, d)))?;
+            self.file.read_exact(&mut self.byte_buf[..bytes])
+        })();
+        if let Err(e) = read {
+            // the file was validated at open: losing it mid-run is not
+            // a recoverable lease outcome
+            panic!(
+                "{}: reading rows [{lo}, {}): {e}",
+                self.src.path.display(),
+                lo + take
+            );
+        }
+        self.buf.clear();
+        decode_f64_le(&self.byte_buf[..bytes], &mut self.buf);
+        self.win_lo = lo;
+        self.win_len = take;
+        self.src.io.add_refill();
+        self.src.io.add_bytes(bytes as u64);
+    }
+}
+
+impl BlockCursor for ChunkedCursor<'_> {
+    fn d(&self) -> usize {
+        self.src.d
+    }
+
+    fn lease(&mut self, lo: usize, len: usize) -> RowBlock<'_> {
+        assert!(
+            lo >= self.range_lo && lo + len <= self.range_lo + self.range_len,
+            "lease [{lo}, {}) outside cursor range [{}, {})",
+            lo + len,
+            self.range_lo,
+            self.range_lo + self.range_len
+        );
+        if lo < self.win_lo || lo + len > self.win_lo + self.win_len {
+            self.refill(lo, len);
+        }
+        self.src.io.add_block();
+        let d = self.src.d;
+        let off = (lo - self.win_lo) * d;
+        RowBlock::new(
+            lo,
+            d,
+            &self.buf[off..off + len * d],
+            &self.src.norms[lo..lo + len],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::io::save_bin;
+    use crate::data::synth::blobs;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("eakm-chunked-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn leases_match_the_in_memory_dataset() {
+        let ds = blobs(1_000, 5, 4, 0.2, 21);
+        let path = tmpfile("leases.ekb");
+        save_bin(&ds, &path).unwrap();
+        // window far smaller than the file → many refills
+        let src = ChunkedFileSource::open(&path, 64).unwrap();
+        assert_eq!(src.n(), 1_000);
+        assert_eq!(src.d(), 5);
+        assert_eq!(src.name(), "leases");
+        assert_eq!(src.window_rows(), 64);
+        let mut cur = DataSource::open(&src, 0, 1_000);
+        for start in [0usize, 10, 500, 990, 3, 700] {
+            let len = 10.min(1_000 - start);
+            let block = cur.lease(start, len);
+            assert_eq!(block.rows(), &ds.raw()[start * 5..(start + len) * 5]);
+            for i in start..start + len {
+                assert_eq!(block.sqnorm(i).to_bits(), ds.sqnorm(i).to_bits());
+            }
+        }
+        let io = src.io_stats().unwrap();
+        assert!(io.window_refills >= 3, "small window must refill");
+        assert!(io.bytes_read > 0);
+        assert_eq!(io.blocks_leased, 6);
+    }
+
+    #[test]
+    fn lease_larger_than_window_grows_the_buffer() {
+        let ds = blobs(300, 3, 3, 0.2, 8);
+        let path = tmpfile("grow.ekb");
+        save_bin(&ds, &path).unwrap();
+        let src = ChunkedFileSource::open(&path, 4).unwrap();
+        let mut cur = DataSource::open(&src, 0, 300);
+        let block = cur.lease(100, 50); // 50 > window of 4
+        assert_eq!(block.len(), 50);
+        assert_eq!(block.rows(), &ds.raw()[100 * 3..150 * 3]);
+    }
+
+    #[test]
+    fn random_single_row_leases_read_small_windows() {
+        let ds = blobs(2_000, 4, 3, 0.2, 17);
+        let path = tmpfile("gather.ekb");
+        save_bin(&ds, &path).unwrap();
+        let src = ChunkedFileSource::open(&path, 1_000).unwrap();
+        let mut cur = DataSource::open(&src, 0, 2_000);
+        // a scatter of single-row picks (the BatchView::draw pattern)
+        for &i in &[1_500usize, 3, 900, 1_999, 250, 1_200] {
+            let block = cur.lease(i, 1);
+            assert_eq!(block.rows(), &ds.raw()[i * 4..(i + 1) * 4]);
+        }
+        let io = src.io_stats().unwrap();
+        // each refill reads ≤ RANDOM_WINDOW_ROWS rows, not the full
+        // 1000-row window — a gather must not amplify reads per pick
+        assert!(
+            io.bytes_read <= (6 * RANDOM_WINDOW_ROWS * 4 * 8) as u64,
+            "gather read-amplified: {} bytes",
+            io.bytes_read
+        );
+        // and a streaming continuation afterwards goes back to full
+        // windows: one refill covers many block leases
+        let refills_before = src.io_stats().unwrap().window_refills;
+        let mut scan = DataSource::open(&src, 0, 2_000);
+        let mut at = 0;
+        while at < 2_000 {
+            let take = 128.min(2_000 - at);
+            scan.lease(at, take);
+            at += take;
+        }
+        // 2000 rows / 1000-row window ≈ 2 refills (+1 for the block
+        // straddling a window boundary)
+        let scan_refills = src.io_stats().unwrap().window_refills - refills_before;
+        assert!(scan_refills <= 3, "scan refilled {scan_refills}× with a 1000-row window");
+    }
+
+    #[test]
+    fn zero_window_selects_the_default() {
+        let ds = blobs(50, 2, 2, 0.2, 4);
+        let path = tmpfile("defwin.ekb");
+        save_bin(&ds, &path).unwrap();
+        let src = ChunkedFileSource::open(&path, 0).unwrap();
+        assert_eq!(src.window_rows(), super::super::DEFAULT_WINDOW_ROWS);
+    }
+
+    #[test]
+    fn rejects_size_mismatch() {
+        let ds = blobs(40, 2, 2, 0.2, 6);
+        let path = tmpfile("short.ekb");
+        save_bin(&ds, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(ChunkedFileSource::open(&path, 16).is_err());
+    }
+}

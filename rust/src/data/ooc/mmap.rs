@@ -1,0 +1,260 @@
+//! [`MmapSource`] — page-cache-backed `.ekb` mapping.
+//!
+//! The data file and its `.norms` sidecar are mapped read-only; a lease
+//! is a zero-copy `&[f64]` straight into the mapping, and residency is
+//! the kernel's problem (the page cache keeps hot shards in RAM and
+//! evicts cold ones under pressure). This is the out-of-core fast path
+//! on platforms where the on-disk format *is* the in-memory format:
+//! 64-bit little-endian unix, with the payload 8-byte aligned after the
+//! 24-byte header (mappings are page-aligned, so header offset 24 keeps
+//! f64 alignment).
+//!
+//! This module owns **all** `unsafe` of the out-of-core layer: the raw
+//! `mmap`/`munmap` FFI (declared here — the build is dependency-free,
+//! so no `libc` crate) and the byte→f64 reinterpretation, both confined
+//! behind the safe [`Map`] wrapper. Compiled only under
+//! `cfg(all(unix, target_endian = "little", target_pointer_width = "64"))`.
+
+use std::ffi::c_void;
+use std::fs::File;
+use std::io::BufReader;
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+use super::norms;
+use super::{stem_name, IoCounters};
+use crate::data::io::{read_bin_header, HEADER_LEN};
+use crate::data::source::{BlockCursor, RowBlock};
+use crate::data::DataSource;
+use crate::error::{EakmError, Result};
+use crate::metrics::IoTelemetry;
+
+// Raw mmap FFI. std links libc on unix, so declaring the two symbols
+// we need keeps the build dependency-free. Constants are identical on
+// Linux and the BSDs (incl. macOS) for these flags.
+extern "C" {
+    fn mmap(
+        addr: *mut c_void,
+        length: usize,
+        prot: i32,
+        flags: i32,
+        fd: i32,
+        offset: i64,
+    ) -> *mut c_void;
+    fn munmap(addr: *mut c_void, length: usize) -> i32;
+}
+
+const PROT_READ: i32 = 0x1;
+const MAP_SHARED: i32 = 0x01;
+
+/// RAII read-only mapping of one whole file.
+struct Map {
+    ptr: *mut c_void,
+    len: usize,
+}
+
+// The mapping is read-only and never remapped, so concurrent reads
+// from any thread are safe.
+unsafe impl Send for Map {}
+unsafe impl Sync for Map {}
+
+impl Map {
+    fn of_file(file: &File, len: usize, path: &Path) -> Result<Map> {
+        assert!(len > 0, "cannot map an empty file");
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ,
+                MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            return Err(EakmError::Data(format!(
+                "{}: mmap failed: {}",
+                path.display(),
+                std::io::Error::last_os_error()
+            )));
+        }
+        // page-aligned by the kernel; the f64 views below rely on it
+        assert_eq!(ptr as usize % 8, 0, "mmap returned unaligned pointer");
+        Ok(Map { ptr, len })
+    }
+
+    /// `count` f64 values starting `byte_off` bytes into the mapping.
+    /// Safe because the mapping is immutable for the `Map`'s lifetime,
+    /// the offset keeps 8-byte alignment (asserted), and the range is
+    /// bounds-checked against the mapped length.
+    fn f64s(&self, byte_off: usize, count: usize) -> &[f64] {
+        debug_assert_eq!(byte_off % 8, 0);
+        assert!(byte_off + count * 8 <= self.len, "mapped read out of range");
+        unsafe {
+            std::slice::from_raw_parts((self.ptr as *const u8).add(byte_off) as *const f64, count)
+        }
+    }
+}
+
+impl Drop for Map {
+    fn drop(&mut self) {
+        unsafe {
+            munmap(self.ptr, self.len);
+        }
+    }
+}
+
+/// An `.ekb` file (plus `.norms` sidecar) served from read-only
+/// mappings; leases are zero-copy.
+pub struct MmapSource {
+    data: Map,
+    norms: Map,
+    n: usize,
+    d: usize,
+    name: String,
+    io: IoCounters,
+}
+
+impl MmapSource {
+    /// Map `path` without loading it: validate header and size, ensure
+    /// the `.norms` sidecar (one streaming pass on first contact), then
+    /// map both files.
+    pub fn open(path: &Path) -> Result<MmapSource> {
+        let file = File::open(path)?;
+        let (n, d) = read_bin_header(&mut BufReader::new(&file), path)?;
+        let expect = HEADER_LEN + n * d * 8;
+        let actual = file.metadata()?.len();
+        if actual != expect as u64 {
+            return Err(EakmError::Data(format!(
+                "{}: file is {actual} bytes, header implies {expect}",
+                path.display()
+            )));
+        }
+        let sidecar = norms::ensure_sidecar(path, n, d)?;
+        let nfile = File::open(&sidecar)?;
+        let nexpect = norms::NHEADER_LEN + n * 8;
+        let nactual = nfile.metadata()?.len();
+        if nactual != nexpect as u64 {
+            return Err(EakmError::Data(format!(
+                "{}: sidecar is {nactual} bytes, expected {nexpect}",
+                sidecar.display()
+            )));
+        }
+        Ok(MmapSource {
+            data: Map::of_file(&file, expect, path)?,
+            norms: Map::of_file(&nfile, nexpect, &sidecar)?,
+            n,
+            d,
+            name: stem_name(path),
+            io: IoCounters::default(),
+        })
+    }
+}
+
+impl DataSource for MmapSource {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn open(&self, lo: usize, len: usize) -> Box<dyn BlockCursor + '_> {
+        assert!(lo + len <= self.n, "open range out of bounds");
+        Box::new(MmapCursor {
+            src: self,
+            range_lo: lo,
+            range_len: len,
+        })
+    }
+
+    fn io_stats(&self) -> Option<IoTelemetry> {
+        Some(self.io.snapshot())
+    }
+}
+
+/// Stateless cursor over an [`MmapSource`]: every lease is a view into
+/// the mapping (no window, no refills).
+struct MmapCursor<'a> {
+    src: &'a MmapSource,
+    range_lo: usize,
+    range_len: usize,
+}
+
+impl BlockCursor for MmapCursor<'_> {
+    fn d(&self) -> usize {
+        self.src.d
+    }
+
+    fn lease(&mut self, lo: usize, len: usize) -> RowBlock<'_> {
+        assert!(
+            lo >= self.range_lo && lo + len <= self.range_lo + self.range_len,
+            "lease [{lo}, {}) outside cursor range [{}, {})",
+            lo + len,
+            self.range_lo,
+            self.range_lo + self.range_len
+        );
+        let d = self.src.d;
+        self.src.io.add_block();
+        // "bytes read" for a mapping = bytes leased; actual paging is
+        // invisible from here
+        self.src.io.add_bytes((len * d * 8 + len * 8) as u64);
+        RowBlock::new(
+            lo,
+            d,
+            self.src.data.f64s(HEADER_LEN + lo * d * 8, len * d),
+            self.src.norms.f64s(norms::NHEADER_LEN + lo * 8, len),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::io::save_bin;
+    use crate::data::synth::blobs;
+    use std::path::PathBuf;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("eakm-mmap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn mapped_leases_match_the_in_memory_dataset() {
+        let ds = blobs(800, 6, 4, 0.2, 31);
+        let path = tmpfile("map.ekb");
+        save_bin(&ds, &path).unwrap();
+        let src = MmapSource::open(&path).unwrap();
+        assert_eq!((src.n(), src.d()), (800, 6));
+        assert_eq!(src.name(), "map");
+        let mut cur = DataSource::open(&src, 0, 800);
+        for start in [0usize, 17, 400, 790] {
+            let len = 10.min(800 - start);
+            let block = cur.lease(start, len);
+            assert_eq!(block.rows(), &ds.raw()[start * 6..(start + len) * 6]);
+            for i in start..start + len {
+                assert_eq!(block.sqnorm(i).to_bits(), ds.sqnorm(i).to_bits());
+            }
+        }
+        let io = src.io_stats().unwrap();
+        assert_eq!(io.blocks_leased, 4);
+        assert_eq!(io.window_refills, 0, "mmap never refills");
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let ds = blobs(50, 3, 2, 0.2, 7);
+        let path = tmpfile("trunc.ekb");
+        save_bin(&ds, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(MmapSource::open(&path).is_err());
+    }
+}

@@ -1,0 +1,182 @@
+//! Out-of-core data sources: cluster `.ekb` files larger than RAM.
+//!
+//! Two implementations sit behind the block-lease
+//! [`DataSource`](crate::data::DataSource) seam:
+//!
+//! * [`MmapSource`] — maps the file (and its `.norms` sidecar) into the
+//!   address space; leases are zero-copy slices of the mapping and the
+//!   kernel's page cache decides what is resident. The fast choice on
+//!   64-bit little-endian unix (the `.ekb` payload is little-endian
+//!   f64, 8-byte aligned after the 24-byte header). All `unsafe` for
+//!   the out-of-core layer lives in its module.
+//! * [`ChunkedFileSource`] — portable buffered reads with **one
+//!   resident window per cursor** (= per pool worker), sized in rows by
+//!   the `--ooc-window` knob. A lease inside the window is a slice; a
+//!   lease outside it refills the window from the file.
+//!
+//! Both share the `.norms` **sidecar cache** (`<file>.ekb.norms`):
+//! squared norms are computed once per file — streaming the data in
+//! row chunks through the same [`sqnorm`](crate::linalg::sqnorm) kernel
+//! the in-memory [`Dataset`](crate::data::Dataset) uses — and reused by
+//! every subsequent run, so the paper's §4.1.1 norm precomputation
+//! survives out-of-core. Because the values, the norms, and every
+//! consumer's arithmetic are bit-identical to the in-memory path,
+//! **out-of-core runs produce bit-identical assignments, MSE, and bound
+//! counters to in-memory runs at any thread count** (proved by
+//! `tests/ooc.rs` and the `ooc` bench).
+//!
+//! Cursors report I/O telemetry (blocks leased, bytes read, window
+//! refills) through [`DataSource::io_stats`](crate::data::DataSource::io_stats)
+//! into [`RunReport::io`](crate::metrics::RunReport::io).
+
+pub mod chunked;
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+pub mod mmap;
+pub mod norms;
+
+pub use chunked::ChunkedFileSource;
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+pub use mmap::MmapSource;
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::data::DataSource;
+use crate::error::Result;
+use crate::metrics::IoTelemetry;
+
+/// Default resident-window size (rows) for [`ChunkedFileSource`] — at
+/// d = 64 this is ~4 MiB per worker.
+pub const DEFAULT_WINDOW_ROWS: usize = 8192;
+
+/// Cumulative I/O counters shared by a source's cursors. Relaxed
+/// atomics: the counts are telemetry, not synchronisation.
+#[derive(Debug, Default)]
+pub(crate) struct IoCounters {
+    blocks: AtomicU64,
+    bytes: AtomicU64,
+    refills: AtomicU64,
+}
+
+impl IoCounters {
+    pub(crate) fn add_block(&self) {
+        self.blocks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_bytes(&self, bytes: u64) {
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_refill(&self) {
+        self.refills.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn snapshot(&self) -> IoTelemetry {
+        IoTelemetry {
+            blocks_leased: self.blocks.load(Ordering::Relaxed),
+            bytes_read: self.bytes.load(Ordering::Relaxed),
+            window_refills: self.refills.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Which out-of-core backend to use (the CLI's `--ooc` flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OocMode {
+    /// [`MmapSource`] where the platform supports it, else chunked.
+    Auto,
+    /// Page-cache-backed mapping (64-bit little-endian unix only).
+    Mmap,
+    /// Buffered reads with a resident window per worker (portable).
+    Chunked,
+}
+
+impl OocMode {
+    /// Parse a CLI value.
+    pub fn parse(s: &str) -> Option<OocMode> {
+        match s {
+            "auto" => Some(OocMode::Auto),
+            "mmap" => Some(OocMode::Mmap),
+            "chunked" => Some(OocMode::Chunked),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for OocMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            OocMode::Auto => "auto",
+            OocMode::Mmap => "mmap",
+            OocMode::Chunked => "chunked",
+        })
+    }
+}
+
+/// True when [`MmapSource`] is available on this platform.
+pub fn mmap_supported() -> bool {
+    cfg!(all(unix, target_endian = "little", target_pointer_width = "64"))
+}
+
+/// Open an out-of-core source over an `.ekb` file without loading it.
+/// `window_rows` sizes the chunked backend's resident window (ignored
+/// by mmap). `Auto` resolves to mmap where supported, else chunked;
+/// an explicit `Mmap` on an unsupported platform is a config error.
+pub fn open_ooc(path: &Path, mode: OocMode, window_rows: usize) -> Result<Box<dyn DataSource>> {
+    match mode {
+        OocMode::Chunked => Ok(Box::new(ChunkedFileSource::open(path, window_rows)?)),
+        #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+        OocMode::Mmap | OocMode::Auto => Ok(Box::new(MmapSource::open(path)?)),
+        #[cfg(not(all(unix, target_endian = "little", target_pointer_width = "64")))]
+        OocMode::Mmap => Err(crate::error::EakmError::Config(
+            "--ooc mmap is unsupported on this platform (needs 64-bit little-endian unix) — \
+             use --ooc chunked"
+                .into(),
+        )),
+        #[cfg(not(all(unix, target_endian = "little", target_pointer_width = "64")))]
+        OocMode::Auto => Ok(Box::new(ChunkedFileSource::open(path, window_rows)?)),
+    }
+}
+
+/// Source name for reports: the file stem, exactly like
+/// [`load_bin`](crate::data::io::load_bin) names the in-memory dataset
+/// — so an out-of-core report is comparable to the in-memory one.
+pub(crate) fn stem_name(path: &Path) -> String {
+    path.file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "bin".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(OocMode::parse("auto"), Some(OocMode::Auto));
+        assert_eq!(OocMode::parse("mmap"), Some(OocMode::Mmap));
+        assert_eq!(OocMode::parse("chunked"), Some(OocMode::Chunked));
+        assert_eq!(OocMode::parse("ram"), None);
+        assert_eq!(OocMode::Chunked.to_string(), "chunked");
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let c = IoCounters::default();
+        c.add_block();
+        c.add_block();
+        c.add_bytes(512);
+        c.add_refill();
+        let snap = c.snapshot();
+        assert_eq!(snap.blocks_leased, 2);
+        assert_eq!(snap.bytes_read, 512);
+        assert_eq!(snap.window_refills, 1);
+    }
+
+    #[test]
+    fn open_ooc_rejects_missing_file() {
+        let missing = Path::new("/nonexistent/never.ekb");
+        assert!(open_ooc(missing, OocMode::Chunked, 64).is_err());
+        assert!(open_ooc(missing, OocMode::Auto, 64).is_err());
+    }
+}

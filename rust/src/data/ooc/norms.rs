@@ -1,0 +1,286 @@
+//! The `.norms` sidecar cache: squared norms, computed once per file.
+//!
+//! Format (little-endian, 32-byte header so the payload stays
+//! f64-aligned under mmap): `magic "EAKN" | u32 version | u64 n |
+//! u64 d | u64 fingerprint | n × f64`. The fingerprint is an FNV-1a
+//! hash over the data file's length and its first/last 64 KiB, so a
+//! rewritten file — even one with the same shape — invalidates the
+//! sidecar instead of silently serving stale norms (which would break
+//! the norms-match-rows invariant the bounds machinery relies on).
+//!
+//! The norms are computed by streaming the `.ekb` payload in row
+//! chunks through [`sqnorm`](crate::linalg::sqnorm) — the same kernel
+//! [`Dataset`](crate::data::Dataset) uses at load time — so the cached
+//! values are bit-identical to the in-memory ones. The streaming pass
+//! also validates finiteness, mirroring `Dataset::new`'s check, which
+//! is why sources can skip revalidating rows at lease time.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::data::io::{decode_f64_le, read_bin_header, HEADER_LEN};
+use crate::error::{EakmError, Result};
+use crate::linalg::sqnorm;
+
+pub(crate) const NMAGIC: &[u8; 4] = b"EAKN";
+pub(crate) const NVERSION: u32 = 2;
+/// Bytes before the f64 norms payload (multiple of 8).
+pub(crate) const NHEADER_LEN: usize = 4 + 4 + 8 + 8 + 8;
+
+/// Bytes per streaming chunk while computing the sidecar.
+const STREAM_BYTES: usize = 1 << 16;
+
+/// Cheap content fingerprint of the data file: FNV-1a over its length
+/// and its first/last 64 KiB. Not cryptographic — it exists to catch
+/// "same shape, different data" rewrites, not adversaries.
+fn data_fingerprint(path: &Path) -> Result<u64> {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut f = File::open(path)?;
+    let len = f.metadata()?.len();
+    let mut hash = FNV_OFFSET;
+    let mut mix = |bytes: &[u8]| {
+        for &b in bytes {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(FNV_PRIME);
+        }
+    };
+    mix(&len.to_le_bytes());
+    let take = (STREAM_BYTES as u64).min(len) as usize;
+    let mut buf = vec![0u8; take];
+    f.read_exact(&mut buf)?;
+    mix(&buf);
+    if len > STREAM_BYTES as u64 {
+        use std::io::{Seek, SeekFrom};
+        f.seek(SeekFrom::End(-(take as i64)))?;
+        f.read_exact(&mut buf)?;
+        mix(&buf);
+    }
+    Ok(hash)
+}
+
+/// Sidecar path for a data file: `<path>.norms` (extension appended,
+/// not replaced, so `a.ekb` and `a.csv` never collide).
+pub fn sidecar_path(data_path: &Path) -> PathBuf {
+    let mut os = data_path.as_os_str().to_os_string();
+    os.push(".norms");
+    PathBuf::from(os)
+}
+
+fn read_sidecar_header(r: &mut impl Read, path: &Path) -> Result<(usize, usize, u64)> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != NMAGIC {
+        return Err(EakmError::Data(format!(
+            "{}: not an EAKM norms sidecar",
+            path.display()
+        )));
+    }
+    let mut b4 = [0u8; 4];
+    r.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    if version != NVERSION {
+        return Err(EakmError::Data(format!(
+            "{}: unsupported sidecar version {version}",
+            path.display()
+        )));
+    }
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let d = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let fp = u64::from_le_bytes(b8);
+    Ok((n, d, fp))
+}
+
+/// True when `path` is a sidecar matching shape `(n, d)` and data
+/// fingerprint `fp`, with a complete payload.
+fn sidecar_matches(path: &Path, n: usize, d: usize, fp: u64) -> bool {
+    let Ok(mut f) = File::open(path) else {
+        return false;
+    };
+    let header_ok = read_sidecar_header(&mut f, path)
+        .map(|hd| hd == (n, d, fp))
+        .unwrap_or(false);
+    if !header_ok {
+        return false;
+    }
+    f.metadata()
+        .map(|m| m.len() == (NHEADER_LEN + n * 8) as u64)
+        .unwrap_or(false)
+}
+
+/// Ensure the sidecar for `data_path` (shape `(n, d)`) exists and is
+/// valid, computing it with one streaming pass when missing or stale —
+/// stale includes a rewritten data file of the *same* shape, caught by
+/// the content fingerprint. Returns the sidecar path. The pass rejects
+/// non-finite values, so a valid sidecar certifies the data file the
+/// way `Dataset::new` does.
+pub fn ensure_sidecar(data_path: &Path, n: usize, d: usize) -> Result<PathBuf> {
+    let path = sidecar_path(data_path);
+    let fp = data_fingerprint(data_path)?;
+    if sidecar_matches(&path, n, d, fp) {
+        return Ok(path);
+    }
+
+    let mut r = BufReader::new(File::open(data_path)?);
+    let (rn, rd) = read_bin_header(&mut r, data_path)?;
+    if (rn, rd) != (n, d) {
+        return Err(EakmError::Data(format!(
+            "{}: header says {rn}×{rd}, expected {n}×{d}",
+            data_path.display()
+        )));
+    }
+
+    // write to a temp file, then rename: a crashed pass never leaves a
+    // truncated sidecar behind for the next run to trust
+    let tmp = path.with_extension(format!("norms.tmp{}", std::process::id()));
+    let write_err = |e: std::io::Error| {
+        EakmError::Data(format!("{}: writing norms sidecar: {e}", tmp.display()))
+    };
+    {
+        let mut w = BufWriter::new(File::create(&tmp).map_err(write_err)?);
+        w.write_all(NMAGIC).map_err(write_err)?;
+        w.write_all(&NVERSION.to_le_bytes()).map_err(write_err)?;
+        w.write_all(&(n as u64).to_le_bytes()).map_err(write_err)?;
+        w.write_all(&(d as u64).to_le_bytes()).map_err(write_err)?;
+        w.write_all(&fp.to_le_bytes()).map_err(write_err)?;
+
+        let rows_per_chunk = (STREAM_BYTES / (d * 8)).max(1);
+        let mut byte_buf = vec![0u8; rows_per_chunk * d * 8];
+        let mut rows = Vec::with_capacity(rows_per_chunk * d);
+        let mut out = Vec::with_capacity(rows_per_chunk * 8);
+        let mut remaining = n;
+        while remaining > 0 {
+            let take = rows_per_chunk.min(remaining);
+            r.read_exact(&mut byte_buf[..take * d * 8])?;
+            rows.clear();
+            decode_f64_le(&byte_buf[..take * d * 8], &mut rows);
+            if rows.iter().any(|v| !v.is_finite()) {
+                let _ = std::fs::remove_file(&tmp);
+                return Err(EakmError::Data(format!(
+                    "{}: non-finite value in dataset",
+                    data_path.display()
+                )));
+            }
+            out.clear();
+            for row in rows.chunks_exact(d) {
+                out.extend_from_slice(&sqnorm(row).to_le_bytes());
+            }
+            w.write_all(&out).map_err(write_err)?;
+            remaining -= take;
+        }
+        w.flush().map_err(write_err)?;
+    }
+    std::fs::rename(&tmp, &path)?;
+    Ok(path)
+}
+
+/// Load a sidecar's norms fully into memory (the chunked source keeps
+/// them resident: they are `8n` bytes against the data's `8nd`).
+pub fn load_sidecar(path: &Path, n: usize, d: usize) -> Result<Vec<f64>> {
+    let mut r = BufReader::new(File::open(path)?);
+    let (sn, sd, _fp) = read_sidecar_header(&mut r, path)?;
+    if (sn, sd) != (n, d) {
+        return Err(EakmError::Data(format!(
+            "{}: sidecar says {sn}×{sd}, expected {n}×{d}",
+            path.display()
+        )));
+    }
+    let mut norms = Vec::with_capacity(n);
+    let mut buf = vec![0u8; STREAM_BYTES];
+    let mut remaining = n;
+    while remaining > 0 {
+        let take = (STREAM_BYTES / 8).min(remaining);
+        r.read_exact(&mut buf[..take * 8])?;
+        decode_f64_le(&buf[..take * 8], &mut norms);
+        remaining -= take;
+    }
+    Ok(norms)
+}
+
+/// Byte offset of row `lo` inside an `.ekb` file.
+pub(crate) fn row_byte_offset(lo: usize, d: usize) -> u64 {
+    (HEADER_LEN + lo * d * 8) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::io::save_bin;
+    use crate::data::synth::blobs;
+    use crate::linalg::sqnorms_rows;
+
+    fn tmpdir() -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("eakm-norms-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn sidecar_roundtrips_bit_identical_norms() {
+        let ds = blobs(500, 7, 4, 0.2, 11);
+        let path = tmpdir().join("norms-rt.ekb");
+        save_bin(&ds, &path).unwrap();
+        let side = ensure_sidecar(&path, ds.n(), ds.d()).unwrap();
+        assert_eq!(side, sidecar_path(&path));
+        let norms = load_sidecar(&side, ds.n(), ds.d()).unwrap();
+        let want = sqnorms_rows(ds.raw(), ds.d());
+        assert_eq!(norms.len(), want.len());
+        for (a, b) in norms.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // second call is a cache hit: same shape and same content
+        let again = ensure_sidecar(&path, ds.n(), ds.d()).unwrap();
+        assert_eq!(again, side);
+    }
+
+    #[test]
+    fn same_shape_rewrite_invalidates_the_sidecar() {
+        let a = blobs(120, 3, 2, 0.2, 1);
+        let path = tmpdir().join("norms-rewrite.ekb");
+        save_bin(&a, &path).unwrap();
+        ensure_sidecar(&path, 120, 3).unwrap();
+        // rewrite with *different data of the same shape* — the stale
+        // sidecar must not be trusted (it would silently break the
+        // norms-match-rows invariant)
+        let b = blobs(120, 3, 2, 0.2, 2);
+        save_bin(&b, &path).unwrap();
+        let side = ensure_sidecar(&path, 120, 3).unwrap();
+        let norms = load_sidecar(&side, 120, 3).unwrap();
+        let want = sqnorms_rows(b.raw(), 3);
+        for (got, want) in norms.iter().zip(&want) {
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn stale_sidecar_is_recomputed() {
+        let ds = blobs(60, 3, 2, 0.2, 5);
+        let path = tmpdir().join("norms-stale.ekb");
+        save_bin(&ds, &path).unwrap();
+        // plant garbage where the sidecar goes
+        std::fs::write(sidecar_path(&path), b"junk").unwrap();
+        let side = ensure_sidecar(&path, ds.n(), ds.d()).unwrap();
+        let norms = load_sidecar(&side, ds.n(), ds.d()).unwrap();
+        assert_eq!(norms.len(), 60);
+        // and a shape-mismatched request errors instead of trusting it
+        assert!(ensure_sidecar(&path, 61, ds.d()).is_err());
+    }
+
+    #[test]
+    fn sidecar_rejects_non_finite_payload() {
+        let ds = blobs(10, 2, 2, 0.2, 3);
+        let path = tmpdir().join("norms-nan.ekb");
+        save_bin(&ds, &path).unwrap();
+        // corrupt one payload value into a NaN
+        let mut bytes = std::fs::read(&path).unwrap();
+        let off = HEADER_LEN + 3 * 8;
+        bytes[off..off + 8].copy_from_slice(&f64::NAN.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        assert!(ensure_sidecar(&path, 10, 2).is_err());
+    }
+}

@@ -1,4 +1,5 @@
-//! The data-access seam: [`DataSource`].
+//! The data-access seam: [`DataSource`] and the block-lease contract
+//! ([`BlockCursor`] / [`RowBlock`]).
 //!
 //! Every consumer of sample data in the coordination layer — the
 //! sharded assignment scan (via
@@ -6,32 +7,163 @@
 //! centroid update ([`UpdateState`](crate::coordinator::update::UpdateState)),
 //! seeding ([`InitMethod`](crate::init::InitMethod)), and
 //! [`FittedModel::predict`](crate::model::FittedModel::predict) — reads
-//! samples through this trait instead of the concrete [`Dataset`].
+//! samples through this seam instead of a concrete container.
 //!
-//! The contract is deliberately *range-oriented* (`rows(lo, len)`)
-//! rather than whole-buffer (`raw()`): an implementation only has to
-//! produce a contiguous window of rows at a time, which is exactly the
-//! access pattern of the blocked batch scan. That makes the ROADMAP's
-//! out-of-core shard layer and the mini-batch engine implementations of
-//! a trait, not rewrites of the coordinator: a shard file, an mmap, or
-//! a sampled batch can all sit behind `DataSource` unchanged — the
-//! mini-batch engine's [`BatchView`](crate::data::BatchView) already
-//! does exactly this.
+//! ## Why a lease, not a borrow
 //!
-//! Implementations must uphold two invariants the algorithms rely on:
+//! The seam used to be borrow-returning (`rows(lo, len) -> &[f64]` on
+//! `&self`), which structurally cannot be implemented by a source that
+//! *refills a window*: an out-of-core reader has one resident buffer per
+//! worker and must overwrite it as the scan advances, so it can never
+//! hand out a borrow tied to `&self`. The contract is therefore a
+//! **block lease**: each pool worker [`open`](DataSource::open)s a
+//! [`BlockCursor`] for its shard range and advances block by block; a
+//! [`RowBlock`] is valid until the next lease from the same cursor.
+//! Fully-resident sources ([`Dataset`](crate::data::Dataset),
+//! [`BatchView`](crate::data::BatchView)) lease zero-copy borrows of
+//! their buffers; out-of-core sources
+//! ([`MmapSource`](crate::data::ooc::MmapSource) leases pages of the
+//! mapping, [`ChunkedFileSource`](crate::data::ChunkedFileSource) leases
+//! its per-cursor resident window, refilled on demand).
 //!
-//! * `rows`/`sqnorms_range` return *stable* values — two reads of the
-//!   same range during one run observe identical bits (the bounds are
-//!   only correct against immutable data);
-//! * `sqnorms_range(i, len)[j] == ‖rows(i, len)[j·d .. (j+1)·d]‖²` —
-//!   pre-computed squared norms (the paper's §4.1.1 engineering point).
+//! Implementations must uphold the invariants the algorithms rely on:
+//!
+//! * **stability** — two leases of the same range during one run
+//!   observe identical bits (the bounds are only correct against
+//!   immutable data);
+//! * **norms match rows** — `block.sqnorms()[j]` equals
+//!   `sqnorm(block.row(lo + j))` bit-for-bit, computed once with
+//!   [`sqnorm`](crate::linalg::sqnorm) (the paper's §4.1.1 engineering
+//!   point);
+//! * **coverage** — a cursor opened for `[lo, lo+len)` can lease any
+//!   sub-range of it, in any order (scans are monotone; the delta
+//!   update and seeding make monotone or random accesses).
+//!
+//! These invariants are checked for every implementation by the shared
+//! property harness in
+//! [`algorithms::testutil::assert_block_lease_contract`](crate::algorithms::testutil::assert_block_lease_contract).
 
 use crate::linalg::sqdist;
+use crate::metrics::IoTelemetry;
+
+/// One leased, contiguous block of rows with their precomputed squared
+/// norms. Indices are **global** (`lo()` is the block's first global
+/// row), so consumers address samples the same way regardless of which
+/// cursor leased the block.
+#[derive(Clone, Copy, Debug)]
+pub struct RowBlock<'c> {
+    lo: usize,
+    d: usize,
+    rows: &'c [f64],
+    sqnorms: &'c [f64],
+}
+
+impl<'c> RowBlock<'c> {
+    /// Assemble a block (used by `BlockCursor` implementations).
+    /// Panics when rows and norms disagree on the row count.
+    pub fn new(lo: usize, d: usize, rows: &'c [f64], sqnorms: &'c [f64]) -> Self {
+        assert_eq!(rows.len(), sqnorms.len() * d, "rows/norms shape mismatch");
+        RowBlock {
+            lo,
+            d,
+            rows,
+            sqnorms,
+        }
+    }
+
+    /// Global index of the first row in the block.
+    #[inline]
+    pub fn lo(&self) -> usize {
+        self.lo
+    }
+
+    /// Number of rows in the block.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.sqnorms.len()
+    }
+
+    /// True when the block holds no rows.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.sqnorms.is_empty()
+    }
+
+    /// Row dimension.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// All rows, row-major `len × d`.
+    #[inline]
+    pub fn rows(&self) -> &'c [f64] {
+        self.rows
+    }
+
+    /// Precomputed `‖x‖²` per row, aligned with [`rows`](RowBlock::rows).
+    #[inline]
+    pub fn sqnorms(&self) -> &'c [f64] {
+        self.sqnorms
+    }
+
+    /// Row at **global** index `i` (must lie inside the block).
+    #[inline]
+    pub fn row(&self, i: usize) -> &'c [f64] {
+        let off = i - self.lo;
+        &self.rows[off * self.d..(off + 1) * self.d]
+    }
+
+    /// `‖x(i)‖²` at **global** index `i`.
+    #[inline]
+    pub fn sqnorm(&self, i: usize) -> f64 {
+        self.sqnorms[i - self.lo]
+    }
+}
+
+/// A per-worker guard for reading one shard's rows block by block.
+///
+/// A cursor is opened for a row range by [`DataSource::open`] and is the
+/// *only* way to reach sample values. The single primitive is
+/// [`lease`](BlockCursor::lease): borrow a block of rows until the next
+/// lease from the same cursor. In-memory cursors slice their backing
+/// buffers (zero copy); windowed cursors reuse one resident buffer and
+/// refill it when a lease falls outside the window — which is exactly
+/// why the lease expires at the next call.
+///
+/// Cursors are not `Sync` and never shared: every pool worker opens its
+/// own for the shard it scans.
+pub trait BlockCursor {
+    /// Row dimension of the underlying source.
+    fn d(&self) -> usize;
+
+    /// Lease rows `[lo, lo+len)` (global indices; must lie inside the
+    /// range the cursor was opened for). The returned block is valid
+    /// until the next `lease` call on this cursor.
+    fn lease(&mut self, lo: usize, len: usize) -> RowBlock<'_>;
+
+    /// Lease a single row (convenience over [`lease`](BlockCursor::lease)).
+    #[inline]
+    fn row(&mut self, i: usize) -> &[f64] {
+        self.lease(i, 1).rows
+    }
+
+    /// `‖x(i)‖²` for a single row.
+    #[inline]
+    fn sqnorm(&mut self, i: usize) -> f64 {
+        self.lease(i, 1).sqnorms[0]
+    }
+}
+
+/// Block size used by the default [`DataSource::mse`] walk.
+const MSE_BLOCK: usize = 128;
 
 /// Read-only access to `n` samples of dimension `d` (row-major `f64`).
 ///
 /// `Sync` is a supertrait: sources are shared by every pool worker
-/// during a round.
+/// during a round — but all row access goes through per-worker
+/// [`BlockCursor`]s, so the source itself only needs to hand out
+/// cursors and answer shape queries.
 pub trait DataSource: Sync {
     /// Number of samples.
     fn n(&self) -> usize;
@@ -44,41 +176,88 @@ pub trait DataSource: Sync {
         "custom"
     }
 
-    /// A contiguous block of `len` rows starting at row `lo`, as one
-    /// row-major slice of `len * d` values.
-    fn rows(&self, lo: usize, len: usize) -> &[f64];
+    /// Open a block cursor over rows `[lo, lo+len)` — one per pool
+    /// worker and shard. Opening is cheap (a slice borrow for resident
+    /// sources, a file handle + empty window for out-of-core ones);
+    /// the data is read lease by lease.
+    fn open(&self, lo: usize, len: usize) -> Box<dyn BlockCursor + '_>;
 
-    /// Pre-computed `‖x(i)‖²` for rows `[lo, lo + len)`.
-    fn sqnorms_range(&self, lo: usize, len: usize) -> &[f64];
-
-    /// Row `i`.
-    #[inline]
-    fn row(&self, i: usize) -> &[f64] {
-        self.rows(i, 1)
-    }
-
-    /// `‖x(i)‖²`.
-    #[inline]
-    fn sqnorm(&self, i: usize) -> f64 {
-        self.sqnorms_range(i, 1)[0]
+    /// I/O telemetry snapshot (bytes read, blocks leased, window
+    /// refills) for out-of-core sources; `None` for resident sources.
+    /// Runners report the per-run delta of two snapshots.
+    fn io_stats(&self) -> Option<IoTelemetry> {
+        None
     }
 
     /// Mean squared distance to the assigned centroid — the k-means
-    /// objective divided by `n`.
+    /// objective divided by `n`. Walks the source block by block with
+    /// one serial accumulator, so the summation order (and the result's
+    /// bits) is identical for every implementation.
     fn mse(&self, centroids: &[f64], assignments: &[u32]) -> f64 {
         assert_eq!(assignments.len(), self.n());
-        let d = self.d();
-        let total: f64 = assignments
-            .iter()
-            .enumerate()
-            .map(|(i, &a)| {
-                sqdist(
-                    self.row(i),
-                    &centroids[a as usize * d..(a as usize + 1) * d],
-                )
-            })
-            .sum();
-        total / self.n() as f64
+        let (n, d) = (self.n(), self.d());
+        let mut cur = self.open(0, n);
+        let mut total = 0.0;
+        let mut start = 0;
+        while start < n {
+            let len = MSE_BLOCK.min(n - start);
+            let block = cur.lease(start, len);
+            for (off, a) in assignments[start..start + len].iter().enumerate() {
+                let j = *a as usize;
+                total += sqdist(block.row(start + off), &centroids[j * d..(j + 1) * d]);
+            }
+            start += len;
+        }
+        total / n as f64
+    }
+}
+
+/// A ready-made cursor over fully-resident buffers: leases are plain
+/// zero-copy slices. Used by [`Dataset`](crate::data::Dataset),
+/// [`BatchView`](crate::data::BatchView), and any custom source whose
+/// rows already live in memory.
+pub struct SliceCursor<'a> {
+    rows: &'a [f64],
+    sqnorms: &'a [f64],
+    d: usize,
+    /// Opened range (global), for lease validation.
+    lo: usize,
+    len: usize,
+}
+
+impl<'a> SliceCursor<'a> {
+    /// Cursor over rows `[lo, lo+len)` of a resident `rows`/`sqnorms`
+    /// pair covering the *whole* source (global indexing).
+    pub fn new(rows: &'a [f64], sqnorms: &'a [f64], d: usize, lo: usize, len: usize) -> Self {
+        SliceCursor {
+            rows,
+            sqnorms,
+            d,
+            lo,
+            len,
+        }
+    }
+}
+
+impl BlockCursor for SliceCursor<'_> {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn lease(&mut self, lo: usize, len: usize) -> RowBlock<'_> {
+        debug_assert!(
+            lo >= self.lo && lo + len <= self.lo + self.len,
+            "lease [{lo}, {}) outside cursor range [{}, {})",
+            lo + len,
+            self.lo,
+            self.lo + self.len
+        );
+        RowBlock::new(
+            lo,
+            self.d,
+            &self.rows[lo * self.d..(lo + len) * self.d],
+            &self.sqnorms[lo..lo + len],
+        )
     }
 }
 
@@ -112,11 +291,8 @@ mod tests {
         fn d(&self) -> usize {
             self.d
         }
-        fn rows(&self, lo: usize, len: usize) -> &[f64] {
-            &self.rows[lo * self.d..(lo + len) * self.d]
-        }
-        fn sqnorms_range(&self, lo: usize, len: usize) -> &[f64] {
-            &self.sqnorms[lo..lo + len]
+        fn open(&self, lo: usize, len: usize) -> Box<dyn BlockCursor + '_> {
+            Box::new(SliceCursor::new(self.rows, &self.sqnorms, self.d, lo, len))
         }
     }
 
@@ -127,20 +303,37 @@ mod tests {
         assert_eq!(src.n(), 3);
         assert_eq!(src.d(), 2);
         assert_eq!(src.name(), "t");
-        assert_eq!(src.rows(1, 2), &[1.0, 1.0, 2.0, 0.0]);
-        assert_eq!(src.row(2), &[2.0, 0.0]);
-        assert_eq!(src.sqnorm(1), 2.0);
-        assert_eq!(src.sqnorms_range(0, 3), &[0.0, 2.0, 4.0]);
+        let mut cur = src.open(0, 3);
+        let block = cur.lease(1, 2);
+        assert_eq!(block.lo(), 1);
+        assert_eq!(block.len(), 2);
+        assert_eq!(block.rows(), &[1.0, 1.0, 2.0, 0.0]);
+        assert_eq!(block.row(2), &[2.0, 0.0]);
+        assert_eq!(block.sqnorm(1), 2.0);
+        let all = cur.lease(0, 3);
+        assert_eq!(all.sqnorms(), &[0.0, 2.0, 4.0]);
     }
 
     #[test]
-    fn default_row_and_sqnorm_delegate_to_ranges() {
+    fn cursor_row_and_sqnorm_delegate_to_lease() {
         let raw = [0.0, 3.0, 4.0, 0.0];
         let src = Borrowed::new(&raw, 2);
         assert_eq!(src.n(), 2);
-        assert_eq!(src.row(1), &[4.0, 0.0]);
-        assert_eq!(src.sqnorm(0), 9.0);
-        assert_eq!(src.sqnorm(1), 16.0);
+        let mut cur = src.open(0, 2);
+        assert_eq!(cur.row(1), &[4.0, 0.0]);
+        assert_eq!(cur.sqnorm(0), 9.0);
+        assert_eq!(cur.sqnorm(1), 16.0);
+    }
+
+    #[test]
+    fn leases_can_revisit_ranges() {
+        let raw: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let src = Borrowed::new(&raw, 2);
+        let mut cur = src.open(0, 10);
+        let first = cur.lease(3, 4).rows().to_vec();
+        let _ = cur.lease(7, 3);
+        // stability: re-leasing observes identical bits
+        assert_eq!(cur.lease(3, 4).rows(), first.as_slice());
     }
 
     #[test]

@@ -15,13 +15,19 @@ pub fn init(data: &dyn DataSource, k: usize, rng: &mut Rng, counters: &mut Count
     assert!(k > 0 && k <= data.n(), "k={k} out of range for n={}", data.n());
     let (n, d) = (data.n(), data.d());
     let mut centroids = Vec::with_capacity(k * d);
+    // one cursor serves both the chosen-row gathers and the distance
+    // passes; the chosen row is copied into `centroids` first, so the
+    // pass below compares leases against owned memory (a lease expires
+    // at the next lease from the same cursor)
+    let mut cur = data.open(0, n);
     let first = rng.below(n);
-    centroids.extend_from_slice(data.row(first));
+    centroids.extend_from_slice(cur.row(first));
 
     // nearest-chosen-centroid squared distance per sample
-    let mut d2: Vec<f64> = (0..n)
-        .map(|i| sqdist(data.row(i), data.row(first)))
-        .collect();
+    let mut d2 = vec![0.0; n];
+    for (i, slot) in d2.iter_mut().enumerate() {
+        *slot = sqdist(cur.row(i), &centroids[..d]);
+    }
     counters.init += n as u64;
 
     for _ in 1..k {
@@ -31,10 +37,11 @@ pub fn init(data: &dyn DataSource, k: usize, rng: &mut Rng, counters: &mut Count
             // to uniform among samples, keeping determinism.
             None => rng.below(n),
         };
-        let row = data.row(next);
-        centroids.extend_from_slice(row);
+        let start = centroids.len();
+        centroids.extend_from_slice(cur.row(next));
+        let row = &centroids[start..start + d];
         for (i, slot) in d2.iter_mut().enumerate() {
-            let dist = sqdist(data.row(i), row);
+            let dist = sqdist(cur.row(i), row);
             if dist < *slot {
                 *slot = dist;
             }

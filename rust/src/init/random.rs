@@ -10,9 +10,11 @@ pub fn init(data: &dyn DataSource, k: usize, rng: &mut Rng) -> Vec<f64> {
     assert!(k > 0 && k <= data.n(), "k={k} out of range for n={}", data.n());
     let d = data.d();
     let idxs = rng.distinct(data.n(), k);
+    // one cursor for the whole gather: draws are random-access leases
+    let mut cur = data.open(0, data.n());
     let mut out = Vec::with_capacity(k * d);
     for &i in &idxs {
-        out.extend_from_slice(data.row(i));
+        out.extend_from_slice(cur.row(i));
     }
     out
 }

@@ -446,7 +446,7 @@ impl From<&crate::metrics::RunReport> for Json {
             .field("q_displacement", r.counters.displacement)
             .field("q_init", r.counters.init)
             .field("q_au", r.counters.total());
-        match &r.batch {
+        let json = match &r.batch {
             Some(b) => json
                 .field("batch_size", b.batch_size)
                 .field("batch_growth", b.growth)
@@ -454,6 +454,13 @@ impl From<&crate::metrics::RunReport> for Json {
                     "batch_schedule",
                     Json::Arr(b.schedule.iter().map(|&s| Json::from(s)).collect()),
                 ),
+            None => json,
+        };
+        match &r.io {
+            Some(io) => json
+                .field("io_blocks_leased", io.blocks_leased)
+                .field("io_bytes_read", io.bytes_read)
+                .field("io_window_refills", io.window_refills),
             None => json,
         }
     }
@@ -584,6 +591,7 @@ mod tests {
             counters: Default::default(),
             round_times: vec![],
             batch: None,
+            io: None,
         };
         let s = Json::from(&r).to_string();
         assert!(s.contains(r#""algorithm":"exp""#));
@@ -591,16 +599,25 @@ mod tests {
         assert!(s.contains(r#""threads":2"#));
         assert!(s.contains(r#""scan_secs":0"#));
         assert!(!s.contains("batch_size"));
+        assert!(!s.contains("io_bytes_read"));
         let r = crate::metrics::RunReport {
             batch: Some(crate::metrics::BatchTelemetry {
                 batch_size: 128,
                 growth: 2.0,
                 schedule: vec![128, 256],
             }),
+            io: Some(crate::metrics::IoTelemetry {
+                blocks_leased: 3,
+                bytes_read: 8192,
+                window_refills: 1,
+            }),
             ..r
         };
         let s = Json::from(&r).to_string();
         assert!(s.contains(r#""batch_size":128"#));
         assert!(s.contains(r#""batch_schedule":[128,256]"#));
+        assert!(s.contains(r#""io_blocks_leased":3"#));
+        assert!(s.contains(r#""io_bytes_read":8192"#));
+        assert!(s.contains(r#""io_window_refills":1"#));
     }
 }

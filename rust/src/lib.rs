@@ -74,15 +74,34 @@
 //! [`metrics::RunReport`] carries a per-phase wall-time decomposition
 //! (`scan` / `update` / `build`) so multicore speedup can be attributed.
 //!
-//! ## Data access
+//! ## Data access: the block-lease seam
 //!
-//! Sample rows are read through the [`data::DataSource`] trait
-//! (range-oriented: `rows(lo, len)` + pre-computed squared norms).
-//! [`data::Dataset`] is the in-memory implementation; out-of-core
-//! shards slot in behind the same seam without touching the
-//! coordinator, and the mini-batch engine already does —
-//! [`data::BatchView`] is a seeded, sampled view that gathers rows from
-//! any source.
+//! Sample rows are read through the [`data::DataSource`] trait's
+//! **block-lease contract**: every pool worker
+//! [`open`](data::DataSource::open)s a [`data::BlockCursor`] for its
+//! shard and advances block by block; each leased [`data::RowBlock`]
+//! (rows + pre-computed squared norms) is valid until the next lease.
+//! The contract exists because a borrow-returning `rows(lo, len)`
+//! cannot be served by a source that refills a resident window — and
+//! with it, *where the rows live* becomes an implementation detail:
+//!
+//! * [`data::Dataset`] — in memory; leases are zero-copy slices;
+//! * [`data::BatchView`] — a seeded, sampled view (the mini-batch
+//!   engine's data layer), gather-backed, same zero-copy leases;
+//! * [`data::ooc`] — **out-of-core**: `MmapSource` (page-cache-backed
+//!   `.ekb` mapping) and [`data::ChunkedFileSource`] (buffered reads,
+//!   one resident window per worker, `--ooc-window` rows each), both
+//!   with a `.norms` sidecar so squared norms are computed once per
+//!   file. Runs off a file are **bit-identical** to in-memory runs at
+//!   any thread count — for the exact and mini-batch engines — and
+//!   report I/O telemetry (blocks leased, bytes read, window refills)
+//!   in [`metrics::RunReport::io`]. The CLI reaches them with
+//!   `run`/`predict` `--ooc auto|mmap|chunked` on an `.ekb` path,
+//!   clustering datasets larger than RAM without loading them.
+//!
+//! The seam's invariants (lease stability, norms matching rows, shard
+//! coverage) are enforced for every implementation by one property
+//! harness, [`algorithms::testutil::assert_block_lease_contract`].
 //!
 //! ## Mini-batch engine
 //!

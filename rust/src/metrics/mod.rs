@@ -65,6 +65,34 @@ impl PhaseTimes {
     }
 }
 
+/// I/O telemetry for out-of-core data sources (`None` when the run read
+/// resident memory): cumulative counts from the source's cursors.
+/// [`DataSource::io_stats`](crate::data::DataSource::io_stats) returns a
+/// snapshot; runners report the delta of two snapshots, so the numbers
+/// are per-run even when one source serves many runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IoTelemetry {
+    /// Row blocks leased from cursors.
+    pub blocks_leased: u64,
+    /// Bytes read from the backing file (mmap sources count bytes
+    /// leased — actual paging is the kernel's business).
+    pub bytes_read: u64,
+    /// Resident-window refills (0 for mmap sources).
+    pub window_refills: u64,
+}
+
+impl IoTelemetry {
+    /// Counter delta `self − earlier` (saturating, so a source swap
+    /// mid-run degrades to zeros instead of nonsense).
+    pub fn since(&self, earlier: &IoTelemetry) -> IoTelemetry {
+        IoTelemetry {
+            blocks_leased: self.blocks_leased.saturating_sub(earlier.blocks_leased),
+            bytes_read: self.bytes_read.saturating_sub(earlier.bytes_read),
+            window_refills: self.window_refills.saturating_sub(earlier.window_refills),
+        }
+    }
+}
+
 /// Batch-schedule telemetry for a mini-batch fit (`None` on exact
 /// full-batch runs): the resolved knobs plus the realised schedule.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -107,6 +135,8 @@ pub struct RunReport {
     pub round_times: Vec<Duration>,
     /// Mini-batch schedule telemetry (`None` for full-batch runs).
     pub batch: Option<BatchTelemetry>,
+    /// Out-of-core I/O telemetry (`None` for resident sources).
+    pub io: Option<IoTelemetry>,
 }
 
 impl RunReport {
@@ -121,8 +151,15 @@ impl RunReport {
             ),
             None => String::new(),
         };
+        let io = match &self.io {
+            Some(io) => format!(
+                " io: blocks={} bytes={} refills={}",
+                io.blocks_leased, io.bytes_read, io.window_refills
+            ),
+            None => String::new(),
+        };
         format!(
-            "{:<10} {:<14} k={:<5} iters={:<5} conv={} mse={:.6} wall={:?} q_a={} q_au={} thr={} scan={:?} upd={:?} build={:?}{batch}",
+            "{:<10} {:<14} k={:<5} iters={:<5} conv={} mse={:.6} wall={:?} q_a={} q_au={} thr={} scan={:?} upd={:?} build={:?}{batch}{io}",
             self.algorithm,
             self.dataset,
             self.k,
@@ -185,20 +222,52 @@ mod tests {
             counters: Counters::default(),
             round_times: vec![],
             batch: None,
+            io: None,
         };
         let s = r.summary();
         assert!(s.contains("exp") && s.contains("birch") && s.contains("iters=42"));
         assert!(s.contains("thr=4"));
         assert!(!s.contains("batch="));
+        assert!(!s.contains("io:"));
         let r = RunReport {
             batch: Some(BatchTelemetry {
                 batch_size: 256,
                 growth: 2.0,
                 schedule: vec![256, 512, 1024],
             }),
+            io: Some(IoTelemetry {
+                blocks_leased: 7,
+                bytes_read: 4096,
+                window_refills: 2,
+            }),
             ..r
         };
-        assert!(r.summary().contains("batch=256→1024×2.00"));
+        let s = r.summary();
+        assert!(s.contains("batch=256→1024×2.00"));
+        assert!(s.contains("io: blocks=7 bytes=4096 refills=2"));
+    }
+
+    #[test]
+    fn io_delta_saturates() {
+        let a = IoTelemetry {
+            blocks_leased: 10,
+            bytes_read: 100,
+            window_refills: 1,
+        };
+        let b = IoTelemetry {
+            blocks_leased: 25,
+            bytes_read: 900,
+            window_refills: 4,
+        };
+        assert_eq!(
+            b.since(&a),
+            IoTelemetry {
+                blocks_leased: 15,
+                bytes_read: 800,
+                window_refills: 3
+            }
+        );
+        assert_eq!(a.since(&b), IoTelemetry::default());
     }
 
     #[test]

@@ -378,6 +378,9 @@ impl FittedModel {
             counters: Counters::default(),
             round_times: Vec::new(),
             batch,
+            // I/O telemetry is transient — it describes one fit's reads,
+            // not the model, so it is not persisted
+            io: None,
         };
         Ok(FittedModel::from_parts(centroids, d, report))
     }

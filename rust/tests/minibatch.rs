@@ -124,11 +124,10 @@ impl DataSource for Hollow {
     fn d(&self) -> usize {
         self.d
     }
-    fn rows(&self, _lo: usize, _len: usize) -> &[f64] {
-        &[]
-    }
-    fn sqnorms_range(&self, _lo: usize, _len: usize) -> &[f64] {
-        &[]
+    fn open(&self, lo: usize, len: usize) -> Box<dyn eakm::data::BlockCursor + '_> {
+        // shape lies are caught before any lease; an empty cursor is
+        // enough for the degenerate-source guards under test
+        Box::new(eakm::data::SliceCursor::new(&[], &[], self.d, lo, len))
     }
 }
 

@@ -1,0 +1,136 @@
+//! Out-of-core bit-identity: clustering an `.ekb` file through
+//! `MmapSource` / `ChunkedFileSource` (window far smaller than the
+//! file) must produce **bit-identical** assignments, MSE, and bound
+//! counters to the in-memory run — for the exact and mini-batch
+//! engines, at several thread widths. This is the acceptance gate for
+//! the out-of-core layer; CI runs it on every commit.
+
+use std::path::PathBuf;
+
+use eakm::data::ooc::{open_ooc, OocMode};
+use eakm::data::{io, Dataset};
+use eakm::prelude::*;
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn tmpdir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("eakm-ooc-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A dataset written to disk plus the same data resident in memory.
+fn fixture(name: &str, n: usize, d: usize, seed: u64) -> (PathBuf, Dataset) {
+    let ds = eakm::data::synth::blobs(n, d, 6, 0.25, seed);
+    let path = tmpdir().join(name);
+    io::save_bin(&ds, &path).unwrap();
+    // reload so the in-memory reference went through the same file
+    let mem = io::load_bin(&path).unwrap();
+    (path, mem)
+}
+
+fn modes() -> Vec<OocMode> {
+    let mut modes = vec![OocMode::Chunked];
+    if eakm::data::ooc::mmap_supported() {
+        modes.push(OocMode::Mmap);
+    }
+    modes
+}
+
+#[test]
+fn exact_engine_is_bit_identical_out_of_core() {
+    let (path, mem) = fixture("exact.ekb", 1_500, 5, 3);
+    for alg in [Algorithm::Sta, Algorithm::ExpNs] {
+        for &threads in &THREADS {
+            let cfg = RunConfig::new(alg, 6).seed(7).threads(threads);
+            let want = Runner::new(&cfg).run(&mem).unwrap();
+            for mode in modes() {
+                // window of 128 rows over a 1500-row file: the scan
+                // refills many times per round
+                let src = open_ooc(&path, mode, 128).unwrap();
+                let got = Runner::new(&cfg).run(&*src).unwrap();
+                assert_eq!(got.assignments, want.assignments, "{alg} {mode} t={threads}");
+                assert_eq!(
+                    got.mse.to_bits(),
+                    want.mse.to_bits(),
+                    "{alg} {mode} t={threads}"
+                );
+                assert_eq!(got.counters, want.counters, "{alg} {mode} t={threads}");
+                assert_eq!(got.iterations, want.iterations);
+                let bits = |c: &[f64]| c.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got.centroids), bits(&want.centroids));
+                // the out-of-core run reports I/O, the in-memory one not
+                let io = got.report.io.expect("ooc run reports I/O telemetry");
+                assert!(io.blocks_leased > 0);
+                assert!(want.report.io.is_none());
+                if mode == OocMode::Chunked {
+                    assert!(io.window_refills > 0, "small window must refill");
+                    assert!(io.bytes_read > 0);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn minibatch_engine_is_bit_identical_out_of_core() {
+    let (path, mem) = fixture("minibatch.ekb", 2_000, 4, 5);
+    for growth in [2.0, 1.0] {
+        let mut cfg = RunConfig::new(Algorithm::ExpNs, 6)
+            .seed(11)
+            .batch_size(150)
+            .batch_growth(growth);
+        cfg.max_iters = if growth > 1.0 { 200 } else { 12 };
+        for &threads in &THREADS {
+            cfg.threads = threads;
+            let want = Runner::new(&cfg).run(&mem).unwrap();
+            for mode in modes() {
+                let src = open_ooc(&path, mode, 128).unwrap();
+                let got = Runner::new(&cfg).run(&*src).unwrap();
+                assert_eq!(got.assignments, want.assignments, "{mode} t={threads}");
+                assert_eq!(got.mse.to_bits(), want.mse.to_bits());
+                assert_eq!(got.counters, want.counters);
+                assert_eq!(got.report.batch, want.report.batch, "same batch schedule");
+                assert!(got.report.io.unwrap().blocks_leased > 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn predict_and_kmeanspp_run_out_of_core() {
+    let (path, mem) = fixture("predict.ekb", 900, 3, 9);
+    let rt = Runtime::new(2);
+    // k-means++ seeding makes many random-access row reads
+    let cfg = Kmeans::new(5)
+        .algorithm(Algorithm::Elk)
+        .seed(3)
+        .init(InitMethod::KmeansPlusPlus);
+    let want = cfg.fit(&rt, &mem).unwrap();
+    for mode in modes() {
+        let src = open_ooc(&path, mode, 64).unwrap();
+        let model = cfg.fit(&rt, &*src).unwrap();
+        let bits = |c: &[f64]| c.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(model.centroids()), bits(want.centroids()));
+        // serving path: predict straight off the file
+        let labels = model.predict(&rt, &*src).unwrap();
+        let labels_mem = want.predict(&rt, &mem).unwrap();
+        assert_eq!(labels, labels_mem, "{mode}");
+    }
+}
+
+#[test]
+fn io_telemetry_reports_per_run_deltas() {
+    let (path, _mem) = fixture("telemetry.ekb", 800, 4, 13);
+    let src = open_ooc(&path, OocMode::Chunked, 100).unwrap();
+    let cfg = RunConfig::new(Algorithm::Sta, 4).seed(1);
+    let first = Runner::new(&cfg).run(&*src).unwrap();
+    let second = Runner::new(&cfg).run(&*src).unwrap();
+    let (a, b) = (first.report.io.unwrap(), second.report.io.unwrap());
+    // deltas, not cumulative totals: two identical runs read the same
+    assert_eq!(a.blocks_leased, b.blocks_leased);
+    assert_eq!(a.bytes_read, b.bytes_read);
+    // and the source's cumulative counters kept growing underneath
+    let total = src.io_stats().unwrap();
+    assert!(total.blocks_leased >= a.blocks_leased * 2);
+}

@@ -1,0 +1,59 @@
+//! The block-lease seam contract, checked across every `DataSource`
+//! implementation through the one shared property harness
+//! (`eakm::algorithms::testutil::assert_block_lease_contract`):
+//! coverage of `[0, n)` in shard order, bit-stability of re-reads, and
+//! norms matching rows — for `Dataset`, `BatchView`, `MmapSource`, and
+//! `ChunkedFileSource`.
+
+use std::path::PathBuf;
+
+use eakm::algorithms::testutil::assert_block_lease_contract;
+use eakm::data::ooc::ChunkedFileSource;
+use eakm::data::{io, BatchView, Dataset};
+
+fn blobs(n: usize, d: usize, seed: u64) -> Dataset {
+    eakm::data::synth::blobs(n, d, 5, 0.2, seed)
+}
+
+fn tmp_ekb(name: &str, ds: &Dataset) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("eakm-seam-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    io::save_bin(ds, &path).unwrap();
+    path
+}
+
+#[test]
+fn dataset_upholds_the_block_lease_contract() {
+    assert_block_lease_contract(&blobs(937, 6, 1), 101);
+    // degenerate-ish shapes: single row, single column
+    assert_block_lease_contract(&blobs(7, 1, 2), 102);
+}
+
+#[test]
+fn batch_view_upholds_the_block_lease_contract() {
+    let base = blobs(1_200, 5, 3);
+    let view = BatchView::seeded(&base, 311, 9);
+    assert_block_lease_contract(&view, 103);
+    let full = BatchView::seeded(&base, 1_200, 10);
+    assert_block_lease_contract(&full, 104);
+}
+
+#[test]
+fn chunked_source_upholds_the_block_lease_contract() {
+    let ds = blobs(701, 4, 4);
+    let path = tmp_ekb("contract-chunked.ekb", &ds);
+    // window far smaller than the file: leases constantly refill
+    let src = ChunkedFileSource::open(&path, 37).unwrap();
+    assert_block_lease_contract(&src, 105);
+}
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+#[test]
+fn mmap_source_upholds_the_block_lease_contract() {
+    use eakm::data::ooc::MmapSource;
+    let ds = blobs(701, 4, 5);
+    let path = tmp_ekb("contract-mmap.ekb", &ds);
+    let src = MmapSource::open(&path).unwrap();
+    assert_block_lease_contract(&src, 106);
+}
