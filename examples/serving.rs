@@ -1,90 +1,171 @@
-//! Serving: fit once, predict many — and survive a restart.
+//! Serving: a long-lived model server on one `Runtime`, driven
+//! end-to-end over a real loopback socket.
 //!
 //! The shape of a clustering service under traffic:
 //!
 //! 1. a startup phase fits (or loads) a `FittedModel`;
-//! 2. a long steady state answers nearest-centroid queries on one
-//!    shared [`Runtime`] — batch `predict` for bulk requests,
-//!    `nearest` for single points;
-//! 3. a background *refinement* loop re-fits on mini-batches under a
-//!    wall-clock budget, so the model tracks the data without ever
-//!    stealing a full-scan's worth of latency from serving;
-//! 4. the model is persisted as JSON, so a restarted process serves
-//!    bit-identical answers without refitting.
+//! 2. `eakm::serve::serve` answers line-delimited JSON requests —
+//!    concurrent `predict`s are coalesced by the micro-batcher into
+//!    single pool-sharded scans, so answers stay **bit-identical** to
+//!    local `predict` while the per-request dispatch cost is shared;
+//! 3. a `reload` op hot-swaps an improved model (here: a mini-batch
+//!    refinement) with zero downtime — in-flight requests finish on the
+//!    snapshot they started with, none are dropped;
+//! 4. `stats` exposes live telemetry and `shutdown` drains cleanly,
+//!    returning the final counters for the summary line.
+//!
+//! The server runs on a spawned thread; the driving happens on the
+//! main thread so any failed assertion exits the process (a CI smoke
+//! run fails fast instead of hanging on a server that never gets its
+//! shutdown op).
 //!
 //! ```sh
 //! cargo run --release --example serving
 //! ```
 
-use std::time::Duration;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
 
+use eakm::json::Json;
 use eakm::prelude::*;
+use eakm::serve::client::{self, Client};
 
 fn main() {
-    let rt = Runtime::auto();
-    let model_path = std::env::temp_dir().join("eakm-serving-model.json");
+    let started = Instant::now();
+    let (d, k) = (16, 100);
+    let model_path = std::env::temp_dir().join("eakm-serving-refined.json");
 
-    // ── startup: fit once ───────────────────────────────────────────
-    let train = eakm::data::synth::blobs(50_000, 16, 100, 0.05, 1);
-    let model = Kmeans::new(100)
-        .algorithm(Algorithm::Auto) // resolved by dimension
-        .seed(7)
-        .fit(&rt, &train)
-        .expect("fit failed");
-    println!(
-        "fitted: {} (k={}, d={}, iters={}, mse={:.5}, threads={})",
-        model.algorithm(),
-        model.k(),
-        model.d(),
-        model.report().iterations,
-        model.report().mse,
-        rt.threads(),
-    );
-    model.save(&model_path).expect("save failed");
-    println!("persisted → {}", model_path.display());
+    // ── startup: fit the model the server will open with ────────────
+    let train = eakm::data::synth::blobs(50_000, d, k, 0.05, 1);
+    let (fitted, refined) = {
+        let rt = Runtime::auto();
+        let fitted = Kmeans::new(k)
+            .algorithm(Algorithm::Auto)
+            .seed(7)
+            .fit(&rt, &train)
+            .expect("fit failed");
+        println!(
+            "fitted: {} (k={}, d={}, iters={}, mse={:.5})",
+            fitted.algorithm(),
+            fitted.k(),
+            fitted.d(),
+            fitted.report().iterations,
+            fitted.report().mse,
+        );
+        // a mini-batch refinement under a latency budget — the model a
+        // production loop would hot-swap in later
+        let refined = Kmeans::new(k)
+            .algorithm(Algorithm::Auto)
+            .seed(7)
+            .batch_size(train.n() / 16)
+            .batch_growth(2.0)
+            .time_limit(Duration::from_millis(250))
+            .fit(&rt, &train)
+            .expect("refinement failed");
+        (fitted, refined)
+    };
+    refined.save(&model_path).expect("save refined");
+    println!("refined model persisted → {}", model_path.display());
 
-    // ── steady state: many predict batches on the same runtime ──────
-    let mut served = 0usize;
-    for batch in 0..8 {
-        let queries = eakm::data::synth::blobs(2_000, 16, 100, 0.08, 100 + batch);
-        let labels = model.predict(&rt, &queries).expect("predict failed");
-        served += labels.len();
+    // reference answers for the bit-identity check below
+    let queries = eakm::data::synth::blobs(512, d, k, 0.08, 99);
+    let reference = {
+        let rt = Runtime::serial();
+        fitted.predict(&rt, &queries).expect("local predict")
+    };
+
+    // ── the server: its own thread, its own Runtime ─────────────────
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let cfg = ServeConfig {
+        linger: Duration::from_millis(2), // coalesce concurrent clients
+        ..ServeConfig::default()
+    };
+    let server = thread::spawn(move || {
+        let rt = Runtime::auto();
+        eakm::serve::serve(&rt, fitted, &cfg, |addr| {
+            addr_tx.send(addr).expect("announce address");
+        })
+        .expect("serve failed")
+    });
+    let addr = addr_rx.recv().expect("server address");
+    println!("server is up on {addr}");
+
+    // ── concurrent clients: requests coalesce into shared scans ─────
+    let raw = queries.raw().to_vec();
+    let mut workers = Vec::new();
+    for c in 0..4usize {
+        let raw = raw.clone();
+        let reference = reference.clone();
+        workers.push(thread::spawn(move || {
+            let mut cl = Client::connect(addr).expect("connect");
+            // each client labels a quarter of the query set, 8 rows per
+            // request
+            let per = raw.len() / d / 4;
+            for chunk in 0..per / 8 {
+                let lo = c * per + chunk * 8;
+                let reply = cl
+                    .call(&client::predict_request(&raw[lo * d..(lo + 8) * d], d))
+                    .expect("predict");
+                let labels: Vec<u32> = reply
+                    .get("labels")
+                    .and_then(Json::as_arr)
+                    .expect("labels")
+                    .iter()
+                    .map(|l| l.as_usize().unwrap() as u32)
+                    .collect();
+                // served answers are bit-identical to local predict
+                assert_eq!(labels.as_slice(), &reference[lo..lo + 8], "client {c}");
+            }
+        }));
     }
-    println!("served {served} batched queries (one pool, zero respawns)");
+    for w in workers {
+        w.join().expect("client worker failed");
+    }
+    println!("512 rows served batch-identical to local predict");
 
-    // single-point path: no dispatch, no allocation
-    let probe = train.row(0);
-    let (label, dist) = model.nearest(probe);
-    println!("single query → cluster {label} at distance {dist:.4}");
+    let mut admin = Client::connect(addr).expect("connect admin");
 
-    // ── refine under a latency budget: mini-batch rounds ────────────
-    // Between traffic bursts, improve the model on sampled batches: a
-    // nested batch (doubling, Newling & Fleuret 2016b) costs a fraction
-    // of a full scan per round, and the time limit caps the refinement
-    // rounds (the final labelling pass adds one full scan on top). The
-    // refit is seeded, so it is bit-identical at any pool width.
-    let refined = Kmeans::new(100)
-        .algorithm(Algorithm::Auto)
-        .seed(7)
-        .batch_size(train.n() / 16) // ~3k rows per round to start
-        .batch_growth(2.0) // nested: doubles toward the full dataset
-        .time_limit(Duration::from_millis(250)) // the latency budget
-        .fit(&rt, &train)
-        .expect("refinement failed");
-    let schedule = refined.report().batch.as_ref().expect("mini-batch telemetry");
+    // single-point path
+    let nearest = admin
+        .call(&client::nearest_request(&raw[..d]))
+        .expect("nearest");
     println!(
-        "refined on {} mini-batch rounds (schedule {:?}…, mse {:.5} vs full-fit {:.5})",
-        refined.report().iterations,
-        &schedule.schedule[..schedule.schedule.len().min(6)],
-        refined.report().mse,
-        model.report().mse,
+        "nearest → cluster {} at distance {:.4}",
+        nearest.get("label").and_then(Json::as_usize).unwrap(),
+        nearest.get("distance").and_then(Json::as_f64).unwrap(),
     );
 
-    // ── restart: load and verify bit-identical serving ──────────────
-    let reloaded = FittedModel::load(&model_path).expect("load failed");
-    let queries = eakm::data::synth::blobs(2_000, 16, 100, 0.08, 999);
-    let before = model.predict(&rt, &queries).expect("predict failed");
-    let after = reloaded.predict(&rt, &queries).expect("predict failed");
-    assert_eq!(before, after);
-    println!("restart check OK: loaded model serves identical labels");
+    // live telemetry
+    let stats = admin.call(&client::stats_request()).expect("stats");
+    let s = stats.get("stats").expect("stats payload");
+    println!(
+        "stats → {} requests, {} batches ({} coalesced), generation {}",
+        s.get("requests").and_then(Json::as_usize).unwrap(),
+        s.get("batches").and_then(Json::as_usize).unwrap(),
+        s.get("coalesced_batches").and_then(Json::as_usize).unwrap(),
+        s.get("generation").and_then(Json::as_usize).unwrap(),
+    );
+
+    // hot reload: swap in the refined model with zero downtime
+    let reload = admin
+        .call(&client::reload_request(model_path.to_str().unwrap()))
+        .expect("reload");
+    assert_eq!(reload.get("ok").and_then(Json::as_bool), Some(true));
+    println!(
+        "reloaded refined model (generation {})",
+        reload.get("generation").and_then(Json::as_usize).unwrap(),
+    );
+    let after = admin
+        .call(&client::predict_request(&raw[..8 * d], d))
+        .expect("post-reload predict");
+    assert_eq!(after.get("ok").and_then(Json::as_bool), Some(true));
+
+    // ── clean shutdown: drain and print the summary line ────────────
+    let bye = admin.call(&client::shutdown_request()).expect("shutdown");
+    assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    let stats = server.join().expect("server thread failed");
+    println!("{}", stats.summary_line(started.elapsed()));
+    assert_eq!(stats.queue_full_rejects, 0);
+    assert_eq!(stats.reloads, 1);
 }

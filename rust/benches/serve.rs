@@ -1,0 +1,160 @@
+//! Serve throughput bench: requests/s over a loopback socket as a
+//! function of the micro-batcher's coalescing cap (`--max-batch`).
+//!
+//! Eight concurrent clients issue synchronous predict requests against
+//! one server. With `max_batch = 1` every request costs its own pool
+//! dispatch + scan; with a real coalescing cap the batcher folds the
+//! backlog that accumulates during each scan into one shard pass —
+//! the serving-time analogue of the paper's amortise-work-per-query
+//! theme. The table reports the throughput ratio against the
+//! unbatched row, plus the server's own telemetry (batches, coalesced
+//! batches, overloaded rejects).
+
+mod common;
+
+use std::net::SocketAddr;
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use eakm::bench_support::{env_scale, TextTable};
+use eakm::data::synth::blobs;
+use eakm::json::Json;
+use eakm::model::{FittedModel, Kmeans};
+use eakm::runtime::Runtime;
+use eakm::serve::client::{self, Client};
+use eakm::serve::{serve, ServeConfig, ServeStats};
+
+const CLIENTS: usize = 8;
+const ROWS_PER_REQ: usize = 4;
+const SERVER_THREADS: usize = 4;
+const MAX_BATCH_SWEEP: [usize; 3] = [1, 64, 512];
+
+/// One benchmark round: spin up a server with the given coalescing cap,
+/// hammer it from `CLIENTS` synchronous clients, return the client-side
+/// wall time and the server's final telemetry.
+fn run_round(
+    model: FittedModel,
+    queries: &[f64],
+    d: usize,
+    per_client: usize,
+    max_batch_rows: usize,
+) -> (Duration, ServeStats) {
+    let cfg = ServeConfig {
+        acceptors: CLIENTS,
+        queue_depth: 1024,
+        max_batch_rows,
+        ..ServeConfig::default()
+    };
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let server = thread::spawn(move || {
+        let rt = Runtime::new(SERVER_THREADS);
+        serve(&rt, model, &cfg, |addr| addr_tx.send(addr).unwrap()).unwrap()
+    });
+    let addr: SocketAddr = addr_rx.recv().unwrap();
+    let n_rows = queries.len() / d;
+    let started = Instant::now();
+    let mut workers = Vec::new();
+    for c in 0..CLIENTS {
+        let queries = queries.to_vec();
+        workers.push(thread::spawn(move || {
+            let mut cl = Client::connect(addr).unwrap();
+            for i in 0..per_client {
+                let lo = ((c * per_client + i) * ROWS_PER_REQ) % (n_rows - ROWS_PER_REQ);
+                let line = client::predict_request(&queries[lo * d..(lo + ROWS_PER_REQ) * d], d);
+                let reply = cl.call(&line).unwrap();
+                assert_eq!(
+                    reply.get("ok").and_then(Json::as_bool),
+                    Some(true),
+                    "request failed: {reply}"
+                );
+            }
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    let wall = started.elapsed();
+    // clean shutdown: the joined server returns its final telemetry
+    let _ = Client::connect(addr)
+        .unwrap()
+        .call(&client::shutdown_request());
+    (wall, server.join().unwrap())
+}
+
+fn main() {
+    let scale = env_scale();
+    let per_client = ((20_000.0 * scale) as usize).max(40);
+    let (d, k) = (8, 64);
+    let rt = Runtime::new(SERVER_THREADS);
+    let train = blobs(6_000, d, k, 0.08, 0x5E12);
+    let model = Kmeans::new(k).seed(7).fit(&rt, &train).unwrap();
+    let queries = blobs(2_048, d, k, 0.12, 0xC11E);
+    drop(rt);
+
+    let mut t = TextTable::new(format!(
+        "Serve throughput vs micro-batch cap ({CLIENTS} clients × {per_client} reqs, \
+         {ROWS_PER_REQ} rows/req, k={k}, d={d}, {SERVER_THREADS} server threads)"
+    ))
+    .headers(&[
+        "max_batch",
+        "clients",
+        "reqs",
+        "rows/req",
+        "wall[s]",
+        "req/s",
+        "vs_mb1",
+        "batches",
+        "coalesced",
+        "overloaded",
+    ]);
+
+    let total_reqs = CLIENTS * per_client;
+    let mut base_rps = None;
+    for &max_batch in &MAX_BATCH_SWEEP {
+        let (wall, stats) = run_round(
+            model.clone(),
+            queries.raw(),
+            d,
+            per_client,
+            max_batch,
+        );
+        let rps = total_reqs as f64 / wall.as_secs_f64();
+        let base = *base_rps.get_or_insert(rps);
+        assert_eq!(
+            stats.predicts, total_reqs as u64,
+            "every request must be served"
+        );
+        t.row(vec![
+            max_batch.to_string(),
+            CLIENTS.to_string(),
+            total_reqs.to_string(),
+            ROWS_PER_REQ.to_string(),
+            format!("{:.4}", wall.as_secs_f64()),
+            format!("{rps:.0}"),
+            TextTable::fmt_ratio(rps / base),
+            stats.batches.to_string(),
+            stats.coalesced_batches.to_string(),
+            stats.queue_full_rejects.to_string(),
+        ]);
+        eprint!(".");
+    }
+    eprintln!();
+
+    let mut rendered = t.render();
+    rendered.push_str(
+        "\nmax_batch=1 scans every request alone; larger caps let the batcher fold\n\
+         the backlog accumulated during each scan into one pool-sharded pass, so\n\
+         req/s should rise (vs_mb1 ≥ 1.00) while batches shrink below reqs.\n",
+    );
+    common::emit("serve_throughput.txt", &rendered);
+
+    let bench_json = Json::obj()
+        .field("bench", "serve")
+        .field("scale", scale)
+        .field("clients", CLIENTS as u64)
+        .field("rows_per_request", ROWS_PER_REQ as u64)
+        .field("server_threads", SERVER_THREADS as u64)
+        .field("throughput", t.to_json());
+    common::emit_json("BENCH_serve.json", &bench_json);
+}

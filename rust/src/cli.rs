@@ -11,6 +11,11 @@
 //! eakm predict   --model model.json --data-file points.csv
 //!                [--ooc auto|mmap|chunked] [--ooc-window ROWS]
 //!                [--threads T|auto] [--out labels.txt] [--json]
+//! eakm serve     --model model.json [--addr 127.0.0.1:4999]
+//!                [--queue-depth N] [--max-batch ROWS] [--acceptors N]
+//!                [--linger-ms M] [--threads T|auto]
+//!                (or fit at startup: the same --dataset/--data-file/
+//!                --ooc/--k/--algorithm flags as `run`)
 //! eakm datasets  [--scale 0.02]           # list the 22 paper datasets
 //! eakm validate  --dataset birch --k 50   # all algorithms must agree
 //! eakm grid      [--scale f] [--seeds n] [--k 50,200] [--out dir]
@@ -42,6 +47,7 @@ pub fn main(args: &[String]) -> Result<i32> {
     match cmd {
         "run" => cmd_run(&parse_flags(rest)?),
         "predict" => cmd_predict(&parse_flags(rest)?),
+        "serve" => cmd_serve(&parse_flags(rest)?),
         "datasets" => cmd_datasets(&parse_flags(rest)?),
         "validate" => cmd_validate(&parse_flags(rest)?),
         "grid" => cmd_grid(&parse_flags(rest)?),
@@ -61,6 +67,7 @@ eakm — fast exact k-means with accurate bounds (Newling & Fleuret, ICML 2016)
 commands:
   run        cluster one dataset with one algorithm (fit)
   predict    assign new points to a saved model's clusters
+  serve      long-lived model server: batching, backpressure, hot reload
   datasets   list the 22 paper datasets (synthetic stand-ins)
   validate   run every algorithm and check they agree exactly
   grid       run the full {dataset × k × algorithm} grid (Tables 9/10)
@@ -97,9 +104,25 @@ common flags:
   --init M           random | kmeans++
   --json             emit the report as JSON
   --save-model PATH  (run) persist the fitted model as JSON
-  --model PATH       (predict) model file written by --save-model
+  --model PATH       (predict/serve) model file written by --save-model
   --out PATH         (predict) write labels here, one per line
                      (default: stdout)
+
+serve flags (requests are line-delimited JSON; see docs for the ops):
+  --addr HOST:PORT   bind address (default 127.0.0.1:4999; port 0 =
+                     ephemeral)
+  --queue-depth N    bounded predict queue; overflow answers a typed
+                     \"overloaded\" error instead of queueing (default
+                     256; the reject only fires when N < --acceptors —
+                     otherwise the acceptor budget is the bound)
+  --max-batch ROWS   micro-batcher coalescing cap per scan (default 4096)
+  --acceptors N      concurrent connection budget (default 4)
+  --linger-ms M      micro-batching window: wait up to M ms to coalesce
+                     concurrent requests into one scan (default 0)
+serve answers with a model from --model, or fits one at startup using
+the same data flags as run (the two are mutually exclusive); the
+\"reload\" op hot-swaps a model JSON with zero downtime. Stop it with
+the \"shutdown\" op.
 
 predict applies the model to the points as given — no standardisation
 is re-applied, so feed features in the same space the model was fit on.
@@ -191,6 +214,19 @@ fn load_dataset(flags: &Flags, standardize: bool) -> Result<Dataset> {
     Ok(generate(&spec, scale, 0x00DA_7A5E))
 }
 
+/// Resolve the input rows named by the data flags into one boxed
+/// source: the out-of-core path when `--ooc` is given, the in-memory
+/// dataset otherwise. The single resolver shared by `run`, `predict`,
+/// and `serve`, so `--data`/`--data-file`/`--ooc`/`--ooc-window`
+/// behave identically across all three. `standardize` applies only to
+/// the in-memory path (out-of-core files are read as-is by design).
+fn open_source(flags: &Flags, standardize: bool) -> Result<Box<dyn DataSource>> {
+    if let Some(src) = open_ooc_source(flags)? {
+        return Ok(src);
+    }
+    Ok(Box::new(load_dataset(flags, standardize)?))
+}
+
 /// Parse `--threads T|auto` (returns `None` when the flag is absent).
 fn parse_threads(flags: &Flags) -> Result<Option<usize>> {
     match flags.get("threads") {
@@ -252,15 +288,10 @@ fn build_config(flags: &Flags) -> Result<RunConfig> {
 fn cmd_run(flags: &Flags) -> Result<i32> {
     let cfg = build_config(flags)?;
     let rt = Runtime::new(cfg.resolved_threads());
-    let model = match open_ooc_source(flags)? {
-        // out-of-core: fit straight off the file; RunReport.io carries
-        // the blocks/bytes/refills telemetry
-        Some(src) => Kmeans::from_config(cfg).fit(&rt, &*src)?,
-        None => {
-            let data = load_dataset(flags, true)?;
-            Kmeans::from_config(cfg).fit(&rt, &data)?
-        }
-    };
+    // out-of-core sources fit straight off the file; RunReport.io
+    // carries the blocks/bytes/refills telemetry
+    let src = open_source(flags, true)?;
+    let model = Kmeans::from_config(cfg).fit(&rt, &*src)?;
     if flags.contains_key("json") {
         println!("{}", Json::from(model.report()));
     } else {
@@ -280,20 +311,10 @@ fn cmd_predict(flags: &Flags) -> Result<i32> {
     let model = FittedModel::load(Path::new(model_path))?;
     // points are taken as-is: the model defines the feature space
     let rt = Runtime::new(parse_threads(flags)?.unwrap_or(1));
-    let (labels, mse, n) = match open_ooc_source(flags)? {
-        Some(src) => {
-            let labels = model.predict(&rt, &*src)?;
-            let mse = src.mse(model.centroids(), &labels);
-            let n = src.n();
-            (labels, mse, n)
-        }
-        None => {
-            let data = load_dataset(flags, false)?;
-            let labels = model.predict(&rt, &data)?;
-            let mse = data.mse(model.centroids(), &labels);
-            (labels, mse, data.n())
-        }
-    };
+    let src = open_source(flags, false)?;
+    let labels = model.predict(&rt, &*src)?;
+    let mse = src.mse(model.centroids(), &labels);
+    let n = src.n();
     if flags.contains_key("json") {
         println!(
             "{}",
@@ -332,6 +353,89 @@ fn cmd_predict(flags: &Flags) -> Result<i32> {
             print!("{text}");
         }
     }
+    Ok(0)
+}
+
+/// `eakm serve`: load (or fit) a model, then run the long-lived server
+/// until a `shutdown` op arrives. Blocks the calling thread.
+fn cmd_serve(flags: &Flags) -> Result<i32> {
+    use std::time::{Duration, Instant};
+    let rt = Runtime::new(parse_threads(flags)?.unwrap_or(crate::config::AUTO_THREADS));
+    let model = match flags.get("model") {
+        Some(path) => {
+            // a saved model and fit flags contradict each other — fail
+            // loudly rather than silently serving the stale model
+            for fit_flag in [
+                "dataset",
+                "data-file",
+                "data",
+                "ooc",
+                "ooc-window",
+                "scale",
+                "config",
+                "k",
+                "algorithm",
+                "seed",
+                "init",
+                "max-iters",
+                "batch-size",
+                "batch-growth",
+            ] {
+                if flags.contains_key(fit_flag) {
+                    return Err(EakmError::Config(format!(
+                        "serve: --model and --{fit_flag} are mutually exclusive \
+                         (drop --model to fit at startup, or drop the fit flags \
+                         and use the \"reload\" op to swap models)"
+                    )));
+                }
+            }
+            FittedModel::load(Path::new(path))?
+        }
+        // no saved model: fit one at startup with the same config +
+        // data flags as `run` (--dataset/--data-file/--ooc/--k/…)
+        None => {
+            let cfg = build_config(flags)?;
+            let src = open_source(flags, true)?;
+            Kmeans::from_config(cfg).fit(&rt, &*src)?
+        }
+    };
+    let defaults = crate::serve::ServeConfig::default();
+    let positive = |key: &str, fallback: usize| -> Result<usize> {
+        match flag_num::<usize>(flags, key)? {
+            Some(0) => Err(EakmError::Config(format!("--{key} must be ≥ 1"))),
+            Some(v) => Ok(v),
+            None => Ok(fallback),
+        }
+    };
+    let cfg = crate::serve::ServeConfig {
+        addr: flags
+            .get("addr")
+            .cloned()
+            .unwrap_or_else(|| "127.0.0.1:4999".to_string()),
+        acceptors: positive("acceptors", defaults.acceptors)?,
+        queue_depth: positive("queue-depth", defaults.queue_depth)?,
+        max_batch_rows: positive("max-batch", defaults.max_batch_rows)?,
+        linger: Duration::from_millis(flag_num::<u64>(flags, "linger-ms")?.unwrap_or(0)),
+        max_line_bytes: defaults.max_line_bytes,
+        idle_timeout: defaults.idle_timeout,
+    };
+    if cfg.queue_depth >= cfg.acceptors {
+        eprintln!(
+            "[note: queue depth {} ≥ {} acceptors — overload will surface as \
+             connection queueing; use --queue-depth < --acceptors for typed \
+             \"overloaded\" rejects]",
+            cfg.queue_depth, cfg.acceptors
+        );
+    }
+    let started = Instant::now();
+    let threads = rt.threads();
+    let stats = crate::serve::serve(&rt, model, &cfg, |addr| {
+        eprintln!(
+            "[serving on {addr} — {threads} worker threads, queue {}, batch cap {} rows]",
+            cfg.queue_depth, cfg.max_batch_rows
+        );
+    })?;
+    println!("{}", stats.summary_line(started.elapsed()));
     Ok(0)
 }
 
@@ -708,6 +812,70 @@ mod tests {
             "64"
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn serve_flag_validation() {
+        // a missing model file fails before any socket is bound
+        assert!(main(&s(&["serve", "--model", "/nonexistent/model.json"])).is_err());
+        // no --model and no data flags: nothing to serve
+        assert!(main(&s(&["serve"])).is_err());
+        // zero-sized knobs are config errors, not silent clamps
+        let dir = tmpdir();
+        let model_path = dir.join("serve-flags-model.json");
+        assert_eq!(
+            main(&s(&[
+                "run",
+                "--dataset",
+                "birch",
+                "--scale",
+                "0.01",
+                "--k",
+                "4",
+                "--save-model",
+                model_path.to_str().unwrap(),
+            ]))
+            .unwrap(),
+            0
+        );
+        for knob in ["queue-depth", "max-batch", "acceptors"] {
+            let flag = format!("--{knob}");
+            assert!(
+                main(&s(&[
+                    "serve",
+                    "--model",
+                    model_path.to_str().unwrap(),
+                    flag.as_str(),
+                    "0",
+                ]))
+                .is_err(),
+                "--{knob} 0 must be rejected"
+            );
+        }
+        // an unbindable address surfaces as an error, not a hang
+        assert!(main(&s(&[
+            "serve",
+            "--model",
+            model_path.to_str().unwrap(),
+            "--addr",
+            "256.256.256.256:1",
+        ]))
+        .is_err());
+        // --model plus fit flags is a contradiction, not a silent
+        // preference for the saved model
+        for fit_flag in ["--dataset", "--data-file", "--k"] {
+            assert!(
+                main(&s(&[
+                    "serve",
+                    "--model",
+                    model_path.to_str().unwrap(),
+                    fit_flag,
+                    "birch",
+                ]))
+                .is_err(),
+                "--model with {fit_flag} must be rejected"
+            );
+        }
     }
 
     #[test]

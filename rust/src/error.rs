@@ -13,6 +13,11 @@ pub enum EakmError {
     Io(std::io::Error),
     /// XLA/PJRT runtime failure (artifact load, compile, execute).
     Runtime(String),
+    /// A configured resource limit was exceeded while reading untrusted
+    /// input (payload bytes, nesting depth). Distinct from `Data` so
+    /// network front-ends can answer with a typed "too large" error
+    /// instead of a generic parse failure.
+    Limit(String),
     /// An internal invariant was violated — a bug in eakm itself.
     Invariant(String),
 }
@@ -24,6 +29,7 @@ impl fmt::Display for EakmError {
             EakmError::Data(m) => write!(f, "data error: {m}"),
             EakmError::Io(e) => write!(f, "io error: {e}"),
             EakmError::Runtime(m) => write!(f, "runtime error: {m}"),
+            EakmError::Limit(m) => write!(f, "limit exceeded: {m}"),
             EakmError::Invariant(m) => write!(f, "invariant violated: {m}"),
         }
     }
@@ -56,6 +62,7 @@ mod tests {
         assert!(format!("{}", EakmError::Config("bad k".into())).contains("bad k"));
         assert!(format!("{}", EakmError::Data("empty".into())).contains("empty"));
         assert!(format!("{}", EakmError::Runtime("pjrt".into())).contains("pjrt"));
+        assert!(format!("{}", EakmError::Limit("too deep".into())).contains("too deep"));
         assert!(format!("{}", EakmError::Invariant("bound".into())).contains("bound"));
     }
 

@@ -103,12 +103,32 @@ impl Json {
         }
     }
 
-    /// Parse a JSON document (must consume the whole input).
+    /// Parse a JSON document (must consume the whole input) under the
+    /// trusted-file limits ([`ParseLimits::document`]).
     pub fn parse(text: &str) -> Result<Json> {
+        Self::parse_with_limits(text, &ParseLimits::document())
+    }
+
+    /// Parse a JSON document under explicit resource limits. This is
+    /// the entry point for **untrusted** input (the serve front-end
+    /// parses attacker-controlled bytes): oversized documents and
+    /// over-deep nesting are rejected with [`EakmError::Limit`] before
+    /// they can cost unbounded stack or allocation. Memory use is
+    /// bounded by the byte cap — every parsed value consumes at least
+    /// one input byte, so allocation is `O(max_bytes)`.
+    pub fn parse_with_limits(text: &str, limits: &ParseLimits) -> Result<Json> {
+        if text.len() > limits.max_bytes {
+            return Err(EakmError::Limit(format!(
+                "json document of {} bytes exceeds the {}-byte limit",
+                text.len(),
+                limits.max_bytes
+            )));
+        }
         let mut p = Parser {
             s: text.as_bytes(),
             pos: 0,
             depth: 0,
+            max_depth: limits.max_depth,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -177,6 +197,41 @@ impl std::fmt::Display for Json {
     }
 }
 
+/// Resource caps for [`Json::parse_with_limits`].
+///
+/// Two profiles cover the crate's inputs: [`document`](ParseLimits::document)
+/// for trusted local files (model JSON, bench artifacts) and
+/// [`network`](ParseLimits::network) for bytes read off a socket, where
+/// both caps are deliberately tight.
+#[derive(Clone, Copy, Debug)]
+pub struct ParseLimits {
+    /// Reject documents longer than this many bytes before parsing.
+    pub max_bytes: usize,
+    /// Reject container nesting deeper than this many levels (caps the
+    /// parse recursion's stack).
+    pub max_depth: usize,
+}
+
+impl ParseLimits {
+    /// Trusted-file profile: no byte cap, 128 nesting levels (crafted
+    /// files must still error instead of overflowing the stack).
+    pub fn document() -> ParseLimits {
+        ParseLimits {
+            max_bytes: usize::MAX,
+            max_depth: 128,
+        }
+    }
+
+    /// Untrusted-network profile: 4 MiB, 64 nesting levels. The serve
+    /// protocol is flat (depth 3), so 64 is already generous.
+    pub fn network() -> ParseLimits {
+        ParseLimits {
+            max_bytes: 4 << 20,
+            max_depth: 64,
+        }
+    }
+}
+
 /// Recursive-descent parser over the document bytes. Inputs are `&str`,
 /// so multi-byte UTF-8 runs are copied through verbatim (they can only
 /// be delimited by ASCII structural bytes, which sit on char
@@ -184,13 +239,11 @@ impl std::fmt::Display for Json {
 struct Parser<'a> {
     s: &'a [u8],
     pos: usize,
-    /// Current container-nesting depth (see [`MAX_DEPTH`]).
+    /// Current container-nesting depth (capped at `max_depth`).
     depth: usize,
+    /// Cap from the active [`ParseLimits`].
+    max_depth: usize,
 }
-
-/// Nesting cap so corrupt/crafted input (`"[".repeat(100_000)`) returns
-/// an `Err` instead of overflowing the parse recursion's stack.
-const MAX_DEPTH: usize = 128;
 
 impl Parser<'_> {
     fn err(&self, msg: &str) -> EakmError {
@@ -219,8 +272,11 @@ impl Parser<'_> {
     fn value(&mut self) -> Result<Json> {
         match self.peek() {
             Some(c @ (b'{' | b'[')) => {
-                if self.depth >= MAX_DEPTH {
-                    return Err(self.err("nesting deeper than 128 levels"));
+                if self.depth >= self.max_depth {
+                    return Err(EakmError::Limit(format!(
+                        "json (byte {}): nesting deeper than {} levels",
+                        self.pos, self.max_depth
+                    )));
                 }
                 self.depth += 1;
                 let v = if c == b'{' { self.object() } else { self.array() };
@@ -554,6 +610,51 @@ mod tests {
         // well under the cap still parses
         let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
         assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn network_limits_reject_hostile_inputs_with_typed_errors() {
+        use crate::error::EakmError;
+        let net = ParseLimits::network();
+        // 65 levels breaches the 64-level network cap — typed Limit, no
+        // stack overflow
+        let deep = format!("{}1{}", "[".repeat(65), "]".repeat(65));
+        assert!(matches!(
+            Json::parse_with_limits(&deep, &net),
+            Err(EakmError::Limit(_))
+        ));
+        // 63 levels is fine (the cap counts containers entered)
+        let ok = format!("{}1{}", "[".repeat(63), "]".repeat(63));
+        assert!(Json::parse_with_limits(&ok, &net).is_ok());
+        // objects hit the same cap as arrays
+        let deep_obj = format!("{}1{}", "{\"a\":".repeat(70), "}".repeat(70));
+        assert!(matches!(
+            Json::parse_with_limits(&deep_obj, &net),
+            Err(EakmError::Limit(_))
+        ));
+        // oversized payloads are rejected before any parsing/allocation
+        let tight = ParseLimits {
+            max_bytes: 64,
+            max_depth: 64,
+        };
+        let big = format!("[{}]", "1,".repeat(100));
+        assert!(matches!(
+            Json::parse_with_limits(&big, &tight),
+            Err(EakmError::Limit(_))
+        ));
+        assert!(Json::parse_with_limits("[1,2,3]", &tight).is_ok());
+        // malformed bytes under the caps still fail as plain Data errors
+        assert!(matches!(
+            Json::parse_with_limits("{\"a\":", &net),
+            Err(EakmError::Data(_))
+        ));
+        // the trusted-document profile keeps its historical 128 levels
+        let mid = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&mid).is_ok());
+        assert!(matches!(
+            Json::parse_with_limits(&mid, &net),
+            Err(EakmError::Limit(_))
+        ));
     }
 
     #[test]

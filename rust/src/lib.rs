@@ -61,6 +61,29 @@
 //! remain available (benches and tests inspect rounds through them),
 //! and `Runner::new(&cfg).run(&data)` still works as a one-shot shim.
 //!
+//! ## Serving
+//!
+//! [`serve`](crate::serve) turns a fitted model into a **long-lived
+//! network service**: a dependency-free blocking TCP server speaking
+//! line-delimited JSON (`predict` / `nearest` / `stats` / `reload` /
+//! `shutdown`), with N acceptor threads feeding a *bounded* request
+//! queue (overflow gets a typed `overloaded` reply — backpressure, not
+//! unbounded queueing; see `ServeConfig::queue_depth` for when each
+//! layer binds), a **micro-batcher** that coalesces concurrent
+//! predict requests into one pool-sharded
+//! [`predict_rows`](model::FittedModel::predict_rows) scan on the
+//! shared [`Runtime`](runtime::Runtime) — answers stay bit-identical
+//! to direct `predict` at any thread width and batch boundary — and a
+//! `Mutex<Arc<FittedModel>>` state cell for zero-downtime model
+//! reloads. Request bytes are untrusted, so the [`json`] parser runs
+//! under [`json::ParseLimits::network`] (payload and nesting caps with
+//! typed errors). Serving telemetry (requests, batched rows, coalesced
+//! batches, queue-full rejects, per-op latency sums) is live through
+//! the `stats` op and summarised on clean shutdown. The CLI front-end
+//! is `eakm serve --model model.json` (or fit-then-serve straight from
+//! `--dataset`/`--data-file`/`--ooc`, with the same data flags as
+//! `run`).
+//!
 //! ## Parallel runtime
 //!
 //! Every phase of a round — the sharded assignment scan, the delta
@@ -142,6 +165,7 @@ pub mod coordinator;
 pub mod runtime;
 pub mod config;
 pub mod model;
+pub mod serve;
 pub mod bench_support;
 pub mod json;
 pub mod cli;
@@ -158,4 +182,5 @@ pub mod prelude {
     pub use crate::metrics::{Counters, RunReport};
     pub use crate::model::{FittedModel, Kmeans};
     pub use crate::runtime::Runtime;
+    pub use crate::serve::{serve, ServeConfig, ServeStats};
 }

@@ -37,7 +37,7 @@ use crate::algorithms::common::nearest_labels;
 use crate::algorithms::Algorithm;
 use crate::config::RunConfig;
 use crate::coordinator::Runner;
-use crate::data::DataSource;
+use crate::data::{BlockCursor, DataSource, SliceCursor};
 use crate::error::{EakmError, Result};
 use crate::init::InitMethod;
 use crate::json::Json;
@@ -221,6 +221,37 @@ impl FittedModel {
         Ok(out)
     }
 
+    /// Nearest-centroid labels for a raw row-major slice of query rows
+    /// (`rows.len()` must be a multiple of the model's `d`). The
+    /// serving batcher's entry point: coalesced requests are
+    /// concatenated into one slice and scanned as a single pool-sharded
+    /// pass.
+    ///
+    /// Row norms are computed with the same [`sqnorms_rows`] kernel
+    /// [`Dataset`](crate::data::Dataset) uses and every row's scan is
+    /// independent of its neighbours, so the output is **bit-identical**
+    /// to [`predict`](FittedModel::predict) on a dataset holding the
+    /// same rows — at any runtime width and under any batching of the
+    /// slice. That identity is what lets a server coalesce concurrent
+    /// requests without changing a single answer.
+    pub fn predict_rows(&self, rt: &Runtime, rows: &[f64]) -> Result<Vec<u32>> {
+        if rows.len() % self.d != 0 {
+            return Err(EakmError::Config(format!(
+                "predict_rows: {} values is not a multiple of d={}",
+                rows.len(),
+                self.d
+            )));
+        }
+        let source = RowsSource {
+            rows,
+            sqnorms: sqnorms_rows(rows, self.d),
+            d: self.d,
+        };
+        let mut out = vec![0u32; source.n()];
+        nearest_labels(rt.pool(), &source, &self.centroids, &self.cnorms, &mut out);
+        Ok(out)
+    }
+
     /// Nearest centroid of a single query point: `(label, distance)`.
     /// The one-point serving hot path — no dispatch, no allocation.
     pub fn nearest(&self, point: &[f64]) -> (u32, f64) {
@@ -399,6 +430,31 @@ impl FittedModel {
     }
 }
 
+/// Borrowed row-major rows with freshly computed norms — the ephemeral
+/// [`DataSource`] behind [`FittedModel::predict_rows`]. Norms come from
+/// the same [`sqnorms_rows`] kernel [`Dataset`](crate::data::Dataset)
+/// uses, which is what keeps slice predictions bit-identical to dataset
+/// predictions.
+struct RowsSource<'a> {
+    rows: &'a [f64],
+    sqnorms: Vec<f64>,
+    d: usize,
+}
+
+impl DataSource for RowsSource<'_> {
+    fn n(&self) -> usize {
+        self.sqnorms.len()
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn open(&self, lo: usize, len: usize) -> Box<dyn BlockCursor + '_> {
+        Box::new(SliceCursor::new(self.rows, &self.sqnorms, self.d, lo, len))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -458,6 +514,43 @@ mod tests {
             .sqrt();
             assert!((d_pred - dist).abs() <= 1e-9 * (1.0 + dist), "query {i} ({j})");
         }
+    }
+
+    #[test]
+    fn predict_rows_matches_predict_under_any_batching() {
+        let ds = blobs(300, 5, 6, 0.15, 21);
+        let queries = blobs(97, 5, 6, 0.25, 22);
+        let model = {
+            let rt = Runtime::serial();
+            Kmeans::new(6).seed(4).fit(&rt, &ds).unwrap()
+        };
+        for threads in [1usize, 4] {
+            let rt = Runtime::new(threads);
+            let want = model.predict(&rt, &queries).unwrap();
+            // the whole slice in one call…
+            let got = model.predict_rows(&rt, queries.raw()).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+            // …and re-batched into uneven chunks: concatenation of the
+            // chunked answers must be bit-identical (the micro-batcher's
+            // correctness contract)
+            let d = queries.d();
+            let mut chunked = Vec::new();
+            let mut lo = 0;
+            for len in [1usize, 7, 30, 59] {
+                let rows = &queries.raw()[lo * d..(lo + len) * d];
+                chunked.extend(model.predict_rows(&rt, rows).unwrap());
+                lo += len;
+            }
+            assert_eq!(chunked, want, "threads={threads} (chunked)");
+        }
+        // empty slice is a valid (empty) batch
+        let rt = Runtime::serial();
+        assert!(model.predict_rows(&rt, &[]).unwrap().is_empty());
+        // ragged slices are a config error
+        assert!(matches!(
+            model.predict_rows(&rt, &[1.0, 2.0, 3.0]),
+            Err(EakmError::Config(_))
+        ));
     }
 
     #[test]

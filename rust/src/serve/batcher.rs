@@ -1,0 +1,364 @@
+//! The micro-batcher: a bounded request queue with typed backpressure
+//! and the drain loop that coalesces pending predict requests into one
+//! pool-sharded scan.
+//!
+//! Acceptor threads [`push`](RequestQueue::push) parsed predict jobs;
+//! when the queue is at capacity the push fails *immediately* and the
+//! client receives the typed `overloaded` reply — the server never
+//! queues unboundedly. One batcher thread drains the queue: it takes
+//! the oldest job, keeps pulling until [`max_batch_rows`] rows are
+//! assembled (optionally lingering to let concurrent arrivals
+//! coalesce), concatenates every job's rows into one slice, runs a
+//! single [`FittedModel::predict_rows`] scan on the shared [`Runtime`],
+//! and scatters per-job label slices back **in arrival order**.
+//!
+//! Correctness rests on the `predict_rows` contract: every row's scan
+//! is independent, so the coalesced answer is bit-identical to serving
+//! each request alone — at any pool width and any batch boundary.
+//!
+//! [`max_batch_rows`]: crate::serve::ServeConfig::max_batch_rows
+//! [`FittedModel::predict_rows`]: crate::model::FittedModel::predict_rows
+//! [`Runtime`]: crate::runtime::Runtime
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::runtime::Runtime;
+use crate::serve::proto::{code, ProtoError};
+use crate::serve::state::{ModelCell, ServeTelemetry};
+
+/// One enqueued predict request: parsed rows plus the reply channel the
+/// owning connection thread blocks on.
+pub(crate) struct PredictJob {
+    /// Row-major `n_rows × d` query values.
+    pub rows: Vec<f64>,
+    /// Rows in this job.
+    pub n_rows: usize,
+    /// Per-row dimension (validated at parse time).
+    pub d: usize,
+    /// Where the labels (or a typed error) go.
+    pub reply: mpsc::Sender<Result<Vec<u32>, ProtoError>>,
+}
+
+struct Inner {
+    jobs: VecDeque<PredictJob>,
+    closed: bool,
+}
+
+/// Why a [`RequestQueue::push`] was refused.
+pub(crate) enum PushRefused {
+    /// At capacity — the caller answers `overloaded`.
+    Full,
+    /// Shutting down — the caller answers `shutting_down`.
+    Closed,
+}
+
+/// The bounded, condvar-backed predict queue between acceptors and the
+/// batcher.
+pub(crate) struct RequestQueue {
+    depth: usize,
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+impl RequestQueue {
+    pub(crate) fn new(depth: usize) -> RequestQueue {
+        RequestQueue {
+            depth,
+            inner: Mutex::new(Inner {
+                jobs: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue, or refuse *immediately* when full/closed (backpressure:
+    /// the queue never grows past its depth).
+    pub(crate) fn push(&self, job: PredictJob) -> Result<(), PushRefused> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        if inner.closed {
+            return Err(PushRefused::Closed);
+        }
+        if inner.jobs.len() >= self.depth {
+            return Err(PushRefused::Full);
+        }
+        inner.jobs.push_back(job);
+        drop(inner);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: the next job in arrival order, or `None` once the
+    /// queue is closed *and* drained (queued work survives shutdown).
+    fn pop_wait(&self) -> Option<PredictJob> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(job) = inner.jobs.pop_front() {
+                return Some(job);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cv.wait(inner).expect("queue poisoned");
+        }
+    }
+
+    /// Non-blocking pop.
+    fn try_pop(&self) -> Option<PredictJob> {
+        self.inner.lock().expect("queue poisoned").jobs.pop_front()
+    }
+
+    /// Pop, waiting until `deadline` at most. `None` on timeout or
+    /// close-and-drained.
+    fn pop_until(&self, deadline: Instant) -> Option<PredictJob> {
+        let mut inner = self.inner.lock().expect("queue poisoned");
+        loop {
+            if let Some(job) = inner.jobs.pop_front() {
+                return Some(job);
+            }
+            if inner.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(inner, deadline - now)
+                .expect("queue poisoned");
+            inner = guard;
+        }
+    }
+
+    /// Close for shutdown: new pushes are refused, the batcher drains
+    /// what is already queued and then stops.
+    pub(crate) fn close(&self) {
+        self.inner.lock().expect("queue poisoned").closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// The batcher thread body: drain → coalesce → one scan → scatter,
+/// until the queue closes and drains. Runs on a scoped thread inside
+/// [`serve`](crate::serve::serve).
+pub(crate) fn run_batcher(
+    queue: &RequestQueue,
+    cell: &ModelCell,
+    rt: &Runtime,
+    telemetry: &ServeTelemetry,
+    max_batch_rows: usize,
+    linger: Duration,
+) {
+    let max_batch_rows = max_batch_rows.max(1);
+    while let Some(first) = queue.pop_wait() {
+        let mut batch = Vec::with_capacity(8);
+        let mut rows_total = first.n_rows;
+        batch.push(first);
+        if linger > Duration::ZERO {
+            // micro-batching window: give concurrent arrivals a chance
+            // to coalesce into this scan
+            let deadline = Instant::now() + linger;
+            while rows_total < max_batch_rows {
+                match queue.pop_until(deadline) {
+                    Some(job) => {
+                        rows_total += job.n_rows;
+                        batch.push(job);
+                    }
+                    None => break,
+                }
+            }
+        } else {
+            // pure drain: take whatever is already waiting
+            while rows_total < max_batch_rows {
+                match queue.try_pop() {
+                    Some(job) => {
+                        rows_total += job.n_rows;
+                        batch.push(job);
+                    }
+                    None => break,
+                }
+            }
+        }
+        execute_batch(batch, cell, rt, telemetry);
+    }
+}
+
+/// Run one coalesced batch: snapshot the model, peel off jobs whose
+/// dimension does not match it (typed `dim_mismatch` replies), scan the
+/// rest as one concatenated slice, scatter labels in arrival order.
+fn execute_batch(
+    batch: Vec<PredictJob>,
+    cell: &ModelCell,
+    rt: &Runtime,
+    telemetry: &ServeTelemetry,
+) {
+    // one snapshot per batch: a reload landing mid-batch affects the
+    // *next* batch; this one finishes on the generation it started with
+    let model = cell.current();
+    let d = model.d();
+    let mut jobs = Vec::with_capacity(batch.len());
+    for job in batch {
+        if job.d == d {
+            jobs.push(job);
+        } else {
+            let _ = job.reply.send(Err(ProtoError::new(
+                code::DIM_MISMATCH,
+                format!("model expects d={d}, rows have d={}", job.d),
+            )));
+        }
+    }
+    if jobs.is_empty() {
+        return;
+    }
+    let rows_total: usize = jobs.iter().map(|j| j.n_rows).sum();
+    let labels = if jobs.len() == 1 {
+        model.predict_rows(rt, &jobs[0].rows)
+    } else {
+        let mut all = Vec::with_capacity(rows_total * d);
+        for job in &jobs {
+            all.extend_from_slice(&job.rows);
+        }
+        model.predict_rows(rt, &all)
+    };
+    match labels {
+        Ok(labels) => {
+            telemetry.batch_done(jobs.len() as u64, rows_total as u64);
+            let mut lo = 0;
+            for job in &jobs {
+                // send failures mean the client hung up — nothing to do
+                let _ = job.reply.send(Ok(labels[lo..lo + job.n_rows].to_vec()));
+                lo += job.n_rows;
+            }
+        }
+        Err(e) => {
+            // dims were validated above, so this is exceptional; every
+            // waiter still gets a typed reply rather than a hang
+            for job in &jobs {
+                let _ = job.reply.send(Err(ProtoError::new(
+                    code::MODEL_ERROR,
+                    format!("batched scan failed: {e}"),
+                )));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+    use crate::model::Kmeans;
+
+    fn job(rows: Vec<f64>, d: usize) -> (PredictJob, mpsc::Receiver<Result<Vec<u32>, ProtoError>>) {
+        let (tx, rx) = mpsc::channel();
+        let n_rows = rows.len() / d;
+        (
+            PredictJob {
+                rows,
+                n_rows,
+                d,
+                reply: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn queue_enforces_depth_and_close() {
+        let q = RequestQueue::new(2);
+        let (j1, _r1) = job(vec![0.0], 1);
+        let (j2, _r2) = job(vec![1.0], 1);
+        let (j3, _r3) = job(vec![2.0], 1);
+        assert!(q.push(j1).is_ok());
+        assert!(q.push(j2).is_ok());
+        assert!(matches!(q.push(j3), Err(PushRefused::Full)));
+        // closing refuses new work but keeps what is queued
+        q.close();
+        let (j4, _r4) = job(vec![3.0], 1);
+        assert!(matches!(q.push(j4), Err(PushRefused::Closed)));
+        assert!(q.pop_wait().is_some());
+        assert!(q.pop_wait().is_some());
+        assert!(q.pop_wait().is_none());
+    }
+
+    #[test]
+    fn batcher_coalesces_and_scatters_in_arrival_order() {
+        let rt = Runtime::new(2);
+        let ds = blobs(200, 2, 4, 0.05, 3);
+        let model = Kmeans::new(4).seed(1).fit(&rt, &ds).unwrap();
+        let queries = blobs(24, 2, 4, 0.1, 9);
+        let want = model.predict(&rt, &queries).unwrap();
+        let cell = ModelCell::new(model);
+        let tel = ServeTelemetry::default();
+        let q = RequestQueue::new(64);
+        // enqueue 3 uneven jobs covering the query set, then close so
+        // run_batcher drains and exits
+        let d = queries.d();
+        let mut receivers = Vec::new();
+        for (lo, len) in [(0usize, 5usize), (5, 1), (6, 18)] {
+            let (j, rx) = job(queries.raw()[lo * d..(lo + len) * d].to_vec(), d);
+            q.push(j).map_err(|_| "push").unwrap();
+            receivers.push((lo, len, rx));
+        }
+        q.close();
+        run_batcher(&q, &cell, &rt, &tel, 1024, Duration::ZERO);
+        for (lo, len, rx) in receivers {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(got.as_slice(), &want[lo..lo + len], "job at {lo}");
+        }
+        let s = tel.snapshot();
+        assert_eq!(s.batches, 1, "all three jobs coalesced into one scan");
+        assert_eq!(s.coalesced_batches, 1);
+        assert_eq!(s.batched_rows, 24);
+    }
+
+    #[test]
+    fn max_batch_rows_splits_scans_without_changing_answers() {
+        let rt = Runtime::serial();
+        let ds = blobs(150, 3, 3, 0.1, 5);
+        let model = Kmeans::new(3).seed(2).fit(&rt, &ds).unwrap();
+        let queries = blobs(12, 3, 3, 0.2, 6);
+        let want = model.predict(&rt, &queries).unwrap();
+        let cell = ModelCell::new(model);
+        let tel = ServeTelemetry::default();
+        let q = RequestQueue::new(64);
+        let d = queries.d();
+        let mut receivers = Vec::new();
+        for i in 0..12 {
+            let (j, rx) = job(queries.raw()[i * d..(i + 1) * d].to_vec(), d);
+            q.push(j).map_err(|_| "push").unwrap();
+            receivers.push(rx);
+        }
+        q.close();
+        // cap of 4 rows → 12 single-row jobs make exactly 3 scans
+        run_batcher(&q, &cell, &rt, &tel, 4, Duration::ZERO);
+        for (i, rx) in receivers.iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), vec![want[i]], "row {i}");
+        }
+        assert_eq!(tel.snapshot().batches, 3);
+    }
+
+    #[test]
+    fn dimension_mismatch_gets_typed_reply_and_spares_the_batch() {
+        let rt = Runtime::serial();
+        let ds = blobs(100, 2, 3, 0.1, 7);
+        let model = Kmeans::new(3).seed(1).fit(&rt, &ds).unwrap();
+        let want = model.predict_rows(&rt, &[0.5, 0.5]).unwrap();
+        let cell = ModelCell::new(model);
+        let tel = ServeTelemetry::default();
+        let q = RequestQueue::new(8);
+        let (good, rx_good) = job(vec![0.5, 0.5], 2);
+        let (bad, rx_bad) = job(vec![1.0, 2.0, 3.0], 3);
+        q.push(good).map_err(|_| "push").unwrap();
+        q.push(bad).map_err(|_| "push").unwrap();
+        q.close();
+        run_batcher(&q, &cell, &rt, &tel, 1024, Duration::ZERO);
+        assert_eq!(rx_good.recv().unwrap().unwrap(), want);
+        let err = rx_bad.recv().unwrap().unwrap_err();
+        assert_eq!(err.code, code::DIM_MISMATCH);
+    }
+}

@@ -1,0 +1,169 @@
+//! A minimal client for the serve wire protocol: one TCP connection,
+//! synchronous line-at-a-time request/reply, plus builders that format
+//! each op with the crate's shortest-roundtrip float writer (so query
+//! rows reach the server **bit-identical** — the wire is lossless).
+//!
+//! The tests, the throughput bench, and `examples/serving.rs` all
+//! drive the server through this one client, and embedders can too:
+//!
+//! ```no_run
+//! use eakm::serve::client::{self, Client};
+//!
+//! let mut c = Client::connect("127.0.0.1:4999").unwrap();
+//! let reply = c.call(&client::predict_request(&[0.1, 0.2, 0.3, 0.4], 2)).unwrap();
+//! let labels = reply.get("labels").unwrap();
+//! # let _ = labels;
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::error::{EakmError, Result};
+use crate::json::Json;
+
+/// A blocking connection to a serve endpoint.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    /// Connect with `TCP_NODELAY` and a 60-second read timeout (a hung
+    /// server surfaces as an error, never an indefinite block; tune
+    /// with [`set_read_timeout`](Client::set_read_timeout)).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(60)))?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    /// Adjust the reply-read timeout (`None` blocks indefinitely).
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Send one request line (the newline terminator is appended).
+    /// Multiple embedded `\n`-separated requests pipeline: the server
+    /// answers each, in order, via successive [`recv`](Client::recv)s.
+    pub fn send(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read the next reply line; `Ok(None)` once the server closed the
+    /// connection.
+    pub fn recv(&mut self) -> Result<Option<Json>> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Ok(None);
+        }
+        Ok(Some(Json::parse(line.trim_end())?))
+    }
+
+    /// One synchronous round-trip: [`send`](Client::send) then
+    /// [`recv`](Client::recv), erroring if the server closed instead of
+    /// replying.
+    pub fn call(&mut self, line: &str) -> Result<Json> {
+        self.send(line)?;
+        self.recv()?.ok_or_else(|| {
+            EakmError::Data("server closed the connection before replying".into())
+        })
+    }
+}
+
+/// `{"op":"predict","rows":[[…],…]}` for row-major `rows` of dimension
+/// `d`. Panics when `rows` is not a whole number of rows (caller bug).
+pub fn predict_request(rows: &[f64], d: usize) -> String {
+    assert!(d > 0 && rows.len() % d == 0, "rows must be n×d row-major");
+    Json::obj()
+        .field("op", "predict")
+        .field(
+            "rows",
+            Json::Arr(
+                rows.chunks_exact(d)
+                    .map(|row| Json::Arr(row.iter().map(|&v| Json::Num(v)).collect()))
+                    .collect(),
+            ),
+        )
+        .to_string()
+}
+
+/// `{"op":"nearest","point":[…]}`
+pub fn nearest_request(point: &[f64]) -> String {
+    Json::obj()
+        .field("op", "nearest")
+        .field(
+            "point",
+            Json::Arr(point.iter().map(|&v| Json::Num(v)).collect()),
+        )
+        .to_string()
+}
+
+/// `{"op":"stats"}`
+pub fn stats_request() -> String {
+    r#"{"op":"stats"}"#.to_string()
+}
+
+/// `{"op":"reload","model":PATH}`
+pub fn reload_request(path: &str) -> String {
+    Json::obj()
+        .field("op", "reload")
+        .field("model", path)
+        .to_string()
+}
+
+/// `{"op":"shutdown"}`
+pub fn shutdown_request() -> String {
+    r#"{"op":"shutdown"}"#.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::ParseLimits;
+    use crate::serve::proto::{parse_request, Request};
+
+    #[test]
+    fn builders_roundtrip_through_the_server_parser() {
+        let net = ParseLimits::network();
+        let vals = [0.1, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE];
+        match parse_request(&predict_request(&vals, 2), &net).unwrap() {
+            Request::Predict { rows, n_rows, d } => {
+                assert_eq!((n_rows, d), (2, 2));
+                let bits = |xs: &[f64]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&rows), bits(&vals));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse_request(&nearest_request(&[1.5, 2.5]), &net).unwrap(),
+            Request::Nearest { .. }
+        ));
+        assert!(matches!(
+            parse_request(&stats_request(), &net).unwrap(),
+            Request::Stats
+        ));
+        match parse_request(&reload_request("/tmp/m \"x\".json"), &net).unwrap() {
+            Request::Reload { path } => assert_eq!(path, "/tmp/m \"x\".json"),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse_request(&shutdown_request(), &net).unwrap(),
+            Request::Shutdown
+        ));
+    }
+
+    #[test]
+    #[should_panic(expected = "row-major")]
+    fn predict_request_rejects_ragged_slices() {
+        let _ = predict_request(&[1.0, 2.0, 3.0], 2);
+    }
+}

@@ -1,0 +1,82 @@
+//! `serve` — the long-lived model server: request batching,
+//! backpressure, and hot-reload on one [`Runtime`].
+//!
+//! The fit/predict service API (PR 2) answers queries *inside* a
+//! process; this subsystem answers them *over a socket*, for as long as
+//! the process lives. It is dependency-free: a blocking TCP server on
+//! `std::net` speaking the line-delimited JSON protocol of
+//! [`proto`], parsed by the crate's own hardened [`json`](crate::json)
+//! parser under network limits.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!  clients ──► N acceptor threads ──► bounded RequestQueue ──► micro-batcher ──► one Runtime
+//!                   │    ▲                  │ (overflow ⇒            │  one pool-sharded
+//!                   │    └── replies ◄──────┘  typed "overloaded")   │  predict_rows scan
+//!                   │                                                ▼
+//!                   └── nearest/stats/reload served inline ◄── Mutex<Arc<FittedModel>>
+//! ```
+//!
+//! * **Batching** — the micro-batcher drains the queue, concatenates
+//!   pending predict rows, and labels them with a *single*
+//!   [`FittedModel::predict_rows`](crate::model::FittedModel::predict_rows)
+//!   scan before scattering per-request replies in arrival order. The
+//!   paper's theme — amortise work across many queries — applied at
+//!   serving time: one dispatch, one blocked kernel pass, many
+//!   requests. Because every row's scan is independent, coalescing is
+//!   invisible: answers are **bit-identical** to direct `predict` at
+//!   any thread width and any batch boundary.
+//! * **Backpressure** — the queue is bounded
+//!   ([`queue_depth`](ServeConfig::queue_depth)); when it is full the
+//!   client gets the typed `overloaded` reply immediately instead of
+//!   the server queueing unboundedly. Connection concurrency is bounded
+//!   separately by the acceptor count, and since each connection has at
+//!   most one request in flight, the typed reject actively fires only
+//!   in strict-reject mode (`queue_depth < acceptors`); at the defaults
+//!   the acceptor budget + OS backlog bind first. Idle (and
+//!   byte-trickling) connections are reaped after
+//!   [`idle_timeout`](ServeConfig::idle_timeout).
+//! * **Hot reload** — the served model lives in a
+//!   [`ModelCell`](state::ModelCell) (`Mutex<Arc<FittedModel>>`); the
+//!   `reload` op swaps in a model JSON file with zero downtime —
+//!   batches in flight finish on the snapshot they took, later batches
+//!   see the new generation, and no request is ever dropped.
+//! * **Telemetry** — [`ServeStats`] counts requests, batched rows,
+//!   coalesced batches, queue-full rejects, and per-op latency sums;
+//!   the `stats` op returns it live and [`serve`] returns the final
+//!   snapshot for the clean-shutdown summary line.
+//!
+//! ## Example
+//!
+//! ```no_run
+//! use eakm::prelude::*;
+//! use eakm::serve::{serve, ServeConfig};
+//!
+//! let rt = Runtime::auto();
+//! let data = eakm::data::synth::blobs(10_000, 8, 50, 0.05, 42);
+//! let model = Kmeans::new(50).seed(7).fit(&rt, &data).unwrap();
+//! let cfg = ServeConfig {
+//!     addr: "127.0.0.1:4999".into(),
+//!     ..ServeConfig::default()
+//! };
+//! // blocks until a {"op":"shutdown"} request arrives
+//! let stats = serve(&rt, model, &cfg, |addr| println!("serving on {addr}")).unwrap();
+//! println!("{}", stats.summary_line(std::time::Duration::ZERO));
+//! ```
+//!
+//! The CLI front-end is `eakm serve --model model.json --addr …`, and
+//! [`client`] is a matching minimal Rust client (used by the tests,
+//! the throughput bench, and `examples/serving.rs`).
+//!
+//! [`Runtime`]: crate::runtime::Runtime
+
+mod batcher;
+pub mod client;
+pub mod proto;
+mod server;
+pub mod state;
+
+pub use client::Client;
+pub use server::{serve, ServeConfig};
+pub use state::{ServeStats, ServeTelemetry};

@@ -1,0 +1,371 @@
+//! The serve wire protocol: line-delimited JSON requests and replies.
+//!
+//! One request per line, one reply line per request, in order:
+//!
+//! ```text
+//! → {"op":"predict","rows":[[0.1,0.2],[0.3,0.4]]}
+//! ← {"ok":true,"labels":[3,7]}
+//! → {"op":"nearest","point":[0.1,0.2]}
+//! ← {"ok":true,"label":3,"distance":0.173}
+//! → {"op":"stats"}
+//! ← {"ok":true,"stats":{...}}
+//! → {"op":"reload","model":"/path/to/model.json"}
+//! ← {"ok":true,"generation":2,"k":100,"d":8}
+//! → {"op":"shutdown"}
+//! ← {"ok":true}
+//! ```
+//!
+//! Errors are typed: `{"ok":false,"error":CODE,"message":TEXT}` where
+//! `CODE` is one of the [`code`] constants — notably
+//! [`code::OVERLOADED`], the backpressure reply a client receives the
+//! moment the bounded request queue is full (instead of queueing
+//! unboundedly and timing out later).
+//!
+//! Request bytes are attacker-controlled, so parsing runs under
+//! [`ParseLimits::network`] (byte + nesting caps) on top of the
+//! server's own line-length cap; every reject is a typed reply, never a
+//! panic or an unbounded allocation.
+
+use crate::error::EakmError;
+use crate::json::{Json, ParseLimits};
+
+/// Stable error codes carried in the `"error"` field of failure
+/// replies.
+pub mod code {
+    /// The bounded request queue is full — retry later (backpressure).
+    pub const OVERLOADED: &str = "overloaded";
+    /// Malformed JSON, missing/ill-typed fields, or non-finite numbers.
+    pub const BAD_REQUEST: &str = "bad_request";
+    /// Unknown `"op"` value.
+    pub const UNKNOWN_OP: &str = "unknown_op";
+    /// Request line or document breaches a size/depth limit.
+    pub const PAYLOAD_TOO_LARGE: &str = "payload_too_large";
+    /// Query dimension does not match the served model.
+    pub const DIM_MISMATCH: &str = "dim_mismatch";
+    /// A `reload` could not load/validate the model file.
+    pub const MODEL_ERROR: &str = "model_error";
+    /// The server is shutting down and no longer accepts work.
+    pub const SHUTTING_DOWN: &str = "shutting_down";
+}
+
+/// A typed protocol-level failure: stable `code` plus a human message.
+#[derive(Clone, Debug)]
+pub struct ProtoError {
+    /// One of the [`code`] constants.
+    pub code: &'static str,
+    /// Human-readable detail for the `"message"` field.
+    pub message: String,
+}
+
+impl ProtoError {
+    /// Build an error reply value.
+    pub fn new(code: &'static str, message: impl Into<String>) -> ProtoError {
+        ProtoError {
+            code,
+            message: message.into(),
+        }
+    }
+}
+
+/// A parsed client request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Label `n_rows` query rows (row-major, `d` values each).
+    Predict {
+        /// Row-major `n_rows × d` query values.
+        rows: Vec<f64>,
+        /// Number of rows.
+        n_rows: usize,
+        /// Per-row dimension (validated rectangular at parse time).
+        d: usize,
+    },
+    /// Single-point nearest-centroid lookup.
+    Nearest {
+        /// The query point.
+        point: Vec<f64>,
+    },
+    /// Telemetry snapshot.
+    Stats,
+    /// Swap the served model for the one at `path` (server-side path).
+    Reload {
+        /// Model JSON path, as written by `FittedModel::save`.
+        path: String,
+    },
+    /// Stop the server after draining in-flight work.
+    Shutdown,
+}
+
+/// Parse one request line under the given limits. All failures are
+/// typed [`ProtoError`]s ready to serialise as a reply.
+pub fn parse_request(line: &str, limits: &ParseLimits) -> Result<Request, ProtoError> {
+    let doc = Json::parse_with_limits(line, limits).map_err(|e| match e {
+        EakmError::Limit(m) => ProtoError::new(code::PAYLOAD_TOO_LARGE, m),
+        e => ProtoError::new(code::BAD_REQUEST, e.to_string()),
+    })?;
+    let op = doc
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ProtoError::new(code::BAD_REQUEST, "missing string field \"op\""))?;
+    match op {
+        "predict" => parse_predict(&doc),
+        "nearest" => {
+            let point = doc
+                .get("point")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| ProtoError::new(code::BAD_REQUEST, "nearest needs \"point\""))?;
+            Ok(Request::Nearest {
+                point: finite_row(point, "point")?,
+            })
+        }
+        "stats" => Ok(Request::Stats),
+        "reload" => {
+            let path = doc
+                .get("model")
+                .and_then(Json::as_str)
+                .ok_or_else(|| ProtoError::new(code::BAD_REQUEST, "reload needs \"model\""))?;
+            Ok(Request::Reload {
+                path: path.to_string(),
+            })
+        }
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(ProtoError::new(
+            code::UNKNOWN_OP,
+            format!("unknown op {other:?}"),
+        )),
+    }
+}
+
+fn finite_row(cells: &[Json], what: &str) -> Result<Vec<f64>, ProtoError> {
+    if cells.is_empty() {
+        return Err(ProtoError::new(
+            code::BAD_REQUEST,
+            format!("{what} must not be empty"),
+        ));
+    }
+    let mut row = Vec::with_capacity(cells.len());
+    for cell in cells {
+        match cell.as_f64() {
+            Some(x) if x.is_finite() => row.push(x),
+            _ => {
+                return Err(ProtoError::new(
+                    code::BAD_REQUEST,
+                    format!("{what} must hold finite numbers"),
+                ))
+            }
+        }
+    }
+    Ok(row)
+}
+
+fn parse_predict(doc: &Json) -> Result<Request, ProtoError> {
+    let rows_json = doc
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ProtoError::new(code::BAD_REQUEST, "predict needs \"rows\""))?;
+    if rows_json.is_empty() {
+        return Err(ProtoError::new(
+            code::BAD_REQUEST,
+            "predict rows must not be empty",
+        ));
+    }
+    let mut rows = Vec::new();
+    let mut d = 0usize;
+    for (i, row_json) in rows_json.iter().enumerate() {
+        let cells = row_json.as_arr().ok_or_else(|| {
+            ProtoError::new(code::BAD_REQUEST, format!("row {i} is not an array"))
+        })?;
+        let row = finite_row(cells, "rows")?;
+        if i == 0 {
+            d = row.len();
+            rows.reserve(rows_json.len() * d);
+        } else if row.len() != d {
+            return Err(ProtoError::new(
+                code::BAD_REQUEST,
+                format!("row {i} has {} values, row 0 has {d}", row.len()),
+            ));
+        }
+        rows.extend(row);
+    }
+    Ok(Request::Predict {
+        n_rows: rows_json.len(),
+        rows,
+        d,
+    })
+}
+
+/// `{"ok":true,"labels":[…]}`
+pub fn reply_labels(labels: &[u32]) -> String {
+    Json::obj()
+        .field("ok", true)
+        .field(
+            "labels",
+            Json::Arr(labels.iter().map(|&l| Json::from(l as u64)).collect()),
+        )
+        .to_string()
+}
+
+/// `{"ok":true,"label":…,"distance":…}`
+pub fn reply_nearest(label: u32, distance: f64) -> String {
+    Json::obj()
+        .field("ok", true)
+        .field("label", label as u64)
+        .field("distance", distance)
+        .to_string()
+}
+
+/// `{"ok":true,"stats":{…}}`
+pub fn reply_stats(stats: Json) -> String {
+    Json::obj().field("ok", true).field("stats", stats).to_string()
+}
+
+/// `{"ok":true,"generation":…,"k":…,"d":…}` — a successful reload.
+pub fn reply_reloaded(generation: u64, k: usize, d: usize) -> String {
+    Json::obj()
+        .field("ok", true)
+        .field("generation", generation)
+        .field("k", k)
+        .field("d", d)
+        .to_string()
+}
+
+/// `{"ok":true}` — shutdown acknowledged.
+pub fn reply_ok() -> String {
+    Json::obj().field("ok", true).to_string()
+}
+
+/// `{"ok":false,"error":…,"message":…}`
+pub fn reply_error(err: &ProtoError) -> String {
+    Json::obj()
+        .field("ok", false)
+        .field("error", err.code)
+        .field("message", err.message.as_str())
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn net() -> ParseLimits {
+        ParseLimits::network()
+    }
+
+    #[test]
+    fn parses_every_op() {
+        match parse_request(r#"{"op":"predict","rows":[[1,2],[3,4],[5,6]]}"#, &net()) {
+            Ok(Request::Predict { rows, n_rows, d }) => {
+                assert_eq!(n_rows, 3);
+                assert_eq!(d, 2);
+                assert_eq!(rows, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_request(r#"{"op":"nearest","point":[0.5,-1.5]}"#, &net()) {
+            Ok(Request::Nearest { point }) => assert_eq!(point, vec![0.5, -1.5]),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse_request(r#"{"op":"stats"}"#, &net()),
+            Ok(Request::Stats)
+        ));
+        match parse_request(r#"{"op":"reload","model":"/tmp/m.json"}"#, &net()) {
+            Ok(Request::Reload { path }) => assert_eq!(path, "/tmp/m.json"),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            parse_request(r#"{"op":"shutdown"}"#, &net()),
+            Ok(Request::Shutdown)
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_requests_with_typed_codes() {
+        let cases: &[(&str, &str)] = &[
+            ("not json at all", code::BAD_REQUEST),
+            (r#"{"rows":[[1]]}"#, code::BAD_REQUEST),
+            (r#"{"op":"frobnicate"}"#, code::UNKNOWN_OP),
+            (r#"{"op":"predict"}"#, code::BAD_REQUEST),
+            (r#"{"op":"predict","rows":[]}"#, code::BAD_REQUEST),
+            (r#"{"op":"predict","rows":[[1,2],[3]]}"#, code::BAD_REQUEST),
+            (r#"{"op":"predict","rows":[[1,null]]}"#, code::BAD_REQUEST),
+            (r#"{"op":"predict","rows":[1,2]}"#, code::BAD_REQUEST),
+            (r#"{"op":"nearest","point":[]}"#, code::BAD_REQUEST),
+            (r#"{"op":"nearest"}"#, code::BAD_REQUEST),
+            (r#"{"op":"reload"}"#, code::BAD_REQUEST),
+        ];
+        for (line, want) in cases {
+            match parse_request(line, &net()) {
+                Err(e) => assert_eq!(e.code, *want, "{line}"),
+                Ok(r) => panic!("accepted {line:?} as {r:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn hostile_payloads_get_limit_codes() {
+        // nesting bomb → typed payload_too_large, not a stack overflow
+        let deep = format!("{}1{}", "[".repeat(1000), "]".repeat(1000));
+        let err = parse_request(&deep, &net()).unwrap_err();
+        assert_eq!(err.code, code::PAYLOAD_TOO_LARGE);
+        // oversized document → same code, rejected before parsing
+        let tiny = ParseLimits {
+            max_bytes: 32,
+            max_depth: 64,
+        };
+        let err = parse_request(r#"{"op":"predict","rows":[[1,2,3,4]]}"#, &tiny).unwrap_err();
+        assert_eq!(err.code, code::PAYLOAD_TOO_LARGE);
+    }
+
+    #[test]
+    fn replies_are_single_json_lines() {
+        assert_eq!(reply_labels(&[1, 2, 3]), r#"{"ok":true,"labels":[1,2,3]}"#);
+        assert_eq!(
+            reply_nearest(4, 0.5),
+            r#"{"ok":true,"label":4,"distance":0.5}"#
+        );
+        assert_eq!(reply_ok(), r#"{"ok":true}"#);
+        assert_eq!(
+            reply_reloaded(2, 10, 4),
+            r#"{"ok":true,"generation":2,"k":10,"d":4}"#
+        );
+        let err = reply_error(&ProtoError::new(code::OVERLOADED, "queue full"));
+        assert_eq!(
+            err,
+            r#"{"ok":false,"error":"overloaded","message":"queue full"}"#
+        );
+        // every reply round-trips through the parser (clients can rely
+        // on it) and never contains a raw newline
+        for reply in [
+            reply_labels(&[0]),
+            reply_nearest(0, 1.0),
+            reply_stats(Json::obj().field("requests", 1u64)),
+            reply_ok(),
+            err,
+        ] {
+            assert!(!reply.contains('\n'));
+            assert!(Json::parse(&reply).is_ok());
+        }
+    }
+
+    #[test]
+    fn predict_row_values_roundtrip_bit_identically() {
+        // the client writes rows with the shortest-roundtrip formatter;
+        // the server must read back the same bits (serving equals local
+        // predict only if the wire is lossless)
+        let vals = [0.1, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE, 123456789.125];
+        let line = Json::obj()
+            .field("op", "predict")
+            .field(
+                "rows",
+                Json::Arr(vec![Json::Arr(vals.iter().map(|&v| Json::Num(v)).collect())]),
+            )
+            .to_string();
+        match parse_request(&line, &net()).unwrap() {
+            Request::Predict { rows, .. } => {
+                let bits = |xs: &[f64]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&rows), bits(&vals));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

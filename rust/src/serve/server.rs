@@ -1,0 +1,450 @@
+//! The blocking TCP server: N acceptor threads, one micro-batcher, one
+//! shared [`Runtime`], one hot-reloadable [`ModelCell`].
+//!
+//! [`serve`] binds, spawns everything on scoped threads, and blocks the
+//! caller until a `shutdown` op arrives; it then drains queued work and
+//! returns the final [`ServeStats`]. Each acceptor owns one connection
+//! at a time and handles its requests strictly in order (reply before
+//! the next read), so per-connection responses always map to requests
+//! in arrival order; across connections the batcher's arrival-order
+//! scatter gives the same guarantee. Two backpressure layers keep the
+//! server's memory bounded under any traffic: connection concurrency
+//! beyond the acceptor count waits in the OS listen backlog, and work
+//! beyond the queue depth is refused with the typed `overloaded`
+//! reply. Because every connection carries at most one in-flight
+//! request, the second layer actively fires only when
+//! `queue_depth < acceptors` — see
+//! [`ServeConfig::queue_depth`]. Idle connections are reaped after
+//! [`ServeConfig::idle_timeout`], byte-trickling included, so parked
+//! peers cannot pin the acceptor budget.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::json::ParseLimits;
+use crate::model::FittedModel;
+use crate::runtime::Runtime;
+use crate::serve::batcher::{run_batcher, PredictJob, PushRefused, RequestQueue};
+use crate::serve::proto::{self, code, ProtoError, Request};
+use crate::serve::state::{ModelCell, Op, ServeStats, ServeTelemetry};
+
+/// How often a connection read wakes up to re-check the shutdown flag.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+/// Knobs for [`serve`]. `Default` binds an ephemeral loopback port with
+/// serving-friendly queue/batch sizes.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address (`host:port`; port 0 picks an ephemeral port).
+    pub addr: String,
+    /// Acceptor threads — the concurrent-connection budget.
+    pub acceptors: usize,
+    /// Bounded predict-queue depth; pushes beyond it get the typed
+    /// `overloaded` reply instead of queueing unboundedly.
+    ///
+    /// Each connection has at most one request in flight, so queue
+    /// occupancy never exceeds the acceptor count: the typed reject
+    /// only actually fires when `queue_depth < acceptors`
+    /// (strict-reject mode). At the defaults the first backpressure
+    /// layer — the acceptor budget plus the OS listen backlog — binds
+    /// instead, and this depth is a hard safety bound, not an active
+    /// limiter.
+    pub queue_depth: usize,
+    /// Coalescing cap: a batch stops pulling jobs once it holds this
+    /// many rows (a single larger request still runs alone).
+    pub max_batch_rows: usize,
+    /// Micro-batching window: after taking a batch's first job, keep
+    /// pulling arrivals until this much time passes or the row cap is
+    /// hit. Zero (the default) drains only what is already queued.
+    pub linger: Duration,
+    /// Per-line byte cap on the socket (requests longer than this get
+    /// the typed `payload_too_large` reply and the connection closes).
+    pub max_line_bytes: usize,
+    /// Close a connection after this long without a complete request.
+    /// Acceptors are the concurrency budget, so idle peers must not be
+    /// allowed to pin them forever (`Duration::ZERO` disables the
+    /// timeout — only for trusted peers).
+    pub idle_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            acceptors: 4,
+            queue_depth: 256,
+            max_batch_rows: 4096,
+            linger: Duration::ZERO,
+            max_line_bytes: 4 << 20,
+            idle_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Everything a connection handler needs, borrowed for the scope of one
+/// [`serve`] call.
+struct Ctx<'a> {
+    cfg: &'a ServeConfig,
+    limits: ParseLimits,
+    threads: usize,
+    started: Instant,
+    shutdown: &'a AtomicBool,
+    queue: &'a RequestQueue,
+    cell: &'a ModelCell,
+    telemetry: &'a ServeTelemetry,
+}
+
+/// Run the server until a `shutdown` op: bind `cfg.addr`, call
+/// `on_ready` with the bound address (ephemeral ports become known
+/// here), serve, drain, and return the final telemetry snapshot.
+///
+/// The caller's thread blocks for the server's lifetime; tests and
+/// embedders run `serve` on a thread of its own and talk to it over the
+/// socket.
+pub fn serve<F: FnOnce(SocketAddr)>(
+    rt: &Runtime,
+    model: FittedModel,
+    cfg: &ServeConfig,
+    on_ready: F,
+) -> Result<ServeStats> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    // the acceptors poll a nonblocking listener so shutdown can never
+    // strand a thread inside a blocking accept()
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let acceptors = cfg.acceptors.max(1);
+    let shutdown = AtomicBool::new(false);
+    let queue = RequestQueue::new(cfg.queue_depth.max(1));
+    let cell = ModelCell::new(model);
+    let telemetry = ServeTelemetry::default();
+    let ctx = Ctx {
+        cfg,
+        limits: ParseLimits {
+            max_bytes: cfg.max_line_bytes,
+            ..ParseLimits::network()
+        },
+        threads: rt.threads(),
+        started: Instant::now(),
+        shutdown: &shutdown,
+        queue: &queue,
+        cell: &cell,
+        telemetry: &telemetry,
+    };
+    on_ready(addr);
+    std::thread::scope(|scope| {
+        scope.spawn(|| {
+            run_batcher(
+                &queue,
+                &cell,
+                rt,
+                &telemetry,
+                cfg.max_batch_rows,
+                cfg.linger,
+            );
+        });
+        for _ in 0..acceptors {
+            scope.spawn(|| accept_loop(&listener, &ctx));
+        }
+    });
+    Ok(telemetry.snapshot())
+}
+
+/// How long an idle acceptor sleeps between polls of the nonblocking
+/// listener.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+fn accept_loop(listener: &TcpListener, ctx: &Ctx<'_>) {
+    loop {
+        if ctx.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // accepted sockets may inherit the listener's
+                // nonblocking mode on some platforms — undo it so the
+                // per-connection read timeout governs instead
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                handle_conn(stream, ctx);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    }
+}
+
+/// Flip the shutdown flag once and close the queue: new work is
+/// refused, queued work drains, acceptors notice on their next poll.
+fn initiate_shutdown(ctx: &Ctx<'_>) {
+    if ctx.shutdown.swap(true, Ordering::AcqRel) {
+        return;
+    }
+    ctx.queue.close();
+}
+
+/// One framed line off the socket.
+enum Line {
+    /// A complete request line (without the terminator).
+    Msg(String),
+    /// Read timeout — poll the shutdown flag and retry.
+    Idle,
+    /// Peer closed (or errored); drop the connection.
+    Eof,
+    /// Line exceeded the byte cap; reply typed and drop the connection
+    /// (framing is lost once a line is abandoned mid-way).
+    TooLong,
+    /// Line bytes were not UTF-8; reply typed, framing stays intact.
+    BadUtf8,
+}
+
+/// Incremental, capped line framing over a blocking socket with a read
+/// timeout. Bytes after a newline are kept for the next call, so
+/// pipelined clients work.
+struct LineReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    cap: usize,
+}
+
+impl LineReader {
+    /// Read until a complete line, the byte cap, EOF, or `deadline`.
+    /// The deadline is checked after every read, so a peer trickling
+    /// bytes without ever completing a line still returns `Idle` (and
+    /// gets reaped by the idle timeout) instead of pinning the thread —
+    /// and the caller caps it at `READ_POLL`, so the connection loop
+    /// re-checks the shutdown flag on that cadence no matter what the
+    /// peer sends.
+    fn next_line(&mut self, deadline: Instant) -> Line {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                // the cap is on the line, not the buffer: a too-long
+                // line is rejected even when its terminator has already
+                // arrived
+                if pos > self.cap {
+                    return Line::TooLong;
+                }
+                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
+                line.pop(); // the \n
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                return match String::from_utf8(line) {
+                    Ok(s) => Line::Msg(s),
+                    Err(_) => Line::BadUtf8,
+                };
+            }
+            if self.buf.len() > self.cap {
+                return Line::TooLong;
+            }
+            if Instant::now() >= deadline {
+                return Line::Idle;
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Line::Eof,
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Line::Idle
+                }
+                Err(_) => return Line::Eof,
+            }
+        }
+    }
+}
+
+/// Write one reply line; `false` means the peer is gone.
+fn send_line(stream: &mut TcpStream, reply: &str) -> bool {
+    let mut framed = String::with_capacity(reply.len() + 1);
+    framed.push_str(reply);
+    framed.push('\n');
+    stream.write_all(framed.as_bytes()).is_ok() && stream.flush().is_ok()
+}
+
+fn handle_conn(stream: TcpStream, ctx: &Ctx<'_>) {
+    if stream.set_read_timeout(Some(READ_POLL)).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = LineReader {
+        stream: read_half,
+        buf: Vec::new(),
+        cap: ctx.cfg.max_line_bytes,
+    };
+    let mut write_half = stream;
+    let mut last_activity = Instant::now();
+    loop {
+        if ctx.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        // every pass is capped at READ_POLL so the shutdown flag above
+        // is re-checked on that cadence even while bytes keep arriving;
+        // the idle deadline (when enabled) can only tighten it
+        let poll_cap = Instant::now() + READ_POLL;
+        let deadline = if ctx.cfg.idle_timeout > Duration::ZERO {
+            poll_cap.min(last_activity + ctx.cfg.idle_timeout)
+        } else {
+            poll_cap
+        };
+        match reader.next_line(deadline) {
+            Line::Idle => {
+                // idle peers must not pin an acceptor (the concurrency
+                // budget) forever
+                if ctx.cfg.idle_timeout > Duration::ZERO
+                    && last_activity.elapsed() >= ctx.cfg.idle_timeout
+                {
+                    return;
+                }
+                continue;
+            }
+            Line::Eof => return,
+            Line::TooLong => {
+                ctx.telemetry.bad_request();
+                let err = ProtoError::new(
+                    code::PAYLOAD_TOO_LARGE,
+                    format!("request line exceeds {} bytes", ctx.cfg.max_line_bytes),
+                );
+                let _ = send_line(&mut write_half, &proto::reply_error(&err));
+                return;
+            }
+            Line::BadUtf8 => {
+                last_activity = Instant::now();
+                ctx.telemetry.bad_request();
+                let err = ProtoError::new(code::BAD_REQUEST, "request line is not utf-8");
+                if !send_line(&mut write_half, &proto::reply_error(&err)) {
+                    return;
+                }
+            }
+            Line::Msg(line) => {
+                last_activity = Instant::now();
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match proto::parse_request(&line, &ctx.limits) {
+                    Err(e) => {
+                        ctx.telemetry.bad_request();
+                        if !send_line(&mut write_half, &proto::reply_error(&e)) {
+                            return;
+                        }
+                    }
+                    Ok(req) => {
+                        ctx.telemetry.request();
+                        if !dispatch(req, &mut write_half, ctx) {
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Serve one parsed request; `false` ends the connection.
+fn dispatch(req: Request, w: &mut TcpStream, ctx: &Ctx<'_>) -> bool {
+    let t0 = Instant::now();
+    match req {
+        Request::Predict { rows, n_rows, d } => {
+            let (tx, rx) = mpsc::channel();
+            let job = PredictJob {
+                rows,
+                n_rows,
+                d,
+                reply: tx,
+            };
+            match ctx.queue.push(job) {
+                Err(PushRefused::Full) => {
+                    ctx.telemetry.queue_full_reject();
+                    let err = ProtoError::new(
+                        code::OVERLOADED,
+                        format!(
+                            "request queue is full ({} pending) — retry later",
+                            ctx.cfg.queue_depth
+                        ),
+                    );
+                    send_line(w, &proto::reply_error(&err))
+                }
+                Err(PushRefused::Closed) => {
+                    let err = ProtoError::new(code::SHUTTING_DOWN, "server is shutting down");
+                    send_line(w, &proto::reply_error(&err))
+                }
+                Ok(()) => match rx.recv() {
+                    Ok(Ok(labels)) => {
+                        ctx.telemetry.op_done(Op::Predict, t0.elapsed());
+                        send_line(w, &proto::reply_labels(&labels))
+                    }
+                    Ok(Err(e)) => {
+                        ctx.telemetry.op_error();
+                        send_line(w, &proto::reply_error(&e))
+                    }
+                    Err(_) => {
+                        let err =
+                            ProtoError::new(code::SHUTTING_DOWN, "batcher stopped before reply");
+                        send_line(w, &proto::reply_error(&err))
+                    }
+                },
+            }
+        }
+        Request::Nearest { point } => {
+            let model = ctx.cell.current();
+            if point.len() != model.d() {
+                ctx.telemetry.op_error();
+                let err = ProtoError::new(
+                    code::DIM_MISMATCH,
+                    format!("model expects d={}, point has d={}", model.d(), point.len()),
+                );
+                return send_line(w, &proto::reply_error(&err));
+            }
+            let (label, distance) = model.nearest(&point);
+            ctx.telemetry.op_done(Op::Nearest, t0.elapsed());
+            send_line(w, &proto::reply_nearest(label, distance))
+        }
+        Request::Stats => {
+            let model = ctx.cell.current();
+            let stats = ctx
+                .telemetry
+                .snapshot()
+                .to_json()
+                .field("generation", ctx.cell.generation())
+                .field("model_k", model.k())
+                .field("model_d", model.d())
+                .field("algorithm", model.algorithm())
+                .field("threads", ctx.threads)
+                .field("queue_depth", ctx.cfg.queue_depth)
+                .field("max_batch_rows", ctx.cfg.max_batch_rows)
+                .field("uptime_secs", ctx.started.elapsed().as_secs_f64());
+            ctx.telemetry.op_done(Op::Stats, t0.elapsed());
+            send_line(w, &proto::reply_stats(stats))
+        }
+        Request::Reload { path } => match FittedModel::load(Path::new(&path)) {
+            Ok(model) => {
+                let (k, d) = (model.k(), model.d());
+                let generation = ctx.cell.swap(model);
+                ctx.telemetry.op_done(Op::Reload, t0.elapsed());
+                send_line(w, &proto::reply_reloaded(generation, k, d))
+            }
+            Err(e) => {
+                ctx.telemetry.op_error();
+                let err = ProtoError::new(code::MODEL_ERROR, format!("reload {path:?}: {e}"));
+                send_line(w, &proto::reply_error(&err))
+            }
+        },
+        Request::Shutdown => {
+            let _ = send_line(w, &proto::reply_ok());
+            initiate_shutdown(ctx);
+            false
+        }
+    }
+}

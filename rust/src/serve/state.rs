@@ -1,0 +1,294 @@
+//! Shared server state: the hot-reloadable model cell and the serving
+//! telemetry counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::json::Json;
+use crate::model::FittedModel;
+
+/// An `ArcSwap`-style cell holding the currently served model.
+///
+/// Readers take a cheap [`current`](ModelCell::current) snapshot (one
+/// mutex-guarded `Arc` clone — the lock is held for the clone only,
+/// never across a scan) and keep serving from that snapshot even if a
+/// [`swap`](ModelCell::swap) lands mid-batch: reload is zero-downtime
+/// and in-flight requests are never dropped, they just finish on
+/// whichever model generation their batch picked up.
+pub struct ModelCell {
+    inner: Mutex<Arc<FittedModel>>,
+    generation: AtomicU64,
+}
+
+impl ModelCell {
+    /// Wrap the initial model (generation 1).
+    pub fn new(model: FittedModel) -> ModelCell {
+        ModelCell {
+            inner: Mutex::new(Arc::new(model)),
+            generation: AtomicU64::new(1),
+        }
+    }
+
+    /// Snapshot the current model.
+    pub fn current(&self) -> Arc<FittedModel> {
+        self.inner.lock().expect("model cell poisoned").clone()
+    }
+
+    /// Swap in a new model, returning the new generation number. Old
+    /// snapshots stay valid until their holders drop them.
+    pub fn swap(&self, model: FittedModel) -> u64 {
+        let mut guard = self.inner.lock().expect("model cell poisoned");
+        *guard = Arc::new(model);
+        self.generation.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Generation counter: 1 for the startup model, +1 per swap.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+}
+
+/// Which op a latency observation belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Batched predict.
+    Predict,
+    /// Single-point nearest.
+    Nearest,
+    /// Stats snapshot.
+    Stats,
+    /// Model reload.
+    Reload,
+}
+
+/// Lock-free serving counters, shared by acceptors and the batcher.
+/// All monotone; [`snapshot`](ServeTelemetry::snapshot) renders a
+/// consistent-enough view for the `stats` op and the shutdown summary.
+#[derive(Default)]
+pub struct ServeTelemetry {
+    requests: AtomicU64,
+    predicts: AtomicU64,
+    nearests: AtomicU64,
+    stats_ops: AtomicU64,
+    reloads: AtomicU64,
+    bad_requests: AtomicU64,
+    op_errors: AtomicU64,
+    batched_rows: AtomicU64,
+    batches: AtomicU64,
+    coalesced_batches: AtomicU64,
+    queue_full_rejects: AtomicU64,
+    predict_micros: AtomicU64,
+    nearest_micros: AtomicU64,
+    stats_micros: AtomicU64,
+    reload_micros: AtomicU64,
+}
+
+impl ServeTelemetry {
+    /// Count one parsed request of any op.
+    pub fn request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one unparseable/invalid request line.
+    pub fn bad_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.bad_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one completed op and add its wall latency to that op's sum.
+    pub fn op_done(&self, op: Op, latency: Duration) {
+        let micros = latency.as_micros().min(u64::MAX as u128) as u64;
+        let (count, sum) = match op {
+            Op::Predict => (&self.predicts, &self.predict_micros),
+            Op::Nearest => (&self.nearests, &self.nearest_micros),
+            Op::Stats => (&self.stats_ops, &self.stats_micros),
+            Op::Reload => (&self.reloads, &self.reload_micros),
+        };
+        count.fetch_add(1, Ordering::Relaxed);
+        sum.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    /// Count one well-formed request that failed during execution
+    /// (dimension mismatch, reload/model failure) — visible in stats so
+    /// a misbehaving client cannot hide in the completed-op counts.
+    pub fn op_error(&self) {
+        self.op_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request rejected because the bounded queue was full.
+    pub fn queue_full_reject(&self) {
+        self.queue_full_rejects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one executed batch of `rows` total rows covering
+    /// `requests` coalesced predict requests.
+    pub fn batch_done(&self, requests: u64, rows: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_rows.fetch_add(rows, Ordering::Relaxed);
+        if requests > 1 {
+            self.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot every counter.
+    pub fn snapshot(&self) -> ServeStats {
+        let secs = |a: &AtomicU64| a.load(Ordering::Relaxed) as f64 / 1e6;
+        ServeStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            predicts: self.predicts.load(Ordering::Relaxed),
+            nearests: self.nearests.load(Ordering::Relaxed),
+            stats_ops: self.stats_ops.load(Ordering::Relaxed),
+            reloads: self.reloads.load(Ordering::Relaxed),
+            bad_requests: self.bad_requests.load(Ordering::Relaxed),
+            op_errors: self.op_errors.load(Ordering::Relaxed),
+            batched_rows: self.batched_rows.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
+            queue_full_rejects: self.queue_full_rejects.load(Ordering::Relaxed),
+            predict_secs: secs(&self.predict_micros),
+            nearest_secs: secs(&self.nearest_micros),
+            stats_secs: secs(&self.stats_micros),
+            reload_secs: secs(&self.reload_micros),
+        }
+    }
+}
+
+/// A point-in-time view of [`ServeTelemetry`] — the payload of the
+/// `stats` op and of the clean-shutdown summary.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// Request lines received (including invalid ones).
+    pub requests: u64,
+    /// Completed predict ops.
+    pub predicts: u64,
+    /// Completed nearest ops.
+    pub nearests: u64,
+    /// Completed stats ops.
+    pub stats_ops: u64,
+    /// Completed (successful) reload ops.
+    pub reloads: u64,
+    /// Request lines rejected as malformed/over-limit.
+    pub bad_requests: u64,
+    /// Well-formed requests that failed during execution (dimension
+    /// mismatch, reload failure).
+    pub op_errors: u64,
+    /// Query rows that went through the micro-batcher.
+    pub batched_rows: u64,
+    /// Pool scans the batcher executed.
+    pub batches: u64,
+    /// Batches that coalesced more than one request into one scan.
+    pub coalesced_batches: u64,
+    /// Predict requests bounced with the typed `overloaded` reply.
+    pub queue_full_rejects: u64,
+    /// Summed predict latency (enqueue → reply handed back), seconds.
+    pub predict_secs: f64,
+    /// Summed nearest latency, seconds.
+    pub nearest_secs: f64,
+    /// Summed stats latency, seconds.
+    pub stats_secs: f64,
+    /// Summed reload latency, seconds.
+    pub reload_secs: f64,
+}
+
+impl ServeStats {
+    /// JSON rendering used by the `stats` op.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .field("requests", self.requests)
+            .field("predicts", self.predicts)
+            .field("nearests", self.nearests)
+            .field("stats_ops", self.stats_ops)
+            .field("reloads", self.reloads)
+            .field("bad_requests", self.bad_requests)
+            .field("op_errors", self.op_errors)
+            .field("batched_rows", self.batched_rows)
+            .field("batches", self.batches)
+            .field("coalesced_batches", self.coalesced_batches)
+            .field("queue_full_rejects", self.queue_full_rejects)
+            .field("predict_secs", self.predict_secs)
+            .field("nearest_secs", self.nearest_secs)
+            .field("stats_secs", self.stats_secs)
+            .field("reload_secs", self.reload_secs)
+    }
+
+    /// The one-line clean-shutdown summary.
+    pub fn summary_line(&self, uptime: Duration) -> String {
+        format!(
+            "serve: {} requests ({} predict / {} nearest / {} stats / {} reload, {} bad, \
+             {} failed) — {} batches ({} coalesced, {} rows), {} overloaded, \
+             predict {:.3}s total, up {:.1}s",
+            self.requests,
+            self.predicts,
+            self.nearests,
+            self.stats_ops,
+            self.reloads,
+            self.bad_requests,
+            self.op_errors,
+            self.batches,
+            self.coalesced_batches,
+            self.batched_rows,
+            self.queue_full_rejects,
+            self.predict_secs,
+            uptime.as_secs_f64(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+    use crate::model::Kmeans;
+    use crate::runtime::Runtime;
+
+    fn tiny_model(k: usize, seed: u64) -> FittedModel {
+        let rt = Runtime::serial();
+        let ds = blobs(120, 3, k, 0.1, seed);
+        Kmeans::new(k).seed(seed).fit(&rt, &ds).unwrap()
+    }
+
+    #[test]
+    fn swap_bumps_generation_and_keeps_old_snapshots_alive() {
+        let cell = ModelCell::new(tiny_model(3, 1));
+        assert_eq!(cell.generation(), 1);
+        let old = cell.current();
+        assert_eq!(old.k(), 3);
+        let g = cell.swap(tiny_model(5, 2));
+        assert_eq!(g, 2);
+        assert_eq!(cell.generation(), 2);
+        // an in-flight holder still sees the old model, bit for bit
+        assert_eq!(old.k(), 3);
+        assert_eq!(cell.current().k(), 5);
+    }
+
+    #[test]
+    fn telemetry_counts_and_snapshots() {
+        let tel = ServeTelemetry::default();
+        tel.request();
+        tel.op_done(Op::Predict, Duration::from_micros(1500));
+        tel.request();
+        tel.op_done(Op::Nearest, Duration::from_micros(500));
+        tel.bad_request();
+        tel.queue_full_reject();
+        tel.op_error();
+        tel.batch_done(3, 12);
+        tel.batch_done(1, 4);
+        let s = tel.snapshot();
+        assert_eq!(s.requests, 3);
+        assert_eq!(s.predicts, 1);
+        assert_eq!(s.nearests, 1);
+        assert_eq!(s.bad_requests, 1);
+        assert_eq!(s.op_errors, 1);
+        assert_eq!(s.queue_full_rejects, 1);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.coalesced_batches, 1);
+        assert_eq!(s.batched_rows, 16);
+        assert!((s.predict_secs - 0.0015).abs() < 1e-9);
+        let json = s.to_json().to_string();
+        assert!(json.contains("\"batched_rows\":16"), "{json}");
+        let line = s.summary_line(Duration::from_secs(2));
+        assert!(line.contains("3 requests"), "{line}");
+        assert!(line.contains("1 overloaded"), "{line}");
+    }
+}

@@ -1,0 +1,401 @@
+//! End-to-end serving tests over a real loopback socket: bit-identity
+//! with direct `predict`, arrival-order responses under concurrent
+//! clients, typed `overloaded` backpressure, zero-downtime reload,
+//! hostile-input handling, and idle-connection reaping.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use eakm::data::synth::blobs;
+use eakm::json::Json;
+use eakm::prelude::*;
+use eakm::serve::client::{self, Client};
+use eakm::serve::proto::code;
+
+fn fit_model(n: usize, d: usize, k: usize, seed: u64) -> FittedModel {
+    let rt = Runtime::serial();
+    let ds = blobs(n, d, k, 0.1, seed);
+    Kmeans::new(k).seed(seed).max_iters(20).fit(&rt, &ds).unwrap()
+}
+
+/// Run a server on its own thread + runtime; returns the bound address
+/// and the handle that yields the final `ServeStats` after shutdown.
+fn start(
+    model: FittedModel,
+    threads: usize,
+    cfg: ServeConfig,
+) -> (SocketAddr, thread::JoinHandle<ServeStats>) {
+    let (tx, rx) = mpsc::channel();
+    let handle = thread::spawn(move || {
+        let rt = Runtime::new(threads);
+        eakm::serve::serve(&rt, model, &cfg, |addr| tx.send(addr).unwrap()).unwrap()
+    });
+    (rx.recv().unwrap(), handle)
+}
+
+fn connect(addr: SocketAddr) -> Client {
+    Client::connect(addr).unwrap()
+}
+
+fn labels_of(reply: &Json) -> Vec<u32> {
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+    reply
+        .get("labels")
+        .and_then(Json::as_arr)
+        .expect("labels")
+        .iter()
+        .map(|l| l.as_usize().unwrap() as u32)
+        .collect()
+}
+
+fn error_code(reply: &Json) -> Option<String> {
+    if reply.get("ok").and_then(Json::as_bool) == Some(false) {
+        reply
+            .get("error")
+            .and_then(Json::as_str)
+            .map(|s| s.to_string())
+    } else {
+        None
+    }
+}
+
+fn shutdown(addr: SocketAddr) {
+    let reply = connect(addr).call(&client::shutdown_request()).unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+}
+
+fn tmpfile(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("eakm-serve-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn socket_predictions_are_bit_identical_to_direct_predict() {
+    let model = fit_model(400, 6, 8, 11);
+    let queries = blobs(60, 6, 8, 0.2, 12);
+    for threads in [1usize, 4] {
+        let rt = Runtime::new(threads);
+        let want = model.predict(&rt, &queries).unwrap();
+        let (addr, handle) = start(model.clone(), threads, ServeConfig::default());
+        let mut c = connect(addr);
+        let mut got = Vec::new();
+        // uneven request sizes: batching boundaries must not matter
+        let d = queries.d();
+        let mut lo = 0;
+        for len in [7usize, 1, 20, 32] {
+            let rows = &queries.raw()[lo * d..(lo + len) * d];
+            got.extend(labels_of(&c.call(&client::predict_request(rows, d)).unwrap()));
+            lo += len;
+        }
+        assert_eq!(got, want, "threads={threads}");
+        drop(c);
+        shutdown(addr);
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.predicts, 4, "threads={threads}");
+        assert_eq!(stats.batched_rows, 60, "threads={threads}");
+    }
+}
+
+#[test]
+fn concurrent_clients_get_their_own_answers_in_order() {
+    let model = fit_model(300, 4, 5, 21);
+    let queries = blobs(100, 4, 5, 0.25, 22);
+    let rt = Runtime::new(2);
+    let want = model.predict(&rt, &queries).unwrap();
+    // a small linger forces concurrent single-row requests to coalesce
+    // into shared scans — the scatter must still route every client its
+    // own labels, in its own send order
+    let cfg = ServeConfig {
+        linger: Duration::from_millis(3),
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = start(model, 2, cfg);
+    let d = queries.d();
+    let clients = 4;
+    let per_client = 25;
+    let mut workers = Vec::new();
+    for c in 0..clients {
+        let raw = queries.raw().to_vec();
+        let expect: Vec<u32> = (0..per_client)
+            .map(|i| want[c * per_client + i])
+            .collect();
+        workers.push(thread::spawn(move || {
+            let mut cl = connect(addr);
+            for (i, &want_label) in expect.iter().enumerate() {
+                let gi = c * per_client + i;
+                let rows = &raw[gi * d..(gi + 1) * d];
+                let labels = labels_of(&cl.call(&client::predict_request(rows, d)).unwrap());
+                assert_eq!(labels, vec![want_label], "client {c}, request {i}");
+            }
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    shutdown(addr);
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.predicts, (clients * per_client) as u64);
+    assert_eq!(stats.batched_rows, (clients * per_client) as u64);
+    // with 4 clients inside a 3ms window, at least one scan must have
+    // coalesced several requests
+    assert!(
+        stats.coalesced_batches > 0,
+        "expected some coalescing: {stats:?}"
+    );
+    assert!(stats.batches < stats.predicts, "{stats:?}");
+}
+
+#[test]
+fn queue_overflow_returns_typed_overloaded_reply() {
+    // a deliberately slow scan (k=400, d=32, 200-row requests) with a
+    // depth-1 queue and no coalescing: while the batcher scans one
+    // request, concurrent arrivals overflow and must get the typed
+    // `overloaded` reply immediately
+    let model = {
+        let rt = Runtime::serial();
+        let ds = blobs(800, 32, 400, 0.1, 31);
+        // two rounds are plenty — this model only needs to be *big*
+        Kmeans::new(400).seed(31).max_iters(2).fit(&rt, &ds).unwrap()
+    };
+    let queries = blobs(200, 32, 400, 0.3, 32);
+    let cfg = ServeConfig {
+        queue_depth: 1,
+        max_batch_rows: 1,
+        acceptors: 4,
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = start(model, 1, cfg);
+    let d = queries.d();
+    let line = client::predict_request(queries.raw(), d);
+    let mut saw_overloaded = false;
+    let mut saw_ok = false;
+    for _round in 0..20 {
+        let mut workers = Vec::new();
+        for _ in 0..4 {
+            let line = line.clone();
+            workers.push(thread::spawn(move || {
+                let reply = connect(addr).call(&line).unwrap();
+                match error_code(&reply) {
+                    Some(code) => {
+                        assert_eq!(code, code::OVERLOADED, "{reply}");
+                        true
+                    }
+                    None => {
+                        assert_eq!(labels_of(&reply).len(), 200);
+                        false
+                    }
+                }
+            }));
+        }
+        for w in workers {
+            if w.join().unwrap() {
+                saw_overloaded = true;
+            } else {
+                saw_ok = true;
+            }
+        }
+        if saw_overloaded && saw_ok {
+            break;
+        }
+    }
+    assert!(saw_overloaded, "queue never overflowed");
+    assert!(saw_ok, "no request was ever served");
+    shutdown(addr);
+    let stats = handle.join().unwrap();
+    assert!(stats.queue_full_rejects > 0, "{stats:?}");
+}
+
+#[test]
+fn reload_swaps_models_without_dropping_in_flight_requests() {
+    let model_a = fit_model(200, 4, 3, 41);
+    let model_b = fit_model(260, 4, 6, 42);
+    let path_b = tmpfile("model-b.json");
+    model_b.save(&path_b).unwrap();
+    let cfg = ServeConfig {
+        linger: Duration::from_millis(5),
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = start(model_a, 2, cfg);
+    // three clients hammer predicts while the reload lands mid-stream;
+    // every single request must get an ok reply — none dropped
+    let queries = blobs(30, 4, 6, 0.2, 43);
+    let d = queries.d();
+    let mut workers = Vec::new();
+    for c in 0..3usize {
+        let raw = queries.raw().to_vec();
+        workers.push(thread::spawn(move || {
+            let mut cl = connect(addr);
+            for i in 0..30 {
+                let gi = (c * 7 + i) % 30;
+                let rows = &raw[gi * d..(gi + 1) * d];
+                let labels = labels_of(&cl.call(&client::predict_request(rows, d)).unwrap());
+                assert_eq!(labels.len(), 1, "client {c}, request {i}");
+            }
+        }));
+    }
+    thread::sleep(Duration::from_millis(20));
+    let mut admin = connect(addr);
+    // a bad path is a typed error and must not disturb serving
+    let bad = admin.call(&client::reload_request("/nonexistent.json")).unwrap();
+    assert_eq!(error_code(&bad).as_deref(), Some(code::MODEL_ERROR));
+    // the real reload swaps generations with zero downtime
+    let reply = admin
+        .call(&client::reload_request(path_b.to_str().unwrap()))
+        .unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+    assert_eq!(reply.get("generation").and_then(Json::as_usize), Some(2));
+    assert_eq!(reply.get("k").and_then(Json::as_usize), Some(6));
+    for w in workers {
+        w.join().unwrap();
+    }
+    // post-reload requests are served by model B
+    let stats_reply = admin.call(&client::stats_request()).unwrap();
+    let stats_json = stats_reply.get("stats").expect("stats payload");
+    assert_eq!(stats_json.get("generation").and_then(Json::as_usize), Some(2));
+    assert_eq!(stats_json.get("model_k").and_then(Json::as_usize), Some(6));
+    assert_eq!(stats_json.get("op_errors").and_then(Json::as_usize), Some(1));
+    let post = labels_of(
+        &admin
+            .call(&client::predict_request(&queries.raw()[..d], d))
+            .unwrap(),
+    );
+    let rt = Runtime::serial();
+    let direct = model_b.predict_rows(&rt, &queries.raw()[..d]).unwrap();
+    assert_eq!(post, direct, "post-reload serving must match model B");
+    shutdown(addr);
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.predicts, 3 * 30 + 1);
+    assert_eq!(stats.reloads, 1);
+    assert_eq!(stats.op_errors, 1); // the bad reload path
+}
+
+#[test]
+fn hostile_input_gets_typed_replies_and_the_server_survives() {
+    let model = fit_model(150, 3, 4, 51);
+    let cfg = ServeConfig {
+        max_line_bytes: 4096,
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = start(model, 1, cfg);
+    let mut c = connect(addr);
+    let cases: &[(String, &str)] = &[
+        ("this is not json".to_string(), code::BAD_REQUEST),
+        (r#"{"op":"frobnicate"}"#.to_string(), code::UNKNOWN_OP),
+        (
+            r#"{"op":"predict","rows":[[1,2],[3]]}"#.to_string(),
+            code::BAD_REQUEST,
+        ),
+        (
+            // nesting bomb: typed reject, not a stack overflow
+            format!("{}1{}", "[".repeat(200), "]".repeat(200)),
+            code::PAYLOAD_TOO_LARGE,
+        ),
+        (
+            r#"{"op":"nearest","point":[1.0]}"#.to_string(),
+            code::DIM_MISMATCH,
+        ),
+    ];
+    for (line, want) in cases {
+        let reply = c.call(line).unwrap();
+        assert_eq!(error_code(&reply).as_deref(), Some(*want), "{line:?}");
+    }
+    // an over-long line gets a typed reply and then the connection is
+    // closed (framing is gone), but the server itself keeps serving
+    let huge = format!(r#"{{"op":"predict","rows":[[{}]]}}"#, "1,".repeat(4000) + "1");
+    let reply = c.call(&huge).unwrap();
+    assert_eq!(
+        error_code(&reply).as_deref(),
+        Some(code::PAYLOAD_TOO_LARGE),
+        "{reply}"
+    );
+    assert!(
+        c.recv().unwrap().is_none(),
+        "connection must close after overlong line"
+    );
+    let stats_reply = connect(addr).call(&client::stats_request()).unwrap();
+    assert_eq!(stats_reply.get("ok").and_then(Json::as_bool), Some(true));
+    shutdown(addr);
+    let stats = handle.join().unwrap();
+    assert!(stats.bad_requests >= 5, "{stats:?}");
+}
+
+#[test]
+fn idle_connections_are_reaped_so_acceptors_stay_available() {
+    let model = fit_model(150, 3, 4, 71);
+    // two acceptors, short idle timeout: two parked connections must
+    // not deny service to a third client for long
+    let cfg = ServeConfig {
+        acceptors: 2,
+        idle_timeout: Duration::from_millis(300),
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = start(model, 1, cfg);
+    let mut idle_a = connect(addr);
+    let mut idle_b = connect(addr);
+    // the server reaps both idlers (read returns closed-stream)…
+    assert!(idle_a.recv().unwrap().is_none(), "idle connection must be closed");
+    assert!(idle_b.recv().unwrap().is_none(), "idle connection must be closed");
+    // …a byte-trickling peer (bytes but never a complete request) is
+    // reaped just the same — activity without a newline must not reset
+    // the idle clock…
+    let mut trickler = TcpStream::connect(addr).unwrap();
+    let mut reaped = false;
+    for _ in 0..60 {
+        if trickler.write_all(b"x").is_err() {
+            reaped = true;
+            break;
+        }
+        thread::sleep(Duration::from_millis(50));
+    }
+    assert!(reaped, "byte-trickling connection must be reaped");
+    // …and a fresh client is served normally
+    let reply = connect(addr).call(&client::stats_request()).unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+    shutdown(addr);
+    handle.join().unwrap();
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_order() {
+    let model = fit_model(200, 3, 4, 61);
+    let queries = blobs(6, 3, 4, 0.2, 62);
+    let rt = Runtime::serial();
+    let want = model.predict(&rt, &queries).unwrap();
+    let (addr, handle) = start(model, 1, ServeConfig::default());
+    let d = queries.d();
+    let mut c = connect(addr);
+    // two requests in one send: the line framer must keep the second
+    // request buffered and answer both, in order
+    let two = format!(
+        "{}\n{}",
+        client::predict_request(&queries.raw()[..3 * d], d),
+        client::predict_request(&queries.raw()[3 * d..], d),
+    );
+    c.send(&two).unwrap();
+    let first = labels_of(&c.recv().unwrap().unwrap());
+    let second = labels_of(&c.recv().unwrap().unwrap());
+    assert_eq!(first, want[..3].to_vec());
+    assert_eq!(second, want[3..].to_vec());
+    // nearest agrees with the model's own nearest()
+    let (want_label, want_dist) = {
+        let m = fit_model(200, 3, 4, 61);
+        m.nearest(&queries.raw()[..d])
+    };
+    let reply = c.call(&client::nearest_request(&queries.raw()[..d])).unwrap();
+    assert_eq!(
+        reply.get("label").and_then(Json::as_usize),
+        Some(want_label as usize)
+    );
+    let dist = reply.get("distance").and_then(Json::as_f64).unwrap();
+    assert_eq!(dist.to_bits(), want_dist.to_bits(), "wire must be lossless");
+    shutdown(addr);
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.predicts, 2);
+    assert_eq!(stats.nearests, 1);
+    assert_eq!(stats.requests, 4); // 2 predict + nearest + shutdown
+}
