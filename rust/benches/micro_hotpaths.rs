@@ -1,19 +1,32 @@
 //! Micro-benchmarks of the hot paths (the §Perf profiling surface):
-//! single distances, the blocked batch scan, cc-matrix build, annuli
-//! build, and a full exp-ns round. Medians over repeated runs.
+//! single distances, the register-blocked gemm, the blocked batch scan,
+//! the fused distance+argmin scan, f64-vs-f32 label streaming,
+//! cc-matrix/annuli builds, and a full exp-ns round. Medians over
+//! repeated runs, reported with per-kernel GB/s and GFLOP/s so the CI
+//! diff gate can hold a throughput *floor* per kernel (see
+//! `.github/bench-baselines/`).
+//!
+//! The `median[ms]` header deliberately avoids the `[s]`/`secs`/`[µs`
+//! timing markers: medians at smoke scale are noise, so only the
+//! throughput columns are diffed. Row labels carry the workload shape
+//! but never the rep count or scaled n, keeping row keys stable across
+//! `EAKM_SCALE` values.
 
 mod common;
 
 use std::time::Instant;
 
+use eakm::algorithms::common::blocked_argmin_scan;
 use eakm::algorithms::Algorithm;
-use eakm::bench_support::TextTable;
+use eakm::bench_support::{env_scale, TextTable, DEFAULT_SCALE};
 use eakm::config::RunConfig;
 use eakm::coordinator::annuli::Annuli;
 use eakm::coordinator::ccdist::CcData;
 use eakm::coordinator::Engine;
 use eakm::data::synth::blobs;
-use eakm::linalg::{sqdist, sqdist_batch_block, sqnorms_rows};
+use eakm::data::{DataSource, DatasetF32};
+use eakm::json::Json;
+use eakm::linalg::{dot, gemm, sqdist, sqdist_argmin_block, sqdist_batch_block, sqnorms_rows};
 use eakm::metrics::Counters;
 
 fn time_median(reps: usize, mut f: impl FnMut()) -> f64 {
@@ -25,17 +38,38 @@ fn time_median(reps: usize, mut f: impl FnMut()) -> f64 {
         })
         .collect();
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    times[reps / 2]
+    times[reps / 2].max(1e-9)
+}
+
+/// Scale an iteration count with `EAKM_SCALE` (floor 1).
+fn scaled(base: usize) -> usize {
+    ((base as f64 * env_scale() / DEFAULT_SCALE) as usize).max(1)
+}
+
+/// One table row: label, median ms, and derived GB/s / GFLOP/s.
+fn throughput_row(t: &mut TextTable, label: String, med: f64, bytes: f64, flops: f64) {
+    t.row(vec![
+        label,
+        format!("{:.3}", med * 1e3),
+        format!("{:.3}", bytes / med / 1e9),
+        format!("{:.3}", flops / med / 1e9),
+    ]);
+}
+
+/// A row whose throughput is not meaningful (composite builds/rounds).
+fn timing_only_row(t: &mut TextTable, label: String, med: f64) {
+    t.row(vec![label, format!("{:.3}", med * 1e3), "-".into(), "-".into()]);
 }
 
 fn main() {
-    let mut t = TextTable::new("micro hot paths (medians)").headers(&["bench", "median", "throughput"]);
+    let mut t =
+        TextTable::new("micro hot paths (medians)").headers(&["kernel", "median[ms]", "GB/s", "GFLOP/s"]);
 
-    // 1) single sqdist at representative dims
+    // 1) single sqdist at representative dims (lane loop + tail)
     for d in [4usize, 32, 128, 784] {
         let a: Vec<f64> = (0..d).map(|i| (i as f64).sin()).collect();
         let b: Vec<f64> = (0..d).map(|i| (i as f64).cos()).collect();
-        let reps = 2_000_000 / d.max(1);
+        let reps = (scaled(2_000_000) / d.max(1)).max(1);
         let med = time_median(9, || {
             let mut acc = 0.0;
             for _ in 0..reps {
@@ -43,34 +77,143 @@ fn main() {
             }
             std::hint::black_box(acc);
         });
-        let flops = (reps * 3 * d) as f64 / med;
-        t.row(vec![
-            format!("sqdist d={d} x{reps}"),
-            format!("{:.3} ms", med * 1e3),
-            format!("{:.2} GFLOP/s", flops / 1e9),
-        ]);
+        let bytes = (reps * 2 * d * 8) as f64;
+        let flops = (reps * 3 * d) as f64;
+        throughput_row(&mut t, format!("sqdist d={d}"), med, bytes, flops);
     }
 
-    // 2) blocked batch scan (the sta/init hot path)
+    // 2) dot at the widest paper dim
+    {
+        let d = 784usize;
+        let a: Vec<f64> = (0..d).map(|i| (i as f64).sin()).collect();
+        let b: Vec<f64> = (0..d).map(|i| (i as f64).cos()).collect();
+        let reps = (scaled(2_000_000) / d).max(1);
+        let med = time_median(9, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += dot(std::hint::black_box(&a), std::hint::black_box(&b));
+            }
+            std::hint::black_box(acc);
+        });
+        throughput_row(
+            &mut t,
+            format!("dot d={d}"),
+            med,
+            (reps * 2 * d * 8) as f64,
+            (reps * 2 * d) as f64,
+        );
+    }
+
+    // 3) row norms (the sidecar / ingest kernel)
+    {
+        let (n, d) = (4096usize, 64usize);
+        let ds = blobs(n, d, 8, 0.2, 9);
+        let med = time_median(9, || {
+            std::hint::black_box(sqnorms_rows(ds.raw(), d));
+        });
+        throughput_row(
+            &mut t,
+            format!("sqnorms-rows {n}x{d}"),
+            med,
+            ((n * d + n) * 8) as f64,
+            (2 * n * d) as f64,
+        );
+    }
+
+    // 4) register-blocked gemm, batch scan, and fused scan on the same
+    //    shapes — the three layers of the assignment hot path
     for (m, d, k) in [(4096usize, 8usize, 100usize), (1024, 64, 200), (256, 784, 100)] {
         let ds = blobs(m, d, 8, 0.2, 1);
         let cs = blobs(k, d, 8, 0.2, 2);
         let xn = ds.sqnorms().to_vec();
         let cn = sqnorms_rows(cs.raw(), d);
+
         let mut out = vec![0.0; m * k];
+        let med = time_median(7, || {
+            gemm::matmul_nt(ds.raw(), cs.raw(), &mut out, m, d, k);
+            std::hint::black_box(&out);
+        });
+        let gemm_bytes = ((m * d + k * d + m * k) * 8) as f64;
+        throughput_row(
+            &mut t,
+            format!("matmul {m}x{d}x{k}"),
+            med,
+            gemm_bytes,
+            (2 * m * d * k) as f64,
+        );
+
         let med = time_median(7, || {
             sqdist_batch_block(ds.raw(), &xn, cs.raw(), &cn, d, &mut out);
             std::hint::black_box(&out);
         });
-        let flops = (2.0 * m as f64 * k as f64 * d as f64) / med;
-        t.row(vec![
+        throughput_row(
+            &mut t,
             format!("batch {m}x{d}x{k}"),
-            format!("{:.3} ms", med * 1e3),
-            format!("{:.2} GFLOP/s", flops / 1e9),
-        ]);
+            med,
+            gemm_bytes,
+            (2 * m * d * k + 3 * m * k) as f64,
+        );
+
+        let mut labels = vec![0u32; m];
+        let mut dists = vec![0.0f64; m];
+        let med = time_median(7, || {
+            sqdist_argmin_block(ds.raw(), &xn, cs.raw(), &cn, d, &mut labels, &mut dists);
+            std::hint::black_box(&labels);
+        });
+        // the fused scan never materialises the m×k matrix: traffic is
+        // the operands plus one label + one distance per row
+        let fused_bytes = ((m * d + k * d) * 8 + m * 12) as f64;
+        throughput_row(
+            &mut t,
+            format!("fused-argmin {m}x{d}x{k}"),
+            med,
+            fused_bytes,
+            (2 * m * d * k + 3 * m * k) as f64,
+        );
     }
 
-    // 3) cc matrix + annuli build (exp's per-round overhead)
+    // 5) label streaming through the block-lease seam at both storage
+    //    widths — GB/s is computed from *stored* bytes, so the f32 row
+    //    directly shows the bandwidth halving
+    {
+        let (d, k) = (32usize, 64usize);
+        let n = scaled(200_000);
+        let ds = blobs(n, d, k, 0.2, 11);
+        let fs = DatasetF32::from_dataset(&ds).unwrap();
+        let cs = blobs(k, d, k, 0.2, 12);
+        let cn = sqnorms_rows(cs.raw(), d);
+        let mut labels = vec![0u32; n];
+        let mut dists = vec![0.0f64; n];
+        let flops = (2 * n * d * k + 3 * n * k) as f64;
+
+        let med = time_median(5, || {
+            let mut cur = DataSource::open(&ds, 0, n);
+            blocked_argmin_scan(cur.as_mut(), cs.raw(), &cn, 0, n, &mut labels, &mut dists);
+            std::hint::black_box(&labels);
+        });
+        throughput_row(
+            &mut t,
+            format!("stream-labels f64 d={d} k={k}"),
+            med,
+            (n * (d * 8 + 8)) as f64,
+            flops,
+        );
+
+        let med = time_median(5, || {
+            let mut cur = DataSource::open(&fs, 0, n);
+            blocked_argmin_scan(cur.as_mut(), cs.raw(), &cn, 0, n, &mut labels, &mut dists);
+            std::hint::black_box(&labels);
+        });
+        throughput_row(
+            &mut t,
+            format!("stream-labels f32 d={d} k={k}"),
+            med,
+            (n * (d * 4 + 8)) as f64,
+            flops,
+        );
+    }
+
+    // 6) cc matrix + annuli build (exp's per-round overhead)
     for k in [100usize, 1000] {
         let cs = blobs(k, 8, 16, 0.3, 3);
         let med_cc = time_median(7, || {
@@ -84,31 +227,28 @@ fn main() {
             reuse.build_into_fast(&cc);
             std::hint::black_box(&reuse);
         });
-        t.row(vec![
-            format!("cc build k={k}"),
-            format!("{:.3} ms", med_cc * 1e3),
-            String::new(),
-        ]);
-        t.row(vec![
-            format!("annuli build k={k}"),
-            format!("{:.3} ms", med_ann * 1e3),
-            String::new(),
-        ]);
+        timing_only_row(&mut t, format!("cc build k={k}"), med_cc);
+        timing_only_row(&mut t, format!("annuli build k={k}"), med_ann);
     }
 
-    // 4) one full exp-ns round on a mid-size workload
-    let ds = blobs(50_000, 4, 64, 0.1, 4);
-    let cfg = RunConfig::new(Algorithm::ExpNs, 64).seed(0);
-    let mut engine = Engine::new(&ds, &cfg).unwrap();
-    engine.step(); // warm
-    let med = time_median(5, || {
-        engine.step();
-    });
-    t.row(vec![
-        "exp-ns round n=50k k=64 d=4".into(),
-        format!("{:.3} ms", med * 1e3),
-        format!("{:.1} Msamples/s", 50.0 / (med * 1e3)),
-    ]);
+    // 7) one full exp-ns round on a mid-size workload
+    {
+        let n = scaled(50_000);
+        let ds = blobs(n, 4, 64, 0.1, 4);
+        let cfg = RunConfig::new(Algorithm::ExpNs, 64).seed(0);
+        let mut engine = Engine::new(&ds, &cfg).unwrap();
+        engine.step(); // warm
+        let med = time_median(5, || {
+            engine.step();
+        });
+        timing_only_row(&mut t, "exp-ns round k=64 d=4".into(), med);
+    }
 
     common::emit("micro_hotpaths.txt", &t.render());
+    common::emit_json(
+        "BENCH_micro.json",
+        &Json::obj()
+            .field("bench", "micro_hotpaths")
+            .field("kernels", t.to_json()),
+    );
 }

@@ -20,7 +20,7 @@ use crate::coordinator::history::HistoryRound;
 use crate::coordinator::sorted_norms::SortedNorms;
 use crate::data::source::BlockCursor;
 use crate::data::DataSource;
-use crate::linalg::{argmin, sqdist_batch_block, Top2};
+use crate::linalg::{sqdist_argmin_block, sqdist_batch_block, Top2};
 use crate::metrics::Counters;
 use crate::runtime::pool::{SharedSliceMut, WorkerPool};
 
@@ -193,6 +193,45 @@ pub fn blocked_scan(
     }
 }
 
+/// Fused labels+distances scan of rows `[lo, hi)` leased from `cur`:
+/// for each sample, the nearest centroid's index (first-lowest-index
+/// ties) and squared distance, written at `labels[i − lo]` /
+/// `dists_sq[i − lo]`. The blocked counterpart of [`blocked_scan`] for
+/// the label-only case — it runs
+/// [`sqdist_argmin_block`] per lease, so the `m×k` distance matrix is
+/// never materialised, and is bit-identical to `blocked_scan` +
+/// per-row argmin (the fused kernel shares the same panel micro-kernel
+/// and transform).
+pub fn blocked_argmin_scan(
+    cur: &mut dyn BlockCursor,
+    centroids: &[f64],
+    cnorms: &[f64],
+    lo: usize,
+    hi: usize,
+    labels: &mut [u32],
+    dists_sq: &mut [f64],
+) {
+    assert_eq!(labels.len(), hi - lo);
+    assert_eq!(dists_sq.len(), hi - lo);
+    let d = cur.d();
+    let mut start = lo;
+    while start < hi {
+        let m = INIT_BLOCK.min(hi - start);
+        let block = cur.lease(start, m);
+        let off = start - lo;
+        sqdist_argmin_block(
+            block.rows(),
+            block.sqnorms(),
+            centroids,
+            cnorms,
+            d,
+            &mut labels[off..off + m],
+            &mut dists_sq[off..off + m],
+        );
+        start += m;
+    }
+}
+
 /// Minimum rows per pool chunk in [`nearest_labels`].
 const LABEL_CHUNK: usize = 128;
 
@@ -222,9 +261,8 @@ pub fn nearest_labels(
         // chunks are disjoint sample ranges; element-wise writes only
         let out = unsafe { cells.range(lo, hi) };
         let mut cur = data.open(lo, hi - lo);
-        blocked_scan(cur.as_mut(), centroids, cnorms, lo, hi, |i, row| {
-            out[i] = argmin(row).expect("k ≥ 1") as u32;
-        });
+        let mut dists = vec![0.0; hi - lo];
+        blocked_argmin_scan(cur.as_mut(), centroids, cnorms, lo, hi, out, &mut dists);
     });
 }
 
@@ -346,6 +384,31 @@ mod tests {
             for (x, y) in b.iter().zip(s) {
                 assert!((x - y).abs() < 1e-9);
             }
+        }
+    }
+
+    #[test]
+    fn fused_argmin_scan_bit_identical_to_blocked_scan_plus_argmin() {
+        let ds = blobs(397, 6, 4, 0.2, 9); // not a multiple of INIT_BLOCK
+        let k = 67; // straddles the gemm panel width
+        let centroids: Vec<f64> = ds.raw()[..k * 6].to_vec();
+        let cnorms = crate::linalg::sqnorms_rows(&centroids, 6);
+        let (lo, hi) = (3, 397);
+        let mut want_labels = vec![0u32; hi - lo];
+        let mut want_dists = vec![0.0; hi - lo];
+        let mut cur = ds.open(lo, hi - lo);
+        blocked_scan(cur.as_mut(), &centroids, &cnorms, lo, hi, |i, row| {
+            let j = crate::linalg::argmin(row).unwrap();
+            want_labels[i] = j as u32;
+            want_dists[i] = row[j];
+        });
+        let mut labels = vec![u32::MAX; hi - lo];
+        let mut dists = vec![0.0; hi - lo];
+        let mut cur = ds.open(lo, hi - lo);
+        blocked_argmin_scan(cur.as_mut(), &centroids, &cnorms, lo, hi, &mut labels, &mut dists);
+        assert_eq!(labels, want_labels);
+        for (a, b) in dists.iter().zip(&want_dists) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 

@@ -95,31 +95,41 @@ pub fn check_bench_json(text: &str, bench_name: &str, tables: &[TableSpec]) -> R
     Ok(summary)
 }
 
-/// One row-level wall-time regression found by [`diff_bench_json`].
+/// One row-level regression found by [`diff_bench_json`] — a wall-time
+/// cell that grew past the threshold, or a throughput cell that fell
+/// below the baseline floor.
 #[derive(Clone, Debug)]
 pub struct DiffRegression {
     /// Table key + row label + column header, for the CI log.
     pub what: String,
-    /// Old and new wall seconds.
+    /// Old cell value (wall seconds, or GB/s / GFLOP/s / rows/s).
     pub old: f64,
-    /// New wall seconds.
+    /// New cell value, same unit as `old`.
     pub new: f64,
 }
 
-/// True when a column holds wall-time cells (the only thing a
-/// cross-commit diff can meaningfully gate on).
+/// True when a column holds wall-time cells (gated: higher is worse).
 fn is_timing_header(h: &str) -> bool {
     h.contains("[s]") || h.contains("secs") || h.contains("[µs")
 }
 
-/// Row key: every cell that is neither a timing column nor
-/// float-formatted (ratios, speedups, and wall cells carry a '.';
-/// labels, integer knobs like k/T, and booleans do not). Stable across
-/// runs of the same bench configuration.
+/// True when a column holds throughput cells (gated: *lower* is worse).
+/// Committed baselines put conservative floors here, so the gate only
+/// fires on order-of-magnitude collapses, not run-to-run jitter.
+fn is_throughput_header(h: &str) -> bool {
+    h.contains("GB/s") || h.contains("GFLOP/s") || h.contains("rows/s")
+}
+
+/// Row key: every cell that is neither a gated (timing/throughput)
+/// column nor float-formatted (ratios, speedups, and wall cells carry a
+/// '.'; labels, integer knobs like k/T, and booleans do not). Stable
+/// across runs of the same bench configuration — throughput columns are
+/// excluded by header, not by format, because their "-" markers would
+/// otherwise leak into the key.
 fn row_key(headers: &[String], cells: &[String]) -> String {
     let mut key = String::new();
     for (h, c) in headers.iter().zip(cells) {
-        if is_timing_header(h) || c.contains('.') {
+        if is_timing_header(h) || is_throughput_header(h) || c.contains('.') {
             continue;
         }
         key.push_str(c);
@@ -149,12 +159,19 @@ fn str_cells(row: &Json) -> Option<Vec<String>> {
 }
 
 /// Compare two `BENCH_*.json` artifacts row by row and report per-row
-/// wall-time deltas. Rows are matched within same-keyed tables by
-/// their non-timing, non-float cells (dataset, algorithm, k, T, …).
-/// Returns `(report_lines, regressions)`: a regression is a timing
-/// cell where `new > old × (1 + threshold)` **and** both sides are at
-/// least `min_wall` seconds (micro rows are pure noise). Rows present
-/// on only one side are reported but never gate.
+/// deltas for every gated cell. Rows are matched within same-keyed
+/// tables by their non-gated, non-float cells (dataset, algorithm, k,
+/// T, …). Returns `(report_lines, regressions)`:
+///
+/// * a **timing** cell regresses when `new > old × (1 + threshold)`
+///   **and** both sides are at least `min_wall` seconds (micro rows are
+///   pure noise);
+/// * a **throughput** cell (GB/s, GFLOP/s, rows/s) regresses when
+///   `old > new × (1 + threshold)` — the committed baseline is a
+///   *floor*, so only a drop below it gates; there is no `min_wall`
+///   analogue because a floor is already an absolute value.
+///
+/// Rows present on only one side are reported but never gate.
 pub fn diff_bench_json(
     old_text: &str,
     new_text: &str,
@@ -218,7 +235,9 @@ pub fn diff_bench_json(
                 continue;
             };
             for (c, h) in headers.iter().enumerate() {
-                if !is_timing_header(h) {
+                let timing = is_timing_header(h);
+                let throughput = is_throughput_header(h);
+                if !timing && !throughput {
                     continue;
                 }
                 let (Ok(old), Ok(new)) = (
@@ -229,12 +248,22 @@ pub fn diff_bench_json(
                 };
                 let delta = if old > 0.0 { new / old - 1.0 } else { 0.0 };
                 let what = format!("{key} [{}] {h}", new_cells.join(" "));
-                lines.push(format!(
-                    "{what}: {old:.4}s → {new:.4}s ({delta:+.1}%)",
-                    delta = delta * 100.0
-                ));
-                if new > old * (1.0 + threshold) && old >= min_wall && new >= min_wall {
-                    regressions.push(DiffRegression { what, old, new });
+                if timing {
+                    lines.push(format!(
+                        "{what}: {old:.4}s → {new:.4}s ({delta:+.1}%)",
+                        delta = delta * 100.0
+                    ));
+                    if new > old * (1.0 + threshold) && old >= min_wall && new >= min_wall {
+                        regressions.push(DiffRegression { what, old, new });
+                    }
+                } else {
+                    lines.push(format!(
+                        "{what}: {old:.3} → {new:.3} ({delta:+.1}%)",
+                        delta = delta * 100.0
+                    ));
+                    if old > new * (1.0 + threshold) {
+                        regressions.push(DiffRegression { what, old, new });
+                    }
                 }
             }
         }
@@ -347,6 +376,56 @@ mod tests {
         let (lines, regs) = diff_bench_json(ragged, ragged, 0.5, 0.05).unwrap();
         assert!(lines.iter().any(|l| l.contains("malformed")), "{lines:?}");
         assert!(regs.is_empty());
+    }
+
+    fn throughput_doc(rows: &[(&str, &str, &str)]) -> String {
+        let mut t = TextTable::new("T").headers(&["kernel", "median[ms]", "GB/s"]);
+        for (kernel, ms, gbs) in rows {
+            t.row(vec![kernel.to_string(), ms.to_string(), gbs.to_string()]);
+        }
+        Json::obj()
+            .field("bench", "micro")
+            .field("kernels", t.to_json())
+            .to_string()
+    }
+
+    #[test]
+    fn diff_gates_throughput_drops_below_the_floor() {
+        // baseline floor 0.10 GB/s, threshold 9.0 → gate iff new < 0.01
+        let old = throughput_doc(&[("sqdist d=32", "1.000", "0.10")]);
+        let slow = throughput_doc(&[("sqdist d=32", "900.000", "0.005")]);
+        let (lines, regressions) = diff_bench_json(&old, &slow, 9.0, 0.05).unwrap();
+        assert_eq!(regressions.len(), 1, "{regressions:?}");
+        assert!(regressions[0].what.contains("GB/s"), "{:?}", regressions[0]);
+        // median[ms] is deliberately NOT a timing header: no [s]/secs/µs
+        assert!(
+            !lines.iter().any(|l| l.contains("median")),
+            "median column must not be diffed: {lines:?}"
+        );
+    }
+
+    #[test]
+    fn diff_never_gates_throughput_increases() {
+        let old = throughput_doc(&[("sqdist d=32", "1.000", "0.10")]);
+        let fast = throughput_doc(&[("sqdist d=32", "0.010", "25.000")]);
+        let (lines, regressions) = diff_bench_json(&old, &fast, 9.0, 0.05).unwrap();
+        assert!(regressions.is_empty(), "{regressions:?}");
+        assert!(lines.iter().any(|l| l.contains("GB/s")), "{lines:?}");
+    }
+
+    #[test]
+    fn diff_passes_dash_throughput_cells_and_keys_rows_by_label() {
+        // "-" cells never parse → never gate; and since throughput
+        // columns are excluded from the row key by header, the rows
+        // still match across artifacts
+        let old = throughput_doc(&[("exp-ns round k=64", "5.000", "-")]);
+        let new = throughput_doc(&[("exp-ns round k=64", "5.100", "-")]);
+        let (lines, regressions) = diff_bench_json(&old, &new, 9.0, 0.05).unwrap();
+        assert!(regressions.is_empty(), "{regressions:?}");
+        assert!(
+            !lines.iter().any(|l| l.contains("new row")),
+            "dash rows must still key-match: {lines:?}"
+        );
     }
 
     #[test]

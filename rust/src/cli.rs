@@ -7,7 +7,7 @@
 //!                [--batch-size B] [--batch-growth F]
 //!                [--config file] [--data-file path.csv|.ekb]
 //!                [--ooc auto|mmap|chunked] [--ooc-window ROWS]
-//!                [--save-model model.json]
+//!                [--storage f32|f64] [--save-model model.json]
 //! eakm predict   --model model.json --data-file points.csv
 //!                [--ooc auto|mmap|chunked] [--ooc-window ROWS]
 //!                [--threads T|auto] [--out labels.txt] [--json]
@@ -31,7 +31,7 @@ use crate::config::RunConfig;
 use crate::coordinator::Runner;
 use crate::data::ooc::{open_ooc, OocMode};
 use crate::data::synth::{find, generate, paper_datasets};
-use crate::data::{io, DataSource, Dataset};
+use crate::data::{io, DataSource, Dataset, DatasetF32, ElemWidth};
 use crate::error::{EakmError, Result};
 use crate::init::InitMethod;
 use crate::json::Json;
@@ -88,6 +88,12 @@ common flags:
                      first and therefore differs by design
   --ooc-window ROWS  (with --ooc chunked) resident-window rows per
                      worker (default 8192)
+  --storage W        in-memory sample storage width: f64 (default) or
+                     f32 — halves memory footprint and scan bandwidth;
+                     rows are widened to f64 at the kernel boundary, so
+                     all accumulation stays double precision. Invalid
+                     with --ooc (an .ekb file's width comes from its
+                     header; write f32 files with save_bin_f32)
   --scale F          fraction of the full dataset size (default 0.02)
   --k K              number of clusters
   --algorithm ALG    sta selk elk ham ann exp syin yin selk-ns elk-ns
@@ -221,10 +227,28 @@ fn load_dataset(flags: &Flags, standardize: bool) -> Result<Dataset> {
 /// behave identically across all three. `standardize` applies only to
 /// the in-memory path (out-of-core files are read as-is by design).
 fn open_source(flags: &Flags, standardize: bool) -> Result<Box<dyn DataSource>> {
+    let storage = match flags.get("storage") {
+        None => None,
+        Some(s) => Some(
+            ElemWidth::parse(s)
+                .ok_or_else(|| EakmError::Config(format!("bad --storage: {s:?} (f32|f64)")))?,
+        ),
+    };
+    if storage.is_some() && flags.contains_key("ooc") {
+        return Err(EakmError::Config(
+            "--storage applies to in-memory sources only; an .ekb file's \
+             width comes from its header"
+                .into(),
+        ));
+    }
     if let Some(src) = open_ooc_source(flags)? {
         return Ok(src);
     }
-    Ok(Box::new(load_dataset(flags, standardize)?))
+    let ds = load_dataset(flags, standardize)?;
+    match storage {
+        Some(ElemWidth::F32) => Ok(Box::new(DatasetF32::from_dataset(&ds)?)),
+        _ => Ok(Box::new(ds)),
+    }
 }
 
 /// Parse `--threads T|auto` (returns `None` when the flag is absent).
@@ -380,6 +404,7 @@ fn cmd_serve(flags: &Flags) -> Result<i32> {
                 "max-iters",
                 "batch-size",
                 "batch-growth",
+                "storage",
             ] {
                 if flags.contains_key(fit_flag) {
                     return Err(EakmError::Config(format!(
@@ -876,6 +901,52 @@ mod tests {
                 "--model with {fit_flag} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn run_with_f32_storage() {
+        let code = main(&s(&[
+            "run",
+            "--dataset",
+            "birch",
+            "--scale",
+            "0.01",
+            "--k",
+            "8",
+            "--algorithm",
+            "exp-ns",
+            "--storage",
+            "f32",
+            "--json",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        // explicit f64 is the default spelled out
+        let code = main(&s(&[
+            "run", "--dataset", "birch", "--scale", "0.01", "--k", "8", "--storage", "f64",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn storage_flag_validation() {
+        // unknown width is a config error
+        assert!(main(&s(&[
+            "run", "--dataset", "birch", "--storage", "f16"
+        ]))
+        .is_err());
+        // --storage with --ooc contradicts the file header's authority
+        assert!(main(&s(&[
+            "run",
+            "--data-file",
+            "x.ekb",
+            "--ooc",
+            "chunked",
+            "--storage",
+            "f32"
+        ]))
+        .is_err());
     }
 
     #[test]

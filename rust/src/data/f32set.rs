@@ -1,0 +1,218 @@
+//! [`DatasetF32`] — fully-resident samples stored at f32 width.
+//!
+//! The opt-in mixed-precision container: rows live in memory as `f32`
+//! (half the bandwidth and footprint of [`Dataset`]) and are widened to
+//! `f64` at lease time into a per-cursor scratch buffer, so every
+//! consumer — and every kernel — still sees the `&[f64]` block-lease
+//! contract and accumulates in double precision. Squared norms are
+//! computed once, in f64 from the *widened* values, with the same
+//! [`sqnorm`](crate::linalg::sqnorm) kernel every other source uses:
+//! both widths share one definition, which is what keeps the
+//! norms-match-rows invariant and the bit-identity tests honest.
+//!
+//! On data whose values are exactly f32-representable (e.g. anything
+//! loaded from an f32 `.ekb` file), clustering through `DatasetF32` is
+//! bit-identical to clustering the widened values through `Dataset`.
+
+use crate::data::source::{BlockCursor, DataSource, RowBlock};
+use crate::data::Dataset;
+use crate::error::{EakmError, Result};
+use crate::linalg::sqnorm;
+
+/// A row-major `n×d` matrix stored as `f32`, leased as widened `f64`.
+pub struct DatasetF32 {
+    /// Row-major samples, `n*d` values at storage width.
+    data: Vec<f32>,
+    n: usize,
+    d: usize,
+    /// `‖x(i)‖²` per sample — f64, from the widened rows.
+    sqnorms: Vec<f64>,
+    /// Human-readable name (used in reports).
+    pub name: String,
+}
+
+impl DatasetF32 {
+    /// Wrap a row-major f32 buffer. Fails on shape mismatch, empty
+    /// data, or non-finite values — the same contract as
+    /// [`Dataset::new`].
+    pub fn new(name: impl Into<String>, data: Vec<f32>, n: usize, d: usize) -> Result<Self> {
+        if n == 0 || d == 0 {
+            return Err(EakmError::Data(format!("empty dataset: n={n}, d={d}")));
+        }
+        if data.len() != n * d {
+            return Err(EakmError::Data(format!(
+                "shape mismatch: {} values for n={n} × d={d}",
+                data.len()
+            )));
+        }
+        if data.iter().any(|v| !v.is_finite()) {
+            return Err(EakmError::Data("non-finite value in dataset".into()));
+        }
+        let mut sqnorms = Vec::with_capacity(n);
+        let mut row = vec![0.0f64; d];
+        for chunk in data.chunks_exact(d) {
+            for (w, &v) in row.iter_mut().zip(chunk) {
+                *w = v as f64;
+            }
+            sqnorms.push(sqnorm(&row));
+        }
+        Ok(DatasetF32 {
+            data,
+            n,
+            d,
+            sqnorms,
+            name: name.into(),
+        })
+    }
+
+    /// Narrow a [`Dataset`] to f32 storage. Values round to
+    /// nearest-even; magnitudes beyond f32 range would become ±inf, so
+    /// those error out instead of poisoning the kernels downstream.
+    pub fn from_dataset(ds: &Dataset) -> Result<DatasetF32> {
+        let data: Vec<f32> = ds.raw().iter().map(|&v| v as f32).collect();
+        DatasetF32::new(ds.name.clone(), data, ds.n(), ds.d())
+    }
+
+    /// Number of samples.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Dimension.
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The full row-major f32 buffer.
+    #[inline]
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// All pre-computed squared norms (f64, from widened rows).
+    #[inline]
+    pub fn sqnorms(&self) -> &[f64] {
+        &self.sqnorms
+    }
+}
+
+impl DataSource for DatasetF32 {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn open(&self, lo: usize, len: usize) -> Box<dyn BlockCursor + '_> {
+        assert!(lo + len <= self.n, "open range out of bounds");
+        Box::new(WideningCursor {
+            rows: &self.data,
+            sqnorms: &self.sqnorms,
+            d: self.d,
+            range_lo: lo,
+            range_len: len,
+            scratch: Vec::new(),
+        })
+    }
+}
+
+/// Cursor that widens f32 rows into a per-cursor f64 scratch buffer at
+/// lease time (one active lease per cursor, per the block-lease
+/// contract, so one buffer suffices).
+struct WideningCursor<'a> {
+    rows: &'a [f32],
+    sqnorms: &'a [f64],
+    d: usize,
+    range_lo: usize,
+    range_len: usize,
+    scratch: Vec<f64>,
+}
+
+impl BlockCursor for WideningCursor<'_> {
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn lease(&mut self, lo: usize, len: usize) -> RowBlock<'_> {
+        assert!(
+            lo >= self.range_lo && lo + len <= self.range_lo + self.range_len,
+            "lease [{lo}, {}) outside cursor range [{}, {})",
+            lo + len,
+            self.range_lo,
+            self.range_lo + self.range_len
+        );
+        let d = self.d;
+        self.scratch.clear();
+        self.scratch
+            .extend(self.rows[lo * d..(lo + len) * d].iter().map(|&v| v as f64));
+        RowBlock::new(lo, d, &self.scratch, &self.sqnorms[lo..lo + len])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::blobs;
+
+    fn rounded_pair(n: usize, d: usize) -> (Dataset, DatasetF32) {
+        // pre-round to f32 so narrow→widen is exact and the two
+        // containers hold bitwise-equal values after widening
+        let ds = blobs(n, d, 4, 0.2, 19);
+        let rounded: Vec<f64> = ds.raw().iter().map(|&v| v as f32 as f64).collect();
+        let ds = Dataset::new("r", rounded, n, d).unwrap();
+        let f32set = DatasetF32::from_dataset(&ds).unwrap();
+        (ds, f32set)
+    }
+
+    #[test]
+    fn leases_match_the_widened_dataset_bit_for_bit() {
+        let (ds, fs) = rounded_pair(500, 7);
+        assert_eq!((fs.n(), fs.d()), (500, 7));
+        assert_eq!(fs.name(), "r");
+        let mut cur = DataSource::open(&fs, 0, 500);
+        for (start, len) in [(0usize, 128usize), (128, 128), (490, 10), (3, 77)] {
+            let block = cur.lease(start, len);
+            assert_eq!(block.rows(), &ds.raw()[start * 7..(start + len) * 7]);
+            for i in start..start + len {
+                assert_eq!(block.sqnorm(i).to_bits(), ds.sqnorm(i).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sqnorms_use_the_shared_kernel_on_widened_rows() {
+        let (ds, fs) = rounded_pair(64, 9);
+        for i in 0..64 {
+            assert_eq!(fs.sqnorms()[i].to_bits(), ds.sqnorm(i).to_bits());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_non_finite() {
+        assert!(DatasetF32::new("x", vec![1.0], 1, 2).is_err());
+        assert!(DatasetF32::new("x", vec![], 0, 2).is_err());
+        assert!(DatasetF32::new("x", vec![1.0, f32::NAN], 1, 2).is_err());
+        // f64 values beyond f32 range must error on narrowing
+        let big = Dataset::new("big", vec![1e308, 0.0], 1, 2).unwrap();
+        assert!(DatasetF32::from_dataset(&big).is_err());
+    }
+
+    #[test]
+    fn rounding_on_general_data_stays_within_f32_ulp() {
+        let ds = blobs(100, 3, 2, 0.3, 5);
+        let fs = DatasetF32::from_dataset(&ds).unwrap();
+        let mut cur = DataSource::open(&fs, 0, 100);
+        let block = cur.lease(0, 100);
+        for (w, &orig) in block.rows().iter().zip(ds.raw()) {
+            assert_eq!(*w, orig as f32 as f64);
+        }
+    }
+}

@@ -1,8 +1,23 @@
 //! Dataset I/O: a simple little-endian binary format and CSV.
 //!
-//! The binary format (`.ekb`) is `magic "EAKM" | u32 version | u64 n |
-//! u64 d | n*d f64 LE`. CSV is headerless numeric rows.
+//! The binary format (`.ekb`) has two versions:
+//!
+//! - v1: `magic "EAKM" | u32 1 | u64 n | u64 d | n·d f64 LE` — 24-byte
+//!   header, always f64 payload. [`save_bin`] still writes this, so
+//!   every file produced before the mixed-precision work loads
+//!   unchanged.
+//! - v2: `magic "EAKM" | u32 2 | u64 n | u64 d | u64 elem_bytes |
+//!   n·d elems LE` — 32-byte header whose `elem_bytes` field (4 or 8)
+//!   carries the storage width. [`save_bin_f32`] writes v2 with
+//!   `elem_bytes = 4`. The 32-byte payload offset keeps f64 payloads
+//!   8-aligned and f32 payloads 4-aligned for the mmap source.
+//!
+//! Readers widen f32 payloads to f64 at decode time
+//! ([`decode_widen_le`]); every consumer downstream of a header sees
+//! `f64` rows regardless of storage width. CSV is headerless numeric
+//! rows.
 
+use std::fmt;
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -11,19 +26,91 @@ use super::dataset::Dataset;
 use crate::error::{EakmError, Result};
 
 pub(crate) const MAGIC: &[u8; 4] = b"EAKM";
-pub(crate) const VERSION: u32 = 1;
-/// Bytes before the row-major f64 payload: magic + version + n + d.
-/// A multiple of 8, so the payload is f64-aligned in an mmap.
+/// v1: f64 payload, no width field.
+pub(crate) const VERSION_F64: u32 = 1;
+/// v2: explicit `elem_bytes` width field.
+pub(crate) const VERSION_WIDE: u32 = 2;
+/// v1 header bytes before the payload: magic + version + n + d.
+/// A multiple of 8, so the f64 payload is aligned in an mmap.
 pub(crate) const HEADER_LEN: usize = 4 + 4 + 8 + 8;
+/// v2 header bytes: v1 fields + u64 elem_bytes. Still a multiple of 8.
+pub(crate) const HEADER_LEN_V2: usize = HEADER_LEN + 8;
 
 /// Values per chunk for the bulk payload transfers (64 KiB of bytes) —
 /// large enough that syscall/copy overhead amortises, small enough to
 /// stay cache-friendly.
 const IO_CHUNK_VALS: usize = 8192;
 
-/// Read and validate an `.ekb` header, returning `(n, d)`. Shared by
+/// Storage width of an `.ekb` payload (and of in-memory sources).
+/// Kernels always *accumulate* in f64; this is about what the rows are
+/// stored/streamed as.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElemWidth {
+    /// 4-byte little-endian IEEE-754 single precision, widened on read.
+    F32,
+    /// 8-byte little-endian IEEE-754 double precision.
+    F64,
+}
+
+impl ElemWidth {
+    /// Payload bytes per element.
+    #[inline]
+    pub fn bytes(self) -> usize {
+        match self {
+            ElemWidth::F32 => 4,
+            ElemWidth::F64 => 8,
+        }
+    }
+
+    /// Parse a CLI spelling (`"f32"` / `"f64"`).
+    pub fn parse(s: &str) -> Option<ElemWidth> {
+        match s {
+            "f32" => Some(ElemWidth::F32),
+            "f64" => Some(ElemWidth::F64),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ElemWidth {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ElemWidth::F32 => "f32",
+            ElemWidth::F64 => "f64",
+        })
+    }
+}
+
+/// A validated `.ekb` header: shape, storage width, and payload offset.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct EkbHeader {
+    pub n: usize,
+    pub d: usize,
+    pub width: ElemWidth,
+    /// Byte offset of the first payload element (24 for v1, 32 for v2).
+    pub payload: usize,
+}
+
+impl EkbHeader {
+    /// Total payload bytes.
+    pub fn payload_bytes(&self) -> usize {
+        self.n * self.d * self.width.bytes()
+    }
+
+    /// Expected total file length.
+    pub fn file_len(&self) -> u64 {
+        (self.payload + self.payload_bytes()) as u64
+    }
+
+    /// Byte offset of row `lo`'s first element.
+    pub fn row_offset(&self, lo: usize) -> u64 {
+        (self.payload + lo * self.d * self.width.bytes()) as u64
+    }
+}
+
+/// Read and validate an `.ekb` header (v1 or v2). Shared by
 /// [`load_bin`] and the out-of-core sources in [`crate::data::ooc`].
-pub(crate) fn read_bin_header(r: &mut impl Read, path: &Path) -> Result<(usize, usize)> {
+pub(crate) fn read_bin_header(r: &mut impl Read, path: &Path) -> Result<EkbHeader> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -32,9 +119,6 @@ pub(crate) fn read_bin_header(r: &mut impl Read, path: &Path) -> Result<(usize, 
     let mut b4 = [0u8; 4];
     r.read_exact(&mut b4)?;
     let version = u32::from_le_bytes(b4);
-    if version != VERSION {
-        return Err(EakmError::Data(format!("unsupported version {version}")));
-    }
     let mut b8 = [0u8; 8];
     r.read_exact(&mut b8)?;
     let n = u64::from_le_bytes(b8) as usize;
@@ -43,7 +127,25 @@ pub(crate) fn read_bin_header(r: &mut impl Read, path: &Path) -> Result<(usize, 
     if n == 0 || d == 0 || n.checked_mul(d).is_none() {
         return Err(EakmError::Data(format!("bad header n={n} d={d}")));
     }
-    Ok((n, d))
+    let (width, payload) = match version {
+        VERSION_F64 => (ElemWidth::F64, HEADER_LEN),
+        VERSION_WIDE => {
+            r.read_exact(&mut b8)?;
+            let width = match u64::from_le_bytes(b8) {
+                4 => ElemWidth::F32,
+                8 => ElemWidth::F64,
+                eb => {
+                    return Err(EakmError::Data(format!(
+                        "{}: bad elem_bytes {eb} (want 4 or 8)",
+                        path.display()
+                    )))
+                }
+            };
+            (width, HEADER_LEN_V2)
+        }
+        _ => return Err(EakmError::Data(format!("unsupported version {version}"))),
+    };
+    Ok(EkbHeader { n, d, width, payload })
 }
 
 /// Decode little-endian f64 payload bytes into `out`.
@@ -56,12 +158,30 @@ pub(crate) fn decode_f64_le(bytes: &[u8], out: &mut Vec<f64>) {
     );
 }
 
-/// Save a dataset in the binary format. The payload is written in
-/// ~64 KiB chunks (one `write_all` per chunk, not per value).
+/// Decode little-endian f32 payload bytes into `out`, widening to f64.
+pub(crate) fn decode_f32_le(bytes: &[u8], out: &mut Vec<f64>) {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    out.extend(
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4-byte chunk")) as f64),
+    );
+}
+
+/// Decode a payload chunk of the given storage width into f64s.
+pub(crate) fn decode_widen_le(width: ElemWidth, bytes: &[u8], out: &mut Vec<f64>) {
+    match width {
+        ElemWidth::F32 => decode_f32_le(bytes, out),
+        ElemWidth::F64 => decode_f64_le(bytes, out),
+    }
+}
+
+/// Save a dataset in the v1 binary format (f64 payload). The payload is
+/// written in ~64 KiB chunks (one `write_all` per chunk, not per value).
 pub fn save_bin(ds: &Dataset, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(File::create(path)?);
     w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&VERSION_F64.to_le_bytes())?;
     w.write_all(&(ds.n() as u64).to_le_bytes())?;
     w.write_all(&(ds.d() as u64).to_le_bytes())?;
     let mut buf = Vec::with_capacity(IO_CHUNK_VALS * 8);
@@ -76,28 +196,55 @@ pub fn save_bin(ds: &Dataset, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load a dataset from the binary format. The payload is read in
-/// ~64 KiB chunks — one `read_exact` per chunk, not the one-value-read
-/// loop this function used to be (which cost a `read_exact` dispatch
-/// per f64 and dominated load time on datasets of any size).
+/// Save a dataset in the v2 binary format with an f32 payload — half
+/// the bytes of [`save_bin`]. Narrowing rounds to nearest-even;
+/// magnitudes beyond f32 range become ±inf in the file and are rejected
+/// by `Dataset::new`'s finiteness check on load.
+pub fn save_bin_f32(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION_WIDE.to_le_bytes())?;
+    w.write_all(&(ds.n() as u64).to_le_bytes())?;
+    w.write_all(&(ds.d() as u64).to_le_bytes())?;
+    w.write_all(&4u64.to_le_bytes())?;
+    let mut buf = Vec::with_capacity(IO_CHUNK_VALS * 4);
+    for chunk in ds.raw().chunks(IO_CHUNK_VALS) {
+        buf.clear();
+        for &v in chunk {
+            buf.extend_from_slice(&(v as f32).to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a dataset from the binary format (either version, either
+/// width). The payload is read in ~64 KiB chunks — one `read_exact` per
+/// chunk, not the one-value-read loop this function used to be (which
+/// cost a `read_exact` dispatch per f64 and dominated load time on
+/// datasets of any size). f32 payloads are widened to f64 here; the
+/// resulting `Dataset` is indistinguishable from one built in memory
+/// from the widened values.
 pub fn load_bin(path: &Path) -> Result<Dataset> {
     let mut r = BufReader::new(File::open(path)?);
-    let (n, d) = read_bin_header(&mut r, path)?;
-    let total = n * d;
+    let hdr = read_bin_header(&mut r, path)?;
+    let total = hdr.n * hdr.d;
+    let eb = hdr.width.bytes();
     let mut data = Vec::with_capacity(total);
-    let mut buf = vec![0u8; IO_CHUNK_VALS * 8];
+    let mut buf = vec![0u8; IO_CHUNK_VALS * eb];
     let mut remaining = total;
     while remaining > 0 {
         let take = IO_CHUNK_VALS.min(remaining);
-        r.read_exact(&mut buf[..take * 8])?;
-        decode_f64_le(&buf[..take * 8], &mut data);
+        r.read_exact(&mut buf[..take * eb])?;
+        decode_widen_le(hdr.width, &buf[..take * eb], &mut data);
         remaining -= take;
     }
     let name = path
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "bin".into());
-    Dataset::new(name, data, n, d)
+    Dataset::new(name, data, hdr.n, hdr.d)
 }
 
 /// Load a headerless numeric CSV (comma- or whitespace-separated).
@@ -182,6 +329,71 @@ mod tests {
         assert_eq!(back.n(), ds.n());
         assert_eq!(back.d(), ds.d());
         assert_eq!(back.raw(), ds.raw());
+    }
+
+    #[test]
+    fn bin_f32_roundtrip_is_lossless_on_f32_values() {
+        // pre-round the data to f32: narrow→widen is then exact and the
+        // loaded dataset is bit-identical to the rounded original
+        let mut ds = blobs(200, 7, 4, 0.1, 5);
+        let rounded: Vec<f64> = ds.raw().iter().map(|&v| v as f32 as f64).collect();
+        ds = Dataset::new("rounded", rounded, ds.n(), ds.d()).unwrap();
+        let path = tmpdir().join("rt32.ekb");
+        save_bin_f32(&ds, &path).unwrap();
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            (HEADER_LEN_V2 + ds.n() * ds.d() * 4) as u64
+        );
+        let back = load_bin(&path).unwrap();
+        assert_eq!(back.n(), ds.n());
+        assert_eq!(back.d(), ds.d());
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(back.raw()), bits(ds.raw()));
+    }
+
+    #[test]
+    fn bin_f32_widening_rounds_general_values() {
+        let ds = blobs(64, 3, 2, 0.3, 11);
+        let path = tmpdir().join("round32.ekb");
+        save_bin_f32(&ds, &path).unwrap();
+        let back = load_bin(&path).unwrap();
+        for (a, b) in back.raw().iter().zip(ds.raw()) {
+            assert_eq!(*a, *b as f32 as f64);
+        }
+    }
+
+    #[test]
+    fn bin_f32_rejects_truncated_payload() {
+        let ds = blobs(100, 4, 2, 0.1, 9);
+        let path = tmpdir().join("trunc32.ekb");
+        save_bin_f32(&ds, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(load_bin(&path).is_err());
+    }
+
+    #[test]
+    fn bin_rejects_bad_elem_bytes() {
+        // v2 header claiming 2-byte elements
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION_WIDE.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 8]);
+        let path = tmpdir().join("badwidth.ekb");
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_bin(&path).is_err());
+    }
+
+    #[test]
+    fn elem_width_parse_and_display() {
+        assert_eq!(ElemWidth::parse("f32"), Some(ElemWidth::F32));
+        assert_eq!(ElemWidth::parse("f64"), Some(ElemWidth::F64));
+        assert_eq!(ElemWidth::parse("f16"), None);
+        assert_eq!(ElemWidth::F32.to_string(), "f32");
+        assert_eq!(ElemWidth::F64.bytes(), 8);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 pub mod batch;
 pub mod dataset;
+pub mod f32set;
 pub mod io;
 pub mod ooc;
 pub mod source;
@@ -15,6 +16,8 @@ pub mod synth;
 
 pub use batch::BatchView;
 pub use dataset::Dataset;
+pub use f32set::DatasetF32;
+pub use io::ElemWidth;
 pub use ooc::{ChunkedFileSource, OocMode};
 #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
 pub use ooc::MmapSource;

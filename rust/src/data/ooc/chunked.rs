@@ -20,7 +20,7 @@ use std::path::{Path, PathBuf};
 
 use super::norms;
 use super::{stem_name, IoCounters};
-use crate::data::io::{decode_f64_le, read_bin_header, HEADER_LEN};
+use crate::data::io::{decode_widen_le, read_bin_header, EkbHeader};
 use crate::data::source::{BlockCursor, RowBlock};
 use crate::data::DataSource;
 use crate::error::{EakmError, Result};
@@ -29,6 +29,8 @@ use crate::metrics::IoTelemetry;
 /// An `.ekb` file served through per-cursor resident windows.
 pub struct ChunkedFileSource {
     path: PathBuf,
+    /// Validated `.ekb` header: shape, storage width, payload offset.
+    hdr: EkbHeader,
     n: usize,
     d: usize,
     name: String,
@@ -45,8 +47,9 @@ impl ChunkedFileSource {
     /// `window_rows` of 0 selects [`DEFAULT_WINDOW_ROWS`](super::DEFAULT_WINDOW_ROWS).
     pub fn open(path: &Path, window_rows: usize) -> Result<ChunkedFileSource> {
         let mut r = BufReader::new(File::open(path)?);
-        let (n, d) = read_bin_header(&mut r, path)?;
-        let expect = (HEADER_LEN + n * d * 8) as u64;
+        let hdr = read_bin_header(&mut r, path)?;
+        let (n, d) = (hdr.n, hdr.d);
+        let expect = hdr.file_len();
         let actual = r.get_ref().metadata()?.len();
         if actual != expect {
             return Err(EakmError::Data(format!(
@@ -64,6 +67,7 @@ impl ChunkedFileSource {
         };
         Ok(ChunkedFileSource {
             path: path.to_path_buf(),
+            hdr,
             n,
             d,
             name: stem_name(path),
@@ -153,11 +157,14 @@ impl ChunkedCursor<'_> {
             RANDOM_WINDOW_ROWS.min(self.src.window_rows)
         };
         let take = target.max(len).min(end - lo);
-        let bytes = take * d * 8;
+        // f32 files move half the bytes per row; the io counters
+        // report the storage bytes actually read, not the widened size
+        let eb = self.src.hdr.width.bytes();
+        let bytes = take * d * eb;
         self.byte_buf.resize(bytes, 0);
         let read = (|| -> std::io::Result<()> {
             self.file
-                .seek(SeekFrom::Start(norms::row_byte_offset(lo, d)))?;
+                .seek(SeekFrom::Start(self.src.hdr.row_offset(lo)))?;
             self.file.read_exact(&mut self.byte_buf[..bytes])
         })();
         if let Err(e) = read {
@@ -170,7 +177,7 @@ impl ChunkedCursor<'_> {
             );
         }
         self.buf.clear();
-        decode_f64_le(&self.byte_buf[..bytes], &mut self.buf);
+        decode_widen_le(self.src.hdr.width, &self.byte_buf[..bytes], &mut self.buf);
         self.win_lo = lo;
         self.win_len = take;
         self.src.io.add_refill();
@@ -209,8 +216,9 @@ impl BlockCursor for ChunkedCursor<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::io::save_bin;
+    use crate::data::io::{save_bin, save_bin_f32};
     use crate::data::synth::blobs;
+    use crate::data::Dataset;
 
     fn tmpfile(name: &str) -> PathBuf {
         let dir = std::env::temp_dir().join(format!("eakm-chunked-{}", std::process::id()));
@@ -290,6 +298,39 @@ mod tests {
         // straddling a window boundary)
         let scan_refills = src.io_stats().unwrap().window_refills - refills_before;
         assert!(scan_refills <= 3, "scan refilled {scan_refills}× with a 1000-row window");
+    }
+
+    #[test]
+    fn f32_file_leases_match_widened_dataset_and_halve_bytes() {
+        let ds = blobs(1_000, 6, 4, 0.2, 23);
+        let rounded: Vec<f64> = ds.raw().iter().map(|&v| v as f32 as f64).collect();
+        let ds = Dataset::new("r32", rounded, 1_000, 6).unwrap();
+        let p64 = tmpfile("width64.ekb");
+        let p32 = tmpfile("width32.ekb");
+        save_bin(&ds, &p64).unwrap();
+        save_bin_f32(&ds, &p32).unwrap();
+        let s64 = ChunkedFileSource::open(&p64, 64).unwrap();
+        let s32 = ChunkedFileSource::open(&p32, 64).unwrap();
+        let mut c64 = DataSource::open(&s64, 0, 1_000);
+        let mut c32 = DataSource::open(&s32, 0, 1_000);
+        let mut at = 0;
+        while at < 1_000 {
+            let take = 128.min(1_000 - at);
+            let b64 = c64.lease(at, take);
+            let b32 = c32.lease(at, take);
+            assert_eq!(b64.rows(), b32.rows(), "rows differ at {at}");
+            assert_eq!(b32.rows(), &ds.raw()[at * 6..(at + take) * 6]);
+            for i in at..at + take {
+                assert_eq!(b64.sqnorm(i).to_bits(), b32.sqnorm(i).to_bits());
+            }
+            at += take;
+        }
+        drop(c64);
+        drop(c32);
+        // storage bytes actually read: f32 moves half of f64
+        let r64 = s64.io_stats().unwrap().bytes_read;
+        let r32 = s32.io_stats().unwrap().bytes_read;
+        assert_eq!(r32 * 2, r64, "f32 should read half the bytes");
     }
 
     #[test]

@@ -1,13 +1,16 @@
 //! [`MmapSource`] — page-cache-backed `.ekb` mapping.
 //!
-//! The data file and its `.norms` sidecar are mapped read-only; a lease
-//! is a zero-copy `&[f64]` straight into the mapping, and residency is
-//! the kernel's problem (the page cache keeps hot shards in RAM and
-//! evicts cold ones under pressure). This is the out-of-core fast path
+//! The data file and its `.norms` sidecar are mapped read-only; an f64
+//! lease is a zero-copy `&[f64]` straight into the mapping, and
+//! residency is the kernel's problem (the page cache keeps hot shards
+//! in RAM and evicts cold ones under pressure). f32 payloads are
+//! widened into a per-cursor scratch buffer at lease time — still half
+//! the *paged* bytes of an f64 file. This is the out-of-core fast path
 //! on platforms where the on-disk format *is* the in-memory format:
-//! 64-bit little-endian unix, with the payload 8-byte aligned after the
-//! 24-byte header (mappings are page-aligned, so header offset 24 keeps
-//! f64 alignment).
+//! 64-bit little-endian unix, with payloads aligned after the header
+//! (mappings are page-aligned; offset 24 keeps v1 f64 payloads
+//! 8-aligned, offset 32 keeps v2 f32 payloads 4-aligned and v2 f64
+//! payloads 8-aligned).
 //!
 //! This module owns **all** `unsafe` of the out-of-core layer: the raw
 //! `mmap`/`munmap` FFI (declared here — the build is dependency-free,
@@ -23,7 +26,7 @@ use std::path::Path;
 
 use super::norms;
 use super::{stem_name, IoCounters};
-use crate::data::io::{read_bin_header, HEADER_LEN};
+use crate::data::io::{read_bin_header, EkbHeader, ElemWidth};
 use crate::data::source::{BlockCursor, RowBlock};
 use crate::data::DataSource;
 use crate::error::{EakmError, Result};
@@ -94,6 +97,16 @@ impl Map {
             std::slice::from_raw_parts((self.ptr as *const u8).add(byte_off) as *const f64, count)
         }
     }
+
+    /// `count` f32 values starting `byte_off` bytes into the mapping
+    /// (v2 f32 payloads start at offset 32, keeping 4-byte alignment).
+    fn f32s(&self, byte_off: usize, count: usize) -> &[f32] {
+        debug_assert_eq!(byte_off % 4, 0);
+        assert!(byte_off + count * 4 <= self.len, "mapped read out of range");
+        unsafe {
+            std::slice::from_raw_parts((self.ptr as *const u8).add(byte_off) as *const f32, count)
+        }
+    }
 }
 
 impl Drop for Map {
@@ -109,6 +122,8 @@ impl Drop for Map {
 pub struct MmapSource {
     data: Map,
     norms: Map,
+    /// Validated `.ekb` header: shape, storage width, payload offset.
+    hdr: EkbHeader,
     n: usize,
     d: usize,
     name: String,
@@ -121,8 +136,9 @@ impl MmapSource {
     /// map both files.
     pub fn open(path: &Path) -> Result<MmapSource> {
         let file = File::open(path)?;
-        let (n, d) = read_bin_header(&mut BufReader::new(&file), path)?;
-        let expect = HEADER_LEN + n * d * 8;
+        let hdr = read_bin_header(&mut BufReader::new(&file), path)?;
+        let (n, d) = (hdr.n, hdr.d);
+        let expect = hdr.file_len() as usize;
         let actual = file.metadata()?.len();
         if actual != expect as u64 {
             return Err(EakmError::Data(format!(
@@ -143,6 +159,7 @@ impl MmapSource {
         Ok(MmapSource {
             data: Map::of_file(&file, expect, path)?,
             norms: Map::of_file(&nfile, nexpect, &sidecar)?,
+            hdr,
             n,
             d,
             name: stem_name(path),
@@ -170,6 +187,7 @@ impl DataSource for MmapSource {
             src: self,
             range_lo: lo,
             range_len: len,
+            scratch: Vec::new(),
         })
     }
 
@@ -178,12 +196,16 @@ impl DataSource for MmapSource {
     }
 }
 
-/// Stateless cursor over an [`MmapSource`]: every lease is a view into
-/// the mapping (no window, no refills).
+/// Cursor over an [`MmapSource`]: f64 leases are zero-copy views into
+/// the mapping (no window, no refills); f32 leases widen into a
+/// per-cursor scratch buffer (one active lease at a time, per the
+/// block-lease contract, so one buffer suffices).
 struct MmapCursor<'a> {
     src: &'a MmapSource,
     range_lo: usize,
     range_len: usize,
+    /// Widened rows for f32 payloads; untouched for f64.
+    scratch: Vec<f64>,
 }
 
 impl BlockCursor for MmapCursor<'_> {
@@ -199,16 +221,30 @@ impl BlockCursor for MmapCursor<'_> {
             self.range_lo,
             self.range_lo + self.range_len
         );
-        let d = self.src.d;
-        self.src.io.add_block();
-        // "bytes read" for a mapping = bytes leased; actual paging is
-        // invisible from here
-        self.src.io.add_bytes((len * d * 8 + len * 8) as u64);
+        // detach the shared source ref before touching self.scratch,
+        // so the mapped view and the scratch borrow don't conflict
+        let src = self.src;
+        let hdr = &src.hdr;
+        let d = src.d;
+        src.io.add_block();
+        // "bytes read" for a mapping = storage bytes leased (f32 pages
+        // half of f64) + norms; actual paging is invisible from here
+        src.io
+            .add_bytes((len * d * hdr.width.bytes() + len * 8) as u64);
+        let rows: &[f64] = match hdr.width {
+            ElemWidth::F64 => src.data.f64s(hdr.row_offset(lo) as usize, len * d),
+            ElemWidth::F32 => {
+                let raw = src.data.f32s(hdr.row_offset(lo) as usize, len * d);
+                self.scratch.clear();
+                self.scratch.extend(raw.iter().map(|&v| v as f64));
+                &self.scratch
+            }
+        };
         RowBlock::new(
             lo,
             d,
-            self.src.data.f64s(HEADER_LEN + lo * d * 8, len * d),
-            self.src.norms.f64s(norms::NHEADER_LEN + lo * 8, len),
+            rows,
+            src.norms.f64s(norms::NHEADER_LEN + lo * 8, len),
         )
     }
 }
@@ -216,8 +252,9 @@ impl BlockCursor for MmapCursor<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::io::save_bin;
+    use crate::data::io::{save_bin, save_bin_f32};
     use crate::data::synth::blobs;
+    use crate::data::Dataset;
     use std::path::PathBuf;
 
     fn tmpfile(name: &str) -> PathBuf {
@@ -246,6 +283,25 @@ mod tests {
         let io = src.io_stats().unwrap();
         assert_eq!(io.blocks_leased, 4);
         assert_eq!(io.window_refills, 0, "mmap never refills");
+    }
+
+    #[test]
+    fn f32_mapped_leases_match_widened_dataset() {
+        let ds = blobs(600, 5, 3, 0.2, 41);
+        let rounded: Vec<f64> = ds.raw().iter().map(|&v| v as f32 as f64).collect();
+        let ds = Dataset::new("r32", rounded, 600, 5).unwrap();
+        let path = tmpfile("map32.ekb");
+        save_bin_f32(&ds, &path).unwrap();
+        let src = MmapSource::open(&path).unwrap();
+        let mut cur = DataSource::open(&src, 0, 600);
+        for start in [0usize, 17, 300, 590] {
+            let len = 10.min(600 - start);
+            let block = cur.lease(start, len);
+            assert_eq!(block.rows(), &ds.raw()[start * 5..(start + len) * 5]);
+            for i in start..start + len {
+                assert_eq!(block.sqnorm(i).to_bits(), ds.sqnorm(i).to_bits());
+            }
+        }
     }
 
     #[test]

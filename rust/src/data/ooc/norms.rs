@@ -19,12 +19,16 @@ use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
-use crate::data::io::{decode_f64_le, read_bin_header, HEADER_LEN};
+use crate::data::io::{decode_f64_le, decode_widen_le, read_bin_header};
 use crate::error::{EakmError, Result};
 use crate::linalg::sqnorm;
 
 pub(crate) const NMAGIC: &[u8; 4] = b"EAKN";
-pub(crate) const NVERSION: u32 = 2;
+/// Bumped 2 → 3 when the 8-wide lane `sqnorm` landed: the new fixed
+/// tree summation order changes norm *bits*, and a sidecar cached by an
+/// older build would silently break the norms-match-rows invariant
+/// (the fingerprint only tracks the data file, not the kernel).
+pub(crate) const NVERSION: u32 = 3;
 /// Bytes before the f64 norms payload (multiple of 8).
 pub(crate) const NHEADER_LEN: usize = 4 + 4 + 8 + 8 + 8;
 
@@ -127,11 +131,13 @@ pub fn ensure_sidecar(data_path: &Path, n: usize, d: usize) -> Result<PathBuf> {
     }
 
     let mut r = BufReader::new(File::open(data_path)?);
-    let (rn, rd) = read_bin_header(&mut r, data_path)?;
-    if (rn, rd) != (n, d) {
+    let hdr = read_bin_header(&mut r, data_path)?;
+    if (hdr.n, hdr.d) != (n, d) {
         return Err(EakmError::Data(format!(
-            "{}: header says {rn}×{rd}, expected {n}×{d}",
-            data_path.display()
+            "{}: header says {}×{}, expected {n}×{d}",
+            data_path.display(),
+            hdr.n,
+            hdr.d
         )));
     }
 
@@ -149,16 +155,19 @@ pub fn ensure_sidecar(data_path: &Path, n: usize, d: usize) -> Result<PathBuf> {
         w.write_all(&(d as u64).to_le_bytes()).map_err(write_err)?;
         w.write_all(&fp.to_le_bytes()).map_err(write_err)?;
 
-        let rows_per_chunk = (STREAM_BYTES / (d * 8)).max(1);
-        let mut byte_buf = vec![0u8; rows_per_chunk * d * 8];
+        // sidecar norms are always f64, computed from the *widened*
+        // rows — both storage widths share one definition of sqnorm
+        let eb = hdr.width.bytes();
+        let rows_per_chunk = (STREAM_BYTES / (d * eb)).max(1);
+        let mut byte_buf = vec![0u8; rows_per_chunk * d * eb];
         let mut rows = Vec::with_capacity(rows_per_chunk * d);
         let mut out = Vec::with_capacity(rows_per_chunk * 8);
         let mut remaining = n;
         while remaining > 0 {
             let take = rows_per_chunk.min(remaining);
-            r.read_exact(&mut byte_buf[..take * d * 8])?;
+            r.read_exact(&mut byte_buf[..take * d * eb])?;
             rows.clear();
-            decode_f64_le(&byte_buf[..take * d * 8], &mut rows);
+            decode_widen_le(hdr.width, &byte_buf[..take * d * eb], &mut rows);
             if rows.iter().any(|v| !v.is_finite()) {
                 let _ = std::fs::remove_file(&tmp);
                 return Err(EakmError::Data(format!(
@@ -202,15 +211,10 @@ pub fn load_sidecar(path: &Path, n: usize, d: usize) -> Result<Vec<f64>> {
     Ok(norms)
 }
 
-/// Byte offset of row `lo` inside an `.ekb` file.
-pub(crate) fn row_byte_offset(lo: usize, d: usize) -> u64 {
-    (HEADER_LEN + lo * d * 8) as u64
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::io::save_bin;
+    use crate::data::io::{save_bin, save_bin_f32, HEADER_LEN};
     use crate::data::synth::blobs;
     use crate::linalg::sqnorms_rows;
 
@@ -236,6 +240,23 @@ mod tests {
         // second call is a cache hit: same shape and same content
         let again = ensure_sidecar(&path, ds.n(), ds.d()).unwrap();
         assert_eq!(again, side);
+    }
+
+    #[test]
+    fn sidecar_for_f32_file_matches_widened_in_memory_norms() {
+        // pre-round so narrow→widen is exact, then the sidecar must be
+        // bit-identical to sqnorms_rows over the widened values
+        let ds = blobs(300, 5, 3, 0.2, 13);
+        let rounded: Vec<f64> = ds.raw().iter().map(|&v| v as f32 as f64).collect();
+        let ds = crate::data::Dataset::new("r32", rounded, ds.n(), ds.d()).unwrap();
+        let path = tmpdir().join("norms-f32.ekb");
+        save_bin_f32(&ds, &path).unwrap();
+        let side = ensure_sidecar(&path, ds.n(), ds.d()).unwrap();
+        let norms = load_sidecar(&side, ds.n(), ds.d()).unwrap();
+        let want = sqnorms_rows(ds.raw(), ds.d());
+        for (a, b) in norms.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -126,6 +126,36 @@
 //! coverage) are enforced for every implementation by one property
 //! harness, [`algorithms::testutil::assert_block_lease_contract`].
 //!
+//! ## Mixed precision
+//!
+//! Storage width and accumulation width are separate decisions. Every
+//! kernel in [`linalg`] accumulates in `f64`, always; what's opt-in is
+//! storing the *samples* at `f32` — half the memory footprint and half
+//! the streamed bandwidth on bandwidth-bound scans:
+//!
+//! * [`data::DatasetF32`] — resident rows stored `f32`, widened to
+//!   `f64` into a per-cursor scratch buffer at lease time, so the
+//!   block-lease contract (and every algorithm above it) is unchanged;
+//! * [`data::io::save_bin_f32`] writes the `.ekb` **v2** container
+//!   (header gains an element-width field; v1 files remain readable),
+//!   and both out-of-core sources stream/map either width, widening at
+//!   the same boundary — I/O telemetry reports the halved storage
+//!   bytes;
+//! * the CLI opts in with `run --storage f32` (in-memory sources only;
+//!   a file's width comes from its header).
+//!
+//! The `.norms` sidecar and all in-memory squared norms stay `f64`,
+//! computed from the widened values by the same
+//! [`sqnorm`](linalg::sqnorm) kernel every source shares. Consequence:
+//! on data whose values are exactly f32-representable (anything loaded
+//! from an f32 file), an f32-storage fit is **bit-identical** to the
+//! f64 fit — same assignments, same MSE bits, same counters, at any
+//! thread count. On general f64 data, narrowing rounds each value to
+//! nearest-even once at ingest; labels and MSE then agree to rounding
+//! (the test suite pins ≥ 99% label agreement and relative MSE within
+//! `1e-3` on clustered synthetic data), and determinism still holds
+//! bit-for-bit *within* the f32 pipeline.
+//!
 //! ## Mini-batch engine
 //!
 //! For latency-bounded refinement (the serving story), a fit can run on

@@ -4,22 +4,40 @@
 //! bound-repair scan — `n₁(i)` to assign and `n₂(i)` for the new lower
 //! bound — so top-2 selection is a first-class primitive here.
 
+use super::norms::LANES;
+
 /// Index of the minimum value. Ties resolve to the lowest index; empty
 /// slices return `None`.
+///
+/// Two-phase: an 8-lane running minimum finds the min *value* without
+/// any cross-lane index bookkeeping (each lane's compare-and-keep
+/// autovectorizes to a masked min), then one linear `position` pass
+/// recovers the first index holding it — which is exactly the
+/// lowest-index tie the old scalar scan returned.
 #[inline]
 pub fn argmin(xs: &[f64]) -> Option<usize> {
     if xs.is_empty() {
         return None;
     }
-    let mut best = 0;
-    let mut bv = xs[0];
-    for (i, &v) in xs.iter().enumerate().skip(1) {
-        if v < bv {
-            bv = v;
-            best = i;
+    let mut mins = [f64::INFINITY; LANES];
+    let mut c = xs.chunks_exact(LANES);
+    for chunk in c.by_ref() {
+        let chunk: &[f64; LANES] = chunk.try_into().expect("LANES chunk");
+        for l in 0..LANES {
+            if chunk[l] < mins[l] {
+                mins[l] = chunk[l];
+            }
         }
     }
-    Some(best)
+    let mut m = f64::INFINITY;
+    for &v in mins.iter().chain(c.remainder()) {
+        if v < m {
+            m = v;
+        }
+    }
+    // `position` can only miss if every element is NaN (distances never
+    // are); fall back to index 0 to keep the Option contract total.
+    Some(xs.iter().position(|&v| v == m).unwrap_or(0))
 }
 
 /// The two smallest values of a scan, with the index of the smallest.
@@ -89,6 +107,26 @@ mod tests {
         assert_eq!(argmin(&[3.0, 1.0, 2.0]), Some(1));
         // ties → lowest index
         assert_eq!(argmin(&[2.0, 1.0, 1.0]), Some(1));
+    }
+
+    #[test]
+    fn argmin_matches_reference_across_lane_boundaries() {
+        use crate::linalg::reference;
+        for n in [1usize, 2, 7, 8, 9, 15, 16, 17, 31, 33, 100] {
+            // pseudo-random with deliberate duplicates
+            let xs: Vec<f64> = (0..n).map(|i| ((i * 7919) % 13) as f64 * 0.5).collect();
+            assert_eq!(argmin(&xs), reference::argmin(&xs), "n={n}");
+        }
+    }
+
+    #[test]
+    fn argmin_tie_across_lane_boundary_picks_first() {
+        // minimum appears in a late lane of chunk 0 and again in chunk 1:
+        // the position pass must return the earliest occurrence
+        let mut xs = vec![5.0; 20];
+        xs[6] = -1.0;
+        xs[11] = -1.0;
+        assert_eq!(argmin(&xs), Some(6));
     }
 
     #[test]

@@ -1,39 +1,44 @@
 //! Point-to-point squared distances: the innermost hot path.
 //!
-//! Two routes exist and both are exercised by the algorithms:
+//! Three routes exist and all are exercised by the algorithms:
 //!
-//! 1. [`sqdist`] — direct `Σ(aᵢ−bᵢ)²`, used whenever a *single* distance
-//!    is needed (bound tightening). Numerically the most accurate.
+//! 1. [`sqdist`] — direct `Σ(aᵢ−bᵢ)²` over 8-wide lanes, used whenever a
+//!    *single* distance is needed (bound tightening). Numerically the
+//!    most accurate.
 //! 2. [`sqdist_from_parts`] / [`sqdist_batch_block`] — the norm
 //!    decomposition `‖x‖² − 2x·c + ‖c‖²`, used for batch scans where the
 //!    norms are amortised (sta's full assignment, init, the cc matrix).
+//! 3. [`sqdist_argmin_block`] — the fused variant of route 2 for callers
+//!    that only need labels + nearest distances: it runs the same panel
+//!    micro-kernel over [`gemm::NB`]-wide strips and folds each strip
+//!    into a running argmin, never materialising the `m×k` matrix.
+//!    Bit-identical to `sqdist_batch_block` + `argmin` per row.
 
 use super::gemm;
+use super::norms::{reduce8, LANES};
 
-/// Direct squared Euclidean distance, 4-way unrolled.
+/// Direct squared Euclidean distance, 8 independent lanes
+/// (difference then square per lane; fixed tree reduction + tail).
 #[inline]
 pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = c * 4;
-        let d0 = a[i] - b[i];
-        let d1 = a[i + 1] - b[i + 1];
-        let d2 = a[i + 2] - b[i + 2];
-        let d3 = a[i + 3] - b[i + 3];
-        s0 += d0 * d0;
-        s1 += d1 * d1;
-        s2 += d2 * d2;
-        s3 += d3 * d3;
+    let mut acc = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        let xa: &[f64; LANES] = xa.try_into().expect("LANES chunk");
+        let xb: &[f64; LANES] = xb.try_into().expect("LANES chunk");
+        for l in 0..LANES {
+            let diff = xa[l] - xb[l];
+            acc[l] += diff * diff;
+        }
     }
     let mut tail = 0.0;
-    for i in chunks * 4..n {
-        let d = a[i] - b[i];
-        tail += d * d;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        let diff = x - y;
+        tail += diff * diff;
     }
-    (s0 + s1) + (s2 + s3) + tail
+    reduce8(acc) + tail
 }
 
 /// Squared distance from pre-computed parts; clamped at zero because the
@@ -47,7 +52,7 @@ pub fn sqdist_from_parts(xnorm: f64, cnorm: f64, xdotc: f64) -> f64 {
 /// centroids, written into `out` (row-major `m×k`).
 ///
 /// Uses the norm decomposition with a blocked matrix product so the
-/// centroid block stays cache-resident — this is the paper's §4.1.1
+/// centroid panel stays cache-resident — this is the paper's §4.1.1
 /// "BLAS" trick, implemented natively.
 pub fn sqdist_batch_block(
     xs: &[f64],      // m×d samples
@@ -71,18 +76,96 @@ pub fn sqdist_batch_block(
     }
 }
 
+/// Fused batch-distance + argmin: for each of `m` samples, the index of
+/// the nearest of `k` centroids (`labels`) and its squared distance
+/// (`dists_sq`), without ever materialising the `m×k` distance matrix.
+///
+/// Works strip by strip: the same [`gemm::pack_b_panel`] /
+/// [`gemm::matmul_nt_panel`] micro-kernel that backs
+/// [`gemm::matmul_nt`] computes an `m×kw` dot-product strip
+/// (`kw ≤ NB`), which is immediately folded into a running
+/// first-lowest-index argmin. Because panel cells are stride-independent
+/// and the strips walk `j` ascending with a strict `<`, the result is
+/// **bit-identical** to `sqdist_batch_block` into a full matrix followed
+/// by [`argmin`](crate::linalg::argmin) per row — while touching only
+/// `O(m·NB)` scratch.
+pub fn sqdist_argmin_block(
+    xs: &[f64],          // m×d samples
+    xnorms: &[f64],      // m
+    cs: &[f64],          // k×d centroids
+    cnorms: &[f64],      // k
+    d: usize,
+    labels: &mut [u32],  // m
+    dists_sq: &mut [f64], // m
+) {
+    let m = xnorms.len();
+    let k = cnorms.len();
+    debug_assert_eq!(xs.len(), m * d);
+    debug_assert_eq!(cs.len(), k * d);
+    assert_eq!(labels.len(), m);
+    assert_eq!(dists_sq.len(), m);
+    assert!(k > 0, "no centroids");
+    labels.fill(0);
+    dists_sq.fill(f64::INFINITY);
+    let mut packed = Vec::new();
+    let mut strip = vec![0.0; m * gemm::NB.min(k)];
+    let mut j0 = 0;
+    while j0 < k {
+        let kw = gemm::NB.min(k - j0);
+        gemm::pack_b_panel(cs, d, j0, kw, &mut packed);
+        gemm::matmul_nt_panel(xs, d, m, &packed, kw, &mut strip[..m * kw], kw);
+        for i in 0..m {
+            let xn = xnorms[i];
+            let row = &strip[i * kw..(i + 1) * kw];
+            let mut bj = labels[i];
+            let mut bv = dists_sq[i];
+            for (c, &xdotc) in row.iter().enumerate() {
+                let sq = (xn + cnorms[j0 + c] - 2.0 * xdotc).max(0.0);
+                if sq < bv {
+                    bv = sq;
+                    bj = (j0 + c) as u32;
+                }
+            }
+            labels[i] = bj;
+            dists_sq[i] = bv;
+        }
+        j0 += kw;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::norms::{dot, sqnorm, sqnorms_rows};
+    use crate::linalg::{argmin, reference};
 
     #[test]
     fn sqdist_matches_naive() {
-        for n in [1usize, 2, 4, 5, 9, 16, 33] {
+        for n in [1usize, 2, 4, 5, 8, 9, 16, 17, 33] {
             let a: Vec<f64> = (0..n).map(|i| i as f64 * 0.3).collect();
             let b: Vec<f64> = (0..n).map(|i| 1.0 - i as f64 * 0.7).collect();
             let naive: f64 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
             assert!((sqdist(&a, &b) - naive).abs() < 1e-12 * (1.0 + naive));
+        }
+    }
+
+    #[test]
+    fn sqdist_matches_reference_on_awkward_dims_both_widths() {
+        for &d in reference::AWKWARD_DIMS {
+            for widen in [false, true] {
+                let mut a = reference::wave(d, 0.37);
+                let mut b = reference::wave(d, 0.61);
+                if widen {
+                    reference::round_to_f32(&mut a);
+                    reference::round_to_f32(&mut b);
+                }
+                let want = reference::sqdist(&a, &b);
+                let got = sqdist(&a, &b);
+                assert!(
+                    (got - want).abs() <= 1e-12 * (1.0 + want.abs()),
+                    "d={d} widen={widen}: {got} vs {want}"
+                );
+            }
         }
     }
 
@@ -119,5 +202,57 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn fused_argmin_bit_identical_to_materialising_path() {
+        // shapes straddling the NB strip boundary and tile remainders
+        for (m, d, k) in [
+            (1, 1, 1),
+            (7, 3, 5),
+            (13, 9, 64),
+            (13, 9, 65),
+            (33, 5, 130),
+            (5, 784, 67),
+        ] {
+            let xs: Vec<f64> = (0..m * d).map(|i| (i as f64 * 0.193).sin()).collect();
+            let cs: Vec<f64> = (0..k * d).map(|i| (i as f64 * 0.067).cos()).collect();
+            let xn = sqnorms_rows(&xs, d);
+            let cn = sqnorms_rows(&cs, d);
+            let mut full = vec![0.0; m * k];
+            sqdist_batch_block(&xs, &xn, &cs, &cn, d, &mut full);
+            let mut labels = vec![u32::MAX; m];
+            let mut dists = vec![0.0; m];
+            sqdist_argmin_block(&xs, &xn, &cs, &cn, d, &mut labels, &mut dists);
+            for i in 0..m {
+                let row = &full[i * k..(i + 1) * k];
+                let want = argmin(row).unwrap();
+                assert_eq!(labels[i] as usize, want, "({m},{d},{k}) row {i} label");
+                assert_eq!(
+                    dists[i].to_bits(),
+                    row[want].to_bits(),
+                    "({m},{d},{k}) row {i} dist bits"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_argmin_ties_pick_lowest_index() {
+        // duplicated centroids across a strip boundary: first index wins
+        let d = 2;
+        let k = gemm::NB + 3;
+        let mut cs = vec![0.0; k * d];
+        for j in 0..k {
+            cs[j * d] = 7.0; // all centroids identical
+            cs[j * d + 1] = -7.0;
+        }
+        let xs = [1.0, 2.0];
+        let xn = sqnorms_rows(&xs, d);
+        let cn = sqnorms_rows(&cs, d);
+        let mut labels = vec![u32::MAX; 1];
+        let mut dists = vec![0.0; 1];
+        sqdist_argmin_block(&xs, &xn, &cs, &cn, d, &mut labels, &mut dists);
+        assert_eq!(labels[0], 0);
     }
 }

@@ -1,98 +1,169 @@
-//! A small blocked matrix product, `out ← A · Bᵀ`.
+//! A small blocked matrix product, `out ← A · Bᵀ`, built from one
+//! shared **panel micro-kernel**.
 //!
 //! This is *not* a general BLAS: it is exactly the shape the batch
-//! distance path needs (`X·Cᵀ` with tall-skinny `X` and modest `k`), and
-//! is tuned for that. Blocking keeps a tile of B resident in L1/L2 while
-//! a strip of A streams through, which is where the paper's "use BLAS"
-//! advice gets its speedup from.
+//! distance path needs (`X·Cᵀ` with tall-skinny `X` and modest `k`).
+//! B is processed in panels of [`NB`] rows. Each panel is first packed
+//! ([`pack_b_panel`]) so that the micro-kernel's inner loop reads
+//! contiguous memory: full groups of [`NR`] B-rows are interleaved
+//! t-major (`packed[.. t*NR + l ..] = B[j+l][t]`), remainder rows are
+//! appended row-major. The compute ([`matmul_nt_panel`]) then walks
+//! [`MR`]×[`NR`] register tiles — 16 independent accumulators whose
+//! FMA chains overlap and autovectorize — with plain scalar edge loops
+//! for the `m % MR` / `kw % NR` remainders.
+//!
+//! **Bit-level contract**: a cell's value depends only on its A-row and
+//! B-row (and their position inside the panel), never on `m`, the
+//! output stride, or which panel invocation computed it. That is what
+//! lets the fused label scan
+//! ([`sqdist_argmin_block`](crate::linalg::sqdist_argmin_block)) reuse
+//! this micro-kernel on an `m×NB` strip and stay bit-identical to the
+//! materialising [`matmul_nt`] path.
 
-/// Row tile height for A.
-const MB: usize = 32;
-/// Row tile height for B (columns of the output).
-const NB: usize = 64;
+/// Register micro-tile height: rows of A per inner kernel.
+pub(crate) const MR: usize = 4;
+/// Register micro-tile width: rows of B (output columns) per inner kernel.
+pub(crate) const NR: usize = 4;
+/// Panel width: B-rows (output columns) packed and processed together.
+/// Also the strip width of the fused label scan.
+pub(crate) const NB: usize = 64;
 
-/// `out[m×k] ← A[m×d] · B[k×d]ᵀ`, accumulating nothing (out overwritten).
+/// Pack B-rows `[j0, j0+kw)` of a row-major `k×d` matrix for
+/// [`matmul_nt_panel`]: full groups of [`NR`] rows interleaved t-major
+/// (group `g` stores, for each `t`, the `NR` values `B[j0+g*NR+l][t]`
+/// contiguously), then the `kw % NR` remainder rows row-major.
+pub(crate) fn pack_b_panel(b: &[f64], d: usize, j0: usize, kw: usize, pack: &mut Vec<f64>) {
+    debug_assert!((j0 + kw) * d <= b.len());
+    pack.clear();
+    pack.reserve(kw * d);
+    let jfull = kw - kw % NR;
+    let mut j = 0;
+    while j < jfull {
+        let rows = &b[(j0 + j) * d..(j0 + j + NR) * d];
+        for t in 0..d {
+            for l in 0..NR {
+                pack.push(rows[l * d + t]);
+            }
+        }
+        j += NR;
+    }
+    for jr in jfull..kw {
+        pack.extend_from_slice(&b[(j0 + jr) * d..(j0 + jr + 1) * d]);
+    }
+}
+
+/// Compute `out[i*stride + j] = A[i,:] · B[j0+j,:]` for `i ∈ [0, m)`,
+/// `j ∈ [0, kw)`, with B supplied as [`pack_b_panel`] output. Every
+/// cell is written exactly once (no pre-zeroing needed); per-cell
+/// accumulation order is fixed by the tile geometry alone, so callers
+/// at different strides get bit-identical cells.
+pub(crate) fn matmul_nt_panel(
+    a: &[f64],
+    d: usize,
+    m: usize,
+    packed: &[f64],
+    kw: usize,
+    out: &mut [f64],
+    stride: usize,
+) {
+    debug_assert_eq!(packed.len(), kw * d);
+    debug_assert!(m * d <= a.len());
+    debug_assert!(m == 0 || (m - 1) * stride + kw <= out.len());
+    let jfull = kw - kw % NR;
+    let ifull = m - m % MR;
+    let mut i = 0;
+    while i < ifull {
+        let a0 = &a[i * d..(i + 1) * d];
+        let a1 = &a[(i + 1) * d..(i + 2) * d];
+        let a2 = &a[(i + 2) * d..(i + 3) * d];
+        let a3 = &a[(i + 3) * d..(i + 4) * d];
+        let mut j = 0;
+        while j < jfull {
+            // 4×4 register tile: 16 independent accumulators; each t
+            // reads one contiguous NR-group of packed B.
+            let grp = &packed[j * d..(j + NR) * d];
+            let mut acc = [[0.0f64; NR]; MR];
+            for t in 0..d {
+                let pb: &[f64; NR] = grp[t * NR..t * NR + NR].try_into().expect("NR group");
+                let av = [a0[t], a1[t], a2[t], a3[t]];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    for (c, slot) in accr.iter_mut().enumerate() {
+                        *slot += av[r] * pb[c];
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let row0 = (i + r) * stride + j;
+                out[row0..row0 + NR].copy_from_slice(accr);
+            }
+            j += NR;
+        }
+        for jr in jfull..kw {
+            let brow = &packed[jfull * d + (jr - jfull) * d..jfull * d + (jr - jfull + 1) * d];
+            let mut s = [0.0f64; MR];
+            for t in 0..d {
+                let bv = brow[t];
+                s[0] += a0[t] * bv;
+                s[1] += a1[t] * bv;
+                s[2] += a2[t] * bv;
+                s[3] += a3[t] * bv;
+            }
+            for (r, sv) in s.iter().enumerate() {
+                out[(i + r) * stride + jr] = *sv;
+            }
+        }
+        i += MR;
+    }
+    while i < m {
+        let arow = &a[i * d..(i + 1) * d];
+        let mut j = 0;
+        while j < jfull {
+            let grp = &packed[j * d..(j + NR) * d];
+            let mut s = [0.0f64; NR];
+            for t in 0..d {
+                let pb: &[f64; NR] = grp[t * NR..t * NR + NR].try_into().expect("NR group");
+                for (c, sv) in s.iter_mut().enumerate() {
+                    *sv += arow[t] * pb[c];
+                }
+            }
+            out[i * stride + j..i * stride + j + NR].copy_from_slice(&s);
+            j += NR;
+        }
+        for jr in jfull..kw {
+            let brow = &packed[jfull * d + (jr - jfull) * d..jfull * d + (jr - jfull + 1) * d];
+            let mut s = 0.0;
+            for t in 0..d {
+                s += arow[t] * brow[t];
+            }
+            out[i * stride + jr] = s;
+        }
+        i += 1;
+    }
+}
+
+/// `out[m×k] ← A[m×d] · B[k×d]ᵀ`. Every output cell is unconditionally
+/// written by the panel kernel, so `out` needs no pre-zeroing.
 pub fn matmul_nt(a: &[f64], b: &[f64], out: &mut [f64], m: usize, d: usize, k: usize) {
     debug_assert_eq!(a.len(), m * d);
     debug_assert_eq!(b.len(), k * d);
     debug_assert_eq!(out.len(), m * k);
-    out.fill(0.0);
-    let mut i0 = 0;
-    while i0 < m {
-        let i1 = (i0 + MB).min(m);
-        let mut j0 = 0;
-        while j0 < k {
-            let j1 = (j0 + NB).min(k);
-            // Micro-kernel over the tile: 2 rows of A × 2 rows of B per
-            // step (4 accumulators) so each loaded element is reused
-            // twice and the FMA chains overlap.
-            let mut i = i0;
-            while i + 2 <= i1 {
-                let a0 = &a[i * d..(i + 1) * d];
-                let a1 = &a[(i + 1) * d..(i + 2) * d];
-                let mut j = j0;
-                while j + 2 <= j1 {
-                    let b0 = &b[j * d..(j + 1) * d];
-                    let b1 = &b[(j + 1) * d..(j + 2) * d];
-                    let (mut s00, mut s01, mut s10, mut s11) = (0.0, 0.0, 0.0, 0.0);
-                    for t in 0..d {
-                        let av0 = a0[t];
-                        let av1 = a1[t];
-                        let bv0 = b0[t];
-                        let bv1 = b1[t];
-                        s00 += av0 * bv0;
-                        s01 += av0 * bv1;
-                        s10 += av1 * bv0;
-                        s11 += av1 * bv1;
-                    }
-                    out[i * k + j] = s00;
-                    out[i * k + j + 1] = s01;
-                    out[(i + 1) * k + j] = s10;
-                    out[(i + 1) * k + j + 1] = s11;
-                    j += 2;
-                }
-                if j < j1 {
-                    let brow = &b[j * d..(j + 1) * d];
-                    let (mut s0, mut s1) = (0.0, 0.0);
-                    for t in 0..d {
-                        s0 += a0[t] * brow[t];
-                        s1 += a1[t] * brow[t];
-                    }
-                    out[i * k + j] = s0;
-                    out[(i + 1) * k + j] = s1;
-                }
-                i += 2;
-            }
-            if i < i1 {
-                let arow = &a[i * d..(i + 1) * d];
-                for j in j0..j1 {
-                    let brow = &b[j * d..(j + 1) * d];
-                    let mut s = 0.0;
-                    for t in 0..d {
-                        s += arow[t] * brow[t];
-                    }
-                    out[i * k + j] = s;
-                }
-            }
-            j0 = j1;
-        }
-        i0 = i1;
+    if m == 0 || k == 0 {
+        return;
+    }
+    let mut packed = Vec::new();
+    let mut j0 = 0;
+    while j0 < k {
+        let kw = NB.min(k - j0);
+        pack_b_panel(b, d, j0, kw, &mut packed);
+        matmul_nt_panel(a, d, m, &packed, kw, &mut out[j0..], k);
+        j0 += kw;
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    fn naive(a: &[f64], b: &[f64], m: usize, d: usize, k: usize) -> Vec<f64> {
-        let mut out = vec![0.0; m * k];
-        for i in 0..m {
-            for j in 0..k {
-                out[i * k + j] = (0..d).map(|t| a[i * d + t] * b[j * d + t]).sum();
-            }
-        }
-        out
-    }
+    use crate::linalg::reference;
 
     #[test]
     fn matches_naive_small() {
@@ -101,10 +172,89 @@ mod tests {
             let b: Vec<f64> = (0..k * d).map(|i| (i as f64 * 0.071).cos()).collect();
             let mut out = vec![0.0; m * k];
             matmul_nt(&a, &b, &mut out, m, d, k);
-            let want = naive(&a, &b, m, d, k);
+            let want = reference::matmul_nt(&a, &b, m, d, k);
             for (got, want) in out.iter().zip(&want) {
                 assert!((got - want).abs() < 1e-10, "({m},{d},{k})");
             }
+        }
+    }
+
+    #[test]
+    fn matches_reference_on_awkward_dims_both_widths() {
+        let (m, k) = (13, 21); // both tile remainders non-zero
+        for &d in reference::AWKWARD_DIMS {
+            for widen in [false, true] {
+                let mut a = reference::wave(m * d, 0.173);
+                let mut b = reference::wave(k * d, 0.071);
+                if widen {
+                    reference::round_to_f32(&mut a);
+                    reference::round_to_f32(&mut b);
+                }
+                let mut out = vec![0.0; m * k];
+                matmul_nt(&a, &b, &mut out, m, d, k);
+                let want = reference::matmul_nt(&a, &b, m, d, k);
+                for (idx, (got, want)) in out.iter().zip(&want).enumerate() {
+                    assert!(
+                        (got - want).abs() <= 1e-10 * (1.0 + want.abs()),
+                        "d={d} widen={widen} cell {idx}: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nan_poisoned_out_is_fully_overwritten_on_odd_shapes() {
+        // no pre-zeroing: every cell must be unconditionally written,
+        // including the m % MR and k % NR edge strips and d == 0
+        for (m, d, k) in [
+            (1, 1, 1),
+            (3, 5, 7),
+            (5, 1, 9),
+            (7, 3, 66),
+            (33, 9, 65),
+            (130, 4, 67),
+            (2, 0, 3),
+        ] {
+            let a: Vec<f64> = (0..m * d).map(|i| (i as f64 * 0.31).sin()).collect();
+            let b: Vec<f64> = (0..k * d).map(|i| (i as f64 * 0.17).cos()).collect();
+            let mut out = vec![f64::NAN; m * k];
+            matmul_nt(&a, &b, &mut out, m, d, k);
+            let want = reference::matmul_nt(&a, &b, m, d, k);
+            for (idx, (got, want)) in out.iter().zip(&want).enumerate() {
+                assert!(!got.is_nan(), "({m},{d},{k}) cell {idx} left unwritten");
+                assert!((got - want).abs() < 1e-10, "({m},{d},{k}) cell {idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_cells_are_stride_independent() {
+        // the fused scan relies on it: same panel, different out strides
+        // → bit-identical cells
+        let (m, d, k) = (9, 11, NB + 5);
+        let a: Vec<f64> = (0..m * d).map(|i| (i as f64 * 0.5).sin()).collect();
+        let b: Vec<f64> = (0..k * d).map(|i| (i as f64 * 0.3).cos()).collect();
+        let mut full = vec![0.0; m * k];
+        matmul_nt(&a, &b, &mut full, m, d, k);
+        let mut packed = Vec::new();
+        let mut j0 = 0;
+        while j0 < k {
+            let kw = NB.min(k - j0);
+            pack_b_panel(&b, d, j0, kw, &mut packed);
+            let mut strip = vec![0.0; m * kw];
+            matmul_nt_panel(&a, d, m, &packed, kw, &mut strip, kw);
+            for i in 0..m {
+                for c in 0..kw {
+                    assert_eq!(
+                        strip[i * kw + c].to_bits(),
+                        full[i * k + j0 + c].to_bits(),
+                        "cell ({i},{}) differs across strides",
+                        j0 + c
+                    );
+                }
+            }
+            j0 += kw;
         }
     }
 

@@ -1,10 +1,28 @@
 //! Dense numerical kernels shared by every algorithm.
 //!
-//! All data is `f64` (the paper's experiments use double precision),
-//! row-major. The crate builds these from scratch — no BLAS — but applies
-//! the same engineering tricks the paper lists in §4.1.1: pre-computed
-//! squared norms, `‖x−c‖² = ‖x‖² − 2x·c + ‖c‖²` decomposition, blocked
-//! matrix products for the batch path, and unrolled inner loops.
+//! All arithmetic is `f64` accumulation over row-major data (the paper's
+//! experiments use double precision; the opt-in f32 *storage* path widens
+//! at the data-source boundary, so these kernels never see f32). The
+//! crate builds them from scratch — no BLAS — but applies the same
+//! engineering tricks the paper lists in §4.1.1, organised around two
+//! shapes the optimizer reliably vectorizes:
+//!
+//! - **Lane kernels** ([`dot`], [`sqnorm`], [`sqdist`], [`argmin`]): flat
+//!   loops over `chunks_exact(LANES)` with `LANES = 8` independent
+//!   accumulators and a scalar tail. Eight parallel FMA chains hide
+//!   latency; the fixed tree reduction (`norms::reduce8`) makes the
+//!   summation order — and therefore every bit of every result — a
+//!   deterministic function of the input alone.
+//! - **Tile kernels** ([`gemm`]): `out ← A·Bᵀ` via 4×4 register tiles
+//!   over a packed B-panel, so the inner loop reads contiguous memory
+//!   and keeps 16 accumulators live. [`sqdist_batch_block`] layers the
+//!   `‖x‖² − 2x·c + ‖c‖²` decomposition on top; [`sqdist_argmin_block`]
+//!   fuses the decomposition with a running argmin so label scans touch
+//!   only an `m×NB` strip instead of the full `m×k` matrix.
+//!
+//! The fused and materialising batch paths share one panel micro-kernel
+//! and one transform, so they are bit-identical by construction — the
+//! determinism suite pins this.
 
 pub mod argmin;
 pub mod dist;
@@ -12,5 +30,71 @@ pub mod gemm;
 pub mod norms;
 
 pub use argmin::{argmin, top2, Top2};
-pub use dist::{sqdist, sqdist_batch_block, sqdist_from_parts};
+pub use dist::{sqdist, sqdist_argmin_block, sqdist_batch_block, sqdist_from_parts};
 pub use norms::{dot, sqnorm, sqnorms_rows};
+
+#[cfg(test)]
+pub(crate) mod reference {
+    //! Pre-overhaul scalar kernels, kept as the oracle the lane/tile
+    //! kernels are property-tested against (awkward dims, both storage
+    //! widths). Test-only: never compiled into the library.
+
+    /// Dimensions with awkward lane/tile tails, per the kernel test plan.
+    pub const AWKWARD_DIMS: &[usize] = &[1, 2, 3, 5, 7, 9, 31, 33, 127, 784];
+
+    /// Deterministic quasi-random test vector: `sin(i·f)`.
+    pub fn wave(n: usize, f: f64) -> Vec<f64> {
+        (0..n).map(|i| (i as f64 * f).sin()).collect()
+    }
+
+    /// Round every value to its nearest f32 — models the f32 storage
+    /// path, where stored values are exactly representable in f32.
+    pub fn round_to_f32(v: &mut [f64]) {
+        for x in v {
+            *x = *x as f32 as f64;
+        }
+    }
+
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    pub fn sqnorm(a: &[f64]) -> f64 {
+        dot(a, a)
+    }
+
+    pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    /// Naive triple-loop `A·Bᵀ`.
+    pub fn matmul_nt(a: &[f64], b: &[f64], m: usize, d: usize, k: usize) -> Vec<f64> {
+        let mut out = vec![0.0; m * k];
+        for i in 0..m {
+            for j in 0..k {
+                let mut s = 0.0;
+                for t in 0..d {
+                    s += a[i * d + t] * b[j * d + t];
+                }
+                out[i * k + j] = s;
+            }
+        }
+        out
+    }
+
+    /// The old linear-scan argmin (strict `<`, ties → lowest index).
+    pub fn argmin(xs: &[f64]) -> Option<usize> {
+        if xs.is_empty() {
+            return None;
+        }
+        let mut best = 0;
+        let mut bv = xs[0];
+        for (i, &v) in xs.iter().enumerate().skip(1) {
+            if v < bv {
+                bv = v;
+                best = i;
+            }
+        }
+        Some(best)
+    }
+}

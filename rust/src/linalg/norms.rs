@@ -1,31 +1,65 @@
-//! Dot products and squared norms with 4-way unrolled inner loops.
+//! Dot products and squared norms: 8-wide lane kernels.
+//!
+//! Each kernel walks `chunks_exact(LANES)` with one independent
+//! accumulator per lane and reduces the bank in a fixed tree order
+//! ([`reduce8`]); the scalar tail is summed separately and added last.
+//! The summation order is part of the crate's determinism story — it is
+//! fixed by `LANES`, never by the caller or the thread count — but it
+//! *differs* from a naive left-to-right sum, which is why the `.norms`
+//! sidecar format version was bumped when these kernels landed (see
+//! [`crate::data::ooc`]).
 
-/// Dot product of two equal-length slices, 4-way unrolled.
+/// Lane width of the flat f64 kernels (8 × f64 = one ZMM register, two
+/// YMM registers — wide enough that autovectorization has independent
+/// FMA chains to overlap, narrow enough for the tail to stay cheap).
+pub(crate) const LANES: usize = 8;
+
+/// Reduce one bank of lane accumulators in a fixed tree order. The
+/// order is part of each kernel's bit-level contract.
+#[inline(always)]
+pub(crate) fn reduce8(acc: [f64; LANES]) -> f64 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// Dot product of two equal-length slices, 8 independent lanes.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    // Four independent accumulators let the CPU overlap FMA latencies.
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
+    let mut acc = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+        let xa: &[f64; LANES] = xa.try_into().expect("LANES chunk");
+        let xb: &[f64; LANES] = xb.try_into().expect("LANES chunk");
+        for l in 0..LANES {
+            acc[l] += xa[l] * xb[l];
+        }
     }
     let mut tail = 0.0;
-    for i in chunks * 4..n {
-        tail += a[i] * b[i];
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
     }
-    (s0 + s1) + (s2 + s3) + tail
+    reduce8(acc) + tail
 }
 
-/// Squared Euclidean norm.
+/// Squared Euclidean norm. Bit-identical to `dot(a, a)` (same lane
+/// assignment and reduction order) — the `.norms` sidecar and every
+/// in-memory source rely on there being exactly one definition.
 #[inline]
 pub fn sqnorm(a: &[f64]) -> f64 {
-    dot(a, a)
+    let mut acc = [0.0f64; LANES];
+    let mut c = a.chunks_exact(LANES);
+    for xa in c.by_ref() {
+        let xa: &[f64; LANES] = xa.try_into().expect("LANES chunk");
+        for l in 0..LANES {
+            acc[l] += xa[l] * xa[l];
+        }
+    }
+    let mut tail = 0.0;
+    for x in c.remainder() {
+        tail += x * x;
+    }
+    reduce8(acc) + tail
 }
 
 /// Squared norms of each row of a row-major `n×d` matrix.
@@ -37,15 +71,50 @@ pub fn sqnorms_rows(data: &[f64], d: usize) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::reference;
 
     #[test]
     fn dot_matches_naive() {
-        // lengths around the unroll boundary
-        for n in [0usize, 1, 3, 4, 5, 7, 8, 13, 64, 101] {
+        // lengths around the lane boundary
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 13, 15, 16, 17, 64, 101] {
             let a: Vec<f64> = (0..n).map(|i| (i as f64) * 0.5 - 1.0).collect();
             let b: Vec<f64> = (0..n).map(|i| 2.0 - (i as f64) * 0.25).collect();
             let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
             assert!((dot(&a, &b) - naive).abs() < 1e-12 * (1.0 + naive.abs()));
+        }
+    }
+
+    #[test]
+    fn dot_and_sqnorm_match_reference_on_awkward_dims_both_widths() {
+        for &d in reference::AWKWARD_DIMS {
+            for widen in [false, true] {
+                let mut a = reference::wave(d, 0.37);
+                let mut b = reference::wave(d, 0.61);
+                if widen {
+                    reference::round_to_f32(&mut a);
+                    reference::round_to_f32(&mut b);
+                }
+                let want = reference::dot(&a, &b);
+                let got = dot(&a, &b);
+                assert!(
+                    (got - want).abs() <= 1e-12 * (1.0 + want.abs()),
+                    "dot d={d} widen={widen}: {got} vs {want}"
+                );
+                let wn = reference::sqnorm(&a);
+                let gn = sqnorm(&a);
+                assert!(
+                    (gn - wn).abs() <= 1e-12 * (1.0 + wn.abs()),
+                    "sqnorm d={d} widen={widen}: {gn} vs {wn}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sqnorm_is_bit_identical_to_dot_with_itself() {
+        for &d in reference::AWKWARD_DIMS {
+            let a = reference::wave(d, 0.29);
+            assert_eq!(sqnorm(&a).to_bits(), dot(&a, &a).to_bits(), "d={d}");
         }
     }
 

@@ -6,7 +6,9 @@ use eakm::coordinator::ccdist::CcData;
 use eakm::coordinator::sorted_norms::SortedNorms;
 use eakm::coordinator::update::UpdateState;
 use eakm::data::Dataset;
-use eakm::linalg::{dot, gemm, sqdist, sqdist_batch_block, sqnorm, sqnorms_rows, top2};
+use eakm::linalg::{
+    argmin, dot, gemm, sqdist, sqdist_argmin_block, sqdist_batch_block, sqnorm, sqnorms_rows, top2,
+};
 use eakm::metrics::Counters;
 use eakm::proptest::forall;
 
@@ -195,6 +197,89 @@ fn prop_sqnorm_triangle_inequality_consistency() {
         let ac = sqdist(&a, &c).sqrt();
         assert!(ac <= ab + bc + 1e-9);
         assert!(sqnorm(&a) >= 0.0);
+    });
+}
+
+#[test]
+fn prop_fused_argmin_matches_materialising() {
+    // the fused scan must agree with materialise-then-argmin on labels
+    // AND on distance bits — both paths run the same panel micro-kernel
+    forall(111, 40, |g| {
+        let m = g.usize_in(1, 50);
+        let d = g.usize_in(1, 20);
+        let k = g.usize_in(1, 150); // spans the NB=64 panel boundary
+        let xs = g.normal_vec(m * d);
+        let cs = g.normal_vec(k * d);
+        let xn = sqnorms_rows(&xs, d);
+        let cn = sqnorms_rows(&cs, d);
+        let mut mat = vec![0.0; m * k];
+        sqdist_batch_block(&xs, &xn, &cs, &cn, d, &mut mat);
+        let mut labels = vec![0u32; m];
+        let mut dists = vec![0.0; m];
+        sqdist_argmin_block(&xs, &xn, &cs, &cn, d, &mut labels, &mut dists);
+        for i in 0..m {
+            let row = &mat[i * k..(i + 1) * k];
+            let want = argmin(row).unwrap();
+            assert_eq!(labels[i] as usize, want, "row {i} of ({m},{d},{k})");
+            assert_eq!(
+                dists[i].to_bits(),
+                row[want].to_bits(),
+                "row {i} of ({m},{d},{k}): distance bits diverge"
+            );
+        }
+    });
+}
+
+// Scalar references for the lane-blocked kernels — deliberately local
+// copies (the lib's #[cfg(test)] reference module is invisible to
+// integration tests), summing in plain left-to-right order.
+const AWKWARD_DIMS: &[usize] = &[1, 2, 3, 5, 7, 9, 31, 33, 127, 784];
+
+fn naive_dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn naive_sqdist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+#[test]
+fn prop_kernels_match_naive_on_awkward_dims_both_widths() {
+    // every awkward dim (lane remainders 0..7, d < LANES, huge d) at
+    // both storage widths: blocked summation may reorder, so compare
+    // with a relative tolerance, not bits
+    forall(112, 20, |g| {
+        for &d in AWKWARD_DIMS {
+            let mut a = g.normal_vec(d);
+            let mut b = g.normal_vec(d);
+            if g.usize_in(0, 1) == 1 {
+                // f32-width data: round every value like DatasetF32 does
+                for v in a.iter_mut() {
+                    *v = *v as f32 as f64;
+                }
+                for v in b.iter_mut() {
+                    *v = *v as f32 as f64;
+                }
+            }
+            let want = naive_dot(&a, &b);
+            let got = dot(&a, &b);
+            assert!(
+                (got - want).abs() <= 1e-9 * (1.0 + want.abs()),
+                "dot d={d}: {got} vs {want}"
+            );
+            let want = naive_sqdist(&a, &b);
+            let got = sqdist(&a, &b);
+            assert!(
+                (got - want).abs() <= 1e-9 * (1.0 + want.abs()),
+                "sqdist d={d}: {got} vs {want}"
+            );
+            let want = naive_dot(&a, &a);
+            let got = sqnorm(&a);
+            assert!(
+                (got - want).abs() <= 1e-9 * (1.0 + want),
+                "sqnorm d={d}: {got} vs {want}"
+            );
+        }
     });
 }
 

@@ -1,0 +1,136 @@
+//! End-to-end acceptance for opt-in f32 storage: on f32-representable
+//! data, clustering through [`DatasetF32`] (and through f32 `.ekb`
+//! files, chunked or mapped) must be **bit-identical** to clustering
+//! the same widened values through [`Dataset`] — assignments, MSE bits,
+//! bound counters, centroid bits — at several thread widths. On
+//! general f64 data, narrowing rounds once at ingest and the results
+//! agree to documented tolerances.
+
+use std::path::PathBuf;
+
+use eakm::data::ooc::{open_ooc, OocMode};
+use eakm::data::{io, Dataset, DatasetF32};
+use eakm::prelude::*;
+
+fn tmpdir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("eakm-f32-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Blobs whose every value is exactly f32-representable, so the
+/// narrow→widen round trip is the identity and bit-level comparisons
+/// are meaningful.
+fn f32_exact_blobs(n: usize, d: usize, clusters: usize, seed: u64) -> Dataset {
+    let ds = eakm::data::synth::blobs(n, d, clusters, 0.25, seed);
+    let rounded: Vec<f64> = ds.raw().iter().map(|&v| v as f32 as f64).collect();
+    Dataset::new(ds.name.clone(), rounded, n, d).unwrap()
+}
+
+fn modes() -> Vec<OocMode> {
+    let mut modes = vec![OocMode::Chunked];
+    if eakm::data::ooc::mmap_supported() {
+        modes.push(OocMode::Mmap);
+    }
+    modes
+}
+
+fn bits(c: &[f64]) -> Vec<u64> {
+    c.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn resident_f32_fit_is_bit_identical_to_f64() {
+    let mem = f32_exact_blobs(1_400, 5, 6, 21);
+    let f32set = DatasetF32::from_dataset(&mem).unwrap();
+    for alg in [Algorithm::Sta, Algorithm::ExpNs] {
+        for threads in [1usize, 2, 4, 8] {
+            let cfg = RunConfig::new(alg, 6).seed(7).threads(threads);
+            let want = Runner::new(&cfg).run(&mem).unwrap();
+            let got = Runner::new(&cfg).run(&f32set).unwrap();
+            assert_eq!(got.assignments, want.assignments, "{alg} t={threads}");
+            assert_eq!(got.mse.to_bits(), want.mse.to_bits(), "{alg} t={threads}");
+            assert_eq!(got.counters, want.counters, "{alg} t={threads}");
+            assert_eq!(got.iterations, want.iterations);
+            assert_eq!(bits(&got.centroids), bits(&want.centroids));
+        }
+    }
+}
+
+#[test]
+fn f32_file_runs_are_bit_identical_to_resident_f32() {
+    let mem = f32_exact_blobs(1_200, 4, 6, 33);
+    let f32set = DatasetF32::from_dataset(&mem).unwrap();
+    let path = tmpdir().join("store.ekb");
+    io::save_bin_f32(&mem, &path).unwrap();
+    for threads in [1usize, 2, 8] {
+        let cfg = RunConfig::new(Algorithm::ExpNs, 6).seed(5).threads(threads);
+        let want = Runner::new(&cfg).run(&f32set).unwrap();
+        for mode in modes() {
+            let src = open_ooc(&path, mode, 128).unwrap();
+            let got = Runner::new(&cfg).run(&*src).unwrap();
+            assert_eq!(got.assignments, want.assignments, "{mode} t={threads}");
+            assert_eq!(got.mse.to_bits(), want.mse.to_bits(), "{mode} t={threads}");
+            assert_eq!(got.counters, want.counters, "{mode} t={threads}");
+            assert_eq!(bits(&got.centroids), bits(&want.centroids));
+            // the file run reports I/O at storage width
+            assert!(got.report.io.expect("file run reports I/O").bytes_read > 0);
+        }
+    }
+}
+
+#[test]
+fn predict_labels_are_identical_across_widths() {
+    let train = f32_exact_blobs(1_000, 6, 5, 41);
+    let queries = f32_exact_blobs(600, 6, 5, 42);
+    let q32 = DatasetF32::from_dataset(&queries).unwrap();
+    for threads in [1usize, 4] {
+        let rt = Runtime::new(threads);
+        let model = Kmeans::new(5)
+            .algorithm(Algorithm::ExpNs)
+            .seed(3)
+            .fit(&rt, &train)
+            .unwrap();
+        let want = model.predict(&rt, &queries).unwrap();
+        let got = model.predict(&rt, &q32).unwrap();
+        assert_eq!(got, want, "t={threads}");
+    }
+}
+
+#[test]
+fn general_data_agrees_to_documented_tolerances() {
+    // not pre-rounded: narrowing perturbs every value by ≤ half an f32
+    // ulp, so labels can legitimately flip on near-ties. The lib.rs
+    // contract pins ≥ 99% agreement and relative MSE within 1e-3.
+    let mem = eakm::data::synth::blobs(2_000, 6, 8, 0.25, 55);
+    let f32set = DatasetF32::from_dataset(&mem).unwrap();
+    let cfg = RunConfig::new(Algorithm::Sta, 8).seed(9).threads(2);
+    let want = Runner::new(&cfg).run(&mem).unwrap();
+    let got = Runner::new(&cfg).run(&f32set).unwrap();
+    let agree = got
+        .assignments
+        .iter()
+        .zip(&want.assignments)
+        .filter(|(a, b)| a == b)
+        .count();
+    assert!(
+        agree as f64 >= 0.99 * want.assignments.len() as f64,
+        "label agreement {agree}/{}",
+        want.assignments.len()
+    );
+    let rel = (got.mse - want.mse).abs() / want.mse.max(f64::MIN_POSITIVE);
+    assert!(rel < 1e-3, "relative MSE diff {rel}");
+}
+
+#[test]
+fn f32_sources_honour_the_block_lease_contract() {
+    let mem = f32_exact_blobs(700, 5, 4, 61);
+    let f32set = DatasetF32::from_dataset(&mem).unwrap();
+    eakm::algorithms::testutil::assert_block_lease_contract(&f32set, 17);
+    let path = tmpdir().join("contract.ekb");
+    io::save_bin_f32(&mem, &path).unwrap();
+    for mode in modes() {
+        let src = open_ooc(&path, mode, 96).unwrap();
+        eakm::algorithms::testutil::assert_block_lease_contract(&*src, 18);
+    }
+}
