@@ -125,17 +125,20 @@ fn main() {
             stats.predicts, total_reqs as u64,
             "every request must be served"
         );
+        // measured cells are float-formatted (the '.' keeps them out of
+        // the cross-commit diff row key; only the stable knob cells —
+        // max_batch, clients, reqs, rows/req — identify a row)
         t.row(vec![
             max_batch.to_string(),
             CLIENTS.to_string(),
             total_reqs.to_string(),
             ROWS_PER_REQ.to_string(),
             format!("{:.4}", wall.as_secs_f64()),
-            format!("{rps:.0}"),
+            format!("{rps:.1}"),
             TextTable::fmt_ratio(rps / base),
-            stats.batches.to_string(),
-            stats.coalesced_batches.to_string(),
-            stats.queue_full_rejects.to_string(),
+            format!("{:.1}", stats.batches as f64),
+            format!("{:.1}", stats.coalesced_batches as f64),
+            format!("{:.1}", stats.queue_full_rejects as f64),
         ]);
         eprint!(".");
     }

@@ -16,6 +16,11 @@
 //!                [--linger-ms M] [--threads T|auto]
 //!                (or fit at startup: the same --dataset/--data-file/
 //!                --ooc/--k/--algorithm flags as `run`)
+//! eakm shardd    --data file.ekb --rows LO..HI [--addr host:port]
+//!                [--threads T|auto] [--ooc auto|mmap|chunked]
+//!                [--ooc-window ROWS]       # one shard of a distributed fit
+//! eakm run       --shards host:port,host:port --k 100 [--algorithm exp-ns]
+//!                [--seed 0] [--threads T]  # coordinate a distributed fit
 //! eakm datasets  [--scale 0.02]           # list the 22 paper datasets
 //! eakm validate  --dataset birch --k 50   # all algorithms must agree
 //! eakm grid      [--scale f] [--seeds n] [--k 50,200] [--out dir]
@@ -29,7 +34,7 @@ use crate::algorithms::Algorithm;
 use crate::bench_support::{env_scale, measure, TextTable};
 use crate::config::RunConfig;
 use crate::coordinator::Runner;
-use crate::data::ooc::{open_ooc, OocMode};
+use crate::data::ooc::{open_ooc_described, OocMode};
 use crate::data::synth::{find, generate, paper_datasets};
 use crate::data::{io, DataSource, Dataset, DatasetF32, ElemWidth};
 use crate::error::{EakmError, Result};
@@ -48,6 +53,7 @@ pub fn main(args: &[String]) -> Result<i32> {
         "run" => cmd_run(&parse_flags(rest)?),
         "predict" => cmd_predict(&parse_flags(rest)?),
         "serve" => cmd_serve(&parse_flags(rest)?),
+        "shardd" => cmd_shardd(&parse_flags(rest)?),
         "datasets" => cmd_datasets(&parse_flags(rest)?),
         "validate" => cmd_validate(&parse_flags(rest)?),
         "grid" => cmd_grid(&parse_flags(rest)?),
@@ -68,6 +74,8 @@ commands:
   run        cluster one dataset with one algorithm (fit)
   predict    assign new points to a saved model's clusters
   serve      long-lived model server: batching, backpressure, hot reload
+  shardd     shard server: own one row range of an .ekb file and serve
+             it to a distributed fit (data + compute planes)
   datasets   list the 22 paper datasets (synthetic stand-ins)
   validate   run every algorithm and check they agree exactly
   grid       run the full {dataset × k × algorithm} grid (Tables 9/10)
@@ -129,6 +137,22 @@ serve answers with a model from --model, or fits one at startup using
 the same data flags as run (the two are mutually exclusive); the
 \"reload\" op hot-swaps a model JSON with zero downtime. Stop it with
 the \"shutdown\" op.
+
+distributed fit (results are bit-identical to single-node):
+  eakm shardd --data file.ekb --rows LO..HI [--addr host:port]
+             one shard server per row range; every shard has the full
+             .ekb file (any filesystem or a copy) and answers only for
+             its rows. --threads sizes its local scan pool; --ooc /
+             --ooc-window pick how it reads the file (default auto).
+             Port 0 binds an ephemeral port. Stays up until killed.
+  eakm run --shards host:port,host:port --k K [--algorithm ALG] ...
+             coordinate a fit across the shard servers, in the order
+             given (which must match ascending row ranges). Seeding,
+             merging, and the update step run here; assignment scans
+             run on the shards. Incompatible with local data flags
+             (--dataset/--data-file/--ooc/--storage/--save-model).
+             --batch-size B runs the mini-batch engine over the
+             network data plane instead.
 
 predict applies the model to the points as given — no standardisation
 is re-applied, so feed features in the same space the model was fit on.
@@ -192,7 +216,9 @@ fn open_ooc_source(flags: &Flags) -> Result<Option<Box<dyn DataSource>>> {
         ));
     }
     let window = flag_num::<usize>(flags, "ooc-window")?.unwrap_or(0);
-    Ok(Some(open_ooc(&path, mode, window)?))
+    // _described: a missing/unreadable file names the path and the
+    // backend mode instead of surfacing a bare OS error
+    Ok(Some(open_ooc_described(&path, mode, window)?))
 }
 
 /// Load the dataset named by the flags. `standardize` applies the
@@ -310,6 +336,9 @@ fn build_config(flags: &Flags) -> Result<RunConfig> {
 }
 
 fn cmd_run(flags: &Flags) -> Result<i32> {
+    if flags.contains_key("shards") {
+        return cmd_run_dist(flags);
+    }
     let cfg = build_config(flags)?;
     let rt = Runtime::new(cfg.resolved_threads());
     // out-of-core sources fit straight off the file; RunReport.io
@@ -325,6 +354,102 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
         model.save(Path::new(path))?;
         eprintln!("[model written to {path}]");
     }
+    Ok(0)
+}
+
+/// `eakm run --shards host:port,…`: coordinate a distributed fit. The
+/// rows live on the shard servers, so every local data flag is a
+/// contradiction and is rejected loudly.
+fn cmd_run_dist(flags: &Flags) -> Result<i32> {
+    for data_flag in [
+        "dataset",
+        "data-file",
+        "data",
+        "ooc",
+        "ooc-window",
+        "scale",
+        "storage",
+        "save-model",
+    ] {
+        if flags.contains_key(data_flag) {
+            return Err(EakmError::Config(format!(
+                "run: --shards and --{data_flag} are mutually exclusive \
+                 (the shard servers own the rows)"
+            )));
+        }
+    }
+    let shards = flags.get("shards").expect("checked by cmd_run");
+    let addrs: Vec<String> = shards
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if addrs.is_empty() {
+        return Err(EakmError::Config(
+            "--shards needs host:port[,host:port…]".into(),
+        ));
+    }
+    let cfg = build_config(flags)?;
+    let rt = Runtime::new(cfg.resolved_threads());
+    let out = crate::dist::run_dist(&rt, &cfg, &addrs)?;
+    if flags.contains_key("json") {
+        println!("{}", Json::from(&out.report));
+    } else {
+        println!("{}", out.report.summary());
+    }
+    Ok(0)
+}
+
+/// Parse `--rows LO..HI`.
+fn parse_rows(s: &str) -> Result<(usize, usize)> {
+    let bad = || EakmError::Config(format!("bad --rows {s:?} (want LO..HI, e.g. 0..50000)"));
+    let (lo, hi) = s.split_once("..").ok_or_else(bad)?;
+    let lo = lo.parse::<usize>().map_err(|_| bad())?;
+    let hi = hi.parse::<usize>().map_err(|_| bad())?;
+    if lo >= hi {
+        return Err(EakmError::Config(format!(
+            "--rows {s}: the range is empty (LO must be < HI)"
+        )));
+    }
+    Ok((lo, hi))
+}
+
+/// `eakm shardd`: serve one row range of an `.ekb` file to a
+/// distributed fit. Blocks the calling thread until killed (or a
+/// SHUTDOWN frame arrives).
+fn cmd_shardd(flags: &Flags) -> Result<i32> {
+    let data = data_file_flag(flags)
+        .ok_or_else(|| EakmError::Config("shardd: --data PATH.ekb required".into()))?;
+    let path = PathBuf::from(data);
+    if path.extension().and_then(|e| e.to_str()) != Some("ekb") {
+        return Err(EakmError::Config(
+            "shardd serves the binary .ekb format only".into(),
+        ));
+    }
+    let rows = flags
+        .get("rows")
+        .ok_or_else(|| EakmError::Config("shardd: --rows LO..HI required".into()))?;
+    let (lo, hi) = parse_rows(rows)?;
+    let mode = match flags.get("ooc") {
+        None => OocMode::Auto,
+        Some(s) => OocMode::parse(s)
+            .ok_or_else(|| EakmError::Config(format!("bad --ooc: {s:?} (auto|mmap|chunked)")))?,
+    };
+    let cfg = crate::dist::ShardConfig {
+        data: path,
+        rows: (lo, hi),
+        addr: flags
+            .get("addr")
+            .cloned()
+            .unwrap_or_else(|| "127.0.0.1:5999".to_string()),
+        threads: parse_threads(flags)?.unwrap_or(1),
+        mode,
+        window_rows: flag_num::<usize>(flags, "ooc-window")?.unwrap_or(0),
+    };
+    let file = cfg.data.display().to_string();
+    crate::dist::shardd(&cfg, |addr| {
+        eprintln!("[shard serving rows {lo}..{hi} of {file} on {addr}]");
+    })?;
     Ok(0)
 }
 
@@ -901,6 +1026,88 @@ mod tests {
                 "--model with {fit_flag} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn shardd_flag_validation() {
+        // --data and --rows are both required
+        assert!(main(&s(&["shardd", "--rows", "0..10"])).is_err());
+        assert!(main(&s(&["shardd", "--data", "x.ekb"])).is_err());
+        // .ekb only (the shard serves raw payload bytes)
+        assert!(main(&s(&["shardd", "--data", "x.csv", "--rows", "0..10"])).is_err());
+        // malformed or empty ranges are config errors
+        for rows in ["10", "5..5", "9..3", "a..b", "..", "3.."] {
+            assert!(
+                main(&s(&["shardd", "--data", "x.ekb", "--rows", rows])).is_err(),
+                "--rows {rows} must be rejected"
+            );
+        }
+        // unknown ooc backend
+        assert!(main(&s(&[
+            "shardd", "--data", "x.ekb", "--rows", "0..10", "--ooc", "ramdisk"
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn run_shards_flag_validation() {
+        // the shard servers own the rows: local data flags contradict
+        for extra in [
+            ["--dataset", "birch"],
+            ["--data-file", "x.ekb"],
+            ["--ooc", "chunked"],
+            ["--storage", "f32"],
+            ["--save-model", "m.json"],
+        ] {
+            assert!(
+                main(&s(&[
+                    "run",
+                    "--shards",
+                    "127.0.0.1:1",
+                    "--k",
+                    "4",
+                    extra[0],
+                    extra[1],
+                ]))
+                .is_err(),
+                "--shards with {} must be rejected",
+                extra[0]
+            );
+        }
+        // an empty shard list is a config error, not a connect attempt
+        assert!(main(&s(&["run", "--shards", ",", "--k", "4"])).is_err());
+    }
+
+    #[test]
+    fn missing_ekb_error_names_path_and_mode() {
+        // regression: a missing .ekb used to surface the raw OS error
+        // with no hint of which file or which backend was asked for it
+        for mode in ["chunked", "auto"] {
+            let err = main(&s(&[
+                "run",
+                "--data-file",
+                "/nonexistent/never.ekb",
+                "--ooc",
+                mode,
+                "--k",
+                "4",
+            ]))
+            .unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("/nonexistent/never.ekb"), "{msg}");
+            assert!(msg.contains("source"), "{msg}");
+        }
+        let err = main(&s(&[
+            "run",
+            "--data-file",
+            "/nonexistent/never.ekb",
+            "--ooc",
+            "chunked",
+            "--k",
+            "4",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("chunked"), "{err}");
     }
 
     #[test]

@@ -25,25 +25,78 @@ const MAX_CHUNKS: usize = 16;
 /// Chunk length for `items` — a function of the item count only, so the
 /// serial/sharded decision and the chunk boundaries (and therefore the
 /// floating-point merge order) are identical at every pool width.
-fn chunk_len(items: usize) -> usize {
+/// `pub(crate)`: the distributed coordinator derives the same chunk
+/// geometry from the *global* row count so shard-computed partials drop
+/// into the identical merge.
+pub(crate) fn chunk_len(items: usize) -> usize {
     items.div_ceil(MAX_CHUNKS).max(CHUNK_ITEMS)
 }
 
 /// One chunk's partial contribution to the cluster sums.
-struct Partial {
-    sums: Vec<f64>,
-    counts: Vec<i64>,
-    touched: Vec<bool>,
+pub(crate) struct Partial {
+    pub(crate) sums: Vec<f64>,
+    pub(crate) counts: Vec<i64>,
+    pub(crate) touched: Vec<bool>,
 }
 
 impl Partial {
-    fn new(k: usize, d: usize) -> Self {
+    pub(crate) fn new(k: usize, d: usize) -> Self {
         Partial {
             sums: vec![0.0; k * d],
             counts: vec![0i64; k],
             touched: vec![false; k],
         }
     }
+}
+
+/// Accumulate rows `[lo, lo+len)` of `data` into `part` under the
+/// assignment slice `a`, which starts at global row `a_off` (so row `i`
+/// is assigned to `a[i - a_off]`). This is the one inner loop behind
+/// every full-sum pass — the single-node pooled chunks (`a_off = 0`)
+/// and each dist shard's partial-sum scan (`a_off =` the shard's first
+/// row) run literally this code, which is what makes their accumulation
+/// bit-identical.
+pub(crate) fn scan_chunk(
+    data: &dyn DataSource,
+    a: &[u32],
+    a_off: usize,
+    lo: usize,
+    len: usize,
+    d: usize,
+    part: &mut Partial,
+) {
+    let mut cur = data.open(lo, len);
+    for (i, &j) in a[lo - a_off..lo - a_off + len].iter().enumerate() {
+        let j = j as usize;
+        part.counts[j] += 1;
+        let row = cur.row(lo + i);
+        let s = &mut part.sums[j * d..(j + 1) * d];
+        for (t, v) in row.iter().enumerate() {
+            s[t] += v;
+        }
+    }
+}
+
+/// Fold per-chunk `(sums, counts)` partials — in iteration order — into
+/// an [`UpdateState`]. The single-node pooled path and the distributed
+/// coordinator both merge through this loop, so as long as the chunk
+/// geometry matches, the resulting sums are bit-identical.
+pub(crate) fn merge_partial_sums<'p>(
+    parts: impl Iterator<Item = (&'p [f64], &'p [i64])>,
+    k: usize,
+    d: usize,
+) -> UpdateState {
+    let mut sums = vec![0.0; k * d];
+    let mut counts = vec![0u64; k];
+    for (psums, pcounts) in parts {
+        for (t, v) in psums.iter().enumerate() {
+            sums[t] += v;
+        }
+        for (j, c) in pcounts.iter().enumerate() {
+            counts[j] += *c as u64;
+        }
+    }
+    UpdateState { sums, counts, k }
 }
 
 /// Running cluster sums and member counts.
@@ -79,29 +132,14 @@ impl UpdateState {
         pool.run_tasks(&mut partials, |c, part| {
             let lo = c * clen;
             let hi = (lo + clen).min(n);
-            let mut cur = data.open(lo, hi - lo);
-            for (i, &j) in a[lo..hi].iter().enumerate() {
-                let j = j as usize;
-                part.counts[j] += 1;
-                let row = cur.row(lo + i);
-                let s = &mut part.sums[j * d..(j + 1) * d];
-                for (t, v) in row.iter().enumerate() {
-                    s[t] += v;
-                }
-            }
+            scan_chunk(data, a, 0, lo, hi - lo, d, part);
         });
         // merge in chunk order — deterministic at any pool width
-        let mut sums = vec![0.0; k * d];
-        let mut counts = vec![0u64; k];
-        for part in &partials {
-            for (t, v) in part.sums.iter().enumerate() {
-                sums[t] += v;
-            }
-            for (j, c) in part.counts.iter().enumerate() {
-                counts[j] += *c as u64;
-            }
-        }
-        UpdateState { sums, counts, k }
+        merge_partial_sums(
+            partials.iter().map(|p| (&p.sums[..], &p.counts[..])),
+            k,
+            d,
+        )
     }
 
     fn from_assignments_serial(data: &dyn DataSource, a: &[u32], k: usize) -> Self {

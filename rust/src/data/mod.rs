@@ -2,14 +2,16 @@
 //! paper datasets (Table 8 substitution), simple binary/CSV I/O, the
 //! block-lease [`DataSource`] seam every consumer reads samples through
 //! ([`BlockCursor`] / [`RowBlock`]), the [`BatchView`] sampled view the
-//! mini-batch engine draws through it, and the out-of-core sources
+//! mini-batch engine draws through it, the out-of-core sources
 //! ([`ooc`]) that cluster `.ekb` files larger than RAM behind the same
-//! seam.
+//! seam, and the network source ([`net`]) that leases rows from shard
+//! servers behind it too.
 
 pub mod batch;
 pub mod dataset;
 pub mod f32set;
 pub mod io;
+pub mod net;
 pub mod ooc;
 pub mod source;
 pub mod synth;
@@ -18,6 +20,7 @@ pub use batch::BatchView;
 pub use dataset::Dataset;
 pub use f32set::DatasetF32;
 pub use io::ElemWidth;
+pub use net::NetSource;
 pub use ooc::{ChunkedFileSource, OocMode};
 #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
 pub use ooc::MmapSource;

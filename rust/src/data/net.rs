@@ -1,0 +1,10 @@
+//! Network data source — a re-export shim.
+//!
+//! [`NetSource`] lives with the rest of the distributed subsystem in
+//! [`dist::netsource`](crate::dist::netsource) (it shares the wire
+//! codecs and the shard-connection client), but it *is* a
+//! [`DataSource`](crate::data::DataSource) like the others, so it is
+//! also reachable from here alongside `Dataset`, `MmapSource`, and
+//! `ChunkedFileSource`.
+
+pub use crate::dist::netsource::NetSource;

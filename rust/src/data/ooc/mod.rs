@@ -138,6 +138,24 @@ pub fn open_ooc(path: &Path, mode: OocMode, window_rows: usize) -> Result<Box<dy
     }
 }
 
+/// As [`open_ooc`], but I/O failures are wrapped with the path and the
+/// source mode — a missing `.ekb` used to surface the raw OS error
+/// ("No such file or directory") with no hint of *which* file or
+/// *which* backend was asked for it.
+pub fn open_ooc_described(
+    path: &Path,
+    mode: OocMode,
+    window_rows: usize,
+) -> Result<Box<dyn DataSource>> {
+    open_ooc(path, mode, window_rows).map_err(|e| match e {
+        crate::error::EakmError::Io(io) => crate::error::EakmError::Io(std::io::Error::new(
+            io.kind(),
+            format!("{} ({mode} source): {io}", path.display()),
+        )),
+        other => other,
+    })
+}
+
 /// Source name for reports: the file stem, exactly like
 /// [`load_bin`](crate::data::io::load_bin) names the in-memory dataset
 /// — so an out-of-core report is comparable to the in-memory one.

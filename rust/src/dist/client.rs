@@ -1,0 +1,138 @@
+//! Coordinator-side connection to one shard server.
+//!
+//! [`ShardConn`] wraps one TCP connection with the dist framing and the
+//! failure policy the coordinator needs: every transport outcome —
+//! connect refused, read timed out, peer closed, bogus frame, or an
+//! `ERR` reply — becomes a typed [`EakmError::Net`] *naming the shard
+//! address*, so a multi-node failure is attributable from the error
+//! alone. Connects retry with a short backoff (shards may still be
+//! binding when the coordinator starts); established-connection
+//! failures do not retry here — the compute plane surfaces them (a dead
+//! shard fails the fit) and the data plane's cursor reconnects at its
+//! own layer.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::error::{EakmError, Result};
+use crate::net::frame::{send_frame, Frame, FrameReader};
+
+use super::wire::{self, tag};
+
+/// Socket-level read timeout: how often a blocked read wakes so the
+/// reply deadline is re-checked.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+/// Connect attempts before giving up, with doubling backoff in between.
+const CONNECT_TRIES: u32 = 4;
+/// First inter-attempt backoff (doubles each retry: 50, 100, 200 ms).
+const CONNECT_BACKOFF: Duration = Duration::from_millis(50);
+
+/// One framed connection to a shard server.
+pub(crate) struct ShardConn {
+    /// The shard's address, verbatim from `--shards` (used in errors).
+    pub(crate) addr: String,
+    stream: TcpStream,
+    reader: FrameReader<TcpStream>,
+    /// Reply deadline for [`recv`](ShardConn::recv).
+    timeout: Duration,
+}
+
+impl ShardConn {
+    /// Connect with retry/backoff. `timeout` bounds every subsequent
+    /// reply wait.
+    pub(crate) fn connect(addr: &str, timeout: Duration) -> Result<ShardConn> {
+        let mut backoff = CONNECT_BACKOFF;
+        let mut last_err = None;
+        for attempt in 0..CONNECT_TRIES {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff *= 2;
+            }
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    stream
+                        .set_read_timeout(Some(READ_POLL))
+                        .map_err(|e| net(addr, format_args!("set read timeout: {e}")))?;
+                    let read_half = stream
+                        .try_clone()
+                        .map_err(|e| net(addr, format_args!("clone stream: {e}")))?;
+                    return Ok(ShardConn {
+                        addr: addr.to_string(),
+                        stream,
+                        reader: FrameReader::new(read_half, wire::MAX_FRAME),
+                        timeout,
+                    });
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(net(
+            addr,
+            format_args!(
+                "connect failed after {CONNECT_TRIES} attempts: {}",
+                last_err.expect("at least one attempt")
+            ),
+        ))
+    }
+
+    /// Send one frame.
+    pub(crate) fn send(&mut self, tag: u8, body: &[u8]) -> Result<()> {
+        if !send_frame(&mut self.stream, tag, body) {
+            return Err(net(&self.addr, format_args!("connection closed while sending")));
+        }
+        Ok(())
+    }
+
+    /// Receive one frame, honouring the reply timeout. An `ERR` frame
+    /// becomes a typed error carrying the shard's message.
+    pub(crate) fn recv(&mut self) -> Result<(u8, Vec<u8>)> {
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            match self.reader.next_frame(deadline.min(Instant::now() + READ_POLL)) {
+                Frame::Msg(t, body) => {
+                    if t == tag::ERR {
+                        return Err(net(
+                            &self.addr,
+                            format_args!("{}", wire::decode_err(&body)),
+                        ));
+                    }
+                    return Ok((t, body));
+                }
+                Frame::Idle => {
+                    if Instant::now() >= deadline {
+                        return Err(net(
+                            &self.addr,
+                            format_args!("timed out after {:?} waiting for a reply", self.timeout),
+                        ));
+                    }
+                }
+                Frame::Eof => {
+                    return Err(net(&self.addr, format_args!("connection closed")));
+                }
+                Frame::TooLong => {
+                    return Err(net(&self.addr, format_args!("oversized or malformed frame")));
+                }
+            }
+        }
+    }
+
+    /// Send a request and receive its reply, asserting the reply tag.
+    pub(crate) fn request(&mut self, req_tag: u8, body: &[u8], want: u8) -> Result<Vec<u8>> {
+        self.send(req_tag, body)?;
+        let (t, reply) = self.recv()?;
+        if t != want {
+            return Err(net(
+                &self.addr,
+                format_args!("unexpected reply tag {t} (wanted {want})"),
+            ));
+        }
+        Ok(reply)
+    }
+}
+
+/// A typed net error naming the shard.
+pub(crate) fn net(addr: &str, msg: std::fmt::Arguments<'_>) -> EakmError {
+    EakmError::Net(format!("shard {addr}: {msg}"))
+}

@@ -1,0 +1,485 @@
+//! The distributed round loop: [`DistEngine`] (stepwise) and
+//! [`run_dist`] (run-to-convergence, the `eakm run --shards` path).
+//!
+//! The coordinator holds the *global* model state — centroids, the
+//! running [`UpdateState`], and the assignment vector — and drives one
+//! compute-plane connection per shard. Each round it:
+//!
+//! 1. computes new centroids from the running sums (its own pool —
+//!    exactly [`UpdateState::centroids_pooled`], as single-node);
+//! 2. broadcasts them (`ROUND`) to every shard — *sends first, then
+//!    reads replies in shard order*, so shards scan concurrently;
+//! 3. merges replies **in shard order**: scan counters add up, moved
+//!    lists concatenate (each shard's list is ascending in global
+//!    sample index and shard ranges are ordered, so the concatenation
+//!    is exactly the single-node moved list), and the centroid-side
+//!    build counters — identical on every shard by construction — are
+//!    merged once and cross-checked;
+//! 4. applies the moves to the global state the same way the
+//!    single-node engine does: the delta update replays the merged
+//!    moved list ([`UpdateState::apply_moves_pooled`] over the
+//!    [`NetSource`]); full-update algorithms rebuild from per-chunk
+//!    partial sums the shards computed with the shared
+//!    [`scan_chunk`](crate::coordinator::update::scan_chunk) loop
+//!    (bit-identical to the single-node pooled rebuild because the
+//!    chunk grid is global), falling back to a rebuild through the
+//!    network source when shard boundaries don't land on chunk
+//!    boundaries.
+//!
+//! See [`dist`](crate::dist) for the full determinism argument. The
+//! upshot: every quantity the run reports — assignments, MSE bits,
+//! bound counters, iteration count — is **bit-identical to the
+//! single-node run at any shard count and any thread width**, which
+//! `tests/dist.rs` asserts.
+//!
+//! ## Failure semantics
+//!
+//! [`DistEngine::step`] returns a [`Result`]: a shard that dies
+//! mid-fit (connection drops, times out, or replies `ERR`) surfaces as
+//! a typed [`EakmError::Net`](crate::error::EakmError::Net) *naming
+//! the shard address* — never a hang. The engine is not usable after
+//! an error (the surviving shards' sessions are out of sync); callers
+//! abandon the fit.
+
+use std::time::{Duration, Instant};
+
+use crate::algorithms::Algorithm;
+use crate::config::RunConfig;
+use crate::coordinator::groups::GroupData;
+use crate::coordinator::history::HistoryStore;
+use crate::coordinator::runner::RunOutput;
+use crate::coordinator::update::{chunk_len, merge_partial_sums, UpdateState};
+use crate::data::DataSource;
+use crate::error::{EakmError, Result};
+use crate::metrics::{Counters, PhaseTimes, RunReport};
+use crate::rng::Rng;
+use crate::runtime::pool::WorkerPool;
+use crate::runtime::Runtime;
+
+use super::client::{net, ShardConn};
+use super::netsource::NetSource;
+use super::wire::{tag, ChunkPartial, FitInit, FitOk, Round, RoundOk};
+
+/// Reply timeout for compute-plane requests (a shard scan of a large
+/// range can legitimately take a while; a dead shard fails much faster
+/// via connection reset).
+pub const DEFAULT_NET_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// A stepwise distributed k-means engine: one `step()` = one update +
+/// one broadcast round across the shards.
+pub struct DistEngine<'a> {
+    net: &'a NetSource,
+    /// Compute-plane connections, in shard (= merge) order.
+    conns: Vec<ShardConn>,
+    pool: &'a WorkerPool,
+    n: usize,
+    d: usize,
+    k: usize,
+    a: Vec<u32>,
+    centroids: Vec<f64>,
+    update: UpdateState,
+    full_update: bool,
+    want_partials: bool,
+    counters: Counters,
+    phases: PhaseTimes,
+    converged: bool,
+    rounds: usize,
+    name: String,
+    last_moved: usize,
+}
+
+impl<'a> DistEngine<'a> {
+    /// Seed and start a fit session on every shard of `net`, mirroring
+    /// the single-node `Engine` build: the empty-source guard, config
+    /// validation, `Auto` resolution, seeding from `cfg.init` with the
+    /// config's RNG stream, and the round-0 full assignment — except
+    /// the scan runs on the shards.
+    pub fn connect(rt: &'a Runtime, cfg: &RunConfig, net: &'a NetSource) -> Result<Self> {
+        if net.n() == 0 || net.d() == 0 {
+            return Err(EakmError::Data(format!(
+                "cannot cluster an empty data source (n={}, d={})",
+                net.n(),
+                net.d()
+            )));
+        }
+        cfg.validate(net.n())?;
+        let (n, d, k) = (net.n(), net.d(), cfg.k);
+        let alg = match cfg.algorithm {
+            Algorithm::Auto => crate::coordinator::auto::resolve(d),
+            other => other,
+        };
+        let g = GroupData::group_count(k);
+        let probe = alg.make_shard(0, 0, k, g);
+        let req = probe.requirements();
+        let name = probe.name().to_string();
+        drop(probe);
+        let pool = rt.pool();
+
+        // seeding runs on the coordinator (it consumes the RNG stream),
+        // reading sample rows through the network source
+        let mut counters = Counters::default();
+        let mut phases = PhaseTimes::default();
+        let mut rng = Rng::new(cfg.seed);
+        let centroids = cfg.init.centroids(net, k, &mut rng, &mut counters);
+
+        // the ns-history cap is a function of the *global* row count —
+        // computed here once and shipped, never derived shard-locally
+        let hist_cap = cfg
+            .history_cap
+            .unwrap_or_else(|| HistoryStore::paper_cap(n, k, d, cfg.history_budget));
+
+        // the full-sums fast path needs the global chunk grid to land
+        // on shard boundaries (chunks must not straddle shards) and the
+        // single-node reference to take the pooled (chunked) path
+        let clen = chunk_len(n);
+        let want_partials = n > clen && net.metas().iter().all(|m| m.lo % clen == 0);
+
+        let init = FitInit {
+            alg: alg.to_string(),
+            k,
+            d,
+            seed: cfg.seed,
+            hist_cap,
+            want_partials,
+            centroids: centroids.clone(),
+        };
+        let mut conns = Vec::with_capacity(net.metas().len());
+        for m in net.metas() {
+            conns.push(ShardConn::connect(&m.addr, net.timeout())?);
+        }
+
+        // round 0: broadcast the seed, collect every shard's full
+        // assignment of its range
+        let t_scan = Instant::now();
+        let body = init.encode();
+        for conn in &mut conns {
+            conn.send(tag::FIT_INIT, &body)?;
+        }
+        let mut a = vec![0u32; n];
+        let mut build_ctr: Option<Counters> = None;
+        let mut partials: Vec<Vec<ChunkPartial>> = Vec::with_capacity(conns.len());
+        for (conn, m) in conns.iter_mut().zip(net.metas()) {
+            let reply = conn.request_reply(tag::FIT_OK)?;
+            let fit = FitOk::decode(&reply).map_err(|e| reply_err(&conn.addr, e))?;
+            if fit.assignments.len() != m.hi - m.lo {
+                return Err(net(
+                    &conn.addr,
+                    format_args!(
+                        "returned {} assignments for {} rows",
+                        fit.assignments.len(),
+                        m.hi - m.lo
+                    ),
+                ));
+            }
+            a[m.lo..m.hi].copy_from_slice(&fit.assignments);
+            merge_build_ctr(&mut build_ctr, &fit.build_ctr, &mut counters, &conn.addr)?;
+            counters.merge(&fit.scan_ctr);
+            partials.push(fit.partials);
+        }
+        phases.scan += t_scan.elapsed();
+
+        let t_update = Instant::now();
+        let update = if want_partials {
+            assemble_update(&partials, n, k, d)?
+        } else {
+            UpdateState::from_assignments_pooled(net, &a, k, pool)
+        };
+        phases.update += t_update.elapsed();
+
+        Ok(DistEngine {
+            net,
+            conns,
+            pool,
+            n,
+            d,
+            k,
+            a,
+            centroids,
+            update,
+            full_update: req.full_update,
+            want_partials,
+            counters,
+            phases,
+            converged: false,
+            rounds: 0,
+            name,
+            last_moved: usize::MAX,
+        })
+    }
+
+    /// One Lloyd round (update step + broadcast assignment step).
+    /// Returns the number of samples that changed cluster, or a typed
+    /// error naming the shard that failed.
+    pub fn step(&mut self) -> Result<usize> {
+        if self.converged {
+            return Ok(0);
+        }
+        let (d, k, n) = (self.d, self.k, self.n);
+        // update step — identical arithmetic to single-node
+        let t_update = Instant::now();
+        self.centroids = self.update.centroids_pooled(&self.centroids, d, self.pool);
+        self.phases.update += t_update.elapsed();
+        // centroid-side rebuilds + assignment scan happen on the
+        // shards; the whole round trip is charged to the scan phase
+        let t_scan = Instant::now();
+        let body = Round {
+            centroids: self.centroids.clone(),
+        }
+        .encode();
+        for conn in &mut self.conns {
+            conn.send(tag::ROUND, &body)?;
+        }
+        let mut moved = Vec::new();
+        let mut build_ctr: Option<Counters> = None;
+        let mut partials: Vec<Vec<ChunkPartial>> = Vec::with_capacity(self.conns.len());
+        for conn in &mut self.conns {
+            let reply = conn.request_reply(tag::ROUND_OK)?;
+            let round = RoundOk::decode(&reply).map_err(|e| reply_err(&conn.addr, e))?;
+            merge_build_ctr(&mut build_ctr, &round.build_ctr, &mut self.counters, &conn.addr)?;
+            self.counters.merge(&round.scan_ctr);
+            for m in &round.moved {
+                if m.i as usize >= n || m.to as usize >= k {
+                    return Err(net(
+                        &conn.addr,
+                        format_args!("move ({}, {} → {}) out of range", m.i, m.from, m.to),
+                    ));
+                }
+            }
+            moved.extend_from_slice(&round.moved);
+            partials.push(round.partials);
+        }
+        self.phases.scan += t_scan.elapsed();
+
+        let t_apply = Instant::now();
+        for m in &moved {
+            self.a[m.i as usize] = m.to;
+        }
+        if self.full_update {
+            self.update = if self.want_partials {
+                assemble_update(&partials, n, k, d)?
+            } else {
+                UpdateState::from_assignments_pooled(self.net, &self.a, k, self.pool)
+            };
+        } else {
+            self.update.apply_moves_pooled(self.net, &moved, self.pool);
+        }
+        self.phases.update += t_apply.elapsed();
+        self.rounds += 1;
+        self.last_moved = moved.len();
+        self.converged = moved.is_empty();
+        Ok(moved.len())
+    }
+
+    /// End the fit sessions (best-effort: a shard that already died is
+    /// ignored — the fit result is complete without it).
+    pub fn finish(&mut self) {
+        for conn in &mut self.conns {
+            if conn.send(tag::FIT_END, &[]).is_ok() {
+                let _ = conn.recv();
+            }
+        }
+    }
+
+    /// Current assignments.
+    pub fn assignments(&self) -> &[u32] {
+        &self.a
+    }
+
+    /// Current centroids (row-major `k×d`).
+    pub fn centroids(&self) -> &[f64] {
+        &self.centroids
+    }
+
+    /// Whether the last round moved nothing.
+    pub fn converged(&self) -> bool {
+        self.converged
+    }
+
+    /// Rounds executed so far (excluding the initial assignment).
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Accumulated distance counters (coordinator seeding + one copy of
+    /// the shard-identical build counters + all scan counters).
+    pub fn counters(&self) -> Counters {
+        self.counters
+    }
+
+    /// Accumulated per-phase wall times (`scan` includes the shards'
+    /// centroid-side build work — the round trip is not decomposable
+    /// from here).
+    pub fn phases(&self) -> PhaseTimes {
+        self.phases
+    }
+
+    /// The coordinator pool's width.
+    pub fn threads(&self) -> usize {
+        self.pool.width()
+    }
+
+    /// Samples moved in the last round.
+    pub fn last_moved(&self) -> usize {
+        self.last_moved
+    }
+
+    /// Resolved algorithm name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Objective (mean squared distance to assigned centroid), computed
+    /// through the network source with the shared serial walk.
+    pub fn mse(&self) -> f64 {
+        self.net.mse(&self.centroids, &self.a)
+    }
+}
+
+impl ShardConn {
+    /// Receive one reply and assert its tag (`ERR` already became a
+    /// typed error in [`recv`](ShardConn::recv)).
+    fn request_reply(&mut self, want: u8) -> Result<Vec<u8>> {
+        let (t, body) = self.recv()?;
+        if t != want {
+            return Err(net(
+                &self.addr,
+                format_args!("unexpected reply tag {t} (wanted {want})"),
+            ));
+        }
+        Ok(body)
+    }
+}
+
+/// Merge one shard's centroid-side build counters: the first shard's
+/// are added to the totals (the build happens once per fit, logically);
+/// every later shard must report identical numbers — the builds are
+/// pure functions of (centroids, k, d, seed) — or the determinism
+/// contract is broken.
+fn merge_build_ctr(
+    first: &mut Option<Counters>,
+    ctr: &Counters,
+    totals: &mut Counters,
+    addr: &str,
+) -> Result<()> {
+    match *first {
+        None => {
+            *first = Some(*ctr);
+            totals.merge(ctr);
+            Ok(())
+        }
+        Some(expect) if expect == *ctr => Ok(()),
+        Some(expect) => Err(EakmError::Invariant(format!(
+            "shard {addr} build counters diverge from shard 0 \
+             ({ctr:?} vs {expect:?}) — centroid-side builds must be \
+             identical on every shard"
+        ))),
+    }
+}
+
+/// Rebuild the [`UpdateState`] from per-shard, per-global-chunk partial
+/// sums: validate that the shards together returned exactly the chunks
+/// `0..n.div_ceil(chunk_len(n))` in order, then fold them with the same
+/// [`merge_partial_sums`] loop the single-node pooled rebuild uses —
+/// same grid, same accumulation order, bit-identical sums.
+fn assemble_update(
+    per_shard: &[Vec<ChunkPartial>],
+    n: usize,
+    k: usize,
+    d: usize,
+) -> Result<UpdateState> {
+    let nchunks = n.div_ceil(chunk_len(n));
+    let mut parts: Vec<&ChunkPartial> = Vec::with_capacity(nchunks);
+    for ps in per_shard {
+        parts.extend(ps.iter());
+    }
+    if parts.len() != nchunks {
+        return Err(EakmError::Net(format!(
+            "shards returned {} chunk partials, expected {nchunks}",
+            parts.len()
+        )));
+    }
+    for (c, p) in parts.iter().enumerate() {
+        if p.chunk as usize != c || p.sums.len() != k * d || p.counts.len() != k {
+            return Err(EakmError::Net(format!(
+                "chunk partial {c} is malformed (chunk id {}, {} sums, {} counts)",
+                p.chunk,
+                p.sums.len(),
+                p.counts.len()
+            )));
+        }
+    }
+    Ok(merge_partial_sums(
+        parts.iter().map(|p| (&p.sums[..], &p.counts[..])),
+        k,
+        d,
+    ))
+}
+
+fn reply_err(addr: &str, e: EakmError) -> EakmError {
+    net(addr, format_args!("malformed reply: {e}"))
+}
+
+/// Cluster the rows served by `addrs` to convergence (or a configured
+/// limit) on a shared [`Runtime`] — the distributed mirror of
+/// `Runner::run_on`, producing the same [`RunOutput`] / report shape.
+///
+/// With [`RunConfig::batch_size`] below the global row count the run is
+/// dispatched to the mini-batch engine over the [`NetSource`] — a pure
+/// data-plane fit: only row blocks cross the network.
+pub fn run_dist(rt: &Runtime, cfg: &RunConfig, addrs: &[String]) -> Result<RunOutput> {
+    let net = NetSource::connect(addrs, 0, DEFAULT_NET_TIMEOUT)?;
+    if let Some(batch) = cfg.batch_size {
+        if batch < net.n() {
+            return crate::coordinator::minibatch::run_minibatch(rt, cfg, &net);
+        }
+    }
+    let io_before = net.io_stats();
+    let start = Instant::now();
+    let mut engine = DistEngine::connect(rt, cfg, &net)?;
+    let mut round_times = Vec::new();
+    while !engine.converged() && engine.rounds() < cfg.max_iters {
+        if let Some(limit) = cfg.time_limit {
+            if start.elapsed() > limit {
+                break;
+            }
+        }
+        let t0 = Instant::now();
+        engine.step()?;
+        if cfg.record_rounds {
+            round_times.push(t0.elapsed());
+        }
+    }
+    engine.finish();
+    let wall = start.elapsed();
+    let mse = engine.mse();
+    let io = match (io_before, net.io_stats()) {
+        (Some(before), Some(after)) => Some(after.since(&before)),
+        _ => None,
+    };
+    let report = RunReport {
+        algorithm: engine.name().to_string(),
+        dataset: net.name().to_string(),
+        k: cfg.k,
+        seed: cfg.seed,
+        iterations: engine.rounds(),
+        converged: engine.converged(),
+        mse,
+        wall,
+        threads: engine.threads(),
+        phases: engine.phases(),
+        counters: engine.counters(),
+        round_times,
+        batch: None,
+        io,
+    };
+    Ok(RunOutput {
+        assignments: engine.assignments().to_vec(),
+        centroids: engine.centroids().to_vec(),
+        iterations: engine.rounds(),
+        converged: engine.converged(),
+        mse,
+        counters: engine.counters(),
+        wall,
+        report,
+    })
+}

@@ -1,0 +1,76 @@
+//! Distributed fit: shard servers, a network
+//! [`DataSource`](crate::data::DataSource), and a bit-identical
+//! multi-node round protocol.
+//!
+//! The subsystem splits a fit across processes (or machines) without
+//! changing a single result bit:
+//!
+//! * [`shardd`] — a shard server (`eakm shardd`) owning one global row
+//!   range of an `.ekb` file. It serves a **data plane** (stream row
+//!   blocks + sidecar-exact norms to remote cursors) and a **compute
+//!   plane** (run the local assignment scan for a fit session and
+//!   return counters, moved lists, and partial sums).
+//! * [`NetSource`] — a [`DataSource`] over the data plane, so every
+//!   existing algorithm (mini-batch included) fits over the network
+//!   unchanged.
+//! * [`DistEngine`] / [`run_dist`] — the coordinator: seeds locally,
+//!   broadcasts centroids each round, merges shard replies in shard
+//!   order (`eakm run --shards host:port,host:port`).
+//!
+//! The dependency-free wire protocol (length-prefixed binary frames)
+//! is specified in [`wire`]; both planes share the
+//! [`net::frame`](crate::net::frame) codec with the model server.
+//!
+//! ## Why the distributed fit is bit-identical
+//!
+//! Every source of nondeterminism is pinned, one by one:
+//!
+//! * **Seeding** runs on the coordinator with the config's RNG stream,
+//!   reading rows through the network source — same bytes, same draws
+//!   as a local run.
+//! * **Per-sample algorithm state** (bounds, assignments) depends only
+//!   on the sample's own history against the shared centroid stream —
+//!   never on which shard or thread scanned it — so any partition of
+//!   the rows computes the same per-sample results.
+//! * **Centroid-side builds** (inter-centroid structures, groups,
+//!   ns-history) are pure functions of `(centroids, k, d, seed)`;
+//!   every shard computes them identically, the coordinator counts
+//!   them once and cross-checks equality. The ns-history *cap* is a
+//!   function of the global row count, computed on the coordinator and
+//!   shipped in `FIT_INIT`.
+//! * **Merges are order-fixed**: replies are read in shard order, and
+//!   shard ranges tile `[0, n)` in that order, so concatenated moved
+//!   lists are exactly the single-node ascending moved list; counters
+//!   are `u64` sums (order-free).
+//! * **Centroid sums**: the delta update replays the identical moved
+//!   list through the same pooled loop; full-update algorithms rebuild
+//!   from per-chunk partials on the *global* chunk grid, folded with
+//!   the same merge loop as the single-node pooled rebuild — used only
+//!   when every shard boundary lands on a chunk boundary (else the
+//!   coordinator rebuilds through the network source, which is the
+//!   single-node code path verbatim).
+//!
+//! `tests/dist.rs` asserts the consequence: assignments, MSE bits,
+//! counters, and iteration counts are identical to single-node at
+//! every tested shard count and thread width.
+//!
+//! ## Failure semantics
+//!
+//! Shards are validated when a fit or source connects; afterwards the
+//! two planes differ. The **compute plane** returns `Result`s — a dead
+//! shard becomes a typed [`EakmError::Net`](crate::error::EakmError::Net)
+//! naming the shard address, never a hang (every wait is bounded by a
+//! reply timeout). The **data plane** sits behind the infallible
+//! `lease` contract, so its cursors retry with reconnect + backoff and
+//! then panic naming the failure — the same contract as an `.ekb` file
+//! vanishing mid-run on a local out-of-core source.
+
+pub mod client;
+pub mod coordinator;
+pub mod netsource;
+pub mod shardd;
+pub mod wire;
+
+pub use coordinator::{run_dist, DistEngine, DEFAULT_NET_TIMEOUT};
+pub use netsource::NetSource;
+pub use shardd::{shardd, ShardConfig};

@@ -1,0 +1,381 @@
+//! [`NetSource`] — a [`DataSource`] whose rows live on shard servers.
+//!
+//! The source speaks only the **data plane** of the dist protocol
+//! ([`wire`](super::wire)): at connect time it `OPEN`s every shard once
+//! to learn the global shape and each shard's row range, validates that
+//! the ranges tile `[0, n)` contiguously in the order given, and then
+//! serves the block-lease contract by `LEASE`-ing row blocks on demand.
+//! Because the shards stream the same little-endian `.ekb` payload
+//! bytes and sidecar-exact norms the local out-of-core sources decode,
+//! every consumer — exact fits, mini-batch, seeding, prediction — sees
+//! **bit-identical rows and norms** to a local run over the same file.
+//!
+//! ## Cursor model
+//!
+//! [`open`](DataSource::open) hands each pool worker a private cursor
+//! with one lazily-dialed connection per shard and a resident window of
+//! [`window_rows`](NetSource::window_rows) decoded rows, refilled with
+//! the same streaming/random heuristic as
+//! [`ChunkedFileSource`](crate::data::ChunkedFileSource): monotone
+//! scans fetch full windows (few round trips), isolated single-row
+//! gathers fetch small blocks (little read amplification). A refill
+//! that crosses a shard boundary issues one `LEASE` per shard touched
+//! and splices the blocks.
+//!
+//! ## Failure semantics
+//!
+//! Shards are validated at connect; the lease path is infallible by
+//! contract (`lease` returns a block, not a `Result`), so a shard that
+//! dies **mid-fit** is handled like a file that vanishes mid-run in the
+//! out-of-core sources: the cursor retries with reconnect + backoff
+//! ([`LEASE_TRIES`]) and then panics naming the shard. Fits driven by
+//! the compute plane (`eakm run --shards` with an exact algorithm) do
+//! not take this path for the scan itself — there a dead shard is a
+//! typed [`EakmError::Net`](crate::error::EakmError::Net) from the
+//! coordinator — but mini-batch and seeding read through cursors and
+//! accept the panic contract.
+
+use std::time::Duration;
+
+use crate::data::io::{decode_widen_le, ElemWidth};
+use crate::data::ooc::DEFAULT_WINDOW_ROWS;
+use crate::data::source::{BlockCursor, RowBlock};
+use crate::data::DataSource;
+use crate::error::Result;
+use crate::metrics::IoTelemetry;
+
+use super::client::{net, ShardConn};
+use super::wire::{tag, Block, Lease, OpenOk};
+
+// The shared IoCounters lives with the other sources.
+use crate::data::ooc::IoCounters;
+
+/// Rows fetched for an isolated single-row lease (random access), as in
+/// the chunked source: gathers cost `O(picks)` small round trips, not
+/// `O(picks × window)`.
+const RANDOM_WINDOW_ROWS: usize = 64;
+
+/// Lease attempts per block before the cursor gives up (reconnect +
+/// doubling backoff between attempts).
+const LEASE_TRIES: u32 = 3;
+/// First inter-attempt backoff (doubles: 50, 100 ms).
+const LEASE_BACKOFF: Duration = Duration::from_millis(50);
+
+/// One shard's identity as learned from its `OPEN_OK`.
+#[derive(Clone, Debug)]
+pub(crate) struct ShardMeta {
+    /// Address verbatim from `--shards` (used in errors).
+    pub(crate) addr: String,
+    /// First global row this shard owns.
+    pub(crate) lo: usize,
+    /// One past the last global row this shard owns.
+    pub(crate) hi: usize,
+    /// Storage width of the shard's `.ekb` payload.
+    pub(crate) width: ElemWidth,
+}
+
+/// A network-backed [`DataSource`]: rows are `LEASE`d from shard
+/// servers over the dist data plane.
+pub struct NetSource {
+    metas: Vec<ShardMeta>,
+    n: usize,
+    d: usize,
+    name: String,
+    window_rows: usize,
+    timeout: Duration,
+    io: IoCounters,
+}
+
+impl NetSource {
+    /// Dial every shard, learn the global shape, and validate coverage:
+    /// the shards' `[lo, hi)` ranges must tile `[0, n)` contiguously
+    /// **in the order given** (shard order is merge order — see the
+    /// determinism argument in [`dist`](crate::dist)). A `window_rows`
+    /// of 0 selects [`DEFAULT_WINDOW_ROWS`].
+    pub fn connect(addrs: &[String], window_rows: usize, timeout: Duration) -> Result<NetSource> {
+        if addrs.is_empty() {
+            return Err(crate::error::EakmError::Config(
+                "--shards needs at least one shard address".into(),
+            ));
+        }
+        let mut metas = Vec::with_capacity(addrs.len());
+        let mut shape: Option<(usize, usize)> = None;
+        let mut name = String::new();
+        for addr in addrs {
+            let mut conn = ShardConn::connect(addr, timeout)?;
+            let reply = conn.request(tag::OPEN, &[], tag::OPEN_OK)?;
+            let ok = OpenOk::decode(&reply)?;
+            match shape {
+                None => {
+                    shape = Some((ok.n, ok.d));
+                    name = ok.name.clone();
+                }
+                Some((n, d)) => {
+                    if (ok.n, ok.d) != (n, d) {
+                        return Err(net(
+                            addr,
+                            format_args!(
+                                "serves a {}×{} dataset, other shards serve {n}×{d}",
+                                ok.n, ok.d
+                            ),
+                        ));
+                    }
+                }
+            }
+            metas.push(ShardMeta {
+                addr: addr.clone(),
+                lo: ok.lo,
+                hi: ok.hi,
+                width: ok.width,
+            });
+        }
+        let (n, d) = shape.expect("addrs is nonempty");
+        let mut expect_lo = 0usize;
+        for m in &metas {
+            if m.lo != expect_lo {
+                return Err(net(
+                    &m.addr,
+                    format_args!(
+                        "owns rows [{}, {}) but [{expect_lo}, …) is next — shard ranges must \
+                         tile [0, {n}) contiguously in --shards order",
+                        m.lo, m.hi
+                    ),
+                ));
+            }
+            if m.hi <= m.lo || m.hi > n {
+                return Err(net(
+                    &m.addr,
+                    format_args!("owns an invalid row range [{}, {}) of n={n}", m.lo, m.hi),
+                ));
+            }
+            expect_lo = m.hi;
+        }
+        if expect_lo != n {
+            return Err(crate::error::EakmError::Net(format!(
+                "shards cover rows [0, {expect_lo}) but the dataset has {n} rows — \
+                 every row must be owned by exactly one shard"
+            )));
+        }
+        let window_rows = if window_rows == 0 {
+            DEFAULT_WINDOW_ROWS
+        } else {
+            window_rows
+        };
+        Ok(NetSource {
+            metas,
+            n,
+            d,
+            name,
+            window_rows,
+            timeout,
+            io: IoCounters::default(),
+        })
+    }
+
+    /// Resident-window size in rows.
+    pub fn window_rows(&self) -> usize {
+        self.window_rows
+    }
+
+    /// Shard identities in `--shards` (= merge) order.
+    pub(crate) fn metas(&self) -> &[ShardMeta] {
+        &self.metas
+    }
+
+    /// Reply timeout the source dials shards with.
+    pub(crate) fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    /// Index of the shard owning global row `row`.
+    fn shard_for(&self, row: usize) -> usize {
+        self.metas.partition_point(|m| m.hi <= row)
+    }
+}
+
+impl DataSource for NetSource {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn open(&self, lo: usize, len: usize) -> Box<dyn BlockCursor + '_> {
+        assert!(lo + len <= self.n, "open range out of bounds");
+        Box::new(NetCursor {
+            src: self,
+            conns: self.metas.iter().map(|_| None).collect(),
+            range_lo: lo,
+            range_len: len,
+            win_lo: 0,
+            win_len: 0,
+            buf: Vec::new(),
+            norms: Vec::new(),
+        })
+    }
+
+    fn io_stats(&self) -> Option<IoTelemetry> {
+        Some(self.io.snapshot())
+    }
+}
+
+/// One worker's window over a [`NetSource`], with a lazily-dialed
+/// connection per shard (cursors run concurrently across pool workers,
+/// so they cannot share sockets).
+struct NetCursor<'a> {
+    src: &'a NetSource,
+    conns: Vec<Option<ShardConn>>,
+    range_lo: usize,
+    range_len: usize,
+    /// Resident window: rows `[win_lo, win_lo + win_len)` decoded in
+    /// `buf`, their norms in `norms`.
+    win_lo: usize,
+    win_len: usize,
+    buf: Vec<f64>,
+    norms: Vec<f64>,
+}
+
+impl NetCursor<'_> {
+    /// Refill the window to start at `lo`, covering at least `len` rows
+    /// (same heuristic as the chunked cursor; see module docs).
+    fn refill(&mut self, lo: usize, len: usize) {
+        let src = self.src;
+        let end = self.range_lo + self.range_len;
+        let streaming = self.win_len > 0 && lo == self.win_lo + self.win_len;
+        let target = if len > 1 || streaming {
+            src.window_rows
+        } else {
+            RANDOM_WINDOW_ROWS.min(src.window_rows)
+        };
+        let take = target.max(len).min(end - lo);
+        self.buf.clear();
+        self.norms.clear();
+        let mut bytes = 0u64;
+        let mut cur = lo;
+        let stop = lo + take;
+        while cur < stop {
+            let s = src.shard_for(cur);
+            let chunk = stop.min(src.metas[s].hi) - cur;
+            let block = self.fetch(s, cur, chunk);
+            // count wire payload bytes: rows at storage width + norms
+            bytes += (block.rows.len() + block.norms.len() * 8) as u64;
+            decode_widen_le(block.width, &block.rows, &mut self.buf);
+            self.norms.extend_from_slice(&block.norms);
+            cur += chunk;
+        }
+        self.win_lo = lo;
+        self.win_len = take;
+        src.io.add_refill();
+        src.io.add_bytes(bytes);
+    }
+
+    /// Lease rows `[lo, lo + len)` from shard `s`, retrying with
+    /// reconnect + backoff; the shards were validated at connect, so
+    /// one staying dead is not a recoverable lease outcome (the same
+    /// contract as an `.ekb` file vanishing mid-run).
+    fn fetch(&mut self, s: usize, lo: usize, len: usize) -> Block {
+        let mut backoff = LEASE_BACKOFF;
+        let mut last = None;
+        for attempt in 0..LEASE_TRIES {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff *= 2;
+            }
+            match self.try_fetch(s, lo, len) {
+                Ok(block) => return block,
+                Err(e) => {
+                    // drop the connection: the stream may hold a
+                    // half-read reply, so it cannot be reused
+                    self.conns[s] = None;
+                    last = Some(e);
+                }
+            }
+        }
+        panic!(
+            "net source: leasing rows [{lo}, {}) failed after {LEASE_TRIES} attempts: {}",
+            lo + len,
+            last.expect("at least one attempt")
+        );
+    }
+
+    fn try_fetch(&mut self, s: usize, lo: usize, len: usize) -> Result<Block> {
+        let src = self.src;
+        let meta = &src.metas[s];
+        if self.conns[s].is_none() {
+            let mut conn = ShardConn::connect(&meta.addr, src.timeout)?;
+            let reply = conn.request(tag::OPEN, &[], tag::OPEN_OK)?;
+            let ok = OpenOk::decode(&reply)?;
+            if (ok.n, ok.d, ok.lo, ok.hi) != (src.n, src.d, meta.lo, meta.hi) {
+                return Err(net(
+                    &meta.addr,
+                    format_args!(
+                        "shard shape changed between connects \
+                         (now {}×{} rows [{}, {}))",
+                        ok.n, ok.d, ok.lo, ok.hi
+                    ),
+                ));
+            }
+            self.conns[s] = Some(conn);
+        }
+        let conn = self.conns[s].as_mut().expect("dialed above");
+        let req = Lease { lo, len };
+        let reply = conn.request(tag::LEASE, &req.encode(), tag::BLOCK)?;
+        let block = Block::decode(&reply, src.d)?;
+        if block.width != meta.width {
+            return Err(net(
+                &meta.addr,
+                format_args!(
+                    "block storage width changed mid-stream ({} → {} bytes/elem)",
+                    meta.width.bytes(),
+                    block.width.bytes()
+                ),
+            ));
+        }
+        if block.lo != lo || block.len != len {
+            return Err(net(
+                &meta.addr,
+                format_args!(
+                    "lease returned rows [{}, {}), wanted [{lo}, {})",
+                    block.lo,
+                    block.lo + block.len,
+                    lo + len
+                ),
+            ));
+        }
+        Ok(block)
+    }
+}
+
+impl BlockCursor for NetCursor<'_> {
+    fn d(&self) -> usize {
+        self.src.d
+    }
+
+    fn lease(&mut self, lo: usize, len: usize) -> RowBlock<'_> {
+        assert!(
+            lo >= self.range_lo && lo + len <= self.range_lo + self.range_len,
+            "lease [{lo}, {}) outside cursor range [{}, {})",
+            lo + len,
+            self.range_lo,
+            self.range_lo + self.range_len
+        );
+        if lo < self.win_lo || lo + len > self.win_lo + self.win_len {
+            self.refill(lo, len);
+        }
+        self.src.io.add_block();
+        let d = self.src.d;
+        let off = lo - self.win_lo;
+        RowBlock::new(
+            lo,
+            d,
+            &self.buf[off * d..(off + len) * d],
+            &self.norms[off..off + len],
+        )
+    }
+}

@@ -1,0 +1,492 @@
+//! The shard server: owns one row range of an `.ekb` file and serves
+//! both planes of the dist protocol.
+//!
+//! One process (or in-process [`shardd`] call, for tests) per shard.
+//! The server opens the *full* file through the out-of-core seam —
+//! global row indices stay valid — but answers only for its configured
+//! range `[lo, hi)`:
+//!
+//! * **data plane** (`OPEN`/`LEASE`): stream row blocks at the file's
+//!   storage width plus sidecar-exact f64 squared norms, so a remote
+//!   [`NetSource`](crate::dist::netsource::NetSource) cursor sees
+//!   exactly the bytes a local source would;
+//! * **compute plane** (`FIT_INIT`/`ROUND`): run the local assignment
+//!   scan — the same [`run_shards`] the single-node engine uses, over
+//!   thread-shards offset to global indices — and return counters,
+//!   moved lists (global indices), and optionally per-global-chunk
+//!   partial sums computed by the shared
+//!   [`scan_chunk`](crate::coordinator::update::scan_chunk) loop.
+//!
+//! Connections are handled by one scoped thread each (shards talk to
+//! exactly one coordinator; a fixed acceptor budget could deadlock a
+//! coordinator whose workers hold data-plane connections to several
+//! shards at once). Compute-plane work is serialised behind a mutex —
+//! the worker pool is one resource, and nested/concurrent broadcasts
+//! are not a thing it supports. A `SHUTDOWN` frame (tests) or process
+//! kill (CI) stops the server; the accept loop polls a nonblocking
+//! listener so shutdown can never strand it.
+
+use std::fs::File;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::algorithms::common::{AssignStep, Requirements};
+use crate::algorithms::Algorithm;
+use crate::coordinator::groups::GroupData;
+use crate::coordinator::history::HistoryStore;
+use crate::coordinator::parallel::{make_shards, run_shards};
+use crate::coordinator::round_ctx::RoundCtxOwner;
+use crate::coordinator::update::{chunk_len, scan_chunk, Partial};
+use crate::data::io::{read_bin_header, ElemWidth};
+use crate::data::ooc::{open_ooc_described, stem_name, OocMode, DEFAULT_WINDOW_ROWS};
+use crate::data::{BlockCursor, DataSource};
+use crate::error::{EakmError, Result};
+use crate::metrics::Counters;
+use crate::net::frame::{send_frame, Frame, FrameReader};
+use crate::runtime::pool::WorkerPool;
+use crate::runtime::rt::resolve_threads;
+
+use super::wire::{self, tag, Block, ChunkPartial, FitInit, FitOk, Lease, OpenOk, Round, RoundOk};
+
+/// How often a connection read wakes to re-check the shutdown flag.
+const READ_POLL: Duration = Duration::from_millis(100);
+/// How long an idle accept loop sleeps between polls.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Configuration for one shard server (the `eakm shardd` subcommand).
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// The `.ekb` file (every shard has the full file; the range below
+    /// selects which rows this shard owns).
+    pub data: PathBuf,
+    /// Owned global row range `[lo, hi)`.
+    pub rows: (usize, usize),
+    /// Bind address (`host:port`; port 0 picks an ephemeral port).
+    pub addr: String,
+    /// Worker threads for the local scan (0 = auto).
+    pub threads: usize,
+    /// Out-of-core backend for reading the file.
+    pub mode: OocMode,
+    /// Resident-window rows for the chunked backend.
+    pub window_rows: usize,
+}
+
+impl ShardConfig {
+    /// A loopback config for `[lo, hi)` of `data` with serial scans.
+    pub fn new(data: PathBuf, lo: usize, hi: usize) -> Self {
+        ShardConfig {
+            data,
+            rows: (lo, hi),
+            addr: "127.0.0.1:0".to_string(),
+            threads: 1,
+            mode: OocMode::Auto,
+            window_rows: DEFAULT_WINDOW_ROWS,
+        }
+    }
+}
+
+/// Everything the connection handlers share.
+struct ShardState<'a> {
+    src: &'a dyn DataSource,
+    pool: &'a WorkerPool,
+    /// Serialises compute-plane pool use across connections.
+    compute: &'a Mutex<()>,
+    shutdown: &'a AtomicBool,
+    /// Global dataset shape.
+    n: usize,
+    d: usize,
+    /// Owned row range.
+    lo: usize,
+    hi: usize,
+    /// Storage width of the backing file (rows travel at this width).
+    width: ElemWidth,
+    name: String,
+}
+
+/// One connection's fit session (compute plane). All of it is a
+/// deterministic function of what came over the wire plus the shard's
+/// row range — shards never consult local row counts for geometry.
+struct FitSession {
+    algs: Vec<Box<dyn AssignStep>>,
+    shards: Vec<(usize, usize)>,
+    /// Local assignments: index 0 is global row `state.lo`.
+    a: Vec<u32>,
+    ctx: RoundCtxOwner,
+    history: Option<HistoryStore>,
+    req: Requirements,
+    want_partials: bool,
+    k: usize,
+}
+
+/// Run a shard server until a `SHUTDOWN` frame: open the file, bind
+/// `cfg.addr`, call `on_ready` with the bound address, serve. The
+/// caller's thread blocks for the server's lifetime (tests spawn it).
+pub fn shardd<F: FnOnce(SocketAddr)>(cfg: &ShardConfig, on_ready: F) -> Result<()> {
+    let hdr = read_bin_header(&mut BufReader::new(File::open(&cfg.data)?), &cfg.data)?;
+    let src = open_ooc_described(&cfg.data, cfg.mode, cfg.window_rows)?;
+    let (lo, hi) = cfg.rows;
+    if lo >= hi || hi > src.n() {
+        return Err(EakmError::Config(format!(
+            "shard rows {lo}..{hi} invalid for n={}",
+            src.n()
+        )));
+    }
+    let pool = WorkerPool::new(resolve_threads(cfg.threads));
+    let listener = TcpListener::bind(&cfg.addr)?;
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let compute = Mutex::new(());
+    let shutdown = AtomicBool::new(false);
+    let state = ShardState {
+        src: src.as_ref(),
+        pool: &pool,
+        compute: &compute,
+        shutdown: &shutdown,
+        n: src.n(),
+        d: src.d(),
+        lo,
+        hi,
+        width: hdr.width,
+        name: stem_name(&cfg.data),
+    };
+    on_ready(addr);
+    let st = &state;
+    std::thread::scope(|scope| loop {
+        if st.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stream.set_nonblocking(false).is_err() {
+                    continue;
+                }
+                scope.spawn(move || handle_conn(stream, st));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(10)),
+        }
+    });
+    Ok(())
+}
+
+/// Reply with a typed `ERR` frame; `false` means the peer is gone.
+fn send_err(stream: &mut TcpStream, msg: &str) -> bool {
+    send_frame(stream, tag::ERR, &wire::encode_err(msg))
+}
+
+fn handle_conn<'a>(stream: TcpStream, st: &ShardState<'a>) {
+    if stream.set_read_timeout(Some(READ_POLL)).is_err() {
+        return;
+    }
+    let _ = stream.set_nodelay(true);
+    let Ok(read_half) = stream.try_clone() else {
+        return;
+    };
+    let mut reader = FrameReader::new(read_half, wire::MAX_FRAME);
+    let mut write_half = stream;
+    // per-connection planes: one lazy data-plane cursor, one fit session
+    let mut cursor: Option<Box<dyn BlockCursor + 'a>> = None;
+    let mut session: Option<FitSession> = None;
+    loop {
+        if st.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        match reader.next_frame(Instant::now() + READ_POLL) {
+            Frame::Idle => continue,
+            Frame::Eof => return,
+            Frame::TooLong => {
+                let _ = send_err(&mut write_half, "oversized or malformed frame");
+                return;
+            }
+            Frame::Msg(t, body) => {
+                let ok = match t {
+                    tag::OPEN => handle_open(&mut write_half, st, &mut cursor),
+                    tag::LEASE => handle_lease(&mut write_half, st, &mut cursor, &body),
+                    tag::FIT_INIT => handle_fit_init(&mut write_half, st, &mut session, &body),
+                    tag::ROUND => handle_round(&mut write_half, st, &mut session, &body),
+                    tag::FIT_END => {
+                        session = None;
+                        send_frame(&mut write_half, tag::OK, &[])
+                    }
+                    tag::SHUTDOWN => {
+                        let _ = send_frame(&mut write_half, tag::OK, &[]);
+                        st.shutdown.store(true, Ordering::Release);
+                        return;
+                    }
+                    other => send_err(&mut write_half, &format!("unknown frame tag {other}")),
+                };
+                if !ok {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+// ---- data plane -------------------------------------------------------
+
+fn handle_open<'a>(
+    w: &mut TcpStream,
+    st: &ShardState<'a>,
+    cursor: &mut Option<Box<dyn BlockCursor + 'a>>,
+) -> bool {
+    *cursor = Some(st.src.open(st.lo, st.hi - st.lo));
+    let reply = OpenOk {
+        n: st.n,
+        d: st.d,
+        lo: st.lo,
+        hi: st.hi,
+        width: st.width,
+        name: st.name.clone(),
+    };
+    send_frame(w, tag::OPEN_OK, &reply.encode())
+}
+
+fn handle_lease<'a>(
+    w: &mut TcpStream,
+    st: &ShardState<'a>,
+    cursor: &mut Option<Box<dyn BlockCursor + 'a>>,
+    body: &[u8],
+) -> bool {
+    let lease = match Lease::decode(body) {
+        Ok(l) => l,
+        Err(e) => return send_err(w, &e.to_string()),
+    };
+    let Some(cur) = cursor.as_mut() else {
+        return send_err(w, "LEASE before OPEN");
+    };
+    let end = match lease.lo.checked_add(lease.len) {
+        Some(end) => end,
+        None => return send_err(w, "lease range overflows"),
+    };
+    if lease.len == 0 || lease.lo < st.lo || end > st.hi {
+        return send_err(
+            w,
+            &format!(
+                "lease {}..{end} outside shard rows {}..{}",
+                lease.lo, st.lo, st.hi
+            ),
+        );
+    }
+    let block = cur.lease(lease.lo, lease.len);
+    // rows travel at the file's storage width: for f32 files the leased
+    // f64 values are exact widenings, so narrowing back is lossless and
+    // the remote widen reproduces identical f64 bits
+    let mut rows = Vec::with_capacity(block.rows().len() * st.width.bytes());
+    match st.width {
+        ElemWidth::F64 => {
+            for &v in block.rows() {
+                rows.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        ElemWidth::F32 => {
+            for &v in block.rows() {
+                rows.extend_from_slice(&(v as f32).to_le_bytes());
+            }
+        }
+    }
+    let reply = Block {
+        lo: lease.lo,
+        len: lease.len,
+        width: st.width,
+        rows,
+        norms: block.sqnorms().to_vec(),
+    };
+    send_frame(w, tag::BLOCK, &reply.encode())
+}
+
+// ---- compute plane ----------------------------------------------------
+
+/// Per-global-chunk partial sums for the shard's rows, computed with
+/// the shared [`scan_chunk`] loop over the *global* chunk grid (the
+/// coordinator only asks for partials when every shard boundary lands
+/// on a chunk boundary, so chunks never straddle shards).
+fn chunk_partials(st: &ShardState<'_>, s: &FitSession, d: usize) -> Vec<ChunkPartial> {
+    let clen = chunk_len(st.n);
+    let c0 = st.lo / clen;
+    let c1 = st.hi.div_ceil(clen);
+    struct Task {
+        c: usize,
+        part: Partial,
+    }
+    let mut tasks: Vec<Task> = (c0..c1)
+        .map(|c| Task {
+            c,
+            part: Partial::new(s.k, d),
+        })
+        .collect();
+    st.pool.run_tasks(&mut tasks, |_, t| {
+        let lo = t.c * clen;
+        let hi = ((t.c + 1) * clen).min(st.hi);
+        scan_chunk(st.src, &s.a, st.lo, lo, hi - lo, d, &mut t.part);
+    });
+    tasks
+        .into_iter()
+        .map(|t| ChunkPartial {
+            chunk: t.c as u64,
+            sums: t.part.sums,
+            counts: t.part.counts,
+        })
+        .collect()
+}
+
+fn handle_fit_init(
+    w: &mut TcpStream,
+    st: &ShardState<'_>,
+    session: &mut Option<FitSession>,
+    body: &[u8],
+) -> bool {
+    let init = match FitInit::decode(body) {
+        Ok(m) => m,
+        Err(e) => return send_err(w, &e.to_string()),
+    };
+    let alg = match Algorithm::parse(&init.alg) {
+        Some(Algorithm::Auto) | None => {
+            // Auto must be resolved by the coordinator (it depends on d
+            // only, but resolving it once keeps every shard identical
+            // by construction)
+            return send_err(w, &format!("unknown or unresolved algorithm {:?}", init.alg));
+        }
+        Some(alg) => alg,
+    };
+    if init.d != st.d {
+        return send_err(w, &format!("dimension mismatch: fit d={} file d={}", init.d, st.d));
+    }
+    if init.k == 0 || init.centroids.len() != init.k * init.d {
+        return send_err(
+            w,
+            &format!(
+                "centroids have {} values, expected k×d = {}",
+                init.centroids.len(),
+                init.k * init.d
+            ),
+        );
+    }
+    // the pool is one resource: all compute-plane work is serialised
+    let _guard = st.compute.lock().unwrap();
+    let (k, d) = (init.k, init.d);
+    let g = GroupData::group_count(k);
+    let probe = alg.make_shard(0, 0, k, g);
+    let req = probe.requirements();
+    drop(probe);
+
+    let mut build_ctr = Counters::default();
+    let mut ctx = RoundCtxOwner::new(init.centroids, k, d);
+    if req.groups {
+        ctx.groups = Some(GroupData::build(&ctx.centroids, k, d, init.seed, &mut build_ctr));
+    }
+    let mut history = if req.history {
+        // the cap came over the wire: it is a function of the *global*
+        // row count, which this shard must not derive locally
+        let (group_of, gh) = if req.group_history {
+            let gd = ctx.groups.as_ref().expect("group_history requires groups");
+            (gd.group_of.clone(), gd.g())
+        } else {
+            (Vec::new(), 0)
+        };
+        Some(HistoryStore::new(k, d, init.hist_cap, group_of, gh))
+    } else {
+        None
+    };
+    if let Some(h) = history.as_mut() {
+        ctx.history = Some(h.begin(&ctx.centroids));
+    }
+
+    // thread-shards over the owned range, offset to global indices so
+    // the algorithms report global sample indices in their moved lists
+    let shards: Vec<(usize, usize)> = make_shards(st.hi - st.lo, st.pool.width())
+        .into_iter()
+        .map(|(slo, len)| (st.lo + slo, len))
+        .collect();
+    let mut algs: Vec<Box<dyn AssignStep>> = shards
+        .iter()
+        .map(|&(slo, len)| alg.make_shard(slo, len, k, g))
+        .collect();
+
+    let mut a = vec![0u32; st.hi - st.lo];
+    let sh = ctx.shared(st.src);
+    let (scan_ctr, _) = run_shards(st.pool, &mut algs, &shards, &mut a, &sh, true);
+    drop(sh);
+
+    let s = FitSession {
+        algs,
+        shards,
+        a,
+        ctx,
+        history,
+        req,
+        want_partials: init.want_partials,
+        k,
+    };
+    let partials = if s.want_partials {
+        chunk_partials(st, &s, d)
+    } else {
+        Vec::new()
+    };
+    let reply = FitOk {
+        build_ctr,
+        scan_ctr,
+        assignments: s.a.clone(),
+        partials,
+    };
+    *session = Some(s);
+    send_frame(w, tag::FIT_OK, &reply.encode())
+}
+
+fn handle_round(
+    w: &mut TcpStream,
+    st: &ShardState<'_>,
+    session: &mut Option<FitSession>,
+    body: &[u8],
+) -> bool {
+    let round = match Round::decode(body) {
+        Ok(m) => m,
+        Err(e) => return send_err(w, &e.to_string()),
+    };
+    let Some(s) = session.as_mut() else {
+        return send_err(w, "ROUND before FIT_INIT");
+    };
+    let d = st.d;
+    if round.centroids.len() != s.k * d {
+        return send_err(
+            w,
+            &format!(
+                "centroids have {} values, expected k×d = {}",
+                round.centroids.len(),
+                s.k * d
+            ),
+        );
+    }
+    let _guard = st.compute.lock().unwrap();
+    // centroid-side rebuilds: pure functions of (centroids, k, d, seed)
+    // — every shard computes identical structures and counters; the
+    // coordinator merges the counters once and cross-checks equality
+    let mut build_ctr = Counters::default();
+    s.ctx
+        .advance_centroids_pooled(round.centroids, d, &mut build_ctr, st.pool);
+    s.ctx.rebuild(&s.req, d, &mut build_ctr, st.pool);
+    if let Some(h) = s.history.as_mut() {
+        s.ctx.history = Some(h.advance_pooled(&s.ctx.centroids, &mut build_ctr, st.pool));
+    }
+    let sh = s.ctx.shared(st.src);
+    let (scan_ctr, moved) = run_shards(st.pool, &mut s.algs, &s.shards, &mut s.a, &sh, false);
+    drop(sh);
+    let partials = if s.want_partials && s.req.full_update {
+        chunk_partials(st, s, d)
+    } else {
+        Vec::new()
+    };
+    let reply = RoundOk {
+        build_ctr,
+        scan_ctr,
+        moved,
+        partials,
+    };
+    send_frame(w, tag::ROUND_OK, &reply.encode())
+}

@@ -1,0 +1,665 @@
+//! The dist wire protocol: message tags and binary codecs.
+//!
+//! Every message is one [`net::frame`](crate::net::frame) frame —
+//! `u32-LE length | u8 tag | body` — with the body encoded by the
+//! little-endian codecs here. The protocol is dependency-free and
+//! versionless by construction: coordinator and shards ship in the same
+//! binary, so the only compatibility contract is "same build".
+//!
+//! ## Frame tags
+//!
+//! | tag | name       | plane   | body                                             |
+//! |----:|------------|---------|--------------------------------------------------|
+//! |   1 | `OPEN`     | data    | *(empty)* — open the serving shard's row range    |
+//! |   2 | `OPEN_OK`  | data    | `n d lo hi elem_bytes name`                      |
+//! |   3 | `LEASE`    | data    | `lo len` (global rows, within `[lo, hi)`)        |
+//! |   4 | `BLOCK`    | data    | `lo len elem_bytes rows norms`                   |
+//! |  10 | `FIT_INIT` | compute | `alg k d seed hist_cap want_partials centroids`  |
+//! |  11 | `FIT_OK`   | compute | `build_ctr scan_ctr assignments partials`        |
+//! |  12 | `ROUND`    | compute | `centroids`                                      |
+//! |  13 | `ROUND_OK` | compute | `build_ctr scan_ctr moved partials`              |
+//! |  14 | `FIT_END`  | compute | *(empty)* — tear down the fit session            |
+//! |  15 | `OK`       | both    | *(empty)* — acknowledgement                      |
+//! |  99 | `SHUTDOWN` | both    | *(empty)* — stop the shard server                |
+//! | 255 | `ERR`      | both    | `msg` — typed failure, connection stays usable   |
+//!
+//! Row payloads travel at the file's storage width (`elem_bytes` 4 or
+//! 8) and are widened to f64 by the receiver with the same
+//! [`decode_widen_le`](crate::data::io::decode_widen_le) the file
+//! sources use; squared norms always travel as f64 so they match the
+//! `.norms` sidecar bit for bit.
+//!
+//! Decoders validate every length against the remaining body *before*
+//! allocating, and truncation is a typed [`EakmError::Net`] — hostile
+//! or corrupt peers cannot drive allocation or panics.
+
+use crate::algorithms::common::Moved;
+use crate::data::io::ElemWidth;
+use crate::error::{EakmError, Result};
+use crate::metrics::Counters;
+
+/// Frame cap for both sides of the dist protocol: 1 GiB comfortably
+/// holds the largest legal message (a `BLOCK` of `window_rows` rows or
+/// a partial-sum set) while bounding a hostile length prefix.
+pub(crate) const MAX_FRAME: usize = 1 << 30;
+
+/// Frame tags (see the module table). Public so tests and tooling can
+/// speak the protocol (e.g. send a `SHUTDOWN` frame to a shard).
+pub mod tag {
+    pub const OPEN: u8 = 1;
+    pub const OPEN_OK: u8 = 2;
+    pub const LEASE: u8 = 3;
+    pub const BLOCK: u8 = 4;
+    pub const FIT_INIT: u8 = 10;
+    pub const FIT_OK: u8 = 11;
+    pub const ROUND: u8 = 12;
+    pub const ROUND_OK: u8 = 13;
+    pub const FIT_END: u8 = 14;
+    pub const OK: u8 = 15;
+    pub const SHUTDOWN: u8 = 99;
+    pub const ERR: u8 = 255;
+}
+
+// ---- encoding helpers -------------------------------------------------
+
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+pub(crate) fn put_f64s(buf: &mut Vec<u8>, vs: &[f64]) {
+    put_u64(buf, vs.len() as u64);
+    for &v in vs {
+        put_f64(buf, v);
+    }
+}
+
+pub(crate) fn put_u32s(buf: &mut Vec<u8>, vs: &[u32]) {
+    put_u64(buf, vs.len() as u64);
+    for &v in vs {
+        put_u32(buf, v);
+    }
+}
+
+pub(crate) fn put_i64s(buf: &mut Vec<u8>, vs: &[i64]) {
+    put_u64(buf, vs.len() as u64);
+    for &v in vs {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+// ---- decoding helpers -------------------------------------------------
+
+/// A bounds-checked little-endian reader over one frame body.
+pub(crate) struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Rd { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(EakmError::Net(format!(
+                "truncated frame: wanted {n} bytes, {} left",
+                self.buf.len() - self.pos
+            )));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    pub(crate) fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| EakmError::Net("string field is not utf-8".into()))
+    }
+
+    /// A counted f64 vector; the count is validated against the
+    /// remaining bytes before any allocation.
+    pub(crate) fn f64s(&mut self) -> Result<Vec<f64>> {
+        let count = self.u64()? as usize;
+        let bytes = self.take(count.checked_mul(8).ok_or_else(len_overflow)?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+            .collect())
+    }
+
+    pub(crate) fn u32s(&mut self) -> Result<Vec<u32>> {
+        let count = self.u64()? as usize;
+        let bytes = self.take(count.checked_mul(4).ok_or_else(len_overflow)?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().expect("4-byte chunk")))
+            .collect())
+    }
+
+    pub(crate) fn i64s(&mut self) -> Result<Vec<i64>> {
+        let count = self.u64()? as usize;
+        let bytes = self.take(count.checked_mul(8).ok_or_else(len_overflow)?)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| i64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+            .collect())
+    }
+
+    pub(crate) fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    /// Assert the whole body was consumed (decoders call this last so a
+    /// length-desynced peer is caught, not silently tolerated).
+    pub(crate) fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(EakmError::Net(format!(
+                "frame has {} trailing bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn len_overflow() -> EakmError {
+    EakmError::Net("length field overflows".into())
+}
+
+// ---- counters / moved codecs -----------------------------------------
+
+pub(crate) fn put_counters(buf: &mut Vec<u8>, c: &Counters) {
+    put_u64(buf, c.assignment);
+    put_u64(buf, c.centroid);
+    put_u64(buf, c.displacement);
+    put_u64(buf, c.init);
+}
+
+pub(crate) fn read_counters(r: &mut Rd<'_>) -> Result<Counters> {
+    Ok(Counters {
+        assignment: r.u64()?,
+        centroid: r.u64()?,
+        displacement: r.u64()?,
+        init: r.u64()?,
+    })
+}
+
+pub(crate) fn put_moved(buf: &mut Vec<u8>, moved: &[Moved]) {
+    put_u64(buf, moved.len() as u64);
+    for m in moved {
+        put_u32(buf, m.i);
+        put_u32(buf, m.from);
+        put_u32(buf, m.to);
+    }
+}
+
+pub(crate) fn read_moved(r: &mut Rd<'_>) -> Result<Vec<Moved>> {
+    let count = r.u64()? as usize;
+    let bytes = r.bytes(count.checked_mul(12).ok_or_else(len_overflow)?)?;
+    Ok(bytes
+        .chunks_exact(12)
+        .map(|c| Moved {
+            i: u32::from_le_bytes(c[0..4].try_into().expect("4 bytes")),
+            from: u32::from_le_bytes(c[4..8].try_into().expect("4 bytes")),
+            to: u32::from_le_bytes(c[8..12].try_into().expect("4 bytes")),
+        })
+        .collect())
+}
+
+// ---- data plane -------------------------------------------------------
+
+/// `OPEN_OK`: the serving shard's shape — global dataset `n`/`d`, the
+/// shard's row range `[lo, hi)`, the file's storage width, and the
+/// dataset name (file stem, so reports match single-node runs).
+#[derive(Debug, PartialEq)]
+pub(crate) struct OpenOk {
+    pub n: usize,
+    pub d: usize,
+    pub lo: usize,
+    pub hi: usize,
+    pub width: ElemWidth,
+    pub name: String,
+}
+
+impl OpenOk {
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, self.n as u64);
+        put_u64(&mut buf, self.d as u64);
+        put_u64(&mut buf, self.lo as u64);
+        put_u64(&mut buf, self.hi as u64);
+        put_u32(&mut buf, self.width.bytes() as u32);
+        put_str(&mut buf, &self.name);
+        buf
+    }
+
+    pub(crate) fn decode(body: &[u8]) -> Result<Self> {
+        let mut r = Rd::new(body);
+        let (n, d) = (r.u64()? as usize, r.u64()? as usize);
+        let (lo, hi) = (r.u64()? as usize, r.u64()? as usize);
+        let width = match r.u32()? {
+            4 => ElemWidth::F32,
+            8 => ElemWidth::F64,
+            eb => return Err(EakmError::Net(format!("bad elem_bytes {eb} (want 4 or 8)"))),
+        };
+        let name = r.str()?;
+        r.finish()?;
+        Ok(OpenOk {
+            n,
+            d,
+            lo,
+            hi,
+            width,
+            name,
+        })
+    }
+}
+
+/// `LEASE`: request rows `[lo, lo+len)` (global indices).
+#[derive(Debug, PartialEq)]
+pub(crate) struct Lease {
+    pub lo: usize,
+    pub len: usize,
+}
+
+impl Lease {
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, self.lo as u64);
+        put_u64(&mut buf, self.len as u64);
+        buf
+    }
+
+    pub(crate) fn decode(body: &[u8]) -> Result<Self> {
+        let mut r = Rd::new(body);
+        let (lo, len) = (r.u64()? as usize, r.u64()? as usize);
+        r.finish()?;
+        Ok(Lease { lo, len })
+    }
+}
+
+/// `BLOCK`: `len` rows starting at global row `lo` — raw row payload at
+/// the storage width plus the rows' f64 squared norms.
+#[derive(Debug, PartialEq)]
+pub(crate) struct Block {
+    pub lo: usize,
+    pub len: usize,
+    pub width: ElemWidth,
+    /// `len · d · width.bytes()` raw little-endian row bytes.
+    pub rows: Vec<u8>,
+    /// `len` sidecar-exact squared norms.
+    pub norms: Vec<f64>,
+}
+
+impl Block {
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.rows.len() + self.norms.len() * 8 + 32);
+        put_u64(&mut buf, self.lo as u64);
+        put_u64(&mut buf, self.len as u64);
+        put_u32(&mut buf, self.width.bytes() as u32);
+        buf.extend_from_slice(&self.rows);
+        for &v in &self.norms {
+            put_f64(&mut buf, v);
+        }
+        buf
+    }
+
+    /// Decode with the known row dimension `d` (row/norm byte counts
+    /// follow from `len` and the width; nothing is length-prefixed).
+    pub(crate) fn decode(body: &[u8], d: usize) -> Result<Self> {
+        let mut r = Rd::new(body);
+        let (lo, len) = (r.u64()? as usize, r.u64()? as usize);
+        let width = match r.u32()? {
+            4 => ElemWidth::F32,
+            8 => ElemWidth::F64,
+            eb => return Err(EakmError::Net(format!("bad elem_bytes {eb} (want 4 or 8)"))),
+        };
+        let row_bytes = len
+            .checked_mul(d)
+            .and_then(|v| v.checked_mul(width.bytes()))
+            .ok_or_else(len_overflow)?;
+        let rows = r.bytes(row_bytes)?.to_vec();
+        let mut norms = Vec::with_capacity(len);
+        for _ in 0..len {
+            norms.push(r.f64()?);
+        }
+        r.finish()?;
+        Ok(Block {
+            lo,
+            len,
+            width,
+            rows,
+            norms,
+        })
+    }
+}
+
+// ---- compute plane ----------------------------------------------------
+
+/// `FIT_INIT`: start a fit session — algorithm, shape, seed, the
+/// coordinator-computed ns-history cap (a function of the *global* row
+/// count, so it must not be derived shard-locally), whether the shard
+/// should ship per-chunk partial sums, and the seeded centroids.
+#[derive(Debug, PartialEq)]
+pub(crate) struct FitInit {
+    pub alg: String,
+    pub k: usize,
+    pub d: usize,
+    pub seed: u64,
+    pub hist_cap: usize,
+    pub want_partials: bool,
+    pub centroids: Vec<f64>,
+}
+
+impl FitInit {
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        put_str(&mut buf, &self.alg);
+        put_u64(&mut buf, self.k as u64);
+        put_u64(&mut buf, self.d as u64);
+        put_u64(&mut buf, self.seed);
+        put_u64(&mut buf, self.hist_cap as u64);
+        buf.push(u8::from(self.want_partials));
+        put_f64s(&mut buf, &self.centroids);
+        buf
+    }
+
+    pub(crate) fn decode(body: &[u8]) -> Result<Self> {
+        let mut r = Rd::new(body);
+        let alg = r.str()?;
+        let (k, d) = (r.u64()? as usize, r.u64()? as usize);
+        let seed = r.u64()?;
+        let hist_cap = r.u64()? as usize;
+        let want_partials = r.bytes(1)?[0] != 0;
+        let centroids = r.f64s()?;
+        r.finish()?;
+        Ok(FitInit {
+            alg,
+            k,
+            d,
+            seed,
+            hist_cap,
+            want_partials,
+            centroids,
+        })
+    }
+}
+
+/// One global chunk's partial sums (full `k×d` sums + `k` counts), as
+/// produced by [`scan_chunk`](crate::coordinator::update::scan_chunk)
+/// over the chunk's rows. `chunk` indexes the *global* chunk grid.
+#[derive(Debug, PartialEq)]
+pub(crate) struct ChunkPartial {
+    pub chunk: u64,
+    pub sums: Vec<f64>,
+    pub counts: Vec<i64>,
+}
+
+fn put_partials(buf: &mut Vec<u8>, partials: &[ChunkPartial]) {
+    put_u32(buf, partials.len() as u32);
+    for p in partials {
+        put_u64(buf, p.chunk);
+        put_f64s(buf, &p.sums);
+        put_i64s(buf, &p.counts);
+    }
+}
+
+fn read_partials(r: &mut Rd<'_>) -> Result<Vec<ChunkPartial>> {
+    let count = r.u32()? as usize;
+    let mut out = Vec::new();
+    for _ in 0..count {
+        let chunk = r.u64()?;
+        let sums = r.f64s()?;
+        let counts = r.i64s()?;
+        out.push(ChunkPartial {
+            chunk,
+            sums,
+            counts,
+        });
+    }
+    Ok(out)
+}
+
+/// `FIT_OK`: the shard's round-0 result — centroid-side build counters
+/// (identical on every shard; merged once), scan counters (merged in
+/// shard order), the shard's local assignments, and optional partials.
+#[derive(Debug, PartialEq)]
+pub(crate) struct FitOk {
+    pub build_ctr: Counters,
+    pub scan_ctr: Counters,
+    pub assignments: Vec<u32>,
+    pub partials: Vec<ChunkPartial>,
+}
+
+impl FitOk {
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        put_counters(&mut buf, &self.build_ctr);
+        put_counters(&mut buf, &self.scan_ctr);
+        put_u32s(&mut buf, &self.assignments);
+        put_partials(&mut buf, &self.partials);
+        buf
+    }
+
+    pub(crate) fn decode(body: &[u8]) -> Result<Self> {
+        let mut r = Rd::new(body);
+        let build_ctr = read_counters(&mut r)?;
+        let scan_ctr = read_counters(&mut r)?;
+        let assignments = r.u32s()?;
+        let partials = read_partials(&mut r)?;
+        r.finish()?;
+        Ok(FitOk {
+            build_ctr,
+            scan_ctr,
+            assignments,
+            partials,
+        })
+    }
+}
+
+/// `ROUND`: the new centroids for one Lloyd round.
+#[derive(Debug, PartialEq)]
+pub(crate) struct Round {
+    pub centroids: Vec<f64>,
+}
+
+impl Round {
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        put_f64s(&mut buf, &self.centroids);
+        buf
+    }
+
+    pub(crate) fn decode(body: &[u8]) -> Result<Self> {
+        let mut r = Rd::new(body);
+        let centroids = r.f64s()?;
+        r.finish()?;
+        Ok(Round { centroids })
+    }
+}
+
+/// `ROUND_OK`: one round's shard result — build/scan counters, the
+/// moved list (global indices, ascending), and optional partials.
+#[derive(Debug, PartialEq)]
+pub(crate) struct RoundOk {
+    pub build_ctr: Counters,
+    pub scan_ctr: Counters,
+    pub moved: Vec<Moved>,
+    pub partials: Vec<ChunkPartial>,
+}
+
+impl RoundOk {
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        put_counters(&mut buf, &self.build_ctr);
+        put_counters(&mut buf, &self.scan_ctr);
+        put_moved(&mut buf, &self.moved);
+        put_partials(&mut buf, &self.partials);
+        buf
+    }
+
+    pub(crate) fn decode(body: &[u8]) -> Result<Self> {
+        let mut r = Rd::new(body);
+        let build_ctr = read_counters(&mut r)?;
+        let scan_ctr = read_counters(&mut r)?;
+        let moved = read_moved(&mut r)?;
+        let partials = read_partials(&mut r)?;
+        r.finish()?;
+        Ok(RoundOk {
+            build_ctr,
+            scan_ctr,
+            moved,
+            partials,
+        })
+    }
+}
+
+/// `ERR`: a typed failure message.
+pub(crate) fn encode_err(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::new();
+    put_str(&mut buf, msg);
+    buf
+}
+
+pub(crate) fn decode_err(body: &[u8]) -> String {
+    let mut r = Rd::new(body);
+    r.str().unwrap_or_else(|_| "malformed error frame".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_ok_roundtrip() {
+        let msg = OpenOk {
+            n: 1000,
+            d: 8,
+            lo: 250,
+            hi: 500,
+            width: ElemWidth::F32,
+            name: "blobs".into(),
+        };
+        assert_eq!(OpenOk::decode(&msg.encode()).unwrap(), msg);
+    }
+
+    #[test]
+    fn lease_and_block_roundtrip() {
+        let lease = Lease { lo: 7, len: 3 };
+        assert_eq!(Lease::decode(&lease.encode()).unwrap(), lease);
+        let block = Block {
+            lo: 7,
+            len: 2,
+            width: ElemWidth::F64,
+            rows: (0..2 * 3 * 8).map(|b| b as u8).collect(),
+            norms: vec![1.25, -0.5],
+        };
+        assert_eq!(Block::decode(&block.encode(), 3).unwrap(), block);
+    }
+
+    #[test]
+    fn fit_messages_roundtrip() {
+        let init = FitInit {
+            alg: "exp-ns".into(),
+            k: 3,
+            d: 2,
+            seed: 42,
+            hist_cap: 17,
+            want_partials: true,
+            centroids: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+        };
+        assert_eq!(FitInit::decode(&init.encode()).unwrap(), init);
+        let ctr = Counters {
+            assignment: 10,
+            centroid: 3,
+            displacement: 4,
+            init: 9,
+        };
+        let ok = FitOk {
+            build_ctr: ctr,
+            scan_ctr: Counters::default(),
+            assignments: vec![0, 2, 1],
+            partials: vec![ChunkPartial {
+                chunk: 5,
+                sums: vec![1.0; 6],
+                counts: vec![2, 0, 1],
+            }],
+        };
+        assert_eq!(FitOk::decode(&ok.encode()).unwrap(), ok);
+        let rok = RoundOk {
+            build_ctr: ctr,
+            scan_ctr: ctr,
+            moved: vec![Moved {
+                i: 9,
+                from: 1,
+                to: 0,
+            }],
+            partials: Vec::new(),
+        };
+        assert_eq!(RoundOk::decode(&rok.encode()).unwrap(), rok);
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_trailing_bytes() {
+        let msg = OpenOk {
+            n: 10,
+            d: 2,
+            lo: 0,
+            hi: 10,
+            width: ElemWidth::F64,
+            name: "x".into(),
+        };
+        let mut bytes = msg.encode();
+        assert!(OpenOk::decode(&bytes[..bytes.len() - 1]).is_err());
+        bytes.push(0);
+        assert!(OpenOk::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn hostile_length_does_not_allocate() {
+        // an f64s count of u64::MAX must fail the bounds check (and not
+        // attempt a 2^67-byte allocation)
+        let mut body = Vec::new();
+        put_str(&mut body, "sta");
+        put_u64(&mut body, 2);
+        put_u64(&mut body, 2);
+        put_u64(&mut body, 0);
+        put_u64(&mut body, 0);
+        body.push(0);
+        put_u64(&mut body, u64::MAX); // centroids count
+        assert!(FitInit::decode(&body).is_err());
+    }
+
+    #[test]
+    fn err_frame_roundtrip() {
+        assert_eq!(decode_err(&encode_err("shard down")), "shard down");
+    }
+}

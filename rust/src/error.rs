@@ -20,6 +20,10 @@ pub enum EakmError {
     Limit(String),
     /// An internal invariant was violated — a bug in eakm itself.
     Invariant(String),
+    /// A distributed-fit peer failed: connect refused, read timed out,
+    /// or a shard reported an error. The message names the shard
+    /// address so a multi-node failure is attributable.
+    Net(String),
 }
 
 impl fmt::Display for EakmError {
@@ -31,6 +35,7 @@ impl fmt::Display for EakmError {
             EakmError::Runtime(m) => write!(f, "runtime error: {m}"),
             EakmError::Limit(m) => write!(f, "limit exceeded: {m}"),
             EakmError::Invariant(m) => write!(f, "invariant violated: {m}"),
+            EakmError::Net(m) => write!(f, "net error: {m}"),
         }
     }
 }
@@ -64,6 +69,7 @@ mod tests {
         assert!(format!("{}", EakmError::Runtime("pjrt".into())).contains("pjrt"));
         assert!(format!("{}", EakmError::Limit("too deep".into())).contains("too deep"));
         assert!(format!("{}", EakmError::Invariant("bound".into())).contains("bound"));
+        assert!(format!("{}", EakmError::Net("shard gone".into())).contains("shard gone"));
     }
 
     #[test]

@@ -84,6 +84,27 @@
 //! `--dataset`/`--data-file`/`--ooc`, with the same data flags as
 //! `run`).
 //!
+//! ## Distributed fit
+//!
+//! [`dist`] splits a fit across shard servers without changing a
+//! single result bit. Each shard (`eakm shardd --data file.ekb --rows
+//! lo..hi --addr host:port`) owns one global row range of an `.ekb`
+//! file and serves two planes over a dependency-free length-prefixed
+//! binary protocol (framing shared with [`serve`](crate::serve) via
+//! [`net::frame`]): a **data plane** streaming row blocks plus
+//! sidecar-exact norms, and a **compute plane** running the local
+//! assignment scan per round. On top of them sit [`data::NetSource`]
+//! — a [`data::DataSource`] over the data plane, so every existing
+//! algorithm (mini-batch included) fits over the network unchanged —
+//! and the coordinator (`eakm run --shards host:port,host:port`,
+//! [`dist::run_dist`]), which seeds locally, broadcasts centroids each
+//! round, and merges shard replies in shard order. Assignments, MSE
+//! bits, and bound counters are **bit-identical to the single-node run
+//! at any shard count and any thread width** — the determinism
+//! argument is spelled out in [`dist`]'s module docs — and a dead
+//! shard surfaces as a typed [`error::EakmError::Net`] naming the
+//! shard, never a hang.
+//!
 //! ## Parallel runtime
 //!
 //! Every phase of a round — the sharded assignment scan, the delta
@@ -195,7 +216,9 @@ pub mod coordinator;
 pub mod runtime;
 pub mod config;
 pub mod model;
+pub mod net;
 pub mod serve;
+pub mod dist;
 pub mod bench_support;
 pub mod json;
 pub mod cli;

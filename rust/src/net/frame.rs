@@ -1,0 +1,340 @@
+//! Socket framing: capped incremental line reads and length-prefixed
+//! binary frames.
+//!
+//! Both readers share the same discipline for untrusted peers:
+//!
+//! * **caps before allocation** — a line or frame longer than the
+//!   configured cap is rejected (`TooLong`) without buffering it;
+//! * **timeouts as `Idle`** — a blocking read that times out (the
+//!   stream's read timeout) returns `Idle` so the caller can re-check
+//!   its shutdown flag and deadline instead of pinning a thread;
+//! * **EOF and transport errors as `Eof`** — the connection is simply
+//!   over; no error values to thread through hot loops.
+//!
+//! [`LineReader`] frames `\n`-terminated text (the serve protocol);
+//! [`FrameReader`] frames `u32-LE length | u8 tag | body` binary
+//! messages (the dist wire protocol). Bytes after a terminator are kept
+//! for the next call, so pipelined peers work with either.
+
+use std::io::{Read, Write};
+use std::time::Instant;
+
+/// One framed line off the socket.
+pub enum Line {
+    /// A complete request line (without the terminator).
+    Msg(String),
+    /// Read timeout — poll the shutdown flag and retry.
+    Idle,
+    /// Peer closed (or errored); drop the connection.
+    Eof,
+    /// Line exceeded the byte cap; reply typed and drop the connection
+    /// (framing is lost once a line is abandoned mid-way).
+    TooLong,
+    /// Line bytes were not UTF-8; reply typed, framing stays intact.
+    BadUtf8,
+}
+
+/// Incremental, capped line framing over a blocking stream with a read
+/// timeout. Bytes after a newline are kept for the next call, so
+/// pipelined clients work.
+pub struct LineReader<S> {
+    stream: S,
+    buf: Vec<u8>,
+    cap: usize,
+}
+
+impl<S: Read> LineReader<S> {
+    /// Wrap `stream`, rejecting lines longer than `cap` bytes.
+    pub fn new(stream: S, cap: usize) -> Self {
+        LineReader {
+            stream,
+            buf: Vec::new(),
+            cap,
+        }
+    }
+
+    /// Read until a complete line, the byte cap, EOF, or `deadline`.
+    /// The deadline is checked after every read, so a peer trickling
+    /// bytes without ever completing a line still returns `Idle` (and
+    /// gets reaped by the caller's idle timeout) instead of pinning the
+    /// thread — callers cap the deadline at their shutdown-poll cadence
+    /// so the flag is re-checked no matter what the peer sends.
+    pub fn next_line(&mut self, deadline: Instant) -> Line {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                // the cap is on the line, not the buffer: a too-long
+                // line is rejected even when its terminator has already
+                // arrived
+                if pos > self.cap {
+                    return Line::TooLong;
+                }
+                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
+                line.pop(); // the \n
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                return match String::from_utf8(line) {
+                    Ok(s) => Line::Msg(s),
+                    Err(_) => Line::BadUtf8,
+                };
+            }
+            if self.buf.len() > self.cap {
+                return Line::TooLong;
+            }
+            if Instant::now() >= deadline {
+                return Line::Idle;
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Line::Eof,
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Line::Idle
+                }
+                Err(_) => return Line::Eof,
+            }
+        }
+    }
+}
+
+/// Write one reply line; `false` means the peer is gone.
+pub fn send_line<W: Write>(stream: &mut W, reply: &str) -> bool {
+    let mut framed = String::with_capacity(reply.len() + 1);
+    framed.push_str(reply);
+    framed.push('\n');
+    stream.write_all(framed.as_bytes()).is_ok() && stream.flush().is_ok()
+}
+
+/// One binary frame off the socket.
+pub enum Frame {
+    /// A complete frame: tag byte + body.
+    Msg(u8, Vec<u8>),
+    /// Read timeout — poll the shutdown flag and retry.
+    Idle,
+    /// Peer closed (or errored); drop the connection.
+    Eof,
+    /// Declared frame length was zero or exceeded the cap; drop the
+    /// connection (framing is unrecoverable once a length is bogus).
+    TooLong,
+}
+
+/// Incremental, capped binary framing: `u32-LE length | u8 tag | body`,
+/// where `length` counts the tag byte plus the body. Same timeout and
+/// cap discipline as [`LineReader`].
+pub struct FrameReader<S> {
+    stream: S,
+    buf: Vec<u8>,
+    cap: usize,
+}
+
+impl<S: Read> FrameReader<S> {
+    /// Wrap `stream`, rejecting frames whose declared length (tag +
+    /// body) exceeds `cap` bytes.
+    pub fn new(stream: S, cap: usize) -> Self {
+        FrameReader {
+            stream,
+            buf: Vec::new(),
+            cap,
+        }
+    }
+
+    /// Read until a complete frame, a bogus length, EOF, or `deadline`.
+    pub fn next_frame(&mut self, deadline: Instant) -> Frame {
+        loop {
+            if self.buf.len() >= 4 {
+                let len = u32::from_le_bytes(self.buf[..4].try_into().expect("4 bytes")) as usize;
+                // a frame always carries its tag byte; a zero length is
+                // as malformed as an oversized one — and the check runs
+                // before any body bytes are buffered, so a hostile
+                // length never drives an allocation
+                if len == 0 || len > self.cap {
+                    return Frame::TooLong;
+                }
+                if self.buf.len() >= 4 + len {
+                    let mut frame: Vec<u8> = self.buf.drain(..4 + len).collect();
+                    let tag = frame[4];
+                    frame.drain(..5);
+                    return Frame::Msg(tag, frame);
+                }
+            }
+            if Instant::now() >= deadline {
+                return Frame::Idle;
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Frame::Eof,
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Frame::Idle
+                }
+                Err(_) => return Frame::Eof,
+            }
+        }
+    }
+}
+
+/// Write one `tag + body` frame; `false` means the peer is gone.
+pub fn send_frame<W: Write>(stream: &mut W, tag: u8, body: &[u8]) -> bool {
+    let len = (body.len() + 1) as u32;
+    stream.write_all(&len.to_le_bytes()).is_ok()
+        && stream.write_all(&[tag]).is_ok()
+        && stream.write_all(body).is_ok()
+        && stream.flush().is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// An in-memory stream that yields its script one piece per read —
+    /// exercises partial arrival — then reports EOF.
+    struct Script {
+        pieces: Vec<Vec<u8>>,
+        next: usize,
+    }
+
+    impl Script {
+        fn new(pieces: Vec<Vec<u8>>) -> Self {
+            Script { pieces, next: 0 }
+        }
+    }
+
+    impl Read for Script {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.next >= self.pieces.len() {
+                return Ok(0);
+            }
+            let piece = &self.pieces[self.next];
+            self.next += 1;
+            out[..piece.len()].copy_from_slice(piece);
+            Ok(piece.len())
+        }
+    }
+
+    fn soon() -> Instant {
+        Instant::now() + Duration::from_secs(5)
+    }
+
+    #[test]
+    fn line_reader_frames_and_pipelines() {
+        let mut r = LineReader::new(Script::new(vec![b"hel".to_vec(), b"lo\nwor".to_vec(), b"ld\n".to_vec()]), 64);
+        match r.next_line(soon()) {
+            Line::Msg(s) => assert_eq!(s, "hello"),
+            _ => panic!("want Msg"),
+        }
+        match r.next_line(soon()) {
+            Line::Msg(s) => assert_eq!(s, "world"),
+            _ => panic!("want Msg"),
+        }
+        assert!(matches!(r.next_line(soon()), Line::Eof));
+    }
+
+    #[test]
+    fn line_reader_strips_crlf_and_rejects_bad_utf8() {
+        let mut r = LineReader::new(Script::new(vec![b"crlf\r\n".to_vec(), vec![0xff, 0xfe, b'\n']]), 64);
+        match r.next_line(soon()) {
+            Line::Msg(s) => assert_eq!(s, "crlf"),
+            _ => panic!("want Msg"),
+        }
+        assert!(matches!(r.next_line(soon()), Line::BadUtf8));
+    }
+
+    #[test]
+    fn line_reader_caps_with_and_without_terminator() {
+        // terminator present but the line is over the cap
+        let mut r = LineReader::new(Script::new(vec![b"0123456789\n".to_vec()]), 4);
+        assert!(matches!(r.next_line(soon()), Line::TooLong));
+        // no terminator: rejected as soon as the buffer exceeds the cap
+        let mut r = LineReader::new(Script::new(vec![vec![b'x'; 100]]), 4);
+        assert!(matches!(r.next_line(soon()), Line::TooLong));
+    }
+
+    #[test]
+    fn line_reader_timeout_is_idle() {
+        struct Block;
+        impl Read for Block {
+            fn read(&mut self, _out: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::ErrorKind::WouldBlock.into())
+            }
+        }
+        let mut r = LineReader::new(Block, 64);
+        assert!(matches!(r.next_line(soon()), Line::Idle));
+        // an already-expired deadline is Idle even before a read
+        let mut r = LineReader::new(Script::new(vec![b"late\n".to_vec()]), 64);
+        assert!(matches!(
+            r.next_line(Instant::now() - Duration::from_secs(1)),
+            Line::Idle
+        ));
+    }
+
+    fn framed(tag: u8, body: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        assert!(send_frame(&mut out, tag, body));
+        out
+    }
+
+    #[test]
+    fn frame_roundtrip_and_pipelining() {
+        let mut bytes = framed(7, b"abc");
+        bytes.extend(framed(9, b""));
+        // deliver byte by byte: reassembly must not care about arrival
+        let pieces = bytes.iter().map(|&b| vec![b]).collect();
+        let mut r = FrameReader::new(Script::new(pieces), 1024);
+        match r.next_frame(soon()) {
+            Frame::Msg(tag, body) => {
+                assert_eq!(tag, 7);
+                assert_eq!(body, b"abc");
+            }
+            _ => panic!("want Msg"),
+        }
+        match r.next_frame(soon()) {
+            Frame::Msg(tag, body) => {
+                assert_eq!(tag, 9);
+                assert!(body.is_empty());
+            }
+            _ => panic!("want Msg"),
+        }
+        assert!(matches!(r.next_frame(soon()), Frame::Eof));
+    }
+
+    #[test]
+    fn frame_rejects_hostile_lengths() {
+        // zero length (no room for the tag byte)
+        let mut r = FrameReader::new(Script::new(vec![0u32.to_le_bytes().to_vec()]), 1024);
+        assert!(matches!(r.next_frame(soon()), Frame::TooLong));
+        // a 4 GiB declared length is rejected from the header alone —
+        // no body bytes are ever buffered
+        let mut r = FrameReader::new(Script::new(vec![u32::MAX.to_le_bytes().to_vec()]), 1024);
+        assert!(matches!(r.next_frame(soon()), Frame::TooLong));
+        // just over the cap
+        let mut r = FrameReader::new(Script::new(vec![1025u32.to_le_bytes().to_vec()]), 1024);
+        assert!(matches!(r.next_frame(soon()), Frame::TooLong));
+    }
+
+    #[test]
+    fn frame_truncated_body_is_eof() {
+        let mut bytes = framed(3, b"full body");
+        bytes.truncate(bytes.len() - 2);
+        let mut r = FrameReader::new(Script::new(vec![bytes]), 1024);
+        assert!(matches!(r.next_frame(soon()), Frame::Eof));
+    }
+
+    #[test]
+    fn frame_timeout_is_idle() {
+        struct Block;
+        impl Read for Block {
+            fn read(&mut self, _out: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::ErrorKind::TimedOut.into())
+            }
+        }
+        let mut r = FrameReader::new(Block, 64);
+        assert!(matches!(r.next_frame(soon()), Frame::Idle));
+    }
+}

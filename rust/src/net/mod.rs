@@ -1,0 +1,13 @@
+//! Shared networking primitives used by every TCP front-end.
+//!
+//! [`frame`] holds the two framing disciplines the crate speaks on a
+//! socket — capped line reads (the [`serve`](crate::serve) line-JSON
+//! protocol) and capped length-prefixed binary frames (the
+//! [`dist`](crate::dist) wire protocol) — behind one hostile-input
+//! implementation: byte caps before allocation, read timeouts surfaced
+//! as `Idle` so callers can poll shutdown flags, and EOF/garbage as
+//! typed outcomes instead of panics.
+
+pub mod frame;
+
+pub use frame::{send_frame, send_line, Frame, FrameReader, Line, LineReader};

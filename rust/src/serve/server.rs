@@ -18,7 +18,6 @@
 //! [`ServeConfig::idle_timeout`], byte-trickling included, so parked
 //! peers cannot pin the acceptor budget.
 
-use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -28,6 +27,7 @@ use std::time::{Duration, Instant};
 use crate::error::Result;
 use crate::json::ParseLimits;
 use crate::model::FittedModel;
+use crate::net::frame::{send_line, Line, LineReader};
 use crate::runtime::Runtime;
 use crate::serve::batcher::{run_batcher, PredictJob, PushRefused, RequestQueue};
 use crate::serve::proto::{self, code, ProtoError, Request};
@@ -190,87 +190,6 @@ fn initiate_shutdown(ctx: &Ctx<'_>) {
     ctx.queue.close();
 }
 
-/// One framed line off the socket.
-enum Line {
-    /// A complete request line (without the terminator).
-    Msg(String),
-    /// Read timeout — poll the shutdown flag and retry.
-    Idle,
-    /// Peer closed (or errored); drop the connection.
-    Eof,
-    /// Line exceeded the byte cap; reply typed and drop the connection
-    /// (framing is lost once a line is abandoned mid-way).
-    TooLong,
-    /// Line bytes were not UTF-8; reply typed, framing stays intact.
-    BadUtf8,
-}
-
-/// Incremental, capped line framing over a blocking socket with a read
-/// timeout. Bytes after a newline are kept for the next call, so
-/// pipelined clients work.
-struct LineReader {
-    stream: TcpStream,
-    buf: Vec<u8>,
-    cap: usize,
-}
-
-impl LineReader {
-    /// Read until a complete line, the byte cap, EOF, or `deadline`.
-    /// The deadline is checked after every read, so a peer trickling
-    /// bytes without ever completing a line still returns `Idle` (and
-    /// gets reaped by the idle timeout) instead of pinning the thread —
-    /// and the caller caps it at `READ_POLL`, so the connection loop
-    /// re-checks the shutdown flag on that cadence no matter what the
-    /// peer sends.
-    fn next_line(&mut self, deadline: Instant) -> Line {
-        loop {
-            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
-                // the cap is on the line, not the buffer: a too-long
-                // line is rejected even when its terminator has already
-                // arrived
-                if pos > self.cap {
-                    return Line::TooLong;
-                }
-                let mut line: Vec<u8> = self.buf.drain(..=pos).collect();
-                line.pop(); // the \n
-                if line.last() == Some(&b'\r') {
-                    line.pop();
-                }
-                return match String::from_utf8(line) {
-                    Ok(s) => Line::Msg(s),
-                    Err(_) => Line::BadUtf8,
-                };
-            }
-            if self.buf.len() > self.cap {
-                return Line::TooLong;
-            }
-            if Instant::now() >= deadline {
-                return Line::Idle;
-            }
-            let mut chunk = [0u8; 4096];
-            match self.stream.read(&mut chunk) {
-                Ok(0) => return Line::Eof,
-                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut =>
-                {
-                    return Line::Idle
-                }
-                Err(_) => return Line::Eof,
-            }
-        }
-    }
-}
-
-/// Write one reply line; `false` means the peer is gone.
-fn send_line(stream: &mut TcpStream, reply: &str) -> bool {
-    let mut framed = String::with_capacity(reply.len() + 1);
-    framed.push_str(reply);
-    framed.push('\n');
-    stream.write_all(framed.as_bytes()).is_ok() && stream.flush().is_ok()
-}
-
 fn handle_conn(stream: TcpStream, ctx: &Ctx<'_>) {
     if stream.set_read_timeout(Some(READ_POLL)).is_err() {
         return;
@@ -279,11 +198,10 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx<'_>) {
     let Ok(read_half) = stream.try_clone() else {
         return;
     };
-    let mut reader = LineReader {
-        stream: read_half,
-        buf: Vec::new(),
-        cap: ctx.cfg.max_line_bytes,
-    };
+    // shared framing (net::frame): the deadline passed to next_line is
+    // capped at READ_POLL below, so the connection loop re-checks the
+    // shutdown flag on that cadence no matter what the peer sends
+    let mut reader = LineReader::new(read_half, ctx.cfg.max_line_bytes);
     let mut write_half = stream;
     let mut last_activity = Instant::now();
     loop {

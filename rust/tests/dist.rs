@@ -1,0 +1,244 @@
+//! Distributed-fit acceptance over real loopback sockets: in-process
+//! shard servers + the coordinator must produce **bit-identical**
+//! assignments, MSE, counters, and iteration counts to the single-node
+//! run — for the exact and mini-batch engines, at several thread widths
+//! and shard counts, through both the chunk-partials fast path and the
+//! rebuild-through-the-source fallback — and a shard that dies mid-fit
+//! must surface as a typed error naming it, never a hang. This is the
+//! acceptance gate for the dist layer; CI runs it on every commit.
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use eakm::data::{io, Dataset, DatasetF32};
+use eakm::dist::wire::tag;
+use eakm::dist::{run_dist, DistEngine, NetSource, ShardConfig};
+use eakm::net::frame::send_frame;
+use eakm::prelude::*;
+
+fn tmpdir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("eakm-dist-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A blobs dataset written to disk plus the same data resident in
+/// memory (reloaded, so the reference went through the same file).
+fn fixture(name: &str, n: usize, d: usize, clusters: usize, seed: u64) -> (PathBuf, Dataset) {
+    let ds = eakm::data::synth::blobs(n, d, clusters, 0.25, seed);
+    let path = tmpdir().join(name);
+    io::save_bin(&ds, &path).unwrap();
+    let mem = io::load_bin(&path).unwrap();
+    (path, mem)
+}
+
+/// One in-process shard server and the thread running it.
+struct Shard {
+    addr: SocketAddr,
+    handle: thread::JoinHandle<()>,
+}
+
+/// Start one shard per consecutive `[lo, hi)` window of `bounds`.
+fn start_shards(path: &Path, bounds: &[usize], threads: usize) -> Vec<Shard> {
+    bounds
+        .windows(2)
+        .map(|w| {
+            let mut cfg = ShardConfig::new(path.to_path_buf(), w[0], w[1]);
+            cfg.threads = threads;
+            let (tx, rx) = mpsc::channel();
+            let handle = thread::spawn(move || {
+                eakm::dist::shardd(&cfg, |addr| tx.send(addr).unwrap()).unwrap();
+            });
+            Shard {
+                addr: rx.recv().unwrap(),
+                handle,
+            }
+        })
+        .collect()
+}
+
+fn addr_list(shards: &[Shard]) -> Vec<String> {
+    shards.iter().map(|s| s.addr.to_string()).collect()
+}
+
+/// Ask a shard to shut down (best-effort: it may already be gone).
+fn kill(addr: SocketAddr) {
+    if let Ok(mut s) = TcpStream::connect(addr) {
+        let _ = send_frame(&mut s, tag::SHUTDOWN, &[]);
+        // drain the ack until the shard closes the connection
+        let mut ack = [0u8; 64];
+        while matches!(s.read(&mut ack), Ok(n) if n > 0) {}
+    }
+}
+
+fn stop(shards: Vec<Shard>) {
+    for s in &shards {
+        kill(s.addr);
+    }
+    for s in shards {
+        s.handle.join().unwrap();
+    }
+}
+
+/// Equal `n / parts` splits. For small `n` the boundaries land inside
+/// the global update chunks, so the coordinator takes the
+/// rebuild-through-the-source fallback path.
+fn even_bounds(n: usize, parts: usize) -> Vec<usize> {
+    (0..=parts).map(|i| i * n / parts).collect()
+}
+
+fn bits(c: &[f64]) -> Vec<u64> {
+    c.iter().map(|v| v.to_bits()).collect()
+}
+
+fn assert_same(got: &RunOutput, want: &RunOutput, ctx: &str) {
+    assert_eq!(got.assignments, want.assignments, "{ctx}");
+    assert_eq!(got.mse.to_bits(), want.mse.to_bits(), "{ctx}");
+    assert_eq!(got.counters, want.counters, "{ctx}");
+    assert_eq!(got.iterations, want.iterations, "{ctx}");
+    assert_eq!(got.converged, want.converged, "{ctx}");
+    assert_eq!(bits(&got.centroids), bits(&want.centroids), "{ctx}");
+}
+
+#[test]
+fn exact_fit_is_bit_identical_across_shard_counts() {
+    let (path, mem) = fixture("exact.ekb", 600, 5, 6, 3);
+    for threads in [1usize, 4] {
+        for parts in [1usize, 2, 3] {
+            let shards = start_shards(&path, &even_bounds(600, parts), threads);
+            let rt = Runtime::new(threads);
+            for alg in [Algorithm::Sta, Algorithm::ExpNs] {
+                let cfg = RunConfig::new(alg, 6).seed(7).threads(threads);
+                let want = Runner::new(&cfg).run(&mem).unwrap();
+                let got = run_dist(&rt, &cfg, &addr_list(&shards)).unwrap();
+                assert_same(&got, &want, &format!("{alg} t={threads} shards={parts}"));
+                // the distributed run reports network I/O and names the
+                // dataset by its file stem, like a local file run
+                let io = got.report.io.expect("net run reports I/O telemetry");
+                assert!(io.blocks_leased > 0, "{alg} t={threads} shards={parts}");
+                assert_eq!(got.report.dataset, "exact");
+                assert!(want.report.io.is_none());
+            }
+            stop(shards);
+        }
+    }
+}
+
+#[test]
+fn aligned_shard_boundaries_take_the_partials_path_bit_identically() {
+    // chunk_len(12288) = 4096: boundaries at multiples of 4096 mean
+    // chunks never straddle shards, so full-update algorithms rebuild
+    // centroid sums from shard-computed per-chunk partials instead of
+    // re-reading rows through the network source
+    let (path, mem) = fixture("aligned.ekb", 12_288, 3, 5, 17);
+    let splits = [
+        vec![0, 12_288],
+        vec![0, 4096, 12_288],
+        vec![0, 4096, 8192, 12_288],
+    ];
+    for alg in [Algorithm::Sta, Algorithm::ExpNs] {
+        let mut cfg = RunConfig::new(alg, 5).seed(9).threads(4);
+        cfg.max_iters = 25;
+        let want = Runner::new(&cfg).run(&mem).unwrap();
+        for bounds in &splits {
+            let shards = start_shards(&path, bounds, 4);
+            let got = run_dist(&Runtime::new(4), &cfg, &addr_list(&shards)).unwrap();
+            assert_same(&got, &want, &format!("{alg} bounds={bounds:?}"));
+            stop(shards);
+        }
+    }
+}
+
+#[test]
+fn minibatch_fit_over_the_network_is_bit_identical() {
+    // with a batch size below n, `run --shards` dispatches to the
+    // mini-batch engine over the NetSource: a pure data-plane fit
+    let (path, mem) = fixture("minibatch.ekb", 2_000, 4, 6, 5);
+    for growth in [2.0, 1.0] {
+        let mut cfg = RunConfig::new(Algorithm::ExpNs, 6)
+            .seed(11)
+            .batch_size(150)
+            .batch_growth(growth);
+        cfg.max_iters = if growth > 1.0 { 200 } else { 12 };
+        for threads in [1usize, 4] {
+            cfg.threads = threads;
+            let want = Runner::new(&cfg).run(&mem).unwrap();
+            let shards = start_shards(&path, &even_bounds(2_000, 3), threads);
+            let got = run_dist(&Runtime::new(threads), &cfg, &addr_list(&shards)).unwrap();
+            let ctx = format!("growth={growth} t={threads}");
+            assert_eq!(got.assignments, want.assignments, "{ctx}");
+            assert_eq!(got.mse.to_bits(), want.mse.to_bits(), "{ctx}");
+            assert_eq!(got.counters, want.counters, "{ctx}");
+            assert_eq!(got.report.batch, want.report.batch, "same batch schedule");
+            assert!(got.report.io.unwrap().blocks_leased > 0, "{ctx}");
+            stop(shards);
+        }
+    }
+}
+
+#[test]
+fn f32_files_stream_at_storage_width_bit_identically() {
+    // every value exactly f32-representable, so the resident DatasetF32
+    // reference and the narrow→widen wire round trip are both lossless
+    let ds = eakm::data::synth::blobs(900, 4, 5, 0.25, 41);
+    let rounded: Vec<f64> = ds.raw().iter().map(|&v| v as f32 as f64).collect();
+    let mem = Dataset::new(ds.name.clone(), rounded, 900, 4).unwrap();
+    let f32set = DatasetF32::from_dataset(&mem).unwrap();
+    let path = tmpdir().join("f32.ekb");
+    io::save_bin_f32(&mem, &path).unwrap();
+    let cfg = RunConfig::new(Algorithm::ExpNs, 5).seed(5).threads(2);
+    let want = Runner::new(&cfg).run(&f32set).unwrap();
+    let shards = start_shards(&path, &even_bounds(900, 2), 2);
+    let got = run_dist(&Runtime::new(2), &cfg, &addr_list(&shards)).unwrap();
+    assert_eq!(got.assignments, want.assignments);
+    assert_eq!(got.mse.to_bits(), want.mse.to_bits());
+    assert_eq!(got.counters, want.counters);
+    assert_eq!(bits(&got.centroids), bits(&want.centroids));
+    stop(shards);
+}
+
+#[test]
+fn dead_shard_is_a_typed_error_not_a_hang() {
+    let (path, _mem) = fixture("failure.ekb", 600, 4, 8, 23);
+    let shards = start_shards(&path, &even_bounds(600, 2), 1);
+    let addrs = addr_list(&shards);
+    let cfg = RunConfig::new(Algorithm::Sta, 8).seed(3).threads(2);
+    let rt = Runtime::new(2);
+    let net = NetSource::connect(&addrs, 0, Duration::from_secs(30)).unwrap();
+    let mut engine = DistEngine::connect(&rt, &cfg, &net).unwrap();
+    assert!(engine.step().is_ok(), "healthy round must succeed");
+    kill(shards[1].addr);
+    thread::sleep(Duration::from_millis(300));
+    let err = loop {
+        match engine.step() {
+            Err(e) => break e,
+            Ok(_) => assert!(
+                !engine.converged(),
+                "fit converged before the dead shard was noticed"
+            ),
+        }
+    };
+    let msg = err.to_string();
+    assert!(msg.contains("shard"), "{msg}");
+    assert!(msg.contains(&addrs[1]), "must name the dead shard: {msg}");
+    stop(shards);
+}
+
+#[test]
+fn connect_validates_coverage_and_unreachable_shards() {
+    let (path, _mem) = fixture("cover.ekb", 300, 3, 4, 29);
+    let shards = start_shards(&path, &[0, 300], 1);
+    let addr = shards[0].addr.to_string();
+    // the same shard twice: its ranges overlap instead of tiling [0, n)
+    let err = NetSource::connect(&[addr.clone(), addr], 0, Duration::from_secs(5)).unwrap_err();
+    assert!(err.to_string().contains("tile"), "{err}");
+    // a shard that is not listening is a typed connect error naming it
+    let err = NetSource::connect(&["127.0.0.1:1".into()], 0, Duration::from_secs(5)).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("127.0.0.1:1"), "{msg}");
+    stop(shards);
+}

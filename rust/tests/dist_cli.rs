@@ -1,0 +1,145 @@
+//! Spawned-binary smoke for the distributed fit: real `eakm shardd`
+//! processes (not in-process servers) plus `eakm run --shards` must
+//! reproduce `eakm run --ooc` on the same `.ekb` file exactly — the
+//! CLI plumbing (flag parsing, shard startup banner, report JSON) is
+//! exercised end-to-end the way an operator would drive it.
+
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, ChildStderr, Command, Stdio};
+
+use eakm::data::io;
+use eakm::json::Json;
+
+fn eakm() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_eakm"))
+}
+
+/// A running `eakm shardd` child, killed on drop. The stderr pipe is
+/// held open for the shard's lifetime so later diagnostics never hit a
+/// closed descriptor.
+struct ShardProc {
+    child: Child,
+    _stderr: BufReader<ChildStderr>,
+}
+
+impl Drop for ShardProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Spawn `eakm shardd` on an ephemeral port and parse the bound
+/// address out of its startup banner:
+/// `[shard serving rows LO..HI of FILE on ADDR]`.
+fn spawn_shard(path: &Path, lo: usize, hi: usize) -> (ShardProc, String) {
+    let mut child = eakm()
+        .args([
+            "shardd",
+            "--data",
+            path.to_str().unwrap(),
+            "--rows",
+            &format!("{lo}..{hi}"),
+            "--addr",
+            "127.0.0.1:0",
+            "--threads",
+            "2",
+        ])
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let mut stderr = BufReader::new(child.stderr.take().unwrap());
+    let mut banner = String::new();
+    stderr.read_line(&mut banner).unwrap();
+    let addr = banner
+        .rsplit(" on ")
+        .next()
+        .unwrap()
+        .trim()
+        .trim_end_matches(']')
+        .to_string();
+    assert!(
+        addr.starts_with("127.0.0.1:"),
+        "unexpected shardd banner: {banner:?}"
+    );
+    (
+        ShardProc {
+            child,
+            _stderr: stderr,
+        },
+        addr,
+    )
+}
+
+/// Run the binary, require success, and parse its stdout as JSON.
+fn run_json(args: &[&str]) -> Json {
+    let out = eakm().args(args).output().unwrap();
+    assert!(
+        out.status.success(),
+        "eakm {args:?} failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    Json::parse(std::str::from_utf8(&out.stdout).unwrap().trim()).unwrap()
+}
+
+#[test]
+fn real_shardd_processes_match_single_node_run() {
+    let dir = std::env::temp_dir().join(format!("eakm-dist-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path: PathBuf = dir.join("cli.ekb");
+    let ds = eakm::data::synth::blobs(1_200, 4, 6, 0.25, 19);
+    io::save_bin(&ds, &path).unwrap();
+
+    let (_s0, a0) = spawn_shard(&path, 0, 600);
+    let (_s1, a1) = spawn_shard(&path, 600, 1_200);
+
+    // `--ooc` reads the file as-is, exactly like the shard data plane
+    let single = run_json(&[
+        "run",
+        "--data-file",
+        path.to_str().unwrap(),
+        "--ooc",
+        "chunked",
+        "--k",
+        "6",
+        "--algorithm",
+        "exp-ns",
+        "--seed",
+        "7",
+        "--threads",
+        "2",
+        "--json",
+    ]);
+    let dist = run_json(&[
+        "run",
+        "--shards",
+        &format!("{a0},{a1}"),
+        "--k",
+        "6",
+        "--algorithm",
+        "exp-ns",
+        "--seed",
+        "7",
+        "--threads",
+        "2",
+        "--json",
+    ]);
+
+    for key in [
+        "mse",
+        "iterations",
+        "converged",
+        "q_a",
+        "q_centroid",
+        "q_displacement",
+        "q_init",
+    ] {
+        let s = single.get(key).unwrap_or(&Json::Null).to_string();
+        let d = dist.get(key).unwrap_or(&Json::Null).to_string();
+        assert_eq!(s, d, "report field {key:?} diverged");
+    }
+    let leased = dist.get("io_blocks_leased").and_then(Json::as_f64);
+    assert!(leased.unwrap_or(0.0) > 0.0, "dist run must report I/O");
+}
