@@ -1,18 +1,27 @@
-//! Serve throughput bench: requests/s over a loopback socket as a
-//! function of the micro-batcher's coalescing cap (`--max-batch`).
+//! Serve benches: closed-loop throughput and open-loop latency over a
+//! loopback socket.
 //!
-//! Eight concurrent clients issue synchronous predict requests against
-//! one server. With `max_batch = 1` every request costs its own pool
-//! dispatch + scan; with a real coalescing cap the batcher folds the
-//! backlog that accumulates during each scan into one shard pass —
-//! the serving-time analogue of the paper's amortise-work-per-query
-//! theme. The table reports the throughput ratio against the
-//! unbatched row, plus the server's own telemetry (batches, coalesced
-//! batches, overloaded rejects).
+//! **Throughput** — eight concurrent clients issue synchronous predict
+//! requests against one server as a function of the micro-batcher's
+//! coalescing cap (`--max-batch`). With `max_batch = 1` every request
+//! costs its own pool dispatch + scan; with a real coalescing cap the
+//! batcher folds the backlog that accumulates during each scan into one
+//! shard pass — the serving-time analogue of the paper's
+//! amortise-work-per-query theme. The table reports the throughput
+//! ratio against the unbatched row, plus the server's own telemetry
+//! (batches, coalesced batches, overloaded rejects).
+//!
+//! **Latency** — clients send single-row predicts on a fixed schedule
+//! (an offered QPS, not as-fast-as-possible) and latency is measured
+//! from the *scheduled* send time, so a server that falls behind
+//! accrues visible queueing delay instead of silently slowing the
+//! arrival process (no coordinated omission). Rows sweep
+//! {line-JSON, HTTP/1.1 shim} × offered load, reporting p50/p99.
 
 mod common;
 
-use std::net::SocketAddr;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::sync::mpsc;
 use std::thread;
 use std::time::{Duration, Instant};
@@ -29,6 +38,8 @@ const CLIENTS: usize = 8;
 const ROWS_PER_REQ: usize = 4;
 const SERVER_THREADS: usize = 4;
 const MAX_BATCH_SWEEP: [usize; 3] = [1, 64, 512];
+const LATENCY_CLIENTS: usize = 4;
+const LATENCY_QPS: [f64; 2] = [250.0, 1000.0];
 
 /// One benchmark round: spin up a server with the given coalescing cap,
 /// hammer it from `CLIENTS` synchronous clients, return the client-side
@@ -80,6 +91,166 @@ fn run_round(
         .unwrap()
         .call(&client::shutdown_request());
     (wall, server.join().unwrap())
+}
+
+/// Wire protocol a latency client speaks (the `proto` axis).
+#[derive(Clone, Copy, PartialEq)]
+enum Proto {
+    Json,
+    Http,
+}
+
+impl Proto {
+    fn name(self) -> &'static str {
+        match self {
+            Proto::Json => "json",
+            Proto::Http => "http",
+        }
+    }
+}
+
+/// Minimal keep-alive HTTP/1.1 client for the latency sweep. The bench
+/// only needs `POST /v1/predict` with a Content-Length body and a 200
+/// reply on a reused connection — the full-featured test client lives
+/// in tests/serve.rs.
+struct HttpConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl HttpConn {
+    fn connect(addr: SocketAddr) -> HttpConn {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(60)))
+            .unwrap();
+        HttpConn {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn call(&mut self, body: &str) -> Json {
+        write!(
+            self.writer,
+            "POST /v1/predict HTTP/1.1\r\nhost: bench\r\ncontent-type: application/json\r\n\
+             content-length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut status = String::new();
+        self.reader.read_line(&mut status).unwrap();
+        assert!(status.starts_with("HTTP/1.1 200"), "bad status: {status}");
+        let mut clen = 0usize;
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).unwrap();
+            let line = h.trim().to_ascii_lowercase();
+            if line.is_empty() {
+                break;
+            }
+            if let Some(v) = line.strip_prefix("content-length:") {
+                clen = v.trim().parse().unwrap();
+            }
+        }
+        let mut buf = vec![0u8; clen];
+        self.reader.read_exact(&mut buf).unwrap();
+        Json::parse(String::from_utf8(buf).unwrap().trim()).unwrap()
+    }
+}
+
+/// One latency-client connection, line-JSON or HTTP — both carry the
+/// same request body, so the sweep isolates pure protocol overhead.
+enum BenchConn {
+    Json(Client),
+    Http(HttpConn),
+}
+
+impl BenchConn {
+    fn connect(proto: Proto, addr: SocketAddr) -> BenchConn {
+        match proto {
+            Proto::Json => BenchConn::Json(Client::connect(addr).unwrap()),
+            Proto::Http => BenchConn::Http(HttpConn::connect(addr)),
+        }
+    }
+
+    fn predict(&mut self, line: &str) {
+        let reply = match self {
+            BenchConn::Json(c) => c.call(line).unwrap(),
+            BenchConn::Http(c) => c.call(line),
+        };
+        assert_eq!(
+            reply.get("ok").and_then(Json::as_bool),
+            Some(true),
+            "request failed: {reply}"
+        );
+    }
+}
+
+/// One open-loop round: `LATENCY_CLIENTS` clients each send single-row
+/// predicts on a fixed schedule (offered load `qps` across all clients,
+/// arrivals staggered uniformly) and report per-request latency from
+/// the scheduled send time.
+fn run_latency_round(
+    model: FittedModel,
+    queries: &[f64],
+    d: usize,
+    proto: Proto,
+    qps: f64,
+    per_client: usize,
+) -> (Duration, Vec<f64>, ServeStats) {
+    let cfg = ServeConfig {
+        acceptors: LATENCY_CLIENTS,
+        queue_depth: 1024,
+        ..ServeConfig::default()
+    };
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let server = thread::spawn(move || {
+        let rt = Runtime::new(SERVER_THREADS);
+        serve(&rt, model, &cfg, |addr| addr_tx.send(addr).unwrap()).unwrap()
+    });
+    let addr: SocketAddr = addr_rx.recv().unwrap();
+    let n_rows = queries.len() / d;
+    let epoch = Instant::now();
+    let mut workers = Vec::new();
+    for c in 0..LATENCY_CLIENTS {
+        let queries = queries.to_vec();
+        workers.push(thread::spawn(move || {
+            let mut conn = BenchConn::connect(proto, addr);
+            let interval = LATENCY_CLIENTS as f64 / qps;
+            let mut lat_ms = Vec::with_capacity(per_client);
+            for i in 0..per_client {
+                let sched =
+                    epoch + Duration::from_secs_f64(c as f64 / qps + i as f64 * interval);
+                if let Some(wait) = sched.checked_duration_since(Instant::now()) {
+                    thread::sleep(wait);
+                }
+                let lo = (c * per_client + i) % n_rows;
+                conn.predict(&client::predict_request(&queries[lo * d..(lo + 1) * d], d));
+                // from the *scheduled* send: a late previous reply shows
+                // up as queueing delay here, not a slower arrival rate
+                lat_ms.push(
+                    Instant::now().saturating_duration_since(sched).as_secs_f64() * 1e3,
+                );
+            }
+            lat_ms
+        }));
+    }
+    let mut lat_ms = Vec::new();
+    for w in workers {
+        lat_ms.extend(w.join().unwrap());
+    }
+    let wall = epoch.elapsed();
+    let _ = Client::connect(addr)
+        .unwrap()
+        .call(&client::shutdown_request());
+    (wall, lat_ms, server.join().unwrap())
+}
+
+/// Nearest-rank percentile over an already-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
 }
 
 fn main() {
@@ -152,12 +323,69 @@ fn main() {
     );
     common::emit("serve_throughput.txt", &rendered);
 
+    // ---- open-loop latency under load ---------------------------------
+    let secs = (4.0 * scale).clamp(0.25, 4.0);
+    let mut lt = TextTable::new(format!(
+        "Serve latency under open-loop load ({LATENCY_CLIENTS} clients, 1 row/req, \
+         k={k}, d={d}, {SERVER_THREADS} server threads; latency from scheduled send)"
+    ))
+    .headers(&[
+        "proto",
+        "qps",
+        "clients",
+        "reqs",
+        "wall[s]",
+        "p50_ms",
+        "p99_ms",
+        "achieved_qps",
+    ]);
+    for &qps in &LATENCY_QPS {
+        let per_client = ((qps * secs / LATENCY_CLIENTS as f64).round() as usize).max(10);
+        let total = LATENCY_CLIENTS * per_client;
+        for proto in [Proto::Json, Proto::Http] {
+            let (wall, mut lat, stats) =
+                run_latency_round(model.clone(), queries.raw(), d, proto, qps, per_client);
+            assert_eq!(stats.predicts, total as u64, "every request must be served");
+            if proto == Proto::Http {
+                assert_eq!(
+                    stats.http_requests, total as u64,
+                    "http rounds must ride the shim"
+                );
+            }
+            lat.sort_by(f64::total_cmp);
+            // p50_ms/p99_ms deliberately avoid the differ's timing-header
+            // patterns: loopback tail latencies are too jittery to gate
+            lt.row(vec![
+                proto.name().to_string(),
+                format!("{qps:.0}"),
+                LATENCY_CLIENTS.to_string(),
+                total.to_string(),
+                format!("{:.4}", wall.as_secs_f64()),
+                format!("{:.3}", percentile(&lat, 0.50)),
+                format!("{:.3}", percentile(&lat, 0.99)),
+                format!("{:.1}", total as f64 / wall.as_secs_f64()),
+            ]);
+            eprint!(".");
+        }
+    }
+    eprintln!();
+
+    let mut rendered = lt.render();
+    rendered.push_str(
+        "\nOpen loop: each client sends on a fixed schedule and latency counts from\n\
+         the scheduled send time, so queueing delay under load stays visible (p99\n\
+         rises above p50 as the server saturates). json is the line-delimited fast\n\
+         path; http drives the same ops through the HTTP/1.1 shim.\n",
+    );
+    common::emit("serve_latency.txt", &rendered);
+
     let bench_json = Json::obj()
         .field("bench", "serve")
         .field("scale", scale)
         .field("clients", CLIENTS as u64)
         .field("rows_per_request", ROWS_PER_REQ as u64)
         .field("server_threads", SERVER_THREADS as u64)
-        .field("throughput", t.to_json());
+        .field("throughput", t.to_json())
+        .field("latency", lt.to_json());
     common::emit_json("BENCH_serve.json", &bench_json);
 }

@@ -17,24 +17,40 @@ pub use common::{AssignStep, Moved, Requirements, SharedRound};
 
 /// Every algorithm variant the crate implements (paper notation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-#[allow(missing_docs)]
 pub enum Algorithm {
+    /// Standard Lloyd's algorithm — every distance, every round.
     Sta,
+    /// Simplified Elkan: k lower bounds, no inter-centroid tests.
     Selk,
+    /// Elkan 2003: k lower bounds plus inter-centroid tests.
     Elk,
+    /// Hamerly 2010: one lower bound with an outer test.
     Ham,
+    /// Drake 2013 Annular: origin-centred norm annulus over Hamerly.
     Ann,
+    /// **Exponion** (this paper §3.1): centroid-centred ball over
+    /// Hamerly.
     Exp,
+    /// Simplified Yinyang: group bounds, no local filter.
     Syin,
+    /// Yinyang (Ding et al. 2015), with the local filter.
     Yin,
+    /// [`Selk`](Algorithm::Selk) with ns-bounds (this paper §3.2).
     SelkNs,
+    /// [`Elk`](Algorithm::Elk) with ns-bounds (this paper §3.2).
     ElkNs,
+    /// [`Syin`](Algorithm::Syin) with ns-bounds (this paper §3.2).
     SyinNs,
+    /// [`Exp`](Algorithm::Exp) with ns-bounds (this paper §3.2).
     ExpNs,
     // Table 7 comparator family (deliberately less engineered)
+    /// Table 7 comparator: Lloyd's without the engineering of §4.1.1.
     NaiveSta,
+    /// Table 7 comparator: unengineered Hamerly.
     NaiveHam,
+    /// Table 7 comparator: unengineered Elkan.
     NaiveElk,
+    /// Table 7 comparator: unengineered Yinyang.
     NaiveYin,
     /// Adaptive choice by dimension (paper §5 future work; see
     /// `coordinator::auto`).

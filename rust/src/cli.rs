@@ -13,7 +13,10 @@
 //!                [--threads T|auto] [--out labels.txt] [--json]
 //! eakm serve     --model model.json [--addr 127.0.0.1:4999]
 //!                [--queue-depth N] [--max-batch ROWS] [--acceptors N]
-//!                [--linger-ms M] [--threads T|auto]
+//!                [--linger-ms M] [--threads T|auto] [--rate-limit R]
+//!                [--rate-burst B] [--breaker-fails N]
+//!                [--breaker-cooldown-ms M] [--admission-key ip|conn]
+//!                [--bulk-block-rows N]
 //!                (or fit at startup: the same --dataset/--data-file/
 //!                --ooc/--k/--algorithm flags as `run`)
 //! eakm shardd    --data file.ekb --rows LO..HI [--addr host:port]
@@ -122,7 +125,9 @@ common flags:
   --out PATH         (predict) write labels here, one per line
                      (default: stdout)
 
-serve flags (requests are line-delimited JSON; see docs for the ops):
+serve flags (requests are line-delimited JSON or HTTP/1.1, sniffed per
+connection — POST /v1/predict|nearest|bulk_predict|reload|shutdown and
+GET /v1/stats|healthz map onto the same ops; see docs/PROTOCOLS.md):
   --addr HOST:PORT   bind address (default 127.0.0.1:4999; port 0 =
                      ephemeral)
   --queue-depth N    bounded predict queue; overflow answers a typed
@@ -133,10 +138,27 @@ serve flags (requests are line-delimited JSON; see docs for the ops):
   --acceptors N      concurrent connection budget (default 4)
   --linger-ms M      micro-batching window: wait up to M ms to coalesce
                      concurrent requests into one scan (default 0)
+  --rate-limit R     per-client admission: sustained requests/second as
+                     a token bucket; rejects are typed \"rate_limited\"
+                     (HTTP 429 + Retry-After). 0 = off (default)
+  --rate-burst B     token-bucket burst capacity (default 8)
+  --breaker-fails N  trip a per-client circuit breaker after N
+                     consecutive failed requests; rejects are typed
+                     \"breaker_open\" (HTTP 503). 0 = off (default)
+  --breaker-cooldown-ms M
+                     how long a tripped breaker stays open before one
+                     half-open probe request (default 1000)
+  --admission-key ip|conn
+                     what \"per-client\" means for the rate limit and
+                     breaker: peer IP (default) or one connection
+  --bulk-block-rows N
+                     rows per streamed bulk_predict label block when
+                     the request leaves it unset (default 8192)
 serve answers with a model from --model, or fits one at startup using
 the same data flags as run (the two are mutually exclusive); the
-\"reload\" op hot-swaps a model JSON with zero downtime. Stop it with
-the \"shutdown\" op.
+\"reload\" op hot-swaps a model JSON with zero downtime, and
+\"bulk_predict\" streams labels for a whole on-disk .ekb file. Stop it
+with the \"shutdown\" op.
 
 distributed fit (results are bit-identical to single-node):
   eakm shardd --data file.ekb --rows LO..HI [--addr host:port]
@@ -505,6 +527,23 @@ fn cmd_predict(flags: &Flags) -> Result<i32> {
     Ok(0)
 }
 
+/// The startup note explaining when typed "overloaded" rejects fire.
+/// Only worth printing when the user *chose* the coupling by passing
+/// `--queue-depth` or `--acceptors` — the computed defaults always
+/// satisfy `queue_depth ≥ acceptors` and warning about them on every
+/// start is noise (and was a bug: the note fired unconditionally).
+fn queue_coupling_note(queue_depth: usize, acceptors: usize, user_tuned: bool) -> Option<String> {
+    if user_tuned && queue_depth >= acceptors {
+        Some(format!(
+            "[note: queue depth {queue_depth} ≥ {acceptors} acceptors — overload will surface \
+             as connection queueing; use --queue-depth < --acceptors for typed \
+             \"overloaded\" rejects]"
+        ))
+    } else {
+        None
+    }
+}
+
 /// `eakm serve`: load (or fit) a model, then run the long-lived server
 /// until a `shutdown` op arrives. Blocks the calling thread.
 fn cmd_serve(flags: &Flags) -> Result<i32> {
@@ -557,6 +596,20 @@ fn cmd_serve(flags: &Flags) -> Result<i32> {
             None => Ok(fallback),
         }
     };
+    let adm = crate::serve::AdmissionConfig::default();
+    let rate_limit = flag_num::<f64>(flags, "rate-limit")?.unwrap_or(adm.rate_limit);
+    if !(rate_limit >= 0.0 && rate_limit.is_finite()) {
+        return Err(EakmError::Config("--rate-limit must be a finite value ≥ 0".into()));
+    }
+    let burst = flag_num::<f64>(flags, "rate-burst")?.unwrap_or(adm.burst);
+    if !(burst > 0.0 && burst.is_finite()) {
+        return Err(EakmError::Config("--rate-burst must be a finite value > 0".into()));
+    }
+    let key_by = match flags.get("admission-key") {
+        None => adm.key_by,
+        Some(v) => crate::serve::KeyBy::parse(v)
+            .ok_or_else(|| EakmError::Config(format!("bad --admission-key: {v:?} (ip|conn)")))?,
+    };
     let cfg = crate::serve::ServeConfig {
         addr: flags
             .get("addr")
@@ -568,14 +621,23 @@ fn cmd_serve(flags: &Flags) -> Result<i32> {
         linger: Duration::from_millis(flag_num::<u64>(flags, "linger-ms")?.unwrap_or(0)),
         max_line_bytes: defaults.max_line_bytes,
         idle_timeout: defaults.idle_timeout,
+        bulk_block_rows: positive("bulk-block-rows", defaults.bulk_block_rows)?,
+        admission: crate::serve::AdmissionConfig {
+            rate_limit,
+            burst,
+            breaker_fails: flag_num::<u32>(flags, "breaker-fails")?.unwrap_or(adm.breaker_fails),
+            breaker_cooldown: flag_num::<u64>(flags, "breaker-cooldown-ms")?
+                .map(Duration::from_millis)
+                .unwrap_or(adm.breaker_cooldown),
+            key_by,
+        },
     };
-    if cfg.queue_depth >= cfg.acceptors {
-        eprintln!(
-            "[note: queue depth {} ≥ {} acceptors — overload will surface as \
-             connection queueing; use --queue-depth < --acceptors for typed \
-             \"overloaded\" rejects]",
-            cfg.queue_depth, cfg.acceptors
-        );
+    if let Some(note) = queue_coupling_note(
+        cfg.queue_depth,
+        cfg.acceptors,
+        flags.contains_key("queue-depth") || flags.contains_key("acceptors"),
+    ) {
+        eprintln!("{note}");
     }
     let started = Instant::now();
     let threads = rt.threads();
@@ -758,6 +820,17 @@ mod tests {
         assert_eq!(f.get("k").unwrap(), "100");
         assert_eq!(f.get("json").unwrap(), "true");
         assert_eq!(f.get("seed").unwrap(), "3");
+    }
+
+    #[test]
+    fn queue_coupling_note_is_silent_on_defaults() {
+        // the stock defaults (256 ≥ 4) are a valid config — no note
+        assert_eq!(queue_coupling_note(256, 4, false), None);
+        // user tuned the knobs into the coupled regime — explain it
+        let note = queue_coupling_note(8, 4, true).unwrap();
+        assert!(note.contains("queue depth 8 ≥ 4 acceptors"), "{note}");
+        // user tuned into strict-reject mode — nothing to explain
+        assert_eq!(queue_coupling_note(2, 4, true), None);
     }
 
     #[test]

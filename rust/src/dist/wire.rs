@@ -46,17 +46,35 @@ pub(crate) const MAX_FRAME: usize = 1 << 30;
 /// Frame tags (see the module table). Public so tests and tooling can
 /// speak the protocol (e.g. send a `SHUTDOWN` frame to a shard).
 pub mod tag {
+    /// Data plane, client → shard: open a block cursor over the shard's
+    /// row range (body: window-rows hint).
     pub const OPEN: u8 = 1;
+    /// Data plane, shard → client: cursor opened (body: n, d, widths).
     pub const OPEN_OK: u8 = 2;
+    /// Data plane, client → shard: lease the next row block.
     pub const LEASE: u8 = 3;
+    /// Data plane, shard → client: one leased block (rows + exact norms).
     pub const BLOCK: u8 = 4;
+    /// Compute plane, coordinator → shard: start a fit generation
+    /// (body: k, algorithm, fit parameters).
     pub const FIT_INIT: u8 = 10;
+    /// Compute plane, shard → coordinator: fit generation accepted.
     pub const FIT_OK: u8 = 11;
+    /// Compute plane, coordinator → shard: one assignment round
+    /// (body: current centroids).
     pub const ROUND: u8 = 12;
+    /// Compute plane, shard → coordinator: the round's partial sums,
+    /// moved counts, and bound counters for the shard's rows.
     pub const ROUND_OK: u8 = 13;
+    /// Compute plane, coordinator → shard: the fit generation is over;
+    /// drop its state.
     pub const FIT_END: u8 = 14;
+    /// Generic success acknowledgement with an empty body.
     pub const OK: u8 = 15;
+    /// Either plane: ask the shard process to exit cleanly.
     pub const SHUTDOWN: u8 = 99;
+    /// Either direction: a typed failure (body: UTF-8 message); the
+    /// receiver surfaces it as [`EakmError::Net`](crate::error::EakmError).
     pub const ERR: u8 = 255;
 }
 

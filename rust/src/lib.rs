@@ -37,24 +37,20 @@
 //!   JSON [`save`](model::FittedModel::save) /
 //!   [`load`](model::FittedModel::load) so models survive restarts.
 //!
-//! ```no_run
+//! ```
 //! use eakm::prelude::*;
 //!
-//! let rt = Runtime::new(4); // or Runtime::auto()
-//! let data = eakm::data::synth::blobs(10_000, 8, 50, 0.05, 42);
-//! let model = Kmeans::new(50)
+//! let rt = Runtime::new(2); // or Runtime::auto()
+//! let data = eakm::data::synth::blobs(2_000, 4, 10, 0.05, 42);
+//! let model = Kmeans::new(10)
 //!     .algorithm(Algorithm::ExpNs)
 //!     .seed(7)
 //!     .fit(&rt, &data)
 //!     .unwrap();
-//! println!(
-//!     "iters={} mse={:.5}",
-//!     model.report().iterations,
-//!     model.report().mse
-//! );
-//! let queries = eakm::data::synth::blobs(1_000, 8, 50, 0.05, 43);
+//! assert!(model.report().iterations >= 1);
+//! let queries = eakm::data::synth::blobs(100, 4, 10, 0.05, 43);
 //! let labels = model.predict(&rt, &queries).unwrap(); // same pool, no respawn
-//! # let _ = labels;
+//! assert_eq!(labels.len(), 100);
 //! ```
 //!
 //! The lower-level [`coordinator::Runner`] / [`coordinator::Engine`]
@@ -65,24 +61,56 @@
 //!
 //! [`serve`](crate::serve) turns a fitted model into a **long-lived
 //! network service**: a dependency-free blocking TCP server speaking
-//! line-delimited JSON (`predict` / `nearest` / `stats` / `reload` /
-//! `shutdown`), with N acceptor threads feeding a *bounded* request
-//! queue (overflow gets a typed `overloaded` reply — backpressure, not
-//! unbounded queueing; see `ServeConfig::queue_depth` for when each
-//! layer binds), a **micro-batcher** that coalesces concurrent
-//! predict requests into one pool-sharded
-//! [`predict_rows`](model::FittedModel::predict_rows) scan on the
-//! shared [`Runtime`](runtime::Runtime) — answers stay bit-identical
-//! to direct `predict` at any thread width and batch boundary — and a
-//! `Mutex<Arc<FittedModel>>` state cell for zero-downtime model
-//! reloads. Request bytes are untrusted, so the [`json`] parser runs
-//! under [`json::ParseLimits::network`] (payload and nesting caps with
-//! typed errors). Serving telemetry (requests, batched rows, coalesced
-//! batches, queue-full rejects, per-op latency sums) is live through
-//! the `stats` op and summarised on clean shutdown. The CLI front-end
-//! is `eakm serve --model model.json` (or fit-then-serve straight from
+//! two protocols on one port, sniffed per connection — line-delimited
+//! JSON (`predict` / `nearest` / `bulk_predict` / `stats` / `reload` /
+//! `shutdown`) and an HTTP/1.1 shim ([`serve::http`]) mapping
+//! `POST /v1/predict` &co. plus `GET /v1/stats` / `GET /v1/healthz`
+//! onto the same ops, so `curl` works out of the box. N acceptor
+//! threads feed a *bounded* request queue (overflow gets a typed
+//! `overloaded` reply — backpressure, not unbounded queueing; see
+//! `ServeConfig::queue_depth` for when each layer binds), a
+//! **micro-batcher** coalesces concurrent predict requests into one
+//! pool-sharded [`predict_rows`](model::FittedModel::predict_rows)
+//! scan on the shared [`Runtime`](runtime::Runtime) — answers stay
+//! bit-identical to direct `predict` at any thread width and batch
+//! boundary — and a `Mutex<Arc<FittedModel>>` state cell gives
+//! zero-downtime model reloads. In front of everything,
+//! [`serve::admission`] applies per-client token-bucket rate limiting
+//! and a consecutive-failure circuit breaker with typed
+//! `rate_limited` / `breaker_open` rejections (HTTP 429/503 +
+//! `Retry-After`); `bulk_predict` streams labels for a whole on-disk
+//! `.ekb` file through [`model::FittedModel::predict_blocks`] with
+//! bounded memory. Request bytes are untrusted, so the [`json`]
+//! parser runs under [`json::ParseLimits::network`] (payload and
+//! nesting caps with typed errors). Serving telemetry (requests per
+//! protocol, batched rows, coalesced batches, queue-full / admission
+//! rejects, bulk blocks, per-op latency sums) is live through the
+//! `stats` op and summarised on clean shutdown. The CLI front-end is
+//! `eakm serve --model model.json` (or fit-then-serve straight from
 //! `--dataset`/`--data-file`/`--ooc`, with the same data flags as
 //! `run`).
+//!
+//! ```
+//! use std::sync::mpsc;
+//! use eakm::prelude::*;
+//! use eakm::serve::{client, serve, Client, ServeConfig};
+//!
+//! let (tx, rx) = mpsc::channel();
+//! std::thread::spawn(move || {
+//!     let rt = Runtime::new(1);
+//!     let data = eakm::data::synth::blobs(400, 3, 4, 0.05, 42);
+//!     let model = Kmeans::new(4).seed(7).fit(&rt, &data).unwrap();
+//!     let cfg = ServeConfig {
+//!         addr: "127.0.0.1:0".into(), // ephemeral port
+//!         ..ServeConfig::default()
+//!     };
+//!     serve(&rt, model, &cfg, move |addr| tx.send(addr).unwrap()).unwrap();
+//! });
+//! let mut c = Client::connect(rx.recv().unwrap()).unwrap();
+//! let reply = c.call(&client::predict_request(&[0.1, 0.2, 0.3], 3)).unwrap();
+//! assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true));
+//! c.call(&client::shutdown_request()).unwrap();
+//! ```
 //!
 //! ## Distributed fit
 //!
@@ -204,6 +232,8 @@
 //! PJRT C API from [`runtime`] — Python never runs at clustering time
 //! (off by default behind the `xla` feature; the external `xla` crate is
 //! unavailable offline).
+
+#![warn(missing_docs)]
 
 pub mod error;
 pub mod rng;

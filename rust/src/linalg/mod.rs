@@ -55,14 +55,17 @@ pub(crate) mod reference {
         }
     }
 
+    /// Oracle dot product: naive left-to-right summation.
     pub fn dot(a: &[f64], b: &[f64]) -> f64 {
         a.iter().zip(b).map(|(x, y)| x * y).sum()
     }
 
+    /// Oracle squared norm via [`dot`].
     pub fn sqnorm(a: &[f64]) -> f64 {
         dot(a, a)
     }
 
+    /// Oracle squared distance: naive left-to-right summation.
     pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
         a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
     }

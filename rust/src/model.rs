@@ -37,7 +37,7 @@ use crate::algorithms::common::nearest_labels;
 use crate::algorithms::Algorithm;
 use crate::config::RunConfig;
 use crate::coordinator::Runner;
-use crate::data::{BlockCursor, DataSource, SliceCursor};
+use crate::data::{BlockCursor, DataSource, RowBlock, SliceCursor};
 use crate::error::{EakmError, Result};
 use crate::init::InitMethod;
 use crate::json::Json;
@@ -252,6 +252,55 @@ impl FittedModel {
         Ok(out)
     }
 
+    /// Label an entire [`DataSource`] in blocks of `block_rows`,
+    /// calling `emit(lo, labels)` once per block in row order — the
+    /// streaming bulk-predict entry point: a multi-GB out-of-core
+    /// source is labelled with peak memory proportional to one block,
+    /// not the dataset.
+    ///
+    /// Each block is scanned by the same pool-sharded nearest-centroid
+    /// pass as [`predict`](FittedModel::predict), and every row's scan
+    /// is independent of its neighbours, so the concatenation of the
+    /// emitted blocks is **bit-identical** to a whole-source `predict`
+    /// — at any thread width and any block boundary. An `Err` from
+    /// `emit` aborts the scan and is returned unchanged (the serving
+    /// tier uses this to stop labelling when the peer goes away).
+    pub fn predict_blocks<F>(
+        &self,
+        rt: &Runtime,
+        data: &dyn DataSource,
+        block_rows: usize,
+        mut emit: F,
+    ) -> Result<()>
+    where
+        F: FnMut(usize, &[u32]) -> Result<()>,
+    {
+        if data.d() != self.d {
+            return Err(EakmError::Config(format!(
+                "predict_blocks: model expects d={}, data has d={}",
+                self.d,
+                data.d()
+            )));
+        }
+        let block_rows = block_rows.max(1);
+        let n = data.n();
+        let mut labels = vec![0u32; block_rows.min(n)];
+        let mut lo = 0;
+        while lo < n {
+            let len = block_rows.min(n - lo);
+            let window = WindowSource {
+                inner: data,
+                lo,
+                len,
+            };
+            let out = &mut labels[..len];
+            nearest_labels(rt.pool(), &window, &self.centroids, &self.cnorms, out);
+            emit(lo, out)?;
+            lo += len;
+        }
+        Ok(())
+    }
+
     /// Nearest centroid of a single query point: `(label, distance)`.
     /// The one-point serving hot path — no dispatch, no allocation.
     pub fn nearest(&self, point: &[f64]) -> (u32, f64) {
@@ -455,6 +504,55 @@ impl DataSource for RowsSource<'_> {
     }
 }
 
+/// A `len`-row window `[lo, lo+len)` of another source, presented as a
+/// standalone [`DataSource`] (rows re-indexed from 0) behind
+/// [`FittedModel::predict_blocks`]. Leases pass straight through to the
+/// inner source's cursors — same bytes, same precomputed norms — which
+/// is what keeps a windowed scan bit-identical to the same rows scanned
+/// in place.
+struct WindowSource<'a> {
+    inner: &'a dyn DataSource,
+    lo: usize,
+    len: usize,
+}
+
+impl DataSource for WindowSource<'_> {
+    fn n(&self) -> usize {
+        self.len
+    }
+
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+
+    fn open(&self, lo: usize, len: usize) -> Box<dyn BlockCursor + '_> {
+        debug_assert!(lo + len <= self.len, "window open out of range");
+        Box::new(WindowCursor {
+            inner: self.inner.open(self.lo + lo, len),
+            offset: self.lo,
+        })
+    }
+}
+
+/// Cursor for [`WindowSource`]: window-local indices are shifted by the
+/// window offset before reaching the inner cursor, and leased blocks
+/// are re-labelled with their window-local `lo`.
+struct WindowCursor<'a> {
+    inner: Box<dyn BlockCursor + 'a>,
+    offset: usize,
+}
+
+impl BlockCursor for WindowCursor<'_> {
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+
+    fn lease(&mut self, lo: usize, len: usize) -> RowBlock<'_> {
+        let block = self.inner.lease(self.offset + lo, len);
+        RowBlock::new(lo, block.d(), block.rows(), block.sqnorms())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -589,6 +687,50 @@ mod tests {
         let bits = |c: &[f64]| c.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(back.centroids()), bits(model.centroids()));
         assert_eq!(bits(&back.cnorms), bits(&model.cnorms));
+    }
+
+    #[test]
+    fn predict_blocks_matches_predict_at_any_boundary_and_width() {
+        let serial = Runtime::serial();
+        let ds = blobs(503, 4, 7, 0.2, 11);
+        let model = Kmeans::new(7).seed(2).fit(&serial, &ds).unwrap();
+        let want = model.predict(&serial, &ds).unwrap();
+        for threads in [1usize, 4] {
+            let rt = Runtime::new(threads);
+            // boundaries straddle, divide, and exceed n
+            for block in [1usize, 64, 100, 503, 1000] {
+                let mut got = Vec::new();
+                let mut next_lo = 0usize;
+                model
+                    .predict_blocks(&rt, &ds, block, |lo, labels| {
+                        assert_eq!(lo, next_lo, "blocks must arrive in row order");
+                        next_lo += labels.len();
+                        got.extend_from_slice(labels);
+                        Ok(())
+                    })
+                    .unwrap();
+                assert_eq!(got, want, "threads={threads} block={block}");
+            }
+        }
+    }
+
+    #[test]
+    fn predict_blocks_propagates_dim_mismatch_and_emit_errors() {
+        let rt = Runtime::serial();
+        let ds = blobs(120, 4, 3, 0.2, 5);
+        let model = Kmeans::new(3).seed(1).fit(&rt, &ds).unwrap();
+        let wrong = blobs(50, 3, 3, 0.2, 1);
+        assert!(model
+            .predict_blocks(&rt, &wrong, 16, |_, _| Ok(()))
+            .is_err());
+        // an emit error aborts the scan after the first block
+        let mut calls = 0;
+        let err = model.predict_blocks(&rt, &ds, 50, |_, _| {
+            calls += 1;
+            Err(EakmError::Net("peer gone".into()))
+        });
+        assert!(matches!(err, Err(EakmError::Net(_))));
+        assert_eq!(calls, 1);
     }
 
     #[test]

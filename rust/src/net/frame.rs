@@ -53,6 +53,18 @@ impl<S: Read> LineReader<S> {
         }
     }
 
+    /// As [`new`](LineReader::new), but seed the buffer with bytes the
+    /// caller already read off the stream — the protocol-sniffing path:
+    /// a server peeks at a connection's first bytes to pick a protocol,
+    /// then hands them to the reader it chose so no byte is lost.
+    pub fn with_buffered(stream: S, cap: usize, buffered: Vec<u8>) -> Self {
+        LineReader {
+            stream,
+            buf: buffered,
+            cap,
+        }
+    }
+
     /// Read until a complete line, the byte cap, EOF, or `deadline`.
     /// The deadline is checked after every read, so a peer trickling
     /// bytes without ever completing a line still returns `Idle` (and
@@ -234,6 +246,25 @@ mod tests {
             _ => panic!("want Msg"),
         }
         assert!(matches!(r.next_line(soon()), Line::Eof));
+    }
+
+    #[test]
+    fn line_reader_with_buffered_replays_sniffed_bytes() {
+        // bytes a sniffer consumed before choosing the protocol must be
+        // replayed ahead of anything still on the stream
+        let mut r = LineReader::with_buffered(
+            Script::new(vec![b"lo\nnext\n".to_vec()]),
+            64,
+            b"hel".to_vec(),
+        );
+        match r.next_line(soon()) {
+            Line::Msg(s) => assert_eq!(s, "hello"),
+            _ => panic!("want Msg"),
+        }
+        match r.next_line(soon()) {
+            Line::Msg(s) => assert_eq!(s, "next"),
+            _ => panic!("want Msg"),
+        }
     }
 
     #[test]

@@ -1,0 +1,415 @@
+//! Per-client admission control: token-bucket rate limiting and a
+//! trip-after-consecutive-failures circuit breaker, sitting *in front*
+//! of the bounded request queue.
+//!
+//! The queue protects the server's memory; admission control protects
+//! its **fairness**. One abusive client — flooding requests, or sending
+//! a stream of malformed/failing ones — would otherwise consume the
+//! acceptor budget and queue slots that well-behaved clients need.
+//! Admission keys clients (by peer IP, or per connection — see
+//! [`KeyBy`]) and answers over-limit traffic with typed replies the
+//! client can act on:
+//!
+//! * **rate limiting** — each key owns a token bucket refilled at
+//!   [`rate_limit`](AdmissionConfig::rate_limit) requests/second up to
+//!   [`burst`](AdmissionConfig::burst) tokens; a request with no token
+//!   available is refused with `rate_limited` (HTTP 429) and a
+//!   retry-after hint. Tokens refill continuously, so a client that
+//!   paces itself to the configured rate is never refused.
+//! * **circuit breaking** — [`breaker_fails`](AdmissionConfig::breaker_fails)
+//!   *consecutive* failed requests (malformed lines, dimension
+//!   mismatches, failed reloads) trip the key's breaker **open**:
+//!   requests are refused with `breaker_open` (HTTP 503) for
+//!   [`breaker_cooldown`](AdmissionConfig::breaker_cooldown). After the
+//!   cooldown the breaker goes **half-open**: exactly one probe request
+//!   is admitted; success closes the breaker, failure re-opens it for
+//!   another cooldown. Any success resets the consecutive-failure
+//!   count.
+//!
+//! Both layers are off by default (`rate_limit == 0.0`,
+//! `breaker_fails == 0`) so embedders opt in per deployment; the CLI
+//! knobs are `--rate-limit`, `--rate-burst`, `--breaker-fails`,
+//! `--breaker-cooldown-ms`, and `--admission-key`.
+//!
+//! Decisions are made under one mutex over a small per-key state map —
+//! admission is O(1) per request and the map is pruned of idle keys so
+//! an address-rotating flood cannot grow it unboundedly.
+
+use std::collections::HashMap;
+use std::net::{IpAddr, SocketAddr};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// How admission state is keyed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KeyBy {
+    /// Per peer IP address (the production default): every connection
+    /// from one host shares one bucket and one breaker, so a client
+    /// cannot escape its budget by reconnecting.
+    Ip,
+    /// Per TCP connection: each accepted connection gets its own
+    /// bucket/breaker. For trusted multi-tenant proxies (all peers
+    /// share one IP) and for tests, where every client is loopback.
+    Conn,
+}
+
+impl KeyBy {
+    /// Parse a CLI value (`ip` | `conn`).
+    pub fn parse(s: &str) -> Option<KeyBy> {
+        match s {
+            "ip" => Some(KeyBy::Ip),
+            "conn" => Some(KeyBy::Conn),
+            _ => None,
+        }
+    }
+}
+
+/// Admission knobs, embedded in
+/// [`ServeConfig`](crate::serve::ServeConfig). The default disables
+/// both layers.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Sustained request budget per client key, requests/second.
+    /// `0.0` disables rate limiting.
+    pub rate_limit: f64,
+    /// Token-bucket capacity: how many requests a key may burst above
+    /// the sustained rate. Clamped to at least 1 token when rate
+    /// limiting is on.
+    pub burst: f64,
+    /// Consecutive failures that trip a key's circuit breaker.
+    /// `0` disables the breaker.
+    pub breaker_fails: u32,
+    /// How long a tripped breaker stays open before admitting one
+    /// half-open probe request.
+    pub breaker_cooldown: Duration,
+    /// What identifies a client (IP or connection).
+    pub key_by: KeyBy,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            rate_limit: 0.0,
+            burst: 8.0,
+            breaker_fails: 0,
+            breaker_cooldown: Duration::from_secs(1),
+            key_by: KeyBy::Ip,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// True when both layers are disabled (the default) — the server
+    /// skips admission entirely.
+    pub fn is_disabled(&self) -> bool {
+        self.rate_limit <= 0.0 && self.breaker_fails == 0
+    }
+}
+
+/// What a client key resolves to — opaque to callers; obtained from
+/// [`Admission::key_for`] once per connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ClientKey(KeyRepr);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+enum KeyRepr {
+    Ip(IpAddr),
+    Conn(u64),
+}
+
+/// The verdict for one request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Decision {
+    /// Serve it.
+    Admit,
+    /// Token bucket empty — refuse with `rate_limited` and this
+    /// retry-after hint.
+    RateLimited(Duration),
+    /// Breaker open — refuse with `breaker_open` and this retry-after
+    /// hint (the remaining cooldown).
+    BreakerOpen(Duration),
+}
+
+/// Per-key bucket + breaker state.
+struct ClientState {
+    /// Tokens currently in the bucket.
+    tokens: f64,
+    /// When the bucket was last refilled.
+    refilled: Instant,
+    /// Consecutive failed requests (reset by any success).
+    fails: u32,
+    /// `Some(when)` while the breaker is open; half-open after
+    /// `when + cooldown`.
+    opened: Option<Instant>,
+    /// A half-open probe is in flight — further requests are refused
+    /// until its outcome arrives.
+    probing: bool,
+    /// For pruning idle keys.
+    last_seen: Instant,
+}
+
+impl ClientState {
+    fn new(cfg: &AdmissionConfig, now: Instant) -> ClientState {
+        ClientState {
+            // a fresh key starts with a full bucket
+            tokens: cfg.burst.max(1.0),
+            refilled: now,
+            fails: 0,
+            opened: None,
+            probing: false,
+            last_seen: now,
+        }
+    }
+}
+
+/// Prune idle keys once the map holds this many.
+const PRUNE_AT: usize = 4096;
+
+/// A key idle this long is forgotten (its bucket would be full and its
+/// breaker cooled down anyway).
+const IDLE_HORIZON: Duration = Duration::from_secs(300);
+
+/// The shared admission gate: one per server, consulted by every
+/// acceptor before a request touches the queue or an op handler.
+pub struct Admission {
+    cfg: AdmissionConfig,
+    clients: Mutex<HashMap<ClientKey, ClientState>>,
+    next_conn: AtomicU64,
+}
+
+impl Admission {
+    /// Build a gate from its config.
+    pub fn new(cfg: AdmissionConfig) -> Admission {
+        Admission {
+            cfg,
+            clients: Mutex::new(HashMap::new()),
+            next_conn: AtomicU64::new(0),
+        }
+    }
+
+    /// The config this gate was built with.
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Resolve the admission key for a new connection — per peer IP or
+    /// per connection, as configured. Call once at accept time.
+    pub fn key_for(&self, peer: Option<SocketAddr>) -> ClientKey {
+        match (self.cfg.key_by, peer) {
+            (KeyBy::Ip, Some(addr)) => ClientKey(KeyRepr::Ip(addr.ip())),
+            // no peer address (already disconnected) or per-connection
+            // keying: a fresh id, never shared
+            _ => ClientKey(KeyRepr::Conn(
+                self.next_conn.fetch_add(1, Ordering::Relaxed),
+            )),
+        }
+    }
+
+    /// Decide one request for `key`. Consumes a token when admitted.
+    pub fn check(&self, key: ClientKey) -> Decision {
+        if self.cfg.is_disabled() {
+            return Decision::Admit;
+        }
+        self.check_at(key, Instant::now())
+    }
+
+    /// Report the outcome of an admitted request: failures count toward
+    /// the breaker threshold, success resets it (and closes an open
+    /// breaker after a successful half-open probe).
+    pub fn outcome(&self, key: ClientKey, success: bool) {
+        if self.cfg.breaker_fails == 0 {
+            return;
+        }
+        let now = Instant::now();
+        let mut clients = self.clients.lock().expect("admission poisoned");
+        let state = clients
+            .entry(key)
+            .or_insert_with(|| ClientState::new(&self.cfg, now));
+        state.last_seen = now;
+        if success {
+            state.fails = 0;
+            state.opened = None;
+            state.probing = false;
+        } else {
+            state.fails = state.fails.saturating_add(1);
+            if state.probing || state.fails >= self.cfg.breaker_fails {
+                // trip (or re-trip after a failed probe): refuse until
+                // the cooldown elapses again
+                state.opened = Some(now);
+                state.probing = false;
+                state.fails = 0;
+            }
+        }
+    }
+
+    /// Testable core of [`check`](Admission::check) with an explicit
+    /// clock.
+    fn check_at(&self, key: ClientKey, now: Instant) -> Decision {
+        let mut clients = self.clients.lock().expect("admission poisoned");
+        if clients.len() >= PRUNE_AT && !clients.contains_key(&key) {
+            clients.retain(|_, s| now.duration_since(s.last_seen) < IDLE_HORIZON);
+        }
+        let state = clients
+            .entry(key)
+            .or_insert_with(|| ClientState::new(&self.cfg, now));
+        state.last_seen = now;
+        // breaker first: an open breaker refuses without spending tokens
+        if let Some(opened) = state.opened {
+            let elapsed = now.duration_since(opened);
+            if elapsed < self.cfg.breaker_cooldown {
+                return Decision::BreakerOpen(self.cfg.breaker_cooldown - elapsed);
+            }
+            if state.probing {
+                // one probe at a time; others retry after a cooldown
+                return Decision::BreakerOpen(self.cfg.breaker_cooldown);
+            }
+            state.probing = true;
+            // the probe bypasses the bucket: it exists to test recovery
+            return Decision::Admit;
+        }
+        if self.cfg.rate_limit > 0.0 {
+            let burst = self.cfg.burst.max(1.0);
+            let refill = now.duration_since(state.refilled).as_secs_f64() * self.cfg.rate_limit;
+            state.tokens = (state.tokens + refill).min(burst);
+            state.refilled = now;
+            if state.tokens < 1.0 {
+                let wait = (1.0 - state.tokens) / self.cfg.rate_limit;
+                return Decision::RateLimited(Duration::from_secs_f64(wait));
+            }
+            state.tokens -= 1.0;
+        }
+        Decision::Admit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gate(rate: f64, burst: f64, fails: u32, cooldown_ms: u64) -> Admission {
+        Admission::new(AdmissionConfig {
+            rate_limit: rate,
+            burst,
+            breaker_fails: fails,
+            breaker_cooldown: Duration::from_millis(cooldown_ms),
+            key_by: KeyBy::Conn,
+        })
+    }
+
+    #[test]
+    fn disabled_config_admits_everything() {
+        let g = Admission::new(AdmissionConfig::default());
+        let k = g.key_for(None);
+        for _ in 0..10_000 {
+            assert_eq!(g.check(k), Decision::Admit);
+        }
+    }
+
+    #[test]
+    fn bucket_allows_burst_then_refuses_then_refills() {
+        let g = gate(10.0, 4.0, 0, 0);
+        let k = g.key_for(None);
+        let t0 = Instant::now();
+        for i in 0..4 {
+            assert_eq!(g.check_at(k, t0), Decision::Admit, "burst token {i}");
+        }
+        match g.check_at(k, t0) {
+            Decision::RateLimited(wait) => {
+                // retry-after ≈ one token at 10/s
+                assert!(wait <= Duration::from_millis(101), "{wait:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+        // 250 ms later: 2.5 tokens refilled → two more admits
+        let t1 = t0 + Duration::from_millis(250);
+        assert_eq!(g.check_at(k, t1), Decision::Admit);
+        assert_eq!(g.check_at(k, t1), Decision::Admit);
+        assert!(matches!(g.check_at(k, t1), Decision::RateLimited(_)));
+    }
+
+    #[test]
+    fn keys_are_isolated() {
+        let g = gate(10.0, 1.0, 0, 0);
+        let (a, b) = (g.key_for(None), g.key_for(None));
+        assert_ne!(a, b);
+        let t0 = Instant::now();
+        assert_eq!(g.check_at(a, t0), Decision::Admit);
+        assert!(matches!(g.check_at(a, t0), Decision::RateLimited(_)));
+        // a's empty bucket must not affect b
+        assert_eq!(g.check_at(b, t0), Decision::Admit);
+    }
+
+    #[test]
+    fn ip_keying_shares_state_across_connections() {
+        let g = Admission::new(AdmissionConfig {
+            rate_limit: 10.0,
+            burst: 1.0,
+            key_by: KeyBy::Ip,
+            ..AdmissionConfig::default()
+        });
+        let peer = |port| Some(SocketAddr::from(([192, 0, 2, 7], port)));
+        let k1 = g.key_for(peer(1000));
+        let k2 = g.key_for(peer(2000));
+        // same IP, different source ports → same key (reconnecting does
+        // not grant a fresh bucket)
+        assert_eq!(k1, k2);
+        let t0 = Instant::now();
+        assert_eq!(g.check_at(k1, t0), Decision::Admit);
+        assert!(matches!(g.check_at(k2, t0), Decision::RateLimited(_)));
+    }
+
+    #[test]
+    fn breaker_trips_cools_down_and_recovers_through_a_probe() {
+        let g = gate(0.0, 1.0, 3, 50);
+        let k = g.key_for(None);
+        // two failures: still closed
+        g.outcome(k, false);
+        g.outcome(k, false);
+        assert_eq!(g.check(k), Decision::Admit);
+        // third consecutive failure trips it
+        g.outcome(k, false);
+        match g.check(k) {
+            Decision::BreakerOpen(wait) => assert!(wait <= Duration::from_millis(50)),
+            other => panic!("{other:?}"),
+        }
+        // cooldown elapses → exactly one half-open probe is admitted
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(g.check(k), Decision::Admit);
+        assert!(matches!(g.check(k), Decision::BreakerOpen(_)));
+        // the probe succeeds → closed, traffic flows again
+        g.outcome(k, true);
+        assert_eq!(g.check(k), Decision::Admit);
+    }
+
+    #[test]
+    fn failed_probe_reopens_the_breaker() {
+        let g = gate(0.0, 1.0, 1, 40);
+        let k = g.key_for(None);
+        g.outcome(k, false); // threshold 1: trips immediately
+        assert!(matches!(g.check(k), Decision::BreakerOpen(_)));
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(g.check(k), Decision::Admit); // the probe
+        g.outcome(k, false); // probe failed → open again, full cooldown
+        assert!(matches!(g.check(k), Decision::BreakerOpen(_)));
+    }
+
+    #[test]
+    fn success_resets_the_consecutive_failure_count() {
+        let g = gate(0.0, 1.0, 3, 1000);
+        let k = g.key_for(None);
+        for _ in 0..10 {
+            g.outcome(k, false);
+            g.outcome(k, false);
+            g.outcome(k, true); // never three in a row
+        }
+        assert_eq!(g.check(k), Decision::Admit);
+    }
+
+    #[test]
+    fn key_by_parses() {
+        assert_eq!(KeyBy::parse("ip"), Some(KeyBy::Ip));
+        assert_eq!(KeyBy::parse("conn"), Some(KeyBy::Conn));
+        assert_eq!(KeyBy::parse("mac"), None);
+    }
+}

@@ -125,6 +125,86 @@ pub fn shutdown_request() -> String {
     r#"{"op":"shutdown"}"#.to_string()
 }
 
+/// `{"op":"bulk_predict","path":PATH,…}` — `block_rows: None` leaves
+/// the block size to the server.
+pub fn bulk_predict_request(path: &str, block_rows: Option<usize>) -> String {
+    let mut req = Json::obj().field("op", "bulk_predict").field("path", path);
+    if let Some(b) = block_rows {
+        req = req.field("block_rows", b as u64);
+    }
+    req.to_string()
+}
+
+/// The collected result of one streaming bulk predict.
+#[derive(Clone, Debug)]
+pub struct BulkResult {
+    /// Labels for every source row, in row order.
+    pub labels: Vec<u32>,
+    /// Blocks the server streamed.
+    pub blocks: u64,
+    /// The trailer's `io` object (`None` for in-memory sources).
+    pub io: Option<Json>,
+}
+
+impl Client {
+    /// Run one `bulk_predict` stream to completion: send the request,
+    /// read header + blocks + trailer, and reassemble the labels in
+    /// row order. A typed server error surfaces as `EakmError::Data`
+    /// with the error code in the message; a connection drop
+    /// mid-stream (the server's truncation signal) as a read error.
+    pub fn bulk_predict(&mut self, path: &str, block_rows: Option<usize>) -> Result<BulkResult> {
+        self.send(&bulk_predict_request(path, block_rows))?;
+        let header = self.recv()?.ok_or_else(|| {
+            EakmError::Data("server closed the connection before replying".into())
+        })?;
+        if header.get("ok").and_then(Json::as_bool) != Some(true) {
+            let code = header
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown");
+            let message = header.get("message").and_then(Json::as_str).unwrap_or("");
+            return Err(EakmError::Data(format!("bulk_predict: {code}: {message}")));
+        }
+        let n = header.get("n").and_then(Json::as_f64).unwrap_or(0.0) as usize;
+        let mut labels = vec![0u32; n];
+        let mut blocks = 0u64;
+        loop {
+            let line = self.recv()?.ok_or_else(|| {
+                EakmError::Net("bulk_predict stream truncated (no trailer)".into())
+            })?;
+            if line.get("done").and_then(Json::as_bool) == Some(true) {
+                return Ok(BulkResult {
+                    labels,
+                    blocks,
+                    io: line.get("io").cloned(),
+                });
+            }
+            let lo = line
+                .get("lo")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| EakmError::Data("bulk_predict block is missing \"lo\"".into()))?
+                as usize;
+            let block = line
+                .get("labels")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| EakmError::Data("bulk_predict block is missing \"labels\"".into()))?;
+            if lo + block.len() > n {
+                return Err(EakmError::Data(format!(
+                    "bulk_predict block [{lo}, {}) overruns n={n}",
+                    lo + block.len()
+                )));
+            }
+            for (i, cell) in block.iter().enumerate() {
+                labels[lo + i] = cell
+                    .as_f64()
+                    .ok_or_else(|| EakmError::Data("bulk_predict label is not a number".into()))?
+                    as u32;
+            }
+            blocks += 1;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +239,19 @@ mod tests {
             parse_request(&shutdown_request(), &net).unwrap(),
             Request::Shutdown
         ));
+        match parse_request(&bulk_predict_request("/d/x.ekb", Some(64)), &net).unwrap() {
+            Request::BulkPredict {
+                path, block_rows, ..
+            } => {
+                assert_eq!(path, "/d/x.ekb");
+                assert_eq!(block_rows, Some(64));
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_request(&bulk_predict_request("/d/x.ekb", None), &net).unwrap() {
+            Request::BulkPredict { block_rows, .. } => assert_eq!(block_rows, None),
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,700 @@
+//! A minimal, dependency-free HTTP/1.1 shim over the serve op handlers.
+//!
+//! The line-JSON protocol stays the fast path; this module makes the
+//! same operations reachable from `curl` and ordinary HTTP clients. The
+//! server sniffs each connection's first byte — `{` (a JSON object)
+//! selects line-JSON, an ASCII method letter selects HTTP — so one port
+//! serves both.
+//!
+//! | route                        | op                                  |
+//! |------------------------------|-------------------------------------|
+//! | `POST /v1/predict`           | `predict` (body: `{"rows":[[…]]}`)  |
+//! | `POST /v1/nearest`           | `nearest` (body: `{"point":[…]}`)   |
+//! | `POST /v1/bulk_predict?path=…&block_rows=…&mode=…` | streaming bulk predict (chunked response) |
+//! | `POST /v1/reload`            | `reload` (body: `{"model":"…"}`)    |
+//! | `POST /v1/shutdown`          | `shutdown`                          |
+//! | `GET /v1/stats`              | `stats`                             |
+//! | `GET /v1/healthz`            | liveness probe                      |
+//!
+//! Response bodies are exactly the line-JSON reply payloads (one JSON
+//! object, newline-terminated), so the two protocols cannot drift.
+//! Status codes are mapped from the typed error codes by
+//! [`status_for`]: 400 for parse/validation errors, 404/405 for routing
+//! errors, 413 over the payload cap, **429 + `Retry-After`** for
+//! `rate_limited`, 500 for model errors, **503 + `Retry-After`** for
+//! `overloaded`/`breaker_open`/`shutting_down`.
+//!
+//! Requests are parsed with the crate's untrusted-input discipline:
+//! header bytes are capped ([`HEADER_CAP`]) before allocation, the body
+//! is framed by `Content-Length` and capped by the same byte budget as
+//! a line-JSON request (the serve config's 4 MiB default), and
+//! `Expect: 100-continue` is answered so large `curl` uploads do not
+//! stall. Chunked *request* bodies are not accepted (typed 400);
+//! chunked *responses* are how [`bulk_predict`] streams
+//! (`Transfer-Encoding: chunked`, one chunk per label block).
+//!
+//! [`bulk_predict`]: crate::serve::proto::Request::BulkPredict
+
+use std::io::{Read, Write};
+use std::time::{Duration, Instant};
+
+use crate::data::ooc::OocMode;
+use crate::json::{Json, ParseLimits};
+use crate::serve::proto::{self, code, ProtoError, Request};
+
+/// Cap on the request line + headers, applied before any parsing.
+pub const HEADER_CAP: usize = 16 << 10;
+
+/// One parsed HTTP request.
+pub struct HttpRequest {
+    /// Request method, upper-case (`GET`, `POST`, …).
+    pub method: String,
+    /// Path component of the request target (before `?`), undecoded.
+    pub path: String,
+    /// Raw query string (after `?`), empty when absent.
+    pub query: String,
+    /// The request body (`Content-Length` framed; empty for `GET`).
+    pub body: Vec<u8>,
+    /// Whether the connection stays open after the response
+    /// (HTTP/1.1 default unless `Connection: close`).
+    pub keep_alive: bool,
+}
+
+/// One framed HTTP request off the socket (mirrors
+/// [`Line`](crate::net::frame::Line)'s discipline).
+pub enum HttpRead {
+    /// A complete request.
+    Msg(HttpRequest),
+    /// Read timeout — poll the shutdown flag and retry.
+    Idle,
+    /// Peer closed (or errored); drop the connection.
+    Eof,
+    /// Headers exceed [`HEADER_CAP`] or the body exceeds the byte cap;
+    /// reply 413 and close.
+    TooLarge,
+    /// Malformed request line/headers; reply 400 and close.
+    Bad,
+}
+
+/// Incremental HTTP/1.1 request reader with the same cap/timeout
+/// discipline as [`LineReader`](crate::net::frame::LineReader): caps
+/// are enforced before allocation, timeouts surface as
+/// [`Idle`](HttpRead::Idle), and bytes after a complete request are
+/// kept for the next call (keep-alive pipelining).
+pub struct HttpReader<S> {
+    stream: S,
+    buf: Vec<u8>,
+    body_cap: usize,
+    /// `Expect: 100-continue` has been answered for the in-progress
+    /// request (reset per request).
+    continued: bool,
+}
+
+impl<S: Read> HttpReader<S> {
+    /// Wrap `stream`, capping bodies at `body_cap` bytes and seeding
+    /// the buffer with bytes the protocol sniffer already consumed.
+    pub fn with_buffered(stream: S, body_cap: usize, buffered: Vec<u8>) -> Self {
+        HttpReader {
+            stream,
+            buf: buffered,
+            body_cap,
+            continued: false,
+        }
+    }
+
+    /// Read until a complete request, a cap, EOF, or `deadline`.
+    /// `w` is the write half, used only to answer
+    /// `Expect: 100-continue` once the headers are in.
+    pub fn next_request<W: Write>(&mut self, deadline: Instant, w: &mut W) -> HttpRead {
+        loop {
+            if let Some(head_end) = find_head_end(&self.buf) {
+                let head = match parse_head(&self.buf[..head_end]) {
+                    Some(h) => h,
+                    None => return HttpRead::Bad,
+                };
+                if head.bad_framing {
+                    return HttpRead::Bad;
+                }
+                if head.content_length > self.body_cap {
+                    return HttpRead::TooLarge;
+                }
+                if self.buf.len() >= head_end + head.content_length {
+                    let request = HttpRequest {
+                        method: head.method,
+                        path: head.path,
+                        query: head.query,
+                        body: self.buf[head_end..head_end + head.content_length].to_vec(),
+                        keep_alive: head.keep_alive,
+                    };
+                    self.buf.drain(..head_end + head.content_length);
+                    self.continued = false;
+                    return HttpRead::Msg(request);
+                }
+                if head.expect_continue && !self.continued {
+                    // curl pauses before large uploads until this
+                    // interim response arrives
+                    self.continued = true;
+                    if w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").is_err()
+                        || w.flush().is_err()
+                    {
+                        return HttpRead::Eof;
+                    }
+                }
+            } else if self.buf.len() > HEADER_CAP {
+                return HttpRead::TooLarge;
+            }
+            if Instant::now() >= deadline {
+                return HttpRead::Idle;
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return HttpRead::Eof,
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return HttpRead::Idle
+                }
+                Err(_) => return HttpRead::Eof,
+            }
+        }
+    }
+}
+
+/// Index one past the blank line ending the header block, if complete.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            if buf.get(i + 1) == Some(&b'\n') {
+                return Some(i + 2);
+            }
+            if buf.get(i + 1) == Some(&b'\r') && buf.get(i + 2) == Some(&b'\n') {
+                return Some(i + 3);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// The parsed header block.
+struct Head {
+    method: String,
+    path: String,
+    query: String,
+    content_length: usize,
+    keep_alive: bool,
+    expect_continue: bool,
+    /// A framing we refuse (chunked/invalid Content-Length).
+    bad_framing: bool,
+}
+
+/// Parse the request line + headers; `None` is malformed (400).
+fn parse_head(head: &[u8]) -> Option<Head> {
+    let text = std::str::from_utf8(head).ok()?;
+    let mut lines = text.split('\n').map(|l| l.trim_end_matches('\r'));
+    let request_line = lines.next()?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next()?.to_string();
+    let target = parts.next()?;
+    let version = parts.next()?;
+    if parts.next().is_some() || !version.starts_with("HTTP/1.") {
+        return None;
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    let http11 = version == "HTTP/1.1";
+    let mut keep_alive = http11;
+    let mut content_length = 0usize;
+    let mut expect_continue = false;
+    let mut bad_framing = false;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return None;
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => match value.parse::<usize>() {
+                Ok(n) => content_length = n,
+                Err(_) => bad_framing = true,
+            },
+            "transfer-encoding" => bad_framing = true,
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "expect" => {
+                expect_continue = value.to_ascii_lowercase().contains("100-continue");
+            }
+            _ => {}
+        }
+    }
+    Some(Head {
+        method,
+        path,
+        query,
+        content_length,
+        keep_alive,
+        expect_continue,
+        bad_framing,
+    })
+}
+
+/// Percent-decode one query component (`%XX` escapes, `+` as space);
+/// `None` on an invalid escape.
+pub fn percent_decode(s: &str) -> Option<String> {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' => {
+                let hex = bytes.get(i + 1..i + 3)?;
+                let hex = std::str::from_utf8(hex).ok()?;
+                out.push(u8::from_str_radix(hex, 16).ok()?);
+                i += 3;
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out).ok()
+}
+
+/// Look up a decoded query parameter in a raw query string.
+fn query_param(query: &str, key: &str) -> Option<Result<String, ()>> {
+    for pair in query.split('&') {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        if k == key {
+            return Some(percent_decode(v).ok_or(()));
+        }
+    }
+    None
+}
+
+/// What a routed HTTP request maps to.
+pub enum Routed {
+    /// A serve-protocol op (dispatched exactly like line-JSON).
+    Op(Request),
+    /// `GET /v1/healthz` — answered by the server without touching the
+    /// op handlers.
+    Healthz,
+}
+
+/// Map method + path (+ query/body) onto a serve op. Failures are the
+/// same typed [`ProtoError`]s as line-JSON parsing, plus `not_found` /
+/// `bad_method` for routing.
+pub fn route(req: &HttpRequest, limits: &ParseLimits) -> Result<Routed, ProtoError> {
+    let op = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/v1/healthz") => return Ok(Routed::Healthz),
+        ("GET", "/v1/stats") => return Ok(Routed::Op(Request::Stats)),
+        ("POST", "/v1/predict") => "predict",
+        ("POST", "/v1/nearest") => "nearest",
+        ("POST", "/v1/bulk_predict") => return Ok(Routed::Op(route_bulk(req, limits)?)),
+        ("POST", "/v1/reload") => "reload",
+        ("POST", "/v1/shutdown") => return Ok(Routed::Op(Request::Shutdown)),
+        (_, "/v1/healthz" | "/v1/stats" | "/v1/predict" | "/v1/nearest" | "/v1/bulk_predict"
+        | "/v1/reload" | "/v1/shutdown") => {
+            return Err(ProtoError::new(
+                code::BAD_METHOD,
+                format!("method {} not allowed for {}", req.method, req.path),
+            ));
+        }
+        (_, path) => {
+            return Err(ProtoError::new(
+                code::NOT_FOUND,
+                format!("no route for {path:?}"),
+            ));
+        }
+    };
+    let doc = parse_body(&req.body, limits)?;
+    proto::request_from_op(op, &doc).map(Routed::Op)
+}
+
+/// `POST /v1/bulk_predict`: `path`/`block_rows`/`mode` come from the
+/// query string (the `curl`-friendly spelling) or from a JSON body.
+fn route_bulk(req: &HttpRequest, limits: &ParseLimits) -> Result<Request, ProtoError> {
+    let bad_query =
+        |k: &str| ProtoError::new(code::BAD_REQUEST, format!("query parameter {k:?} is invalid"));
+    match query_param(&req.query, "path") {
+        Some(path) => {
+            let path = path.map_err(|()| bad_query("path"))?;
+            let block_rows = match query_param(&req.query, "block_rows") {
+                Some(v) => Some(
+                    v.ok()
+                        .and_then(|v| v.parse::<usize>().ok())
+                        .filter(|&b| b > 0)
+                        .ok_or_else(|| bad_query("block_rows"))?,
+                ),
+                None => None,
+            };
+            let mode = match query_param(&req.query, "mode") {
+                Some(v) => v
+                    .ok()
+                    .and_then(|v| OocMode::parse(&v))
+                    .ok_or_else(|| bad_query("mode"))?,
+                None => OocMode::Auto,
+            };
+            Ok(Request::BulkPredict {
+                path,
+                block_rows,
+                mode,
+            })
+        }
+        None => {
+            let doc = parse_body(&req.body, limits)?;
+            proto::request_from_op("bulk_predict", &doc)
+        }
+    }
+}
+
+/// Parse a request body as one JSON document under the serve limits.
+fn parse_body(body: &[u8], limits: &ParseLimits) -> Result<Json, ProtoError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| ProtoError::new(code::BAD_REQUEST, "request body is not utf-8"))?;
+    if text.trim().is_empty() {
+        return Err(ProtoError::new(code::BAD_REQUEST, "request body is empty"));
+    }
+    Json::parse_with_limits(text, limits).map_err(|e| match e {
+        crate::error::EakmError::Limit(m) => ProtoError::new(code::PAYLOAD_TOO_LARGE, m),
+        e => ProtoError::new(code::BAD_REQUEST, e.to_string()),
+    })
+}
+
+/// HTTP status for a typed serve error code.
+pub fn status_for(error_code: &str) -> u16 {
+    match error_code {
+        code::BAD_REQUEST | code::UNKNOWN_OP | code::DIM_MISMATCH => 400,
+        code::NOT_FOUND => 404,
+        code::BAD_METHOD => 405,
+        code::PAYLOAD_TOO_LARGE => 413,
+        code::RATE_LIMITED => 429,
+        code::OVERLOADED | code::SHUTTING_DOWN | code::BREAKER_OPEN => 503,
+        _ => 500,
+    }
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+/// Write one complete JSON response; `false` means the peer is gone.
+/// `retry_after` adds a `Retry-After` header (whole seconds, rounded
+/// up) — sent with 429/503 so clients know when to come back.
+pub fn send_response(
+    w: &mut impl Write,
+    status: u16,
+    retry_after: Option<Duration>,
+    body_line: &str,
+    keep_alive: bool,
+) -> bool {
+    let mut response = String::with_capacity(body_line.len() + 160);
+    response.push_str(&format!("HTTP/1.1 {} {}\r\n", status, status_text(status)));
+    response.push_str("Content-Type: application/json\r\n");
+    response.push_str(&format!("Content-Length: {}\r\n", body_line.len() + 1));
+    if let Some(after) = retry_after {
+        response.push_str(&format!("Retry-After: {}\r\n", after.as_secs().max(1)));
+    }
+    response.push_str(if keep_alive {
+        "Connection: keep-alive\r\n"
+    } else {
+        "Connection: close\r\n"
+    });
+    response.push_str("\r\n");
+    response.push_str(body_line);
+    response.push('\n');
+    w.write_all(response.as_bytes()).is_ok() && w.flush().is_ok()
+}
+
+/// Start a chunked streaming response (the bulk-predict path).
+pub fn send_chunked_head(w: &mut impl Write, keep_alive: bool) -> bool {
+    let head = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: application/json\r\n\
+         Transfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    w.write_all(head.as_bytes()).is_ok() && w.flush().is_ok()
+}
+
+/// Write one JSON line as one HTTP chunk.
+pub fn send_chunk(w: &mut impl Write, body_line: &str) -> bool {
+    let mut chunk = String::with_capacity(body_line.len() + 16);
+    chunk.push_str(&format!("{:x}\r\n", body_line.len() + 1));
+    chunk.push_str(body_line);
+    chunk.push('\n');
+    chunk.push_str("\r\n");
+    w.write_all(chunk.as_bytes()).is_ok() && w.flush().is_ok()
+}
+
+/// Terminate a chunked response.
+pub fn send_chunk_end(w: &mut impl Write) -> bool {
+    w.write_all(b"0\r\n\r\n").is_ok() && w.flush().is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// An in-memory stream yielding scripted pieces, then EOF.
+    struct Script {
+        pieces: Vec<Vec<u8>>,
+        next: usize,
+    }
+
+    impl Read for Script {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.next >= self.pieces.len() {
+                return Ok(0);
+            }
+            // respect the caller's buffer: a piece larger than `out`
+            // is delivered across successive reads
+            let piece = &mut self.pieces[self.next];
+            let n = piece.len().min(out.len());
+            out[..n].copy_from_slice(&piece[..n]);
+            piece.drain(..n);
+            if piece.is_empty() {
+                self.next += 1;
+            }
+            Ok(n)
+        }
+    }
+
+    fn reader(pieces: Vec<Vec<u8>>) -> HttpReader<Script> {
+        HttpReader::with_buffered(Script { pieces, next: 0 }, 4 << 20, Vec::new())
+    }
+
+    fn soon() -> Instant {
+        Instant::now() + Duration::from_secs(5)
+    }
+
+    fn read_one(r: &mut HttpReader<Script>) -> HttpRequest {
+        let mut sink = Vec::new();
+        match r.next_request(soon(), &mut sink) {
+            HttpRead::Msg(req) => req,
+            _ => panic!("expected a complete request"),
+        }
+    }
+
+    #[test]
+    fn parses_a_curl_shaped_post_across_partial_reads() {
+        let raw = b"POST /v1/predict HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\n\
+                    Content-Length: 20\r\n\r\n{\"rows\":[[1.0,2.0]]}";
+        let pieces = raw.chunks(7).map(|c| c.to_vec()).collect();
+        let mut r = reader(pieces);
+        let req = read_one(&mut r);
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/predict");
+        assert!(req.keep_alive);
+        assert_eq!(req.body, b"{\"rows\":[[1.0,2.0]]}");
+    }
+
+    #[test]
+    fn keep_alive_pipelines_and_connection_close_is_honoured() {
+        let raw = b"GET /v1/stats HTTP/1.1\r\n\r\nGET /v1/healthz HTTP/1.1\r\n\
+                    Connection: close\r\n\r\n"
+            .to_vec();
+        let mut r = reader(vec![raw]);
+        let first = read_one(&mut r);
+        assert_eq!(first.path, "/v1/stats");
+        assert!(first.keep_alive);
+        let second = read_one(&mut r);
+        assert_eq!(second.path, "/v1/healthz");
+        assert!(!second.keep_alive);
+    }
+
+    #[test]
+    fn expect_100_continue_is_answered_before_the_body() {
+        let head = b"POST /v1/predict HTTP/1.1\r\nExpect: 100-continue\r\n\
+                     Content-Length: 2\r\n\r\n"
+            .to_vec();
+        let mut r = reader(vec![head, b"{}".to_vec()]);
+        let mut interim = Vec::new();
+        match r.next_request(soon(), &mut interim) {
+            HttpRead::Msg(req) => assert_eq!(req.body, b"{}"),
+            _ => panic!("expected a complete request"),
+        }
+        let interim = String::from_utf8(interim).unwrap();
+        assert!(interim.starts_with("HTTP/1.1 100 Continue"), "{interim}");
+    }
+
+    #[test]
+    fn caps_and_malformed_heads_are_typed() {
+        // oversized headers: rejected once the cap is passed
+        let mut r = reader(vec![vec![b'A'; HEADER_CAP + 10]]);
+        let mut sink = Vec::new();
+        assert!(matches!(r.next_request(soon(), &mut sink), HttpRead::TooLarge));
+        // declared body over the cap: rejected from the header alone
+        let raw = format!("POST /v1/predict HTTP/1.1\r\nContent-Length: {}\r\n\r\n", 1 << 30);
+        let mut r = reader(vec![raw.into_bytes()]);
+        assert!(matches!(r.next_request(soon(), &mut sink), HttpRead::TooLarge));
+        // chunked request bodies are refused
+        let raw = b"POST /v1/predict HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec();
+        let mut r = reader(vec![raw]);
+        assert!(matches!(r.next_request(soon(), &mut sink), HttpRead::Bad));
+        // not HTTP at all
+        let mut r = reader(vec![b"FROB one two three\r\n\r\n".to_vec()]);
+        assert!(matches!(r.next_request(soon(), &mut sink), HttpRead::Bad));
+    }
+
+    fn http(method: &str, path_query: &str, body: &[u8]) -> HttpRequest {
+        let (path, query) = match path_query.split_once('?') {
+            Some((p, q)) => (p.to_string(), q.to_string()),
+            None => (path_query.to_string(), String::new()),
+        };
+        HttpRequest {
+            method: method.to_string(),
+            path,
+            query,
+            body: body.to_vec(),
+            keep_alive: true,
+        }
+    }
+
+    #[test]
+    fn routes_map_to_ops_with_typed_failures() {
+        let net = ParseLimits::network();
+        assert!(matches!(
+            route(&http("GET", "/v1/healthz", b""), &net),
+            Ok(Routed::Healthz)
+        ));
+        assert!(matches!(
+            route(&http("GET", "/v1/stats", b""), &net),
+            Ok(Routed::Op(Request::Stats))
+        ));
+        match route(&http("POST", "/v1/predict", br#"{"rows":[[1,2],[3,4]]}"#), &net) {
+            Ok(Routed::Op(Request::Predict { n_rows, d, .. })) => {
+                assert_eq!((n_rows, d), (2, 2));
+            }
+            _ => panic!("predict route"),
+        }
+        match route(&http("POST", "/v1/nearest", br#"{"point":[0.5]}"#), &net) {
+            Ok(Routed::Op(Request::Nearest { point })) => assert_eq!(point, vec![0.5]),
+            _ => panic!("nearest route"),
+        }
+        assert!(matches!(
+            route(&http("POST", "/v1/shutdown", b""), &net),
+            Ok(Routed::Op(Request::Shutdown))
+        ));
+        // routing failures carry routing codes
+        assert_eq!(route(&http("GET", "/nope", b""), &net).unwrap_err().code, code::NOT_FOUND);
+        assert_eq!(
+            route(&http("DELETE", "/v1/predict", b""), &net).unwrap_err().code,
+            code::BAD_METHOD
+        );
+        // body failures carry the same codes as line-JSON parsing
+        assert_eq!(
+            route(&http("POST", "/v1/predict", b"not json"), &net).unwrap_err().code,
+            code::BAD_REQUEST
+        );
+        assert_eq!(
+            route(&http("POST", "/v1/predict", b""), &net).unwrap_err().code,
+            code::BAD_REQUEST
+        );
+    }
+
+    #[test]
+    fn bulk_route_reads_query_params_with_percent_decoding() {
+        let net = ParseLimits::network();
+        let req = http(
+            "POST",
+            "/v1/bulk_predict?path=%2Fdata%2Fbig%20set.ekb&block_rows=512&mode=chunked",
+            b"",
+        );
+        match route(&req, &net) {
+            Ok(Routed::Op(Request::BulkPredict {
+                path,
+                block_rows,
+                mode,
+            })) => {
+                assert_eq!(path, "/data/big set.ekb");
+                assert_eq!(block_rows, Some(512));
+                assert_eq!(mode, OocMode::Chunked);
+            }
+            _ => panic!("bulk route"),
+        }
+        // body spelling works too
+        let req = http("POST", "/v1/bulk_predict", br#"{"path":"/d/x.ekb"}"#);
+        match route(&req, &net) {
+            Ok(Routed::Op(Request::BulkPredict { path, block_rows, .. })) => {
+                assert_eq!(path, "/d/x.ekb");
+                assert_eq!(block_rows, None);
+            }
+            _ => panic!("bulk body route"),
+        }
+        // invalid knobs are typed, not ignored
+        let req = http("POST", "/v1/bulk_predict?path=%2Fx.ekb&block_rows=0", b"");
+        assert_eq!(route(&req, &net).unwrap_err().code, code::BAD_REQUEST);
+        let req = http("POST", "/v1/bulk_predict?path=%GG", b"");
+        assert_eq!(route(&req, &net).unwrap_err().code, code::BAD_REQUEST);
+    }
+
+    #[test]
+    fn responses_are_well_formed() {
+        let mut out = Vec::new();
+        assert!(send_response(
+            &mut out,
+            429,
+            Some(Duration::from_millis(2500)),
+            r#"{"ok":false}"#,
+            true,
+        ));
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 2\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 13\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"ok\":false}\n"), "{text}");
+
+        let mut out = Vec::new();
+        assert!(send_chunked_head(&mut out, false));
+        assert!(send_chunk(&mut out, r#"{"lo":0}"#));
+        assert!(send_chunk_end(&mut out));
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Transfer-Encoding: chunked"), "{text}");
+        assert!(text.contains("9\r\n{\"lo\":0}\n\r\n"), "{text}");
+        assert!(text.ends_with("0\r\n\r\n"), "{text}");
+    }
+
+    #[test]
+    fn status_mapping_is_total() {
+        assert_eq!(status_for(code::BAD_REQUEST), 400);
+        assert_eq!(status_for(code::UNKNOWN_OP), 400);
+        assert_eq!(status_for(code::DIM_MISMATCH), 400);
+        assert_eq!(status_for(code::NOT_FOUND), 404);
+        assert_eq!(status_for(code::BAD_METHOD), 405);
+        assert_eq!(status_for(code::PAYLOAD_TOO_LARGE), 413);
+        assert_eq!(status_for(code::RATE_LIMITED), 429);
+        assert_eq!(status_for(code::MODEL_ERROR), 500);
+        assert_eq!(status_for(code::OVERLOADED), 503);
+        assert_eq!(status_for(code::BREAKER_OPEN), 503);
+        assert_eq!(status_for(code::SHUTTING_DOWN), 503);
+        assert_eq!(status_for("anything_else"), 500);
+    }
+}

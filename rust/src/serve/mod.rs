@@ -1,21 +1,25 @@
 //! `serve` — the long-lived model server: request batching,
-//! backpressure, and hot-reload on one [`Runtime`].
+//! backpressure, admission control, streaming bulk predict, and
+//! hot-reload on one [`Runtime`].
 //!
 //! The fit/predict service API (PR 2) answers queries *inside* a
 //! process; this subsystem answers them *over a socket*, for as long as
 //! the process lives. It is dependency-free: a blocking TCP server on
-//! `std::net` speaking the line-delimited JSON protocol of
-//! [`proto`], parsed by the crate's own hardened [`json`](crate::json)
-//! parser under network limits.
+//! `std::net` speaking two protocols on one port — the line-delimited
+//! JSON fast path of [`proto`] and the [`http`] HTTP/1.1 shim (for
+//! `curl` and ordinary HTTP clients), sniffed per-connection from the
+//! first byte — both parsed by the crate's own hardened
+//! [`json`](crate::json) parser under network limits.
 //!
 //! ## Architecture
 //!
 //! ```text
-//!  clients ──► N acceptor threads ──► bounded RequestQueue ──► micro-batcher ──► one Runtime
-//!                   │    ▲                  │ (overflow ⇒            │  one pool-sharded
-//!                   │    └── replies ◄──────┘  typed "overloaded")   │  predict_rows scan
-//!                   │                                                ▼
-//!                   └── nearest/stats/reload served inline ◄── Mutex<Arc<FittedModel>>
+//!  clients ─► N acceptors ─► admission ─► bounded RequestQueue ─► micro-batcher ─► one Runtime
+//!   (json │       │    ▲     (rate limit      │ (overflow ⇒            │  one pool-sharded
+//!    or   │       │    │      + breaker       │  typed "overloaded")   │  predict_rows scan
+//!    http)│       │    └───── replies ◄───────┘                        ▼
+//!         │       ├── nearest/stats/reload served inline ◄── Mutex<Arc<FittedModel>>
+//!         │       └── bulk_predict streamed inline ◄── ooc DataSource block leases
 //! ```
 //!
 //! * **Batching** — the micro-batcher drains the queue, concatenates
@@ -37,13 +41,29 @@
 //!   the acceptor budget + OS backlog bind first. Idle (and
 //!   byte-trickling) connections are reaped after
 //!   [`idle_timeout`](ServeConfig::idle_timeout).
+//! * **Admission control** — in front of everything, [`admission`]
+//!   keys each connection by peer IP (or per-connection) and applies a
+//!   token-bucket rate limit plus a trip-after-consecutive-failures
+//!   circuit breaker with a half-open probe. Rejections are typed
+//!   (`rate_limited` / `breaker_open`, HTTP 429/503 + `Retry-After`)
+//!   and cost no parsing, so one abusive client degrades gracefully
+//!   instead of eating the acceptor budget.
+//! * **Streaming bulk predict** — the `bulk_predict` op (and
+//!   `POST /v1/bulk_predict`) labels an entire on-disk dataset over
+//!   one connection with bounded memory: `RowBlock` leases from an
+//!   out-of-core source flow through
+//!   [`FittedModel::predict_blocks`](crate::model::FittedModel::predict_blocks)
+//!   and stream back one label block per lease, bit-identical to
+//!   in-memory `predict` at any thread width and block boundary, with
+//!   the source's I/O telemetry in the trailer.
 //! * **Hot reload** — the served model lives in a
 //!   [`ModelCell`](state::ModelCell) (`Mutex<Arc<FittedModel>>`); the
 //!   `reload` op swaps in a model JSON file with zero downtime —
 //!   batches in flight finish on the snapshot they took, later batches
 //!   see the new generation, and no request is ever dropped.
-//! * **Telemetry** — [`ServeStats`] counts requests, batched rows,
-//!   coalesced batches, queue-full rejects, and per-op latency sums;
+//! * **Telemetry** — [`ServeStats`] counts requests (per protocol),
+//!   batched rows, coalesced batches, queue-full / rate-limited /
+//!   breaker rejects, bulk blocks and rows, and per-op latency sums;
 //!   the `stats` op returns it live and [`serve`] returns the final
 //!   snapshot for the clean-shutdown summary line.
 //!
@@ -71,12 +91,15 @@
 //!
 //! [`Runtime`]: crate::runtime::Runtime
 
+pub mod admission;
 mod batcher;
 pub mod client;
+pub mod http;
 pub mod proto;
 mod server;
 pub mod state;
 
+pub use admission::{AdmissionConfig, KeyBy};
 pub use client::Client;
 pub use server::{serve, ServeConfig};
 pub use state::{ServeStats, ServeTelemetry};

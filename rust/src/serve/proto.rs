@@ -15,6 +15,20 @@
 //! ← {"ok":true}
 //! ```
 //!
+//! `bulk_predict` is the one *streaming* op: a single request line is
+//! answered by a header line, one line per label block, and a trailer —
+//! so a multi-GB on-disk dataset is labelled over one connection with
+//! bounded memory:
+//!
+//! ```text
+//! → {"op":"bulk_predict","path":"/data/big.ekb","block_rows":8192}
+//! ← {"ok":true,"streaming":true,"n":1000000,"d":16,"block_rows":8192}
+//! ← {"lo":0,"labels":[…]}
+//! ← {"lo":8192,"labels":[…]}
+//! ← …
+//! ← {"done":true,"blocks":123,"rows":1000000,"io":{…}}
+//! ```
+//!
 //! Errors are typed: `{"ok":false,"error":CODE,"message":TEXT}` where
 //! `CODE` is one of the [`code`] constants — notably
 //! [`code::OVERLOADED`], the backpressure reply a client receives the
@@ -26,6 +40,7 @@
 //! server's own line-length cap; every reject is a typed reply, never a
 //! panic or an unbounded allocation.
 
+use crate::data::ooc::OocMode;
 use crate::error::EakmError;
 use crate::json::{Json, ParseLimits};
 
@@ -46,6 +61,18 @@ pub mod code {
     pub const MODEL_ERROR: &str = "model_error";
     /// The server is shutting down and no longer accepts work.
     pub const SHUTTING_DOWN: &str = "shutting_down";
+    /// The client exceeded its admission token bucket — back off for
+    /// the advertised interval (HTTP 429 + `Retry-After`).
+    pub const RATE_LIMITED: &str = "rate_limited";
+    /// The client's circuit breaker is open after consecutive failures
+    /// — back off for the cooldown (HTTP 503 + `Retry-After`).
+    pub const BREAKER_OPEN: &str = "breaker_open";
+    /// HTTP only: no route for the request path (404).
+    pub const NOT_FOUND: &str = "not_found";
+    /// HTTP only: the route exists but not for this method (405).
+    pub const BAD_METHOD: &str = "bad_method";
+    /// A `bulk_predict` could not open or read its data source.
+    pub const SOURCE_ERROR: &str = "source_error";
 }
 
 /// A typed protocol-level failure: stable `code` plus a human message.
@@ -91,6 +118,16 @@ pub enum Request {
         /// Model JSON path, as written by `FittedModel::save`.
         path: String,
     },
+    /// Label an entire on-disk dataset, streaming label blocks back.
+    BulkPredict {
+        /// Server-side `.ekb` (or text) dataset path.
+        path: String,
+        /// Rows per streamed label block (bounds peak memory);
+        /// `None` uses the server's configured default.
+        block_rows: Option<usize>,
+        /// Out-of-core access mode for the source.
+        mode: OocMode,
+    },
     /// Stop the server after draining in-flight work.
     Shutdown,
 }
@@ -106,8 +143,15 @@ pub fn parse_request(line: &str, limits: &ParseLimits) -> Result<Request, ProtoE
         .get("op")
         .and_then(Json::as_str)
         .ok_or_else(|| ProtoError::new(code::BAD_REQUEST, "missing string field \"op\""))?;
+    request_from_op(op, &doc)
+}
+
+/// Build a request from an already-known op name and a parsed
+/// document — shared by line-JSON (`"op"` field) and the HTTP shim
+/// (op from the route, fields from the body/query).
+pub fn request_from_op(op: &str, doc: &Json) -> Result<Request, ProtoError> {
     match op {
-        "predict" => parse_predict(&doc),
+        "predict" => parse_predict(doc),
         "nearest" => {
             let point = doc
                 .get("point")
@@ -127,12 +171,48 @@ pub fn parse_request(line: &str, limits: &ParseLimits) -> Result<Request, ProtoE
                 path: path.to_string(),
             })
         }
+        "bulk_predict" => parse_bulk(doc),
         "shutdown" => Ok(Request::Shutdown),
         other => Err(ProtoError::new(
             code::UNKNOWN_OP,
             format!("unknown op {other:?}"),
         )),
     }
+}
+
+fn parse_bulk(doc: &Json) -> Result<Request, ProtoError> {
+    let path = doc
+        .get("path")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ProtoError::new(code::BAD_REQUEST, "bulk_predict needs \"path\""))?;
+    let block_rows = match doc.get("block_rows") {
+        None => None,
+        Some(v) => Some(
+            v.as_f64()
+                .filter(|&b| b.fract() == 0.0 && b >= 1.0 && b <= (1u64 << 32) as f64)
+                .map(|b| b as usize)
+                .ok_or_else(|| {
+                    ProtoError::new(
+                        code::BAD_REQUEST,
+                        "\"block_rows\" must be a positive integer",
+                    )
+                })?,
+        ),
+    };
+    let mode = match doc.get("mode") {
+        None => OocMode::Auto,
+        Some(v) => v
+            .as_str()
+            .and_then(OocMode::parse)
+            .ok_or_else(|| {
+                ProtoError::new(code::BAD_REQUEST, "\"mode\" must be auto|mmap|chunked")
+            })?,
+    };
+    Ok(Request::BulkPredict {
+        path: path.to_string(),
+        block_rows,
+        mode,
+    })
 }
 
 fn finite_row(cells: &[Json], what: &str) -> Result<Vec<f64>, ProtoError> {
@@ -233,6 +313,54 @@ pub fn reply_ok() -> String {
     Json::obj().field("ok", true).to_string()
 }
 
+/// `{"ok":true,"streaming":true,"n":…,"d":…,"block_rows":…}` — the
+/// header line opening a bulk-predict stream.
+pub fn reply_bulk_header(n: usize, d: usize, block_rows: usize) -> String {
+    Json::obj()
+        .field("ok", true)
+        .field("streaming", true)
+        .field("n", n as u64)
+        .field("d", d as u64)
+        .field("block_rows", block_rows as u64)
+        .to_string()
+}
+
+/// `{"lo":…,"labels":[…]}` — one streamed block of labels, starting
+/// at global row `lo`.
+pub fn reply_bulk_block(lo: usize, labels: &[u32]) -> String {
+    Json::obj()
+        .field("lo", lo as u64)
+        .field(
+            "labels",
+            Json::Arr(labels.iter().map(|&l| Json::from(l as u64)).collect()),
+        )
+        .to_string()
+}
+
+/// `{"done":true,"blocks":…,"rows":…,"io":{…}}` — the trailer closing
+/// a bulk-predict stream; `io` carries the source's
+/// [`IoTelemetry`](crate::metrics::IoTelemetry) delta for the scan
+/// (`null` for in-memory sources).
+pub fn reply_bulk_trailer(
+    blocks: usize,
+    rows: usize,
+    io: Option<&crate::metrics::IoTelemetry>,
+) -> String {
+    let io_json = match io {
+        Some(t) => Json::obj()
+            .field("blocks_leased", t.blocks_leased)
+            .field("bytes_read", t.bytes_read)
+            .field("window_refills", t.window_refills),
+        None => Json::Null,
+    };
+    Json::obj()
+        .field("done", true)
+        .field("blocks", blocks as u64)
+        .field("rows", rows as u64)
+        .field("io", io_json)
+        .to_string()
+}
+
 /// `{"ok":false,"error":…,"message":…}`
 pub fn reply_error(err: &ProtoError) -> String {
     Json::obj()
@@ -272,6 +400,30 @@ mod tests {
             Ok(Request::Reload { path }) => assert_eq!(path, "/tmp/m.json"),
             other => panic!("{other:?}"),
         }
+        match parse_request(
+            r#"{"op":"bulk_predict","path":"/d/x.ekb","block_rows":512,"mode":"mmap"}"#,
+            &net(),
+        ) {
+            Ok(Request::BulkPredict {
+                path,
+                block_rows,
+                mode,
+            }) => {
+                assert_eq!(path, "/d/x.ekb");
+                assert_eq!(block_rows, Some(512));
+                assert_eq!(mode, OocMode::Mmap);
+            }
+            other => panic!("{other:?}"),
+        }
+        match parse_request(r#"{"op":"bulk_predict","path":"/d/x.ekb"}"#, &net()) {
+            Ok(Request::BulkPredict {
+                block_rows, mode, ..
+            }) => {
+                assert_eq!(block_rows, None);
+                assert_eq!(mode, OocMode::Auto);
+            }
+            other => panic!("{other:?}"),
+        }
         assert!(matches!(
             parse_request(r#"{"op":"shutdown"}"#, &net()),
             Ok(Request::Shutdown)
@@ -292,6 +444,19 @@ mod tests {
             (r#"{"op":"nearest","point":[]}"#, code::BAD_REQUEST),
             (r#"{"op":"nearest"}"#, code::BAD_REQUEST),
             (r#"{"op":"reload"}"#, code::BAD_REQUEST),
+            (r#"{"op":"bulk_predict"}"#, code::BAD_REQUEST),
+            (
+                r#"{"op":"bulk_predict","path":"/x","block_rows":0}"#,
+                code::BAD_REQUEST,
+            ),
+            (
+                r#"{"op":"bulk_predict","path":"/x","block_rows":1.5}"#,
+                code::BAD_REQUEST,
+            ),
+            (
+                r#"{"op":"bulk_predict","path":"/x","mode":"warp"}"#,
+                code::BAD_REQUEST,
+            ),
         ];
         for (line, want) in cases {
             match parse_request(line, &net()) {
@@ -333,6 +498,27 @@ mod tests {
             err,
             r#"{"ok":false,"error":"overloaded","message":"queue full"}"#
         );
+        assert_eq!(
+            reply_bulk_header(100, 4, 32),
+            r#"{"ok":true,"streaming":true,"n":100,"d":4,"block_rows":32}"#
+        );
+        assert_eq!(
+            reply_bulk_block(64, &[7, 8]),
+            r#"{"lo":64,"labels":[7,8]}"#
+        );
+        let io = crate::metrics::IoTelemetry {
+            blocks_leased: 3,
+            bytes_read: 4096,
+            window_refills: 1,
+        };
+        assert_eq!(
+            reply_bulk_trailer(3, 100, Some(&io)),
+            r#"{"done":true,"blocks":3,"rows":100,"io":{"blocks_leased":3,"bytes_read":4096,"window_refills":1}}"#
+        );
+        assert_eq!(
+            reply_bulk_trailer(1, 2, None),
+            r#"{"done":true,"blocks":1,"rows":2,"io":null}"#
+        );
         // every reply round-trips through the parser (clients can rely
         // on it) and never contains a raw newline
         for reply in [
@@ -340,6 +526,9 @@ mod tests {
             reply_nearest(0, 1.0),
             reply_stats(Json::obj().field("requests", 1u64)),
             reply_ok(),
+            reply_bulk_header(1, 1, 1),
+            reply_bulk_block(0, &[0]),
+            reply_bulk_trailer(1, 1, None),
             err,
         ] {
             assert!(!reply.contains('\n'));

@@ -7,37 +7,58 @@
 //! at a time and handles its requests strictly in order (reply before
 //! the next read), so per-connection responses always map to requests
 //! in arrival order; across connections the batcher's arrival-order
-//! scatter gives the same guarantee. Two backpressure layers keep the
-//! server's memory bounded under any traffic: connection concurrency
-//! beyond the acceptor count waits in the OS listen backlog, and work
-//! beyond the queue depth is refused with the typed `overloaded`
-//! reply. Because every connection carries at most one in-flight
-//! request, the second layer actively fires only when
-//! `queue_depth < acceptors` — see
-//! [`ServeConfig::queue_depth`]. Idle connections are reaped after
-//! [`ServeConfig::idle_timeout`], byte-trickling included, so parked
-//! peers cannot pin the acceptor budget.
+//! scatter gives the same guarantee.
+//!
+//! Every connection speaks one of two protocols, sniffed from its first
+//! byte: `{` opens the line-JSON fast path
+//! ([`proto`](crate::serve::proto)), an upper-case ASCII letter (an
+//! HTTP method) opens the HTTP/1.1 shim
+//! ([`http`](crate::serve::http)) — same ops, same typed errors, same
+//! op handlers underneath, via the [`ReplySink`] seam.
+//!
+//! Three protection layers keep the server healthy under any traffic,
+//! outermost first: **admission control**
+//! ([`Admission`](crate::serve::admission)) bounces over-budget or
+//! breaker-tripped clients per client key with typed
+//! `rate_limited`/`breaker_open` replies before any parsing happens;
+//! connection concurrency beyond the acceptor count waits in the OS
+//! listen backlog; and work beyond the bounded queue depth is refused
+//! with the typed `overloaded` reply. Because every connection carries
+//! at most one in-flight request, the queue layer actively fires only
+//! when `queue_depth < acceptors` — see [`ServeConfig::queue_depth`].
+//! Idle connections are reaped after [`ServeConfig::idle_timeout`],
+//! byte-trickling included, so parked peers cannot pin the acceptor
+//! budget.
 
+use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use crate::error::Result;
+use crate::data::ooc::{open_ooc_described, DEFAULT_WINDOW_ROWS};
+use crate::error::{EakmError, Result};
 use crate::json::ParseLimits;
 use crate::model::FittedModel;
 use crate::net::frame::{send_line, Line, LineReader};
 use crate::runtime::Runtime;
+use crate::serve::admission::{Admission, AdmissionConfig, ClientKey, Decision};
 use crate::serve::batcher::{run_batcher, PredictJob, PushRefused, RequestQueue};
+use crate::serve::http::{self, HttpRead, HttpReader, Routed};
 use crate::serve::proto::{self, code, ProtoError, Request};
 use crate::serve::state::{ModelCell, Op, ServeStats, ServeTelemetry};
 
 /// How often a connection read wakes up to re-check the shutdown flag.
 const READ_POLL: Duration = Duration::from_millis(100);
 
+/// Server-side ceiling on a bulk-predict block, whatever the request
+/// asks for — bounds the per-stream label buffer and chunked-source
+/// window.
+const MAX_BULK_BLOCK_ROWS: usize = 1 << 22;
+
 /// Knobs for [`serve`]. `Default` binds an ephemeral loopback port with
-/// serving-friendly queue/batch sizes.
+/// serving-friendly queue/batch sizes and admission control disabled.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Bind address (`host:port`; port 0 picks an ephemeral port).
@@ -64,12 +85,19 @@ pub struct ServeConfig {
     pub linger: Duration,
     /// Per-line byte cap on the socket (requests longer than this get
     /// the typed `payload_too_large` reply and the connection closes).
+    /// The HTTP shim applies the same cap to request bodies.
     pub max_line_bytes: usize,
     /// Close a connection after this long without a complete request.
     /// Acceptors are the concurrency budget, so idle peers must not be
     /// allowed to pin them forever (`Duration::ZERO` disables the
     /// timeout — only for trusted peers).
     pub idle_timeout: Duration,
+    /// Per-client rate limiting and circuit breaking, checked before
+    /// any request parsing. Disabled by default.
+    pub admission: AdmissionConfig,
+    /// Default rows per streamed `bulk_predict` block when the request
+    /// does not pick its own (clamped server-side either way).
+    pub bulk_block_rows: usize,
 }
 
 impl Default for ServeConfig {
@@ -82,6 +110,8 @@ impl Default for ServeConfig {
             linger: Duration::ZERO,
             max_line_bytes: 4 << 20,
             idle_timeout: Duration::from_secs(60),
+            admission: AdmissionConfig::default(),
+            bulk_block_rows: DEFAULT_WINDOW_ROWS,
         }
     }
 }
@@ -91,12 +121,14 @@ impl Default for ServeConfig {
 struct Ctx<'a> {
     cfg: &'a ServeConfig,
     limits: ParseLimits,
+    rt: &'a Runtime,
     threads: usize,
     started: Instant,
     shutdown: &'a AtomicBool,
     queue: &'a RequestQueue,
     cell: &'a ModelCell,
     telemetry: &'a ServeTelemetry,
+    admission: &'a Admission,
 }
 
 /// Run the server until a `shutdown` op: bind `cfg.addr`, call
@@ -122,18 +154,21 @@ pub fn serve<F: FnOnce(SocketAddr)>(
     let queue = RequestQueue::new(cfg.queue_depth.max(1));
     let cell = ModelCell::new(model);
     let telemetry = ServeTelemetry::default();
+    let admission = Admission::new(cfg.admission.clone());
     let ctx = Ctx {
         cfg,
         limits: ParseLimits {
             max_bytes: cfg.max_line_bytes,
             ..ParseLimits::network()
         },
+        rt,
         threads: rt.threads(),
         started: Instant::now(),
         shutdown: &shutdown,
         queue: &queue,
         cell: &cell,
         telemetry: &telemetry,
+        admission: &admission,
     };
     on_ready(addr);
     std::thread::scope(|scope| {
@@ -190,27 +225,92 @@ fn initiate_shutdown(ctx: &Ctx<'_>) {
     ctx.queue.close();
 }
 
+/// Which wire protocol a connection's first byte selected, carrying
+/// the sniffed bytes so the chosen reader replays them.
+enum Proto {
+    Json(Vec<u8>),
+    Http(Vec<u8>),
+}
+
+/// Peek at a connection's first non-whitespace byte: `{` is a
+/// line-JSON request, an upper-case ASCII letter is an HTTP method.
+/// Anything else falls through to the line-JSON path, whose typed
+/// `bad_request` replies already cover garbage. `None` means the
+/// connection went away (or shutdown/idle-timeout fired) before any
+/// request arrived.
+fn sniff_protocol(stream: &mut TcpStream, ctx: &Ctx<'_>) -> Option<Proto> {
+    let opened = Instant::now();
+    loop {
+        if ctx.shutdown.load(Ordering::Acquire) {
+            return None;
+        }
+        if ctx.cfg.idle_timeout > Duration::ZERO && opened.elapsed() >= ctx.cfg.idle_timeout {
+            return None;
+        }
+        let mut byte = [0u8; 1];
+        match stream.read(&mut byte) {
+            Ok(0) => return None,
+            Ok(_) => {
+                if byte[0].is_ascii_whitespace() {
+                    continue; // blank lines before the first request
+                }
+                let sniffed = vec![byte[0]];
+                return Some(if byte[0].is_ascii_uppercase() {
+                    Proto::Http(sniffed)
+                } else {
+                    Proto::Json(sniffed)
+                });
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => return None,
+        }
+    }
+}
+
 fn handle_conn(stream: TcpStream, ctx: &Ctx<'_>) {
     if stream.set_read_timeout(Some(READ_POLL)).is_err() {
         return;
     }
     let _ = stream.set_nodelay(true);
-    let Ok(read_half) = stream.try_clone() else {
+    let key = ctx.admission.key_for(stream.peer_addr().ok());
+    let Ok(mut read_half) = stream.try_clone() else {
         return;
     };
-    // shared framing (net::frame): the deadline passed to next_line is
-    // capped at READ_POLL below, so the connection loop re-checks the
-    // shutdown flag on that cadence no matter what the peer sends
-    let mut reader = LineReader::new(read_half, ctx.cfg.max_line_bytes);
-    let mut write_half = stream;
+    let write_half = stream;
+    match sniff_protocol(&mut read_half, ctx) {
+        None => {}
+        Some(Proto::Json(buffered)) => {
+            // shared framing (net::frame), seeded with the sniffed byte
+            let reader = LineReader::with_buffered(read_half, ctx.cfg.max_line_bytes, buffered);
+            serve_lines(reader, write_half, ctx, key);
+        }
+        Some(Proto::Http(buffered)) => {
+            let reader = HttpReader::with_buffered(read_half, ctx.cfg.max_line_bytes, buffered);
+            serve_http(reader, write_half, ctx, key);
+        }
+    }
+}
+
+/// The line-JSON connection loop: the deadline passed to each read is
+/// capped at [`READ_POLL`] so the shutdown flag is re-checked on that
+/// cadence no matter what the peer sends; the idle deadline (when
+/// enabled) can only tighten it.
+fn serve_lines(
+    mut reader: LineReader<TcpStream>,
+    mut write_half: TcpStream,
+    ctx: &Ctx<'_>,
+    key: ClientKey,
+) {
     let mut last_activity = Instant::now();
     loop {
         if ctx.shutdown.load(Ordering::Acquire) {
             return;
         }
-        // every pass is capped at READ_POLL so the shutdown flag above
-        // is re-checked on that cadence even while bytes keep arriving;
-        // the idle deadline (when enabled) can only tighten it
         let poll_cap = Instant::now() + READ_POLL;
         let deadline = if ctx.cfg.idle_timeout > Duration::ZERO {
             poll_cap.min(last_activity + ctx.cfg.idle_timeout)
@@ -231,6 +331,7 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx<'_>) {
             Line::Eof => return,
             Line::TooLong => {
                 ctx.telemetry.bad_request();
+                ctx.admission.outcome(key, false);
                 let err = ProtoError::new(
                     code::PAYLOAD_TOO_LARGE,
                     format!("request line exceeds {} bytes", ctx.cfg.max_line_bytes),
@@ -241,6 +342,7 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx<'_>) {
             Line::BadUtf8 => {
                 last_activity = Instant::now();
                 ctx.telemetry.bad_request();
+                ctx.admission.outcome(key, false);
                 let err = ProtoError::new(code::BAD_REQUEST, "request line is not utf-8");
                 if !send_line(&mut write_half, &proto::reply_error(&err)) {
                     return;
@@ -251,16 +353,30 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx<'_>) {
                 if line.trim().is_empty() {
                     continue;
                 }
+                // admission runs before parsing: refused work must cost
+                // (almost) nothing
+                if let Some(err) = admission_reject(ctx, key) {
+                    if !send_line(&mut write_half, &proto::reply_error(&err)) {
+                        return;
+                    }
+                    continue;
+                }
                 match proto::parse_request(&line, &ctx.limits) {
                     Err(e) => {
                         ctx.telemetry.bad_request();
+                        ctx.admission.outcome(key, false);
                         if !send_line(&mut write_half, &proto::reply_error(&e)) {
                             return;
                         }
                     }
                     Ok(req) => {
                         ctx.telemetry.request();
-                        if !dispatch(req, &mut write_half, ctx) {
+                        let mut sink = LineSink { w: &mut write_half };
+                        let done = dispatch(req, &mut sink, ctx);
+                        if let Some(ok) = done.verdict {
+                            ctx.admission.outcome(key, ok);
+                        }
+                        if !done.keep {
                             return;
                         }
                     }
@@ -270,8 +386,266 @@ fn handle_conn(stream: TcpStream, ctx: &Ctx<'_>) {
     }
 }
 
-/// Serve one parsed request; `false` ends the connection.
-fn dispatch(req: Request, w: &mut TcpStream, ctx: &Ctx<'_>) -> bool {
+/// The HTTP connection loop — same shutdown/idle discipline as
+/// [`serve_lines`], with keep-alive and per-route status codes.
+fn serve_http(
+    mut reader: HttpReader<TcpStream>,
+    mut write_half: TcpStream,
+    ctx: &Ctx<'_>,
+    key: ClientKey,
+) {
+    let mut last_activity = Instant::now();
+    loop {
+        if ctx.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        let poll_cap = Instant::now() + READ_POLL;
+        let deadline = if ctx.cfg.idle_timeout > Duration::ZERO {
+            poll_cap.min(last_activity + ctx.cfg.idle_timeout)
+        } else {
+            poll_cap
+        };
+        match reader.next_request(deadline, &mut write_half) {
+            HttpRead::Idle => {
+                if ctx.cfg.idle_timeout > Duration::ZERO
+                    && last_activity.elapsed() >= ctx.cfg.idle_timeout
+                {
+                    return;
+                }
+                continue;
+            }
+            HttpRead::Eof => return,
+            HttpRead::TooLarge => {
+                ctx.telemetry.bad_request();
+                ctx.admission.outcome(key, false);
+                let err = ProtoError::new(
+                    code::PAYLOAD_TOO_LARGE,
+                    format!("request exceeds {} bytes", ctx.cfg.max_line_bytes),
+                );
+                let _ = http::send_response(
+                    &mut write_half,
+                    413,
+                    None,
+                    &proto::reply_error(&err),
+                    false,
+                );
+                return;
+            }
+            HttpRead::Bad => {
+                ctx.telemetry.bad_request();
+                ctx.admission.outcome(key, false);
+                let err = ProtoError::new(code::BAD_REQUEST, "malformed HTTP request");
+                let _ = http::send_response(
+                    &mut write_half,
+                    400,
+                    None,
+                    &proto::reply_error(&err),
+                    false,
+                );
+                return;
+            }
+            HttpRead::Msg(req) => {
+                last_activity = Instant::now();
+                ctx.telemetry.http_request();
+                let keep = req.keep_alive;
+                // the liveness probe bypasses admission control: load
+                // shedding must never make the server look dead
+                if req.method == "GET" && req.path == "/v1/healthz" {
+                    if !http::send_response(&mut write_half, 200, None, &proto::reply_ok(), keep)
+                        || !keep
+                    {
+                        return;
+                    }
+                    continue;
+                }
+                if let Some(err) = admission_reject(ctx, key) {
+                    let retry = retry_after(&err);
+                    let status = http::status_for(err.code);
+                    if !http::send_response(
+                        &mut write_half,
+                        status,
+                        retry,
+                        &proto::reply_error(&err),
+                        keep,
+                    ) || !keep
+                    {
+                        return;
+                    }
+                    continue;
+                }
+                match http::route(&req, &ctx.limits) {
+                    Err(e) => {
+                        ctx.telemetry.bad_request();
+                        ctx.admission.outcome(key, false);
+                        let status = http::status_for(e.code);
+                        if !http::send_response(
+                            &mut write_half,
+                            status,
+                            None,
+                            &proto::reply_error(&e),
+                            keep,
+                        ) || !keep
+                        {
+                            return;
+                        }
+                    }
+                    Ok(Routed::Healthz) => {
+                        // unreachable via the early check above; answer
+                        // anyway so the route table stays total
+                        if !http::send_response(
+                            &mut write_half,
+                            200,
+                            None,
+                            &proto::reply_ok(),
+                            keep,
+                        ) || !keep
+                        {
+                            return;
+                        }
+                    }
+                    Ok(Routed::Op(op)) => {
+                        ctx.telemetry.request();
+                        let mut sink = HttpSink {
+                            w: &mut write_half,
+                            keep_alive: keep,
+                        };
+                        let done = dispatch(op, &mut sink, ctx);
+                        if let Some(ok) = done.verdict {
+                            ctx.admission.outcome(key, ok);
+                        }
+                        if !done.keep || !keep {
+                            return;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run the admission decision for one request; `Some` is the typed
+/// rejection to send (connection stays open — a throttled client that
+/// backs off correctly should not pay a reconnect).
+fn admission_reject(ctx: &Ctx<'_>, key: ClientKey) -> Option<ProtoError> {
+    match ctx.admission.check(key) {
+        Decision::Admit => None,
+        Decision::RateLimited(after) => {
+            ctx.telemetry.rate_limited_reject();
+            Some(ProtoError::new(
+                code::RATE_LIMITED,
+                format!("rate limit exceeded — retry in {:.2}s", after.as_secs_f64()),
+            ))
+        }
+        Decision::BreakerOpen(after) => {
+            ctx.telemetry.breaker_reject();
+            Some(ProtoError::new(
+                code::BREAKER_OPEN,
+                format!(
+                    "circuit breaker open after repeated failures — retry in {:.2}s",
+                    after.as_secs_f64()
+                ),
+            ))
+        }
+    }
+}
+
+/// Recover the Retry-After hint baked into an admission rejection's
+/// message (kept out of [`ProtoError`] so the wire shape is unchanged).
+fn retry_after(err: &ProtoError) -> Option<Duration> {
+    err.message
+        .rsplit_once("retry in ")
+        .and_then(|(_, tail)| tail.strip_suffix('s'))
+        .and_then(|secs| secs.parse::<f64>().ok())
+        .map(Duration::from_secs_f64)
+}
+
+/// How a dispatched request ended.
+struct Done {
+    /// Keep the connection (replies were delivered)?
+    keep: bool,
+    /// The circuit-breaker verdict: `Some(true)` success,
+    /// `Some(false)` client-caused failure, `None` for server-side
+    /// conditions (overload, shutdown, peer gone) that must not trip a
+    /// client's breaker.
+    verdict: Option<bool>,
+}
+
+/// Where replies go — the seam that lets one [`dispatch`] serve both
+/// protocols. Single-reply ops call [`ok`](ReplySink::ok) or
+/// [`err`](ReplySink::err); the streaming bulk-predict op brackets its
+/// block items with `stream_begin`/`stream_end`. Every method returns
+/// `false` when the peer is gone.
+trait ReplySink {
+    /// Deliver a successful single-line reply.
+    fn ok(&mut self, line: &str) -> bool;
+    /// Deliver a typed failure reply.
+    fn err(&mut self, e: &ProtoError) -> bool;
+    /// Open a streaming reply with its header line.
+    fn stream_begin(&mut self, header: &str) -> bool;
+    /// Deliver one streamed item line.
+    fn stream_item(&mut self, line: &str) -> bool;
+    /// Close the stream with its trailer line.
+    fn stream_end(&mut self, trailer: &str) -> bool;
+}
+
+/// Line-JSON replies: every reply is one newline-terminated JSON line,
+/// streams included.
+struct LineSink<'a> {
+    w: &'a mut TcpStream,
+}
+
+impl ReplySink for LineSink<'_> {
+    fn ok(&mut self, line: &str) -> bool {
+        send_line(self.w, line)
+    }
+    fn err(&mut self, e: &ProtoError) -> bool {
+        send_line(self.w, &proto::reply_error(e))
+    }
+    fn stream_begin(&mut self, header: &str) -> bool {
+        send_line(self.w, header)
+    }
+    fn stream_item(&mut self, line: &str) -> bool {
+        send_line(self.w, line)
+    }
+    fn stream_end(&mut self, trailer: &str) -> bool {
+        send_line(self.w, trailer)
+    }
+}
+
+/// HTTP replies: status codes mapped from the typed error codes,
+/// streams delivered as one chunked response (one chunk per line).
+struct HttpSink<'a> {
+    w: &'a mut TcpStream,
+    keep_alive: bool,
+}
+
+impl ReplySink for HttpSink<'_> {
+    fn ok(&mut self, line: &str) -> bool {
+        http::send_response(self.w, 200, None, line, self.keep_alive)
+    }
+    fn err(&mut self, e: &ProtoError) -> bool {
+        let status = http::status_for(e.code);
+        // backpressure statuses always advertise a retry hint
+        let retry = if status == 429 || status == 503 {
+            Some(retry_after(e).unwrap_or_else(|| Duration::from_secs(1)))
+        } else {
+            None
+        };
+        http::send_response(self.w, status, retry, &proto::reply_error(e), self.keep_alive)
+    }
+    fn stream_begin(&mut self, header: &str) -> bool {
+        http::send_chunked_head(self.w, self.keep_alive) && http::send_chunk(self.w, header)
+    }
+    fn stream_item(&mut self, line: &str) -> bool {
+        http::send_chunk(self.w, line)
+    }
+    fn stream_end(&mut self, trailer: &str) -> bool {
+        http::send_chunk(self.w, trailer) && http::send_chunk_end(self.w)
+    }
+}
+
+/// Serve one parsed request through `sink`.
+fn dispatch(req: Request, sink: &mut dyn ReplySink, ctx: &Ctx<'_>) -> Done {
     let t0 = Instant::now();
     match req {
         Request::Predict { rows, n_rows, d } => {
@@ -292,25 +666,40 @@ fn dispatch(req: Request, w: &mut TcpStream, ctx: &Ctx<'_>) -> bool {
                             ctx.cfg.queue_depth
                         ),
                     );
-                    send_line(w, &proto::reply_error(&err))
+                    Done {
+                        keep: sink.err(&err),
+                        verdict: None,
+                    }
                 }
                 Err(PushRefused::Closed) => {
                     let err = ProtoError::new(code::SHUTTING_DOWN, "server is shutting down");
-                    send_line(w, &proto::reply_error(&err))
+                    Done {
+                        keep: sink.err(&err),
+                        verdict: None,
+                    }
                 }
                 Ok(()) => match rx.recv() {
                     Ok(Ok(labels)) => {
                         ctx.telemetry.op_done(Op::Predict, t0.elapsed());
-                        send_line(w, &proto::reply_labels(&labels))
+                        Done {
+                            keep: sink.ok(&proto::reply_labels(&labels)),
+                            verdict: Some(true),
+                        }
                     }
                     Ok(Err(e)) => {
                         ctx.telemetry.op_error();
-                        send_line(w, &proto::reply_error(&e))
+                        Done {
+                            keep: sink.err(&e),
+                            verdict: Some(false),
+                        }
                     }
                     Err(_) => {
                         let err =
                             ProtoError::new(code::SHUTTING_DOWN, "batcher stopped before reply");
-                        send_line(w, &proto::reply_error(&err))
+                        Done {
+                            keep: sink.err(&err),
+                            verdict: None,
+                        }
                     }
                 },
             }
@@ -323,11 +712,17 @@ fn dispatch(req: Request, w: &mut TcpStream, ctx: &Ctx<'_>) -> bool {
                     code::DIM_MISMATCH,
                     format!("model expects d={}, point has d={}", model.d(), point.len()),
                 );
-                return send_line(w, &proto::reply_error(&err));
+                return Done {
+                    keep: sink.err(&err),
+                    verdict: Some(false),
+                };
             }
             let (label, distance) = model.nearest(&point);
             ctx.telemetry.op_done(Op::Nearest, t0.elapsed());
-            send_line(w, &proto::reply_nearest(label, distance))
+            Done {
+                keep: sink.ok(&proto::reply_nearest(label, distance)),
+                verdict: Some(true),
+            }
         }
         Request::Stats => {
             let model = ctx.cell.current();
@@ -344,25 +739,130 @@ fn dispatch(req: Request, w: &mut TcpStream, ctx: &Ctx<'_>) -> bool {
                 .field("max_batch_rows", ctx.cfg.max_batch_rows)
                 .field("uptime_secs", ctx.started.elapsed().as_secs_f64());
             ctx.telemetry.op_done(Op::Stats, t0.elapsed());
-            send_line(w, &proto::reply_stats(stats))
+            Done {
+                keep: sink.ok(&proto::reply_stats(stats)),
+                verdict: Some(true),
+            }
         }
         Request::Reload { path } => match FittedModel::load(Path::new(&path)) {
             Ok(model) => {
                 let (k, d) = (model.k(), model.d());
                 let generation = ctx.cell.swap(model);
                 ctx.telemetry.op_done(Op::Reload, t0.elapsed());
-                send_line(w, &proto::reply_reloaded(generation, k, d))
+                Done {
+                    keep: sink.ok(&proto::reply_reloaded(generation, k, d)),
+                    verdict: Some(true),
+                }
             }
             Err(e) => {
                 ctx.telemetry.op_error();
                 let err = ProtoError::new(code::MODEL_ERROR, format!("reload {path:?}: {e}"));
-                send_line(w, &proto::reply_error(&err))
+                Done {
+                    keep: sink.err(&err),
+                    verdict: Some(false),
+                }
             }
         },
+        Request::BulkPredict {
+            path,
+            block_rows,
+            mode,
+        } => bulk_predict(&path, block_rows, mode, sink, ctx, t0),
         Request::Shutdown => {
-            let _ = send_line(w, &proto::reply_ok());
+            let _ = sink.ok(&proto::reply_ok());
             initiate_shutdown(ctx);
-            false
+            Done {
+                keep: false,
+                verdict: Some(true),
+            }
         }
+    }
+}
+
+/// The streaming bulk-predict op: open the on-disk source, stream one
+/// label block per [`predict_blocks`](FittedModel::predict_blocks)
+/// window, close with an [`IoTelemetry`](crate::metrics::IoTelemetry)
+/// trailer. Runs inline on the connection thread — the scan holds the
+/// worker pool for full blocks at a time, and the pool's dispatch gate
+/// already serialises it against the micro-batcher.
+fn bulk_predict(
+    path: &str,
+    block_rows: Option<usize>,
+    mode: crate::data::ooc::OocMode,
+    sink: &mut dyn ReplySink,
+    ctx: &Ctx<'_>,
+    t0: Instant,
+) -> Done {
+    let model = ctx.cell.current();
+    let block_rows = block_rows
+        .unwrap_or(ctx.cfg.bulk_block_rows)
+        .clamp(1, MAX_BULK_BLOCK_ROWS);
+    let source = match open_ooc_described(Path::new(path), mode, block_rows) {
+        Ok(s) => s,
+        Err(e) => {
+            ctx.telemetry.op_error();
+            let err = ProtoError::new(code::SOURCE_ERROR, format!("bulk_predict: {e}"));
+            return Done {
+                keep: sink.err(&err),
+                verdict: Some(false),
+            };
+        }
+    };
+    if source.d() != model.d() {
+        ctx.telemetry.op_error();
+        let err = ProtoError::new(
+            code::DIM_MISMATCH,
+            format!(
+                "model expects d={}, source {:?} has d={}",
+                model.d(),
+                source.name(),
+                source.d()
+            ),
+        );
+        return Done {
+            keep: sink.err(&err),
+            verdict: Some(false),
+        };
+    }
+    let n = source.n();
+    let io0 = source.io_stats();
+    if !sink.stream_begin(&proto::reply_bulk_header(n, source.d(), block_rows)) {
+        return Done {
+            keep: false,
+            verdict: None,
+        };
+    }
+    let mut blocks = 0usize;
+    let scan = {
+        let sink = &mut *sink;
+        let blocks = &mut blocks;
+        model.predict_blocks(ctx.rt, source.as_ref(), block_rows, move |lo, labels| {
+            ctx.telemetry.bulk_block(labels.len() as u64);
+            *blocks += 1;
+            if sink.stream_item(&proto::reply_bulk_block(lo, labels)) {
+                Ok(())
+            } else {
+                Err(EakmError::Net(
+                    "bulk_predict peer went away mid-stream".to_string(),
+                ))
+            }
+        })
+    };
+    if scan.is_err() {
+        // the stream is already open — a truncated chunked/line stream
+        // (no trailer) is the error signal; nothing typed can follow
+        return Done {
+            keep: false,
+            verdict: None,
+        };
+    }
+    let io_delta = match (&io0, source.io_stats()) {
+        (Some(before), Some(after)) => Some(after.since(before)),
+        _ => None,
+    };
+    ctx.telemetry.op_done(Op::Bulk, t0.elapsed());
+    Done {
+        keep: sink.stream_end(&proto::reply_bulk_trailer(blocks, n, io_delta.as_ref())),
+        verdict: Some(true),
     }
 }

@@ -60,6 +60,8 @@ pub enum Op {
     Stats,
     /// Model reload.
     Reload,
+    /// Streaming bulk predict over an on-disk source.
+    Bulk,
 }
 
 /// Lock-free serving counters, shared by acceptors and the batcher.
@@ -78,10 +80,17 @@ pub struct ServeTelemetry {
     batches: AtomicU64,
     coalesced_batches: AtomicU64,
     queue_full_rejects: AtomicU64,
+    rate_limited_rejects: AtomicU64,
+    breaker_rejects: AtomicU64,
+    http_requests: AtomicU64,
+    bulk_predicts: AtomicU64,
+    bulk_blocks: AtomicU64,
+    bulk_rows: AtomicU64,
     predict_micros: AtomicU64,
     nearest_micros: AtomicU64,
     stats_micros: AtomicU64,
     reload_micros: AtomicU64,
+    bulk_micros: AtomicU64,
 }
 
 impl ServeTelemetry {
@@ -104,6 +113,7 @@ impl ServeTelemetry {
             Op::Nearest => (&self.nearests, &self.nearest_micros),
             Op::Stats => (&self.stats_ops, &self.stats_micros),
             Op::Reload => (&self.reloads, &self.reload_micros),
+            Op::Bulk => (&self.bulk_predicts, &self.bulk_micros),
         };
         count.fetch_add(1, Ordering::Relaxed);
         sum.fetch_add(micros, Ordering::Relaxed);
@@ -119,6 +129,30 @@ impl ServeTelemetry {
     /// Count one request rejected because the bounded queue was full.
     pub fn queue_full_reject(&self) {
         self.queue_full_rejects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request bounced by the per-client token bucket.
+    pub fn rate_limited_reject(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.rate_limited_rejects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request bounced by an open circuit breaker.
+    pub fn breaker_reject(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.breaker_rejects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request that arrived via the HTTP shim (also counted
+    /// in the per-op counters — this tracks protocol mix).
+    pub fn http_request(&self) {
+        self.http_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one streamed bulk-predict block of `rows` labels.
+    pub fn bulk_block(&self, rows: u64) {
+        self.bulk_blocks.fetch_add(1, Ordering::Relaxed);
+        self.bulk_rows.fetch_add(rows, Ordering::Relaxed);
     }
 
     /// Record one executed batch of `rows` total rows covering
@@ -146,10 +180,17 @@ impl ServeTelemetry {
             batches: self.batches.load(Ordering::Relaxed),
             coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
             queue_full_rejects: self.queue_full_rejects.load(Ordering::Relaxed),
+            rate_limited_rejects: self.rate_limited_rejects.load(Ordering::Relaxed),
+            breaker_rejects: self.breaker_rejects.load(Ordering::Relaxed),
+            http_requests: self.http_requests.load(Ordering::Relaxed),
+            bulk_predicts: self.bulk_predicts.load(Ordering::Relaxed),
+            bulk_blocks: self.bulk_blocks.load(Ordering::Relaxed),
+            bulk_rows: self.bulk_rows.load(Ordering::Relaxed),
             predict_secs: secs(&self.predict_micros),
             nearest_secs: secs(&self.nearest_micros),
             stats_secs: secs(&self.stats_micros),
             reload_secs: secs(&self.reload_micros),
+            bulk_secs: secs(&self.bulk_micros),
         }
     }
 }
@@ -181,6 +222,18 @@ pub struct ServeStats {
     pub coalesced_batches: u64,
     /// Predict requests bounced with the typed `overloaded` reply.
     pub queue_full_rejects: u64,
+    /// Requests bounced with the typed `rate_limited` reply (429).
+    pub rate_limited_rejects: u64,
+    /// Requests bounced with the typed `breaker_open` reply (503).
+    pub breaker_rejects: u64,
+    /// Requests that arrived via the HTTP shim (protocol mix).
+    pub http_requests: u64,
+    /// Completed bulk-predict streams.
+    pub bulk_predicts: u64,
+    /// Label blocks streamed by bulk predicts.
+    pub bulk_blocks: u64,
+    /// Rows labelled by bulk predicts.
+    pub bulk_rows: u64,
     /// Summed predict latency (enqueue → reply handed back), seconds.
     pub predict_secs: f64,
     /// Summed nearest latency, seconds.
@@ -189,6 +242,8 @@ pub struct ServeStats {
     pub stats_secs: f64,
     /// Summed reload latency, seconds.
     pub reload_secs: f64,
+    /// Summed bulk-predict stream latency (open → trailer), seconds.
+    pub bulk_secs: f64,
 }
 
 impl ServeStats {
@@ -206,29 +261,43 @@ impl ServeStats {
             .field("batches", self.batches)
             .field("coalesced_batches", self.coalesced_batches)
             .field("queue_full_rejects", self.queue_full_rejects)
+            .field("rate_limited_rejects", self.rate_limited_rejects)
+            .field("breaker_rejects", self.breaker_rejects)
+            .field("http_requests", self.http_requests)
+            .field("bulk_predicts", self.bulk_predicts)
+            .field("bulk_blocks", self.bulk_blocks)
+            .field("bulk_rows", self.bulk_rows)
             .field("predict_secs", self.predict_secs)
             .field("nearest_secs", self.nearest_secs)
             .field("stats_secs", self.stats_secs)
             .field("reload_secs", self.reload_secs)
+            .field("bulk_secs", self.bulk_secs)
     }
 
     /// The one-line clean-shutdown summary.
     pub fn summary_line(&self, uptime: Duration) -> String {
         format!(
-            "serve: {} requests ({} predict / {} nearest / {} stats / {} reload, {} bad, \
-             {} failed) — {} batches ({} coalesced, {} rows), {} overloaded, \
+            "serve: {} requests ({} predict / {} nearest / {} stats / {} reload / {} bulk, \
+             {} bad, {} failed, {} http) — {} batches ({} coalesced, {} rows), \
+             {} overloaded, {} rate-limited, {} breaker, bulk {} rows in {} blocks, \
              predict {:.3}s total, up {:.1}s",
             self.requests,
             self.predicts,
             self.nearests,
             self.stats_ops,
             self.reloads,
+            self.bulk_predicts,
             self.bad_requests,
             self.op_errors,
+            self.http_requests,
             self.batches,
             self.coalesced_batches,
             self.batched_rows,
             self.queue_full_rejects,
+            self.rate_limited_rejects,
+            self.breaker_rejects,
+            self.bulk_rows,
+            self.bulk_blocks,
             self.predict_secs,
             uptime.as_secs_f64(),
         )
@@ -274,21 +343,38 @@ mod tests {
         tel.op_error();
         tel.batch_done(3, 12);
         tel.batch_done(1, 4);
+        tel.rate_limited_reject();
+        tel.breaker_reject();
+        tel.http_request();
+        tel.bulk_block(8);
+        tel.bulk_block(3);
+        tel.op_done(Op::Bulk, Duration::from_micros(2000));
         let s = tel.snapshot();
-        assert_eq!(s.requests, 3);
+        assert_eq!(s.requests, 5);
         assert_eq!(s.predicts, 1);
         assert_eq!(s.nearests, 1);
         assert_eq!(s.bad_requests, 1);
         assert_eq!(s.op_errors, 1);
         assert_eq!(s.queue_full_rejects, 1);
+        assert_eq!(s.rate_limited_rejects, 1);
+        assert_eq!(s.breaker_rejects, 1);
+        assert_eq!(s.http_requests, 1);
+        assert_eq!(s.bulk_predicts, 1);
+        assert_eq!(s.bulk_blocks, 2);
+        assert_eq!(s.bulk_rows, 11);
         assert_eq!(s.batches, 2);
         assert_eq!(s.coalesced_batches, 1);
         assert_eq!(s.batched_rows, 16);
         assert!((s.predict_secs - 0.0015).abs() < 1e-9);
+        assert!((s.bulk_secs - 0.002).abs() < 1e-9);
         let json = s.to_json().to_string();
         assert!(json.contains("\"batched_rows\":16"), "{json}");
+        assert!(json.contains("\"rate_limited_rejects\":1"), "{json}");
+        assert!(json.contains("\"breaker_rejects\":1"), "{json}");
+        assert!(json.contains("\"bulk_rows\":11"), "{json}");
         let line = s.summary_line(Duration::from_secs(2));
-        assert!(line.contains("3 requests"), "{line}");
+        assert!(line.contains("5 requests"), "{line}");
         assert!(line.contains("1 overloaded"), "{line}");
+        assert!(line.contains("1 rate-limited"), "{line}");
     }
 }

@@ -1,9 +1,11 @@
 //! End-to-end serving tests over a real loopback socket: bit-identity
-//! with direct `predict`, arrival-order responses under concurrent
-//! clients, typed `overloaded` backpressure, zero-downtime reload,
+//! with direct `predict` (line-JSON and the HTTP/1.1 shim), streaming
+//! `bulk_predict` over an on-disk `.ekb`, arrival-order responses under
+//! concurrent clients, typed `overloaded` backpressure, admission
+//! control (rate limit + circuit breaker), zero-downtime reload,
 //! hostile-input handling, and idle-connection reaping.
 
-use std::io::Write;
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -15,6 +17,7 @@ use eakm::json::Json;
 use eakm::prelude::*;
 use eakm::serve::client::{self, Client};
 use eakm::serve::proto::code;
+use eakm::serve::{AdmissionConfig, KeyBy};
 
 fn fit_model(n: usize, d: usize, k: usize, seed: u64) -> FittedModel {
     let rt = Runtime::serial();
@@ -398,4 +401,472 @@ fn pipelined_requests_are_answered_in_order() {
     assert_eq!(stats.predicts, 2);
     assert_eq!(stats.nearests, 1);
     assert_eq!(stats.requests, 4); // 2 predict + nearest + shutdown
+}
+
+// ---- the HTTP shim ----------------------------------------------------
+
+/// One parsed HTTP response.
+struct HttpResp {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl HttpResp {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn json(&self) -> Json {
+        Json::parse(self.body.trim_end()).unwrap()
+    }
+}
+
+/// A tiny HTTP/1.1 test client — enough to drive the shim the way curl
+/// would: keep-alive, `Content-Length` bodies, chunked responses.
+struct Http {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Http {
+    fn connect(addr: SocketAddr) -> Http {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_secs(60)))
+            .unwrap();
+        Http {
+            reader: BufReader::new(stream.try_clone().unwrap()),
+            writer: stream,
+        }
+    }
+
+    fn send_raw(&mut self, raw: &str) {
+        self.writer.write_all(raw.as_bytes()).unwrap();
+        self.writer.flush().unwrap();
+    }
+
+    fn send(&mut self, method: &str, target: &str, body: Option<&str>) {
+        let mut req = format!("{method} {target} HTTP/1.1\r\nHost: test\r\n");
+        if let Some(b) = body {
+            req.push_str(&format!(
+                "Content-Type: application/json\r\nContent-Length: {}\r\n",
+                b.len()
+            ));
+        }
+        req.push_str("\r\n");
+        if let Some(b) = body {
+            req.push_str(b);
+        }
+        self.send_raw(&req);
+    }
+
+    fn read_response(&mut self) -> HttpResp {
+        let mut status_line = String::new();
+        assert!(self.reader.read_line(&mut status_line).unwrap() > 0, "no response");
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .expect("status code")
+            .parse()
+            .unwrap();
+        let mut headers = Vec::new();
+        loop {
+            let mut line = String::new();
+            self.reader.read_line(&mut line).unwrap();
+            let line = line.trim_end().to_string();
+            if line.is_empty() {
+                break;
+            }
+            let (k, v) = line.split_once(':').expect("header line");
+            headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+        let chunked = headers
+            .iter()
+            .any(|(k, v)| k == "transfer-encoding" && v.contains("chunked"));
+        let body = if chunked {
+            let mut out = String::new();
+            loop {
+                let mut size = String::new();
+                self.reader.read_line(&mut size).unwrap();
+                let n = usize::from_str_radix(size.trim(), 16).expect("chunk size");
+                if n == 0 {
+                    let mut terminator = String::new();
+                    self.reader.read_line(&mut terminator).unwrap();
+                    break;
+                }
+                let mut chunk = vec![0u8; n + 2]; // payload + CRLF
+                self.reader.read_exact(&mut chunk).unwrap();
+                out.push_str(std::str::from_utf8(&chunk[..n]).unwrap());
+            }
+            out
+        } else {
+            let len: usize = self
+                .header_of(&headers, "content-length")
+                .map(|v| v.parse().unwrap())
+                .unwrap_or(0);
+            let mut buf = vec![0u8; len];
+            self.reader.read_exact(&mut buf).unwrap();
+            String::from_utf8(buf).unwrap()
+        };
+        HttpResp {
+            status,
+            headers,
+            body,
+        }
+    }
+
+    fn header_of<'a>(&self, headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+        headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn call(&mut self, method: &str, target: &str, body: Option<&str>) -> HttpResp {
+        self.send(method, target, body);
+        self.read_response()
+    }
+}
+
+#[test]
+fn http_predictions_are_bit_identical_to_direct_predict() {
+    let model = fit_model(400, 6, 8, 13);
+    let queries = blobs(60, 6, 8, 0.2, 14);
+    for threads in [1usize, 4] {
+        let rt = Runtime::new(threads);
+        let want = model.predict(&rt, &queries).unwrap();
+        let (addr, handle) = start(model.clone(), threads, ServeConfig::default());
+        let mut h = Http::connect(addr);
+        let d = queries.d();
+        let mut got = Vec::new();
+        // uneven request sizes over one keep-alive connection: batching
+        // boundaries and the protocol shim must not change a single bit
+        let mut lo = 0;
+        for len in [9usize, 1, 25, 25] {
+            let rows = &queries.raw()[lo * d..(lo + len) * d];
+            let resp = h.call("POST", "/v1/predict", Some(&client::predict_request(rows, d)));
+            assert_eq!(resp.status, 200, "{}", resp.body);
+            got.extend(labels_of(&resp.json()));
+            lo += len;
+        }
+        assert_eq!(got, want, "threads={threads}");
+        shutdown(addr);
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.predicts, 4, "threads={threads}");
+        assert_eq!(stats.http_requests, 4, "threads={threads}");
+        assert_eq!(stats.batched_rows, 60, "threads={threads}");
+    }
+}
+
+#[test]
+fn http_routes_map_statuses_and_keep_alive_like_a_real_server() {
+    let model = fit_model(150, 3, 4, 81);
+    let cfg = ServeConfig {
+        max_line_bytes: 4096,
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = start(model, 1, cfg);
+    let mut h = Http::connect(addr);
+    // liveness + stats on one keep-alive connection
+    let resp = h.call("GET", "/v1/healthz", None);
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.json().get("ok").and_then(Json::as_bool), Some(true));
+    let resp = h.call("GET", "/v1/stats", None);
+    assert_eq!(resp.status, 200);
+    let payload = resp.json();
+    let stats_json = payload.get("stats").expect("stats payload");
+    assert!(
+        stats_json.get("http_requests").and_then(Json::as_usize).unwrap() >= 1,
+        "{stats_json}"
+    );
+    // routing and body failures: typed codes, mapped statuses, and the
+    // connection survives every one of them
+    let resp = h.call("POST", "/v1/frobnicate", Some("{}"));
+    assert_eq!(resp.status, 404);
+    assert_eq!(error_code(&resp.json()).as_deref(), Some(code::NOT_FOUND));
+    let resp = h.call("GET", "/v1/predict", None);
+    assert_eq!(resp.status, 405);
+    assert_eq!(error_code(&resp.json()).as_deref(), Some(code::BAD_METHOD));
+    let resp = h.call("POST", "/v1/predict", Some("this is not json"));
+    assert_eq!(resp.status, 400);
+    assert_eq!(error_code(&resp.json()).as_deref(), Some(code::BAD_REQUEST));
+    let resp = h.call("POST", "/v1/nearest", Some(r#"{"point":[1.0]}"#));
+    assert_eq!(resp.status, 400);
+    assert_eq!(error_code(&resp.json()).as_deref(), Some(code::DIM_MISMATCH));
+    let resp = h.call("GET", "/v1/healthz", None);
+    assert_eq!(resp.status, 200, "connection must still be alive");
+    // a body over the byte cap is refused from its declared length
+    // alone — 413, Connection: close, and the socket really closes
+    h.send_raw("POST /v1/predict HTTP/1.1\r\nContent-Length: 999999999\r\n\r\n");
+    let resp = h.read_response();
+    assert_eq!(resp.status, 413);
+    assert_eq!(error_code(&resp.json()).as_deref(), Some(code::PAYLOAD_TOO_LARGE));
+    assert_eq!(resp.header("connection"), Some("close"));
+    let mut probe = String::new();
+    assert_eq!(
+        h.reader.read_line(&mut probe).unwrap_or(0),
+        0,
+        "connection must close after 413"
+    );
+    // a malformed request line gets 400 and a close
+    let mut h = Http::connect(addr);
+    h.send_raw("FROB one two three\r\n\r\n");
+    let resp = h.read_response();
+    assert_eq!(resp.status, 400);
+    assert_eq!(resp.header("connection"), Some("close"));
+    shutdown(addr);
+    let stats = handle.join().unwrap();
+    // seven complete requests on the first connection (the 413 and the
+    // malformed request line are rejected before they count as one)
+    assert_eq!(stats.http_requests, 7, "{stats:?}");
+    // 404 + 405 + bad body + oversized + malformed line
+    assert_eq!(stats.bad_requests, 5, "{stats:?}");
+}
+
+#[test]
+fn bulk_predict_streams_blocks_bit_identical_to_direct_predict() {
+    let data = blobs(1234, 5, 6, 0.15, 91);
+    let path = tmpfile("bulk.ekb");
+    eakm::data::io::save_bin(&data, &path).unwrap();
+    let model = fit_model(300, 5, 6, 92);
+    for threads in [1usize, 4] {
+        let rt = Runtime::new(threads);
+        let want = model.predict(&rt, &data).unwrap();
+        let cfg = ServeConfig {
+            bulk_block_rows: 100, // 1234 rows → 13 blocks
+            ..ServeConfig::default()
+        };
+        let (addr, handle) = start(model.clone(), threads, cfg);
+
+        // line-JSON, server-default block size
+        let mut c = connect(addr);
+        let got = c.bulk_predict(path.to_str().unwrap(), None).unwrap();
+        assert_eq!(got.labels, want, "threads={threads}");
+        assert_eq!(got.blocks, 13, "threads={threads}");
+
+        // an explicit block size overrides the default; labels are
+        // identical at any block boundary
+        let got = c.bulk_predict(path.to_str().unwrap(), Some(500)).unwrap();
+        assert_eq!(got.labels, want, "threads={threads}");
+        assert_eq!(got.blocks, 3);
+
+        // HTTP chunked response, forced onto the windowed chunked
+        // reader (curl-shaped: everything in the query string)
+        let mut h = Http::connect(addr);
+        let target = format!(
+            "/v1/bulk_predict?path={}&block_rows=100&mode=chunked",
+            path.display()
+        );
+        let resp = h.call("POST", &target, None);
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        assert_eq!(resp.header("transfer-encoding"), Some("chunked"));
+        let mut lines = resp.body.lines();
+        let header = Json::parse(lines.next().unwrap()).unwrap();
+        assert_eq!(header.get("ok").and_then(Json::as_bool), Some(true), "{header}");
+        assert_eq!(header.get("n").and_then(Json::as_usize), Some(1234));
+        let mut labels = vec![0u32; 1234];
+        let mut blocks = 0u64;
+        let mut trailer = None;
+        for line in lines {
+            let doc = Json::parse(line).unwrap();
+            if doc.get("done").and_then(Json::as_bool) == Some(true) {
+                trailer = Some(doc);
+                break;
+            }
+            let lo = doc.get("lo").and_then(Json::as_usize).unwrap();
+            let block = doc.get("labels").and_then(Json::as_arr).unwrap();
+            for (i, label) in block.iter().enumerate() {
+                labels[lo + i] = label.as_usize().unwrap() as u32;
+            }
+            blocks += 1;
+        }
+        assert_eq!(labels, want, "threads={threads} (http)");
+        assert_eq!(blocks, 13);
+        let trailer = trailer.expect("stream trailer");
+        assert_eq!(trailer.get("blocks").and_then(Json::as_usize), Some(13));
+        assert_eq!(trailer.get("rows").and_then(Json::as_usize), Some(1234));
+        let io = trailer.get("io").expect("io telemetry");
+        assert!(
+            io.get("bytes_read").and_then(Json::as_f64).unwrap() > 0.0,
+            "{trailer}"
+        );
+
+        // a missing file is a typed error, not a broken stream
+        let err = c.bulk_predict("/nonexistent.ekb", None).unwrap_err();
+        assert!(err.to_string().contains("source_error"), "{err}");
+
+        shutdown(addr);
+        let stats = handle.join().unwrap();
+        assert_eq!(stats.bulk_predicts, 3, "threads={threads}");
+        assert_eq!(stats.bulk_blocks, 13 + 3 + 13, "threads={threads}");
+        assert_eq!(stats.bulk_rows, 3 * 1234, "threads={threads}");
+    }
+}
+
+// ---- admission control ------------------------------------------------
+
+#[test]
+fn flooding_client_is_rate_limited_while_polite_client_succeeds() {
+    let model = fit_model(150, 3, 4, 101);
+    // per-connection keying: both clients come from 127.0.0.1, and the
+    // test needs them budgeted separately (production keeps `Ip`)
+    let cfg = ServeConfig {
+        admission: AdmissionConfig {
+            rate_limit: 5.0,
+            burst: 2.0,
+            key_by: KeyBy::Conn,
+            ..AdmissionConfig::default()
+        },
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = start(model, 1, cfg);
+    // the polite client paces itself under the sustained rate and must
+    // never be refused, whatever the flood next door is doing
+    let polite = thread::spawn(move || {
+        let mut c = connect(addr);
+        for i in 0..6 {
+            let reply = c.call(&client::stats_request()).unwrap();
+            assert_eq!(
+                reply.get("ok").and_then(Json::as_bool),
+                Some(true),
+                "polite request {i}: {reply}"
+            );
+            thread::sleep(Duration::from_millis(250));
+        }
+    });
+    let mut c = connect(addr);
+    let mut limited = 0;
+    let mut served = 0;
+    for _ in 0..40 {
+        let reply = c.call(&client::stats_request()).unwrap();
+        match error_code(&reply) {
+            Some(code) => {
+                assert_eq!(code, code::RATE_LIMITED, "{reply}");
+                let message = reply.get("message").and_then(Json::as_str).unwrap();
+                assert!(message.contains("retry in"), "{reply}");
+                limited += 1;
+            }
+            None => served += 1,
+        }
+    }
+    assert!(limited > 0, "flood was never rate-limited");
+    assert!(served >= 2, "burst tokens must admit the first requests");
+    // the rejection is advisory, not a ban: after backing off, the same
+    // connection is served again
+    thread::sleep(Duration::from_millis(250));
+    let reply = c.call(&client::stats_request()).unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+    polite.join().unwrap();
+
+    // over HTTP the same rejection is a 429 with a Retry-After hint —
+    // while healthz bypasses admission (liveness is never load-shed)
+    let mut h = Http::connect(addr);
+    let mut saw_429 = false;
+    for _ in 0..20 {
+        let resp = h.call("GET", "/v1/stats", None);
+        if resp.status == 429 {
+            assert!(resp.header("retry-after").is_some(), "429 needs Retry-After");
+            assert_eq!(error_code(&resp.json()).as_deref(), Some(code::RATE_LIMITED));
+            saw_429 = true;
+        } else {
+            assert_eq!(resp.status, 200, "{}", resp.body);
+        }
+    }
+    assert!(saw_429, "HTTP flood was never rate-limited");
+    for _ in 0..5 {
+        assert_eq!(h.call("GET", "/v1/healthz", None).status, 200);
+    }
+    shutdown(addr);
+    let stats = handle.join().unwrap();
+    assert!(stats.rate_limited_rejects > 0, "{stats:?}");
+    assert!(stats.http_requests >= 25, "{stats:?}");
+}
+
+#[test]
+fn breaker_trips_after_consecutive_failures_and_recovers_half_open() {
+    let model = fit_model(150, 3, 4, 111);
+    let cfg = ServeConfig {
+        admission: AdmissionConfig {
+            breaker_fails: 3,
+            breaker_cooldown: Duration::from_millis(200),
+            key_by: KeyBy::Conn,
+            ..AdmissionConfig::default()
+        },
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = start(model, 1, cfg);
+    let mut c = connect(addr);
+    for i in 0..3 {
+        let reply = c.call("this is not json").unwrap();
+        assert_eq!(
+            error_code(&reply).as_deref(),
+            Some(code::BAD_REQUEST),
+            "bad request {i}"
+        );
+    }
+    // tripped: even a well-formed request is refused now
+    let reply = c.call(&client::stats_request()).unwrap();
+    assert_eq!(error_code(&reply).as_deref(), Some(code::BREAKER_OPEN), "{reply}");
+    // an innocent concurrent connection has its own breaker
+    let reply = connect(addr).call(&client::stats_request()).unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+    // after the cooldown exactly one half-open probe is admitted; its
+    // success closes the breaker and traffic flows again
+    thread::sleep(Duration::from_millis(250));
+    let reply = c.call(&client::stats_request()).unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true), "probe: {reply}");
+    let reply = c.call(&client::stats_request()).unwrap();
+    assert_eq!(
+        reply.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "after probe: {reply}"
+    );
+    shutdown(addr);
+    let stats = handle.join().unwrap();
+    assert!(stats.breaker_rejects >= 1, "{stats:?}");
+    assert_eq!(stats.bad_requests, 3, "{stats:?}");
+}
+
+#[test]
+fn stats_report_admission_counters() {
+    let model = fit_model(150, 3, 4, 121);
+    let cfg = ServeConfig {
+        admission: AdmissionConfig {
+            rate_limit: 10.0,
+            burst: 1.0,
+            key_by: KeyBy::Conn,
+            ..AdmissionConfig::default()
+        },
+        ..ServeConfig::default()
+    };
+    let (addr, handle) = start(model, 1, cfg);
+    let mut c = connect(addr);
+    let first = c.call(&client::stats_request()).unwrap();
+    assert_eq!(first.get("ok").and_then(Json::as_bool), Some(true), "{first}");
+    let limited = c.call(&client::stats_request()).unwrap();
+    assert_eq!(error_code(&limited).as_deref(), Some(code::RATE_LIMITED));
+    thread::sleep(Duration::from_millis(150)); // ≥ one token refills
+    let reply = c.call(&client::stats_request()).unwrap();
+    let stats_json = reply.get("stats").expect("stats payload");
+    assert_eq!(
+        stats_json.get("rate_limited_rejects").and_then(Json::as_usize),
+        Some(1),
+        "{stats_json}"
+    );
+    assert_eq!(
+        stats_json.get("breaker_rejects").and_then(Json::as_usize),
+        Some(0)
+    );
+    assert!(stats_json.get("http_requests").is_some(), "{stats_json}");
+    assert!(stats_json.get("bulk_predicts").is_some(), "{stats_json}");
+    assert!(stats_json.get("bulk_rows").is_some(), "{stats_json}");
+    shutdown(addr);
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.rate_limited_rejects, 1);
+    assert_eq!(stats.breaker_rejects, 0);
 }
