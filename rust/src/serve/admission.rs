@@ -31,9 +31,12 @@
 //! knobs are `--rate-limit`, `--rate-burst`, `--breaker-fails`,
 //! `--breaker-cooldown-ms`, and `--admission-key`.
 //!
-//! Decisions are made under one mutex over a small per-key state map —
-//! admission is O(1) per request and the map is pruned of idle keys so
-//! an address-rotating flood cannot grow it unboundedly.
+//! Decisions are made under one mutex over a small per-key state map.
+//! Admission is amortised O(1) per request: idle keys are pruned at
+//! most once per few seconds, and when the map hits a hard cap (8192
+//! keys) the older half is evicted in one pass before inserting, so an
+//! address-rotating flood can neither grow the map unboundedly nor
+//! force a full-map scan on every new key.
 
 use std::collections::HashMap;
 use std::net::{IpAddr, SocketAddr};
@@ -142,9 +145,11 @@ struct ClientState {
     /// `Some(when)` while the breaker is open; half-open after
     /// `when + cooldown`.
     opened: Option<Instant>,
-    /// A half-open probe is in flight — further requests are refused
-    /// until its outcome arrives.
-    probing: bool,
+    /// `Some(started)` while a half-open probe is in flight — further
+    /// requests are refused until its outcome arrives, or until it is
+    /// one cooldown stale (a probe whose outcome never comes back must
+    /// not wedge the breaker open forever).
+    probing: Option<Instant>,
     /// For pruning idle keys.
     last_seen: Instant,
 }
@@ -157,7 +162,7 @@ impl ClientState {
             refilled: now,
             fails: 0,
             opened: None,
-            probing: false,
+            probing: None,
             last_seen: now,
         }
     }
@@ -170,11 +175,29 @@ const PRUNE_AT: usize = 4096;
 /// breaker cooled down anyway).
 const IDLE_HORIZON: Duration = Duration::from_secs(300);
 
+/// Idle pruning runs at most this often — a rotating-key flood whose
+/// entries are all recently seen must not pay a full-map scan that
+/// removes nothing on every new key.
+const PRUNE_INTERVAL: Duration = Duration::from_secs(5);
+
+/// Hard cap on tracked keys. Inserting a new key at the cap first
+/// evicts the older half of the map (by `last_seen`) in one pass, so
+/// the scan cost is amortised O(1) per insert and the map is bounded
+/// even when every entry is fresh.
+const HARD_CAP: usize = 8192;
+
+/// The per-key state map plus prune bookkeeping, all under one mutex.
+struct ClientMap {
+    map: HashMap<ClientKey, ClientState>,
+    /// When the last idle prune ran (rate-limits the scan).
+    last_prune: Option<Instant>,
+}
+
 /// The shared admission gate: one per server, consulted by every
 /// acceptor before a request touches the queue or an op handler.
 pub struct Admission {
     cfg: AdmissionConfig,
-    clients: Mutex<HashMap<ClientKey, ClientState>>,
+    clients: Mutex<ClientMap>,
     next_conn: AtomicU64,
 }
 
@@ -183,7 +206,10 @@ impl Admission {
     pub fn new(cfg: AdmissionConfig) -> Admission {
         Admission {
             cfg,
-            clients: Mutex::new(HashMap::new()),
+            clients: Mutex::new(ClientMap {
+                map: HashMap::new(),
+                last_prune: None,
+            }),
             next_conn: AtomicU64::new(0),
         }
     }
@@ -224,21 +250,43 @@ impl Admission {
         let now = Instant::now();
         let mut clients = self.clients.lock().expect("admission poisoned");
         let state = clients
+            .map
             .entry(key)
             .or_insert_with(|| ClientState::new(&self.cfg, now));
         state.last_seen = now;
         if success {
             state.fails = 0;
             state.opened = None;
-            state.probing = false;
+            state.probing = None;
         } else {
             state.fails = state.fails.saturating_add(1);
-            if state.probing || state.fails >= self.cfg.breaker_fails {
+            if state.probing.is_some() || state.fails >= self.cfg.breaker_fails {
                 // trip (or re-trip after a failed probe): refuse until
                 // the cooldown elapses again
                 state.opened = Some(now);
-                state.probing = false;
+                state.probing = None;
                 state.fails = 0;
+            }
+        }
+    }
+
+    /// Report that an admitted request ended without a breaker verdict
+    /// (overloaded, shutting down, peer gone mid-reply). If that
+    /// request was the half-open probe, this releases the probe slot —
+    /// counting neither success nor failure — and re-arms the cooldown,
+    /// so the next probe waits out the overload instead of the breaker
+    /// wedging open with an outcome that never arrives.
+    pub fn probe_aborted(&self, key: ClientKey) {
+        if self.cfg.breaker_fails == 0 {
+            return;
+        }
+        let now = Instant::now();
+        let mut clients = self.clients.lock().expect("admission poisoned");
+        if let Some(state) = clients.map.get_mut(&key) {
+            state.last_seen = now;
+            if state.probing.is_some() {
+                state.probing = None;
+                state.opened = Some(now);
             }
         }
     }
@@ -246,11 +294,25 @@ impl Admission {
     /// Testable core of [`check`](Admission::check) with an explicit
     /// clock.
     fn check_at(&self, key: ClientKey, now: Instant) -> Decision {
-        let mut clients = self.clients.lock().expect("admission poisoned");
-        if clients.len() >= PRUNE_AT && !clients.contains_key(&key) {
-            clients.retain(|_, s| now.duration_since(s.last_seen) < IDLE_HORIZON);
+        let mut guard = self.clients.lock().expect("admission poisoned");
+        let clients = &mut *guard;
+        if !clients.map.contains_key(&key) {
+            if clients.map.len() >= PRUNE_AT
+                && clients
+                    .last_prune
+                    .map_or(true, |at| now.duration_since(at) >= PRUNE_INTERVAL)
+            {
+                clients.last_prune = Some(now);
+                clients
+                    .map
+                    .retain(|_, s| now.duration_since(s.last_seen) < IDLE_HORIZON);
+            }
+            if clients.map.len() >= HARD_CAP {
+                evict_older_half(&mut clients.map);
+            }
         }
         let state = clients
+            .map
             .entry(key)
             .or_insert_with(|| ClientState::new(&self.cfg, now));
         state.last_seen = now;
@@ -260,11 +322,16 @@ impl Admission {
             if elapsed < self.cfg.breaker_cooldown {
                 return Decision::BreakerOpen(self.cfg.breaker_cooldown - elapsed);
             }
-            if state.probing {
-                // one probe at a time; others retry after a cooldown
-                return Decision::BreakerOpen(self.cfg.breaker_cooldown);
+            if let Some(started) = state.probing {
+                // one probe at a time; others retry after a cooldown.
+                // A probe one full cooldown stale (its outcome lost —
+                // e.g. a worker died mid-request) expires and a fresh
+                // probe is admitted instead of wedging the key.
+                if now.duration_since(started) < self.cfg.breaker_cooldown {
+                    return Decision::BreakerOpen(self.cfg.breaker_cooldown);
+                }
             }
-            state.probing = true;
+            state.probing = Some(now);
             // the probe bypasses the bucket: it exists to test recovery
             return Decision::Admit;
         }
@@ -281,6 +348,23 @@ impl Admission {
         }
         Decision::Admit
     }
+
+    /// Number of tracked keys (test observability for the prune/cap).
+    #[cfg(test)]
+    fn tracked_keys(&self) -> usize {
+        self.clients.lock().expect("admission poisoned").map.len()
+    }
+}
+
+/// Drop the older half of the map by `last_seen` (ties at the median go
+/// too). Called only at [`HARD_CAP`]; freeing ~half the slots per scan
+/// keeps the per-insert cost amortised O(1) under a key-rotating flood.
+fn evict_older_half(map: &mut HashMap<ClientKey, ClientState>) {
+    let mut stamps: Vec<Instant> = map.values().map(|s| s.last_seen).collect();
+    let mid = stamps.len() / 2;
+    let (_, median, _) = stamps.select_nth_unstable(mid);
+    let cutoff = *median;
+    map.retain(|_, s| s.last_seen > cutoff);
 }
 
 #[cfg(test)]
@@ -392,6 +476,59 @@ mod tests {
         assert_eq!(g.check(k), Decision::Admit); // the probe
         g.outcome(k, false); // probe failed → open again, full cooldown
         assert!(matches!(g.check(k), Decision::BreakerOpen(_)));
+    }
+
+    #[test]
+    fn aborted_probe_does_not_wedge_the_breaker() {
+        let g = gate(0.0, 1.0, 1, 40);
+        let k = g.key_for(None);
+        g.outcome(k, false); // trips
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(g.check(k), Decision::Admit); // the probe
+        // the probe hits overload/shutdown: no verdict, only an abort.
+        // The cooldown re-arms, then a FRESH probe must be admitted.
+        g.probe_aborted(k);
+        assert!(matches!(g.check(k), Decision::BreakerOpen(_)));
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(g.check(k), Decision::Admit);
+        // and the new probe's success closes the breaker normally
+        g.outcome(k, true);
+        assert_eq!(g.check(k), Decision::Admit);
+    }
+
+    #[test]
+    fn stale_probe_expires_instead_of_wedging() {
+        let g = gate(0.0, 1.0, 1, 1000);
+        let k = g.key_for(None);
+        let t0 = Instant::now();
+        g.outcome(k, false); // trips at ~t0 (outcome uses the real clock)
+        let t1 = t0 + Duration::from_millis(1100);
+        assert_eq!(g.check_at(k, t1), Decision::Admit); // probe starts
+        // within one cooldown of the probe start, others are refused
+        let t2 = t1 + Duration::from_millis(500);
+        assert!(matches!(g.check_at(k, t2), Decision::BreakerOpen(_)));
+        // the outcome never arrives; one full cooldown later the stale
+        // probe expires and a fresh one is admitted
+        let t3 = t1 + Duration::from_millis(1100);
+        assert_eq!(g.check_at(k, t3), Decision::Admit);
+    }
+
+    #[test]
+    fn rotating_key_flood_stays_bounded() {
+        let g = gate(100.0, 1.0, 0, 0);
+        let t0 = Instant::now();
+        // every key is fresh and recently seen: the idle prune removes
+        // nothing, so only the hard cap keeps the map bounded
+        for i in 0..(3 * HARD_CAP) {
+            let k = g.key_for(None);
+            let now = t0 + Duration::from_micros(i as u64);
+            assert_eq!(g.check_at(k, now), Decision::Admit);
+        }
+        assert!(
+            g.tracked_keys() <= HARD_CAP,
+            "map grew past the hard cap: {}",
+            g.tracked_keys()
+        );
     }
 
     #[test]

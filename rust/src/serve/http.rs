@@ -210,6 +210,7 @@ fn parse_head(head: &[u8]) -> Option<Head> {
     let http11 = version == "HTTP/1.1";
     let mut keep_alive = http11;
     let mut content_length = 0usize;
+    let mut content_length_seen = false;
     let mut expect_continue = false;
     let mut bad_framing = false;
     for line in lines {
@@ -223,7 +224,15 @@ fn parse_head(head: &[u8]) -> Option<Head> {
         let value = value.trim();
         match name.as_str() {
             "content-length" => match value.parse::<usize>() {
-                Ok(n) => content_length = n,
+                Ok(n) => {
+                    // conflicting lengths are a request-smuggling vector
+                    // (RFC 7230 §3.3.2): refuse, never last-one-wins
+                    if content_length_seen && content_length != n {
+                        bad_framing = true;
+                    }
+                    content_length = n;
+                    content_length_seen = true;
+                }
                 Err(_) => bad_framing = true,
             },
             "transfer-encoding" => bad_framing = true,
@@ -421,7 +430,9 @@ pub fn send_response(
     response.push_str("Content-Type: application/json\r\n");
     response.push_str(&format!("Content-Length: {}\r\n", body_line.len() + 1));
     if let Some(after) = retry_after {
-        response.push_str(&format!("Retry-After: {}\r\n", after.as_secs().max(1)));
+        // ceil, not floor: an early retry would just eat another 429
+        let secs = (after.as_secs_f64().ceil() as u64).max(1);
+        response.push_str(&format!("Retry-After: {secs}\r\n"));
     }
     response.push_str(if keep_alive {
         "Connection: keep-alive\r\n"
@@ -559,6 +570,19 @@ mod tests {
         let raw = b"POST /v1/predict HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec();
         let mut r = reader(vec![raw]);
         assert!(matches!(r.next_request(soon(), &mut sink), HttpRead::Bad));
+        // conflicting Content-Length values are refused (smuggling
+        // vector), not resolved last-one-wins
+        let raw = b"POST /v1/predict HTTP/1.1\r\nContent-Length: 2\r\n\
+                    Content-Length: 3\r\n\r\n{}x"
+            .to_vec();
+        let mut r = reader(vec![raw]);
+        assert!(matches!(r.next_request(soon(), &mut sink), HttpRead::Bad));
+        // a repeated identical Content-Length is tolerated
+        let raw = b"POST /v1/predict HTTP/1.1\r\nContent-Length: 2\r\n\
+                    Content-Length: 2\r\n\r\n{}"
+            .to_vec();
+        let mut r = reader(vec![raw]);
+        assert!(matches!(r.next_request(soon(), &mut sink), HttpRead::Msg(_)));
         // not HTTP at all
         let mut r = reader(vec![b"FROB one two three\r\n\r\n".to_vec()]);
         assert!(matches!(r.next_request(soon(), &mut sink), HttpRead::Bad));
@@ -668,9 +692,16 @@ mod tests {
         ));
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
-        assert!(text.contains("Retry-After: 2\r\n"), "{text}");
+        // 2500 ms rounds UP: retrying at 2 s would be refused again
+        assert!(text.contains("Retry-After: 3\r\n"), "{text}");
         assert!(text.contains("Content-Length: 13\r\n"), "{text}");
         assert!(text.ends_with("\r\n\r\n{\"ok\":false}\n"), "{text}");
+
+        let mut out = Vec::new();
+        assert!(send_response(&mut out, 503, Some(Duration::from_millis(80)), "{}", true));
+        let text = String::from_utf8(out).unwrap();
+        // sub-second hints still advertise at least one whole second
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
 
         let mut out = Vec::new();
         assert!(send_chunked_head(&mut out, false));

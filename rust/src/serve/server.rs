@@ -373,8 +373,11 @@ fn serve_lines(
                         ctx.telemetry.request();
                         let mut sink = LineSink { w: &mut write_half };
                         let done = dispatch(req, &mut sink, ctx);
-                        if let Some(ok) = done.verdict {
-                            ctx.admission.outcome(key, ok);
+                        match done.verdict {
+                            Some(ok) => ctx.admission.outcome(key, ok),
+                            // no verdict (overload/shutdown/peer gone):
+                            // still release a half-open probe slot
+                            None => ctx.admission.probe_aborted(key),
                         }
                         if !done.keep {
                             return;
@@ -510,8 +513,9 @@ fn serve_http(
                             keep_alive: keep,
                         };
                         let done = dispatch(op, &mut sink, ctx);
-                        if let Some(ok) = done.verdict {
-                            ctx.admission.outcome(key, ok);
+                        match done.verdict {
+                            Some(ok) => ctx.admission.outcome(key, ok),
+                            None => ctx.admission.probe_aborted(key),
                         }
                         if !done.keep || !keep {
                             return;
@@ -566,7 +570,9 @@ struct Done {
     /// The circuit-breaker verdict: `Some(true)` success,
     /// `Some(false)` client-caused failure, `None` for server-side
     /// conditions (overload, shutdown, peer gone) that must not trip a
-    /// client's breaker.
+    /// client's breaker — `None` is still reported to admission as
+    /// [`probe_aborted`](Admission::probe_aborted) so a half-open probe
+    /// that lands on one of these paths cannot wedge the breaker open.
     verdict: Option<bool>,
 }
 
