@@ -44,6 +44,7 @@ fn main() {
         "algorithm",
         "k",
         "T",
+        "S/T",
         "wall[s]",
         "scan[s]",
         "update[s]",
@@ -84,6 +85,9 @@ fn main() {
                 alg_name.to_string(),
                 k.to_string(),
                 threads.to_string(),
+                // over-decomposition factor: auto shard count (a
+                // function of n alone) per pool thread
+                format!("{:.1}", out.report.sched.shards as f64 / threads as f64),
                 format!("{:.4}", out.wall.as_secs_f64()),
                 format!("{:.4}", out.report.phases.scan.as_secs_f64()),
                 format!("{:.4}", out.report.phases.update.as_secs_f64()),

@@ -232,15 +232,14 @@ pub fn blocked_argmin_scan(
     }
 }
 
-/// Minimum rows per pool chunk in [`nearest_labels`].
-const LABEL_CHUNK: usize = 128;
-
 /// Pool-sharded nearest-centroid labelling: writes every row of
 /// `data`'s label (first-lowest-index tie-breaking) into `labels`.
 ///
-/// Chunks are claimed dynamically but each element's math is
-/// independent of the partition, so the output is **bit-identical at
-/// any pool width**. This is the one serving/labelling kernel —
+/// Chunks are claimed dynamically but their *geometry* is a function of
+/// `n` alone ([`sched::label_chunk`](crate::coordinator::sched::label_chunk)),
+/// and each element's math is independent of the partition, so both the
+/// output and the per-chunk cursor behaviour are **identical at any
+/// pool width**. This is the one serving/labelling kernel —
 /// [`FittedModel::predict`](crate::model::FittedModel::predict) and the
 /// mini-batch driver's final full-data pass both call it, so their
 /// outputs agree by construction. Each chunk opens its own cursor, so
@@ -257,7 +256,7 @@ pub fn nearest_labels(
     assert_eq!(labels.len(), data.n(), "labels buffer must hold one label per row");
     let n = data.n();
     let cells = SharedSliceMut::new(labels);
-    pool.for_each_chunk(n, LABEL_CHUNK, |lo, hi| {
+    pool.for_each_chunk_exact(n, crate::coordinator::sched::label_chunk(n), |lo, hi| {
         // chunks are disjoint sample ranges; element-wise writes only
         let out = unsafe { cells.range(lo, hi) };
         let mut cur = data.open(lo, hi - lo);

@@ -10,6 +10,7 @@ use crate::config::RunConfig;
 use crate::coordinator::history::Epoch;
 use crate::coordinator::parallel::make_shards;
 use crate::coordinator::runner::Engine;
+use crate::coordinator::sched::{ScanPlan, MIN_SHARD_ROWS};
 use crate::data::synth::blobs;
 use crate::data::{DataSource, Dataset};
 use crate::linalg::{sqdist, sqnorm};
@@ -152,6 +153,38 @@ pub fn assert_block_lease_contract(src: &dyn DataSource, seed: u64) {
             assert_eq!(cur.sqnorm(i).to_bits(), ref_norms[i].to_bits());
         }
     });
+}
+
+/// Assert the [`ScanPlan`] geometry invariants for `n` rows under
+/// `spec` (a `--scan-shards` value; `AUTO_SCAN_SHARDS` for auto):
+///
+/// 1. **cover** — shard lengths sum to `n` and tile `[0, n)` contiguously
+///    in ascending order (the merge-order contract);
+/// 2. **floor** — every shard spans at least
+///    [`MIN_SHARD_ROWS`](crate::coordinator::sched::MIN_SHARD_ROWS) rows
+///    whenever `n` itself does (ooc cursors never window-thrash);
+/// 3. **order** — the claim order is a permutation of the shard indices.
+pub fn assert_scan_plan_invariants(n: usize, spec: usize) {
+    let plan = ScanPlan::for_rows(n, spec);
+    let shards = plan.shards();
+    let total: usize = shards.iter().map(|s| s.1).sum();
+    assert_eq!(total, n, "shards of ({n}, {spec}) do not cover n rows");
+    let mut at = 0;
+    for &(lo, len) in shards {
+        assert_eq!(lo, at, "shards of ({n}, {spec}) are not contiguous");
+        assert!(
+            len >= MIN_SHARD_ROWS || shards.len() == 1,
+            "shard of ({n}, {spec}) spans {len} rows, below the floor"
+        );
+        at += len;
+    }
+    let mut seen = vec![false; shards.len()];
+    for &i in plan.order() {
+        assert!(!seen[i], "claim order of ({n}, {spec}) repeats shard {i}");
+        seen[i] = true;
+    }
+    assert!(seen.iter().all(|&s| s), "claim order of ({n}, {spec}) is not a permutation");
+    assert_eq!(plan.telemetry().shards, shards.len());
 }
 
 /// Bound inspection context handed to per-algorithm checkers.

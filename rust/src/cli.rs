@@ -3,7 +3,8 @@
 //!
 //! ```text
 //! eakm run       --dataset birch --k 100 --algorithm exp-ns [--seed 0]
-//!                [--threads 1] [--scale 0.02] [--max-iters N] [--json]
+//!                [--threads 1] [--scan-shards N|auto] [--scale 0.02]
+//!                [--max-iters N] [--json]
 //!                [--batch-size B] [--batch-growth F]
 //!                [--config file] [--data-file path.csv|.ekb]
 //!                [--ooc auto|mmap|chunked] [--ooc-window ROWS]
@@ -112,6 +113,9 @@ common flags:
   --seed S           RNG seed (default 0)
   --threads T|auto   worker threads for the whole round (default 1;
                      auto = available parallelism)
+  --scan-shards N|auto  shards in the over-decomposed scan plan
+                     (default auto = derived from n; results are
+                     bit-identical at any value — a scheduling knob)
   --max-iters N      round cap
   --batch-size B     (run) mini-batch mode: sample B rows per round
                      instead of scanning everything (B ≥ n stays exact)
@@ -318,6 +322,27 @@ fn parse_threads(flags: &Flags) -> Result<Option<usize>> {
     }
 }
 
+/// Parse `--scan-shards N|auto` (returns `None` when the flag is
+/// absent). Mirrors `--threads`: only the literal "auto" selects the
+/// derived-from-`n` geometry.
+fn parse_scan_shards(flags: &Flags) -> Result<Option<usize>> {
+    match flags.get("scan-shards") {
+        None => Ok(None),
+        Some(s) if s == "auto" => Ok(Some(crate::coordinator::sched::AUTO_SCAN_SHARDS)),
+        Some(s) => {
+            let n = s
+                .parse::<usize>()
+                .map_err(|_| EakmError::Config(format!("bad --scan-shards: {s:?}")))?;
+            if n == 0 {
+                return Err(EakmError::Config(
+                    "--scan-shards must be ≥ 1, or \"auto\"".into(),
+                ));
+            }
+            Ok(Some(n))
+        }
+    }
+}
+
 fn build_config(flags: &Flags) -> Result<RunConfig> {
     let mut cfg = if let Some(path) = flags.get("config") {
         let text = std::fs::read_to_string(path)?;
@@ -337,6 +362,9 @@ fn build_config(flags: &Flags) -> Result<RunConfig> {
     }
     if let Some(t) = parse_threads(flags)? {
         cfg.threads = t;
+    }
+    if let Some(s) = parse_scan_shards(flags)? {
+        cfg.scan_shards = s;
     }
     if let Some(m) = flag_num::<usize>(flags, "max-iters")? {
         cfg.max_iters = m;
@@ -1249,5 +1277,33 @@ mod tests {
         assert!(main(&s(&["run", "--dataset", "birch", "--threads", "lots"])).is_err());
         // 0 is not a thread count; only the explicit "auto" selects auto
         assert!(main(&s(&["run", "--dataset", "birch", "--threads", "0"])).is_err());
+    }
+
+    #[test]
+    fn run_with_scan_shards_flag() {
+        // explicit counts and "auto" both run; the knob never changes
+        // results, so a plain exit-0 smoke is the CLI's contract here
+        for shards in ["auto", "3"] {
+            let code = main(&s(&[
+                "run",
+                "--dataset",
+                "birch",
+                "--scale",
+                "0.01",
+                "--k",
+                "5",
+                "--algorithm",
+                "sta",
+                "--threads",
+                "2",
+                "--scan-shards",
+                shards,
+            ]))
+            .unwrap();
+            assert_eq!(code, 0, "--scan-shards {shards}");
+        }
+        assert!(main(&s(&["run", "--dataset", "birch", "--scan-shards", "many"])).is_err());
+        // 0 is not a shard count; only the explicit "auto" selects auto
+        assert!(main(&s(&["run", "--dataset", "birch", "--scan-shards", "0"])).is_err());
     }
 }

@@ -45,6 +45,14 @@ pub struct RunConfig {
     /// the dataset; exactly 1 redraws a fresh batch every round
     /// (Sculley-style resampling). Ignored without `batch_size`.
     pub batch_growth: f64,
+    /// Shards in the over-decomposed scan plan.
+    /// [`AUTO_SCAN_SHARDS`](crate::coordinator::sched::AUTO_SCAN_SHARDS)
+    /// (0) derives the count from `n`; explicit counts are clamped by
+    /// the plan's
+    /// [`MIN_SHARD_ROWS`](crate::coordinator::sched::MIN_SHARD_ROWS)
+    /// floor. Results are bit-identical at any value — this is a
+    /// scheduling knob, not a math knob.
+    pub scan_shards: usize,
 }
 
 /// Sentinel thread count: resolve from `available_parallelism`
@@ -67,6 +75,7 @@ impl RunConfig {
             record_rounds: false,
             batch_size: None,
             batch_growth: 2.0, // nested doubling, the 2016b default
+            scan_shards: crate::coordinator::sched::AUTO_SCAN_SHARDS,
         }
     }
 
@@ -118,6 +127,14 @@ impl RunConfig {
     /// (doubling = 2.0), exactly 1 redraws fresh batches.
     pub fn batch_growth(mut self, batch_growth: f64) -> Self {
         self.batch_growth = batch_growth;
+        self
+    }
+
+    /// Set the scan-plan shard count (builder style).
+    /// [`AUTO_SCAN_SHARDS`](crate::coordinator::sched::AUTO_SCAN_SHARDS)
+    /// (0) derives it from `n`.
+    pub fn scan_shards(mut self, scan_shards: usize) -> Self {
+        self.scan_shards = scan_shards;
         self
     }
 
@@ -211,6 +228,19 @@ impl RunConfig {
                     cfg.batch_size = Some(b);
                 }
                 "batch_growth" => cfg.batch_growth = parse_num(key, value)?,
+                "scan_shards" => {
+                    cfg.scan_shards = if value == "auto" {
+                        crate::coordinator::sched::AUTO_SCAN_SHARDS
+                    } else {
+                        let n = parse_num::<usize>(key, value)?;
+                        if n == 0 {
+                            return Err(EakmError::Config(
+                                "scan_shards must be ≥ 1, or \"auto\"".into(),
+                            ));
+                        }
+                        n
+                    };
+                }
                 "time_limit_secs" => {
                     cfg.time_limit = Some(Duration::from_secs(parse_num(key, value)?));
                 }
@@ -277,6 +307,21 @@ mod tests {
         assert_eq!(RunConfig::new(Algorithm::Sta, 2).threads(3).resolved_threads(), 3);
         // an explicit 0 in config text is rejected (only "auto" means auto)
         assert!(RunConfig::from_str_cfg("threads = 0").is_err());
+    }
+
+    #[test]
+    fn scan_shards_parses_auto_and_counts() {
+        use crate::coordinator::sched::AUTO_SCAN_SHARDS;
+        let cfg = RunConfig::from_str_cfg("scan_shards = auto").unwrap();
+        assert_eq!(cfg.scan_shards, AUTO_SCAN_SHARDS);
+        let cfg = RunConfig::from_str_cfg("scan_shards = 32").unwrap();
+        assert_eq!(cfg.scan_shards, 32);
+        // builder mirrors the file key; the default is auto
+        assert_eq!(RunConfig::new(Algorithm::Sta, 2).scan_shards, AUTO_SCAN_SHARDS);
+        assert_eq!(RunConfig::new(Algorithm::Sta, 2).scan_shards(8).scan_shards, 8);
+        // an explicit 0 in config text is rejected (only "auto" means auto)
+        assert!(RunConfig::from_str_cfg("scan_shards = 0").is_err());
+        assert!(RunConfig::from_str_cfg("scan_shards = lots").is_err());
     }
 
     #[test]

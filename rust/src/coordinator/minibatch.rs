@@ -48,7 +48,7 @@ use crate::coordinator::runner::{Engine, RunOutput};
 use crate::data::{BatchView, DataSource};
 use crate::error::Result;
 use crate::linalg::sqnorms_rows;
-use crate::metrics::{BatchTelemetry, Counters, PhaseTimes, RunReport};
+use crate::metrics::{BatchTelemetry, Counters, PhaseTimes, RunReport, SchedTelemetry};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 
@@ -108,6 +108,7 @@ pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Re
     // nested batches carry their history in the batch itself)
     let mut carry = vec![0.0f64; k];
     let mut phases = PhaseTimes::default();
+    let mut sched = SchedTelemetry::default();
     let mut schedule = Vec::new();
     let mut round_times = Vec::new();
     let mut name = ecfg.algorithm.name().to_string();
@@ -145,6 +146,7 @@ pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Re
             centroids = engine.centroids().to_vec();
             counters.merge(&engine.counters());
             phases.merge(&engine.phases());
+            sched.merge(&engine.sched());
             break;
         }
         let t_round = Instant::now();
@@ -155,6 +157,7 @@ pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Re
             name = engine.name().to_string();
             counters.merge(&engine.counters());
             phases.merge(&engine.phases());
+            sched.merge(&engine.sched());
             let update = engine.update_state();
             (update.sums().to_vec(), update.counts().to_vec())
         };
@@ -240,6 +243,7 @@ pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Re
             schedule,
         }),
         io,
+        sched,
     };
     Ok(RunOutput {
         assignments,

@@ -11,9 +11,11 @@
 //! the serving path) or owned by the [`Engine`] (legacy one-shot path);
 //! either way it is spawned once and parked between dispatches:
 //!
-//! * **assignment scan** — [`parallel`] shards samples contiguously, one
-//!   algorithm instance per shard; counters and moved lists are merged
-//!   in shard order;
+//! * **assignment scan** — [`sched`] plans `S ≫ w` contiguous shards
+//!   (geometry a function of `n` alone), one persistent algorithm
+//!   instance per shard; [`parallel`] dispatches them in cost-guided
+//!   LPT claim order and merges counters and moved lists in ascending
+//!   shard order;
 //! * **update step** — [`update`] folds per-chunk partial centroid sums
 //!   in chunk order, with chunk geometry a function of the item count
 //!   only;
@@ -25,11 +27,15 @@
 //! ## Determinism guarantee
 //!
 //! Assignments, MSE, and [`Counters`](crate::metrics::Counters) are
-//! bit-identical at every thread count: element-wise parallel work is
-//! split arbitrarily (each element's math is independent of the split),
-//! and every floating-point *reduction* is performed serially in
+//! bit-identical at every thread count *and* every shard count:
+//! element-wise parallel work is split arbitrarily (each element's math
+//! is independent of the split), claim *order* is free (each shard's
+//! math reads only the immutable round context and its own state), and
+//! every floating-point *reduction* is performed serially in
 //! shard/chunk order with width-independent geometry. The equivalence
-//! suite asserts this for `threads ∈ {1, 2, 8}` across all algorithms.
+//! suite asserts this for `threads ∈ {1, 2, 8}` across all algorithms;
+//! `tests/sched.rs` crosses thread widths with shard counts and data
+//! sources.
 
 pub mod annuli;
 pub mod auto;
@@ -40,6 +46,7 @@ pub mod minibatch;
 pub mod parallel;
 pub mod round_ctx;
 pub mod runner;
+pub mod sched;
 pub mod sorted_norms;
 pub mod update;
 

@@ -1,27 +1,30 @@
-//! Thread-sharded execution of the assignment step — a thin façade over
-//! the persistent [`WorkerPool`].
+//! Sharded execution of the assignment step — a thin façade over the
+//! persistent [`WorkerPool`].
 //!
 //! Samples are processed independently (the paper's §4.2
-//! parallelisation): the coordinator splits them into contiguous shards,
-//! one algorithm instance per shard, and dispatches every shard's round
-//! onto the pool. No threads are spawned here — the pool outlives the
-//! round loop and is merely woken. Results (counters + moved lists) are
-//! merged in shard order, keeping the run bit-deterministic regardless
-//! of thread count.
+//! parallelisation), but the shard geometry is *over-decomposed*: a
+//! [`ScanPlan`](crate::coordinator::sched::ScanPlan) carves the rows
+//! into many more shards than workers (geometry a function of `n`
+//! alone), one persistent algorithm instance per shard, and
+//! [`run_shards`] dispatches them onto the pool in the plan's
+//! cost-guided LPT claim order. No threads are spawned here — the pool
+//! outlives the round loop and is merely woken. Results (counters +
+//! moved lists) are merged in ascending shard order, keeping the run
+//! bit-deterministic regardless of thread count, shard count, or which
+//! shard was claimed first.
+
+use std::time::{Duration, Instant};
 
 use crate::algorithms::common::{AssignStep, Moved, SharedRound};
+use crate::coordinator::sched::ScanPlan;
 use crate::data::DataSource;
 use crate::metrics::Counters;
 use crate::runtime::pool::WorkerPool;
 
-/// Shard geometry for a [`DataSource`]: split its `n()` rows into `w`
-/// contiguous balanced shards (see [`make_shards`]).
-pub fn make_shards_for(data: &dyn DataSource, w: usize) -> Vec<(usize, usize)> {
-    make_shards(data.n(), w)
-}
-
 /// Split `n` samples into `w` contiguous, balanced `(lo, len)` shards.
-/// An empty dataset has no shards.
+/// An empty dataset has no shards; `w > n` collapses to `n` single-row
+/// shards (callers that must not degenerate this far use
+/// [`make_shards_floored`]).
 pub fn make_shards(n: usize, w: usize) -> Vec<(usize, usize)> {
     if n == 0 {
         return Vec::new();
@@ -39,6 +42,18 @@ pub fn make_shards(n: usize, w: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// [`make_shards`], with a documented minimum-rows floor: the requested
+/// shard count is clamped so every shard spans at least `min_rows` rows
+/// (a dataset smaller than the floor is one shard). Out-of-core cursors
+/// hold a resident window per shard open, so degenerate geometry —
+/// `w > n` collapsing to single-row shards — would multiply cursor
+/// opens and window refills; the floor makes that impossible by
+/// construction. `min_rows = 1` (or 0) is exactly `make_shards`.
+pub fn make_shards_floored(n: usize, w: usize, min_rows: usize) -> Vec<(usize, usize)> {
+    let cap = (n / min_rows.max(1)).max(1);
+    make_shards(n, w.min(cap))
+}
+
 /// One shard's slice of the round: its algorithm instance, its window of
 /// the assignment array, its shard range, and its private outputs.
 struct ShardRun<'s> {
@@ -48,22 +63,27 @@ struct ShardRun<'s> {
     len: usize,
     ctr: Counters,
     moved: Vec<Moved>,
+    wall: Duration,
 }
 
 /// Run one assignment round (or the initial assignment when
-/// `init == true`) across all shards on the pool. Each shard's worker
-/// opens its own [`BlockCursor`](crate::data::source::BlockCursor) for
-/// the shard range — out-of-core sources thereby get one resident
-/// window per worker. Returns merged counters and moves (ascending
-/// sample order).
+/// `init == true`) across the plan's shards on the pool, claiming
+/// shards in the plan's LPT order. Each shard's worker opens its own
+/// [`BlockCursor`](crate::data::source::BlockCursor) for the shard
+/// range — out-of-core sources thereby get one resident window per
+/// in-flight shard. Returns merged counters and moves (ascending
+/// sample order); the dispatch's per-shard costs and walls are folded
+/// back into the plan for the next round's claim order and the run's
+/// [`SchedTelemetry`](crate::metrics::SchedTelemetry).
 pub fn run_shards(
     pool: &WorkerPool,
     algs: &mut [Box<dyn AssignStep>],
-    shards: &[(usize, usize)],
+    plan: &mut ScanPlan,
     a: &mut [u32],
     sh: &SharedRound,
     init: bool,
 ) -> (Counters, Vec<Moved>) {
+    let shards = plan.shards();
     debug_assert_eq!(algs.len(), shards.len());
     // split the assignment array to match the shards
     let mut tasks: Vec<ShardRun> = Vec::with_capacity(shards.len());
@@ -77,25 +97,36 @@ pub fn run_shards(
             len,
             ctr: Counters::default(),
             moved: Vec::new(),
+            wall: Duration::ZERO,
         });
         rest = tail;
     }
 
-    pool.run_tasks(&mut tasks, |_, t| {
+    pool.run_tasks_ordered(&mut tasks, plan.order(), |_, t| {
+        let t0 = Instant::now();
         let mut rows = sh.data.open(t.lo, t.len);
         if init {
             t.alg.init(sh, rows.as_mut(), t.a, &mut t.ctr);
         } else {
             t.alg.round(sh, rows.as_mut(), t.a, &mut t.ctr, &mut t.moved);
         }
+        t.wall = t0.elapsed();
     });
 
+    // merge in ascending shard order — this, not claim order, is what
+    // pins the bits
     let mut ctr = Counters::default();
-    let mut moved = Vec::new();
+    let mut moved = Vec::with_capacity(tasks.iter().map(|t| t.moved.len()).sum());
+    let mut costs = Vec::with_capacity(tasks.len());
+    let mut walls = Vec::with_capacity(tasks.len());
     for t in tasks {
         ctr.merge(&t.ctr);
+        // deterministic LPT key: distance work plus rows visited
+        costs.push(t.ctr.total() + t.len as u64);
+        walls.push(t.wall);
         moved.extend(t.moved); // shard order == ascending sample order
     }
+    plan.record(&costs, &walls, init);
     (ctr, moved)
 }
 
@@ -126,6 +157,22 @@ mod tests {
     fn more_workers_than_samples_collapses() {
         let shards = make_shards(3, 16);
         assert_eq!(shards.len(), 3);
+    }
+
+    #[test]
+    fn floored_shards_respect_min_rows() {
+        // regression: w > n used to hand degenerate single-row shards
+        // to ooc cursors; the floor caps the count instead
+        assert_eq!(make_shards_floored(3, 16, 8).len(), 1);
+        assert_eq!(make_shards_floored(1000, 64, 256).len(), 3);
+        for &(_, len) in &make_shards_floored(1000, 64, 256) {
+            assert!(len >= 256);
+        }
+        // floor of 1 (or 0) is plain make_shards
+        assert_eq!(make_shards_floored(3, 16, 1), make_shards(3, 16));
+        assert_eq!(make_shards_floored(100, 7, 0), make_shards(100, 7));
+        // empty input still yields no shards
+        assert!(make_shards_floored(0, 4, 256).is_empty());
     }
 
     #[test]

@@ -24,12 +24,13 @@ use crate::algorithms::Algorithm;
 use crate::config::RunConfig;
 use crate::coordinator::groups::GroupData;
 use crate::coordinator::history::HistoryStore;
-use crate::coordinator::parallel::{make_shards_for, run_shards};
+use crate::coordinator::parallel::run_shards;
 use crate::coordinator::round_ctx::RoundCtxOwner;
+use crate::coordinator::sched::ScanPlan;
 use crate::coordinator::update::UpdateState;
 use crate::data::DataSource;
 use crate::error::{EakmError, Result};
-use crate::metrics::{Counters, PhaseTimes, RunReport};
+use crate::metrics::{Counters, PhaseTimes, RunReport, SchedTelemetry};
 use crate::rng::Rng;
 use crate::runtime::pool::WorkerPool;
 use crate::runtime::Runtime;
@@ -61,7 +62,7 @@ pub struct Engine<'a> {
     k: usize,
     pool: PoolHandle<'a>,
     algs: Vec<Box<dyn AssignStep>>,
-    shards: Vec<(usize, usize)>,
+    plan: ScanPlan,
     a: Vec<u32>,
     ctx: RoundCtxOwner,
     update: UpdateState,
@@ -175,11 +176,12 @@ impl<'a> Engine<'a> {
             None => cfg.init.centroids(data, k, &mut rng, &mut counters),
         };
 
-        // shard geometry follows the pool width; results are
-        // width-independent (per-sample state, order-fixed merges)
-        let threads = pool.get().width();
-        let shards = make_shards_for(data, threads);
-        let mut algs: Vec<Box<dyn AssignStep>> = shards
+        // over-decomposed scan plan: geometry is a function of n and
+        // cfg.scan_shards alone — never of the pool width — so results
+        // and per-shard state are identical at any thread count
+        let mut plan = ScanPlan::for_rows(n, cfg.scan_shards);
+        let mut algs: Vec<Box<dyn AssignStep>> = plan
+            .shards()
             .iter()
             .map(|&(lo, len)| factory(lo, len, k, g))
             .collect();
@@ -210,7 +212,7 @@ impl<'a> Engine<'a> {
         let mut a = vec![0u32; n];
         let t_scan = Instant::now();
         let sh = ctx.shared(data);
-        let (ctr, _) = run_shards(pool.get(), &mut algs, &shards, &mut a, &sh, true);
+        let (ctr, _) = run_shards(pool.get(), &mut algs, &mut plan, &mut a, &sh, true);
         drop(sh);
         phases.scan += t_scan.elapsed();
         counters.merge(&ctr);
@@ -223,7 +225,7 @@ impl<'a> Engine<'a> {
             k,
             pool,
             algs,
-            shards,
+            plan,
             a,
             ctx,
             update,
@@ -266,7 +268,7 @@ impl<'a> Engine<'a> {
         let (ctr, moved) = run_shards(
             pool,
             &mut self.algs,
-            &self.shards,
+            &mut self.plan,
             &mut self.a,
             &sh,
             false,
@@ -316,6 +318,12 @@ impl<'a> Engine<'a> {
     /// Accumulated per-phase wall times.
     pub fn phases(&self) -> PhaseTimes {
         self.phases
+    }
+
+    /// Scan-scheduler telemetry accumulated so far (shard count,
+    /// dispatches, LPT reorders, per-phase max/mean shard walls).
+    pub fn sched(&self) -> SchedTelemetry {
+        self.plan.telemetry()
     }
 
     /// Resolved worker count (the pool's width).
@@ -454,6 +462,7 @@ impl Runner {
             round_times,
             batch: None,
             io,
+            sched: engine.sched(),
         };
         Ok(RunOutput {
             assignments: engine.assignments().to_vec(),
@@ -514,6 +523,33 @@ mod tests {
             assert_eq!(out1.assignments, out4.assignments, "{alg}");
             assert_eq!(out1.iterations, out4.iterations, "{alg}");
             assert_eq!(out1.counters.assignment, out4.counters.assignment, "{alg}");
+        }
+    }
+
+    #[test]
+    fn shard_factor_never_changes_bits() {
+        // 1500 rows → the floor admits up to 5 shards; cross shard
+        // counts with thread widths and demand identical bits
+        let ds = blobs(1500, 5, 6, 0.1, 9);
+        let reference = Runner::new(&RunConfig::new(Algorithm::Exp, 6).seed(4).threads(1))
+            .run(&ds)
+            .unwrap();
+        for shards in [1, 2, 5] {
+            for threads in [1, 4] {
+                let cfg = RunConfig::new(Algorithm::Exp, 6)
+                    .seed(4)
+                    .threads(threads)
+                    .scan_shards(shards);
+                let out = Runner::new(&cfg).run(&ds).unwrap();
+                assert_eq!(out.assignments, reference.assignments, "S={shards} T={threads}");
+                assert_eq!(out.counters, reference.counters, "S={shards} T={threads}");
+                assert_eq!(out.mse.to_bits(), reference.mse.to_bits(), "S={shards} T={threads}");
+                assert_eq!(out.report.sched.shards, shards);
+                assert_eq!(
+                    out.report.sched.dispatches,
+                    out.iterations as u64 + 1 // init + one per round
+                );
+            }
         }
     }
 

@@ -1,0 +1,280 @@
+//! Deterministic work-balanced scan scheduling.
+//!
+//! The paper's §4.2 parallelisation splits samples into one contiguous
+//! shard per thread — but its own thesis (bounds tests prune most
+//! distance work) makes per-row cost skewed and *position-correlated*:
+//! rows near moving centroids run full inner loops while settled
+//! regions are near-free, so the slowest shard gates every round. A
+//! [`ScanPlan`] fixes this by **over-decomposition**: carve `n` rows
+//! into `S ≫ w` shards whose geometry is a function of `n` alone
+//! (never the pool width), keep one persistent
+//! [`AssignStep`](crate::algorithms::common::AssignStep) instance per
+//! shard across rounds, and let the pool's dynamic task claiming do
+//! the balancing.
+//!
+//! Claim order is **cost-guided**: shards are offered
+//! longest-expected-first (greedy LPT), ranked by the *previous*
+//! round's per-shard deterministic cost counters (distance
+//! calculations plus rows visited). This is bit-deterministic twice
+//! over — the ranking key is itself deterministic, and claim order
+//! never affects per-row math because merges stay in ascending shard
+//! order (see [`parallel::run_shards`](crate::coordinator::parallel::run_shards)).
+//! Wall-clock measurements feed telemetry only, never scheduling.
+
+use std::time::Duration;
+
+use crate::coordinator::parallel::make_shards_floored;
+use crate::metrics::SchedTelemetry;
+
+/// Sentinel for "pick the shard count automatically" (mirrors
+/// [`AUTO_THREADS`](crate::config::AUTO_THREADS)).
+pub const AUTO_SCAN_SHARDS: usize = 0;
+
+/// Minimum rows per shard (when `n` allows it): out-of-core cursors
+/// hold one resident window per open, so shards below a couple of
+/// lease blocks (`INIT_BLOCK` = 128 rows) would multiply cursor opens
+/// and window refills without adding any balance. Requested shard
+/// counts are clamped so no shard drops under this floor; a dataset
+/// smaller than the floor is a single shard.
+pub const MIN_SHARD_ROWS: usize = 256;
+
+/// Auto geometry: target rows per shard. Small enough that a skewed
+/// region splits across many claimable pieces, large enough that the
+/// per-shard dispatch cost (cursor open + task claim) stays noise.
+pub const TARGET_SHARD_ROWS: usize = 4096;
+
+/// Auto geometry: shard-count ceiling, bounding per-round bookkeeping
+/// (cost sort, merge loop) on huge datasets.
+pub const MAX_AUTO_SHARDS: usize = 256;
+
+/// Resolve a `--scan-shards` spec to a shard count for `n` rows:
+/// `AUTO_SCAN_SHARDS` derives the count from [`TARGET_SHARD_ROWS`],
+/// explicit counts are honoured; both are clamped by the
+/// [`MIN_SHARD_ROWS`] floor. A function of `n` and the spec alone —
+/// never of thread count.
+pub fn shard_count(n: usize, spec: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let want = if spec == AUTO_SCAN_SHARDS {
+        (n / TARGET_SHARD_ROWS).clamp(1, MAX_AUTO_SHARDS)
+    } else {
+        spec
+    };
+    want.clamp(1, (n / MIN_SHARD_ROWS).max(1))
+}
+
+/// Width-independent chunk size for the pooled label scans
+/// (`nearest_labels` / predict): a function of `n` alone, floored at
+/// one lease block and capped at [`MAX_AUTO_SHARDS`] chunks so cursor
+/// opens stay bounded on huge inputs.
+pub fn label_chunk(n: usize) -> usize {
+    const LABEL_CHUNK: usize = 128;
+    LABEL_CHUNK.max(n.div_ceil(MAX_AUTO_SHARDS.max(1)))
+}
+
+/// The over-decomposed scan plan for one engine: fixed shard geometry,
+/// per-shard cost feedback, the LPT claim order derived from it, and
+/// the accumulated [`SchedTelemetry`].
+///
+/// One plan lives as long as its engine; [`record`](ScanPlan::record)
+/// is called after every dispatch with that dispatch's deterministic
+/// per-shard costs (re-ranking the next round's claim order) and
+/// measured shard walls (telemetry only).
+pub struct ScanPlan {
+    /// Global `(lo, len)` per shard, ascending, contiguous.
+    shards: Vec<(usize, usize)>,
+    /// Previous dispatch's deterministic cost per shard.
+    cost: Vec<u64>,
+    /// Claim order: shard indices, most expensive first.
+    order: Vec<usize>,
+    telemetry: SchedTelemetry,
+}
+
+impl ScanPlan {
+    /// Plan a scan over rows `0..n`.
+    pub fn for_rows(n: usize, spec: usize) -> Self {
+        Self::for_range(0, n, spec)
+    }
+
+    /// Plan a scan over the global row range `[lo, lo + len)` — the
+    /// distributed shard servers plan over their owned range, with
+    /// geometry a function of `len` alone so every node's plan is
+    /// reproducible from its range assignment.
+    pub fn for_range(lo: usize, len: usize, spec: usize) -> Self {
+        let shards: Vec<(usize, usize)> =
+            make_shards_floored(len, shard_count(len, spec), MIN_SHARD_ROWS)
+                .into_iter()
+                .map(|(slo, slen)| (lo + slo, slen))
+                .collect();
+        let s = shards.len();
+        ScanPlan {
+            shards,
+            cost: vec![0; s],
+            // zero cost everywhere → identity order (stable sort)
+            order: (0..s).collect(),
+            telemetry: SchedTelemetry {
+                shards: s,
+                ..SchedTelemetry::default()
+            },
+        }
+    }
+
+    /// Shard geometry, ascending by `lo`.
+    pub fn shards(&self) -> &[(usize, usize)] {
+        &self.shards
+    }
+
+    /// Current claim order (shard indices, longest-expected-first).
+    pub fn order(&self) -> &[usize] {
+        &self.order
+    }
+
+    /// Telemetry accumulated so far.
+    pub fn telemetry(&self) -> SchedTelemetry {
+        self.telemetry
+    }
+
+    /// Fold one dispatch's results back into the plan: `costs[s]` is
+    /// shard `s`'s deterministic work measure for the dispatch just
+    /// run (it becomes the LPT key for the next one), `walls[s]` its
+    /// measured wall time (telemetry only). `init` attributes the
+    /// walls to the initial-assignment phase rather than the round
+    /// scans.
+    pub fn record(&mut self, costs: &[u64], walls: &[Duration], init: bool) {
+        debug_assert_eq!(costs.len(), self.shards.len());
+        debug_assert_eq!(walls.len(), self.shards.len());
+        self.cost.copy_from_slice(costs);
+        let prev = std::mem::take(&mut self.order);
+        let mut order: Vec<usize> = (0..self.shards.len()).collect();
+        // stable sort, descending cost: equal-cost shards stay in
+        // ascending index order, so the order is a pure function of
+        // the (deterministic) cost vector
+        order.sort_by(|&a, &b| self.cost[b].cmp(&self.cost[a]).then(a.cmp(&b)));
+        let t = &mut self.telemetry;
+        t.dispatches += 1;
+        if order != prev {
+            t.reorders += 1;
+        }
+        self.order = order;
+        if !walls.is_empty() {
+            let max = walls.iter().max().copied().unwrap_or(Duration::ZERO);
+            let mean = walls.iter().sum::<Duration>() / walls.len() as u32;
+            if init {
+                t.init_max += max;
+                t.init_mean += mean;
+            } else {
+                t.scan_max += max;
+                t.scan_mean += mean;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_is_a_function_of_n_alone() {
+        // same n, any "thread count" context → same plan
+        for n in [1, 100, 4096, 100_000, 1_000_000] {
+            let a = ScanPlan::for_rows(n, AUTO_SCAN_SHARDS);
+            let b = ScanPlan::for_rows(n, AUTO_SCAN_SHARDS);
+            assert_eq!(a.shards(), b.shards());
+        }
+    }
+
+    #[test]
+    fn plan_covers_contiguously() {
+        let cases = [
+            (10_000, AUTO_SCAN_SHARDS),
+            (10_000, 7),
+            (4096, 16),
+            (300, 16),
+            (1, 5),
+        ];
+        for (n, spec) in cases {
+            let plan = ScanPlan::for_rows(n, spec);
+            let mut expect = 0;
+            for &(lo, len) in plan.shards() {
+                assert_eq!(lo, expect, "n={n} spec={spec}");
+                assert!(len > 0);
+                expect += len;
+            }
+            assert_eq!(expect, n, "n={n} spec={spec}");
+        }
+    }
+
+    #[test]
+    fn min_shard_rows_floor_holds() {
+        // asking for 64 shards of a 1000-row set must not produce
+        // 15-row shards: the floor clamps to ≤ 3 shards of ≥ 256 rows
+        for (n, spec) in [(1000, 64), (10_000, 1000), (255, 16)] {
+            let plan = ScanPlan::for_rows(n, spec);
+            if n >= MIN_SHARD_ROWS {
+                for &(_, len) in plan.shards() {
+                    assert!(len >= MIN_SHARD_ROWS, "n={n} spec={spec} len={len}");
+                }
+            } else {
+                assert_eq!(plan.shards().len(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_count_scales_with_n() {
+        assert_eq!(shard_count(0, AUTO_SCAN_SHARDS), 0);
+        assert_eq!(shard_count(300, AUTO_SCAN_SHARDS), 1);
+        assert_eq!(shard_count(16 * TARGET_SHARD_ROWS, AUTO_SCAN_SHARDS), 16);
+        // capped on huge n
+        let huge = 10_000 * TARGET_SHARD_ROWS;
+        assert_eq!(shard_count(huge, AUTO_SCAN_SHARDS), MAX_AUTO_SHARDS);
+    }
+
+    #[test]
+    fn range_plans_offset_globally() {
+        let plan = ScanPlan::for_range(5000, 2048, 4);
+        assert_eq!(plan.shards().len(), 4);
+        assert_eq!(plan.shards()[0].0, 5000);
+        let covered: usize = plan.shards().iter().map(|s| s.1).sum();
+        assert_eq!(covered, 2048);
+        // geometry matches the zero-based plan of the same length
+        let base = ScanPlan::for_rows(2048, 4);
+        for (g, b) in plan.shards().iter().zip(base.shards()) {
+            assert_eq!(g.0, b.0 + 5000);
+            assert_eq!(g.1, b.1);
+        }
+    }
+
+    #[test]
+    fn lpt_order_follows_costs_deterministically() {
+        let mut plan = ScanPlan::for_rows(4 * MIN_SHARD_ROWS, 4);
+        assert_eq!(plan.order(), &[0, 1, 2, 3]);
+        let walls = vec![Duration::from_micros(1); 4];
+        plan.record(&[5, 40, 20, 40], &walls, true);
+        // descending cost, ties broken by ascending shard index
+        assert_eq!(plan.order(), &[1, 3, 2, 0]);
+        let t = plan.telemetry();
+        assert_eq!(t.dispatches, 1);
+        assert_eq!(t.reorders, 1);
+        assert!(t.init_mean > Duration::ZERO);
+        assert_eq!(t.scan_mean, Duration::ZERO);
+        // identical costs next round → no reorder counted
+        plan.record(&[5, 40, 20, 40], &walls, false);
+        let t = plan.telemetry();
+        assert_eq!(t.dispatches, 2);
+        assert_eq!(t.reorders, 1);
+        assert!(t.scan_mean > Duration::ZERO);
+    }
+
+    #[test]
+    fn label_chunk_is_width_independent_and_bounded() {
+        assert_eq!(label_chunk(0), 128);
+        assert_eq!(label_chunk(1000), 128);
+        // huge n: at most MAX_AUTO_SHARDS chunks
+        let n = 10_000_000;
+        let c = label_chunk(n);
+        assert!(n.div_ceil(c) <= MAX_AUTO_SHARDS);
+    }
+}

@@ -51,7 +51,7 @@ use crate::coordinator::runner::RunOutput;
 use crate::coordinator::update::{chunk_len, merge_partial_sums, UpdateState};
 use crate::data::DataSource;
 use crate::error::{EakmError, Result};
-use crate::metrics::{Counters, PhaseTimes, RunReport};
+use crate::metrics::{Counters, PhaseTimes, RunReport, SchedTelemetry};
 use crate::rng::Rng;
 use crate::runtime::pool::WorkerPool;
 use crate::runtime::Runtime;
@@ -471,6 +471,10 @@ pub fn run_dist(rt: &Runtime, cfg: &RunConfig, addrs: &[String]) -> Result<RunOu
         round_times,
         batch: None,
         io,
+        // the scan runs on the remote shard servers; their plans'
+        // telemetry stays node-local (surfaced by each shardd), so the
+        // coordinator-side report carries an empty block
+        sched: SchedTelemetry::default(),
     };
     Ok(RunOutput {
         assignments: engine.assignments().to_vec(),

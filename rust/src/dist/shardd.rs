@@ -38,7 +38,8 @@ use crate::algorithms::common::{AssignStep, Requirements};
 use crate::algorithms::Algorithm;
 use crate::coordinator::groups::GroupData;
 use crate::coordinator::history::HistoryStore;
-use crate::coordinator::parallel::{make_shards, run_shards};
+use crate::coordinator::parallel::run_shards;
+use crate::coordinator::sched::{ScanPlan, AUTO_SCAN_SHARDS};
 use crate::coordinator::round_ctx::RoundCtxOwner;
 use crate::coordinator::update::{chunk_len, scan_chunk, Partial};
 use crate::data::io::{read_bin_header, ElemWidth};
@@ -112,7 +113,7 @@ struct ShardState<'a> {
 /// row range — shards never consult local row counts for geometry.
 struct FitSession {
     algs: Vec<Box<dyn AssignStep>>,
-    shards: Vec<(usize, usize)>,
+    plan: ScanPlan,
     /// Local assignments: index 0 is global row `state.lo`.
     a: Vec<u32>,
     ctx: RoundCtxOwner,
@@ -398,25 +399,25 @@ fn handle_fit_init(
         ctx.history = Some(h.begin(&ctx.centroids));
     }
 
-    // thread-shards over the owned range, offset to global indices so
-    // the algorithms report global sample indices in their moved lists
-    let shards: Vec<(usize, usize)> = make_shards(st.hi - st.lo, st.pool.width())
-        .into_iter()
-        .map(|(slo, len)| (st.lo + slo, len))
-        .collect();
-    let mut algs: Vec<Box<dyn AssignStep>> = shards
+    // over-decomposed plan across the owned range, offset to global
+    // indices so the algorithms report global sample indices in their
+    // moved lists; geometry is a function of the range length alone —
+    // never of this node's pool width
+    let mut plan = ScanPlan::for_range(st.lo, st.hi - st.lo, AUTO_SCAN_SHARDS);
+    let mut algs: Vec<Box<dyn AssignStep>> = plan
+        .shards()
         .iter()
         .map(|&(slo, len)| alg.make_shard(slo, len, k, g))
         .collect();
 
     let mut a = vec![0u32; st.hi - st.lo];
     let sh = ctx.shared(st.src);
-    let (scan_ctr, _) = run_shards(st.pool, &mut algs, &shards, &mut a, &sh, true);
+    let (scan_ctr, _) = run_shards(st.pool, &mut algs, &mut plan, &mut a, &sh, true);
     drop(sh);
 
     let s = FitSession {
         algs,
-        shards,
+        plan,
         a,
         ctx,
         history,
@@ -475,7 +476,7 @@ fn handle_round(
         s.ctx.history = Some(h.advance_pooled(&s.ctx.centroids, &mut build_ctr, st.pool));
     }
     let sh = s.ctx.shared(st.src);
-    let (scan_ctr, moved) = run_shards(st.pool, &mut s.algs, &s.shards, &mut s.a, &sh, false);
+    let (scan_ctr, moved) = run_shards(st.pool, &mut s.algs, &mut s.plan, &mut s.a, &sh, false);
     drop(sh);
     let partials = if s.want_partials && s.req.full_update {
         chunk_partials(st, s, d)

@@ -501,7 +501,15 @@ impl From<&crate::metrics::RunReport> for Json {
             .field("q_centroid", r.counters.centroid)
             .field("q_displacement", r.counters.displacement)
             .field("q_init", r.counters.init)
-            .field("q_au", r.counters.total());
+            .field("q_au", r.counters.total())
+            .field("sched_shards", r.sched.shards)
+            .field("sched_dispatches", r.sched.dispatches)
+            .field("sched_reorders", r.sched.reorders)
+            .field("sched_init_max_secs", r.sched.init_max.as_secs_f64())
+            .field("sched_init_mean_secs", r.sched.init_mean.as_secs_f64())
+            .field("sched_scan_max_secs", r.sched.scan_max.as_secs_f64())
+            .field("sched_scan_mean_secs", r.sched.scan_mean.as_secs_f64())
+            .field("sched_imbalance", r.sched.imbalance());
         let json = match &r.batch {
             Some(b) => json
                 .field("batch_size", b.batch_size)
@@ -693,12 +701,16 @@ mod tests {
             round_times: vec![],
             batch: None,
             io: None,
+            sched: Default::default(),
         };
         let s = Json::from(&r).to_string();
         assert!(s.contains(r#""algorithm":"exp""#));
         assert!(s.contains(r#""wall_secs":1.5"#));
         assert!(s.contains(r#""threads":2"#));
         assert!(s.contains(r#""scan_secs":0"#));
+        // sched telemetry is always present (imbalance defaults to 1)
+        assert!(s.contains(r#""sched_shards":0"#));
+        assert!(s.contains(r#""sched_imbalance":1"#));
         assert!(!s.contains("batch_size"));
         assert!(!s.contains("io_bytes_read"));
         let r = crate::metrics::RunReport {
@@ -712,6 +724,12 @@ mod tests {
                 bytes_read: 8192,
                 window_refills: 1,
             }),
+            sched: crate::metrics::SchedTelemetry {
+                shards: 16,
+                dispatches: 6,
+                reorders: 2,
+                ..Default::default()
+            },
             ..r
         };
         let s = Json::from(&r).to_string();
@@ -720,5 +738,8 @@ mod tests {
         assert!(s.contains(r#""io_blocks_leased":3"#));
         assert!(s.contains(r#""io_bytes_read":8192"#));
         assert!(s.contains(r#""io_window_refills":1"#));
+        assert!(s.contains(r#""sched_shards":16"#));
+        assert!(s.contains(r#""sched_dispatches":6"#));
+        assert!(s.contains(r#""sched_reorders":2"#));
     }
 }

@@ -93,6 +93,72 @@ impl IoTelemetry {
     }
 }
 
+/// Scan-scheduler telemetry: how the over-decomposed
+/// [`ScanPlan`](crate::coordinator::sched::ScanPlan) behaved over the
+/// run. Shard *walls* are accumulated across dispatches (one dispatch =
+/// one pooled assignment scan), split by phase: `init` covers the
+/// initial full assignment, `scan` every subsequent round. The
+/// max/mean ratio is the straggler signal — how much longer the
+/// slowest shard ran than the average one each round.
+///
+/// Wall times are measured, not derived, so they vary run to run;
+/// everything that feeds back into scheduling (the per-shard cost
+/// counters driving LPT order) is deterministic. Telemetry never
+/// affects results.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedTelemetry {
+    /// Shards in the scan plan (a function of `n` alone).
+    pub shards: usize,
+    /// Pooled scan dispatches (initial assignment + one per round).
+    pub dispatches: u64,
+    /// Dispatches whose LPT claim order differed from the previous
+    /// dispatch's — how often the cost feedback actually re-ranked
+    /// shards.
+    pub reorders: u64,
+    /// Slowest-shard wall time, summed over init dispatches.
+    pub init_max: Duration,
+    /// Mean shard wall time, summed over init dispatches.
+    pub init_mean: Duration,
+    /// Slowest-shard wall time, summed over round-scan dispatches.
+    pub scan_max: Duration,
+    /// Mean shard wall time, summed over round-scan dispatches.
+    pub scan_mean: Duration,
+}
+
+impl SchedTelemetry {
+    /// Straggler ratio for the round scans: accumulated slowest-shard
+    /// wall over accumulated mean shard wall (falls back to the init
+    /// dispatch when no rounds ran; 1.0 when nothing was measured).
+    /// 1.0 = perfectly balanced; `w` = one shard gated every round of
+    /// a `w`-wide pool.
+    pub fn imbalance(&self) -> f64 {
+        let (max, mean) = if self.scan_mean > Duration::ZERO {
+            (self.scan_max, self.scan_mean)
+        } else {
+            (self.init_max, self.init_mean)
+        };
+        if mean > Duration::ZERO {
+            max.as_secs_f64() / mean.as_secs_f64()
+        } else {
+            1.0
+        }
+    }
+
+    /// Accumulate another run's scheduler telemetry (the mini-batch
+    /// driver folds each per-batch engine's block into the fit-wide
+    /// report). Shard counts take the max — batches share a geometry
+    /// policy but may differ in `n`.
+    pub fn merge(&mut self, other: &SchedTelemetry) {
+        self.shards = self.shards.max(other.shards);
+        self.dispatches += other.dispatches;
+        self.reorders += other.reorders;
+        self.init_max += other.init_max;
+        self.init_mean += other.init_mean;
+        self.scan_max += other.scan_max;
+        self.scan_mean += other.scan_mean;
+    }
+}
+
 /// Batch-schedule telemetry for a mini-batch fit (`None` on exact
 /// full-batch runs): the resolved knobs plus the realised schedule.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -137,6 +203,9 @@ pub struct RunReport {
     pub batch: Option<BatchTelemetry>,
     /// Out-of-core I/O telemetry (`None` for resident sources).
     pub io: Option<IoTelemetry>,
+    /// Scan-scheduler telemetry (zeroed when no scan was dispatched,
+    /// e.g. a report reloaded from an old model file).
+    pub sched: SchedTelemetry,
 }
 
 impl RunReport {
@@ -158,8 +227,18 @@ impl RunReport {
             ),
             None => String::new(),
         };
+        let sched = if self.sched.dispatches > 0 {
+            format!(
+                " sched: S={} reord={} imb={:.2}",
+                self.sched.shards,
+                self.sched.reorders,
+                self.sched.imbalance()
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "{:<10} {:<14} k={:<5} iters={:<5} conv={} mse={:.6} wall={:?} q_a={} q_au={} thr={} scan={:?} upd={:?} build={:?}{batch}{io}",
+            "{:<10} {:<14} k={:<5} iters={:<5} conv={} mse={:.6} wall={:?} q_a={} q_au={} thr={} scan={:?} upd={:?} build={:?}{sched}{batch}{io}",
             self.algorithm,
             self.dataset,
             self.k,
@@ -223,12 +302,14 @@ mod tests {
             round_times: vec![],
             batch: None,
             io: None,
+            sched: SchedTelemetry::default(),
         };
         let s = r.summary();
         assert!(s.contains("exp") && s.contains("birch") && s.contains("iters=42"));
         assert!(s.contains("thr=4"));
         assert!(!s.contains("batch="));
         assert!(!s.contains("io:"));
+        assert!(!s.contains("sched:"));
         let r = RunReport {
             batch: Some(BatchTelemetry {
                 batch_size: 256,
@@ -240,11 +321,65 @@ mod tests {
                 bytes_read: 4096,
                 window_refills: 2,
             }),
+            sched: SchedTelemetry {
+                shards: 32,
+                dispatches: 43,
+                reorders: 5,
+                init_max: Duration::from_millis(4),
+                init_mean: Duration::from_millis(2),
+                scan_max: Duration::from_millis(30),
+                scan_mean: Duration::from_millis(20),
+            },
             ..r
         };
         let s = r.summary();
         assert!(s.contains("batch=256→1024×2.00"));
         assert!(s.contains("io: blocks=7 bytes=4096 refills=2"));
+        assert!(s.contains("sched: S=32 reord=5 imb=1.50"));
+    }
+
+    #[test]
+    fn sched_imbalance_ratio() {
+        // nothing measured → balanced by definition
+        assert_eq!(SchedTelemetry::default().imbalance(), 1.0);
+        // rounds dominate when present
+        let t = SchedTelemetry {
+            shards: 8,
+            dispatches: 3,
+            reorders: 1,
+            init_max: Duration::from_millis(100),
+            init_mean: Duration::from_millis(10),
+            scan_max: Duration::from_millis(40),
+            scan_mean: Duration::from_millis(20),
+        };
+        assert!((t.imbalance() - 2.0).abs() < 1e-9);
+        // init-only run falls back to the init dispatch
+        let t = SchedTelemetry {
+            scan_max: Duration::ZERO,
+            scan_mean: Duration::ZERO,
+            ..t
+        };
+        assert!((t.imbalance() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sched_merge_accumulates() {
+        let a = SchedTelemetry {
+            shards: 8,
+            dispatches: 2,
+            reorders: 1,
+            init_max: Duration::from_millis(1),
+            init_mean: Duration::from_millis(1),
+            scan_max: Duration::from_millis(6),
+            scan_mean: Duration::from_millis(3),
+        };
+        let mut b = SchedTelemetry { shards: 4, ..a };
+        b.merge(&a);
+        assert_eq!(b.shards, 8); // max, not sum
+        assert_eq!(b.dispatches, 4);
+        assert_eq!(b.reorders, 2);
+        assert_eq!(b.scan_max, Duration::from_millis(12));
+        assert_eq!(b.scan_mean, Duration::from_millis(6));
     }
 
     #[test]

@@ -42,7 +42,7 @@ use crate::error::{EakmError, Result};
 use crate::init::InitMethod;
 use crate::json::Json;
 use crate::linalg::{sqdist, sqnorms_rows};
-use crate::metrics::{BatchTelemetry, Counters, PhaseTimes, RunReport};
+use crate::metrics::{BatchTelemetry, Counters, PhaseTimes, RunReport, SchedTelemetry};
 use crate::runtime::Runtime;
 
 /// Model-file format marker and version.
@@ -121,6 +121,15 @@ impl Kmeans {
     /// [`batch_size`](Kmeans::batch_size).
     pub fn batch_growth(mut self, batch_growth: f64) -> Self {
         self.cfg.batch_growth = batch_growth;
+        self
+    }
+
+    /// Shards in the over-decomposed scan plan
+    /// ([`AUTO_SCAN_SHARDS`](crate::coordinator::sched::AUTO_SCAN_SHARDS)
+    /// = 0 derives the count from `n`). A scheduling knob only: the
+    /// fitted model is bit-identical at any value.
+    pub fn scan_shards(mut self, scan_shards: usize) -> Self {
+        self.cfg.scan_shards = scan_shards;
         self
     }
 
@@ -343,6 +352,18 @@ impl FittedModel {
                     Json::Arr(b.schedule.iter().map(|&s| Json::from(s)).collect()),
                 );
         }
+        if r.sched.dispatches > 0 {
+            // the fit's scheduling record rides along (loaded models
+            // still tell how their training scan balanced)
+            json = json
+                .field("sched_shards", r.sched.shards)
+                .field("sched_dispatches", r.sched.dispatches)
+                .field("sched_reorders", r.sched.reorders)
+                .field("sched_init_max_secs", r.sched.init_max.as_secs_f64())
+                .field("sched_init_mean_secs", r.sched.init_mean.as_secs_f64())
+                .field("sched_scan_max_secs", r.sched.scan_max.as_secs_f64())
+                .field("sched_scan_mean_secs", r.sched.scan_mean.as_secs_f64());
+        }
         json.field(
             "centroids",
             Json::Arr(self.centroids.iter().map(|&v| Json::Num(v)).collect()),
@@ -424,6 +445,29 @@ impl FittedModel {
                 })
             }
         };
+        // sched fields are optional (older model files omit them) and
+        // degrade to zeros — they are a record, not model state
+        let secs = |key: &str| {
+            json.get(key)
+                .and_then(Json::as_f64)
+                .and_then(|w| Duration::try_from_secs_f64(w).ok())
+                .unwrap_or(Duration::ZERO)
+        };
+        let sched = SchedTelemetry {
+            shards: json.get("sched_shards").and_then(Json::as_usize).unwrap_or(0),
+            dispatches: json
+                .get("sched_dispatches")
+                .and_then(Json::as_usize)
+                .unwrap_or(0) as u64,
+            reorders: json
+                .get("sched_reorders")
+                .and_then(Json::as_usize)
+                .unwrap_or(0) as u64,
+            init_max: secs("sched_init_max_secs"),
+            init_mean: secs("sched_init_mean_secs"),
+            scan_max: secs("sched_scan_max_secs"),
+            scan_mean: secs("sched_scan_mean_secs"),
+        };
         let report = RunReport {
             algorithm: json
                 .get("algorithm")
@@ -461,6 +505,7 @@ impl FittedModel {
             // I/O telemetry is transient — it describes one fit's reads,
             // not the model, so it is not persisted
             io: None,
+            sched,
         };
         Ok(FittedModel::from_parts(centroids, d, report))
     }
@@ -687,6 +732,12 @@ mod tests {
         let bits = |c: &[f64]| c.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(back.centroids()), bits(model.centroids()));
         assert_eq!(bits(&back.cnorms), bits(&model.cnorms));
+        // the fit's scheduling record rides along
+        let sched = model.report().sched;
+        assert!(sched.dispatches > 0);
+        assert_eq!(back.report().sched.shards, sched.shards);
+        assert_eq!(back.report().sched.dispatches, sched.dispatches);
+        assert_eq!(back.report().sched.reorders, sched.reorders);
     }
 
     #[test]

@@ -11,10 +11,14 @@
 //!
 //! Every helper here preserves bit-identical results across pool widths:
 //!
-//! * [`WorkerPool::for_each_chunk`] and [`WorkerPool::run_tasks`] hand
-//!   out work dynamically, but each item is processed exactly once with
-//!   math that does not depend on which worker ran it — callers only use
-//!   them for element-wise (non-reducing) writes or per-task state.
+//! * [`WorkerPool::for_each_chunk`], [`WorkerPool::run_tasks`] and
+//!   [`WorkerPool::run_tasks_ordered`] hand out work dynamically, but
+//!   each item is processed exactly once with math that does not depend
+//!   on which worker ran it — callers only use them for element-wise
+//!   (non-reducing) writes or per-task state. `run_tasks_ordered` goes
+//!   one step further: the *claim order* itself is caller-chosen (the
+//!   scan scheduler's LPT ranking), which is free for the same reason —
+//!   order shapes overlap in time, never a result.
 //! * Reductions (counter merges, partial centroid sums) are performed by
 //!   the *callers*, serially, in shard/chunk order, with chunk geometry
 //!   derived from the item count alone — never from the pool width.
@@ -199,6 +203,41 @@ impl WorkerPool {
         });
     }
 
+    /// As [`WorkerPool::for_each_chunk`], but with the chunk size fixed
+    /// by the caller instead of scaled by the pool width — chunk
+    /// *geometry* is then a pure function of `(n, chunk)`, which the
+    /// label scans use to keep cursor-open behaviour identical at any
+    /// width (see [`sched::label_chunk`](crate::coordinator::sched::label_chunk)).
+    /// Claiming is still dynamic; callers must restrict `f` to
+    /// element-wise writes as for `for_each_chunk`.
+    pub fn for_each_chunk_exact<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        if self.handles.is_empty() || n <= chunk {
+            // same chunk boundaries serially, so per-chunk side effects
+            // (cursor opens, window refills) match the parallel path
+            let mut lo = 0;
+            while lo < n {
+                f(lo, (lo + chunk).min(n));
+                lo += chunk;
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        self.broadcast(|_w| loop {
+            let lo = next.fetch_add(chunk, Ordering::Relaxed);
+            if lo >= n {
+                break;
+            }
+            f(lo, (lo + chunk).min(n));
+        });
+    }
+
     /// Run `f(i, &mut tasks[i])` for every task, each exactly once, with
     /// tasks claimed dynamically by whichever participant is free.
     pub fn run_tasks<T, F>(&self, tasks: &mut [T], f: F)
@@ -224,6 +263,57 @@ impl WorkerPool {
                         break;
                     }
                     // Sound: the atomic hands each index to exactly one
+                    // participant.
+                    let task = unsafe { &mut list.range(i, i + 1)[0] };
+                    f(i, task);
+                });
+            }
+        }
+    }
+
+    /// As [`WorkerPool::run_tasks`], but tasks are *claimed* in the
+    /// order given by `order` (a permutation of `0..tasks.len()`): the
+    /// next free participant takes `tasks[order[seq]]` for the next
+    /// unclaimed `seq`. The scan scheduler passes its greedy LPT
+    /// ranking here so expensive shards start first. Claim order never
+    /// affects results — each task still runs exactly once with its own
+    /// state — it only shapes which tasks overlap in time.
+    pub fn run_tasks_ordered<T, F>(&self, tasks: &mut [T], order: &[usize], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        debug_assert_eq!(order.len(), tasks.len());
+        debug_assert!({
+            let mut seen = vec![false; tasks.len()];
+            order
+                .iter()
+                .all(|&i| i < seen.len() && !std::mem::replace(&mut seen[i], true))
+        });
+        match tasks {
+            [] => {}
+            [one] => f(0, one),
+            many => {
+                if self.handles.is_empty() {
+                    let list = SharedSliceMut::new(many);
+                    for &i in order {
+                        // Sound: `order` is a permutation, so each task
+                        // is borrowed exactly once.
+                        let task = unsafe { &mut list.range(i, i + 1)[0] };
+                        f(i, task);
+                    }
+                    return;
+                }
+                let list = SharedSliceMut::new(many);
+                let next = AtomicUsize::new(0);
+                self.broadcast(|_w| loop {
+                    let seq = next.fetch_add(1, Ordering::Relaxed);
+                    if seq >= order.len() {
+                        break;
+                    }
+                    let i = order[seq];
+                    // Sound: the atomic hands each seq — and `order` is
+                    // a permutation, so each index — to exactly one
                     // participant.
                     let task = unsafe { &mut list.range(i, i + 1)[0] };
                     f(i, task);
@@ -383,6 +473,56 @@ mod tests {
             count.fetch_add(hi - lo, Ordering::Relaxed);
         });
         assert_eq!(count.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn for_each_chunk_exact_covers_exactly_once() {
+        for threads in [1, 3, 8] {
+            let pool = WorkerPool::new(threads);
+            let n = 1013;
+            let mut seen = vec![0u8; n];
+            {
+                let cells = SharedSliceMut::new(&mut seen);
+                pool.for_each_chunk_exact(n, 64, |lo, hi| {
+                    // chunk geometry is width-independent: every chunk
+                    // but the tail spans exactly 64 rows
+                    assert!(hi - lo == 64 || hi == n);
+                    assert_eq!(lo % 64, 0);
+                    let part = unsafe { cells.range(lo, hi) };
+                    for v in part.iter_mut() {
+                        *v += 1;
+                    }
+                });
+            }
+            assert!(seen.iter().all(|&v| v == 1), "threads={threads}");
+        }
+        WorkerPool::new(4).for_each_chunk_exact(0, 8, |_, _| panic!("no work expected"));
+    }
+
+    #[test]
+    fn run_tasks_ordered_runs_each_task_once() {
+        for threads in [1, 2, 8] {
+            let pool = WorkerPool::new(threads);
+            let mut tasks: Vec<u32> = vec![0; 57];
+            // reverse claim order: results must be unaffected
+            let order: Vec<usize> = (0..tasks.len()).rev().collect();
+            pool.run_tasks_ordered(&mut tasks, &order, |i, t| *t += 1 + i as u32);
+            for (i, t) in tasks.iter().enumerate() {
+                assert_eq!(*t, 1 + i as u32, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_tasks_ordered_serial_claims_in_order() {
+        let pool = WorkerPool::new(1);
+        let mut tasks: Vec<u32> = vec![0; 5];
+        let order = [3usize, 1, 4, 0, 2];
+        let claimed = Mutex::new(Vec::new());
+        pool.run_tasks_ordered(&mut tasks, &order, |i, _| {
+            claimed.lock().unwrap().push(i);
+        });
+        assert_eq!(*claimed.lock().unwrap(), order);
     }
 
     #[test]

@@ -732,6 +732,7 @@ fn dispatch(req: Request, sink: &mut dyn ReplySink, ctx: &Ctx<'_>) -> Done {
         }
         Request::Stats => {
             let model = ctx.cell.current();
+            let sched = model.report().sched;
             let stats = ctx
                 .telemetry
                 .snapshot()
@@ -743,6 +744,12 @@ fn dispatch(req: Request, sink: &mut dyn ReplySink, ctx: &Ctx<'_>) -> Done {
                 .field("threads", ctx.threads)
                 .field("queue_depth", ctx.cfg.queue_depth)
                 .field("max_batch_rows", ctx.cfg.max_batch_rows)
+                // scheduling telemetry of the fit that produced the
+                // served model (zeros for loaded models persisted
+                // before the sched block existed)
+                .field("fit_sched_shards", sched.shards)
+                .field("fit_sched_reorders", sched.reorders as usize)
+                .field("fit_sched_imbalance", sched.imbalance())
                 .field("uptime_secs", ctx.started.elapsed().as_secs_f64());
             ctx.telemetry.op_done(Op::Stats, t0.elapsed());
             Done {

@@ -1,0 +1,174 @@
+//! Scan-scheduling bit-identity: the over-decomposed, cost-guided scan
+//! plan is a *scheduling* change only — assignments, MSE bits, and
+//! bound counters must be identical across every thread width × shard
+//! count × data source, for the exact and mini-batch engines. This is
+//! the acceptance gate for the scheduler; CI runs it on every commit.
+
+use std::path::PathBuf;
+
+use eakm::algorithms::testutil::assert_scan_plan_invariants;
+use eakm::coordinator::sched::{AUTO_SCAN_SHARDS, MIN_SHARD_ROWS};
+use eakm::data::ooc::{open_ooc, OocMode};
+use eakm::data::{io, Dataset};
+use eakm::prelude::*;
+
+const THREADS: [usize; 3] = [1, 2, 8];
+// explicit shard counts; n is chosen ≥ 16 × MIN_SHARD_ROWS so the
+// largest spec survives the floor un-clamped
+const SHARDS: [usize; 3] = [1, 4, 16];
+
+fn tmpdir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("eakm-sched-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A dataset written to disk plus the same data resident in memory.
+fn fixture(name: &str, n: usize, d: usize, seed: u64) -> (PathBuf, Dataset) {
+    let ds = eakm::data::synth::blobs(n, d, 6, 0.25, seed);
+    let path = tmpdir().join(name);
+    io::save_bin(&ds, &path).unwrap();
+    let mem = io::load_bin(&path).unwrap();
+    (path, mem)
+}
+
+fn modes() -> Vec<OocMode> {
+    let mut modes = vec![OocMode::Chunked];
+    if eakm::data::ooc::mmap_supported() {
+        modes.push(OocMode::Mmap);
+    }
+    modes
+}
+
+#[test]
+fn exact_engine_bits_survive_the_scheduling_matrix() {
+    let n = 16 * MIN_SHARD_ROWS; // 4096 rows: 16 explicit shards allowed
+    let (path, mem) = fixture("exact.ekb", n, 4, 3);
+    // reference: serial, single shard, in memory
+    let base = RunConfig::new(Algorithm::ExpNs, 6).seed(7).max_iters(12);
+    let want = Runner::new(&base.clone().threads(1).scan_shards(1)).run(&mem).unwrap();
+    for &threads in &THREADS {
+        for &shards in &SHARDS {
+            let cfg = base.clone().threads(threads).scan_shards(shards);
+            let got = Runner::new(&cfg).run(&mem).unwrap();
+            assert_eq!(got.assignments, want.assignments, "t={threads} s={shards}");
+            assert_eq!(got.mse.to_bits(), want.mse.to_bits(), "t={threads} s={shards}");
+            assert_eq!(got.counters, want.counters, "t={threads} s={shards}");
+            assert_eq!(got.iterations, want.iterations);
+            // the plan honoured the explicit spec and reported it
+            assert_eq!(got.report.sched.shards, shards);
+            assert!(got.report.sched.dispatches > 0);
+            assert!(got.report.sched.imbalance() >= 1.0);
+            for mode in modes() {
+                // 128-row window: ooc cursors refill many times per round
+                let src = open_ooc(&path, mode, 128).unwrap();
+                let ooc = Runner::new(&cfg).run(&*src).unwrap();
+                assert_eq!(ooc.assignments, want.assignments, "{mode} t={threads} s={shards}");
+                assert_eq!(ooc.mse.to_bits(), want.mse.to_bits(), "{mode} t={threads} s={shards}");
+                assert_eq!(ooc.counters, want.counters, "{mode} t={threads} s={shards}");
+            }
+        }
+    }
+}
+
+#[test]
+fn minibatch_engine_bits_survive_the_scheduling_matrix() {
+    let n = 16 * MIN_SHARD_ROWS;
+    let (path, mem) = fixture("minibatch.ekb", n, 4, 5);
+    let mut base = RunConfig::new(Algorithm::ExpNs, 6).seed(11).batch_size(1024);
+    base.batch_growth = 2.0;
+    base.max_iters = 40;
+    let want = Runner::new(&base.clone().threads(1).scan_shards(1)).run(&mem).unwrap();
+    for &threads in &THREADS {
+        for &shards in &SHARDS {
+            let cfg = base.clone().threads(threads).scan_shards(shards);
+            let got = Runner::new(&cfg).run(&mem).unwrap();
+            assert_eq!(got.assignments, want.assignments, "t={threads} s={shards}");
+            assert_eq!(got.mse.to_bits(), want.mse.to_bits());
+            assert_eq!(got.counters, want.counters);
+            assert_eq!(got.report.batch, want.report.batch, "same batch schedule");
+            assert!(got.report.sched.dispatches > 0);
+            for mode in modes() {
+                let src = open_ooc(&path, mode, 128).unwrap();
+                let ooc = Runner::new(&cfg).run(&*src).unwrap();
+                assert_eq!(ooc.assignments, want.assignments, "{mode} t={threads} s={shards}");
+                assert_eq!(ooc.mse.to_bits(), want.mse.to_bits());
+                assert_eq!(ooc.counters, want.counters);
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_geometry_is_width_independent() {
+    // auto shards must give the same plan — and the same bits — at any
+    // thread width, because geometry is a function of n alone
+    let ds = eakm::data::synth::blobs(3 * MIN_SHARD_ROWS, 5, 6, 0.25, 17);
+    let cfg = RunConfig::new(Algorithm::Sta, 6).seed(9).max_iters(20);
+    let want = Runner::new(&cfg.clone().threads(1)).run(&ds).unwrap();
+    for &threads in &THREADS {
+        let got = Runner::new(&cfg.clone().threads(threads)).run(&ds).unwrap();
+        assert_eq!(got.assignments, want.assignments, "t={threads}");
+        assert_eq!(got.mse.to_bits(), want.mse.to_bits());
+        assert_eq!(got.counters, want.counters);
+        assert_eq!(got.report.sched.shards, want.report.sched.shards);
+    }
+}
+
+#[test]
+fn lpt_order_telemetry_is_deterministic_across_runs() {
+    // the claim order is ranked by deterministic cost counters, so
+    // repeated runs must reorder identically — reorders is part of the
+    // reproducible telemetry, not a wall-clock artefact
+    let ds = eakm::data::synth::blobs(16 * MIN_SHARD_ROWS, 4, 6, 0.25, 23);
+    let mut cfg = RunConfig::new(Algorithm::ExpNs, 6).seed(13).threads(8).scan_shards(16);
+    cfg.max_iters = 15;
+    let first = Runner::new(&cfg).run(&ds).unwrap();
+    for _ in 0..2 {
+        let again = Runner::new(&cfg).run(&ds).unwrap();
+        assert_eq!(again.assignments, first.assignments);
+        assert_eq!(again.report.sched.shards, first.report.sched.shards);
+        assert_eq!(again.report.sched.dispatches, first.report.sched.dispatches);
+        assert_eq!(again.report.sched.reorders, first.report.sched.reorders);
+    }
+}
+
+#[test]
+fn report_json_carries_scheduling_telemetry() {
+    let ds = eakm::data::synth::blobs(2 * MIN_SHARD_ROWS, 3, 4, 0.25, 29);
+    let cfg = RunConfig::new(Algorithm::Sta, 4).seed(1).scan_shards(2);
+    let out = Runner::new(&cfg).run(&ds).unwrap();
+    let json = eakm::json::Json::from(&out.report).to_string();
+    for key in [
+        "\"sched_shards\":2",
+        "\"sched_dispatches\"",
+        "\"sched_reorders\"",
+        "\"sched_imbalance\"",
+        "\"sched_scan_max_secs\"",
+    ] {
+        assert!(json.contains(key), "report JSON misses {key}: {json}");
+    }
+}
+
+#[test]
+fn scan_plan_geometry_invariants_hold() {
+    for n in [0, 1, 255, 256, 300, 4096, 10_000, 100_000, 1_000_000] {
+        for spec in [AUTO_SCAN_SHARDS, 1, 4, 16, 1000] {
+            assert_scan_plan_invariants(n, spec);
+        }
+    }
+}
+
+#[test]
+fn kmeans_builder_accepts_scan_shards() {
+    let ds = eakm::data::synth::blobs(1024, 3, 4, 0.3, 31);
+    let rt = Runtime::new(2);
+    let want = Kmeans::new(4).seed(5).fit(&rt, &ds).unwrap();
+    let got = Kmeans::new(4).seed(5).scan_shards(4).fit(&rt, &ds).unwrap();
+    let bits = |c: &[f64]| c.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(got.centroids()), bits(want.centroids()));
+    assert_eq!(got.report().sched.shards, 4);
+    // predict path is width-independent too
+    let labels = got.predict(&rt, &ds).unwrap();
+    assert_eq!(labels, want.predict(&rt, &ds).unwrap());
+}
