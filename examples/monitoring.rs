@@ -1,0 +1,151 @@
+//! Monitoring: the unified observability layer, end-to-end.
+//!
+//! 1. a fit runs with a [`FitObserver`](eakm::obs::FitObserver): every
+//!    round lands in a bounded event ring, tagged with the trace ID
+//!    minted at the front door — the same stream `eakm run --progress`
+//!    prints to stderr;
+//! 2. the fitted model goes behind the serve tier, which exposes the
+//!    whole telemetry surface with no extra wiring: `GET /metrics`
+//!    (Prometheus text exposition) and `GET /v1/events?since=` (the
+//!    structured event drain), both answering even when admission
+//!    control is rejecting traffic;
+//! 3. the `stats` op reports histogram-derived p50/p99 op latencies,
+//!    computed server-side from log-bucketed histograms.
+//!
+//! Observation is strictly read-only: the results are bit-identical
+//! with or without it (asserted below against an unobserved fit).
+//!
+//! ```sh
+//! cargo run --release --example monitoring
+//! ```
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use eakm::json::Json;
+use eakm::obs::{FitObserver, TraceId, Value};
+use eakm::prelude::*;
+use eakm::serve::client::{self, Client};
+
+/// One-shot `GET` against the serve HTTP shim; returns the body.
+fn http_get(addr: SocketAddr, target: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .expect("set timeout");
+    let req = format!("GET {target} HTTP/1.1\r\nHost: demo\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes()).expect("send");
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("recv");
+    let text = String::from_utf8(raw).expect("utf8");
+    text.split_once("\r\n\r\n").expect("body").1.to_string()
+}
+
+fn main() {
+    let (d, k) = (8, 40);
+    let train = eakm::data::synth::blobs(20_000, d, k, 0.05, 1);
+    let rt = Runtime::auto();
+
+    // ── an observed fit: every round lands in the event ring ────────
+    let observer = FitObserver::new(TraceId::mint(), false);
+    let events = observer.events().clone();
+    let trace = observer.trace();
+    let km = Kmeans::new(k).algorithm(Algorithm::Auto).seed(7);
+    let observed = km
+        .fit_observed(&rt, &train, Some(std::sync::Arc::new(observer)))
+        .expect("observed fit");
+    let rounds = events.since(0);
+    let total: u64 = rounds
+        .iter()
+        .filter_map(|e| match e.field("dist_total") {
+            Some(Value::U64(v)) => Some(*v),
+            _ => None,
+        })
+        .sum();
+    println!(
+        "observed fit: {} rounds, {} distance calcs, trace {}",
+        rounds.len(),
+        total,
+        trace,
+    );
+
+    // observation is read-only — an unobserved fit agrees to the bit
+    let plain = km.fit(&rt, &train).expect("plain fit");
+    assert_eq!(plain.report().mse.to_bits(), observed.report().mse.to_bits());
+    println!("bit-identity: observed fit matches the unobserved fit exactly");
+
+    // ── the server: /metrics and /v1/events come for free ───────────
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let cfg = ServeConfig::default();
+    let server = thread::spawn(move || {
+        let rt = Runtime::auto();
+        eakm::serve::serve(&rt, observed, &cfg, |addr| {
+            addr_tx.send(addr).expect("announce address");
+        })
+        .expect("serve failed")
+    });
+    let addr = addr_rx.recv().expect("server address");
+    println!("server is up on {addr}");
+
+    // traffic, so the counters and latency histograms are non-trivial
+    let queries = eakm::data::synth::blobs(256, d, k, 0.08, 99);
+    let mut cl = Client::connect(addr).expect("connect");
+    for chunk in queries.raw().chunks(32 * d) {
+        let reply = cl.call(&client::predict_request(chunk, d)).expect("predict");
+        assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+    }
+
+    // ── GET /metrics: the Prometheus text exposition ────────────────
+    let metrics = http_get(addr, "/metrics");
+    assert!(metrics.contains("eakm_serve_ops_total{op=\"predict\"} 8\n"));
+    let interesting = [
+        "eakm_serve_ops_total{op=\"predict\"}",
+        "eakm_serve_op_latency_p99_micros{op=\"predict\"}",
+        "eakm_fit_distance_calcs_per_point_round{site=\"total\"",
+        "eakm_fit_sched_imbalance",
+    ];
+    for line in metrics.lines() {
+        if interesting.iter().any(|p| line.starts_with(p)) {
+            println!("/metrics → {line}");
+        }
+    }
+
+    // ── GET /v1/events: the structured event drain ──────────────────
+    let drained = Json::parse(http_get(addr, "/v1/events").trim_end()).expect("events json");
+    let list = drained.get("events").and_then(Json::as_arr).expect("events");
+    let last = drained.get("last").and_then(Json::as_usize).expect("last");
+    println!("/v1/events → {} events (cursor {last})", list.len());
+    // the batcher tags every executed batch with the trace minted when
+    // its first request entered the server
+    let batch = list
+        .iter()
+        .find(|e| e.get("kind").and_then(Json::as_str) == Some("batch"))
+        .expect("batch event");
+    println!("first batch event: {batch}");
+    // incremental drain from the cursor: empty until new events arrive
+    let body = http_get(addr, &format!("/v1/events?since={last}"));
+    let again = Json::parse(body.trim_end()).expect("events json");
+    assert_eq!(again.get("events").and_then(Json::as_arr).map(Vec::len), Some(0));
+
+    // ── the stats op: server-computed per-op latency quantiles ──────
+    let stats = cl.call(&client::stats_request()).expect("stats");
+    let s = stats.get("stats").expect("stats payload");
+    let p50 = s.get("predict_p50_micros").and_then(Json::as_usize);
+    let p99 = s.get("predict_p99_micros").and_then(Json::as_usize);
+    println!(
+        "stats → predict p50 {}µs, p99 {}µs (histogram-derived, server-side)",
+        p50.expect("p50"),
+        p99.expect("p99"),
+    );
+
+    // ── clean shutdown ──────────────────────────────────────────────
+    let bye = cl.call(&client::shutdown_request()).expect("shutdown");
+    assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    let final_stats = server.join().expect("server thread failed");
+    assert_eq!(final_stats.predicts, 8);
+    assert!(final_stats.predict_latency.p99_micros >= 1);
+    println!("clean shutdown after {} predicts", final_stats.predicts);
+}

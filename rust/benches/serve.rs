@@ -32,7 +32,8 @@ use eakm::json::Json;
 use eakm::model::{FittedModel, Kmeans};
 use eakm::runtime::Runtime;
 use eakm::serve::client::{self, Client};
-use eakm::serve::{serve, ServeConfig, ServeStats};
+use eakm::serve::state::Op;
+use eakm::serve::{serve, ServeConfig, ServeStats, ServeTelemetry};
 
 const CLIENTS: usize = 8;
 const ROWS_PER_REQ: usize = 4;
@@ -40,6 +41,10 @@ const SERVER_THREADS: usize = 4;
 const MAX_BATCH_SWEEP: [usize; 3] = [1, 64, 512];
 const LATENCY_CLIENTS: usize = 4;
 const LATENCY_QPS: [f64; 2] = [250.0, 1000.0];
+const OVERHEAD_ROUNDS: usize = 7;
+/// Gate: per-op histogram recording may cost at most +2% on the
+/// predict hot path.
+const OVERHEAD_GATE: f64 = 1.02;
 
 /// One benchmark round: spin up a server with the given coalescing cap,
 /// hammer it from `CLIENTS` synchronous clients, return the client-side
@@ -253,6 +258,28 @@ fn percentile(sorted: &[f64], q: f64) -> f64 {
     sorted[((sorted.len() - 1) as f64 * q).round() as usize]
 }
 
+/// Time `reps` instrumented predict scans — the per-batch hot-path
+/// sequence (one pool-sharded scan + one telemetry record) with per-op
+/// histogram recording on or off.
+fn overhead_pass(
+    rt: &Runtime,
+    model: &FittedModel,
+    queries: &[f64],
+    reps: usize,
+    record_hist: bool,
+) -> Duration {
+    let tel = ServeTelemetry::new(record_hist);
+    let started = Instant::now();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let labels = model.predict_rows(rt, queries).unwrap();
+        assert!(!labels.is_empty());
+        tel.request();
+        tel.op_done(Op::Predict, t0.elapsed());
+    }
+    started.elapsed()
+}
+
 fn main() {
     let scale = env_scale();
     let per_client = ((20_000.0 * scale) as usize).max(40);
@@ -379,6 +406,58 @@ fn main() {
     );
     common::emit("serve_latency.txt", &rendered);
 
+    // ---- observability overhead on the predict hot path ---------------
+    // the same scan the batcher runs per batch, with the instrument
+    // sequence (Instant::now + atomic counters + optionally one
+    // log-bucketed histogram record) on both sides. Rounds alternate
+    // modes and each side keeps its min, so machine noise hits both
+    // alike; the gate fails the bench before an expensive /metrics
+    // pipeline could sneak onto the hot path.
+    let rt = Runtime::new(SERVER_THREADS);
+    let reps = ((400.0 * scale) as usize).max(20);
+    let rows_per_scan = queries.raw().len() / d;
+    let _ = overhead_pass(&rt, &model, queries.raw(), reps, true); // warm the pool
+    let mut best_off = Duration::MAX;
+    let mut best_on = Duration::MAX;
+    for _ in 0..OVERHEAD_ROUNDS {
+        let off = overhead_pass(&rt, &model, queries.raw(), reps, false);
+        let on = overhead_pass(&rt, &model, queries.raw(), reps, true);
+        best_off = best_off.min(off);
+        best_on = best_on.min(on);
+        eprint!(".");
+    }
+    eprintln!();
+    let ratio = best_on.as_secs_f64() / best_off.as_secs_f64();
+    assert!(
+        ratio < OVERHEAD_GATE,
+        "histogram recording costs {:+.2}% on the predict hot path (gate +{:.0}%)",
+        (ratio - 1.0) * 100.0,
+        (OVERHEAD_GATE - 1.0) * 100.0
+    );
+    let overhead_headers = ["histograms", "scans", "rows/scan", "wall[s]", "vs_off"];
+    let mut ot = TextTable::new(format!(
+        "Observability overhead on the predict hot path ({reps} scans × {rows_per_scan} \
+         rows, min over {OVERHEAD_ROUNDS} alternating rounds, gate < +2%)"
+    ))
+    .headers(&overhead_headers);
+    for (mode, wall) in [("off", best_off), ("on", best_on)] {
+        ot.row(vec![
+            mode.to_string(),
+            reps.to_string(),
+            rows_per_scan.to_string(),
+            format!("{:.4}", wall.as_secs_f64()),
+            TextTable::fmt_ratio(wall.as_secs_f64() / best_off.as_secs_f64()),
+        ]);
+    }
+    let mut rendered = ot.render();
+    rendered.push_str(
+        "\nEach scan is the batcher's hot path: one pool-sharded predict plus one\n\
+         telemetry record. 'on' additionally records into the log-bucketed latency\n\
+         histograms behind /metrics and the stats-op p50/p99; the bench fails if\n\
+         that costs 2% or more.\n",
+    );
+    common::emit("serve_obs_overhead.txt", &rendered);
+
     let bench_json = Json::obj()
         .field("bench", "serve")
         .field("scale", scale)
@@ -386,6 +465,7 @@ fn main() {
         .field("rows_per_request", ROWS_PER_REQ as u64)
         .field("server_threads", SERVER_THREADS as u64)
         .field("throughput", t.to_json())
-        .field("latency", lt.to_json());
+        .field("latency", lt.to_json())
+        .field("overhead", ot.to_json());
     common::emit_json("BENCH_serve.json", &bench_json);
 }

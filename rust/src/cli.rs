@@ -4,7 +4,7 @@
 //! ```text
 //! eakm run       --dataset birch --k 100 --algorithm exp-ns [--seed 0]
 //!                [--threads 1] [--scan-shards N|auto] [--scale 0.02]
-//!                [--max-iters N] [--json]
+//!                [--max-iters N] [--json] [--progress]
 //!                [--batch-size B] [--batch-growth F]
 //!                [--config file] [--data-file path.csv|.ekb]
 //!                [--ooc auto|mmap|chunked] [--ooc-window ROWS]
@@ -22,7 +22,8 @@
 //!                --ooc/--k/--algorithm flags as `run`)
 //! eakm shardd    --data file.ekb --rows LO..HI [--addr host:port]
 //!                [--threads T|auto] [--ooc auto|mmap|chunked]
-//!                [--ooc-window ROWS]       # one shard of a distributed fit
+//!                [--ooc-window ROWS] [--metrics-addr host:port]
+//!                                          # one shard of a distributed fit
 //! eakm run       --shards host:port,host:port --k 100 [--algorithm exp-ns]
 //!                [--seed 0] [--threads T]  # coordinate a distributed fit
 //! eakm datasets  [--scale 0.02]           # list the 22 paper datasets
@@ -45,6 +46,7 @@ use crate::error::{EakmError, Result};
 use crate::init::InitMethod;
 use crate::json::Json;
 use crate::model::{FittedModel, Kmeans};
+use crate::obs::{FitObserver, TraceId};
 use crate::runtime::Runtime;
 
 /// Entry point: parse args (excluding argv[0]) and run.
@@ -124,6 +126,10 @@ common flags:
                      fresh batch each round
   --init M           random | kmeans++
   --json             emit the report as JSON
+  --progress         (run) stream one stderr line per round (moved
+                     points, mse, distance-calc deltas, straggler
+                     ratio) tagged with the fit's trace ID; results
+                     are bit-identical with or without it
   --save-model PATH  (run) persist the fitted model as JSON
   --model PATH       (predict/serve) model file written by --save-model
   --out PATH         (predict) write labels here, one per line
@@ -131,7 +137,9 @@ common flags:
 
 serve flags (requests are line-delimited JSON or HTTP/1.1, sniffed per
 connection — POST /v1/predict|nearest|bulk_predict|reload|shutdown and
-GET /v1/stats|healthz map onto the same ops; see docs/PROTOCOLS.md):
+GET /v1/stats|healthz map onto the same ops; GET /metrics serves the
+Prometheus exposition and GET /v1/events?since=N drains the structured
+event ring, both bypassing admission control; see docs/PROTOCOLS.md):
   --addr HOST:PORT   bind address (default 127.0.0.1:4999; port 0 =
                      ephemeral)
   --queue-depth N    bounded predict queue; overflow answers a typed
@@ -171,6 +179,9 @@ distributed fit (results are bit-identical to single-node):
              its rows. --threads sizes its local scan pool; --ooc /
              --ooc-window pick how it reads the file (default auto).
              Port 0 binds an ephemeral port. Stays up until killed.
+             --metrics-addr binds a second listener that answers
+             GET /metrics (Prometheus text) and GET /v1/events; the
+             same numbers travel in-band as the STATS wire frame.
   eakm run --shards host:port,host:port --k K [--algorithm ALG] ...
              coordinate a fit across the shard servers, in the order
              given (which must match ascending row ranges). Seeding,
@@ -193,7 +204,7 @@ fn parse_flags(args: &[String]) -> Result<Flags> {
         let key = arg
             .strip_prefix("--")
             .ok_or_else(|| EakmError::Config(format!("expected --flag, got {arg:?}")))?;
-        if key == "json" {
+        if key == "json" || key == "progress" {
             flags.insert(key.to_string(), "true".to_string());
             continue;
         }
@@ -385,6 +396,15 @@ fn build_config(flags: &Flags) -> Result<RunConfig> {
     Ok(cfg)
 }
 
+/// Build the `--progress` observer: a fresh trace ID minted here at
+/// the front door, one stderr line per round. `None` without the flag
+/// (runs without an observer skip even the read-only hooks).
+fn progress_observer(flags: &Flags) -> Option<FitObserver> {
+    flags
+        .contains_key("progress")
+        .then(|| FitObserver::new(TraceId::mint(), true))
+}
+
 fn cmd_run(flags: &Flags) -> Result<i32> {
     if flags.contains_key("shards") {
         return cmd_run_dist(flags);
@@ -394,7 +414,8 @@ fn cmd_run(flags: &Flags) -> Result<i32> {
     // out-of-core sources fit straight off the file; RunReport.io
     // carries the blocks/bytes/refills telemetry
     let src = open_source(flags, true)?;
-    let model = Kmeans::from_config(cfg).fit(&rt, &*src)?;
+    let observer = progress_observer(flags).map(std::sync::Arc::new);
+    let model = Kmeans::from_config(cfg).fit_observed(&rt, &*src, observer)?;
     if flags.contains_key("json") {
         println!("{}", Json::from(model.report()));
     } else {
@@ -441,7 +462,8 @@ fn cmd_run_dist(flags: &Flags) -> Result<i32> {
     }
     let cfg = build_config(flags)?;
     let rt = Runtime::new(cfg.resolved_threads());
-    let out = crate::dist::run_dist(&rt, &cfg, &addrs)?;
+    let observer = progress_observer(flags);
+    let out = crate::dist::run_dist_observed(&rt, &cfg, &addrs, observer.as_ref())?;
     if flags.contains_key("json") {
         println!("{}", Json::from(&out.report));
     } else {
@@ -495,6 +517,7 @@ fn cmd_shardd(flags: &Flags) -> Result<i32> {
         threads: parse_threads(flags)?.unwrap_or(1),
         mode,
         window_rows: flag_num::<usize>(flags, "ooc-window")?.unwrap_or(0),
+        metrics_addr: flags.get("metrics-addr").cloned(),
     };
     let file = cfg.data.display().to_string();
     crate::dist::shardd(&cfg, |addr| {
@@ -650,6 +673,7 @@ fn cmd_serve(flags: &Flags) -> Result<i32> {
         max_line_bytes: defaults.max_line_bytes,
         idle_timeout: defaults.idle_timeout,
         bulk_block_rows: positive("bulk-block-rows", defaults.bulk_block_rows)?,
+        metrics: defaults.metrics,
         admission: crate::serve::AdmissionConfig {
             rate_limit,
             burst,
@@ -885,6 +909,27 @@ mod tests {
             "10",
             "--algorithm",
             "exp",
+            "--json",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn run_with_progress_flag() {
+        // --progress is a boolean flag like --json; the run must still
+        // exit 0 (round lines go to stderr, the report to stdout)
+        let code = main(&s(&[
+            "run",
+            "--dataset",
+            "birch",
+            "--scale",
+            "0.01",
+            "--k",
+            "5",
+            "--algorithm",
+            "exp-ns",
+            "--progress",
             "--json",
         ]))
         .unwrap();

@@ -49,6 +49,7 @@ use crate::data::{BatchView, DataSource};
 use crate::error::Result;
 use crate::linalg::sqnorms_rows;
 use crate::metrics::{BatchTelemetry, Counters, PhaseTimes, RunReport, SchedTelemetry};
+use crate::obs::{FitObserver, RoundObservation};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 
@@ -69,7 +70,18 @@ const SAMPLE_STREAM: u64 = 0xBA7C;
 /// full-data labelling pass (one `O(n·k)` scan, needed to report
 /// assignments and MSE) runs after the budget, so total wall time is
 /// the budget plus one full scan.
-pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Result<RunOutput> {
+///
+/// When `observer` is set, each round pushes a `"round"` event with
+/// `site = "minibatch"` and the rows scanned that round; the reported
+/// MSE is the batch objective (the full-data objective is only computed
+/// by the final labelling pass). Without an observer the per-round
+/// objective read is skipped entirely.
+pub fn run_minibatch(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    data: &dyn DataSource,
+    observer: Option<&FitObserver>,
+) -> Result<RunOutput> {
     let io_before = data.io_stats();
     let start = Instant::now();
     let (n, d, k) = (data.n(), data.d(), cfg.k);
@@ -135,12 +147,24 @@ pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Re
                     }
                 }
                 let t_round = Instant::now();
-                engine.step();
+                let ctr_before = engine.counters();
+                let moved = engine.step();
                 if cfg.record_rounds {
                     round_times.push(t_round.elapsed());
                 }
                 rounds += 1;
                 schedule.push(view.n());
+                if let Some(obs) = observer {
+                    obs.round(&RoundObservation {
+                        site: "minibatch",
+                        round: rounds,
+                        moved,
+                        mse: engine.mse(),
+                        delta: engine.counters().since(&ctr_before),
+                        imbalance: engine.sched().imbalance(),
+                        batch_rows: Some(view.n()),
+                    });
+                }
             }
             converged = engine.converged();
             centroids = engine.centroids().to_vec();
@@ -152,20 +176,32 @@ pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Re
         let t_round = Instant::now();
         // assignment scan + cluster-sum build run unchanged through the
         // engine, seeded from the current centroids
-        let (sums, counts) = {
+        let (sums, counts, round_ctr, round_imb, batch_mse) = {
             let engine = Engine::on_runtime_with_centroids(&view, &ecfg, rt, centroids.clone())?;
             name = engine.name().to_string();
             counters.merge(&engine.counters());
             phases.merge(&engine.phases());
             sched.merge(&engine.sched());
+            // batch objective read only when someone is watching — the
+            // fit itself never depends on it
+            let mse = match observer {
+                Some(_) => engine.mse(),
+                None => f64::NAN,
+            };
             let update = engine.update_state();
-            (update.sums().to_vec(), update.counts().to_vec())
+            (
+                update.sums().to_vec(),
+                update.counts().to_vec(),
+                engine.counters(),
+                engine.sched().imbalance(),
+                mse,
+            )
         };
 
         // decayed centroid update with carried per-centroid counts;
         // empty clusters keep their position (as in the exact engine)
         let t_update = Instant::now();
-        let mut moved_any = false;
+        let mut moved = 0usize;
         for (j, carried) in carry.iter_mut().enumerate() {
             let count = counts[j] as f64;
             let prior = if nested { 0.0 } else { *carried };
@@ -173,12 +209,16 @@ pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Re
                 let row = &mut centroids[j * d..(j + 1) * d];
                 let sum = &sums[j * d..(j + 1) * d];
                 let inv = 1.0 / (prior + count);
+                let mut changed = false;
                 for (t, c) in row.iter_mut().enumerate() {
                     let next = (prior * *c + sum[t]) * inv;
                     if next != *c {
-                        moved_any = true;
+                        changed = true;
                     }
                     *c = next;
+                }
+                if changed {
+                    moved += 1;
                 }
             }
             *carried = if nested { count } else { *carried + count };
@@ -190,7 +230,21 @@ pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Re
         }
         rounds += 1;
         schedule.push(view.n());
-        if !moved_any && view.is_full() {
+        if let Some(obs) = observer {
+            obs.round(&RoundObservation {
+                site: "minibatch",
+                round: rounds,
+                // here `moved` counts centroids displaced by the decayed
+                // update (per-sample movement is not defined across
+                // redraws)
+                moved,
+                mse: batch_mse,
+                delta: round_ctr,
+                imbalance: round_imb,
+                batch_rows: Some(view.n()),
+            });
+        }
+        if moved == 0 && view.is_full() {
             // the batch is the whole dataset and nothing moved: this is
             // the exact Lloyd fixed point. Reachable only in redraw
             // mode when the k-clamp raised b0 to n (k = n); nested
@@ -228,6 +282,7 @@ pub fn run_minibatch(rt: &Runtime, cfg: &RunConfig, data: &dyn DataSource) -> Re
         algorithm: name,
         dataset: data.name().to_string(),
         k,
+        n,
         seed: cfg.seed,
         iterations: rounds,
         converged,

@@ -17,6 +17,7 @@
 //! [`minibatch`](crate::coordinator::minibatch) via
 //! [`Engine::on_runtime_with_centroids`]), or future shard sources.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::algorithms::common::{AssignStep, Requirements};
@@ -31,6 +32,7 @@ use crate::coordinator::update::UpdateState;
 use crate::data::DataSource;
 use crate::error::{EakmError, Result};
 use crate::metrics::{Counters, PhaseTimes, RunReport, SchedTelemetry};
+use crate::obs::{FitObserver, RoundObservation};
 use crate::rng::Rng;
 use crate::runtime::pool::WorkerPool;
 use crate::runtime::Runtime;
@@ -372,6 +374,7 @@ impl<'a> Engine<'a> {
 /// [`Runner::run_on`] directly.
 pub struct Runner {
     cfg: RunConfig,
+    observer: Option<Arc<FitObserver>>,
 }
 
 /// Output of [`Runner::run`].
@@ -398,7 +401,21 @@ pub struct RunOutput {
 impl Runner {
     /// Create from a config.
     pub fn new(cfg: &RunConfig) -> Self {
-        Runner { cfg: cfg.clone() }
+        Runner {
+            cfg: cfg.clone(),
+            observer: None,
+        }
+    }
+
+    /// Attach a [`FitObserver`]: each round pushes a structured event
+    /// (and, in progress mode, a stderr line). Observation is read-only
+    /// over engine state — assignments, centroids, and counters are
+    /// bit-identical with or without an observer. Runs without one skip
+    /// even the per-round reads (notably the extra [`Engine::mse`]
+    /// scan).
+    pub fn with_observer(mut self, observer: Arc<FitObserver>) -> Self {
+        self.observer = Some(observer);
+        self
     }
 
     /// Legacy shim: cluster `data` on a throwaway [`Runtime`] sized
@@ -420,7 +437,12 @@ impl Runner {
     pub fn run_on(&self, rt: &Runtime, data: &dyn DataSource) -> Result<RunOutput> {
         if let Some(batch) = self.cfg.batch_size {
             if batch < data.n() {
-                return crate::coordinator::minibatch::run_minibatch(rt, &self.cfg, data);
+                return crate::coordinator::minibatch::run_minibatch(
+                    rt,
+                    &self.cfg,
+                    data,
+                    self.observer.as_deref(),
+                );
             }
         }
         // out-of-core sources expose cumulative I/O counters; report the
@@ -436,9 +458,21 @@ impl Runner {
                 }
             }
             let t0 = Instant::now();
-            engine.step();
+            let ctr_before = engine.counters();
+            let moved = engine.step();
             if self.cfg.record_rounds {
                 round_times.push(t0.elapsed());
+            }
+            if let Some(obs) = self.observer.as_deref() {
+                obs.round(&RoundObservation {
+                    site: "fit",
+                    round: engine.rounds(),
+                    moved,
+                    mse: engine.mse(),
+                    delta: engine.counters().since(&ctr_before),
+                    imbalance: engine.sched().imbalance(),
+                    batch_rows: None,
+                });
             }
         }
         let wall = start.elapsed();
@@ -451,6 +485,7 @@ impl Runner {
             algorithm: engine.name().to_string(),
             dataset: data.name().to_string(),
             k: self.cfg.k,
+            n: data.n(),
             seed: self.cfg.seed,
             iterations: engine.rounds(),
             converged: engine.converged(),

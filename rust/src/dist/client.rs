@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 use crate::error::{EakmError, Result};
 use crate::net::frame::{send_frame, Frame, FrameReader};
 
-use super::wire::{self, tag};
+use super::wire::{self, tag, Stats, StatsOk};
 
 /// Socket-level read timeout: how often a blocked read wakes so the
 /// reply deadline is re-checked.
@@ -32,6 +32,10 @@ const CONNECT_BACKOFF: Duration = Duration::from_millis(50);
 pub(crate) struct ShardConn {
     /// The shard's address, verbatim from `--shards` (used in errors).
     pub(crate) addr: String,
+    /// The active fit's trace ID (0 = unset); when set, every typed
+    /// error this connection produces carries `[trace <hex>]` so a
+    /// shard failure correlates with the fit's events from either end.
+    pub(crate) trace: u64,
     stream: TcpStream,
     reader: FrameReader<TcpStream>,
     /// Reply deadline for [`recv`](ShardConn::recv).
@@ -60,6 +64,7 @@ impl ShardConn {
                         .map_err(|e| net(addr, format_args!("clone stream: {e}")))?;
                     return Ok(ShardConn {
                         addr: addr.to_string(),
+                        trace: 0,
                         stream,
                         reader: FrameReader::new(read_half, wire::MAX_FRAME),
                         timeout,
@@ -77,10 +82,15 @@ impl ShardConn {
         ))
     }
 
+    /// A typed net error naming this shard (and the active trace).
+    fn err(&self, msg: std::fmt::Arguments<'_>) -> EakmError {
+        net_traced(&self.addr, self.trace, msg)
+    }
+
     /// Send one frame.
     pub(crate) fn send(&mut self, tag: u8, body: &[u8]) -> Result<()> {
         if !send_frame(&mut self.stream, tag, body) {
-            return Err(net(&self.addr, format_args!("connection closed while sending")));
+            return Err(self.err(format_args!("connection closed while sending")));
         }
         Ok(())
     }
@@ -93,26 +103,23 @@ impl ShardConn {
             match self.reader.next_frame(deadline.min(Instant::now() + READ_POLL)) {
                 Frame::Msg(t, body) => {
                     if t == tag::ERR {
-                        return Err(net(
-                            &self.addr,
-                            format_args!("{}", wire::decode_err(&body)),
-                        ));
+                        return Err(self.err(format_args!("{}", wire::decode_err(&body))));
                     }
                     return Ok((t, body));
                 }
                 Frame::Idle => {
                     if Instant::now() >= deadline {
-                        return Err(net(
-                            &self.addr,
-                            format_args!("timed out after {:?} waiting for a reply", self.timeout),
-                        ));
+                        return Err(self.err(format_args!(
+                            "timed out after {:?} waiting for a reply",
+                            self.timeout
+                        )));
                     }
                 }
                 Frame::Eof => {
-                    return Err(net(&self.addr, format_args!("connection closed")));
+                    return Err(self.err(format_args!("connection closed")));
                 }
                 Frame::TooLong => {
-                    return Err(net(&self.addr, format_args!("oversized or malformed frame")));
+                    return Err(self.err(format_args!("oversized or malformed frame")));
                 }
             }
         }
@@ -123,16 +130,49 @@ impl ShardConn {
         self.send(req_tag, body)?;
         let (t, reply) = self.recv()?;
         if t != want {
-            return Err(net(
-                &self.addr,
-                format_args!("unexpected reply tag {t} (wanted {want})"),
-            ));
+            return Err(self.err(format_args!("unexpected reply tag {t} (wanted {want})")));
         }
         Ok(reply)
     }
 }
 
+/// One shard server's observability snapshot ([`shard_stats`]).
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    /// The shard's metric families in the Prometheus text format (the
+    /// same body its optional metrics listener serves as `GET /metrics`).
+    pub metrics: String,
+    /// Structured events after the requested cursor, as the JSON body
+    /// `{"ok":true,"last":N,"events":[…]}` — the same shape the serve
+    /// tier's `GET /v1/events` answers.
+    pub events: String,
+}
+
+/// Query one shard server's `STATS` frame: metric families plus the
+/// events newer than `since` (0 = everything resident). Works mid-fit —
+/// the shard answers off its compute lock, so a scrape never blocks or
+/// perturbs a round.
+pub fn shard_stats(addr: &str, since: u64, timeout: Duration) -> Result<ShardStats> {
+    let mut conn = ShardConn::connect(addr, timeout)?;
+    let body = conn.request(tag::STATS, &Stats { since }.encode(), tag::STATS_OK)?;
+    let reply = StatsOk::decode(&body)?;
+    Ok(ShardStats {
+        metrics: reply.metrics,
+        events: reply.events,
+    })
+}
+
 /// A typed net error naming the shard.
 pub(crate) fn net(addr: &str, msg: std::fmt::Arguments<'_>) -> EakmError {
     EakmError::Net(format!("shard {addr}: {msg}"))
+}
+
+/// [`net`] with the fit's trace ID appended (when set) so wire failures
+/// correlate with round events on both ends.
+pub(crate) fn net_traced(addr: &str, trace: u64, msg: std::fmt::Arguments<'_>) -> EakmError {
+    if trace == 0 {
+        net(addr, msg)
+    } else {
+        EakmError::Net(format!("shard {addr} [trace {trace:016x}]: {msg}"))
+    }
 }

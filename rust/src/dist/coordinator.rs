@@ -52,6 +52,7 @@ use crate::coordinator::update::{chunk_len, merge_partial_sums, UpdateState};
 use crate::data::DataSource;
 use crate::error::{EakmError, Result};
 use crate::metrics::{Counters, PhaseTimes, RunReport, SchedTelemetry};
+use crate::obs::{FitObserver, RoundObservation, TraceId};
 use crate::rng::Rng;
 use crate::runtime::pool::WorkerPool;
 use crate::runtime::Runtime;
@@ -86,6 +87,7 @@ pub struct DistEngine<'a> {
     rounds: usize,
     name: String,
     last_moved: usize,
+    trace: TraceId,
 }
 
 impl<'a> DistEngine<'a> {
@@ -94,7 +96,23 @@ impl<'a> DistEngine<'a> {
     /// validation, `Auto` resolution, seeding from `cfg.init` with the
     /// config's RNG stream, and the round-0 full assignment — except
     /// the scan runs on the shards.
+    ///
+    /// Mints a fresh [`TraceId`] for the fit; use
+    /// [`connect_traced`](DistEngine::connect_traced) to propagate one
+    /// minted further up (e.g. by an observer at the front door).
     pub fn connect(rt: &'a Runtime, cfg: &RunConfig, net: &'a NetSource) -> Result<Self> {
+        DistEngine::connect_traced(rt, cfg, net, TraceId::mint())
+    }
+
+    /// [`connect`](DistEngine::connect) with a caller-supplied trace ID,
+    /// shipped in `FIT_INIT`/`ROUND` and echoed by every shard reply —
+    /// shard-side round events for this fit carry the same ID.
+    pub fn connect_traced(
+        rt: &'a Runtime,
+        cfg: &RunConfig,
+        net: &'a NetSource,
+        trace: TraceId,
+    ) -> Result<Self> {
         if net.n() == 0 || net.d() == 0 {
             return Err(EakmError::Data(format!(
                 "cannot cluster an empty data source (n={}, d={})",
@@ -142,10 +160,13 @@ impl<'a> DistEngine<'a> {
             hist_cap,
             want_partials,
             centroids: centroids.clone(),
+            trace: trace.as_u64(),
         };
         let mut conns = Vec::with_capacity(net.metas().len());
         for m in net.metas() {
-            conns.push(ShardConn::connect(&m.addr, net.timeout())?);
+            let mut conn = ShardConn::connect(&m.addr, net.timeout())?;
+            conn.trace = trace.as_u64();
+            conns.push(conn);
         }
 
         // round 0: broadcast the seed, collect every shard's full
@@ -172,6 +193,15 @@ impl<'a> DistEngine<'a> {
                 ));
             }
             a[m.lo..m.hi].copy_from_slice(&fit.assignments);
+            if fit.trace != trace.as_u64() {
+                return Err(net(
+                    &conn.addr,
+                    format_args!(
+                        "echoed trace {:016x}, expected {trace}",
+                        fit.trace
+                    ),
+                ));
+            }
             merge_build_ctr(&mut build_ctr, &fit.build_ctr, &mut counters, &conn.addr)?;
             counters.merge(&fit.scan_ctr);
             partials.push(fit.partials);
@@ -204,6 +234,7 @@ impl<'a> DistEngine<'a> {
             rounds: 0,
             name,
             last_moved: usize::MAX,
+            trace,
         })
     }
 
@@ -224,6 +255,7 @@ impl<'a> DistEngine<'a> {
         let t_scan = Instant::now();
         let body = Round {
             centroids: self.centroids.clone(),
+            trace: self.trace.as_u64(),
         }
         .encode();
         for conn in &mut self.conns {
@@ -235,6 +267,15 @@ impl<'a> DistEngine<'a> {
         for conn in &mut self.conns {
             let reply = conn.request_reply(tag::ROUND_OK)?;
             let round = RoundOk::decode(&reply).map_err(|e| reply_err(&conn.addr, e))?;
+            if round.trace != self.trace.as_u64() {
+                return Err(net(
+                    &conn.addr,
+                    format_args!(
+                        "echoed trace {:016x}, expected {}",
+                        round.trace, self.trace
+                    ),
+                ));
+            }
             merge_build_ctr(&mut build_ctr, &round.build_ctr, &mut self.counters, &conn.addr)?;
             self.counters.merge(&round.scan_ctr);
             for m in &round.moved {
@@ -326,6 +367,11 @@ impl<'a> DistEngine<'a> {
     /// Resolved algorithm name.
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// The fit's trace ID (shipped to every shard and echoed back).
+    pub fn trace(&self) -> TraceId {
+        self.trace
     }
 
     /// Objective (mean squared distance to assigned centroid), computed
@@ -427,15 +473,33 @@ fn reply_err(addr: &str, e: EakmError) -> EakmError {
 /// dispatched to the mini-batch engine over the [`NetSource`] — a pure
 /// data-plane fit: only row blocks cross the network.
 pub fn run_dist(rt: &Runtime, cfg: &RunConfig, addrs: &[String]) -> Result<RunOutput> {
+    run_dist_observed(rt, cfg, addrs, None)
+}
+
+/// [`run_dist`] with an optional [`FitObserver`]: per-round `"round"`
+/// events with `site = "dist"`, carrying the observer's trace ID to
+/// every shard (shard-side round events record the same ID). Without an
+/// observer a fresh trace is minted and the per-round objective read
+/// (a full network scan) is skipped.
+pub fn run_dist_observed(
+    rt: &Runtime,
+    cfg: &RunConfig,
+    addrs: &[String],
+    observer: Option<&FitObserver>,
+) -> Result<RunOutput> {
     let net = NetSource::connect(addrs, 0, DEFAULT_NET_TIMEOUT)?;
     if let Some(batch) = cfg.batch_size {
         if batch < net.n() {
-            return crate::coordinator::minibatch::run_minibatch(rt, cfg, &net);
+            return crate::coordinator::minibatch::run_minibatch(rt, cfg, &net, observer);
         }
     }
     let io_before = net.io_stats();
     let start = Instant::now();
-    let mut engine = DistEngine::connect(rt, cfg, &net)?;
+    let trace = match observer {
+        Some(obs) => obs.trace(),
+        None => TraceId::mint(),
+    };
+    let mut engine = DistEngine::connect_traced(rt, cfg, &net, trace)?;
     let mut round_times = Vec::new();
     while !engine.converged() && engine.rounds() < cfg.max_iters {
         if let Some(limit) = cfg.time_limit {
@@ -444,9 +508,22 @@ pub fn run_dist(rt: &Runtime, cfg: &RunConfig, addrs: &[String]) -> Result<RunOu
             }
         }
         let t0 = Instant::now();
-        engine.step()?;
+        let ctr_before = engine.counters();
+        let moved = engine.step()?;
         if cfg.record_rounds {
             round_times.push(t0.elapsed());
+        }
+        if let Some(obs) = observer {
+            obs.round(&RoundObservation {
+                site: "dist",
+                round: engine.rounds(),
+                moved,
+                mse: engine.mse(),
+                delta: engine.counters().since(&ctr_before),
+                // shard-side scan telemetry stays node-local
+                imbalance: 1.0,
+                batch_rows: None,
+            });
         }
     }
     engine.finish();
@@ -460,6 +537,7 @@ pub fn run_dist(rt: &Runtime, cfg: &RunConfig, addrs: &[String]) -> Result<RunOu
         algorithm: engine.name().to_string(),
         dataset: net.name().to_string(),
         k: cfg.k,
+        n: net.n(),
         seed: cfg.seed,
         iterations: engine.rounds(),
         converged: engine.converged(),

@@ -21,6 +21,12 @@
 //! is specified in [`wire`]; both planes share the
 //! [`net::frame`](crate::net::frame) codec with the model server.
 //!
+//! Observability rides the same wire: `FIT_INIT`/`ROUND` carry the
+//! coordinator's [`TraceId`](crate::obs::TraceId) (echoed in replies
+//! and recorded in shard-side round events), and a `STATS` frame — or
+//! the optional `--metrics-addr` HTTP listener — drains any shard's
+//! metric families and event ring without touching the compute lock.
+//!
 //! ## Why the distributed fit is bit-identical
 //!
 //! Every source of nondeterminism is pinned, one by one:
@@ -71,6 +77,7 @@ pub mod netsource;
 pub mod shardd;
 pub mod wire;
 
-pub use coordinator::{run_dist, DistEngine, DEFAULT_NET_TIMEOUT};
+pub use client::{shard_stats, ShardStats};
+pub use coordinator::{run_dist, run_dist_observed, DistEngine, DEFAULT_NET_TIMEOUT};
 pub use netsource::NetSource;
 pub use shardd::{shardd, ShardConfig};

@@ -27,11 +27,11 @@
 //! listener so shutdown can never strand it.
 
 use std::fs::File;
-use std::io::BufReader;
+use std::io::{BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::algorithms::common::{AssignStep, Requirements};
@@ -48,10 +48,15 @@ use crate::data::{BlockCursor, DataSource};
 use crate::error::{EakmError, Result};
 use crate::metrics::Counters;
 use crate::net::frame::{send_frame, Frame, FrameReader};
+use crate::obs::{
+    events_json, Counter, EventLog, Histogram, Registry, TraceId, Value, DEFAULT_EVENT_CAP,
+};
 use crate::runtime::pool::WorkerPool;
 use crate::runtime::rt::resolve_threads;
 
-use super::wire::{self, tag, Block, ChunkPartial, FitInit, FitOk, Lease, OpenOk, Round, RoundOk};
+use super::wire::{
+    self, tag, Block, ChunkPartial, FitInit, FitOk, Lease, OpenOk, Round, RoundOk, Stats, StatsOk,
+};
 
 /// How often a connection read wakes to re-check the shutdown flag.
 const READ_POLL: Duration = Duration::from_millis(100);
@@ -74,6 +79,11 @@ pub struct ShardConfig {
     pub mode: OocMode,
     /// Resident-window rows for the chunked backend.
     pub window_rows: usize,
+    /// Optional bind address for a tiny metrics HTTP listener serving
+    /// `GET /metrics` (Prometheus text) and `GET /v1/events?since=` —
+    /// the same observability the `STATS` wire frame exposes, for
+    /// scrapers that speak HTTP rather than the dist protocol.
+    pub metrics_addr: Option<String>,
 }
 
 impl ShardConfig {
@@ -86,7 +96,96 @@ impl ShardConfig {
             threads: 1,
             mode: OocMode::Auto,
             window_rows: DEFAULT_WINDOW_ROWS,
+            metrics_addr: None,
         }
+    }
+}
+
+/// The shard server's observability block: a long-lived [`Registry`]
+/// (counters registered once, recorded forever), the round-scan latency
+/// histogram, and the bounded event ring. Everything here is off the
+/// determinism path — recording never feeds back into fit state.
+struct ShardObs {
+    registry: Registry,
+    events: Arc<EventLog>,
+    leases: Arc<Counter>,
+    lease_rows: Arc<Counter>,
+    fits: Arc<Counter>,
+    rounds: Arc<Counter>,
+    dist_assignment: Arc<Counter>,
+    dist_centroid: Arc<Counter>,
+    dist_displacement: Arc<Counter>,
+    dist_init: Arc<Counter>,
+    scan_hist: Arc<Histogram>,
+}
+
+impl ShardObs {
+    fn new(lo: usize, hi: usize) -> ShardObs {
+        let registry = Registry::new();
+        registry.sample_gauge(
+            "eakm_shard_rows",
+            "Rows owned by this shard (hi - lo of its global range).",
+            &[],
+            (hi - lo) as f64,
+        );
+        let leases = registry.counter(
+            "eakm_shard_leases_total",
+            "Data-plane row blocks leased to remote cursors.",
+            &[],
+        );
+        let lease_rows = registry.counter(
+            "eakm_shard_lease_rows_total",
+            "Data-plane rows streamed to remote cursors.",
+            &[],
+        );
+        let fits = registry.counter(
+            "eakm_shard_fits_total",
+            "Compute-plane fit sessions started (FIT_INIT frames).",
+            &[],
+        );
+        let rounds = registry.counter(
+            "eakm_shard_rounds_total",
+            "Compute-plane assignment rounds served (ROUND frames).",
+            &[],
+        );
+        let mk_site = |site: &str| {
+            registry.counter(
+                "eakm_shard_distance_calcs_total",
+                "Distance calculations on this shard, by accounting site.",
+                &[("site", site)],
+            )
+        };
+        let dist_assignment = mk_site("assignment");
+        let dist_centroid = mk_site("centroid");
+        let dist_displacement = mk_site("displacement");
+        let dist_init = mk_site("init");
+        let scan_hist = registry.histogram(
+            "eakm_shard_round_micros",
+            "Wall time of one compute-plane round on this shard (scan + \
+             centroid-side rebuilds), microseconds.",
+            &[],
+        );
+        ShardObs {
+            registry,
+            events: Arc::new(EventLog::new(DEFAULT_EVENT_CAP)),
+            leases,
+            lease_rows,
+            fits,
+            rounds,
+            dist_assignment,
+            dist_centroid,
+            dist_displacement,
+            dist_init,
+            scan_hist,
+        }
+    }
+
+    /// Fold one round's (or round 0's) counters into the live totals.
+    fn add_counters(&self, c: &Counters) {
+        self.dist_assignment.add(c.assignment);
+        self.dist_centroid.add(c.centroid);
+        self.dist_displacement.add(c.displacement);
+        self.dist_init.add(c.init);
     }
 }
 
@@ -106,6 +205,7 @@ struct ShardState<'a> {
     /// Storage width of the backing file (rows travel at this width).
     width: ElemWidth,
     name: String,
+    obs: &'a ShardObs,
 }
 
 /// One connection's fit session (compute plane). All of it is a
@@ -121,6 +221,10 @@ struct FitSession {
     req: Requirements,
     want_partials: bool,
     k: usize,
+    /// Coordinator-minted trace ID for this fit (0 = unset).
+    trace: u64,
+    /// Rounds served in this session (round 0 is the FIT_INIT scan).
+    rounds: u64,
 }
 
 /// Run a shard server until a `SHUTDOWN` frame: open the file, bind
@@ -140,8 +244,17 @@ pub fn shardd<F: FnOnce(SocketAddr)>(cfg: &ShardConfig, on_ready: F) -> Result<(
     let listener = TcpListener::bind(&cfg.addr)?;
     listener.set_nonblocking(true)?;
     let addr = listener.local_addr()?;
+    let metrics_listener = match &cfg.metrics_addr {
+        Some(maddr) => {
+            let l = TcpListener::bind(maddr)?;
+            l.set_nonblocking(true)?;
+            Some(l)
+        }
+        None => None,
+    };
     let compute = Mutex::new(());
     let shutdown = AtomicBool::new(false);
+    let obs = ShardObs::new(lo, hi);
     let state = ShardState {
         src: src.as_ref(),
         pool: &pool,
@@ -153,27 +266,118 @@ pub fn shardd<F: FnOnce(SocketAddr)>(cfg: &ShardConfig, on_ready: F) -> Result<(
         hi,
         width: hdr.width,
         name: stem_name(&cfg.data),
+        obs: &obs,
     };
     on_ready(addr);
     let st = &state;
-    std::thread::scope(|scope| loop {
-        if st.shutdown.load(Ordering::Acquire) {
+    std::thread::scope(|scope| {
+        if let Some(ml) = metrics_listener {
+            scope.spawn(move || serve_metrics_http(ml, st.obs, st.shutdown));
+        }
+        loop {
+            if st.shutdown.load(Ordering::Acquire) {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    scope.spawn(move || handle_conn(stream, st));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+    });
+    Ok(())
+}
+
+// ---- metrics listener -------------------------------------------------
+
+/// One minimal HTTP/1.0 response (close-delimited via Content-Length).
+fn http_response(status: &str, content_type: &str, body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Serve `GET /metrics`, `GET /v1/events?since=N`, and `GET /healthz`
+/// over plain HTTP until shutdown. One request per connection,
+/// close-delimited — the minimum a Prometheus scraper or `curl` needs.
+/// Runs entirely off the compute lock, so a mid-fit shard still answers
+/// scrapes.
+fn serve_metrics_http(listener: TcpListener, obs: &ShardObs, shutdown: &AtomicBool) {
+    loop {
+        if shutdown.load(Ordering::Acquire) {
             return;
         }
         match listener.accept() {
-            Ok((stream, _)) => {
-                if stream.set_nonblocking(false).is_err() {
-                    continue;
-                }
-                scope.spawn(move || handle_conn(stream, st));
+            Ok((mut stream, _)) => {
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                let response = match read_request_path(&mut stream) {
+                    Some(target) => route_metrics_request(&target, obs),
+                    None => http_response("400 Bad Request", "text/plain", "bad request\n"),
+                };
+                let _ = stream.write_all(&response);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(ACCEPT_POLL);
             }
             Err(_) => std::thread::sleep(Duration::from_millis(10)),
         }
-    });
-    Ok(())
+    }
+}
+
+/// Read one request head (capped at 8 KiB) and return the GET target.
+fn read_request_path(stream: &mut TcpStream) -> Option<String> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") {
+        if buf.len() > 8192 {
+            return None;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+        }
+    }
+    let head = String::from_utf8_lossy(&buf);
+    let mut parts = head.lines().next()?.split_whitespace();
+    if parts.next()? != "GET" {
+        return None;
+    }
+    parts.next().map(str::to_string)
+}
+
+fn route_metrics_request(target: &str, obs: &ShardObs) -> Vec<u8> {
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    match path {
+        "/metrics" => http_response(
+            "200 OK",
+            "text/plain; version=0.0.4",
+            &obs.registry.render(),
+        ),
+        "/v1/events" => {
+            let since = query
+                .split('&')
+                .find_map(|kv| kv.strip_prefix("since="))
+                .and_then(|v| v.parse::<u64>().ok())
+                .unwrap_or(0);
+            let body = events_json(&obs.events.since(since), obs.events.last_seq()).to_string();
+            http_response("200 OK", "application/json", &body)
+        }
+        "/healthz" => http_response("200 OK", "application/json", "{\"ok\":true}"),
+        _ => http_response("404 Not Found", "text/plain", "not found\n"),
+    }
 }
 
 /// Reply with a typed `ERR` frame; `false` means the peer is gone.
@@ -215,6 +419,7 @@ fn handle_conn<'a>(stream: TcpStream, st: &ShardState<'a>) {
                         session = None;
                         send_frame(&mut write_half, tag::OK, &[])
                     }
+                    tag::STATS => handle_stats(&mut write_half, st, &body),
                     tag::SHUTDOWN => {
                         let _ = send_frame(&mut write_half, tag::OK, &[]);
                         st.shutdown.store(true, Ordering::Release);
@@ -275,6 +480,8 @@ fn handle_lease<'a>(
             ),
         );
     }
+    st.obs.leases.inc();
+    st.obs.lease_rows.add(lease.len as u64);
     let block = cur.lease(lease.lo, lease.len);
     // rows travel at the file's storage width: for f32 files the leased
     // f64 values are exact widenings, so narrowing back is lossless and
@@ -371,6 +578,7 @@ fn handle_fit_init(
     }
     // the pool is one resource: all compute-plane work is serialised
     let _guard = st.compute.lock().unwrap();
+    let t_fit = Instant::now();
     let (k, d) = (init.k, init.d);
     let g = GroupData::group_count(k);
     let probe = alg.make_shard(0, 0, k, g);
@@ -424,17 +632,35 @@ fn handle_fit_init(
         req,
         want_partials: init.want_partials,
         k,
+        trace: init.trace,
+        rounds: 0,
     };
     let partials = if s.want_partials {
         chunk_partials(st, &s, d)
     } else {
         Vec::new()
     };
+    st.obs.fits.inc();
+    st.obs.add_counters(&build_ctr);
+    st.obs.add_counters(&scan_ctr);
+    st.obs.scan_hist.record(t_fit.elapsed());
+    st.obs.events.push(
+        "shard_round",
+        TraceId::from_u64(s.trace),
+        vec![
+            ("round", Value::U64(0)),
+            ("alg", Value::Str(init.alg.clone())),
+            ("k", Value::U64(k as u64)),
+            ("dist_assignment", Value::U64(scan_ctr.assignment)),
+            ("dist_init", Value::U64(scan_ctr.init)),
+        ],
+    );
     let reply = FitOk {
         build_ctr,
         scan_ctr,
         assignments: s.a.clone(),
         partials,
+        trace: s.trace,
     };
     *session = Some(s);
     send_frame(w, tag::FIT_OK, &reply.encode())
@@ -465,6 +691,7 @@ fn handle_round(
         );
     }
     let _guard = st.compute.lock().unwrap();
+    let t_round = Instant::now();
     // centroid-side rebuilds: pure functions of (centroids, k, d, seed)
     // — every shard computes identical structures and counters; the
     // coordinator merges the counters once and cross-checks equality
@@ -483,11 +710,44 @@ fn handle_round(
     } else {
         Vec::new()
     };
+    s.rounds += 1;
+    st.obs.rounds.inc();
+    st.obs.add_counters(&build_ctr);
+    st.obs.add_counters(&scan_ctr);
+    st.obs.scan_hist.record(t_round.elapsed());
+    st.obs.events.push(
+        "shard_round",
+        TraceId::from_u64(round.trace),
+        vec![
+            ("round", Value::U64(s.rounds)),
+            ("moved", Value::U64(moved.len() as u64)),
+            ("dist_assignment", Value::U64(scan_ctr.assignment)),
+            ("dist_centroid", Value::U64(build_ctr.centroid)),
+            ("dist_displacement", Value::U64(build_ctr.displacement)),
+        ],
+    );
     let reply = RoundOk {
         build_ctr,
         scan_ctr,
         moved,
         partials,
+        trace: round.trace,
     };
     send_frame(w, tag::ROUND_OK, &reply.encode())
+}
+
+/// `STATS`: render the shard's registry and drain its event ring after
+/// the caller's `since` cursor. Deliberately does **not** take the
+/// compute lock — observability must work while a fit round runs.
+fn handle_stats(w: &mut TcpStream, st: &ShardState<'_>, body: &[u8]) -> bool {
+    let stats = match Stats::decode(body) {
+        Ok(m) => m,
+        Err(e) => return send_err(w, &e.to_string()),
+    };
+    let reply = StatsOk {
+        metrics: st.obs.registry.render(),
+        events: events_json(&st.obs.events.since(stats.since), st.obs.events.last_seq())
+            .to_string(),
+    };
+    send_frame(w, tag::STATS_OK, &reply.encode())
 }

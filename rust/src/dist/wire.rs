@@ -14,14 +14,21 @@
 //! |   2 | `OPEN_OK`  | data    | `n d lo hi elem_bytes name`                      |
 //! |   3 | `LEASE`    | data    | `lo len` (global rows, within `[lo, hi)`)        |
 //! |   4 | `BLOCK`    | data    | `lo len elem_bytes rows norms`                   |
-//! |  10 | `FIT_INIT` | compute | `alg k d seed hist_cap want_partials centroids`  |
-//! |  11 | `FIT_OK`   | compute | `build_ctr scan_ctr assignments partials`        |
-//! |  12 | `ROUND`    | compute | `centroids`                                      |
-//! |  13 | `ROUND_OK` | compute | `build_ctr scan_ctr moved partials`              |
+//! |  10 | `FIT_INIT` | compute | `alg k d seed hist_cap want_partials centroids trace` |
+//! |  11 | `FIT_OK`   | compute | `build_ctr scan_ctr assignments partials trace`  |
+//! |  12 | `ROUND`    | compute | `centroids trace`                                |
+//! |  13 | `ROUND_OK` | compute | `build_ctr scan_ctr moved partials trace`        |
 //! |  14 | `FIT_END`  | compute | *(empty)* — tear down the fit session            |
 //! |  15 | `OK`       | both    | *(empty)* — acknowledgement                      |
+//! |  20 | `STATS`    | both    | `since` — drain shard metrics + events           |
+//! |  21 | `STATS_OK` | both    | `metrics events` (Prometheus text, events JSON)  |
 //! |  99 | `SHUTDOWN` | both    | *(empty)* — stop the shard server                |
 //! | 255 | `ERR`      | both    | `msg` — typed failure, connection stays usable   |
+//!
+//! `trace` is the coordinator-minted [`TraceId`](crate::obs::TraceId)
+//! (`u64`, `0` = unset): shards record it in their round events and
+//! echo it in replies, so a slow round is attributable to a specific
+//! shard from either end of the wire.
 //!
 //! Row payloads travel at the file's storage width (`elem_bytes` 4 or
 //! 8) and are widened to f64 by the receiver with the same
@@ -71,6 +78,12 @@ pub mod tag {
     pub const FIT_END: u8 = 14;
     /// Generic success acknowledgement with an empty body.
     pub const OK: u8 = 15;
+    /// Either plane, client → shard: drain the shard's observability
+    /// state (body: the event sequence already seen).
+    pub const STATS: u8 = 20;
+    /// Either plane, shard → client: Prometheus metrics text plus the
+    /// events-JSON document for everything after `since`.
+    pub const STATS_OK: u8 = 21;
     /// Either plane: ask the shard process to exit cleanly.
     pub const SHUTDOWN: u8 = 99;
     /// Either direction: a typed failure (body: UTF-8 message); the
@@ -395,6 +408,8 @@ pub(crate) struct FitInit {
     pub hist_cap: usize,
     pub want_partials: bool,
     pub centroids: Vec<f64>,
+    /// Coordinator-minted trace ID (0 = unset).
+    pub trace: u64,
 }
 
 impl FitInit {
@@ -407,6 +422,7 @@ impl FitInit {
         put_u64(&mut buf, self.hist_cap as u64);
         buf.push(u8::from(self.want_partials));
         put_f64s(&mut buf, &self.centroids);
+        put_u64(&mut buf, self.trace);
         buf
     }
 
@@ -418,6 +434,7 @@ impl FitInit {
         let hist_cap = r.u64()? as usize;
         let want_partials = r.bytes(1)?[0] != 0;
         let centroids = r.f64s()?;
+        let trace = r.u64()?;
         r.finish()?;
         Ok(FitInit {
             alg,
@@ -427,6 +444,7 @@ impl FitInit {
             hist_cap,
             want_partials,
             centroids,
+            trace,
         })
     }
 }
@@ -475,6 +493,9 @@ pub(crate) struct FitOk {
     pub scan_ctr: Counters,
     pub assignments: Vec<u32>,
     pub partials: Vec<ChunkPartial>,
+    /// The session trace ID, echoed back so the coordinator can assert
+    /// the shard is answering for the right fit.
+    pub trace: u64,
 }
 
 impl FitOk {
@@ -484,6 +505,7 @@ impl FitOk {
         put_counters(&mut buf, &self.scan_ctr);
         put_u32s(&mut buf, &self.assignments);
         put_partials(&mut buf, &self.partials);
+        put_u64(&mut buf, self.trace);
         buf
     }
 
@@ -493,12 +515,14 @@ impl FitOk {
         let scan_ctr = read_counters(&mut r)?;
         let assignments = r.u32s()?;
         let partials = read_partials(&mut r)?;
+        let trace = r.u64()?;
         r.finish()?;
         Ok(FitOk {
             build_ctr,
             scan_ctr,
             assignments,
             partials,
+            trace,
         })
     }
 }
@@ -507,20 +531,25 @@ impl FitOk {
 #[derive(Debug, PartialEq)]
 pub(crate) struct Round {
     pub centroids: Vec<f64>,
+    /// The session trace ID (0 = unset), repeated per round so shard
+    /// events stay attributable even on long fits.
+    pub trace: u64,
 }
 
 impl Round {
     pub(crate) fn encode(&self) -> Vec<u8> {
         let mut buf = Vec::new();
         put_f64s(&mut buf, &self.centroids);
+        put_u64(&mut buf, self.trace);
         buf
     }
 
     pub(crate) fn decode(body: &[u8]) -> Result<Self> {
         let mut r = Rd::new(body);
         let centroids = r.f64s()?;
+        let trace = r.u64()?;
         r.finish()?;
-        Ok(Round { centroids })
+        Ok(Round { centroids, trace })
     }
 }
 
@@ -532,6 +561,8 @@ pub(crate) struct RoundOk {
     pub scan_ctr: Counters,
     pub moved: Vec<Moved>,
     pub partials: Vec<ChunkPartial>,
+    /// The session trace ID, echoed back from `ROUND`.
+    pub trace: u64,
 }
 
 impl RoundOk {
@@ -541,6 +572,7 @@ impl RoundOk {
         put_counters(&mut buf, &self.scan_ctr);
         put_moved(&mut buf, &self.moved);
         put_partials(&mut buf, &self.partials);
+        put_u64(&mut buf, self.trace);
         buf
     }
 
@@ -550,13 +582,65 @@ impl RoundOk {
         let scan_ctr = read_counters(&mut r)?;
         let moved = read_moved(&mut r)?;
         let partials = read_partials(&mut r)?;
+        let trace = r.u64()?;
         r.finish()?;
         Ok(RoundOk {
             build_ctr,
             scan_ctr,
             moved,
             partials,
+            trace,
         })
+    }
+}
+
+/// `STATS`: drain the shard's observability state. `since` is the last
+/// event sequence number the caller has already seen (0 = everything
+/// still in the ring), mirroring `GET /v1/events?since=` on the serve
+/// shim.
+#[derive(Debug, PartialEq)]
+pub(crate) struct Stats {
+    pub since: u64,
+}
+
+impl Stats {
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, self.since);
+        buf
+    }
+
+    pub(crate) fn decode(body: &[u8]) -> Result<Self> {
+        let mut r = Rd::new(body);
+        let since = r.u64()?;
+        r.finish()?;
+        Ok(Stats { since })
+    }
+}
+
+/// `STATS_OK`: the shard's metric families in the Prometheus text
+/// format plus its event ring (after `since`) as the standard
+/// events-JSON document.
+#[derive(Debug, PartialEq)]
+pub(crate) struct StatsOk {
+    pub metrics: String,
+    pub events: String,
+}
+
+impl StatsOk {
+    pub(crate) fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        put_str(&mut buf, &self.metrics);
+        put_str(&mut buf, &self.events);
+        buf
+    }
+
+    pub(crate) fn decode(body: &[u8]) -> Result<Self> {
+        let mut r = Rd::new(body);
+        let metrics = r.str()?;
+        let events = r.str()?;
+        r.finish()?;
+        Ok(StatsOk { metrics, events })
     }
 }
 
@@ -613,6 +697,7 @@ mod tests {
             hist_cap: 17,
             want_partials: true,
             centroids: vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0],
+            trace: 0xDEAD_BEEF,
         };
         assert_eq!(FitInit::decode(&init.encode()).unwrap(), init);
         let ctr = Counters {
@@ -630,6 +715,7 @@ mod tests {
                 sums: vec![1.0; 6],
                 counts: vec![2, 0, 1],
             }],
+            trace: 0xDEAD_BEEF,
         };
         assert_eq!(FitOk::decode(&ok.encode()).unwrap(), ok);
         let rok = RoundOk {
@@ -641,8 +727,25 @@ mod tests {
                 to: 0,
             }],
             partials: Vec::new(),
+            trace: 0xDEAD_BEEF,
         };
         assert_eq!(RoundOk::decode(&rok.encode()).unwrap(), rok);
+        let round = Round {
+            centroids: vec![1.5, -2.5],
+            trace: 7,
+        };
+        assert_eq!(Round::decode(&round.encode()).unwrap(), round);
+    }
+
+    #[test]
+    fn stats_messages_roundtrip() {
+        let req = Stats { since: 42 };
+        assert_eq!(Stats::decode(&req.encode()).unwrap(), req);
+        let ok = StatsOk {
+            metrics: "# HELP x y\nx 1\n".into(),
+            events: r#"{"ok":true,"last":0,"events":[]}"#.into(),
+        };
+        assert_eq!(StatsOk::decode(&ok.encode()).unwrap(), ok);
     }
 
     #[test]

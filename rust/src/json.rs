@@ -488,6 +488,7 @@ impl From<&crate::metrics::RunReport> for Json {
             .field("algorithm", r.algorithm.as_str())
             .field("dataset", r.dataset.as_str())
             .field("k", r.k)
+            .field("n", r.n)
             .field("seed", r.seed)
             .field("iterations", r.iterations)
             .field("converged", r.converged)
@@ -690,6 +691,7 @@ mod tests {
             algorithm: "exp".into(),
             dataset: "birch".into(),
             k: 10,
+            n: 500,
             seed: 1,
             iterations: 5,
             converged: true,

@@ -133,6 +133,20 @@
 //! shard surfaces as a typed [`error::EakmError::Net`] naming the
 //! shard, never a hang.
 //!
+//! ## Observability
+//!
+//! [`obs`] is the unified observability layer: a dependency-free
+//! metrics [`obs::Registry`] (counters, gauges, and log-bucketed
+//! latency histograms with exact deterministic merges) rendered in
+//! Prometheus text format — `GET /metrics` on the serve HTTP shim and
+//! on `eakm shardd`'s metrics listener — plus [`obs::TraceId`]s minted
+//! at the front door and propagated over the dist wire, and a bounded
+//! [`obs::EventLog`] of structured per-round fit events and serve
+//! lifecycle events, drained via `GET /v1/events?since=` or streamed
+//! with `eakm run --progress`. Observation never perturbs results:
+//! every bit-identity and determinism test passes with instrumentation
+//! enabled.
+//!
 //! ## Parallel runtime
 //!
 //! Every phase of a round — the sharded assignment scan, the delta
@@ -247,6 +261,7 @@ pub mod runtime;
 pub mod config;
 pub mod model;
 pub mod net;
+pub mod obs;
 pub mod serve;
 pub mod dist;
 pub mod bench_support;

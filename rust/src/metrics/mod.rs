@@ -32,6 +32,17 @@ impl Counters {
         self.displacement += other.displacement;
         self.init += other.init;
     }
+
+    /// Counter delta `self − earlier` (saturating). Feeds the per-round
+    /// distance-calculation deltas in [`obs`](crate::obs) round events.
+    pub fn since(&self, earlier: &Counters) -> Counters {
+        Counters {
+            assignment: self.assignment.saturating_sub(earlier.assignment),
+            centroid: self.centroid.saturating_sub(earlier.centroid),
+            displacement: self.displacement.saturating_sub(earlier.displacement),
+            init: self.init.saturating_sub(earlier.init),
+        }
+    }
 }
 
 /// Wall-time decomposition of the round loop by phase, accumulated
@@ -181,6 +192,12 @@ pub struct RunReport {
     pub dataset: String,
     /// Number of clusters.
     pub k: usize,
+    /// Training rows the fit scanned (0 when unknown, e.g. a report
+    /// reloaded from a model file written before this field existed).
+    /// Normalises the counters into the paper-grounded
+    /// bounds-effectiveness rates — distance calculations *per point
+    /// per round* — that serve exposes as live gauges.
+    pub n: usize,
     /// Seed used.
     pub seed: u64,
     /// Rounds until convergence (or cut-off).
@@ -209,6 +226,20 @@ pub struct RunReport {
 }
 
 impl RunReport {
+    /// A counter site normalised to distance calculations **per point
+    /// per round** — the paper-grounded bounds-effectiveness rate
+    /// (Lloyd's algorithm pays exactly `k` per point per round; the
+    /// bounded algorithms' whole contribution is driving this far
+    /// below `k`). Returns 0.0 when `n` or `iterations` is unknown.
+    pub fn per_point_round(&self, site: u64) -> f64 {
+        let denom = self.n as f64 * self.iterations as f64;
+        if denom > 0.0 {
+            site as f64 / denom
+        } else {
+            0.0
+        }
+    }
+
     /// Render one compact human-readable line.
     pub fn summary(&self) -> String {
         let batch = match &self.batch {
@@ -291,6 +322,7 @@ mod tests {
             algorithm: "exp".into(),
             dataset: "birch".into(),
             k: 100,
+            n: 5000,
             seed: 1,
             iterations: 42,
             converged: true,
@@ -307,6 +339,8 @@ mod tests {
         let s = r.summary();
         assert!(s.contains("exp") && s.contains("birch") && s.contains("iters=42"));
         assert!(s.contains("thr=4"));
+        assert_eq!(r.per_point_round(0), 0.0);
+        assert!((r.per_point_round(5000 * 42 * 3) - 3.0).abs() < 1e-12);
         assert!(!s.contains("batch="));
         assert!(!s.contains("io:"));
         assert!(!s.contains("sched:"));

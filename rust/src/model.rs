@@ -31,6 +31,7 @@
 //! [`load`]: FittedModel::load
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::algorithms::common::nearest_labels;
@@ -43,6 +44,7 @@ use crate::init::InitMethod;
 use crate::json::Json;
 use crate::linalg::{sqdist, sqnorms_rows};
 use crate::metrics::{BatchTelemetry, Counters, PhaseTimes, RunReport, SchedTelemetry};
+use crate::obs::FitObserver;
 use crate::runtime::Runtime;
 
 /// Model-file format marker and version.
@@ -141,7 +143,25 @@ impl Kmeans {
     /// Cluster `data` to convergence on the shared runtime and return
     /// an owned model.
     pub fn fit(&self, rt: &Runtime, data: &dyn DataSource) -> Result<FittedModel> {
-        let out = Runner::new(&self.cfg).run_on(rt, data)?;
+        self.fit_observed(rt, data, None)
+    }
+
+    /// [`fit`](Kmeans::fit) with an optional
+    /// [`FitObserver`](crate::obs::FitObserver): each round pushes a
+    /// structured event into the observer's ring (and, in progress
+    /// mode, one stderr line). The fitted model is bit-identical with
+    /// or without an observer.
+    pub fn fit_observed(
+        &self,
+        rt: &Runtime,
+        data: &dyn DataSource,
+        observer: Option<Arc<FitObserver>>,
+    ) -> Result<FittedModel> {
+        let mut runner = Runner::new(&self.cfg);
+        if let Some(obs) = observer {
+            runner = runner.with_observer(obs);
+        }
+        let out = runner.run_on(rt, data)?;
         Ok(FittedModel::from_parts(out.centroids, data.d(), out.report))
     }
 
@@ -334,6 +354,7 @@ impl FittedModel {
             .field("dataset", r.dataset.as_str())
             .field("k", self.k)
             .field("d", self.d)
+            .field("n", r.n)
             // seed is a string: u64 does not fit f64 beyond 2^53
             .field("seed", r.seed.to_string())
             .field("iterations", r.iterations)
@@ -480,6 +501,9 @@ impl FittedModel {
                 .unwrap_or("unknown")
                 .to_string(),
             k,
+            // older model files omit n; 0 disables the derived
+            // per-point-per-round rates, nothing else
+            n: json.get("n").and_then(Json::as_usize).unwrap_or(0),
             seed,
             iterations: json
                 .get("iterations")

@@ -1,0 +1,225 @@
+//! The structured event log: a bounded, overwrite-oldest ring of typed
+//! events with monotone sequence numbers.
+//!
+//! Producers ([`push`](EventLog::push)) never block on consumers and
+//! never allocate beyond the fixed capacity: when the ring is full the
+//! oldest event is dropped. Consumers drain incrementally with
+//! [`since`](EventLog::since) — pass the last sequence number you saw
+//! (0 to start) and you get everything newer that is still resident,
+//! which is exactly the contract behind `GET /v1/events?since=` and the
+//! `--progress` stream.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::json::Json;
+
+use super::trace::TraceId;
+
+/// Default ring capacity for the process-level logs (fit, serve,
+/// shard): enough for thousands of rounds/lifecycle events without
+/// unbounded growth.
+pub const DEFAULT_EVENT_CAP: usize = 1024;
+
+/// One typed field value of an [`Event`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// An unsigned integer field (counts, rounds, rows).
+    U64(u64),
+    /// A floating-point field (mse, imbalance, ratios).
+    F64(f64),
+    /// A string field (paths, op names, error text).
+    Str(String),
+}
+
+impl From<&Value> for Json {
+    fn from(v: &Value) -> Json {
+        match v {
+            Value::U64(x) => Json::from(*x),
+            Value::F64(x) => Json::from(*x),
+            Value::Str(s) => Json::from(s.as_str()),
+        }
+    }
+}
+
+/// One structured event: a kind tag, an optional trace ID, and a flat
+/// list of typed fields.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Monotone sequence number, assigned by the log (starts at 1).
+    pub seq: u64,
+    /// Event kind (e.g. `"round"`, `"reload"`, `"breaker_open"`).
+    pub kind: &'static str,
+    /// Correlation ID ([`TraceId::NONE`] when the event is untraced).
+    pub trace: TraceId,
+    /// Typed payload fields, in insertion order.
+    pub fields: Vec<(&'static str, Value)>,
+}
+
+impl Event {
+    /// JSON rendering: `seq`/`kind`/`trace` plus every field flattened
+    /// into the same object (field names are chosen not to collide).
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj().field("seq", self.seq).field("kind", self.kind);
+        if self.trace.is_set() {
+            obj = obj.field("trace", self.trace.to_string().as_str());
+        }
+        for (name, value) in &self.fields {
+            obj = obj.field(name, Json::from(value));
+        }
+        obj
+    }
+
+    /// Look up a field by name.
+    pub fn field(&self, name: &str) -> Option<&Value> {
+        self.fields.iter().find(|(n, _)| *n == name).map(|(_, v)| v)
+    }
+}
+
+struct Ring {
+    next_seq: u64,
+    buf: VecDeque<Event>,
+}
+
+/// A bounded ring buffer of [`Event`]s, shared across threads.
+pub struct EventLog {
+    cap: usize,
+    inner: Mutex<Ring>,
+}
+
+impl EventLog {
+    /// An empty log holding at most `cap` events (`cap` is clamped to
+    /// at least 1).
+    pub fn new(cap: usize) -> EventLog {
+        EventLog {
+            cap: cap.max(1),
+            inner: Mutex::new(Ring {
+                next_seq: 1,
+                buf: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// Append one event, overwriting the oldest if the ring is full.
+    /// Returns the assigned sequence number.
+    pub fn push(
+        &self,
+        kind: &'static str,
+        trace: TraceId,
+        fields: Vec<(&'static str, Value)>,
+    ) -> u64 {
+        let mut g = self.inner.lock().expect("event log poisoned");
+        let seq = g.next_seq;
+        g.next_seq += 1;
+        if g.buf.len() == self.cap {
+            g.buf.pop_front();
+        }
+        g.buf.push_back(Event {
+            seq,
+            kind,
+            trace,
+            fields,
+        });
+        seq
+    }
+
+    /// Every resident event with `seq > since`, oldest first. `since = 0`
+    /// returns everything still in the ring; a `since` beyond the head
+    /// returns an empty list.
+    pub fn since(&self, since: u64) -> Vec<Event> {
+        let g = self.inner.lock().expect("event log poisoned");
+        g.buf.iter().filter(|e| e.seq > since).cloned().collect()
+    }
+
+    /// The sequence number of the newest event pushed so far (0 before
+    /// the first push) — pass it back to [`since`](EventLog::since) to
+    /// resume a drain.
+    pub fn last_seq(&self) -> u64 {
+        self.inner.lock().expect("event log poisoned").next_seq - 1
+    }
+
+    /// Events currently resident (≤ the configured capacity).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("event log poisoned").buf.len()
+    }
+
+    /// Whether the ring holds no events.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Render a drained slice of events as the JSON payload of
+/// `GET /v1/events`: `{"ok":true,"last":N,"events":[…]}`.
+pub fn events_json(events: &[Event], last_seq: u64) -> Json {
+    Json::obj()
+        .field("ok", true)
+        .field("last", last_seq)
+        .field("events", Json::Arr(events.iter().map(Event::to_json).collect()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_assigns_monotone_seqs_and_since_filters() {
+        let log = EventLog::new(8);
+        assert_eq!(log.last_seq(), 0);
+        assert!(log.is_empty());
+        let s1 = log.push("round", TraceId::NONE, vec![("round", Value::U64(1))]);
+        let s2 = log.push("round", TraceId::NONE, vec![("round", Value::U64(2))]);
+        assert_eq!((s1, s2), (1, 2));
+        assert_eq!(log.last_seq(), 2);
+        let all = log.since(0);
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].seq, 1);
+        let newer = log.since(1);
+        assert_eq!(newer.len(), 1);
+        assert_eq!(newer[0].seq, 2);
+        assert!(log.since(2).is_empty());
+        assert!(log.since(99).is_empty());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_on_wrap() {
+        let log = EventLog::new(3);
+        for i in 1..=5u64 {
+            log.push("e", TraceId::NONE, vec![("i", Value::U64(i))]);
+        }
+        // capacity 3, five pushes: events 1 and 2 were overwritten
+        assert_eq!(log.len(), 3);
+        let resident = log.since(0);
+        let seqs: Vec<u64> = resident.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![3, 4, 5]);
+        // sequence numbers keep counting past the wrap
+        assert_eq!(log.push("e", TraceId::NONE, vec![]), 6);
+        assert_eq!(log.last_seq(), 6);
+    }
+
+    #[test]
+    fn event_json_flattens_fields_and_skips_unset_trace() {
+        let log = EventLog::new(4);
+        log.push(
+            "reload",
+            TraceId::from_u64(0xAB),
+            vec![
+                ("generation", Value::U64(2)),
+                ("path", Value::Str("m.json".into())),
+                ("mse", Value::F64(0.5)),
+            ],
+        );
+        log.push("overload", TraceId::NONE, vec![]);
+        let events = log.since(0);
+        let j = events[0].to_json().to_string();
+        assert!(j.contains("\"kind\":\"reload\""), "{j}");
+        assert!(j.contains("\"trace\":\"00000000000000ab\""), "{j}");
+        assert!(j.contains("\"generation\":2"), "{j}");
+        assert!(j.contains("\"path\":\"m.json\""), "{j}");
+        let j = events[1].to_json().to_string();
+        assert!(!j.contains("trace"), "{j}");
+        let body = events_json(&events, log.last_seq()).to_string();
+        assert!(body.contains("\"ok\":true"), "{body}");
+        assert!(body.contains("\"last\":2"), "{body}");
+    }
+}

@@ -1,0 +1,182 @@
+//! The unified observability layer: metrics registry, latency
+//! histograms, trace IDs, and the structured event log.
+//!
+//! The paper's whole methodology is *measurement* — wall time `q_t`
+//! and distance-calculation counts `q_a`/`q_au` per algorithm — and
+//! the crate already tracks those decompositions in
+//! [`metrics::Counters`](crate::metrics::Counters), plus scheduler,
+//! I/O, and serving telemetry in their own structs. This module is the
+//! layer that makes all of it observable **while the process is
+//! live**, without perturbing a single result bit:
+//!
+//! * [`Registry`] / [`Counter`] / [`Gauge`] / [`Histogram`] — named
+//!   metric families rendered in the Prometheus text format. Latency
+//!   histograms use fixed base-2 buckets over µs, so merges across
+//!   pool workers and shards are exact bucket-wise adds and the
+//!   derived p50/p99/p999 are deterministic. Served as `GET /metrics`
+//!   on the serve HTTP shim (bypassing admission, like `healthz`) and
+//!   by `eakm shardd` (the `STATS` wire frame and an optional metrics
+//!   HTTP listener).
+//! * [`TraceId`] — a correlation ID minted at the front door (serve
+//!   request, `eakm run` fit) and propagated through the batcher and
+//!   over the dist wire (`FIT_INIT`/`ROUND` carry it; shard replies
+//!   and shard-side round events echo it), so a slow round is
+//!   attributable to a specific shard from either end.
+//! * [`EventLog`] / [`Event`] — a bounded overwrite-oldest ring of
+//!   structured events (per-round fit progress, serve lifecycle),
+//!   drained incrementally via `GET /v1/events?since=` or streamed to
+//!   stderr by `eakm run --progress`.
+//! * [`FitObserver`] — the hook the round loops call once per round.
+//!   Observation is strictly read-only over engine state: every
+//!   bit-identity and determinism test passes with instrumentation
+//!   enabled, and runs without an observer skip even the reads.
+//!
+//! Everything here is std-only, matching the crate's dependency-free
+//! build.
+
+pub mod events;
+pub mod registry;
+pub mod trace;
+
+pub use events::{events_json, Event, EventLog, Value, DEFAULT_EVENT_CAP};
+pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, Registry, HIST_BUCKETS};
+pub use trace::TraceId;
+
+use std::sync::Arc;
+
+use crate::metrics::Counters;
+
+/// Everything one fit round reports to its [`FitObserver`].
+#[derive(Clone, Debug)]
+pub struct RoundObservation {
+    /// Which engine emitted the round: `"fit"` (single-node exact),
+    /// `"minibatch"`, `"dist"` (coordinator), or `"shard"`.
+    pub site: &'static str,
+    /// Round number (1-based; round 0 is the initial full assignment).
+    pub round: usize,
+    /// Samples that changed cluster this round.
+    pub moved: usize,
+    /// Objective after the round (mean squared distance). `NaN` when
+    /// the emitting engine cannot compute it cheaply.
+    pub mse: f64,
+    /// Distance-calculation deltas for this round, by site.
+    pub delta: Counters,
+    /// Scan-scheduler straggler ratio so far
+    /// ([`SchedTelemetry::imbalance`](crate::metrics::SchedTelemetry::imbalance)).
+    pub imbalance: f64,
+    /// Rows scanned this round for mini-batch engines (`None` on full
+    /// scans).
+    pub batch_rows: Option<usize>,
+}
+
+/// The per-fit observer: owns (or shares) an [`EventLog`], carries the
+/// fit's [`TraceId`], and optionally mirrors each round to stderr for
+/// `eakm run --progress`.
+pub struct FitObserver {
+    events: Arc<EventLog>,
+    trace: TraceId,
+    progress: bool,
+}
+
+impl FitObserver {
+    /// An observer with its own event ring of [`DEFAULT_EVENT_CAP`].
+    pub fn new(trace: TraceId, progress: bool) -> FitObserver {
+        FitObserver::with_log(Arc::new(EventLog::new(DEFAULT_EVENT_CAP)), trace, progress)
+    }
+
+    /// An observer pushing into a shared event ring (the serve and
+    /// shardd processes hold one log across many fits).
+    pub fn with_log(events: Arc<EventLog>, trace: TraceId, progress: bool) -> FitObserver {
+        FitObserver {
+            events,
+            trace,
+            progress,
+        }
+    }
+
+    /// The event ring this observer pushes into.
+    pub fn events(&self) -> &Arc<EventLog> {
+        &self.events
+    }
+
+    /// The fit's trace ID.
+    pub fn trace(&self) -> TraceId {
+        self.trace
+    }
+
+    /// Record one completed round: push a structured `"round"` event
+    /// and, in progress mode, print one stderr line.
+    pub fn round(&self, o: &RoundObservation) {
+        let mut fields = vec![
+            ("site", Value::Str(o.site.to_string())),
+            ("round", Value::U64(o.round as u64)),
+            ("moved", Value::U64(o.moved as u64)),
+            ("mse", Value::F64(o.mse)),
+            ("imbalance", Value::F64(o.imbalance)),
+            ("dist_assignment", Value::U64(o.delta.assignment)),
+            ("dist_centroid", Value::U64(o.delta.centroid)),
+            ("dist_displacement", Value::U64(o.delta.displacement)),
+            ("dist_init", Value::U64(o.delta.init)),
+            ("dist_total", Value::U64(o.delta.total())),
+        ];
+        if let Some(rows) = o.batch_rows {
+            fields.push(("batch_rows", Value::U64(rows as u64)));
+        }
+        self.events.push("round", self.trace, fields);
+        if self.progress {
+            let batch = match o.batch_rows {
+                Some(rows) => format!(" batch={rows}"),
+                None => String::new(),
+            };
+            let mse = if o.mse.is_nan() {
+                String::new()
+            } else {
+                format!(" mse={:.6}", o.mse)
+            };
+            eprintln!(
+                "[{} round {}] moved={}{mse} imb={:.2} dist=+{} (assign +{}){batch} trace={}",
+                o.site,
+                o.round,
+                o.moved,
+                o.imbalance,
+                o.delta.total(),
+                o.delta.assignment,
+                self.trace,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observer_pushes_round_events_with_trace() {
+        let trace = TraceId::from_u64(0x77);
+        let obs = FitObserver::new(trace, false);
+        obs.round(&RoundObservation {
+            site: "fit",
+            round: 3,
+            moved: 12,
+            mse: 0.25,
+            delta: Counters {
+                assignment: 100,
+                centroid: 10,
+                displacement: 5,
+                init: 0,
+            },
+            imbalance: 1.25,
+            batch_rows: Some(512),
+        });
+        let events = obs.events().since(0);
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.kind, "round");
+        assert_eq!(e.trace, trace);
+        assert_eq!(e.field("round"), Some(&Value::U64(3)));
+        assert_eq!(e.field("moved"), Some(&Value::U64(12)));
+        assert_eq!(e.field("dist_total"), Some(&Value::U64(115)));
+        assert_eq!(e.field("batch_rows"), Some(&Value::U64(512)));
+    }
+}

@@ -1,0 +1,474 @@
+//! The metrics registry: named counters, gauges, and log-bucketed
+//! latency histograms, rendered in the Prometheus text exposition
+//! format (version 0.0.4).
+//!
+//! Everything is dependency-free and deterministic by construction:
+//!
+//! * counters and gauges are single atomics;
+//! * histograms use **fixed base-2 buckets over microseconds** — the
+//!   bucket grid is a compile-time constant, so merging histograms
+//!   across pool workers, shards, or processes is an exact bucket-wise
+//!   integer add (no re-bucketing, no approximation drift), and the
+//!   derived p50/p99/p999 are a deterministic function of the merged
+//!   counts;
+//! * rendering walks families in insertion order, so scrapes are
+//!   stable and diffable.
+//!
+//! A [`Registry`] can be long-lived (register once, record forever) or
+//! built at scrape time from snapshots — the serve and shardd
+//! `/metrics` endpoints do the latter, which keeps the request hot
+//! path free of any exposition cost.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Number of histogram buckets: upper bounds `2^0 … 2^30` µs plus a
+/// final `+Inf` bucket. `2^30` µs ≈ 17.9 minutes — far beyond any op
+/// latency this crate serves.
+pub const HIST_BUCKETS: usize = 32;
+
+/// A monotone counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// A fresh zero counter.
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `v`.
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge: a settable `f64` (stored as bits in one atomic).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// A fresh zero gauge.
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Set the value.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// A log-bucketed latency histogram over microseconds.
+///
+/// Bucket `i < 31` counts observations `v` with `v ≤ 2^i` µs (and
+/// above the previous bound); bucket 31 counts everything larger
+/// (rendered as `+Inf`). Recording is three relaxed atomic adds.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// A fresh empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+
+    /// The bucket index an observation of `micros` lands in.
+    pub fn bucket_index(micros: u64) -> usize {
+        if micros <= 1 {
+            return 0;
+        }
+        // smallest i with micros ≤ 2^i, clamped to the +Inf bucket
+        let i = 64 - (micros - 1).leading_zeros() as usize;
+        i.min(HIST_BUCKETS - 1)
+    }
+
+    /// The inclusive upper bound of bucket `i` in µs (`None` = +Inf).
+    pub fn bucket_upper(i: usize) -> Option<u64> {
+        if i + 1 < HIST_BUCKETS {
+            Some(1u64 << i)
+        } else {
+            None
+        }
+    }
+
+    /// Record one observation of `micros`.
+    pub fn record_micros(&self, micros: u64) {
+        self.buckets[Self::bucket_index(micros)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    /// Record one observed duration (saturating to µs).
+    pub fn record(&self, latency: Duration) {
+        self.record_micros(latency.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// A point-in-time copy of the counts.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum_micros: self.sum_micros.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// An owned copy of a [`Histogram`]'s counts: mergeable, quantileable,
+/// renderable.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket observation counts (not cumulative).
+    pub buckets: [u64; HIST_BUCKETS],
+    /// Total observations.
+    pub count: u64,
+    /// Sum of all observed values, µs.
+    pub sum_micros: u64,
+}
+
+impl HistogramSnapshot {
+    /// Exact merge: bucket-wise integer add. Merging is associative and
+    /// commutative, so any merge order across workers/shards yields the
+    /// same result — the determinism contract of the fixed bucket grid.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (b, o) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_micros += other.sum_micros;
+    }
+
+    /// Deterministic quantile estimate: the upper bound (µs) of the
+    /// first bucket whose cumulative count reaches `q · count`. Returns
+    /// 0 for an empty histogram and `u64::MAX` when the quantile falls
+    /// in the `+Inf` bucket.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return Histogram::bucket_upper(i).unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+
+    /// Mean observed value, µs (0.0 when empty).
+    pub fn mean_micros(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_micros as f64 / self.count as f64
+        }
+    }
+}
+
+/// One registered metric family instance.
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+    /// A scrape-time histogram registered from an owned snapshot.
+    HistogramSnap(HistogramSnapshot),
+}
+
+struct Family {
+    name: String,
+    help: String,
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+/// An insertion-ordered registry of metric families, rendered as
+/// Prometheus text format by [`render`](Registry::render).
+///
+/// Multiple families may share a name (differing in labels); the
+/// `# HELP`/`# TYPE` header is emitted once per name, at the first
+/// occurrence.
+#[derive(Default)]
+pub struct Registry {
+    families: Mutex<Vec<Family>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    fn register(&self, name: &str, help: &str, labels: &[(&str, &str)], metric: Metric) {
+        self.families.lock().expect("registry poisoned").push(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            metric,
+        });
+    }
+
+    /// Register and return a counter.
+    pub fn counter(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        let c = Arc::new(Counter::new());
+        self.register(name, help, labels, Metric::Counter(c.clone()));
+        c
+    }
+
+    /// Register and return a gauge.
+    pub fn gauge(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        let g = Arc::new(Gauge::new());
+        self.register(name, help, labels, Metric::Gauge(g.clone()));
+        g
+    }
+
+    /// Register and return a live histogram.
+    pub fn histogram(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        let h = Arc::new(Histogram::new());
+        self.register(name, help, labels, Metric::Histogram(h.clone()));
+        h
+    }
+
+    /// Register a scrape-time counter sample with a fixed value — the
+    /// shape the `/metrics` handlers use to render existing telemetry
+    /// snapshots without touching the hot path.
+    pub fn sample_counter(&self, name: &str, help: &str, labels: &[(&str, &str)], value: u64) {
+        self.counter(name, help, labels).add(value);
+    }
+
+    /// Register a scrape-time gauge sample with a fixed value.
+    pub fn sample_gauge(&self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        self.gauge(name, help, labels).set(value);
+    }
+
+    /// Register a scrape-time histogram sample from a snapshot.
+    pub fn sample_histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        snap: &HistogramSnapshot,
+    ) {
+        self.register(name, help, labels, Metric::HistogramSnap(*snap));
+    }
+
+    /// Render every family in the Prometheus text exposition format
+    /// (version 0.0.4). Histogram `le` bounds are integer microseconds
+    /// — the metric names carry a `_micros` suffix to say so.
+    pub fn render(&self) -> String {
+        let families = self.families.lock().expect("registry poisoned");
+        let mut out = String::new();
+        let mut seen: Vec<&str> = Vec::new();
+        for f in families.iter() {
+            if !seen.contains(&f.name.as_str()) {
+                seen.push(&f.name);
+                let kind = match f.metric {
+                    Metric::Counter(_) => "counter",
+                    Metric::Gauge(_) => "gauge",
+                    Metric::Histogram(_) | Metric::HistogramSnap(_) => "histogram",
+                };
+                out.push_str(&format!("# HELP {} {}\n", f.name, escape_help(&f.help)));
+                out.push_str(&format!("# TYPE {} {}\n", f.name, kind));
+            }
+            let labels = label_body(&f.labels);
+            match &f.metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("{}{} {}\n", f.name, braced(&labels), c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("{}{} {}\n", f.name, braced(&labels), g.get()));
+                }
+                Metric::Histogram(h) => render_hist(&mut out, &f.name, &labels, &h.snapshot()),
+                Metric::HistogramSnap(s) => render_hist(&mut out, &f.name, &labels, s),
+            }
+        }
+        out
+    }
+}
+
+/// `key="escaped",…` without braces (empty string for no labels).
+fn label_body(labels: &[(String, String)]) -> String {
+    labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Wrap a non-empty label body in braces.
+fn braced(body: &str) -> String {
+    if body.is_empty() {
+        String::new()
+    } else {
+        format!("{{{body}}}")
+    }
+}
+
+fn render_hist(out: &mut String, name: &str, labels: &str, s: &HistogramSnapshot) {
+    let mut cum = 0u64;
+    for (i, &b) in s.buckets.iter().enumerate() {
+        cum += b;
+        let le = match Histogram::bucket_upper(i) {
+            Some(bound) => bound.to_string(),
+            None => "+Inf".to_string(),
+        };
+        let body = if labels.is_empty() {
+            format!("le=\"{le}\"")
+        } else {
+            format!("{labels},le=\"{le}\"")
+        };
+        out.push_str(&format!("{name}_bucket{{{body}}} {cum}\n"));
+    }
+    out.push_str(&format!("{name}_sum{} {}\n", braced(labels), s.sum_micros));
+    out.push_str(&format!("{name}_count{} {}\n", braced(labels), s.count));
+}
+
+/// Escape a HELP string: backslash and newline.
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value: backslash, double quote, newline.
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 2);
+        assert_eq!(Histogram::bucket_index(5), 3);
+        assert_eq!(Histogram::bucket_index(1 << 30), 30);
+        assert_eq!(Histogram::bucket_index((1 << 30) + 1), 31);
+        assert_eq!(Histogram::bucket_index(u64::MAX), 31);
+        assert_eq!(Histogram::bucket_upper(0), Some(1));
+        assert_eq!(Histogram::bucket_upper(30), Some(1 << 30));
+        assert_eq!(Histogram::bucket_upper(31), None);
+    }
+
+    #[test]
+    fn quantiles_are_bucket_upper_bounds() {
+        let h = Histogram::new();
+        for v in [1u64, 2, 2, 100, 100, 100, 100, 5000] {
+            h.record_micros(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 8);
+        assert_eq!(s.sum_micros, 5505);
+        // 100 µs lands in bucket 7 (≤128); the median is there
+        assert_eq!(s.quantile(0.5), 128);
+        assert_eq!(s.quantile(0.99), 8192); // 5000 ≤ 8192
+        assert_eq!(s.quantile(0.0), 1);
+        assert_eq!(HistogramSnapshot::default().quantile(0.5), 0);
+        assert!((s.mean_micros() - 5505.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_is_exact_and_order_independent() {
+        let (a, b) = (Histogram::new(), Histogram::new());
+        for v in [3u64, 70, 900] {
+            a.record_micros(v);
+        }
+        for v in [1u64, 70, 1 << 40] {
+            b.record_micros(v);
+        }
+        let (sa, sb) = (a.snapshot(), b.snapshot());
+        let mut ab = sa;
+        ab.merge(&sb);
+        let mut ba = sb;
+        ba.merge(&sa);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.count, 6);
+        let whole = Histogram::new();
+        for v in [3u64, 70, 900, 1, 70, 1 << 40] {
+            whole.record_micros(v);
+        }
+        assert_eq!(ab, whole.snapshot());
+    }
+
+    #[test]
+    fn render_format_and_escaping() {
+        let reg = Registry::new();
+        reg.sample_counter("t_requests_total", "line1\nline2 \\ back", &[], 7);
+        reg.sample_gauge(
+            "t_imbalance",
+            "gauge help",
+            &[("site", "a\"b\\c\nd"), ("alg", "exp-ns")],
+            1.5,
+        );
+        let h = Histogram::new();
+        h.record_micros(3);
+        h.record_micros(100);
+        reg.sample_histogram("t_latency_micros", "hist help", &[("op", "predict")], &h.snapshot());
+        let text = reg.render();
+        assert!(text.contains("# HELP t_requests_total line1\\nline2 \\\\ back\n"), "{text}");
+        assert!(text.contains("# TYPE t_requests_total counter\n"), "{text}");
+        assert!(text.contains("t_requests_total 7\n"), "{text}");
+        assert!(
+            text.contains("t_imbalance{site=\"a\\\"b\\\\c\\nd\",alg=\"exp-ns\"} 1.5\n"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE t_latency_micros histogram\n"), "{text}");
+        assert!(text.contains("t_latency_micros_bucket{op=\"predict\",le=\"4\"} 1\n"), "{text}");
+        assert!(
+            text.contains("t_latency_micros_bucket{op=\"predict\",le=\"+Inf\"} 2\n"),
+            "{text}"
+        );
+        assert!(text.contains("t_latency_micros_sum{op=\"predict\"} 103\n"), "{text}");
+        assert!(text.contains("t_latency_micros_count{op=\"predict\"} 2\n"), "{text}");
+        // buckets are cumulative: the 128 bound already includes the 4 one
+        assert!(text.contains("t_latency_micros_bucket{op=\"predict\",le=\"128\"} 2\n"), "{text}");
+    }
+
+    #[test]
+    fn help_type_emitted_once_per_name() {
+        let reg = Registry::new();
+        reg.sample_counter("multi_total", "help", &[("site", "a")], 1);
+        reg.sample_counter("multi_total", "help", &[("site", "b")], 2);
+        let text = reg.render();
+        assert_eq!(text.matches("# HELP multi_total").count(), 1, "{text}");
+        assert_eq!(text.matches("# TYPE multi_total").count(), 1, "{text}");
+        assert!(text.contains("multi_total{site=\"a\"} 1\n"), "{text}");
+        assert!(text.contains("multi_total{site=\"b\"} 2\n"), "{text}");
+    }
+}

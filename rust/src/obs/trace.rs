@@ -1,0 +1,97 @@
+//! Trace IDs: one `u64` minted at the front door of a request or fit
+//! and propagated through every layer that touches the work — the
+//! batcher, the pool dispatch, and the dist wire — so a slow round or a
+//! failed request is attributable end to end from logs alone.
+//!
+//! `0` is reserved as "unset" ([`TraceId::NONE`]): wire codecs and
+//! event records treat a zero trace as absent, which keeps the field
+//! free to ride in fixed positions of binary frames.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// A process-minted correlation ID (`0` = unset).
+///
+/// Displayed as 16 lowercase hex digits — the form that appears in
+/// event logs, `EakmError::Net` messages, and `--progress` lines.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct TraceId(u64);
+
+impl TraceId {
+    /// The unset trace (wire value 0; never produced by [`mint`](TraceId::mint)).
+    pub const NONE: TraceId = TraceId(0);
+
+    /// Mint a fresh, non-zero trace ID. Uniqueness is best-effort
+    /// (clock nanos ⊕ pid ⊕ a process-wide counter, finalised with a
+    /// 64-bit mix) — collisions across a fleet are astronomically
+    /// unlikely and harmless (two requests share a label).
+    pub fn mint() -> TraceId {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+        let pid = u64::from(std::process::id());
+        let mut id = nanos ^ pid.rotate_left(32) ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // splitmix-style finaliser so nearby timestamps don't produce
+        // nearby IDs
+        id ^= id >> 33;
+        id = id.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        id ^= id >> 33;
+        if id == 0 {
+            id = 1;
+        }
+        TraceId(id)
+    }
+
+    /// Whether this trace carries a real ID (non-zero).
+    pub fn is_set(&self) -> bool {
+        self.0 != 0
+    }
+
+    /// The raw wire value (0 = unset).
+    pub fn as_u64(&self) -> u64 {
+        self.0
+    }
+
+    /// Rebuild from a wire value (0 maps back to [`TraceId::NONE`]).
+    pub fn from_u64(v: u64) -> TraceId {
+        TraceId(v)
+    }
+}
+
+impl fmt::Display for TraceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minted_ids_are_set_and_distinct() {
+        let a = TraceId::mint();
+        let b = TraceId::mint();
+        assert!(a.is_set() && b.is_set());
+        assert_ne!(a, b);
+        assert!(!TraceId::NONE.is_set());
+    }
+
+    #[test]
+    fn displays_as_16_hex_digits() {
+        let t = TraceId::from_u64(0xAB);
+        assert_eq!(t.to_string(), "00000000000000ab");
+        assert_eq!(TraceId::mint().to_string().len(), 16);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let t = TraceId::mint();
+        assert_eq!(TraceId::from_u64(t.as_u64()), t);
+        assert_eq!(TraceId::from_u64(0), TraceId::NONE);
+    }
+}

@@ -25,6 +25,7 @@ use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::obs::{EventLog, TraceId, Value};
 use crate::runtime::Runtime;
 use crate::serve::proto::{code, ProtoError};
 use crate::serve::state::{ModelCell, ServeTelemetry};
@@ -38,6 +39,10 @@ pub(crate) struct PredictJob {
     pub n_rows: usize,
     /// Per-row dimension (validated at parse time).
     pub d: usize,
+    /// Trace ID minted at the front door (0 = unset), carried through
+    /// the batcher so each executed batch's event names the request
+    /// whose arrival opened it.
+    pub trace: u64,
     /// Where the labels (or a typed error) go.
     pub reply: mpsc::Sender<Result<Vec<u32>, ProtoError>>,
 }
@@ -150,6 +155,7 @@ pub(crate) fn run_batcher(
     cell: &ModelCell,
     rt: &Runtime,
     telemetry: &ServeTelemetry,
+    events: &EventLog,
     max_batch_rows: usize,
     linger: Duration,
 ) {
@@ -183,7 +189,7 @@ pub(crate) fn run_batcher(
                 }
             }
         }
-        execute_batch(batch, cell, rt, telemetry);
+        execute_batch(batch, cell, rt, telemetry, events);
     }
 }
 
@@ -195,6 +201,7 @@ fn execute_batch(
     cell: &ModelCell,
     rt: &Runtime,
     telemetry: &ServeTelemetry,
+    events: &EventLog,
 ) {
     // one snapshot per batch: a reload landing mid-batch affects the
     // *next* batch; this one finishes on the generation it started with
@@ -227,6 +234,17 @@ fn execute_batch(
     match labels {
         Ok(labels) => {
             telemetry.batch_done(jobs.len() as u64, rows_total as u64);
+            // one event per executed scan (not per row): the trace is
+            // the batch-opening request's, tying the scan back to the
+            // front-door arrival that triggered it
+            events.push(
+                "batch",
+                TraceId::from_u64(jobs[0].trace),
+                vec![
+                    ("requests", Value::U64(jobs.len() as u64)),
+                    ("rows", Value::U64(rows_total as u64)),
+                ],
+            );
             let mut lo = 0;
             for job in &jobs {
                 // send failures mean the client hung up — nothing to do
@@ -261,6 +279,7 @@ mod tests {
                 rows,
                 n_rows,
                 d,
+                trace: 0,
                 reply: tx,
             },
             rx,
@@ -305,7 +324,8 @@ mod tests {
             receivers.push((lo, len, rx));
         }
         q.close();
-        run_batcher(&q, &cell, &rt, &tel, 1024, Duration::ZERO);
+        let events = EventLog::new(16);
+        run_batcher(&q, &cell, &rt, &tel, &events, 1024, Duration::ZERO);
         for (lo, len, rx) in receivers {
             let got = rx.recv().unwrap().unwrap();
             assert_eq!(got.as_slice(), &want[lo..lo + len], "job at {lo}");
@@ -314,6 +334,10 @@ mod tests {
         assert_eq!(s.batches, 1, "all three jobs coalesced into one scan");
         assert_eq!(s.coalesced_batches, 1);
         assert_eq!(s.batched_rows, 24);
+        let batch_events = events.since(0);
+        assert_eq!(batch_events.len(), 1);
+        assert_eq!(batch_events[0].kind, "batch");
+        assert_eq!(batch_events[0].field("rows"), Some(&Value::U64(24)));
     }
 
     #[test]
@@ -335,7 +359,8 @@ mod tests {
         }
         q.close();
         // cap of 4 rows → 12 single-row jobs make exactly 3 scans
-        run_batcher(&q, &cell, &rt, &tel, 4, Duration::ZERO);
+        let events = EventLog::new(16);
+        run_batcher(&q, &cell, &rt, &tel, &events, 4, Duration::ZERO);
         for (i, rx) in receivers.iter().enumerate() {
             assert_eq!(rx.recv().unwrap().unwrap(), vec![want[i]], "row {i}");
         }
@@ -356,7 +381,8 @@ mod tests {
         q.push(good).map_err(|_| "push").unwrap();
         q.push(bad).map_err(|_| "push").unwrap();
         q.close();
-        run_batcher(&q, &cell, &rt, &tel, 1024, Duration::ZERO);
+        let events = EventLog::new(16);
+        run_batcher(&q, &cell, &rt, &tel, &events, 1024, Duration::ZERO);
         assert_eq!(rx_good.recv().unwrap().unwrap(), want);
         let err = rx_bad.recv().unwrap().unwrap_err();
         assert_eq!(err.code, code::DIM_MISMATCH);

@@ -15,6 +15,8 @@
 //! | `POST /v1/shutdown`          | `shutdown`                          |
 //! | `GET /v1/stats`              | `stats`                             |
 //! | `GET /v1/healthz`            | liveness probe                      |
+//! | `GET /metrics`               | Prometheus text exposition (served directly, bypasses admission) |
+//! | `GET /v1/events?since=N`     | drain the structured event ring (served directly, bypasses admission) |
 //!
 //! Response bodies are exactly the line-JSON reply payloads (one JSON
 //! object, newline-terminated), so the two protocols cannot drift.
@@ -445,6 +447,31 @@ pub fn send_response(
     w.write_all(response.as_bytes()).is_ok() && w.flush().is_ok()
 }
 
+/// Write one complete response with an explicit content type, sending
+/// `body` verbatim (no trailing newline added) — the shape of the
+/// `/metrics` text exposition (`text/plain; version=0.0.4`) and the
+/// `/v1/events` drain. `false` means the peer is gone.
+pub fn send_typed_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &str,
+    keep_alive: bool,
+) -> bool {
+    let mut response = String::with_capacity(body.len() + 160);
+    response.push_str(&format!("HTTP/1.1 {} {}\r\n", status, status_text(status)));
+    response.push_str(&format!("Content-Type: {content_type}\r\n"));
+    response.push_str(&format!("Content-Length: {}\r\n", body.len()));
+    response.push_str(if keep_alive {
+        "Connection: keep-alive\r\n"
+    } else {
+        "Connection: close\r\n"
+    });
+    response.push_str("\r\n");
+    response.push_str(body);
+    w.write_all(response.as_bytes()).is_ok() && w.flush().is_ok()
+}
+
 /// Start a chunked streaming response (the bulk-predict path).
 pub fn send_chunked_head(w: &mut impl Write, keep_alive: bool) -> bool {
     let head = format!(
@@ -702,6 +729,20 @@ mod tests {
         let text = String::from_utf8(out).unwrap();
         // sub-second hints still advertise at least one whole second
         assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+
+        let mut out = Vec::new();
+        assert!(send_typed_response(
+            &mut out,
+            200,
+            "text/plain; version=0.0.4",
+            "m_total 1\n",
+            true,
+        ));
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Content-Type: text/plain; version=0.0.4\r\n"), "{text}");
+        // body is sent verbatim: Content-Length counts no extra newline
+        assert!(text.contains("Content-Length: 10\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\nm_total 1\n"), "{text}");
 
         let mut out = Vec::new();
         assert!(send_chunked_head(&mut out, false));

@@ -65,7 +65,21 @@
 //!   batched rows, coalesced batches, queue-full / rate-limited /
 //!   breaker rejects, bulk blocks and rows, and per-op latency sums;
 //!   the `stats` op returns it live and [`serve`] returns the final
-//!   snapshot for the clean-shutdown summary line.
+//!   snapshot for the clean-shutdown summary line. Per-op latency is
+//!   additionally recorded into log-bucketed
+//!   [`Histogram`](crate::obs::Histogram)s, so the `stats` reply
+//!   carries server-computed mean/p50/p99 microseconds per op
+//!   ([`OpLatency`](state::OpLatency)).
+//! * **Observability** — `GET /metrics` renders every telemetry field
+//!   (serve counters, op latency histograms, and the served model's
+//!   fit report: distance-calc counters, per-point-per-round rates,
+//!   scheduler and I/O telemetry) in the Prometheus text format, and
+//!   `GET /v1/events?since=N` drains a bounded ring of structured
+//!   lifecycle events (batch executions, reloads, overloads, admission
+//!   rejects, shutdown) tagged with the trace ID minted when the
+//!   request entered the server. Both bypass admission control the
+//!   same way `healthz` does: a tripped breaker must never blind the
+//!   operator. See [`crate::obs`] and docs/OPERATIONS.md.
 //!
 //! ## Example
 //!
@@ -102,4 +116,4 @@ pub mod state;
 pub use admission::{AdmissionConfig, KeyBy};
 pub use client::Client;
 pub use server::{serve, ServeConfig};
-pub use state::{ServeStats, ServeTelemetry};
+pub use state::{OpLatency, ServeStats, ServeTelemetry};

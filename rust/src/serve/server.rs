@@ -42,6 +42,7 @@ use crate::error::{EakmError, Result};
 use crate::json::ParseLimits;
 use crate::model::FittedModel;
 use crate::net::frame::{send_line, Line, LineReader};
+use crate::obs::{events_json, EventLog, Registry, TraceId, Value, DEFAULT_EVENT_CAP};
 use crate::runtime::Runtime;
 use crate::serve::admission::{Admission, AdmissionConfig, ClientKey, Decision};
 use crate::serve::batcher::{run_batcher, PredictJob, PushRefused, RequestQueue};
@@ -98,6 +99,12 @@ pub struct ServeConfig {
     /// Default rows per streamed `bulk_predict` block when the request
     /// does not pick its own (clamped server-side either way).
     pub bulk_block_rows: usize,
+    /// Record per-op latency histograms (the `GET /metrics` bucket
+    /// series and the histogram-derived `stats` fields). On by
+    /// default; the serve bench flips it off to price the
+    /// observability overhead on the predict hot path. Counters,
+    /// latency sums, and lifecycle events are recorded either way.
+    pub metrics: bool,
 }
 
 impl Default for ServeConfig {
@@ -112,6 +119,7 @@ impl Default for ServeConfig {
             idle_timeout: Duration::from_secs(60),
             admission: AdmissionConfig::default(),
             bulk_block_rows: DEFAULT_WINDOW_ROWS,
+            metrics: true,
         }
     }
 }
@@ -129,6 +137,7 @@ struct Ctx<'a> {
     cell: &'a ModelCell,
     telemetry: &'a ServeTelemetry,
     admission: &'a Admission,
+    events: &'a EventLog,
 }
 
 /// Run the server until a `shutdown` op: bind `cfg.addr`, call
@@ -153,8 +162,9 @@ pub fn serve<F: FnOnce(SocketAddr)>(
     let shutdown = AtomicBool::new(false);
     let queue = RequestQueue::new(cfg.queue_depth.max(1));
     let cell = ModelCell::new(model);
-    let telemetry = ServeTelemetry::default();
+    let telemetry = ServeTelemetry::new(cfg.metrics);
     let admission = Admission::new(cfg.admission.clone());
+    let events = EventLog::new(DEFAULT_EVENT_CAP);
     let ctx = Ctx {
         cfg,
         limits: ParseLimits {
@@ -169,6 +179,7 @@ pub fn serve<F: FnOnce(SocketAddr)>(
         cell: &cell,
         telemetry: &telemetry,
         admission: &admission,
+        events: &events,
     };
     on_ready(addr);
     std::thread::scope(|scope| {
@@ -178,6 +189,7 @@ pub fn serve<F: FnOnce(SocketAddr)>(
                 &cell,
                 rt,
                 &telemetry,
+                &events,
                 cfg.max_batch_rows,
                 cfg.linger,
             );
@@ -222,6 +234,14 @@ fn initiate_shutdown(ctx: &Ctx<'_>) {
     if ctx.shutdown.swap(true, Ordering::AcqRel) {
         return;
     }
+    ctx.events.push(
+        "shutdown",
+        TraceId::from_u64(0),
+        vec![(
+            "uptime_secs",
+            Value::F64(ctx.started.elapsed().as_secs_f64()),
+        )],
+    );
     ctx.queue.close();
 }
 
@@ -461,6 +481,39 @@ fn serve_http(
                     }
                     continue;
                 }
+                // the observability endpoints bypass admission for the
+                // same reason healthz does: load shedding must never
+                // blind the operator who is diagnosing the shedding
+                if req.method == "GET" && req.path == "/metrics" {
+                    let body = render_metrics(ctx);
+                    if !http::send_typed_response(
+                        &mut write_half,
+                        200,
+                        "text/plain; version=0.0.4",
+                        &body,
+                        keep,
+                    ) || !keep
+                    {
+                        return;
+                    }
+                    continue;
+                }
+                if req.method == "GET" && req.path == "/v1/events" {
+                    let since = events_since(&req.query);
+                    let body =
+                        events_json(&ctx.events.since(since), ctx.events.last_seq()).to_string();
+                    if !http::send_typed_response(
+                        &mut write_half,
+                        200,
+                        "application/json",
+                        &body,
+                        keep,
+                    ) || !keep
+                    {
+                        return;
+                    }
+                    continue;
+                }
                 if let Some(err) = admission_reject(ctx, key) {
                     let retry = retry_after(&err);
                     let status = http::status_for(err.code);
@@ -535,6 +588,11 @@ fn admission_reject(ctx: &Ctx<'_>, key: ClientKey) -> Option<ProtoError> {
         Decision::Admit => None,
         Decision::RateLimited(after) => {
             ctx.telemetry.rate_limited_reject();
+            ctx.events.push(
+                "rate_limited",
+                TraceId::from_u64(0),
+                vec![("retry_secs", Value::F64(after.as_secs_f64()))],
+            );
             Some(ProtoError::new(
                 code::RATE_LIMITED,
                 format!("rate limit exceeded — retry in {:.2}s", after.as_secs_f64()),
@@ -542,6 +600,11 @@ fn admission_reject(ctx: &Ctx<'_>, key: ClientKey) -> Option<ProtoError> {
         }
         Decision::BreakerOpen(after) => {
             ctx.telemetry.breaker_reject();
+            ctx.events.push(
+                "breaker_open",
+                TraceId::from_u64(0),
+                vec![("retry_secs", Value::F64(after.as_secs_f64()))],
+            );
             Some(ProtoError::new(
                 code::BREAKER_OPEN,
                 format!(
@@ -561,6 +624,281 @@ fn retry_after(err: &ProtoError) -> Option<Duration> {
         .and_then(|(_, tail)| tail.strip_suffix('s'))
         .and_then(|secs| secs.parse::<f64>().ok())
         .map(Duration::from_secs_f64)
+}
+
+/// Parse the `since=` cursor of a `GET /v1/events` drain (0 — the
+/// whole resident ring — when absent or malformed).
+fn events_since(query: &str) -> u64 {
+    query
+        .split('&')
+        .find_map(|pair| pair.strip_prefix("since="))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+/// Render the `GET /metrics` body: a scrape-time [`Registry`] built
+/// from the current telemetry snapshot and the served model's fit
+/// report, so the request hot path never pays any exposition cost.
+/// Every [`ServeStats`],
+/// [`SchedTelemetry`](crate::metrics::SchedTelemetry),
+/// [`IoTelemetry`](crate::metrics::IoTelemetry), and
+/// [`Counters`](crate::metrics::Counters) field appears as a metric
+/// family here, plus the paper-grounded bounds-effectiveness rates
+/// (distance calculations per point per round, by site).
+fn render_metrics(ctx: &Ctx<'_>) -> String {
+    let reg = Registry::new();
+    let s = ctx.telemetry.snapshot();
+    reg.sample_counter(
+        "eakm_serve_requests_total",
+        "Request lines received (including invalid ones).",
+        &[],
+        s.requests,
+    );
+    reg.sample_counter(
+        "eakm_serve_bad_requests_total",
+        "Request lines rejected as malformed or over-limit.",
+        &[],
+        s.bad_requests,
+    );
+    reg.sample_counter(
+        "eakm_serve_op_errors_total",
+        "Well-formed requests that failed during execution.",
+        &[],
+        s.op_errors,
+    );
+    reg.sample_counter(
+        "eakm_serve_http_requests_total",
+        "Requests that arrived via the HTTP shim (protocol mix).",
+        &[],
+        s.http_requests,
+    );
+    for (reason, count) in [
+        ("overloaded", s.queue_full_rejects),
+        ("rate_limited", s.rate_limited_rejects),
+        ("breaker_open", s.breaker_rejects),
+    ] {
+        reg.sample_counter(
+            "eakm_serve_rejects_total",
+            "Requests bounced with a typed backpressure reply, by reason.",
+            &[("reason", reason)],
+            count,
+        );
+    }
+    reg.sample_counter(
+        "eakm_serve_batches_total",
+        "Pool scans the micro-batcher executed.",
+        &[],
+        s.batches,
+    );
+    reg.sample_counter(
+        "eakm_serve_coalesced_batches_total",
+        "Batches that coalesced more than one request into one scan.",
+        &[],
+        s.coalesced_batches,
+    );
+    reg.sample_counter(
+        "eakm_serve_batched_rows_total",
+        "Query rows that went through the micro-batcher.",
+        &[],
+        s.batched_rows,
+    );
+    reg.sample_counter(
+        "eakm_serve_bulk_blocks_total",
+        "Label blocks streamed by bulk predicts.",
+        &[],
+        s.bulk_blocks,
+    );
+    reg.sample_counter(
+        "eakm_serve_bulk_rows_total",
+        "Rows labelled by bulk predicts.",
+        &[],
+        s.bulk_rows,
+    );
+    for (name, op, ops, secs, lat) in [
+        ("predict", Op::Predict, s.predicts, s.predict_secs, s.predict_latency),
+        ("nearest", Op::Nearest, s.nearests, s.nearest_secs, s.nearest_latency),
+        ("stats", Op::Stats, s.stats_ops, s.stats_secs, s.stats_latency),
+        ("reload", Op::Reload, s.reloads, s.reload_secs, s.reload_latency),
+        ("bulk", Op::Bulk, s.bulk_predicts, s.bulk_secs, s.bulk_latency),
+    ] {
+        let labels = [("op", name)];
+        reg.sample_counter("eakm_serve_ops_total", "Completed ops, by op.", &labels, ops);
+        reg.sample_gauge(
+            "eakm_serve_op_seconds_total",
+            "Summed op latency in seconds — the stats reply's *_secs sums.",
+            &labels,
+            secs,
+        );
+        reg.sample_histogram(
+            "eakm_serve_op_latency_micros",
+            "Op latency histogram (log-bucketed microseconds).",
+            &labels,
+            &ctx.telemetry.op_histogram(op),
+        );
+        reg.sample_gauge(
+            "eakm_serve_op_latency_mean_micros",
+            "Histogram-derived mean op latency, microseconds.",
+            &labels,
+            lat.mean_micros,
+        );
+        reg.sample_gauge(
+            "eakm_serve_op_latency_p50_micros",
+            "Histogram-derived median op latency, microseconds (bucket upper bound).",
+            &labels,
+            lat.p50_micros as f64,
+        );
+        reg.sample_gauge(
+            "eakm_serve_op_latency_p99_micros",
+            "Histogram-derived p99 op latency, microseconds (bucket upper bound).",
+            &labels,
+            lat.p99_micros as f64,
+        );
+    }
+    reg.sample_gauge(
+        "eakm_serve_uptime_seconds",
+        "Seconds since the server started.",
+        &[],
+        ctx.started.elapsed().as_secs_f64(),
+    );
+    reg.sample_gauge(
+        "eakm_serve_model_generation",
+        "Served model generation: 1 at startup, +1 per reload.",
+        &[],
+        ctx.cell.generation() as f64,
+    );
+    reg.sample_gauge(
+        "eakm_serve_threads",
+        "Worker threads in the shared runtime.",
+        &[],
+        ctx.threads as f64,
+    );
+    reg.sample_gauge(
+        "eakm_serve_queue_depth",
+        "Bounded predict-queue depth.",
+        &[],
+        ctx.cfg.queue_depth as f64,
+    );
+    reg.sample_gauge(
+        "eakm_serve_max_batch_rows",
+        "Coalescing row cap per batch.",
+        &[],
+        ctx.cfg.max_batch_rows as f64,
+    );
+    reg.sample_gauge(
+        "eakm_serve_events_seq",
+        "Sequence number of the newest structured event.",
+        &[],
+        ctx.events.last_seq() as f64,
+    );
+    // the served model's fit report: the paper's distance-calculation
+    // decompositions and the rates they normalise to
+    let model = ctx.cell.current();
+    let report = model.report();
+    let alg: &str = &report.algorithm;
+    reg.sample_gauge("eakm_model_k", "Clusters in the served model.", &[], model.k() as f64);
+    reg.sample_gauge("eakm_model_d", "Dimensions in the served model.", &[], model.d() as f64);
+    reg.sample_gauge(
+        "eakm_fit_rounds",
+        "Rounds the served model's fit ran.",
+        &[("algorithm", alg)],
+        report.iterations as f64,
+    );
+    reg.sample_gauge(
+        "eakm_fit_mse",
+        "Final mean squared error of the served model's fit.",
+        &[("algorithm", alg)],
+        report.mse,
+    );
+    reg.sample_gauge(
+        "eakm_fit_n",
+        "Training rows the served model's fit scanned (0 = unknown).",
+        &[("algorithm", alg)],
+        report.n as f64,
+    );
+    for (site, count) in [
+        ("assignment", report.counters.assignment),
+        ("centroid", report.counters.centroid),
+        ("displacement", report.counters.displacement),
+        ("init", report.counters.init),
+        ("total", report.counters.total()),
+    ] {
+        let labels = [("site", site), ("algorithm", alg)];
+        reg.sample_counter(
+            "eakm_fit_distance_calcs_total",
+            "Distance calculations of the served model's fit, by site.",
+            &labels,
+            count,
+        );
+        reg.sample_gauge(
+            "eakm_fit_distance_calcs_per_point_round",
+            "Bounds effectiveness: distance calculations per point per round (Lloyd pays k).",
+            &labels,
+            report.per_point_round(count),
+        );
+    }
+    let sched = report.sched;
+    reg.sample_gauge(
+        "eakm_fit_sched_shards",
+        "Shards in the fit's scan plan.",
+        &[],
+        sched.shards as f64,
+    );
+    reg.sample_counter(
+        "eakm_fit_sched_dispatches_total",
+        "Pooled scan dispatches (initial assignment + one per round).",
+        &[],
+        sched.dispatches,
+    );
+    reg.sample_counter(
+        "eakm_fit_sched_reorders_total",
+        "Dispatches whose LPT claim order re-ranked shards.",
+        &[],
+        sched.reorders,
+    );
+    for (phase, max, mean) in [
+        ("init", sched.init_max, sched.init_mean),
+        ("scan", sched.scan_max, sched.scan_mean),
+    ] {
+        let labels = [("phase", phase)];
+        reg.sample_gauge(
+            "eakm_fit_sched_max_seconds",
+            "Slowest-shard wall time summed over dispatches, by phase.",
+            &labels,
+            max.as_secs_f64(),
+        );
+        reg.sample_gauge(
+            "eakm_fit_sched_mean_seconds",
+            "Mean shard wall time summed over dispatches, by phase.",
+            &labels,
+            mean.as_secs_f64(),
+        );
+    }
+    reg.sample_gauge(
+        "eakm_fit_sched_imbalance",
+        "Straggler ratio of the fit's scans (1.0 = balanced).",
+        &[],
+        sched.imbalance(),
+    );
+    let io = report.io.unwrap_or_default();
+    reg.sample_counter(
+        "eakm_fit_io_blocks_leased_total",
+        "Row blocks leased from out-of-core cursors during the fit.",
+        &[],
+        io.blocks_leased,
+    );
+    reg.sample_counter(
+        "eakm_fit_io_bytes_read_total",
+        "Bytes read from the backing file during the fit.",
+        &[],
+        io.bytes_read,
+    );
+    reg.sample_counter(
+        "eakm_fit_io_window_refills_total",
+        "Resident-window refills during the fit (0 for mmap sources).",
+        &[],
+        io.window_refills,
+    );
+    reg.render()
 }
 
 /// How a dispatched request ended.
@@ -653,6 +991,9 @@ impl ReplySink for HttpSink<'_> {
 /// Serve one parsed request through `sink`.
 fn dispatch(req: Request, sink: &mut dyn ReplySink, ctx: &Ctx<'_>) -> Done {
     let t0 = Instant::now();
+    // the front door: every accepted request gets a trace ID here, and
+    // predict jobs carry it through the batcher to the pool dispatch
+    let trace = TraceId::mint();
     match req {
         Request::Predict { rows, n_rows, d } => {
             let (tx, rx) = mpsc::channel();
@@ -660,11 +1001,17 @@ fn dispatch(req: Request, sink: &mut dyn ReplySink, ctx: &Ctx<'_>) -> Done {
                 rows,
                 n_rows,
                 d,
+                trace: trace.as_u64(),
                 reply: tx,
             };
             match ctx.queue.push(job) {
                 Err(PushRefused::Full) => {
                     ctx.telemetry.queue_full_reject();
+                    ctx.events.push(
+                        "overload",
+                        trace,
+                        vec![("queue_depth", Value::U64(ctx.cfg.queue_depth as u64))],
+                    );
                     let err = ProtoError::new(
                         code::OVERLOADED,
                         format!(
@@ -761,6 +1108,16 @@ fn dispatch(req: Request, sink: &mut dyn ReplySink, ctx: &Ctx<'_>) -> Done {
             Ok(model) => {
                 let (k, d) = (model.k(), model.d());
                 let generation = ctx.cell.swap(model);
+                ctx.events.push(
+                    "reload",
+                    trace,
+                    vec![
+                        ("generation", Value::U64(generation)),
+                        ("k", Value::U64(k as u64)),
+                        ("d", Value::U64(d as u64)),
+                        ("path", Value::Str(path.clone())),
+                    ],
+                );
                 ctx.telemetry.op_done(Op::Reload, t0.elapsed());
                 Done {
                     keep: sink.ok(&proto::reply_reloaded(generation, k, d)),
@@ -769,6 +1126,14 @@ fn dispatch(req: Request, sink: &mut dyn ReplySink, ctx: &Ctx<'_>) -> Done {
             }
             Err(e) => {
                 ctx.telemetry.op_error();
+                ctx.events.push(
+                    "reload_failed",
+                    trace,
+                    vec![
+                        ("path", Value::Str(path.clone())),
+                        ("error", Value::Str(e.to_string())),
+                    ],
+                );
                 let err = ProtoError::new(code::MODEL_ERROR, format!("reload {path:?}: {e}"));
                 Done {
                     keep: sink.err(&err),

@@ -7,6 +7,7 @@ use std::time::Duration;
 
 use crate::json::Json;
 use crate::model::FittedModel;
+use crate::obs::{Histogram, HistogramSnapshot};
 
 /// An `ArcSwap`-style cell holding the currently served model.
 ///
@@ -67,8 +68,24 @@ pub enum Op {
 /// Lock-free serving counters, shared by acceptors and the batcher.
 /// All monotone; [`snapshot`](ServeTelemetry::snapshot) renders a
 /// consistent-enough view for the `stats` op and the shutdown summary.
+///
+/// Per-op latencies are tracked two ways: the original `*_micros` sums
+/// (kept for wire compatibility of the `stats` reply's `*_secs`
+/// fields) and log-bucketed [`Histogram`]s, from which the snapshot
+/// derives per-op mean/p50/p99 and the `/metrics` endpoint renders
+/// full bucket series. Histogram recording can be disabled
+/// ([`new`](ServeTelemetry::new)) so the serve bench can price the
+/// observability overhead; the sums are always recorded.
 #[derive(Default)]
 pub struct ServeTelemetry {
+    /// Histogram recording disabled (`false` — i.e. enabled — by
+    /// default and under `Default`).
+    hist_off: bool,
+    predict_hist: Histogram,
+    nearest_hist: Histogram,
+    stats_hist: Histogram,
+    reload_hist: Histogram,
+    bulk_hist: Histogram,
     requests: AtomicU64,
     predicts: AtomicU64,
     nearests: AtomicU64,
@@ -94,6 +111,34 @@ pub struct ServeTelemetry {
 }
 
 impl ServeTelemetry {
+    /// Telemetry with per-op latency histograms on (`record_hist =
+    /// true`, also what `Default` gives) or off — the serve bench's
+    /// overhead-comparison mode. Counters and latency sums are
+    /// recorded either way.
+    pub fn new(record_hist: bool) -> ServeTelemetry {
+        ServeTelemetry {
+            hist_off: !record_hist,
+            ..ServeTelemetry::default()
+        }
+    }
+
+    /// The latency histogram for one op.
+    fn op_hist(&self, op: Op) -> &Histogram {
+        match op {
+            Op::Predict => &self.predict_hist,
+            Op::Nearest => &self.nearest_hist,
+            Op::Stats => &self.stats_hist,
+            Op::Reload => &self.reload_hist,
+            Op::Bulk => &self.bulk_hist,
+        }
+    }
+
+    /// Snapshot one op's latency histogram (empty when histogram
+    /// recording is off) — the `/metrics` bucket series.
+    pub fn op_histogram(&self, op: Op) -> HistogramSnapshot {
+        self.op_hist(op).snapshot()
+    }
+
     /// Count one parsed request of any op.
     pub fn request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
@@ -117,6 +162,9 @@ impl ServeTelemetry {
         };
         count.fetch_add(1, Ordering::Relaxed);
         sum.fetch_add(micros, Ordering::Relaxed);
+        if !self.hist_off {
+            self.op_hist(op).record_micros(micros);
+        }
     }
 
     /// Count one well-formed request that failed during execution
@@ -191,6 +239,37 @@ impl ServeTelemetry {
             stats_secs: secs(&self.stats_micros),
             reload_secs: secs(&self.reload_micros),
             bulk_secs: secs(&self.bulk_micros),
+            predict_latency: OpLatency::from_snapshot(&self.predict_hist.snapshot()),
+            nearest_latency: OpLatency::from_snapshot(&self.nearest_hist.snapshot()),
+            stats_latency: OpLatency::from_snapshot(&self.stats_hist.snapshot()),
+            reload_latency: OpLatency::from_snapshot(&self.reload_hist.snapshot()),
+            bulk_latency: OpLatency::from_snapshot(&self.bulk_hist.snapshot()),
+        }
+    }
+}
+
+/// Server-side derived latency view of one op, computed from its
+/// log-bucketed histogram at snapshot time: clients get mean/p50/p99
+/// without shipping bucket arrays over the `stats` reply. Quantiles
+/// are bucket upper bounds (µs) per
+/// [`HistogramSnapshot::quantile`]; all zeros when no ops completed or
+/// histogram recording is off.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpLatency {
+    /// Mean latency, µs.
+    pub mean_micros: f64,
+    /// Median latency — the upper bound (µs) of the bucket holding it.
+    pub p50_micros: u64,
+    /// 99th-percentile latency, same bucket-upper-bound convention.
+    pub p99_micros: u64,
+}
+
+impl OpLatency {
+    fn from_snapshot(s: &HistogramSnapshot) -> OpLatency {
+        OpLatency {
+            mean_micros: s.mean_micros(),
+            p50_micros: s.quantile(0.5),
+            p99_micros: s.quantile(0.99),
         }
     }
 }
@@ -244,6 +323,16 @@ pub struct ServeStats {
     pub reload_secs: f64,
     /// Summed bulk-predict stream latency (open → trailer), seconds.
     pub bulk_secs: f64,
+    /// Histogram-derived predict latency (mean/p50/p99).
+    pub predict_latency: OpLatency,
+    /// Histogram-derived nearest latency.
+    pub nearest_latency: OpLatency,
+    /// Histogram-derived stats latency.
+    pub stats_latency: OpLatency,
+    /// Histogram-derived reload latency.
+    pub reload_latency: OpLatency,
+    /// Histogram-derived bulk-predict latency.
+    pub bulk_latency: OpLatency,
 }
 
 impl ServeStats {
@@ -272,6 +361,21 @@ impl ServeStats {
             .field("stats_secs", self.stats_secs)
             .field("reload_secs", self.reload_secs)
             .field("bulk_secs", self.bulk_secs)
+            .field("predict_mean_micros", self.predict_latency.mean_micros)
+            .field("predict_p50_micros", self.predict_latency.p50_micros)
+            .field("predict_p99_micros", self.predict_latency.p99_micros)
+            .field("nearest_mean_micros", self.nearest_latency.mean_micros)
+            .field("nearest_p50_micros", self.nearest_latency.p50_micros)
+            .field("nearest_p99_micros", self.nearest_latency.p99_micros)
+            .field("stats_mean_micros", self.stats_latency.mean_micros)
+            .field("stats_p50_micros", self.stats_latency.p50_micros)
+            .field("stats_p99_micros", self.stats_latency.p99_micros)
+            .field("reload_mean_micros", self.reload_latency.mean_micros)
+            .field("reload_p50_micros", self.reload_latency.p50_micros)
+            .field("reload_p99_micros", self.reload_latency.p99_micros)
+            .field("bulk_mean_micros", self.bulk_latency.mean_micros)
+            .field("bulk_p50_micros", self.bulk_latency.p50_micros)
+            .field("bulk_p99_micros", self.bulk_latency.p99_micros)
     }
 
     /// The one-line clean-shutdown summary.
@@ -367,7 +471,14 @@ mod tests {
         assert_eq!(s.batched_rows, 16);
         assert!((s.predict_secs - 0.0015).abs() < 1e-9);
         assert!((s.bulk_secs - 0.002).abs() < 1e-9);
+        // histogram-derived views: 1500 µs lands in the ≤2048 bucket
+        assert!((s.predict_latency.mean_micros - 1500.0).abs() < 1e-9);
+        assert_eq!(s.predict_latency.p50_micros, 2048);
+        assert_eq!(s.predict_latency.p99_micros, 2048);
+        assert_eq!(s.nearest_latency.p50_micros, 512);
+        assert_eq!(tel.op_histogram(Op::Predict).count, 1);
         let json = s.to_json().to_string();
+        assert!(json.contains("\"predict_p50_micros\":2048"), "{json}");
         assert!(json.contains("\"batched_rows\":16"), "{json}");
         assert!(json.contains("\"rate_limited_rejects\":1"), "{json}");
         assert!(json.contains("\"breaker_rejects\":1"), "{json}");
@@ -376,5 +487,18 @@ mod tests {
         assert!(line.contains("5 requests"), "{line}");
         assert!(line.contains("1 overloaded"), "{line}");
         assert!(line.contains("1 rate-limited"), "{line}");
+    }
+
+    #[test]
+    fn histogram_recording_can_be_disabled_without_losing_sums() {
+        let tel = ServeTelemetry::new(false);
+        tel.request();
+        tel.op_done(Op::Predict, Duration::from_micros(1500));
+        let s = tel.snapshot();
+        assert_eq!(s.predicts, 1);
+        // sums stay (wire compat); histogram-derived views read zero
+        assert!((s.predict_secs - 0.0015).abs() < 1e-9);
+        assert_eq!(s.predict_latency, OpLatency::default());
+        assert_eq!(tel.op_histogram(Op::Predict).count, 0);
     }
 }

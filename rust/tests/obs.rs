@@ -1,0 +1,285 @@
+//! Observability acceptance over real loopback sockets: the serve
+//! tier's `GET /metrics` exposition and `GET /v1/events` drain, trace
+//! propagation from the front door through the dist wire to shard-side
+//! events, the shard `STATS` frame, and bit-identity of observed runs
+//! (instrumentation must never change a result).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use eakm::data::io;
+use eakm::data::synth::blobs;
+use eakm::dist::{run_dist, run_dist_observed, shard_stats, ShardConfig};
+use eakm::json::Json;
+use eakm::net::frame::send_frame;
+use eakm::obs::{FitObserver, TraceId, Value};
+use eakm::prelude::*;
+use eakm::serve::client::{self, Client};
+
+fn tmpdir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("eakm-obs-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn fit_model(n: usize, d: usize, k: usize, seed: u64) -> FittedModel {
+    let rt = Runtime::serial();
+    let ds = blobs(n, d, k, 0.1, seed);
+    Kmeans::new(k).seed(seed).max_iters(20).fit(&rt, &ds).unwrap()
+}
+
+/// Run a server on its own thread + runtime; returns the bound address
+/// and the handle that yields the final `ServeStats` after shutdown.
+fn start_serve(
+    model: FittedModel,
+    threads: usize,
+    cfg: ServeConfig,
+) -> (SocketAddr, thread::JoinHandle<ServeStats>) {
+    let (tx, rx) = mpsc::channel();
+    let handle = thread::spawn(move || {
+        let rt = Runtime::new(threads);
+        eakm::serve::serve(&rt, model, &cfg, |addr| tx.send(addr).unwrap()).unwrap()
+    });
+    (rx.recv().unwrap(), handle)
+}
+
+fn shutdown_serve(addr: SocketAddr) {
+    let reply = Client::connect(addr).unwrap().call(&client::shutdown_request()).unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+}
+
+/// One-shot `GET` over a fresh connection (`Connection: close`);
+/// returns (status, body).
+fn http_get(addr: SocketAddr, target: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let req = format!("GET {target} HTTP/1.1\r\nHost: test\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap();
+    let text = String::from_utf8(raw).unwrap();
+    let code = text.split_whitespace().nth(1).expect("status code");
+    let body = text.split_once("\r\n\r\n").expect("header/body split").1;
+    (code.parse().unwrap(), body.to_string())
+}
+
+#[test]
+fn serve_metrics_exposition_covers_every_telemetry_family() {
+    let model = fit_model(300, 4, 5, 21);
+    let queries = blobs(8, 4, 5, 0.2, 22);
+    let (addr, handle) = start_serve(model, 2, ServeConfig::default());
+    // one predict so the op counters, histograms, and batch events are
+    // non-trivially populated
+    let mut c = Client::connect(addr).unwrap();
+    let req = client::predict_request(queries.raw(), queries.d());
+    let reply = c.call(&req).unwrap();
+    assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true), "{reply}");
+    drop(c);
+
+    let (status, body) = http_get(addr, "/metrics");
+    assert_eq!(status, 200, "{body}");
+    // serve counters, one per ServeStats field (spot-check the set)
+    assert!(body.contains("# TYPE eakm_serve_requests_total counter"), "{body}");
+    assert!(body.contains("eakm_serve_ops_total{op=\"predict\"} 1\n"), "{body}");
+    assert!(body.contains("eakm_serve_rejects_total{reason=\"overloaded\"} 0\n"), "{body}");
+    assert!(body.contains("eakm_serve_rejects_total{reason=\"rate_limited\"} 0\n"), "{body}");
+    assert!(body.contains("eakm_serve_rejects_total{reason=\"breaker_open\"} 0\n"), "{body}");
+    assert!(body.contains("eakm_serve_batched_rows_total 8\n"), "{body}");
+    assert!(body.contains("eakm_serve_bulk_rows_total"), "{body}");
+    assert!(body.contains("eakm_serve_http_requests_total"), "{body}");
+    // per-op latency: histogram buckets plus derived mean/p50/p99
+    assert!(body.contains("# TYPE eakm_serve_op_latency_micros histogram"), "{body}");
+    assert!(
+        body.contains("eakm_serve_op_latency_micros_bucket{op=\"predict\",le=\"+Inf\"} 1"),
+        "{body}"
+    );
+    assert!(body.contains("eakm_serve_op_latency_micros_count{op=\"predict\"} 1\n"), "{body}");
+    assert!(body.contains("eakm_serve_op_latency_p99_micros{op=\"predict\"}"), "{body}");
+    assert!(body.contains("eakm_serve_op_seconds_total{op=\"reload\"}"), "{body}");
+    // server shape
+    assert!(body.contains("eakm_serve_uptime_seconds"), "{body}");
+    assert!(body.contains("eakm_serve_model_generation 1\n"), "{body}");
+    assert!(body.contains("eakm_serve_queue_depth"), "{body}");
+    assert!(body.contains("eakm_serve_events_seq"), "{body}");
+    // the served model's fit report: k/d, rounds/mse, every Counters
+    // site as a total and as the paper's per-point-per-round rate,
+    // SchedTelemetry, and IoTelemetry
+    assert!(body.contains("eakm_model_k 5\n"), "{body}");
+    assert!(body.contains("eakm_model_d 4\n"), "{body}");
+    assert!(body.contains("eakm_fit_rounds{algorithm="), "{body}");
+    assert!(body.contains("eakm_fit_mse{algorithm="), "{body}");
+    assert!(
+        body.contains("eakm_fit_distance_calcs_total{site=\"assignment\",algorithm="),
+        "{body}"
+    );
+    assert!(body.contains("eakm_fit_distance_calcs_total{site=\"total\",algorithm="), "{body}");
+    assert!(body.contains("eakm_fit_distance_calcs_per_point_round{site=\"assignment\""), "{body}");
+    assert!(body.contains("eakm_fit_sched_dispatches_total"), "{body}");
+    assert!(body.contains("eakm_fit_sched_max_seconds{phase=\"scan\"}"), "{body}");
+    assert!(body.contains("eakm_fit_sched_imbalance"), "{body}");
+    assert!(body.contains("eakm_fit_io_blocks_leased_total"), "{body}");
+    assert!(body.contains("eakm_fit_io_bytes_read_total"), "{body}");
+    assert!(body.contains("eakm_fit_io_window_refills_total"), "{body}");
+
+    // the event drain: the predict's batch execution is there, tagged
+    // with the trace minted when the request entered the server
+    let (status, body) = http_get(addr, "/v1/events");
+    assert_eq!(status, 200, "{body}");
+    let payload = Json::parse(body.trim_end()).unwrap();
+    assert_eq!(payload.get("ok").and_then(Json::as_bool), Some(true), "{payload}");
+    let last = payload.get("last").and_then(Json::as_usize).unwrap();
+    assert!(last >= 1, "{payload}");
+    let events = payload.get("events").and_then(Json::as_arr).unwrap();
+    let batch = events
+        .iter()
+        .find(|e| e.get("kind").and_then(Json::as_str) == Some("batch"))
+        .expect("batch event");
+    assert_eq!(batch.get("rows").and_then(Json::as_usize), Some(8), "{batch}");
+    let trace = batch.get("trace").and_then(Json::as_str).expect("trace");
+    assert_eq!(trace.len(), 16, "{trace}");
+    assert_ne!(trace, "0000000000000000", "trace must be minted, not unset");
+    // incremental drain: nothing new after the cursor
+    let (_, body) = http_get(addr, &format!("/v1/events?since={last}"));
+    let payload = Json::parse(body.trim_end()).unwrap();
+    assert_eq!(payload.get("events").and_then(Json::as_arr).map(Vec::len), Some(0), "{payload}");
+
+    shutdown_serve(addr);
+    let stats = handle.join().unwrap();
+    assert_eq!(stats.predicts, 1);
+    // the stats snapshot carries the histogram-derived latencies the
+    // wire protocol reports (mean/p50/p99 are computed server-side)
+    assert!(stats.predict_latency.p99_micros >= 1);
+    assert!(stats.predict_latency.p99_micros >= stats.predict_latency.p50_micros);
+}
+
+/// One in-process shard server and the thread running it.
+struct Shard {
+    addr: SocketAddr,
+    handle: thread::JoinHandle<()>,
+}
+
+fn start_shards(path: &Path, bounds: &[usize], threads: usize) -> Vec<Shard> {
+    bounds
+        .windows(2)
+        .map(|w| {
+            let mut cfg = ShardConfig::new(path.to_path_buf(), w[0], w[1]);
+            cfg.threads = threads;
+            let (tx, rx) = mpsc::channel();
+            let handle = thread::spawn(move || {
+                eakm::dist::shardd(&cfg, |addr| tx.send(addr).unwrap()).unwrap();
+            });
+            Shard {
+                addr: rx.recv().unwrap(),
+                handle,
+            }
+        })
+        .collect()
+}
+
+fn stop_shards(shards: Vec<Shard>) {
+    for s in &shards {
+        if let Ok(mut stream) = TcpStream::connect(s.addr) {
+            let _ = send_frame(&mut stream, eakm::dist::wire::tag::SHUTDOWN, &[]);
+            let mut ack = [0u8; 64];
+            while matches!(stream.read(&mut ack), Ok(n) if n > 0) {}
+        }
+    }
+    for s in shards {
+        s.handle.join().unwrap();
+    }
+}
+
+#[test]
+fn trace_minted_at_the_front_door_reaches_shard_side_events() {
+    let ds = blobs(400, 4, 5, 0.25, 3);
+    let path = tmpdir().join("obs-dist.ekb");
+    io::save_bin(&ds, &path).unwrap();
+    let shards = start_shards(&path, &[0, 200, 400], 2);
+    let addrs: Vec<String> = shards.iter().map(|s| s.addr.to_string()).collect();
+    let rt = Runtime::new(2);
+    let cfg = RunConfig::new(Algorithm::ExpNs, 5).seed(7).threads(2);
+
+    let trace = TraceId::from_u64(0xC0FFEE);
+    let obs = FitObserver::new(trace, false);
+    let observed = run_dist_observed(&rt, &cfg, &addrs, Some(&obs)).unwrap();
+
+    // coordinator-side: per-round events carry the front-door trace and
+    // a real objective (the observer pays for the read; results don't)
+    let all = obs.events().since(0);
+    let rounds: Vec<_> = all.iter().filter(|e| e.kind == "round").collect();
+    assert!(!rounds.is_empty());
+    for e in &rounds {
+        assert_eq!(e.trace, trace);
+        assert_eq!(e.field("site"), Some(&Value::Str("dist".to_string())));
+    }
+
+    // shard-side: the STATS frame answers mid-lifetime with Prometheus
+    // metrics and events tagged with the same trace — the round is
+    // attributable to a specific shard from either end
+    for s in &shards {
+        let reply = shard_stats(&s.addr.to_string(), 0, Duration::from_secs(10)).unwrap();
+        assert!(
+            reply.metrics.contains("# TYPE eakm_shard_rounds_total counter"),
+            "{}",
+            reply.metrics
+        );
+        assert!(
+            reply.metrics.contains("eakm_shard_distance_calcs_total{site=\"assignment\"}"),
+            "{}",
+            reply.metrics
+        );
+        assert!(reply.metrics.contains("eakm_shard_round_micros_bucket"), "{}", reply.metrics);
+        assert!(reply.events.contains("\"kind\":\"shard_round\""), "{}", reply.events);
+        assert!(reply.events.contains("\"trace\":\"0000000000c0ffee\""), "{}", reply.events);
+        // incremental drain: replaying the cursor returns nothing new
+        let doc = Json::parse(&reply.events).unwrap();
+        let last = doc.get("last").and_then(Json::as_usize).unwrap() as u64;
+        let newer = shard_stats(&s.addr.to_string(), last, Duration::from_secs(10)).unwrap();
+        let doc = Json::parse(&newer.events).unwrap();
+        assert_eq!(doc.get("events").and_then(Json::as_arr).map(Vec::len), Some(0));
+    }
+
+    // instrumentation must not change a single bit: the same fit
+    // without an observer agrees exactly
+    let plain = run_dist(&rt, &cfg, &addrs).unwrap();
+    assert_eq!(observed.assignments, plain.assignments);
+    assert_eq!(observed.mse.to_bits(), plain.mse.to_bits());
+    assert_eq!(observed.iterations, plain.iterations);
+    assert_eq!(observed.counters, plain.counters);
+    stop_shards(shards);
+}
+
+#[test]
+fn observed_single_node_fit_is_bit_identical() {
+    let rt = Runtime::new(2);
+    let ds = blobs(500, 6, 8, 0.2, 11);
+    let km = Kmeans::new(8).seed(5).max_iters(30);
+    let plain = km.fit(&rt, &ds).unwrap();
+    let obs = FitObserver::new(TraceId::mint(), false);
+    let events = obs.events().clone();
+    let observer = Some(std::sync::Arc::new(obs));
+    let observed = km.fit_observed(&rt, &ds, observer).unwrap();
+    let bits = |m: &FittedModel| m.centroids().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&plain), bits(&observed));
+    assert_eq!(plain.report().mse.to_bits(), observed.report().mse.to_bits());
+    assert_eq!(plain.report().iterations, observed.report().iterations);
+    assert_eq!(plain.report().counters, observed.report().counters);
+    // one "round" event per iteration, with the paper's by-site
+    // distance-calc deltas attached
+    let all = events.since(0);
+    let rounds: Vec<_> = all.iter().filter(|e| e.kind == "round").collect();
+    assert_eq!(rounds.len(), observed.report().iterations);
+    let total: u64 = rounds
+        .iter()
+        .map(|e| match e.field("dist_total") {
+            Some(Value::U64(v)) => *v,
+            other => panic!("dist_total missing: {other:?}"),
+        })
+        .sum();
+    assert!(total > 0);
+}
